@@ -1,0 +1,76 @@
+//! Design-space exploration (Fig. 9): sweep (VLEN, MLEN, BLEN) across
+//! the three inference paradigms for dense + MoE models and print the
+//! TPS-vs-tok/J frontier against the A6000/H100 baselines.
+//!
+//!     cargo run --release --example dse_sweep [-- --csv]
+
+use dart::config::{CacheMode, HwConfig, ModelArch, Workload};
+use dart::gpu::GpuSpec;
+use dart::report::{self, Table};
+use dart::sampling::SamplePrecision;
+use dart::sim::analytical::{AnalyticalSim, PrecisionConfig};
+
+fn main() {
+    let csv = std::env::args().any(|a| a == "--csv");
+    for model in [ModelArch::llada_8b(), ModelArch::llada_moe_7b()] {
+        let mut t = Table::new(
+            &format!("Fig. 9 sweep — {}", model.name),
+            &["device", "cache", "VLEN", "MLEN", "BLEN", "TPS", "tok/J"]);
+        for cache in CacheMode::ALL {
+            let w = Workload::paper_reference(model.clone(), cache);
+            // GPU baselines (one point each per paradigm)
+            for gpu in [GpuSpec::a6000(), GpuSpec::h100()] {
+                let r = gpu.run(&w, SamplePrecision::Bf16);
+                t.row(&[gpu.name.clone(), cache.name().into(),
+                        "-".into(), "-".into(), "-".into(),
+                        report::f1(r.tps), report::f3(r.tok_per_j)]);
+            }
+            for vlen in [256u32, 512, 1024, 2048] {
+                for mlen in [256u32, 512, 1024] {
+                    for blen in [4u32, 16, 64] {
+                        if mlen < blen {
+                            continue;
+                        }
+                        let hw = HwConfig::dart_default()
+                            .with_dims(blen, mlen, vlen);
+                        let sim = AnalyticalSim::new(
+                            hw, PrecisionConfig::dart_full_quant());
+                        let r = sim.run(&w);
+                        t.row(&["DART".into(), cache.name().into(),
+                                vlen.to_string(), mlen.to_string(),
+                                blen.to_string(), report::f1(r.tps),
+                                report::f3(r.tok_per_j)]);
+                    }
+                }
+            }
+        }
+        if csv {
+            println!("{}", t.to_csv());
+        } else {
+            t.print();
+        }
+        // frontier summary: best DART point per paradigm vs GPUs
+        for cache in CacheMode::ALL {
+            let w = Workload::paper_reference(model.clone(), cache);
+            let a = GpuSpec::a6000().run(&w, SamplePrecision::Bf16);
+            let best = [256u32, 512, 1024, 2048].iter().flat_map(|&vlen| {
+                [256u32, 512, 1024].iter().flat_map(move |&mlen| {
+                    [4u32, 16, 64].iter().filter(move |&&b| b <= mlen)
+                        .map(move |&blen| (vlen, mlen, blen))
+                })
+            }).map(|(vlen, mlen, blen)| {
+                let hw = HwConfig::dart_default().with_dims(blen, mlen, vlen);
+                let r = AnalyticalSim::new(
+                    hw, PrecisionConfig::dart_full_quant()).run(&w);
+                (r.tps, r.tok_per_j, vlen, mlen, blen)
+            }).max_by(|x, y| x.0.partial_cmp(&y.0).unwrap()).unwrap();
+            println!(
+                "{} {}: best DART (VLEN={} MLEN={} BLEN={}) = {} TPS \
+                 ({} vs A6000), {} tok/J ({} vs A6000)",
+                model.name, cache.name(), best.2, best.3, best.4,
+                report::f1(best.0), report::speedup(best.0 / a.tps),
+                report::f3(best.1), report::speedup(best.1 / a.tok_per_j));
+        }
+        println!();
+    }
+}

@@ -1,0 +1,68 @@
+//! End-to-end serving driver (deliverable (e) / EXPERIMENTS.md §E2E):
+//! starts the DART coordinator, submits a batched stream of generation
+//! requests against the real PJRT-compiled dLLM, and reports latency
+//! percentiles, throughput, and the model/sampling breakdown — the
+//! serving-paper analogue of "load a small real model and serve batched
+//! requests".
+//!
+//!     cargo run --release --example serve_dllm -- [n_requests] [cache]
+
+use std::time::Instant;
+
+use dart::config::CacheMode;
+use dart::coordinator::{Coordinator, EngineConfig};
+use dart::kvcache::KvQuantPolicy;
+use dart::quant::BaosVariant;
+use dart::runtime::artifacts_dir;
+use dart::util::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(32);
+    let cache = args.get(1).and_then(|v| CacheMode::parse(v))
+        .unwrap_or(CacheMode::Dual);
+    let dir = artifacts_dir()
+        .expect("artifacts not built — run `make artifacts` first");
+
+    println!("== DART serving driver: {n} requests, {} cache, \
+              BAOS-MXINT4 KV ==", cache.name());
+    let t0 = Instant::now();
+    let coord = Coordinator::start(&dir, EngineConfig {
+        cache,
+        kv_policy: KvQuantPolicy::mxint4_baos(BaosVariant::Mean, 1.0),
+        ..EngineConfig::default()
+    }, None)?;
+    println!("coordinator up in {:.2}s (artifacts compiled)",
+             t0.elapsed().as_secs_f64());
+
+    // submit a bursty open-loop stream of prompts from the trained tasks
+    let mut rng = SplitMix64::new(2026);
+    let prompt_len = 16;
+    let submit_t = Instant::now();
+    let handles: Vec<_> = (0..n).map(|i| {
+        let a = rng.range(0, 40) as i32;
+        let stride = rng.range(1, 5) as i32;
+        let prompt: Vec<i32> = (0..prompt_len)
+            .map(|j| (a + j * stride) % 48 + 4).collect();
+        // light jitter between bursts
+        if i % 8 == 7 {
+            std::thread::sleep(std::time::Duration::from_millis(3));
+        }
+        coord.submit(prompt)
+    }).collect();
+
+    let mut ok = 0usize;
+    for h in &handles {
+        if h.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = submit_t.elapsed().as_secs_f64();
+    let metrics = coord.shutdown();
+
+    println!("\n== results ==");
+    println!("{}", metrics.report());
+    println!("completed {ok}/{n} in {wall:.2}s wall");
+    println!("\nrecord these rows in EXPERIMENTS.md §E2E");
+    Ok(())
+}

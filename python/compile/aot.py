@@ -1,0 +1,326 @@
+"""AOT bridge: lower the L2 model to HLO-text artifacts for the Rust runtime.
+
+Emits into ``artifacts/`` (gitignored; `make artifacts` is a no-op when
+inputs are unchanged):
+
+* ``full_b{B}.hlo.txt``           — warm step / none-cache step, batch B
+* ``refine_dual_b{B}.hlo.txt``    — dual-cache refinement step
+* ``refine_prefix_b{B}_n{n}.hlo.txt`` — prefix-cache refinement for block
+  n (tail length is shape-static, so one executable per block index —
+  "one compiled executable per model variant")
+* ``weights.bin``                 — trained parameters, DARTWTS1 format
+* ``manifest.json``               — shapes/arg-order/golden vectors the
+  Rust runtime + integration tests consume
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Training is cached in ``artifacts/weights.npz``: delete it (or run with
+``--retrain``) to retrain the denoiser.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import struct
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import TINY, TINY_GEN, config_dict
+from . import model as M
+from . import train as T
+from .kernels import ref as R
+
+BATCHES = (1, 4)
+TRAIN_STEPS = 600
+SEED = 0
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering (see module docstring for why text, not proto)
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants is ESSENTIAL: the default printer elides big
+    # literals as `constant({...})`, which xla_extension 0.5.1's text
+    # parser silently zero-fills — corrupting any lowered table (e.g.
+    # positional encodings) on the Rust runtime path.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # modern metadata attributes (source_end_line, ...) are rejected by
+    # the 0.5.1 parser; strip them
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "elided constants survived printing"
+    return text
+
+
+def lower_to_file(fn, args, path):
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+# ---------------------------------------------------------------------------
+# DARTWTS1 weight container (parsed by rust/src/runtime/weights.rs)
+# ---------------------------------------------------------------------------
+
+def write_weights(path, named_arrays):
+    """Format: magic 'DARTWTS1', u32 count, then per tensor:
+    u32 name_len, name bytes, u32 ndim, u64 dims[ndim], f32 data (LE)."""
+    with open(path, "wb") as f:
+        f.write(b"DARTWTS1")
+        f.write(struct.pack("<I", len(named_arrays)))
+        for name, arr in named_arrays:
+            a = np.ascontiguousarray(np.asarray(arr), dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(a.tobytes())
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors for the Rust integration tests
+# ---------------------------------------------------------------------------
+
+def _summ(x):
+    x = np.asarray(x, dtype=np.float64)
+    return {"sum": float(x.sum()), "absmax": float(np.abs(x).max()),
+            "first8": [float(v) for v in x.reshape(-1)[:8]]}
+
+
+def sampling_goldens():
+    """Deterministic sampling-engine test vectors (ref oracle outputs)."""
+    rng = np.random.default_rng(42)
+    b, l, v = 2, 8, 64
+    z = (rng.normal(size=(b, l, v)) * 3).astype(np.float32)
+    x = rng.integers(0, v, size=(b, l)).astype(np.int32)
+    x[:, ::2] = 0  # mask_id = 0 at even positions
+    conf, idx = R.stable_max_confidence_ref(jnp.asarray(z.reshape(b * l, v)))
+    conf = np.asarray(conf).reshape(b, l)
+    idx = np.asarray(idx).reshape(b, l)
+    k = np.array([2, 3], dtype=np.int32)
+    masks, xnews = [], []
+    for bi in range(b):
+        m = jnp.asarray(x[bi] == 0)
+        tm = R.topk_mask_ref(jnp.asarray(conf[bi]), m, int(k[bi]))
+        x0m = R.masked_select_ref(m, jnp.asarray(idx[bi]), jnp.asarray(x[bi]))
+        xn = R.masked_select_ref(tm, x0m, jnp.asarray(x[bi]))
+        masks.append(np.asarray(tm).astype(np.int32))
+        xnews.append(np.asarray(xn))
+    return {
+        "b": b, "l": l, "v": v, "mask_id": 0,
+        "z": z.reshape(-1).tolist(),
+        "x": x.reshape(-1).tolist(),
+        "k": k.tolist(),
+        "conf": conf.reshape(-1).tolist(),
+        "argmax": idx.reshape(-1).tolist(),
+        "transfer_mask": np.stack(masks).reshape(-1).tolist(),
+        "x_new": np.stack(xnews).reshape(-1).tolist(),
+    }
+
+
+def mx_goldens():
+    rng = np.random.default_rng(7)
+    x = (rng.normal(size=64) * 10).astype(np.float32)
+    from .quantlib import mx as qmx
+    return {
+        "x": x.tolist(),
+        "mxint4": qmx.quant_mxint(x, 4).tolist(),
+        "mxint8": qmx.quant_mxint(x, 8).tolist(),
+        "mxfp8": qmx.quant_mxfp8(x).tolist(),
+        "bf16": qmx.quant_bf16(x).tolist(),
+    }
+
+
+def baos_goldens():
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(1, 2, 8, 32)).astype(np.float32)
+    x[..., 5] *= 12.0  # outlier channel
+    from .quantlib import baos as qb
+    st = qb.BaosState("mean", 0.9)
+    st.calibrate(x, x)
+    kq, _ = st.apply(x, x, "mxint4")
+    return {
+        "shape": list(x.shape),
+        "x": x.reshape(-1).tolist(),
+        "alpha": 0.9, "variant": "mean",
+        "c": st.c_k.reshape(-1).tolist(),
+        "f": st.f_k.reshape(-1).tolist(),
+        "kq": _summ(kq),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts go to its directory")
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--train-steps", type=int, default=TRAIN_STEPS)
+    args = ap.parse_args()
+
+    outdir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(outdir, exist_ok=True)
+    cfg, gc = TINY, TINY_GEN
+
+    # -- 1. trained weights (cached) ---------------------------------------
+    cache = os.path.join(outdir, "weights.npz")
+    if os.path.exists(cache) and not args.retrain:
+        print(f"loading cached weights from {cache}")
+        data = np.load(cache)
+        params = {k: jnp.asarray(v) for k, v in data.items()}
+    else:
+        print(f"training denoiser for {args.train_steps} steps ...")
+        params, hist = T.train(cfg, gc, steps=args.train_steps, batch=32,
+                               lr=3e-3, log_every=100)
+        np.savez(cache, **{k: np.asarray(v) for k, v in params.items()})
+        print(f"final loss {hist[-1]:.4f}")
+
+    names = M.param_names(cfg)
+    plist = [params[n] for n in names]
+
+    # quick quality gate so a broken training run fails the build
+    M.set_attention_impl("ref")
+    rng = np.random.default_rng(123)
+    seqs = T.make_batch(cfg, gc, rng, 16)
+    gen = M.generate(cfg, gc, params, seqs[:, :gc.prompt_len], "dual")
+    acc = T.token_accuracy(cfg, gc, seqs, gen)
+    em = T.exact_match(cfg, gc, params, seqs, gen)
+    M.set_attention_impl("pallas")
+    print(f"trained model: token_acc={acc:.3f} exact_match={em:.3f}")
+    assert acc > 0.5, "trained model failed the quality gate"
+
+    # -- 2. lower executables ----------------------------------------------
+    executables = {}
+    nl, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    ltot, L, P = gc.total_len, gc.block_len, gc.prompt_len
+
+    pspecs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in plist]
+
+    for b in BATCHES:
+        tok = jax.ShapeDtypeStruct((b, ltot), jnp.int32)
+        f = os.path.join(outdir, f"full_b{b}.hlo.txt")
+        n = lower_to_file(
+            lambda toks, *ps: M.forward_full(cfg, dict(zip(names, ps)), toks),
+            (tok, *pspecs), f)
+        executables[f"full_b{b}"] = {
+            "file": os.path.basename(f), "hlo_chars": n,
+            "inputs": [["tokens", "i32", [b, ltot]]] +
+                      [[nm, "f32", list(params[nm].shape)] for nm in names],
+            "outputs": [["logits", "f32", [b, ltot, cfg.vocab_size]],
+                        ["k_cache", "f32", [nl, b, hkv, ltot, dh]],
+                        ["v_cache", "f32", [nl, b, hkv, ltot, dh]]],
+        }
+        print(f"lowered full_b{b} ({n} chars)")
+
+        tok_a = jax.ShapeDtypeStruct((b, L), jnp.int32)
+        kv = jax.ShapeDtypeStruct((nl, b, hkv, ltot, dh), jnp.float32)
+        bs = jax.ShapeDtypeStruct((), jnp.int32)
+        f = os.path.join(outdir, f"refine_dual_b{b}.hlo.txt")
+        n = lower_to_file(
+            lambda ta, kc, vc, s, *ps: M.forward_refine_dual(
+                cfg, dict(zip(names, ps)), ta, kc, vc, s),
+            (tok_a, kv, kv, bs, *pspecs), f)
+        executables[f"refine_dual_b{b}"] = {
+            "file": os.path.basename(f), "hlo_chars": n,
+            "inputs": [["tokens_act", "i32", [b, L]],
+                       ["k_cache", "f32", [nl, b, hkv, ltot, dh]],
+                       ["v_cache", "f32", [nl, b, hkv, ltot, dh]],
+                       ["block_start", "i32", []]] +
+                      [[nm, "f32", list(params[nm].shape)] for nm in names],
+            "outputs": [["logits", "f32", [b, L, cfg.vocab_size]],
+                        ["k_act", "f32", [nl, b, hkv, L, dh]],
+                        ["v_act", "f32", [nl, b, hkv, L, dh]]],
+        }
+        print(f"lowered refine_dual_b{b} ({n} chars)")
+
+        for blk in range(gc.n_blocks):
+            s_n = gc.block_start(blk)
+            tail = ltot - s_n
+            tok_t = jax.ShapeDtypeStruct((b, tail), jnp.int32)
+            kvp = jax.ShapeDtypeStruct((nl, b, hkv, s_n, dh), jnp.float32)
+            f = os.path.join(outdir, f"refine_prefix_b{b}_n{blk}.hlo.txt")
+            n = lower_to_file(
+                lambda tt, kp, vp, *ps, _s=s_n: M.forward_refine_prefix(
+                    cfg, dict(zip(names, ps)), tt, kp, vp, _s, L),
+                (tok_t, kvp, kvp, *pspecs), f)
+            executables[f"refine_prefix_b{b}_n{blk}"] = {
+                "file": os.path.basename(f), "hlo_chars": n,
+                "inputs": [["tokens_tail", "i32", [b, tail]],
+                           ["k_prefix", "f32", [nl, b, hkv, s_n, dh]],
+                           ["v_prefix", "f32", [nl, b, hkv, s_n, dh]]] +
+                          [[nm, "f32", list(params[nm].shape)] for nm in names],
+                "outputs": [["logits", "f32", [b, L, cfg.vocab_size]]],
+            }
+            print(f"lowered refine_prefix_b{b}_n{blk} ({n} chars)")
+
+    # -- 3. weights + goldens ----------------------------------------------
+    write_weights(os.path.join(outdir, "weights.bin"),
+                  [(nm, params[nm]) for nm in names])
+
+    # model-level golden: fixed tokens → output summaries (fast ref attn —
+    # pallas-vs-ref equality is asserted separately in python/tests)
+    M.set_attention_impl("ref")
+    tok_g = np.arange(4 * ltot, dtype=np.int32).reshape(4, ltot) % cfg.vocab_size
+    lg, kc, vc = M.forward_full(cfg, params, jnp.asarray(tok_g))
+    conf_g, idx_g = R.stable_max_confidence_ref(
+        lg[:, P:P + L, :].reshape(-1, cfg.vocab_size))
+
+    # end-to-end generation goldens: fixed prompt → full blocked-diffusion
+    # output per cache mode (the Rust coordinator's parity reference)
+    gen_prompt = (np.arange(P, dtype=np.int32) * 7 + 11) % (cfg.vocab_size - 8) + 4
+    gen_golden = {"prompt": gen_prompt.tolist()}
+    for mode in ("none", "prefix", "dual"):
+        out = M.generate(cfg, gc, params,
+                         jnp.asarray(gen_prompt)[None, :], cache_mode=mode)
+        gen_golden[mode] = np.asarray(out)[0].tolist()
+    M.set_attention_impl("pallas")
+
+    manifest = {
+        "format": "dart-manifest-v1",
+        "config": config_dict(cfg, gc),
+        "param_order": names,
+        "batches": list(BATCHES),
+        "executables": executables,
+        "weights_file": "weights.bin",
+        "train": {"steps": args.train_steps, "token_acc": acc,
+                  "exact_match": em},
+        "goldens": {
+            "full_tokens_mod": cfg.vocab_size,
+            "full_logits": _summ(lg),
+            "full_k": _summ(kc),
+            "full_v": _summ(vc),
+            "block0_conf": _summ(conf_g),
+            "block0_argmax_first8": [int(v) for v in np.asarray(idx_g)[:8]],
+            "generation": gen_golden,
+            "sampling": sampling_goldens(),
+            "mx": mx_goldens(),
+            "baos": baos_goldens(),
+        },
+    }
+    blob = json.dumps(manifest, indent=1)
+    with open(args.out, "w") as f:
+        f.write(blob)
+    digest = hashlib.sha256(blob.encode()).hexdigest()[:16]
+    print(f"wrote {args.out} ({len(blob)} bytes, sha {digest})")
+
+
+if __name__ == "__main__":
+    main()

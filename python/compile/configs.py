@@ -1,0 +1,83 @@
+"""Model and generation configurations for the DART L2 stack.
+
+The tiny presets are sized so that the whole artifact pipeline (train a
+masked-diffusion denoiser, AOT-lower every executable variant, emit golden
+I/O) runs in minutes on CPU while keeping every structural property the
+paper's hardware cares about: bidirectional attention, GQA, blocked
+diffusion with warm/refine phases, a vocabulary large enough to exercise
+V_chunk tiling, and an optional MoE FFN.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """LLaDA-style masked-diffusion transformer configuration."""
+
+    vocab_size: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4       # query heads
+    n_kv_heads: int = 2    # GQA: kv heads (n_heads % n_kv_heads == 0)
+    d_head: int = 32
+    d_ff: int = 256        # SwiGLU hidden size
+    # MoE (used when n_experts > 1)
+    n_experts: int = 1
+    top_k_experts: int = 2
+    rms_eps: float = 1e-5
+    mask_id: int = 0       # [MASK] token id
+    pad_id: int = 1
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 1
+
+    def n_params(self) -> int:
+        """Rough parameter count (embedding tied with lm head)."""
+        d, f = self.d_model, self.d_ff
+        attn = d * self.n_heads * self.d_head + 2 * d * self.n_kv_heads * self.d_head \
+            + self.n_heads * self.d_head * d
+        ffn = 3 * d * f * max(1, self.n_experts)
+        gate = d * self.n_experts if self.is_moe else 0
+        per_layer = attn + ffn + gate + 2 * d
+        return self.vocab_size * d + self.n_layers * per_layer + d
+
+
+@dataclass(frozen=True)
+class GenConfig:
+    """Blocked-diffusion generation geometry (Fast-dLLM style)."""
+
+    prompt_len: int = 16
+    block_len: int = 16        # L
+    n_blocks: int = 4          # N_B
+    steps_per_block: int = 8   # T (denoising steps per block)
+    batch: int = 4             # B
+
+    @property
+    def gen_len(self) -> int:
+        return self.block_len * self.n_blocks
+
+    @property
+    def total_len(self) -> int:
+        """L_tot = prompt + generated region."""
+        return self.prompt_len + self.gen_len
+
+    def block_start(self, n: int) -> int:
+        return self.prompt_len + n * self.block_len
+
+    def block_end(self, n: int) -> int:
+        return self.block_start(n) + self.block_len
+
+
+# The tiny presets used by `aot.py` and the accuracy harness.
+TINY = ModelConfig()
+TINY_MOE = ModelConfig(n_experts=4, d_ff=128)
+TINY_GEN = GenConfig()
+
+
+def config_dict(mc: ModelConfig, gc: GenConfig) -> dict:
+    d = {"model": asdict(mc), "gen": asdict(gc)}
+    d["gen"]["gen_len"] = gc.gen_len
+    d["gen"]["total_len"] = gc.total_len
+    return d

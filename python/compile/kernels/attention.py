@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: bidirectional FlashAttention (paper §3.1, Alg. 1).
+
+dLLMs use *bidirectional* attention — every position attends to every
+other position with no causal mask, so there is no triangular sparsity to
+exploit and the kernel streams the full K/V range for every query tile.
+
+Hardware adaptation (DESIGN.md §4): the HBM↔VMEM schedule the paper
+expresses with its prefetch engines is expressed here with BlockSpec index
+maps; the online-softmax running state (m, l, acc) is the Pallas analogue
+of the paper's FlashAttention accumulators held in Vector SRAM.
+
+``interpret=True`` everywhere: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot run (see /opt/xla-example/README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_Q = 16
+DEFAULT_BLOCK_K = 16
+
+
+def _flash_attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One (batch, kv-head, group, q-tile) program instance.
+
+    q_ref: [bq, D]; k_ref/v_ref: [Skv, D] (full key range — bidirectional);
+    o_ref: [bq, D]. Streams K/V in `block_k` tiles with online softmax.
+    """
+    bq, d = q_ref.shape
+    skv = k_ref.shape[0]
+    n_kv_tiles = skv // block_k
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k_tile = pl.load(k_ref, (pl.ds(i * block_k, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (pl.ds(i * block_k, block_k), slice(None)))
+        s = q @ k_tile.astype(jnp.float32).T                    # [bq, bk]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_tile.astype(jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kv_tiles, body, (m0, l0, acc0))
+    o_ref[...] = acc / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flash_attention(q, k, v, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Bidirectional GQA FlashAttention via Pallas.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]. Returns [B, Hq, Sq, D] f32.
+    Grid: (B, Hq, Sq / block_q); each program streams the full K/V range
+    of its kv-head in block_k tiles.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = hq // hkv
+
+    def snap(block, extent):
+        """Largest divisor of `extent` that is <= the requested block."""
+        block = min(block, extent)
+        while extent % block:
+            block -= 1
+        return block
+
+    block_q = snap(block_q, sq)
+    block_k = snap(block_k, skv)
+    scale = 1.0 / float(d) ** 0.5
+
+    grid = (b, hq, sq // block_q)
+    kernel = functools.partial(_flash_attn_kernel, block_k=block_k, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, d), lambda ib, ih, iq: (ib, ih, iq, 0)),
+            pl.BlockSpec((None, None, skv, d), lambda ib, ih, iq: (ib, ih // group, 0, 0)),
+            pl.BlockSpec((None, None, skv, d), lambda ib, ih, iq: (ib, ih // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, d),
+                               lambda ib, ih, iq: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: MX block fake-quantization (paper §3.1.1, §4.3).
+
+Simulates the asymmetric data path of the DART Transformer Engine: BF16
+activations are dynamically quantized to an MX format (shared
+power-of-two scale per 32-element block) at the systolic-array boundary.
+The kernel computes the per-block E8M0 scale and the quantize→dequantize
+round trip in one pass, mirroring the hardware's quantize unit.
+
+Checked against ref.mxint_quant_ref / ref.mxfp8_quant_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MX_BLOCK
+
+
+def _mx_kernel(x_ref, o_ref, *, block: int, qmax: float, mode: str):
+    """One row: quantize each `block`-wide group with a shared pow-2 scale."""
+    x = x_ref[...].astype(jnp.float32)
+    k = x.shape[0]
+    xb = x.reshape(k // block, block)
+    maxabs = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1, keepdims=True), 1e-30)
+    e = jnp.floor(jnp.log2(maxabs / qmax))
+    scale = jnp.exp2(e)
+    scale = jnp.where(maxabs / scale > qmax, scale * 2.0, scale)
+    if mode == "int":
+        q = jnp.clip(jnp.round(xb / scale), -qmax, qmax)
+        y = q * scale
+    else:  # fp8 (E4M3 element type)
+        y = (xb / scale).astype(jnp.float8_e4m3fn).astype(jnp.float32) * scale
+    o_ref[...] = y.reshape(k)
+
+
+def _call(x, block, qmax, mode):
+    orig = x.shape
+    k = orig[-1]
+    assert k % block == 0, f"last dim {k} not a multiple of MX block {block}"
+    rows = 1
+    for s in orig[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, k)
+    kern = functools.partial(_mx_kernel, block=block, qmax=qmax, mode=mode)
+    y = pl.pallas_call(
+        kern,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((None, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((None, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, k), jnp.float32),
+        interpret=True,
+    )(x2)
+    return y.reshape(orig)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block"))
+def mxint_quant(x, bits=8, block=MX_BLOCK):
+    """Fake-quantize to MXINT<bits> along the last axis (Pallas)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    return _call(x, block, qmax, "int")
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def mxfp8_quant(x, block=MX_BLOCK):
+    """Fake-quantize to MXFP8-E4M3 along the last axis (Pallas)."""
+    return _call(x, block, 448.0, "fp8")

@@ -1,0 +1,179 @@
+"""Pure-jnp correctness oracles for every L1 Pallas kernel.
+
+These are the CORE correctness signal of the python layer: each Pallas
+kernel in this package is checked elementwise against the function of the
+same name here (pytest + hypothesis sweeps in ``python/tests``), and the
+Rust golden models are checked against I/O vectors generated from these
+oracles (``artifacts/manifest.json``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, scale=None):
+    """Bidirectional (no causal mask) multi-head attention.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D] with Hq % Hkv == 0 (GQA).
+    Returns [B, Hq, Sq, D] in float32.
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vq.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Stable-Max sampling primitives (paper §3.2, Eq. 3)
+# ---------------------------------------------------------------------------
+
+def stable_max_confidence_ref(z):
+    """Per-position Stable-Max confidence and argmax index.
+
+    z: [..., V] logits. Returns (conf[...], idx[...]) where
+    conf = softmax(z)[argmax] = 1 / sum_j exp(z_j - max z).
+    """
+    z = z.astype(jnp.float32)
+    m = jnp.max(z, axis=-1)
+    idx = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    denom = jnp.sum(jnp.exp(z - m[..., None]), axis=-1)
+    return (1.0 / denom).astype(jnp.float32), idx
+
+
+def topk_mask_ref(conf, mask, k):
+    """Boolean transfer mask selecting the top-k masked positions.
+
+    conf: [L] float confidence; mask: [L] bool (True = still masked,
+    eligible); k: python int. Ties broken toward the lower index, matching
+    the streaming insertion comparator (strict `>` replacement).
+    """
+    neg = jnp.finfo(jnp.float32).min
+    eligible = jnp.where(mask, conf.astype(jnp.float32), neg)
+    L = conf.shape[0]
+    k = min(int(k), L)
+    if k == 0:
+        return jnp.zeros((L,), dtype=bool)
+    # top_k with index tie-breaking identical to first-come insertion
+    _, idx = jax.lax.top_k(eligible, k)
+    out = jnp.zeros((L,), dtype=bool).at[idx].set(True)
+    # positions that were not eligible can never transfer
+    return jnp.logical_and(out, mask)
+
+
+def masked_select_ref(mask, a, b):
+    """V_SELECT_INT: elementwise where(mask, a, b) over int32."""
+    return jnp.where(mask, a, b).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# MX block quantization (OCP microscaling, shared power-of-two scale)
+# ---------------------------------------------------------------------------
+
+MX_BLOCK = 32
+
+
+def _pow2_scale(maxabs, qmax):
+    """Per-block power-of-two scale mapping maxabs onto qmax."""
+    maxabs = jnp.maximum(maxabs, 1e-30)
+    e = jnp.floor(jnp.log2(maxabs / qmax))
+    scale = jnp.exp2(e)
+    # round scale up so maxabs/scale <= qmax always holds
+    scale = jnp.where(maxabs / scale > qmax, scale * 2.0, scale)
+    return scale
+
+
+def mxint_quant_ref(x, bits=8, block=MX_BLOCK):
+    """Fake-quantize to MXINT<bits> along the last axis.
+
+    Elements are symmetric ints in [-(2^(b-1)-1), 2^(b-1)-1] with one
+    shared power-of-two scale per `block` contiguous elements.
+    """
+    x = x.astype(jnp.float32)
+    orig = x.shape
+    k = orig[-1]
+    assert k % block == 0, f"last dim {k} not a multiple of {block}"
+    xb = x.reshape(orig[:-1] + (k // block, block))
+    qmax = float(2 ** (bits - 1) - 1)
+    maxabs = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = _pow2_scale(maxabs, qmax)
+    q = jnp.clip(jnp.round(xb / scale), -qmax, qmax)
+    return (q * scale).reshape(orig)
+
+
+def mxfp8_quant_ref(x, block=MX_BLOCK):
+    """Fake-quantize to MXFP8 (E4M3 elements, shared pow-2 block scale)."""
+    x = x.astype(jnp.float32)
+    orig = x.shape
+    k = orig[-1]
+    assert k % block == 0
+    xb = x.reshape(orig[:-1] + (k // block, block))
+    f8max = 448.0  # E4M3 max normal
+    maxabs = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = _pow2_scale(maxabs, f8max)
+    y = (xb / scale).astype(jnp.float8_e4m3fn).astype(jnp.float32)
+    return (y * scale).reshape(orig)
+
+
+def bf16_quant_ref(x):
+    """Round-trip through bfloat16 (the 'S16' sampling precision)."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# BAOS — Block-Adaptive Online Smoothing (paper §4.4)
+# ---------------------------------------------------------------------------
+
+def baos_factors_ref(x, alpha=1.0, variant="mean", eps=1e-6):
+    """Warm-step calibration factors from x: [B, H, S, D].
+
+    Returns (c, f), both [B, H, 1, D]. `variant` is 'mean' (temporal-mean
+    center, paper Eq. 8) or 'minmax' (midpoint center). f is raised to
+    the power alpha (paper Eq. 9).
+    """
+    x = x.astype(jnp.float32)
+    xmax = jnp.max(x, axis=2, keepdims=True)
+    xmin = jnp.min(x, axis=2, keepdims=True)
+    if variant == "mean":
+        c = jnp.mean(x, axis=2, keepdims=True)
+    elif variant == "minmax":
+        c = 0.5 * (xmax + xmin)
+    else:
+        raise ValueError(f"unknown BAOS variant {variant!r}")
+    f = jnp.maximum(xmax - c, c - xmin)
+    f = jnp.maximum(f, eps) ** alpha
+    return c, f
+
+
+def baos_normalize_ref(x, c, f):
+    """(x - c) / f — applied before the MX block quantizer."""
+    return (x.astype(jnp.float32) - c) / f
+
+
+def baos_denormalize_ref(xs, c, f):
+    return xs.astype(jnp.float32) * f + c
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm / SwiGLU (transformer building blocks; L2 uses these directly)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_ref(x, g, eps=1e-5):
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down

@@ -1,0 +1,218 @@
+"""L1 Pallas kernels: the diffusion sampling engine (paper §3.2, Alg. 2).
+
+These kernels mirror the four hardware-visible phases of the DART
+Vector-Scalar Sampling Engine:
+
+  Phase 1  (HBM → Vector → Scalar): ``confidence_argmax`` — the Stable-Max
+           decomposition. V_RED_MAX_IDX finds (m, i*) in one pass, the
+           logit buffer is overwritten in place with exp(z - m)
+           (V_EXP_V), V_RED_SUM accumulates the denominator, and S_RECIP
+           yields the confidence 1/Σ exp(z_j − m). The vocabulary is
+           streamed in ``v_chunk`` tiles — the kernel's fori_loop is the
+           HBM→VMEM chunk schedule (Eq. 4's V_chunk term).
+  Phase 3  (Scalar → Vector → Scalar): ``topk_mask`` — the O(k)-area
+           streaming insertion comparator (V_TOPK_MASK).
+  Phase 4  (Integer masked update): ``masked_select`` — V_SELECT_INT.
+
+Each kernel is verified against ``ref.py`` in python/tests, and the same
+semantics are re-implemented by the Rust golden sampling engine
+(rust/src/sampling), cross-checked through artifacts/manifest.json.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: Stable-Max confidence + fused max-with-index
+# ---------------------------------------------------------------------------
+
+def _confidence_kernel(z_ref, conf_ref, idx_ref, *, v_chunk: int):
+    """One (position,) program: stream the V-long logit row in chunks.
+
+    Pass 1 (V_RED_MAX_IDX): running (max, argmax) over chunks.
+    Pass 2 (V_EXP_V + V_RED_SUM): running Σ exp(z − m).
+    S_RECIP: conf = 1 / Σ. No global synchronization between passes —
+    each chunk's partial reduction folds into a scalar carry.
+    """
+    v = z_ref.shape[0]
+    n_chunks = v // v_chunk
+
+    def max_body(i, carry):
+        m, mi = carry
+        zc = pl.load(z_ref, (pl.ds(i * v_chunk, v_chunk),)).astype(jnp.float32)
+        cm = jnp.max(zc)
+        ci = jnp.argmax(zc).astype(jnp.int32) + i * v_chunk
+        take = cm > m  # strict '>' — ties keep the earlier index
+        return jnp.where(take, cm, m), jnp.where(take, ci, mi)
+
+    m, mi = jax.lax.fori_loop(
+        0, n_chunks, max_body,
+        (jnp.float32(-jnp.inf), jnp.int32(0)))
+
+    def sum_body(i, acc):
+        zc = pl.load(z_ref, (pl.ds(i * v_chunk, v_chunk),)).astype(jnp.float32)
+        return acc + jnp.sum(jnp.exp(zc - m))
+
+    denom = jax.lax.fori_loop(0, n_chunks, sum_body, jnp.float32(0.0))
+    conf_ref[0] = 1.0 / denom
+    idx_ref[0] = mi
+
+
+@functools.partial(jax.jit, static_argnames=("v_chunk",))
+def confidence_argmax(z, v_chunk=128):
+    """Stable-Max confidence + argmax over the vocabulary axis.
+
+    z: [N, V] logits (N = flattened B×L positions). Returns
+    (conf[N] f32, idx[N] i32). ``v_chunk`` is the streaming tile size
+    (paper's V_chunk knob); must divide V.
+    """
+    n, v = z.shape
+    v_chunk = min(v_chunk, v)
+    assert v % v_chunk == 0, f"V={v} not a multiple of v_chunk={v_chunk}"
+    kernel = functools.partial(_confidence_kernel, v_chunk=v_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((None, v), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(z)
+
+
+# ---------------------------------------------------------------------------
+# Phase 3: streaming insertion top-k (V_TOPK_MASK)
+# ---------------------------------------------------------------------------
+
+def _topk_mask_kernel(conf_ref, mask_ref, k_ref, out_ref, *, l: int, kmax: int):
+    """Streaming insertion over L confidence scalars.
+
+    Maintains a k-deep sorted register file of (value, index) pairs — the
+    paper's O(k)-area comparator chain. An element enters the chain only
+    with a strict '>' comparison, so ties resolve to the earliest index,
+    matching ref.topk_mask_ref and the Rust implementation.
+    """
+    neg = jnp.finfo(jnp.float32).min
+    conf = conf_ref[...].astype(jnp.float32)
+    mask = mask_ref[...]
+    k = k_ref[0]
+    eligible = jnp.where(mask != 0, conf, neg)
+
+    vals0 = jnp.full((kmax,), neg, dtype=jnp.float32)
+    idxs0 = jnp.full((kmax,), -1, dtype=jnp.int32)
+
+    def insert(i, carry):
+        vals, idxs = carry
+        v = eligible[i]
+
+        def shift(j, c):
+            vs, ix, cur_v, cur_i = c
+            # compare against slot j; on strict win, displace and carry on
+            win = cur_v > vs[j]
+            new_vs = vs.at[j].set(jnp.where(win, cur_v, vs[j]))
+            new_ix = ix.at[j].set(jnp.where(win, cur_i, ix[j]))
+            nxt_v = jnp.where(win, vs[j], cur_v)
+            nxt_i = jnp.where(win, idxs_at(ix, j, win), cur_i)
+            return new_vs, new_ix, nxt_v, nxt_i
+
+        def idxs_at(ix, j, win):
+            return ix[j]
+
+        vals, idxs, _, _ = jax.lax.fori_loop(
+            0, kmax, shift, (vals, idxs, v, jnp.int32(i)))
+        return vals, idxs
+
+    vals, idxs = jax.lax.fori_loop(0, l, insert, (vals0, idxs0))
+
+    # emit boolean transfer mask for the first k chain slots
+    out = jnp.zeros((l,), dtype=jnp.int32)
+
+    def emit(j, out):
+        valid = jnp.logical_and(j < k, idxs[j] >= 0)
+        valid = jnp.logical_and(valid, vals[j] > neg)
+        safe = jnp.clip(idxs[j], 0, l - 1)
+        return out.at[safe].set(jnp.where(valid, 1, out[safe]))
+
+    out = jax.lax.fori_loop(0, kmax, emit, out)
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("kmax",))
+def topk_mask(conf, mask, k, kmax=None):
+    """V_TOPK_MASK over a batch of rows.
+
+    conf: [B, L] f32; mask: [B, L] int32 (nonzero = masked/eligible);
+    k: [B] int32 per-row transfer counts. Returns [B, L] int32 boolean
+    mask. ``kmax`` bounds the comparator chain depth (defaults to L).
+    """
+    b, l = conf.shape
+    if kmax is None:
+        kmax = l
+    kernel = functools.partial(_topk_mask_kernel, l=l, kmax=kmax)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((None, l), lambda i: (i, 0)),
+            pl.BlockSpec((None, l), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l), jnp.int32),
+        interpret=True,
+    )(conf, mask, k)
+
+
+# ---------------------------------------------------------------------------
+# Phase 4: masked integer select (V_SELECT_INT)
+# ---------------------------------------------------------------------------
+
+def _select_kernel(m_ref, a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.where(m_ref[...] != 0, a_ref[...], b_ref[...])
+
+
+@jax.jit
+def masked_select(mask, a, b):
+    """V_SELECT_INT: out[i] = mask[i] ? a[i] : b[i] over int32 rows."""
+    rows, l = mask.shape
+    return pl.pallas_call(
+        _select_kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((None, l), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((None, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, l), jnp.int32),
+        interpret=True,
+    )(mask.astype(jnp.int32), a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Full intra-block sampling step (Alg. 2 phases 1–4 fused for the L2 graph)
+# ---------------------------------------------------------------------------
+
+def sample_block(z, x, k, mask_id, v_chunk=128):
+    """One diffusion sampling step over an active block.
+
+    z: [B, L, V] logits; x: [B, L] int32 current tokens; k: [B] int32
+    number of tokens to commit this step. Returns (x_new, conf, x0):
+    the updated sequence, per-position confidences, and per-position
+    argmax predictions.
+    """
+    b, l, v = z.shape
+    m_idx = (x == mask_id).astype(jnp.int32)                       # line 6
+    conf_f, x0_f = confidence_argmax(z.reshape(b * l, v), v_chunk)  # phase 1–2
+    conf = conf_f.reshape(b, l)
+    x0 = x0_f.reshape(b, l)
+    transfer = topk_mask(conf, m_idx, k)                           # phase 3
+    x0_m = masked_select(m_idx, x0, x)                             # phase 4
+    x_new = masked_select(transfer, x0_m, x)
+    return x_new, conf, x0

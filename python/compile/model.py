@@ -1,0 +1,324 @@
+"""L2: LLaDA-style masked-diffusion transformer in JAX (paper §2, Alg. 1).
+
+Structure mirrors the paper's execution model exactly:
+
+* bidirectional attention (no causal mask) via the L1 Pallas
+  FlashAttention kernel;
+* blocked-diffusion generation (Fast-dLLM): each generation block starts
+  with a *warm step* over the full sequence that (re)computes the KV
+  cache, followed by T−1 *refinement steps* under one of three cache
+  strategies — ``none`` (recompute everything), ``prefix`` (cache prefix
+  only, recompute active+suffix) or ``dual`` (full cache, in-place active
+  block replacement, frozen stale suffix);
+* the sampling stage (Alg. 2) via the L1 sampling kernels.
+
+Three entry points are AOT-lowered by ``aot.py`` into HLO-text artifacts
+executed from Rust: ``forward_full`` (warm steps / none-cache steps),
+``forward_refine_dual`` (dual-cache refinement) and
+``forward_refine_prefix`` (prefix-cache refinement, one executable per
+block index because the tail length is shape-static).
+
+Everything here is build-time python; the request path is Rust-only.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, GenConfig
+from .kernels.attention import flash_attention
+from .kernels.sampling import sample_block
+from .kernels.ref import attention_ref, rmsnorm_ref as rmsnorm
+
+# Attention implementation used by the forward passes. The AOT path uses
+# the L1 Pallas kernel (the deliverable); the training loop swaps in the
+# mathematically identical pure-jnp oracle, which jits ~100x faster under
+# CPU interpret mode (numerics agree to fp32 rounding — asserted in
+# python/tests/test_attention.py).
+_ATTN_IMPL = flash_attention
+
+
+def set_attention_impl(name: str):
+    """Select 'pallas' (default, used for AOT) or 'ref' (fast jnp path)."""
+    global _ATTN_IMPL
+    _ATTN_IMPL = {"pallas": flash_attention, "ref": attention_ref}[name]
+
+
+def _attention(q, k, v):
+    return _ATTN_IMPL(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize parameters as a flat dict of stacked per-layer arrays.
+
+    Stacking (leading N_L axis) keeps the AOT executables' argument count
+    small and lets the Rust runtime feed a fixed tensor tuple.
+    """
+    k = iter(jax.random.split(key, 32))
+    d, dh = cfg.d_model, cfg.d_head
+    hq, hkv, nl, f = cfg.n_heads, cfg.n_kv_heads, cfg.n_layers, cfg.d_ff
+
+    def init(key, shape, fan_in):
+        return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+    p = {
+        "embed": init(next(k), (cfg.vocab_size, d), d),
+        "wq": init(next(k), (nl, d, hq * dh), d),
+        "wk": init(next(k), (nl, d, hkv * dh), d),
+        "wv": init(next(k), (nl, d, hkv * dh), d),
+        "wo": init(next(k), (nl, hq * dh, d), hq * dh),
+        "norm1": jnp.ones((nl, d), jnp.float32),
+        "norm2": jnp.ones((nl, d), jnp.float32),
+        "norm_f": jnp.ones((d,), jnp.float32),
+    }
+    if cfg.is_moe:
+        e = cfg.n_experts
+        p["gate"] = init(next(k), (nl, d, e), d)
+        p["w_gate"] = init(next(k), (nl, e, d, f), d)
+        p["w_up"] = init(next(k), (nl, e, d, f), d)
+        p["w_down"] = init(next(k), (nl, e, f, d), f)
+    else:
+        p["w_gate"] = init(next(k), (nl, d, f), d)
+        p["w_up"] = init(next(k), (nl, d, f), d)
+        p["w_down"] = init(next(k), (nl, f, d), f)
+    return p
+
+
+PARAM_ORDER = ["embed", "wq", "wk", "wv", "wo", "norm1", "norm2", "norm_f",
+               "w_gate", "w_up", "w_down"]
+PARAM_ORDER_MOE = PARAM_ORDER + ["gate"]
+
+
+def param_names(cfg: ModelConfig):
+    return PARAM_ORDER_MOE if cfg.is_moe else PARAM_ORDER
+
+
+def params_to_list(cfg, params):
+    return [params[n] for n in param_names(cfg)]
+
+
+def params_from_list(cfg, lst):
+    return dict(zip(param_names(cfg), lst))
+
+
+# ---------------------------------------------------------------------------
+# Positional encoding — fixed sinusoidal added to embeddings (absolute
+# positions are shared between warm and refine passes via `pos_offset`).
+# ---------------------------------------------------------------------------
+
+def positional(d_model: int, positions):
+    # NB: numpy (not jnp) constants — jnp.arange lowers to an HLO iota(),
+    # which xla_extension 0.5.1's text parser mis-executes as zeros on
+    # the Rust runtime path. Constants round-trip correctly.
+    inv = jnp.exp(-np.arange(0, d_model, 2) / d_model * np.log(10000.0))
+    ang = positions[:, None].astype(jnp.float32) * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense SwiGLU or MoE with top-k gating, paper Alg. 1 line 10)
+# ---------------------------------------------------------------------------
+
+def _ffn_dense(cfg, p, li, x):
+    h = jax.nn.silu(x @ p["w_gate"][li]) * (x @ p["w_up"][li])
+    return h @ p["w_down"][li]
+
+
+def _ffn_moe(cfg, p, li, x):
+    """Top-k-of-E MoE. Dense formulation (all experts computed, gated sum)
+    — exact at tiny scale; the sparsity only matters for the performance
+    models, which account for it analytically (activated-expert FLOPs)."""
+    scores = jax.nn.softmax(x @ p["gate"][li], axis=-1)       # [B,S,E]
+    topv, topi = jax.lax.top_k(scores, cfg.top_k_experts)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    # per-expert dense FFN
+    h = jnp.einsum("bsd,edf->bsef", x, p["w_gate"][li])
+    u = jnp.einsum("bsd,edf->bsef", x, p["w_up"][li])
+    y = jnp.einsum("bsef,efd->bsed", jax.nn.silu(h) * u, p["w_down"][li])
+    onehot = jax.nn.one_hot(topi, cfg.n_experts, dtype=x.dtype)  # [B,S,K,E]
+    w = jnp.einsum("bsk,bske->bse", topv, onehot)                # [B,S,E]
+    return jnp.einsum("bse,bsed->bsd", w, y)
+
+
+def _ffn(cfg, p, li, x):
+    return _ffn_moe(cfg, p, li, x) if cfg.is_moe else _ffn_dense(cfg, p, li, x)
+
+
+# ---------------------------------------------------------------------------
+# Transformer layers
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg, p, li, x):
+    b, s, _ = x.shape
+    q = (x @ p["wq"][li]).reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    kk = (x @ p["wk"][li]).reshape(b, s, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    vv = (x @ p["wv"][li]).reshape(b, s, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    return q, kk, vv
+
+
+def _attn_out(cfg, p, li, a):
+    b, h, s, dh = a.shape
+    return a.transpose(0, 2, 1, 3).reshape(b, s, h * dh) @ p["wo"][li]
+
+
+def _embed(cfg, p, tokens, pos_offset=0):
+    x = p["embed"][tokens]
+    s = tokens.shape[1]
+    pos = jnp.asarray(np.arange(s)) + pos_offset  # constant, not iota
+    return x + positional(cfg.d_model, pos)[None, :, :]
+
+
+def forward_full(cfg: ModelConfig, params, tokens):
+    """Full-sequence bidirectional forward (warm step / none-cache step).
+
+    tokens: [B, S] int32. Returns (logits [B,S,V] f32,
+    k_cache, v_cache [N_L, B, Hkv, S, Dh] f32).
+    """
+    p = params
+    x = _embed(cfg, p, tokens)
+    ks, vs = [], []
+    for li in range(cfg.n_layers):
+        h = rmsnorm(x, p["norm1"][li], cfg.rms_eps)
+        q, kk, vv = _project_qkv(cfg, p, li, h)
+        ks.append(kk)
+        vs.append(vv)
+        a = _attention(q, kk, vv)
+        x = x + _attn_out(cfg, p, li, a)
+        h = rmsnorm(x, p["norm2"][li], cfg.rms_eps)
+        x = x + _ffn(cfg, p, li, h)
+    x = rmsnorm(x, p["norm_f"], cfg.rms_eps)
+    logits = x @ p["embed"].T  # tied lm head
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def forward_refine_dual(cfg: ModelConfig, params, tokens_act, k_cache, v_cache,
+                        block_start):
+    """Dual-cache refinement step (Fig. 4b).
+
+    Only the active block [B, L] is processed; its KV replaces the cached
+    slice in place (dynamic_update_slice at ``block_start``); prefix and
+    suffix KV stay frozen from the warm step (the suffix is *stale*).
+
+    tokens_act: [B, L]; k_cache/v_cache: [N_L, B, Hkv, L_tot, Dh];
+    block_start: scalar int32. Returns (logits [B,L,V], k_act, v_act
+    [N_L, B, Hkv, L, Dh]) — the caller (the Rust KV manager) commits the
+    active KV into its cache copy.
+    """
+    p = params
+    x = _embed(cfg, p, tokens_act, pos_offset=block_start)
+    kas, vas = [], []
+    for li in range(cfg.n_layers):
+        h = rmsnorm(x, p["norm1"][li], cfg.rms_eps)
+        q, kk, vv = _project_qkv(cfg, p, li, h)
+        kas.append(kk)
+        vas.append(vv)
+        kc = jax.lax.dynamic_update_slice(
+            k_cache[li], kk, (0, 0, block_start, 0))
+        vc = jax.lax.dynamic_update_slice(
+            v_cache[li], vv, (0, 0, block_start, 0))
+        a = _attention(q, kc, vc)
+        x = x + _attn_out(cfg, p, li, a)
+        h = rmsnorm(x, p["norm2"][li], cfg.rms_eps)
+        x = x + _ffn(cfg, p, li, h)
+    x = rmsnorm(x, p["norm_f"], cfg.rms_eps)
+    logits = x @ p["embed"].T
+    return logits, jnp.stack(kas), jnp.stack(vas)
+
+
+def forward_refine_prefix(cfg: ModelConfig, params, tokens_tail, k_prefix,
+                          v_prefix, prefix_len: int, block_len: int):
+    """Prefix-cache refinement step (Fig. 4a).
+
+    The sequence from the active block onward (``tokens_tail``,
+    [B, L_tot − prefix_len]) is reprocessed: active-block and suffix KV
+    are recomputed fresh each step (full context freshness) but not
+    cached. Attention runs over [prefix KV ‖ fresh tail KV].
+
+    Returns logits for the active block only: [B, block_len, V].
+    """
+    p = params
+    x = _embed(cfg, p, tokens_tail, pos_offset=prefix_len)
+    for li in range(cfg.n_layers):
+        h = rmsnorm(x, p["norm1"][li], cfg.rms_eps)
+        q, kk, vv = _project_qkv(cfg, p, li, h)
+        kc = jnp.concatenate([k_prefix[li], kk], axis=2)
+        vc = jnp.concatenate([v_prefix[li], vv], axis=2)
+        a = _attention(q, kc, vc)
+        x = x + _attn_out(cfg, p, li, a)
+        h = rmsnorm(x, p["norm2"][li], cfg.rms_eps)
+        x = x + _ffn(cfg, p, li, h)
+    x = rmsnorm(x, p["norm_f"], cfg.rms_eps)
+    logits = x @ p["embed"].T
+    return logits[:, :block_len, :]
+
+
+# ---------------------------------------------------------------------------
+# Sampling schedule (paper Alg. 2, get_num_transfer_tokens)
+# ---------------------------------------------------------------------------
+
+def num_transfer_tokens(block_len: int, steps: int):
+    """Tokens committed at each denoising step: L/T each, remainder to the
+    earliest steps (LLaDA reference schedule)."""
+    base, rem = divmod(block_len, steps)
+    return [base + (1 if t < rem else 0) for t in range(steps)]
+
+
+# ---------------------------------------------------------------------------
+# Reference blocked-diffusion generation loop (python golden; the Rust
+# coordinator re-implements exactly this control flow on the PJRT path)
+# ---------------------------------------------------------------------------
+
+def generate(cfg: ModelConfig, gc: GenConfig, params, prompt,
+             cache_mode="dual", v_chunk=128, kv_transform=None,
+             logit_transform=None):
+    """Generate ``gc.gen_len`` tokens after ``prompt`` [B, prompt_len].
+
+    cache_mode: 'none' | 'prefix' | 'dual'. ``kv_transform`` optionally
+    maps (k_cache, v_cache, warm: bool) -> (k, v) — the hook the
+    quantization accuracy harness uses to fake-quantize the KV cache
+    (naive, rotated, or BAOS-smoothed) exactly where the hardware would.
+    ``logit_transform`` (logits -> logits) models the sampling-stage
+    precision (FP64 reference / BF16 / MXFP8, paper §6.1).
+
+    Returns the full [B, L_tot] sequence.
+    """
+    b = prompt.shape[0]
+    x = jnp.full((b, gc.total_len), cfg.mask_id, dtype=jnp.int32)
+    x = x.at[:, :gc.prompt_len].set(prompt)
+    ks = num_transfer_tokens(gc.block_len, gc.steps_per_block)
+
+    for n in range(gc.n_blocks):
+        s_n, e_n = gc.block_start(n), gc.block_end(n)
+        k_cache = v_cache = None
+        for t in range(gc.steps_per_block):
+            k_t = jnp.full((b,), ks[t], dtype=jnp.int32)
+            if t == 0 or cache_mode == "none":
+                # warm step (or uncached step): full sequence
+                logits_all, k_cache, v_cache = forward_full(cfg, params, x)
+                if kv_transform is not None:
+                    k_cache, v_cache = kv_transform(k_cache, v_cache, True)
+                logits = logits_all[:, s_n:e_n, :]
+            elif cache_mode == "dual":
+                logits, ka, va = forward_refine_dual(
+                    cfg, params, x[:, s_n:e_n], k_cache, v_cache,
+                    jnp.int32(s_n))
+                k_cache = jax.lax.dynamic_update_slice(
+                    k_cache, ka, (0, 0, 0, s_n, 0))
+                v_cache = jax.lax.dynamic_update_slice(
+                    v_cache, va, (0, 0, 0, s_n, 0))
+                if kv_transform is not None:
+                    k_cache, v_cache = kv_transform(k_cache, v_cache, False)
+            else:  # prefix
+                logits = forward_refine_prefix(
+                    cfg, params, x[:, s_n:], k_cache[:, :, :, :s_n, :],
+                    v_cache[:, :, :, :s_n, :], s_n, gc.block_len)
+            if logit_transform is not None:
+                logits = logit_transform(logits)
+            xb, _, _ = sample_block(logits, x[:, s_n:e_n], k_t, cfg.mask_id,
+                                    v_chunk=v_chunk)
+            x = x.at[:, s_n:e_n].set(xb)
+    return x

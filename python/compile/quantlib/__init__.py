@@ -1,0 +1,16 @@
+"""DART accuracy-simulator quantization library (paper §4.3–§4.4, §6.1).
+
+numpy/jnp implementations of every quantization scheme Table 5 compares:
+
+* ``mx``        — MX block formats (MXINT4/6/8, MXFP8-E4M3), numpy.
+* ``baos``      — Block-Adaptive Online Smoothing with warm-step
+                  calibration (mean / minmax centering, α power transform).
+* ``rotation``  — QuaRot-style Hadamard rotation baseline adapted to
+                  blocked dLLM decoding.
+* ``gptq``      — GPTQ with Hessian error propagation and x-clip /
+                  y-clip percentile search (PLENA-style, Eq. 7).
+* ``harness``   — the Table 5 machinery: KV / weight / sampling tracks
+                  over prefix- and dual-cache blocked decoding.
+"""
+
+from . import mx, baos, rotation, gptq, harness  # noqa: F401

@@ -1,0 +1,76 @@
+"""Block-Adaptive Online Smoothing (BAOS) — paper §4.4.
+
+The dLLM-specific KV-cache quantization scheme: the *warm step* of each
+generation block (which recomputes KV for the whole sequence anyway) is
+used as a zero-overhead online calibration point. Per-channel scaling
+factors of shape (B, H, 1, D) are computed by reducing over the sequence
+axis, then reused for every refinement step of the block — valid because
+the dominant outlier channels are stable within a block (paper §4.4.1).
+
+The normalized tensor (x − c)/f is what enters the MX block quantizer;
+attention fuses the inverse scale into the query (Q·f) so the cache is
+never unscaled in memory. For K the center c is *free*: softmax is
+invariant to the constant-per-query offset Q·cᵀ. For V the output is
+re-affined as out·f + c (rows of the attention matrix sum to 1).
+"""
+
+import numpy as np
+
+from . import mx
+
+
+class BaosState:
+    """Per-generation-block calibration state (one (c, f) pair per KV)."""
+
+    def __init__(self, variant="mean", alpha=1.0, eps=1e-6):
+        assert variant in ("mean", "minmax")
+        self.variant = variant
+        self.alpha = float(alpha)
+        self.eps = eps
+        self.c_k = self.f_k = None
+        self.c_v = self.f_v = None
+
+    # -- calibration -------------------------------------------------------
+    def _factors(self, x):
+        """x: [..., S, D] -> (c, f) with shape [..., 1, D] (Eq. 8–9)."""
+        x = np.asarray(x, dtype=np.float32)
+        xmax = x.max(axis=-2, keepdims=True)
+        xmin = x.min(axis=-2, keepdims=True)
+        if self.variant == "mean":
+            c = x.mean(axis=-2, keepdims=True)
+        else:
+            c = 0.5 * (xmax + xmin)
+        f = np.maximum(xmax - c, c - xmin)
+        f = np.maximum(f, self.eps) ** self.alpha
+        return c, f
+
+    def calibrate(self, k, v):
+        """Warm-step calibration from full K/V: [N_L, B, H, S, D]."""
+        self.c_k, self.f_k = self._factors(k)
+        self.c_v, self.f_v = self._factors(v)
+
+    @property
+    def calibrated(self):
+        return self.c_k is not None
+
+    # -- smooth + quantize + unsmooth (accuracy-sim round trip) -------------
+    def apply(self, k, v, fmt="mxint4", block=mx.MX_BLOCK):
+        """Fake-quantize K/V through the smoothed domain."""
+        ks = (np.asarray(k, np.float32) - self.c_k) / self.f_k
+        vs = (np.asarray(v, np.float32) - self.c_v) / self.f_v
+        kq = mx.quantize(ks, fmt, block=block)
+        vq = mx.quantize(vs, fmt, block=block)
+        return kq * self.f_k + self.c_k, vq * self.f_v + self.c_v
+
+
+def outlier_channel_stability(k_warm, k_steps, top=16):
+    """Fraction of top-`top` outlier channels (by per-channel max |k|)
+    shared between the warm step and each refinement step — the §4.4.1
+    profiling statistic (paper reports >70%)."""
+    def top_channels(x):
+        mag = np.abs(np.asarray(x)).max(axis=tuple(range(x.ndim - 1)))
+        return set(np.argsort(-mag)[:top].tolist())
+
+    warm = top_channels(k_warm)
+    overlaps = [len(warm & top_channels(ks)) / top for ks in k_steps]
+    return float(np.mean(overlaps)) if overlaps else 1.0

@@ -1,0 +1,136 @@
+"""GPTQ with MX block scales and clipping-percentile search (paper §4.3).
+
+Implements the PLENA-style weight-quantization flow the paper adopts:
+GPTQ's iterative Hessian-based error propagation, processed in
+column-blocks aligned with the MX block size (so each block shares one
+per-row power-of-two scale), with an optional per-row clipping percentile
+search:
+
+* ``x-clip`` — weight-norm guided: pick p minimizing ‖W_b − Q(W_b; p)‖²
+* ``y-clip`` — output-norm guided (Eq. 7): pick p minimizing
+  ‖X_b (W_b − Q(W_b; p))ᵀ‖²
+
+Conventions: W is [N, K] (rows = output channels), calibration X is
+[M, K]; the quantized layer computes y = x Wᵀ.
+"""
+
+import numpy as np
+
+from . import mx
+
+DEFAULT_GRID = (1.0, 0.99, 0.95, 0.9, 0.8, 0.7, 0.6, 0.5)
+
+
+def _block_scales(wb, bits, clip):
+    """Per-row shared pow-2 scale for one [N, B] column block.
+
+    clip: [N] per-row percentile multipliers on the representable range.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    maxabs = np.max(np.abs(wb), axis=1) * clip
+    return mx._pow2_scale(np.maximum(maxabs, 1e-30), qmax), qmax
+
+
+def _quant_cols(wb, scale, qmax):
+    q = np.clip(np.round(wb / scale[:, None]), -qmax, qmax)
+    return q * scale[:, None]
+
+
+def search_clip(wb, xb=None, bits=4, grid=DEFAULT_GRID, mode="x"):
+    """Per-row clipping percentile search over one column block.
+
+    mode 'x': minimize weight reconstruction error.
+    mode 'y': minimize output reconstruction error ‖X_b ΔWᵀ‖² (Eq. 7);
+              factorizes per row as Δw H_b Δwᵀ with H_b = X_bᵀX_b.
+    Returns the [N] vector of selected percentiles.
+    """
+    n = wb.shape[0]
+    best_err = np.full(n, np.inf)
+    best_p = np.ones(n)
+    hb = None
+    if mode == "y":
+        if xb is None:
+            raise ValueError("y-clip requires calibration activations X_b")
+        hb = xb.T @ xb  # [B, B]
+    for p in grid:
+        scale, qmax = _block_scales(wb, bits, np.full(n, p))
+        q = _quant_cols(wb, scale, qmax)
+        delta = wb - q
+        if mode == "x":
+            err = np.sum(delta * delta, axis=1)
+        else:
+            err = np.einsum("nb,bc,nc->n", delta, hb, delta)
+        take = err < best_err
+        best_err = np.where(take, err, best_err)
+        best_p = np.where(take, p, best_p)
+    return best_p
+
+
+def gptq_quantize(w, x, bits=4, block=mx.MX_BLOCK, percdamp=0.01,
+                  clip_mode="none", grid=DEFAULT_GRID):
+    """Quantize W [N, K] to MXINT<bits> with GPTQ error propagation.
+
+    x: calibration activations [M, K]. clip_mode: 'none' | 'x' | 'y'.
+    Returns the fake-quantized (dequantized f32) weight.
+    """
+    w = np.asarray(w, dtype=np.float64).copy()
+    x = np.asarray(x, dtype=np.float64)
+    n, k = w.shape
+    assert k % block == 0, f"K={k} not a multiple of MX block {block}"
+
+    h = 2.0 * (x.T @ x)                       # Hessian of the quadratic
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    w[:, dead] = 0.0
+    damp = percdamp * float(np.mean(np.diag(h)))
+    h[np.diag_indices(k)] += damp
+
+    # Upper-Cholesky factor of H^-1 (Hinv = Uᵀ U), as in reference GPTQ
+    hinv = np.linalg.inv(h)
+    hinv = 0.5 * (hinv + hinv.T)  # re-symmetrize against fp error
+    hinv_u = np.ascontiguousarray(np.linalg.cholesky(hinv).T)
+
+    q_out = np.zeros_like(w)
+    for b0 in range(0, k, block):
+        b1 = b0 + block
+        wb = w[:, b0:b1]
+        if clip_mode == "none":
+            clip = np.ones(n)
+        else:
+            clip = search_clip(wb, x[:, b0:b1], bits=bits, grid=grid,
+                               mode=clip_mode)
+        scale, qmax = _block_scales(wb, bits, clip)
+        err_block = np.zeros_like(wb)
+        for j in range(b0, b1):
+            wj = w[:, j]
+            qj = np.clip(np.round(wj / scale), -qmax, qmax) * scale
+            q_out[:, j] = qj
+            d = hinv_u[j, j]
+            err = (wj - qj) / d
+            # propagate within the remaining columns of this block
+            if j + 1 < b1:
+                w[:, j + 1:b1] -= np.outer(err, hinv_u[j, j + 1:b1])
+            err_block[:, j - b0] = err
+        # propagate the accumulated block error to all remaining columns
+        if b1 < k:
+            w[:, b1:] -= err_block @ hinv_u[b0:b1, b1:]
+    return q_out.astype(np.float32)
+
+
+def rtn_quantize(w, bits=4, block=mx.MX_BLOCK, clip_mode="none",
+                 grid=DEFAULT_GRID):
+    """Round-to-nearest MXINT baseline (the Table 5 'W4' row), with
+    optional per-row clip search but no Hessian propagation."""
+    w = np.asarray(w, dtype=np.float64)
+    n, k = w.shape
+    out = np.zeros_like(w)
+    for b0 in range(0, k, block):
+        wb = w[:, b0:b0 + block]
+        if clip_mode == "none":
+            clip = np.ones(n)
+        else:
+            clip = search_clip(wb, None if clip_mode == "x" else wb,
+                               bits=bits, grid=grid, mode="x")
+        scale, qmax = _block_scales(wb, bits, clip)
+        out[:, b0:b0 + block] = _quant_cols(wb, scale, qmax)
+    return out.astype(np.float32)

@@ -1,0 +1,219 @@
+"""Table 5 accuracy machinery: quantization quality over blocked decoding.
+
+Substitution S5 (DESIGN.md): LLaDA-8B + GSM8K/HumanEval are replaced by
+the tiny trained denoiser + deterministic synthetic tasks; the metric is
+exact-match / token accuracy of the generated continuation, and the
+experiment compares the *same tracks* as the paper's Table 5:
+
+  sampling track : FP32-reference vs BF16 vs MXFP8 logits
+  KV track       : KV4 (naive MXINT4), QuaRot rotation, BAOS
+                   (mean ᾱ / minmax α̂ × α ∈ {1.0, 0.9, 0.6})
+  weight track   : W4 (RTN MXINT4), GPTQ, GPTQ + x-clip / y-clip
+  full stack     : best KV + best W4 + BF16 sampling
+
+over both prefix-cache and dual-cache decoding.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs import ModelConfig, GenConfig
+from .. import model as M
+from ..kernels.ref import attention_ref, rmsnorm_ref
+from . import mx, baos, rotation, gptq
+
+
+# ---------------------------------------------------------------------------
+# Calibration capture: inputs to every quantized linear layer
+# ---------------------------------------------------------------------------
+
+def capture_calib(cfg: ModelConfig, params, tokens):
+    """Run forward_full capturing the input activations of each linear.
+
+    Returns {weight_name: {layer_index: X [M, K]}} for the per-layer
+    stacked weights. Mirrors model.forward_full exactly (asserted in
+    tests by comparing final logits).
+    """
+    p = params
+    caps = {n: {} for n in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")}
+    x = M._embed(cfg, p, tokens)
+    b, s, d = x.shape
+    for li in range(cfg.n_layers):
+        h = rmsnorm_ref(x, p["norm1"][li], cfg.rms_eps)
+        caps["wq"][li] = caps["wk"][li] = caps["wv"][li] = \
+            np.asarray(h.reshape(-1, d))
+        q, kk, vv = M._project_qkv(cfg, p, li, h)
+        a = attention_ref(q, kk, vv)
+        a_flat = a.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        caps["wo"][li] = np.asarray(a_flat.reshape(-1, a_flat.shape[-1]))
+        x = x + a_flat @ p["wo"][li]
+        h = rmsnorm_ref(x, p["norm2"][li], cfg.rms_eps)
+        caps["w_gate"][li] = caps["w_up"][li] = np.asarray(h.reshape(-1, d))
+        mid = jax.nn.silu(h @ p["w_gate"][li]) * (h @ p["w_up"][li])
+        caps["w_down"][li] = np.asarray(mid.reshape(-1, mid.shape[-1]))
+        x = x + mid @ p["w_down"][li]
+    x = rmsnorm_ref(x, p["norm_f"], cfg.rms_eps)
+    logits = x @ p["embed"].T
+    return caps, np.asarray(logits)
+
+
+# ---------------------------------------------------------------------------
+# Weight track
+# ---------------------------------------------------------------------------
+
+WEIGHT_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def quantize_weights(cfg: ModelConfig, params, calib, mode="rtn", bits=4,
+                     act_fmt="mxint8"):
+    """Return a new params dict with MXINT<bits> weights (+MX8 activations
+    modeled by quantizing calib-independent weights only — activation
+    quantization is dynamic in hardware and simulated at the matmul
+    boundary by the A8 logit noise being negligible at these scales).
+
+    mode: 'rtn' | 'gptq' | 'gptq_xclip' | 'gptq_yclip'.
+    """
+    out = dict(params)
+    for name in WEIGHT_NAMES:
+        stack = np.asarray(params[name])
+        qs = []
+        for li in range(cfg.n_layers):
+            w = stack[li].T  # [N, K] rows = outputs
+            if mode == "rtn":
+                q = gptq.rtn_quantize(w, bits=bits)
+            elif mode == "gptq":
+                q = gptq.gptq_quantize(w, calib[name][li], bits=bits)
+            elif mode == "gptq_xclip":
+                q = gptq.gptq_quantize(w, calib[name][li], bits=bits,
+                                       clip_mode="x")
+            elif mode == "gptq_yclip":
+                q = gptq.gptq_quantize(w, calib[name][li], bits=bits,
+                                       clip_mode="y")
+            else:
+                raise ValueError(mode)
+            qs.append(q.T)
+        out[name] = jnp.asarray(np.stack(qs), dtype=jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV track — transforms plugged into model.generate(kv_transform=...)
+# ---------------------------------------------------------------------------
+
+def kv_none():
+    return None
+
+
+def kv_naive(fmt="mxint4"):
+    """Naive per-head-dim MX quantization of the whole cache each step."""
+    def f(k, v, warm):
+        kq = mx.quantize(np.asarray(k), fmt)
+        vq = mx.quantize(np.asarray(v), fmt)
+        return jnp.asarray(kq), jnp.asarray(vq)
+    return f
+
+
+def kv_quarot(fmt="mxint4"):
+    def f(k, v, warm):
+        kq, vq = rotation.rotate_quant_kv(np.asarray(k), np.asarray(v), fmt)
+        return jnp.asarray(kq), jnp.asarray(vq)
+    return f
+
+
+def kv_baos(variant="mean", alpha=1.0, fmt="mxint4"):
+    """BAOS with warm-step calibration: factors are (re)computed on warm
+    steps and *reused* for every refinement step of the block."""
+    state = baos.BaosState(variant=variant, alpha=alpha)
+
+    def f(k, v, warm):
+        if warm or not state.calibrated:
+            state.calibrate(np.asarray(k), np.asarray(v))
+        kq, vq = state.apply(np.asarray(k), np.asarray(v), fmt)
+        return jnp.asarray(kq), jnp.asarray(vq)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Sampling track — logit transforms
+# ---------------------------------------------------------------------------
+
+def logits_bf16(z):
+    return jnp.asarray(mx.quant_bf16(np.asarray(z)))
+
+
+def logits_mxfp8(z):
+    return jnp.asarray(mx.quant_mxfp8(np.asarray(z)))
+
+
+LOGIT_TRANSFORMS = {"fp32": None, "bf16": logits_bf16, "mxfp8": logits_mxfp8}
+
+
+# ---------------------------------------------------------------------------
+# Evaluation driver
+# ---------------------------------------------------------------------------
+
+def evaluate(cfg: ModelConfig, gc: GenConfig, params, eval_seqs,
+             cache_mode="dual", kv_transform=None, logit_mode="fp32",
+             v_chunk=128):
+    """Generate continuations for eval_seqs' prompts and score them.
+
+    Returns dict with exact_match and token_acc (uses the fast attention
+    path; pallas-vs-ref equality is asserted separately in tests).
+    """
+    from .. import train as T
+    M.set_attention_impl("ref")
+    try:
+        prompts = eval_seqs[:, :gc.prompt_len]
+        gen = M.generate(cfg, gc, params, prompts, cache_mode=cache_mode,
+                         v_chunk=v_chunk, kv_transform=kv_transform,
+                         logit_transform=LOGIT_TRANSFORMS[logit_mode])
+        return {
+            "exact_match": T.exact_match(cfg, gc, params, eval_seqs, gen),
+            "token_acc": T.token_accuracy(cfg, gc, eval_seqs, gen),
+        }
+    finally:
+        M.set_attention_impl("pallas")
+
+
+def table5_rows(cfg: ModelConfig, gc: GenConfig, params, eval_seqs,
+                calib_tokens, cache_modes=("prefix", "dual"),
+                alphas=(1.0, 0.9, 0.6), log=print):
+    """Run the full Table 5 grid; returns {cache: {row: metrics}}."""
+    calib, _ = capture_calib(cfg, params, calib_tokens)
+    results = {}
+    for cache in cache_modes:
+        rows = {}
+
+        def run(name, **kw):
+            rows[name] = evaluate(cfg, gc, params if "params_q" not in kw
+                                  else kw.pop("params_q"), eval_seqs,
+                                  cache_mode=cache, **kw)
+            log(f"[{cache}] {name:28s} em={rows[name]['exact_match']:.4f} "
+                f"acc={rows[name]['token_acc']:.4f}")
+
+        # baseline + sampling track
+        run("baseline")
+        run("samp_bf16", logit_mode="bf16")
+        run("samp_mxfp8", logit_mode="mxfp8")
+        # KV track
+        run("kv4", kv_transform=kv_naive())
+        run("quarot", kv_transform=kv_quarot())
+        for a in alphas:
+            run(f"baos_mean_a{a}", kv_transform=kv_baos("mean", a))
+            run(f"baos_minmax_a{a}", kv_transform=kv_baos("minmax", a))
+        # weight track
+        pq_rtn = quantize_weights(cfg, params, calib, mode="rtn")
+        rows["w4"] = evaluate(cfg, gc, pq_rtn, eval_seqs, cache_mode=cache)
+        log(f"[{cache}] {'w4':28s} em={rows['w4']['exact_match']:.4f}")
+        pq_clip = quantize_weights(cfg, params, calib, mode="gptq_xclip")
+        rows["w4_xclip"] = evaluate(cfg, gc, pq_clip, eval_seqs,
+                                    cache_mode=cache)
+        log(f"[{cache}] {'w4_xclip':28s} em={rows['w4_xclip']['exact_match']:.4f}")
+        # full stack: best KV (BAOS mean α=1.0) + GPTQ-xclip W4 + BF16 sampling
+        rows["full"] = evaluate(cfg, gc, pq_clip, eval_seqs, cache_mode=cache,
+                                kv_transform=kv_baos("mean", 1.0),
+                                logit_mode="bf16")
+        log(f"[{cache}] {'full (KV4+W4+S16)':28s} em={rows['full']['exact_match']:.4f}")
+        results[cache] = rows
+    return results

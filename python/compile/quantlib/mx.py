@@ -1,0 +1,98 @@
+"""MX (microscaling) block formats in numpy — the accuracy-sim twin of
+``kernels/mx_quant.py`` and of ``rust/src/quant``.
+
+An MX tensor shares one power-of-two (E8M0) scale per `block` contiguous
+elements along the last axis; elements are either symmetric integers
+(MXINT) or FP8-E4M3 (MXFP8). All functions are fake-quant round trips
+(quantize → dequantize in f32/f64), which is exactly what the accuracy
+simulator needs; bit-exact packing lives on the Rust side.
+"""
+
+import numpy as np
+
+MX_BLOCK = 32
+
+_E4M3_MAX = 448.0
+
+
+def _pow2_scale(maxabs, qmax):
+    maxabs = np.maximum(maxabs, 1e-30)
+    scale = np.exp2(np.floor(np.log2(maxabs / qmax)))
+    scale = np.where(maxabs / scale > qmax, scale * 2.0, scale)
+    return scale
+
+
+def _blocked(x, block):
+    x = np.asarray(x, dtype=np.float64)
+    k = x.shape[-1]
+    if k % block != 0:
+        raise ValueError(f"last dim {k} not a multiple of MX block {block}")
+    return x.reshape(x.shape[:-1] + (k // block, block))
+
+
+def quant_mxint(x, bits=8, block=MX_BLOCK, clip=1.0):
+    """Fake-quantize to MXINT<bits>. ``clip`` shrinks the per-block range
+    to [clip*min, clip*max] before the scale is derived (x-clip search)."""
+    orig = np.asarray(x).shape
+    xb = _blocked(x, block)
+    qmax = float(2 ** (bits - 1) - 1)
+    maxabs = np.max(np.abs(xb), axis=-1, keepdims=True) * clip
+    scale = _pow2_scale(maxabs, qmax)
+    q = np.clip(np.round(xb / scale), -qmax, qmax)
+    return (q * scale).reshape(orig).astype(np.float32)
+
+
+def _to_e4m3(y):
+    """Round-to-nearest-even E4M3 (saturating, no inf) via bit twiddling."""
+    sign = np.signbit(y)
+    a = np.abs(y).astype(np.float32)
+    a = np.minimum(a, _E4M3_MAX)
+    # E4M3: 3 mantissa bits, bias 7, min normal 2^-6, subnormal step 2^-9
+    f32 = a.view(np.uint32) if a.flags["C_CONTIGUOUS"] else np.ascontiguousarray(a).view(np.uint32)
+    exp = ((f32 >> 23) & 0xFF).astype(np.int32) - 127
+    # quantize mantissa to 3 bits with RNE in float domain: snap to grid
+    # step = 2^(exp-3) for normals, 2^-9 for subnormals
+    step = np.exp2(np.maximum(exp, -7) - 3).astype(np.float32)
+    snapped = np.round(a / step) * step
+    snapped = np.minimum(snapped, _E4M3_MAX)
+    out = np.where(sign, -snapped, snapped)
+    return out.astype(np.float32)
+
+
+def quant_mxfp8(x, block=MX_BLOCK, clip=1.0):
+    """Fake-quantize to MXFP8 (E4M3 elements, shared pow-2 block scale)."""
+    orig = np.asarray(x).shape
+    xb = _blocked(x, block)
+    maxabs = np.max(np.abs(xb), axis=-1, keepdims=True) * clip
+    scale = _pow2_scale(maxabs, _E4M3_MAX)
+    y = _to_e4m3((xb / scale).astype(np.float32))
+    return (y * scale).reshape(orig).astype(np.float32)
+
+
+def quant_bf16(x):
+    """Round-trip through bfloat16 (truncate-to-nearest via f32 bits)."""
+    a = np.asarray(x, dtype=np.float32)
+    bits = np.ascontiguousarray(a).view(np.uint32)
+    rounded = (bits + 0x7FFF + ((bits >> 16) & 1)) & 0xFFFF0000
+    return rounded.view(np.float32)
+
+
+def quantize(x, fmt, block=MX_BLOCK, clip=1.0):
+    """Dispatch by format name: mxint4/mxint6/mxint8/mxfp8/bf16/fp32."""
+    if fmt.startswith("mxint"):
+        return quant_mxint(x, bits=int(fmt[5:]), block=block, clip=clip)
+    if fmt == "mxfp8":
+        return quant_mxfp8(x, block=block, clip=clip)
+    if fmt == "bf16":
+        return quant_bf16(x)
+    if fmt in ("fp32", "fp64", "none"):
+        return np.asarray(x, dtype=np.float32)
+    raise ValueError(f"unknown MX format {fmt!r}")
+
+
+def quant_error(x, fmt, **kw):
+    """Relative L2 quantization error — the DSE proxy metric."""
+    x = np.asarray(x, dtype=np.float32)
+    q = quantize(x, fmt, **kw)
+    denom = np.linalg.norm(x) + 1e-12
+    return float(np.linalg.norm(x - q) / denom)

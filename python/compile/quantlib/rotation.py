@@ -1,0 +1,42 @@
+"""QuaRot-style rotation baseline adapted to blocked dLLM decoding.
+
+QuaRot suppresses channel-wise outliers by applying an orthogonal
+(Hadamard) rotation along the head dimension before quantization: the
+rotated tensor spreads outlier energy evenly across channels, and the
+rotation is undone after dequantization (in hardware, fused into the
+adjacent matmuls). The accuracy-sim round trip is therefore
+
+    x_hat = Q(x · H) · Hᵀ
+
+which is exactly how the paper evaluates the "QuaRot [3]" rows of
+Table 5 against BAOS: an AR-era, *static* smoothing method whose
+assumptions (stable activation distributions) dLLM step-wise refinement
+violates.
+"""
+
+import numpy as np
+
+from . import mx
+
+
+def hadamard(n: int) -> np.ndarray:
+    """Normalized Sylvester–Hadamard matrix; n must be a power of two."""
+    if n & (n - 1):
+        raise ValueError(f"Hadamard size {n} is not a power of two")
+    h = np.ones((1, 1), dtype=np.float64)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return (h / np.sqrt(n)).astype(np.float32)
+
+
+def rotate_quant(x, fmt="mxint4", block=mx.MX_BLOCK):
+    """Fake-quantize along the last (head) dim through a Hadamard rotation."""
+    d = x.shape[-1]
+    h = hadamard(d)
+    xr = np.asarray(x, np.float32) @ h
+    q = mx.quantize(xr, fmt, block=min(block, d))
+    return q @ h.T
+
+
+def rotate_quant_kv(k, v, fmt="mxint4", block=mx.MX_BLOCK):
+    return rotate_quant(k, fmt, block), rotate_quant(v, fmt, block)

@@ -1,0 +1,45 @@
+"""Table 5 driver: quantization quality of the trained tiny dLLM across
+sampling / KV / weight tracks under prefix- and dual-cache decoding.
+
+Run with ``make table5``; paste the printed table into EXPERIMENTS.md.
+"""
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from .configs import TINY, TINY_GEN
+from . import model as M
+from . import train as T
+from .quantlib import harness as H
+
+
+def main(n_eval=24):
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    wpath = os.path.join(os.path.dirname(here), "artifacts", "weights.npz")
+    if not os.path.exists(wpath):
+        raise SystemExit("run `make artifacts` first (trained weights needed)")
+    params = {k: jnp.asarray(v) for k, v in np.load(wpath).items()}
+
+    rng = np.random.default_rng(2024)
+    eval_seqs = T.make_batch(TINY, TINY_GEN, rng, n_eval)
+    calib_tokens = T.make_batch(TINY, TINY_GEN, rng, 8)
+
+    results = H.table5_rows(TINY, TINY_GEN, params, eval_seqs, calib_tokens)
+
+    print("\n===== Table 5 (reproduction; exact-match on synthetic tasks) =====")
+    rows = sorted({r for c in results.values() for r in c})
+    hdr = f"{'configuration':30s}" + "".join(
+        f"  {c:>14s}" for c in results)
+    print(hdr)
+    for r in rows:
+        line = f"{r:30s}"
+        for c in results:
+            m = results[c].get(r)
+            line += f"  {m['exact_match']:>7.4f}/{m['token_acc']:.2f}" if m else " " * 16
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Build-time trainer: a masked-diffusion denoiser on synthetic tasks.
+
+Substitution S5 (DESIGN.md): we have no LLaDA checkpoint offline, so the
+artifact pipeline briefly *trains* the tiny L2 model to denoise
+deterministic synthetic sequences. This gives the serving stack a model
+whose generations are objectively scorable (exact-match on the
+deterministic continuation — our GSM8K stand-in) and whose KV activations
+exhibit the trained-transformer channel statistics BAOS exploits.
+
+Objective: LLaDA's masked-diffusion loss. For each sequence, draw
+t ~ U(0,1), mask each answer-region token independently with probability
+t, and minimize 1/t-weighted cross-entropy of the original tokens at the
+masked positions under the bidirectional forward pass.
+
+Optimizer: Adam, implemented here (no optax in the offline environment).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, GenConfig
+from . import model as M
+
+
+# ---------------------------------------------------------------------------
+# Synthetic task corpus
+# ---------------------------------------------------------------------------
+
+TOKEN_BASE = 4   # ids 0..3 reserved (mask, pad, bos, sep)
+TASK_RANGE = 48  # tokens actually used by the tasks (keeps them learnable
+                 # by the tiny model; the remaining vocab still exercises
+                 # the full-V sampling data path)
+
+
+def make_batch(cfg: ModelConfig, gc: GenConfig, rng: np.random.Generator,
+               batch: int, task: str = "mixed"):
+    """Deterministic-continuation sequences of length gc.total_len.
+
+    Tasks (prompt fills the first prompt_len tokens, continuation is a
+    pure function of the prompt — exactly what exact-match can score):
+      * copy: continuation repeats the prompt cyclically
+      * step: s[i] = (s[0] + i*stride) mod Vr, small strides
+      * interleave: even positions repeat prompt[0::2], odd repeat 1::2
+    """
+    vr = min(TASK_RANGE, cfg.vocab_size - TOKEN_BASE)
+    n = gc.total_len
+    out = np.zeros((batch, n), dtype=np.int64)
+    kinds = {"copy": 0, "step": 1, "interleave": 2}
+    for b in range(batch):
+        kind = kinds[task] if task != "mixed" else rng.integers(0, 3)
+        seq = np.zeros(n, dtype=np.int64)
+        if kind == 0:
+            pat = rng.integers(0, vr, size=gc.prompt_len)
+            for i in range(n):
+                seq[i] = pat[i % gc.prompt_len]
+        elif kind == 1:
+            a = rng.integers(0, vr)
+            stride = rng.integers(1, 5)
+            for i in range(n):
+                seq[i] = (a + i * stride) % vr
+        else:
+            pat = rng.integers(0, vr, size=gc.prompt_len)
+            half = gc.prompt_len // 2
+            for i in range(n):
+                src = (i // 2) % half * 2 + (i % 2)
+                seq[i] = pat[src % gc.prompt_len]
+        out[b] = seq + TOKEN_BASE
+    return jnp.asarray(out, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Masked-diffusion loss
+# ---------------------------------------------------------------------------
+
+def diffusion_loss(cfg: ModelConfig, gc: GenConfig, params, seqs, key):
+    """LLaDA masked-diffusion objective over the answer region."""
+    b, n = seqs.shape
+    kt, km = jax.random.split(key)
+    t = jax.random.uniform(kt, (b, 1), minval=0.05, maxval=1.0)
+    u = jax.random.uniform(km, (b, n))
+    answer = jnp.arange(n)[None, :] >= gc.prompt_len
+    masked = jnp.logical_and(u < t, answer)
+    x = jnp.where(masked, cfg.mask_id, seqs)
+    logits, _, _ = M.forward_full(cfg, params, x)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, seqs[..., None], axis=-1)[..., 0]
+    w = masked.astype(jnp.float32) / t  # 1/t importance weight
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(masked), 1)
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled; no optax offline)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    tf = t.astype(jnp.float32)
+    c1, c2 = 1 - b1 ** tf, 1 - b2 ** tf
+
+    def upd(p, m, v):
+        return p - lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+
+    return (jax.tree_util.tree_map(upd, params, m, v),
+            {"m": m, "v": v, "t": t})
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+def train(cfg: ModelConfig, gc: GenConfig, steps=400, batch=32, lr=2e-3,
+          seed=0, log_every=50, log=print):
+    """Train the denoiser; returns (params, loss_history)."""
+    M.set_attention_impl("ref")  # fast jnp attention for training only
+    try:
+        rng = np.random.default_rng(seed)
+        key = jax.random.PRNGKey(seed)
+        params = M.init_params(cfg, key)
+        opt = adam_init(params)
+
+        @jax.jit
+        def step_fn(params, opt, seqs, key):
+            loss, grads = jax.value_and_grad(
+                lambda p: diffusion_loss(cfg, gc, p, seqs, key))(params)
+            params, opt = adam_update(params, grads, opt, lr=lr)
+            return params, opt, loss
+
+        history = []
+        for i in range(steps):
+            seqs = make_batch(cfg, gc, rng, batch)
+            key, sub = jax.random.split(key)
+            params, opt, loss = step_fn(params, opt, seqs, sub)
+            history.append(float(loss))
+            if log_every and (i % log_every == 0 or i == steps - 1):
+                log(f"train step {i:4d}  loss {float(loss):.4f}")
+        return params, history
+    finally:
+        M.set_attention_impl("pallas")
+
+
+# ---------------------------------------------------------------------------
+# Evaluation: exact-match of the deterministic continuation (the GSM8K
+# stand-in used by the Table 5 accuracy harness)
+# ---------------------------------------------------------------------------
+
+def exact_match(cfg: ModelConfig, gc: GenConfig, params, seqs, generated):
+    """Fraction of sequences whose full answer region is reproduced."""
+    ref = np.asarray(seqs)[:, gc.prompt_len:]
+    got = np.asarray(generated)[:, gc.prompt_len:]
+    return float(np.mean(np.all(ref == got, axis=1)))
+
+
+def token_accuracy(cfg: ModelConfig, gc: GenConfig, seqs, generated):
+    """Per-token accuracy over the answer region (finer-grained signal)."""
+    ref = np.asarray(seqs)[:, gc.prompt_len:]
+    got = np.asarray(generated)[:, gc.prompt_len:]
+    return float(np.mean(ref == got))

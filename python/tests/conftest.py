@@ -1,0 +1,20 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# make `compile` importable when pytest is run from python/ or repo root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def artifacts_dir():
+    d = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))), "artifacts")
+    return d

@@ -1,0 +1,111 @@
+"""Artifact manifest self-consistency (requires `make artifacts` first;
+skipped otherwise). The same goldens are consumed by the Rust integration
+tests, so this pins both sides to one ground truth."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="module")
+def manifest(artifacts_dir):
+    path = os.path.join(artifacts_dir, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f), artifacts_dir
+
+
+def test_manifest_format(manifest):
+    m, _ = manifest
+    assert m["format"] == "dart-manifest-v1"
+    assert m["config"]["model"]["vocab_size"] > 0
+    assert set(m["param_order"]) >= {"embed", "wq", "wk", "wv", "wo"}
+
+
+def test_all_hlo_files_exist_and_parse_header(manifest):
+    m, d = manifest
+    for name, ex in m["executables"].items():
+        p = os.path.join(d, ex["file"])
+        assert os.path.exists(p), name
+        head = open(p).read(200)
+        assert "HloModule" in head, name
+
+
+def test_executable_shapes_consistent(manifest):
+    m, _ = manifest
+    cfg = m["config"]["model"]
+    gc = m["config"]["gen"]
+    for b in m["batches"]:
+        ex = m["executables"][f"full_b{b}"]
+        assert ex["inputs"][0][2] == [b, gc["total_len"]]
+        assert ex["outputs"][0][2] == [b, gc["total_len"], cfg["vocab_size"]]
+        exd = m["executables"][f"refine_dual_b{b}"]
+        assert exd["outputs"][0][2] == [b, gc["block_len"], cfg["vocab_size"]]
+
+
+def test_weights_bin_parses_and_matches_npz(manifest):
+    m, d = manifest
+    path = os.path.join(d, m["weights_file"])
+    data = open(path, "rb").read()
+    assert data[:8] == b"DARTWTS1"
+    off = 8
+    (count,) = struct.unpack_from("<I", data, off); off += 4
+    assert count == len(m["param_order"])
+    npz = np.load(os.path.join(d, "weights.npz"))
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<I", data, off); off += 4
+        name = data[off:off + nlen].decode(); off += nlen
+        (ndim,) = struct.unpack_from("<I", data, off); off += 4
+        dims = struct.unpack_from(f"<{ndim}Q", data, off); off += 8 * ndim
+        n = int(np.prod(dims))
+        arr = np.frombuffer(data, dtype="<f4", count=n, offset=off)
+        off += 4 * n
+        np.testing.assert_array_equal(arr.reshape(dims), npz[name])
+    assert off == len(data)
+
+
+def test_goldens_recompute(manifest):
+    """Re-run the golden forward with cached weights; summaries must match
+    the manifest bit-for-bit-ish."""
+    m, d = manifest
+    import jax.numpy as jnp
+    from compile.configs import TINY, TINY_GEN
+    from compile import model as M
+
+    npz = np.load(os.path.join(d, "weights.npz"))
+    params = {k: jnp.asarray(v) for k, v in npz.items()}
+    M.set_attention_impl("ref")
+    try:
+        gc, cfg = TINY_GEN, TINY
+        tok = np.arange(4 * gc.total_len, dtype=np.int32) \
+            .reshape(4, gc.total_len) % m["goldens"]["full_tokens_mod"]
+        lg, kc, vc = M.forward_full(cfg, params, jnp.asarray(tok))
+        g = m["goldens"]["full_logits"]
+        assert abs(float(np.asarray(lg, np.float64).sum()) - g["sum"]) < \
+            1e-3 * max(1.0, abs(g["sum"]))
+        np.testing.assert_allclose(
+            np.asarray(lg).reshape(-1)[:8], g["first8"], rtol=1e-4, atol=1e-4)
+    finally:
+        M.set_attention_impl("pallas")
+
+
+def test_sampling_goldens_selfconsistent(manifest):
+    m, _ = manifest
+    g = m["goldens"]["sampling"]
+    b, l, v = g["b"], g["l"], g["v"]
+    z = np.asarray(g["z"], np.float32).reshape(b, l, v)
+    conf = np.asarray(g["conf"], np.float32).reshape(b, l)
+    idx = np.asarray(g["argmax"], np.int64).reshape(b, l)
+    # conf == softmax max, idx == argmax
+    zm = z.max(axis=-1)
+    denom = np.exp(z - zm[..., None]).sum(axis=-1)
+    np.testing.assert_allclose(conf, 1.0 / denom, rtol=1e-5)
+    np.testing.assert_array_equal(idx, z.argmax(axis=-1))
+    tm = np.asarray(g["transfer_mask"], np.int64).reshape(b, l)
+    k = np.asarray(g["k"])
+    np.testing.assert_array_equal(tm.sum(axis=1), np.minimum(
+        k, (np.asarray(g["x"]).reshape(b, l) == g["mask_id"]).sum(axis=1)))

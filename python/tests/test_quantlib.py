@@ -1,0 +1,166 @@
+"""quantlib: GPTQ / clipping / BAOS / rotation semantics (paper §4.3–4.4)."""
+
+import numpy as np
+import pytest
+
+from compile.quantlib import mx, baos, rotation, gptq
+
+
+@pytest.fixture(scope="module")
+def wx():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(32, 128))
+    # a few outlier input channels, as in real transformer activations
+    x = rng.normal(size=(512, 128))
+    x[:, 7] *= 8
+    x[:, 90] *= 5
+    return w, x
+
+
+def _output_err(w, q, x):
+    return float(np.linalg.norm(x @ (w - q).T))
+
+
+def test_gptq_beats_rtn(wx):
+    w, x = wx
+    q_rtn = gptq.rtn_quantize(w, bits=4)
+    q_gptq = gptq.gptq_quantize(w, x, bits=4)
+    assert _output_err(w, q_gptq, x) < _output_err(w, q_rtn, x)
+
+
+def test_clip_search_beats_plain_gptq(wx):
+    w, x = wx
+    q = gptq.gptq_quantize(w, x, bits=4)
+    qx = gptq.gptq_quantize(w, x, bits=4, clip_mode="x")
+    qy = gptq.gptq_quantize(w, x, bits=4, clip_mode="y")
+    base = _output_err(w, q, x)
+    assert _output_err(w, qx, x) < base * 1.02  # x-clip ~helps
+    assert _output_err(w, qy, x) < base         # y-clip targets exactly this
+
+
+def test_yclip_minimizes_output_not_weight_err(wx):
+    """Eq. 7: y-clip may sacrifice weight error for output error."""
+    w, x = wx
+    qx = gptq.gptq_quantize(w, x, bits=4, clip_mode="x")
+    qy = gptq.gptq_quantize(w, x, bits=4, clip_mode="y")
+    assert _output_err(w, qy, x) <= _output_err(w, qx, x) * 1.05
+
+
+def test_gptq_8bit_near_lossless(wx):
+    w, x = wx
+    q = gptq.gptq_quantize(w, x, bits=8)
+    rel = np.linalg.norm(w - q) / np.linalg.norm(w)
+    assert rel < 0.01
+
+
+def test_clip_grid_percentiles_valid(wx):
+    w, _ = wx
+    p = gptq.search_clip(w[:, :32], None, bits=4, mode="x")
+    assert p.shape == (32,)
+    assert np.all((p >= 0.5) & (p <= 1.0))
+
+
+# ---------------------------------------------------------------------------
+# BAOS
+# ---------------------------------------------------------------------------
+
+def _kv_with_outliers(seed=1, shape=(2, 2, 2, 16, 32), chans=(3, 17)):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape).astype(np.float32)
+    for c in chans:
+        x[..., c] = x[..., c] * 15 + 4  # magnitude + offset outliers
+    return x
+
+
+def test_baos_beats_naive_on_outliers():
+    """The Table 5 headline ordering: BAOS < naive KV4 error under
+    channel-wise outliers (13–19x the mean, §4.4)."""
+    k = _kv_with_outliers()
+    st = baos.BaosState("mean", 1.0)
+    st.calibrate(k, k)
+    kq, _ = st.apply(k, k, "mxint4")
+    kn = mx.quantize(k, "mxint4")
+    assert np.linalg.norm(kq - k) < np.linalg.norm(kn - k)
+
+
+@pytest.mark.parametrize("variant", ["mean", "minmax"])
+@pytest.mark.parametrize("alpha", [1.0, 0.9, 0.6])
+def test_baos_variants_finite_and_improve(variant, alpha):
+    k = _kv_with_outliers(seed=2)
+    st = baos.BaosState(variant, alpha)
+    st.calibrate(k, k)
+    kq, _ = st.apply(k, k, "mxint4")
+    assert np.isfinite(kq).all()
+    kn = mx.quantize(k, "mxint4")
+    assert np.linalg.norm(kq - k) < np.linalg.norm(kn - k)
+
+
+def test_baos_factors_shape_and_reuse():
+    """Factors reduce over S (shape B,H,1,D) and are *reused* across
+    refinement steps — the zero-overhead warm-step calibration."""
+    k = _kv_with_outliers(shape=(1, 2, 4, 8, 32))
+    st = baos.BaosState("mean", 1.0)
+    st.calibrate(k, k)
+    assert st.c_k.shape == (1, 2, 4, 1, 32)
+    c0, f0 = st.c_k.copy(), st.f_k.copy()
+    # refinement-step tensor with drifted stats; apply() must not recalibrate
+    st.apply(k * 1.5, k * 1.5, "mxint4")
+    np.testing.assert_array_equal(st.c_k, c0)
+    np.testing.assert_array_equal(st.f_k, f0)
+
+
+def test_baos_alpha_compresses_dynamic_range():
+    """Eq. 9: alpha < 1 damps outlier-dominated channels' factors."""
+    k = _kv_with_outliers(seed=3)
+    s1 = baos.BaosState("mean", 1.0); s1.calibrate(k, k)
+    s6 = baos.BaosState("mean", 0.6); s6.calibrate(k, k)
+    r1 = s1.f_k.max() / s1.f_k.min()
+    r6 = s6.f_k.max() / s6.f_k.min()
+    assert r6 < r1
+
+
+def test_baos_centering_exactness_fp32():
+    """Without quantization the smooth→unsmooth round trip is lossless."""
+    k = _kv_with_outliers(seed=4)
+    st = baos.BaosState("minmax", 0.9)
+    st.calibrate(k, k)
+    kq, vq = st.apply(k, k, "fp32")
+    np.testing.assert_allclose(kq, k, rtol=1e-5, atol=1e-5)
+
+
+def test_outlier_stability_metric():
+    k_warm = _kv_with_outliers(seed=5)
+    steps = [k_warm + np.random.default_rng(i).normal(
+        size=k_warm.shape).astype(np.float32) * 0.1 for i in range(4)]
+    frac = baos.outlier_channel_stability(k_warm, steps, top=8)
+    assert frac > 0.7  # the paper's §4.4.1 observation on stable outliers
+
+
+# ---------------------------------------------------------------------------
+# Rotation (QuaRot baseline)
+# ---------------------------------------------------------------------------
+
+def test_hadamard_orthonormal():
+    for n in (2, 8, 32):
+        h = rotation.hadamard(n)
+        np.testing.assert_allclose(h @ h.T, np.eye(n), atol=1e-6)
+
+
+def test_hadamard_requires_pow2():
+    with pytest.raises(ValueError):
+        rotation.hadamard(24)
+
+
+def test_rotation_lossless_without_quant():
+    x = np.random.default_rng(6).normal(size=(2, 3, 4, 8, 32)).astype(np.float32)
+    got = rotation.rotate_quant(x, "fp32")
+    np.testing.assert_allclose(got, x, rtol=1e-5, atol=1e-5)
+
+
+def test_rotation_spreads_outliers():
+    """After rotation, per-channel max magnitudes flatten."""
+    x = _kv_with_outliers(seed=7)
+    h = rotation.hadamard(32)
+    xr = x @ h
+    spread = lambda a: np.abs(a).max(axis=tuple(range(a.ndim - 1)))
+    assert spread(xr).std() < spread(x).std()

@@ -1,0 +1,146 @@
+"""L1 sampling-engine Pallas kernels vs ref oracles (paper Alg. 2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import sampling as S
+from compile.kernels import ref as R
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: Stable-Max confidence + argmax
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,v,chunk", [
+    (4, 64, 64), (4, 64, 16), (8, 256, 128), (2, 512, 64),
+])
+def test_confidence_matches_ref(n, v, chunk):
+    z = jax.random.normal(jax.random.PRNGKey(0), (n, v)) * 4
+    c1, i1 = S.confidence_argmax(z, v_chunk=chunk)
+    c2, i2 = R.stable_max_confidence_ref(z)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_confidence_chunk_invariance():
+    """V_chunk is a pure tiling knob — results must be identical."""
+    z = jax.random.normal(jax.random.PRNGKey(1), (4, 256)) * 3
+    base = S.confidence_argmax(z, v_chunk=256)
+    for chunk in (16, 32, 64, 128):
+        got = S.confidence_argmax(z, v_chunk=chunk)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(base[0]),
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(base[1]))
+
+
+def test_confidence_is_softmax_max():
+    """Eq. 3: conf == softmax(z)[argmax]."""
+    z = jax.random.normal(jax.random.PRNGKey(2), (6, 128)) * 5
+    conf, idx = S.confidence_argmax(z, v_chunk=32)
+    probs = jax.nn.softmax(z, axis=-1)
+    expect = probs[jnp.arange(6), idx]
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(expect), rtol=1e-5)
+
+
+def test_confidence_tie_keeps_earlier_index():
+    z = jnp.zeros((1, 64)).at[0, 10].set(2.0).at[0, 40].set(2.0)
+    _, idx = S.confidence_argmax(z, v_chunk=16)
+    assert int(idx[0]) == 10
+
+
+def test_confidence_large_logits_stable():
+    """Stable-Max must not overflow on large logits (the reason the
+    m-subtraction exists)."""
+    z = jnp.full((2, 64), 300.0).at[0, 3].set(400.0)
+    conf, idx = S.confidence_argmax(z, v_chunk=16)
+    assert np.isfinite(np.asarray(conf)).all()
+    assert int(idx[0]) == 3
+
+
+# ---------------------------------------------------------------------------
+# Phase 3: streaming top-k
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    l=st.sampled_from([8, 16, 32]),
+    k=st.integers(0, 32),
+    seed=st.integers(0, 2 ** 16),
+    mask_p=st.floats(0.0, 1.0),
+)
+def test_topk_property(l, k, seed, mask_p):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    conf = jax.random.uniform(keys[0], (1, l))
+    mask = (jax.random.uniform(keys[1], (1, l)) < mask_p).astype(jnp.int32)
+    kk = jnp.array([min(k, l)], dtype=jnp.int32)
+    got = np.asarray(S.topk_mask(conf, mask, kk))[0] != 0
+    ref = np.asarray(R.topk_mask_ref(conf[0], mask[0] != 0, min(k, l)))
+    np.testing.assert_array_equal(got, ref)
+    # invariants: count == min(k, #eligible); selected ⊆ eligible
+    assert got.sum() == min(min(k, l), int(mask.sum()))
+    assert not np.any(got & ~(np.asarray(mask)[0] != 0))
+
+
+def test_topk_selects_highest():
+    conf = jnp.asarray([[0.1, 0.9, 0.3, 0.8, 0.2, 0.7, 0.0, 0.5]])
+    mask = jnp.ones((1, 8), jnp.int32)
+    got = np.asarray(S.topk_mask(conf, mask, jnp.asarray([3], jnp.int32)))[0]
+    np.testing.assert_array_equal(got, [0, 1, 0, 1, 0, 1, 0, 0])
+
+
+def test_topk_respects_mask():
+    conf = jnp.asarray([[0.9, 0.8, 0.7, 0.6]])
+    mask = jnp.asarray([[0, 1, 0, 1]], jnp.int32)  # best two are ineligible
+    got = np.asarray(S.topk_mask(conf, mask, jnp.asarray([2], jnp.int32)))[0]
+    np.testing.assert_array_equal(got, [0, 1, 0, 1])
+
+
+def test_topk_k_zero():
+    conf = jnp.ones((1, 8))
+    mask = jnp.ones((1, 8), jnp.int32)
+    got = np.asarray(S.topk_mask(conf, mask, jnp.asarray([0], jnp.int32)))[0]
+    assert got.sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# Phase 4: masked select + full sample_block flow
+# ---------------------------------------------------------------------------
+
+def test_masked_select():
+    m = jnp.asarray([[1, 0, 1, 0]], jnp.int32)
+    a = jnp.asarray([[10, 11, 12, 13]], jnp.int32)
+    b = jnp.asarray([[20, 21, 22, 23]], jnp.int32)
+    got = np.asarray(S.masked_select(m, a, b))[0]
+    np.testing.assert_array_equal(got, [10, 21, 12, 23])
+
+
+def test_sample_block_commits_exactly_k():
+    b, l, v, mask_id = 2, 16, 64, 0
+    z = jax.random.normal(jax.random.PRNGKey(3), (b, l, v)) * 3
+    x = jnp.full((b, l), mask_id, jnp.int32).at[:, :4].set(7)
+    k = jnp.asarray([3, 5], jnp.int32)
+    x_new, conf, x0 = S.sample_block(z, x, k, mask_id)
+    before = np.asarray(x) == mask_id
+    after = np.asarray(x_new) == mask_id
+    committed = before & ~after
+    np.testing.assert_array_equal(committed.sum(axis=1), np.asarray(k))
+    # unmasked positions never change
+    np.testing.assert_array_equal(np.asarray(x_new)[~before],
+                                  np.asarray(x)[~before])
+    # committed tokens are the argmax predictions
+    idx = np.asarray(x0)
+    np.testing.assert_array_equal(np.asarray(x_new)[committed], idx[committed])
+
+
+def test_sample_block_progressive_unmask():
+    """Iterating sample_block fully unmasks in ceil(L/k) steps."""
+    b, l, v, mask_id = 1, 8, 32, 0
+    x = jnp.full((b, l), mask_id, jnp.int32)
+    for step in range(4):
+        z = jax.random.normal(jax.random.PRNGKey(step), (b, l, v))
+        x, _, _ = S.sample_block(z, x, jnp.asarray([2], jnp.int32), mask_id)
+        assert int((np.asarray(x) == mask_id).sum()) == l - 2 * (step + 1)
+    assert not (np.asarray(x) == mask_id).any()

@@ -1,0 +1,118 @@
+"""Trainer + Table 5 harness machinery (quick smokes; the full Table 5 run
+is `make table5`, recorded in EXPERIMENTS.md)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import ModelConfig, GenConfig, TINY, TINY_GEN
+from compile import model as M
+from compile import train as T
+from compile.quantlib import harness as H
+
+
+SMALL = ModelConfig(vocab_size=64, d_model=64, n_layers=1, n_heads=2,
+                    n_kv_heads=2, d_head=32, d_ff=64)
+SMALL_GEN = GenConfig(prompt_len=8, block_len=8, n_blocks=2,
+                      steps_per_block=2)
+
+
+def test_make_batch_deterministic_continuations():
+    rng = np.random.default_rng(0)
+    seqs = np.asarray(T.make_batch(TINY, TINY_GEN, rng, 8))
+    assert seqs.shape == (8, TINY_GEN.total_len)
+    assert seqs.min() >= T.TOKEN_BASE
+    assert seqs.max() < T.TOKEN_BASE + T.TASK_RANGE
+
+
+def test_make_batch_tasks_distinct():
+    rng = np.random.default_rng(1)
+    a = np.asarray(T.make_batch(TINY, TINY_GEN, rng, 4, task="copy"))
+    # copy: continuation repeats the prompt cyclically
+    p = TINY_GEN.prompt_len
+    np.testing.assert_array_equal(a[:, p:2 * p], a[:, :p])
+
+
+def test_diffusion_loss_finite_and_positive():
+    p = M.init_params(SMALL, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    seqs = T.make_batch(SMALL, SMALL_GEN, rng, 4)
+    loss = T.diffusion_loss(SMALL, SMALL_GEN, p, seqs, jax.random.PRNGKey(1))
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+
+def test_short_training_reduces_loss():
+    params, hist = T.train(SMALL, SMALL_GEN, steps=40, batch=16, lr=3e-3,
+                           log_every=0, log=lambda *a: None)
+    assert np.mean(hist[-8:]) < np.mean(hist[:8])
+
+
+def test_adam_step_changes_params():
+    p = {"w": jnp.ones((4, 4))}
+    g = {"w": jnp.full((4, 4), 0.5)}
+    st = T.adam_init(p)
+    p2, st2 = T.adam_update(p, g, st, lr=1e-2)
+    assert not np.allclose(np.asarray(p2["w"]), 1.0)
+    assert int(st2["t"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Harness machinery
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_trained():
+    params, _ = T.train(SMALL, SMALL_GEN, steps=60, batch=16, lr=3e-3,
+                        log_every=0, log=lambda *a: None)
+    return params
+
+
+def test_capture_calib_matches_forward(small_trained):
+    """The calibration capture must reproduce forward_full's logits."""
+    M.set_attention_impl("ref")
+    try:
+        tok = jnp.arange(2 * SMALL_GEN.total_len, dtype=jnp.int32) \
+            .reshape(2, -1) % SMALL.vocab_size
+        caps, logits_cap = H.capture_calib(SMALL, small_trained, tok)
+        logits, _, _ = M.forward_full(SMALL, small_trained, tok)
+        np.testing.assert_allclose(logits_cap, np.asarray(logits),
+                                   rtol=2e-4, atol=2e-4)
+        assert set(caps) == set(H.WEIGHT_NAMES)
+        assert caps["wq"][0].shape == (2 * SMALL_GEN.total_len, SMALL.d_model)
+    finally:
+        M.set_attention_impl("pallas")
+
+
+def test_quantize_weights_modes(small_trained):
+    tok = jnp.arange(2 * SMALL_GEN.total_len, dtype=jnp.int32) \
+        .reshape(2, -1) % SMALL.vocab_size
+    caps, _ = H.capture_calib(SMALL, small_trained, tok)
+    for mode in ("rtn", "gptq", "gptq_xclip"):
+        q = H.quantize_weights(SMALL, small_trained, caps, mode=mode)
+        # weights changed but finite; norms within 25%
+        for n in H.WEIGHT_NAMES:
+            a, b = np.asarray(small_trained[n]), np.asarray(q[n])
+            assert np.isfinite(b).all()
+            assert 0.75 < np.linalg.norm(b) / np.linalg.norm(a) < 1.25
+
+
+def test_kv_transforms_run_in_generate(small_trained):
+    prompt = jnp.full((1, SMALL_GEN.prompt_len), 9, jnp.int32)
+    for tr in (H.kv_naive(), H.kv_quarot(), H.kv_baos("mean", 0.9)):
+        out = H.evaluate(SMALL, SMALL_GEN, small_trained,
+                         jnp.tile(prompt, (1, SMALL_GEN.total_len //
+                                           SMALL_GEN.prompt_len)),
+                         cache_mode="dual", kv_transform=tr)
+        assert 0.0 <= out["token_acc"] <= 1.0
+
+
+def test_sampling_precisions_preserve_argmax_mostly(small_trained):
+    """BF16/MXFP8 logit quantization rarely flips the argmax (the paper's
+    'low precision preserves generation quality' premise)."""
+    z = np.random.default_rng(3).normal(size=(64, 64)).astype(np.float32) * 4
+    base = z.argmax(axis=-1)
+    for name, fn in (("bf16", H.logits_bf16), ("mxfp8", H.logits_mxfp8)):
+        zq = np.asarray(fn(jnp.asarray(z)))
+        agree = float(np.mean(zq.argmax(axis=-1) == base))
+        assert agree > 0.9, (name, agree)

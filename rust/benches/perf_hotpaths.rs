@@ -1,0 +1,111 @@
+//! L3 hot-path microbenchmarks — the §Perf harness (EXPERIMENTS.md).
+//!
+//! Covers the paths that sit on the request loop or inside the DSE inner
+//! loop: the golden sampling engine (logit scan + top-k), MX
+//! quantize/dequantize on the KV path, BAOS smoothing, the HBM model's
+//! transaction throughput, the cycle simulator's instruction throughput,
+//! and the analytical simulator (the Fig. 9 inner loop).
+
+use dart::compiler::{sampling_program, SamplingLayout};
+use dart::config::{CacheMode, HbmSpec, HwConfig, ModelArch, Workload};
+use dart::hbm::{Fidelity, HbmModel};
+use dart::quant::{fake_quant, BaosFactors, BaosVariant, MxFormat, MxTensor};
+use dart::sampling::{self, SamplePrecision};
+use dart::sim::analytical::{AnalyticalSim, PrecisionConfig};
+use dart::sim::cycle::CycleSim;
+use dart::stats::Bencher;
+use dart::util::SplitMix64;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = SplitMix64::new(1);
+
+    // ---- sampling engine: Stable-Max scan over a [64, 32k] logit grid
+    let (n, v) = (64usize, 32_768usize);
+    let z = rng.normal_vec(n * v, 3.0);
+    let bytes = (n * v * 4) as f64;
+    let r = b.bench("sampling: confidence+argmax [64x32k]", bytes, || {
+        let out = sampling::confidence_argmax(&z, n, v, 4096,
+                                              SamplePrecision::Fp32);
+        std::hint::black_box(out);
+    });
+    println!("{}  ({:.2} GB/s logit scan)", r.report(),
+             r.throughput() / 1e9);
+
+    // ---- streaming top-k over L=64 rows
+    let conf = rng.normal_vec(64, 1.0);
+    let mask = vec![1i32; 64];
+    let r = b.bench("sampling: topk_mask L=64 k=16", 64.0, || {
+        std::hint::black_box(sampling::topk_mask(&conf, &mask, 16));
+    });
+    println!("{}", r.report());
+
+    // ---- full sample_block (the per-step serving cost)
+    let (bb, l, vv) = (4usize, 16usize, 256usize);
+    let z2 = rng.normal_vec(bb * l * vv, 3.0);
+    let x = vec![0i32; bb * l];
+    let r = b.bench("sampling: sample_block B=4 L=16 V=256",
+                    (bb * l * vv) as f64, || {
+        std::hint::black_box(sampling::sample_block(
+            &z2, &x, bb, l, vv, &[2; 4], 0, 128, SamplePrecision::Fp32));
+    });
+    println!("{}", r.report());
+
+    // ---- MX quantization on the KV path
+    let kv = rng.normal_vec(1 << 16, 1.0);
+    let r = b.bench("quant: MXINT4 quantize+dequant 64k elems",
+                    (kv.len() * 4) as f64, || {
+        std::hint::black_box(fake_quant(&kv, MxFormat::MxInt4));
+    });
+    println!("{}  ({:.2} GB/s)", r.report(), r.throughput() / 1e9);
+
+    let t = MxTensor::quantize(&kv, MxFormat::MxInt4);
+    let mut out = vec![0f32; kv.len()];
+    let r = b.bench("quant: MXINT4 dequantize only", (kv.len() * 4) as f64,
+                    || {
+        t.dequantize_into(&mut out);
+        std::hint::black_box(&out);
+    });
+    println!("{}  ({:.2} GB/s)", r.report(), r.throughput() / 1e9);
+
+    // ---- BAOS smooth+quant round trip
+    let f = BaosFactors::calibrate(&kv, 16, 128, 32, BaosVariant::Mean, 1.0);
+    let r = b.bench("quant: BAOS fake_quant 64k elems", (kv.len() * 4) as f64,
+                    || {
+        std::hint::black_box(f.fake_quant(&kv, MxFormat::MxInt4));
+    });
+    println!("{}  ({:.2} GB/s)", r.report(), r.throughput() / 1e9);
+
+    // ---- HBM model transaction throughput
+    let r = b.bench("hbm: 64 MB stream (ideal 2-stack)", 1.0, || {
+        let mut m = HbmModel::new(HbmSpec::hbm2e_2stack(), Fidelity::Ideal);
+        std::hint::black_box(m.stream_bandwidth(64 << 20, true));
+    });
+    let txns = (64u64 << 20) / 32;
+    println!("{}  ({:.2} M txns/s model throughput)", r.report(),
+             txns as f64 / r.summary.mean / 1e6);
+
+    // ---- cycle simulator instruction throughput on a sampling program
+    let layout = SamplingLayout::new(2, 16, 2048, 128, 0);
+    let prog = sampling_program(&layout, &[2, 2]);
+    let mut hw = HwConfig::dart_edge();
+    hw.v_chunk = 128;
+    let dynlen = prog.dynamic_len() as f64;
+    let z3 = rng.normal_vec(2 * 16 * 2048, 2.0);
+    let r = b.bench("cycle-sim: sampling program (B=2 L=16 V=2k)", dynlen,
+                    || {
+        let mut sim = CycleSim::new(hw.clone(), 2 * 16 * 2048 + 64);
+        sim.hbm_store_f32(0, &z3);
+        std::hint::black_box(sim.run(&prog));
+    });
+    println!("{}  ({:.2} M instr/s)", r.report(), r.throughput() / 1e6);
+
+    // ---- analytical simulator (Fig. 9 inner loop)
+    let w = Workload::paper_reference(ModelArch::llada_8b(), CacheMode::Dual);
+    let r = b.bench("analytical: full LLaDA-8B dual run", 1.0, || {
+        let sim = AnalyticalSim::new(HwConfig::dart_default(),
+                                     PrecisionConfig::dart_full_quant());
+        std::hint::black_box(sim.run(&w));
+    });
+    println!("{}  ({:.0} sweeps/s)", r.report(), 1.0 / r.summary.mean);
+}

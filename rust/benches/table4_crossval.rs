@@ -1,0 +1,80 @@
+//! Table 4 reproduction: cross-validation of the transactional
+//! (cycle-accurate) and analytical simulators on a sampling block —
+//! T=1, B=16, L=32, V=126k, R=1 (full logits preloaded per iteration),
+//! VLEN=2048 — reporting simulated time agreement and the wall-clock
+//! speedup that makes the analytical model the DSE tool.
+
+use std::time::Instant;
+
+use dart::compiler::{sampling_program, SamplingLayout};
+use dart::config::HwConfig;
+use dart::report::{self, Table};
+use dart::sim::analytical::{AnalyticalSim, PrecisionConfig};
+use dart::sim::cycle::CycleSim;
+use dart::util::SplitMix64;
+
+fn main() {
+    let (b, l, v) = (16usize, 32usize, 126_464usize);
+    let v_chunk = v; // R=1: full-row preload
+    let mut hw = HwConfig::dart_default();
+    hw.vlen = 2048;
+    hw.v_chunk = v_chunk as u32;
+    hw.vector_sram = ((2 * v_chunk + 4 * l) * 4) as u64;
+    hw.int_sram = (5 * b * l * 4).max(1 << 14) as u64;
+
+    // ---- transactional (cycle-accurate) --------------------------------
+    let layout = SamplingLayout::new(b as u32, l as u32, v as u32,
+                                     v_chunk as u32, 0);
+    let prog = sampling_program(&layout, &vec![4u32; b]);
+    let gen_t = Instant::now();
+    let mut sim = CycleSim::new(hw.clone(), b * l * v + 64);
+    let mut rng = SplitMix64::new(3);
+    // chunked fill to bound peak temp memory
+    let mut off = 0usize;
+    while off < b * l * v {
+        let n = (1 << 22).min(b * l * v - off);
+        let z = rng.normal_vec(n, 3.0);
+        sim.hbm_store_f32(off, &z);
+        off += n;
+    }
+    sim.sram.i_mut(layout.x_addr, (b * l) as u32)
+        .copy_from_slice(&vec![0i32; b * l]);
+    let setup_s = gen_t.elapsed().as_secs_f64();
+
+    let run_t = Instant::now();
+    let rep = sim.run(&prog);
+    let trans_wall = run_t.elapsed().as_secs_f64();
+    let trans_ms = rep.cycles as f64 / hw.clock_hz * 1e3;
+
+    // ---- analytical ------------------------------------------------------
+    let run_t = Instant::now();
+    let asim = AnalyticalSim::new(hw.clone(), PrecisionConfig {
+        sampling: dart::sampling::SamplePrecision::Fp32,
+        ..PrecisionConfig::dart_full_quant()
+    });
+    let phase = asim.sampling_step(b as u64, l as u64, v as u64);
+    let ana_wall = run_t.elapsed().as_secs_f64();
+    let ana_ms = phase.seconds * 1e3;
+
+    let delta = ana_ms / trans_ms - 1.0;
+    let speedup = (trans_wall + setup_s) / ana_wall.max(1e-9);
+
+    let mut t = Table::new(
+        "Table 4 — sampling-block cross-validation (T=1, B=16, L=32, V=126k, VLEN=2048)",
+        &["evaluator", "simulated time", "run time"]);
+    t.row(&["DART transactional".into(), format!("{trans_ms:.2} ms"),
+            format!("{:.2} s (+{:.2} s setup)", trans_wall, setup_s)]);
+    t.row(&["DART analytic".into(),
+            format!("{ana_ms:.2} ms ({:+.1}%)", delta * 100.0),
+            format!("{:.2} ms", ana_wall * 1e3)]);
+    t.print();
+    println!("instrs executed: {}  effective HBM BW: {} GB/s",
+             rep.instrs, report::gbs(rep.hbm_bw(hw.clock_hz)));
+    println!("analytical wall-clock speedup: x{speedup:.0} (paper: ~x120 \
+              incl. ASM I/O)");
+
+    // shape checks: agreement within ~15%, speedup >= 100x
+    assert!(delta.abs() < 0.15, "cross-validation delta {delta}");
+    assert!(speedup > 100.0, "speedup {speedup}");
+    println!("OK: simulators agree within {:.1}%", delta.abs() * 100.0);
+}

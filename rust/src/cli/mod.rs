@@ -1,0 +1,112 @@
+//! Argument-parsing substrate (clap stand-in, DESIGN.md S7).
+//!
+//! Supports `binary <subcommand> --flag value --switch positional ...`.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut out = Args::default();
+        let mut items = iter.into_iter().peekable();
+        if let Some(first) = items.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = items.next();
+            }
+        }
+        while let Some(a) = items.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value or --key value or --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if items.peek().map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = items.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().unwrap_or_else(
+            |_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).map(|v| v.parse().unwrap_or_else(
+            |_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --batch 8 --mode dual input.txt --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("batch"), Some("8"));
+        assert_eq!(a.get("mode"), Some("dual"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["input.txt"]);
+    }
+
+    #[test]
+    fn eq_style_flags() {
+        let a = parse("sweep --vlen=2048 --blen=64");
+        assert_eq!(a.get_usize("vlen", 0), 2048);
+        assert_eq!(a.get_usize("blen", 0), 64);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert!((a.get_f64("missing", 1.5) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("run --fast");
+        assert!(a.has("fast"));
+    }
+}

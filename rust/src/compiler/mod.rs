@@ -1,0 +1,306 @@
+//! The DART compiler: model graphs → ISA instruction streams
+//! (paper §3.1.3 "PyTorch-to-ISA compiler").
+//!
+//! Emits the programs the cycle-accurate simulator executes:
+//!
+//! * [`gemm_program`] / [`softmax_program`] / [`flash_attention_program`]
+//!   — the Table 3 compound validation sequences (the FlashAttention
+//!   program is the paper's 6-GEMM layer schedule at d=64, H=2);
+//! * [`sampling_program`] — the complete Algorithm 2 intra-block
+//!   sampling flow across the four phases and three SRAM domains, with
+//!   double-buffered V_chunk streaming (the hardware prefetch engines'
+//!   overlap, §3.1.3);
+//! * [`transformer_layer_program`] — one Alg. 1 layer's instruction
+//!   stream (projection GEMMs, attention schedule, FFN) used for
+//!   instruction-mix statistics and timing studies.
+//!
+//! Functional correctness of compiled programs is asserted against the
+//! golden models in `rust/tests/` (compiler → cycle-sim → same tokens
+//! as `sampling::sample_block`).
+
+use crate::config::ModelArch;
+use crate::isa::{Instr::*, Program, ProgramBuilder};
+
+/// A GEMM compound sequence: out[m,n] = act[m,k] @ wgt[k,n].
+/// act at Vector 0, wgt at Matrix 0, out at Vector `m*k` (after act).
+pub fn gemm_program(m: u32, k: u32, n: u32) -> Program {
+    let mut b = ProgramBuilder::new();
+    b.push(MGemm { dst: m * k, act: 0, wgt: 0, m, k, n, transpose: false });
+    b.finish()
+}
+
+/// A softmax compound over `len` elements at Vector 0.
+pub fn softmax_program(len: u32) -> Program {
+    let mut b = ProgramBuilder::new();
+    b.push(SSoftmax { v: 0, len });
+    b.finish()
+}
+
+/// The Table 3 FlashAttention validation sequence (d = 64, H = 2,
+/// 6 GEMMs): Q/K/V projections, QKᵀ and AV with HLEN-batched heads,
+/// O projection. Shapes follow the paper's per-op breakdown exactly.
+pub fn flash_attention_program() -> Program {
+    let mut b = ProgramBuilder::new();
+    // Q/K/V projections: (1×64)@(64×64), 16 tiles each at BLEN=4/MLEN=64
+    b.push(MGemm { dst: 64, act: 0, wgt: 0, m: 1, k: 64, n: 64, transpose: false });
+    b.push(MGemm { dst: 128, act: 0, wgt: 4096, m: 1, k: 64, n: 64, transpose: false });
+    b.push(MGemm { dst: 192, act: 0, wgt: 8192, m: 1, k: 64, n: 64, transpose: false });
+    // QKᵀ: (1×32)@(32×1), heads batched along the MLEN-wide K slice
+    b.push(MGemm { dst: 256, act: 64, wgt: 12288, m: 1, k: 32, n: 1, transpose: true });
+    // AV: (1×1)@(1×32), 8 tiles
+    b.push(MGemm { dst: 260, act: 256, wgt: 12320, m: 1, k: 1, n: 32, transpose: false });
+    // O projection
+    b.push(MGemm { dst: 292, act: 260, wgt: 12352, m: 1, k: 64, n: 64, transpose: false });
+    b.finish()
+}
+
+/// Memory layout of a compiled sampling program (element addresses).
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingLayout {
+    pub b: u32,
+    pub l: u32,
+    pub v: u32,
+    pub v_chunk: u32,
+    pub mask_id: i32,
+    /// HBM element address of the [B*L, V] logit tensor
+    pub hbm_logits: u64,
+    // Int SRAM regions
+    pub x_addr: u32,
+    pub x0_addr: u32,
+    pub m_idx_addr: u32,
+    pub transfer_addr: u32,
+    pub scratch_addr: u32,
+    // Vector SRAM regions (double-buffered chunk + conf vector)
+    pub vbuf0: u32,
+    pub vbuf1: u32,
+    pub conf_vec: u32,
+    // FP SRAM region (per-position confidences, one row at a time)
+    pub fp_conf: u32,
+}
+
+impl SamplingLayout {
+    pub fn new(b: u32, l: u32, v: u32, v_chunk: u32, mask_id: i32) -> Self {
+        let bl = b * l;
+        let v_chunk = v_chunk.min(v);
+        SamplingLayout {
+            b,
+            l,
+            v,
+            v_chunk,
+            mask_id,
+            hbm_logits: 0,
+            x_addr: 0,
+            x0_addr: bl,
+            m_idx_addr: 2 * bl,
+            transfer_addr: 3 * bl,
+            scratch_addr: 4 * bl,
+            vbuf0: 0,
+            vbuf1: v_chunk,
+            conf_vec: 2 * v_chunk,
+            fp_conf: 0,
+        }
+    }
+
+    /// Required Int SRAM elements (x, x0, m_idx, transfer, scratch).
+    pub fn int_elems(&self) -> u32 {
+        5 * self.b * self.l
+    }
+
+    /// Required Vector SRAM elements (Eq. 4 shape: chunk buffers + conf).
+    pub fn vector_elems(&self) -> u32 {
+        2 * self.v_chunk + self.l
+    }
+}
+
+// register conventions for the sampling kernel
+const F_MAX: u8 = 0;   // running max (V_RED_MAX_IDX accumulator)
+const F_DENOM: u8 = 1; // running Σ exp
+const F_NEG1: u8 = 2;  // constant −1
+const F_NEGM: u8 = 3;  // −max
+const R_IDX: u8 = 0;   // running argmax
+const R_K: u8 = 1;     // per-row transfer count
+
+/// Compile Algorithm 2: the full 4-phase intra-block sampling flow.
+///
+/// Inputs the harness must place before running:
+/// * logits in functional HBM at `layout.hbm_logits` ([B*L, V] f32);
+/// * current tokens in Int SRAM at `layout.x_addr` ([B, L] i32);
+/// * `k[b]` is baked into the instruction stream (S_MOV_I per row).
+///
+/// Output: updated tokens at `layout.x_addr`; per-position argmax at
+/// `x0_addr`; transfer mask at `transfer_addr`.
+pub fn sampling_program(layout: &SamplingLayout, k: &[u32]) -> Program {
+    assert_eq!(k.len(), layout.b as usize);
+    let (_bl, l, v, chunk) = (layout.b * layout.l, layout.l, layout.v,
+                             layout.v_chunk);
+    let n_chunks = v.div_ceil(chunk);
+    let mut p = ProgramBuilder::new();
+    p.push(SMovF { dst: F_NEG1, imm: -1.0 });
+
+    for bi in 0..layout.b {
+        // ---- Phase 1+2 per position: HBM → Vector → Scalar ------------
+        for li in 0..l {
+            let pos = bi * l + li;
+            let row = layout.hbm_logits + (pos as u64) * v as u64;
+            p.push(SMovF { dst: F_MAX, imm: f32::NEG_INFINITY });
+            p.push(SMovI { dst: R_IDX, imm: 0 });
+            // pass 1: fused max-with-index over streamed chunks
+            // (double-buffered: prefetch c+1 overlaps reduce c)
+            for c in 0..n_chunks {
+                let len = chunk.min(v - c * chunk);
+                let buf = if c % 2 == 0 { layout.vbuf0 } else { layout.vbuf1 };
+                p.push(HPrefetchV { hbm: row + (c * chunk) as u64, dst: buf, len });
+                p.push(VRedMaxIdx { dst_val: F_MAX, dst_idx: R_IDX,
+                                    src: buf, len, idx_base: c * chunk });
+            }
+            // pass 2: Σ exp(z − m) over re-streamed chunks
+            p.push(SMulF { dst: F_NEGM, a: F_MAX, b: F_NEG1 });
+            p.push(SMovF { dst: F_DENOM, imm: 0.0 });
+            for c in 0..n_chunks {
+                let len = chunk.min(v - c * chunk);
+                let buf = if c % 2 == 0 { layout.vbuf0 } else { layout.vbuf1 };
+                p.push(HPrefetchV { hbm: row + (c * chunk) as u64, dst: buf, len });
+                p.push(VAddVS { dst: buf, a: buf, s: F_NEGM, len });
+                p.push(VExpV { dst: buf, src: buf, len }); // in place
+                p.push(VRedSum { dst: F_DENOM, src: buf, len });
+            }
+            p.push(SRecip { dst: F_MAX, src: F_DENOM }); // conf = 1/Σ
+            // Phase 2: scalar write-back into the decoupled domains
+            p.push(SStFp { src: F_MAX, addr: layout.fp_conf + li });
+            p.push(SStInt { src: R_IDX, addr: layout.x0_addr + pos });
+        }
+        // ---- Phase 3: Scalar(FP) → Vector → Scalar(Int) ----------------
+        let row_i = bi * l;
+        p.push(SMapVFp { dst: layout.conf_vec, src: layout.fp_conf, len: l });
+        p.push(VEqIs { dst: layout.m_idx_addr + row_i,
+                       src: layout.x_addr + row_i,
+                       imm: layout.mask_id, len: l });
+        p.push(SMovI { dst: R_K, imm: k[bi as usize] as i32 });
+        p.push(VTopkMask { dst: layout.transfer_addr + row_i,
+                           conf: layout.conf_vec,
+                           mask: layout.m_idx_addr + row_i,
+                           k: R_K, len: l });
+        // ---- Phase 4: integer masked update ----------------------------
+        // x0_masked = where(m_idx, x0, x)
+        p.push(VSelectInt { dst: layout.scratch_addr + row_i,
+                            mask: layout.m_idx_addr + row_i,
+                            a: layout.x0_addr + row_i,
+                            b: layout.x_addr + row_i, len: l });
+        // x = where(transfer, x0_masked, x)
+        p.push(VSelectInt { dst: layout.x_addr + row_i,
+                            mask: layout.transfer_addr + row_i,
+                            a: layout.scratch_addr + row_i,
+                            b: layout.x_addr + row_i, len: l });
+    }
+    p.finish()
+}
+
+/// One Alg. 1 transformer layer's instruction stream (timing/statistics
+/// view: QKV projections, HLEN-batched attention GEMMs, FFN GEMMs,
+/// normalization and activation compound ops, KV quantize + store).
+pub fn transformer_layer_program(arch: &ModelArch, m: u32) -> Program {
+    let d = arch.d_model as u32;
+    let dh = arch.d_head as u32;
+    let hq = arch.n_heads as u32;
+    let hkv = arch.n_kv_heads as u32;
+    let ff = arch.d_ff as u32;
+    let kv_len = m; // full bidirectional span within the processed window
+    let mut p = ProgramBuilder::new();
+
+    // weight prefetch (sizes in elements; overlapped with compute)
+    p.push(HPrefetchM { hbm: 0, dst: 0, len: d * (hq + 2 * hkv) * dh });
+    // QKV projections
+    p.push(MGemm { dst: 0, act: 0, wgt: 0, m, k: d, n: hq * dh, transpose: false });
+    p.push(MGemm { dst: m * hq * dh, act: 0, wgt: d * hq * dh, m, k: d,
+                   n: hkv * dh, transpose: false });
+    p.push(MGemm { dst: m * (hq + hkv) * dh, act: 0,
+                   wgt: d * (hq + hkv) * dh, m, k: d, n: hkv * dh,
+                   transpose: false });
+    // BAOS + MX quantize newly computed KV, store to HBM (Alg. 1 l.5)
+    p.push(VQuantMx { dst: m * hq * dh, src: m * hq * dh,
+                      len: 2 * m * hkv * dh, bits: 4 });
+    p.push(HStore { src: m * hq * dh, hbm: 1 << 20, len: 2 * m * hkv * dh });
+    // bidirectional FlashAttention: per q-tile, QKᵀ + softmax + AV
+    for h in 0..hq.div_ceil(crate::config::HwConfig::dart_default().hlen) {
+        let base = h * m * kv_len;
+        p.push(MGemm { dst: base, act: 0, wgt: 0, m, k: dh, n: kv_len,
+                       transpose: true });
+        p.push(SSoftmax { v: base, len: kv_len });
+        p.push(MGemm { dst: base, act: base, wgt: 0, m, k: kv_len, n: dh,
+                       transpose: false });
+    }
+    // O projection + residual + norm
+    p.push(MGemm { dst: 0, act: 0, wgt: 0, m, k: hq * dh, n: d, transpose: false });
+    p.push(VAddVV { dst: 0, a: 0, b: 0, len: m * d });
+    p.push(SLayerNorm { v: 0, len: d });
+    // FFN (SwiGLU): gate, up, silu·mul, down
+    p.push(MGemm { dst: 0, act: 0, wgt: 0, m, k: d, n: ff, transpose: false });
+    p.push(MGemm { dst: m * ff, act: 0, wgt: d * ff, m, k: d, n: ff,
+                   transpose: false });
+    p.push(SSilu { v: 0, len: m * ff });
+    p.push(VMulVV { dst: 0, a: 0, b: m * ff, len: m * ff });
+    p.push(MGemm { dst: 0, act: 0, wgt: 0, m, k: ff, n: d, transpose: false });
+    p.push(VAddVV { dst: 0, a: 0, b: 0, len: m * d });
+    p.push(SLayerNorm { v: 0, len: d });
+    p.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelArch;
+
+    #[test]
+    fn gemm_program_shape() {
+        let p = gemm_program(1, 64, 64);
+        assert_eq!(p.instrs.len(), 2); // gemm + halt
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn flash_attention_has_six_gemms() {
+        let p = flash_attention_program();
+        let gemms = p.instrs.iter()
+            .filter(|i| i.mnemonic() == "M_GEMM").count();
+        assert_eq!(gemms, 6);
+    }
+
+    #[test]
+    fn sampling_program_structure() {
+        let layout = SamplingLayout::new(2, 8, 256, 64, 0);
+        let p = sampling_program(&layout, &[2, 3]);
+        assert!(p.validate().is_ok());
+        let h = p.histogram();
+        let count = |m: &str| h.iter().find(|(n, _)| *n == m)
+            .map(|(_, c)| *c).unwrap_or(0);
+        // 2 passes x 4 chunks x 16 positions prefetches
+        assert_eq!(count("H_PREFETCH_V"), 2 * 4 * 16);
+        assert_eq!(count("V_RED_MAX_IDX"), 4 * 16);
+        assert_eq!(count("V_TOPK_MASK"), 2);
+        assert_eq!(count("V_SELECT_INT"), 4);
+        assert_eq!(count("S_ST_FP"), 16);
+        assert_eq!(count("S_ST_INT"), 16);
+    }
+
+    #[test]
+    fn sampling_layout_domains_disjoint() {
+        let lo = SamplingLayout::new(4, 16, 1024, 128, 0);
+        assert!(lo.x0_addr >= lo.x_addr + lo.b * lo.l);
+        assert!(lo.m_idx_addr >= lo.x0_addr + lo.b * lo.l);
+        assert!(lo.transfer_addr >= lo.m_idx_addr + lo.b * lo.l);
+        assert!(lo.scratch_addr >= lo.transfer_addr + lo.b * lo.l);
+        assert!(lo.vbuf1 >= lo.vbuf0 + lo.v_chunk);
+        assert!(lo.conf_vec >= lo.vbuf1 + lo.v_chunk);
+    }
+
+    #[test]
+    fn transformer_layer_instruction_mix() {
+        let p = transformer_layer_program(&ModelArch::tiny(), 16);
+        assert!(p.validate().is_ok());
+        let h = p.histogram();
+        let gemms = h.iter().find(|(n, _)| *n == "M_GEMM").unwrap().1;
+        assert!(gemms >= 7); // 3 proj + attention pairs + o + 3 ffn
+        assert!(h.iter().any(|(n, _)| *n == "V_QUANT_MX"));
+        assert!(h.iter().any(|(n, _)| *n == "H_STORE"));
+    }
+}

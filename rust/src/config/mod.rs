@@ -1,0 +1,403 @@
+//! Hardware + workload configuration (paper §4.1 design space).
+//!
+//! Covers the paper's DSE knobs: systolic tile `BLEN`, matrix-unit width
+//! `MLEN`, vector lanes `VLEN`, attention-head batching `HLEN`, the three
+//! sampling SRAM domains, HBM stack count, and clock. Workloads carry the
+//! model architecture and blocked-diffusion geometry.
+//!
+//! A hand-rolled TOML-subset parser (`parse_config`) loads overrides from
+//! disk (no serde offline — DESIGN.md S7).
+
+mod parser;
+pub use parser::{apply_hw_overrides, parse_config, ConfigDoc, ParseError};
+
+/// KV-cache strategy for blocked diffusion (paper §2.2, Fig. 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CacheMode {
+    /// Block Diffusion: recompute all KV every step (no cache).
+    None,
+    /// Fast-dLLM prefix-cache: cache prefix, recompute active+suffix.
+    Prefix,
+    /// Fast-dLLM dual-cache: full cache, in-place active refresh,
+    /// frozen (stale) suffix.
+    Dual,
+}
+
+impl CacheMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Some(CacheMode::None),
+            "prefix" => Some(CacheMode::Prefix),
+            "dual" => Some(CacheMode::Dual),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CacheMode::None => "none",
+            CacheMode::Prefix => "prefix",
+            CacheMode::Dual => "dual",
+        }
+    }
+
+    pub const ALL: [CacheMode; 3] =
+        [CacheMode::None, CacheMode::Prefix, CacheMode::Dual];
+}
+
+/// HBM generation spec (per-stack numbers; paper §5.1 uses HBM2e).
+#[derive(Clone, Copy, Debug)]
+pub struct HbmSpec {
+    pub stacks: u32,
+    /// pseudo-channels per stack (HBM2e: 32)
+    pub pch_per_stack: u32,
+    /// peak bytes/s per pseudo-channel (HBM2e @3.2Gbps x 64bit = 25.6e9/2)
+    pub pch_bytes_per_sec: f64,
+}
+
+impl HbmSpec {
+    /// AMD Alveo V80 config: 2 stacks, 64 pch, datasheet 819 GB/s.
+    pub fn hbm2e_2stack() -> Self {
+        HbmSpec { stacks: 2, pch_per_stack: 32, pch_bytes_per_sec: 12.8e9 }
+    }
+
+    /// Target NPU config: 4 stacks, 128 pch (Table 2 projection).
+    pub fn hbm2e_4stack() -> Self {
+        HbmSpec { stacks: 4, pch_per_stack: 32, pch_bytes_per_sec: 12.8e9 }
+    }
+
+    pub fn total_pch(&self) -> u32 {
+        self.stacks * self.pch_per_stack
+    }
+
+    /// Datasheet peak bandwidth, bytes/s.
+    pub fn peak_bw(&self) -> f64 {
+        self.total_pch() as f64 * self.pch_bytes_per_sec
+    }
+}
+
+/// DART hardware configuration (paper Fig. 5/6 parameters).
+#[derive(Clone, Debug)]
+pub struct HwConfig {
+    /// systolic sub-array edge (BLEN x BLEN PEs per sub-array)
+    pub blen: u32,
+    /// matrix-unit K-slice width (MLEN/BLEN sub-arrays tiled along K)
+    pub mlen: u32,
+    /// vector lanes in the Vector-Scalar Engine
+    pub vlen: u32,
+    /// attention heads batched per call (HLEN = MLEN / head_dim)
+    pub hlen: u32,
+    /// Matrix Unit grid replication: the paper's "full Matrix Unit
+    /// replicates this structure as a grid" (Fig. 6) — number of
+    /// (MLEN/BLEN)xBLENxBLEN macro-structures tiled over rows/columns
+    pub grid: u32,
+    /// clock frequency, Hz (7nm ASAP7 reference: 1 GHz)
+    pub clock_hz: f64,
+    /// Vector SRAM capacity, bytes
+    pub vector_sram: u64,
+    /// Matrix SRAM capacity, bytes (weights + KV tiles)
+    pub matrix_sram: u64,
+    /// FP SRAM capacity, bytes
+    pub fp_sram: u64,
+    /// Int SRAM capacity, bytes
+    pub int_sram: u64,
+    pub hbm: HbmSpec,
+    /// sampling chunk size V_chunk (elements); 0 = full-V preload
+    pub v_chunk: u32,
+}
+
+impl HwConfig {
+    /// The paper's Table 6 operating point: BLEN=64, VLEN=2048, MLEN=512.
+    pub fn dart_default() -> Self {
+        HwConfig {
+            grid: 8,
+            blen: 64,
+            mlen: 512,
+            vlen: 2048,
+            hlen: 4,
+            clock_hz: 1.0e9,
+            vector_sram: 8 << 20,
+            matrix_sram: 16 << 20,
+            fp_sram: 64 << 10,
+            int_sram: 256 << 10,
+            hbm: HbmSpec::hbm2e_4stack(),
+            v_chunk: 4096,
+        }
+    }
+
+    /// Edge-oriented config (small SRAM, chunked sampling).
+    pub fn dart_edge() -> Self {
+        HwConfig {
+            grid: 2,
+            blen: 16,
+            mlen: 256,
+            vlen: 256,
+            hlen: 2,
+            clock_hz: 1.0e9,
+            vector_sram: 512 << 10,
+            matrix_sram: 2 << 20,
+            fp_sram: 16 << 10,
+            int_sram: 64 << 10,
+            hbm: HbmSpec::hbm2e_2stack(),
+            v_chunk: 128,
+        }
+    }
+
+    /// Tiny config matching the Table 3 validation point (VLEN=8, BLEN=4).
+    pub fn validation_point() -> Self {
+        HwConfig {
+            grid: 1,
+            blen: 4,
+            mlen: 64,
+            vlen: 8,
+            hlen: 1,
+            clock_hz: 1.0e9,
+            vector_sram: 64 << 10,
+            matrix_sram: 256 << 10,
+            fp_sram: 4 << 10,
+            int_sram: 16 << 10,
+            hbm: HbmSpec::hbm2e_2stack(),
+            v_chunk: 128,
+        }
+    }
+
+    /// Total PEs in the Matrix Unit.
+    pub fn total_pes(&self) -> u64 {
+        self.grid as u64 * self.structure_pes()
+    }
+
+    /// PEs in one macro-structure: MLEN/BLEN sub-arrays of BLEN x BLEN
+    /// along K (the paper's area/power calibration unit: 4096 PEs at
+    /// BLEN=64 corresponds to one BLENxBLEN sub-array group).
+    pub fn structure_pes(&self) -> u64 {
+        (self.mlen as u64 / self.blen as u64).max(1)
+            * self.blen as u64
+            * self.blen as u64
+    }
+
+    /// Peak MACs/cycle of the matrix unit.
+    pub fn peak_macs_per_cycle(&self) -> u64 {
+        self.total_pes()
+    }
+
+    pub fn with_dims(mut self, blen: u32, mlen: u32, vlen: u32) -> Self {
+        self.blen = blen;
+        self.mlen = mlen;
+        self.vlen = vlen;
+        self
+    }
+}
+
+/// Model architecture (the analytical/cycle simulators' workload view).
+#[derive(Clone, Debug)]
+pub struct ModelArch {
+    pub name: String,
+    pub vocab: u64,
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub n_kv_heads: u64,
+    pub d_head: u64,
+    pub d_ff: u64,
+    /// total experts (1 = dense)
+    pub n_experts: u64,
+    /// activated experts per token
+    pub active_experts: u64,
+}
+
+impl ModelArch {
+    /// LLaDA-8B-Instruct (paper's dense workload).
+    pub fn llada_8b() -> Self {
+        ModelArch {
+            name: "LLaDA-8B".into(),
+            vocab: 126_464,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_head: 128,
+            d_ff: 12288,
+            n_experts: 1,
+            active_experts: 1,
+        }
+    }
+
+    /// LLaDA-MoE-7B-A1B (paper's MoE workload: 7B total, ~1B active).
+    pub fn llada_moe_7b() -> Self {
+        ModelArch {
+            name: "LLaDA-MoE-7B-A1B".into(),
+            vocab: 157_184,
+            d_model: 2048,
+            n_layers: 16,
+            n_heads: 16,
+            n_kv_heads: 16,
+            d_head: 128,
+            d_ff: 1024,
+            n_experts: 64,
+            active_experts: 8,
+        }
+    }
+
+    /// The tiny artifact model (python/compile/configs.py TINY).
+    pub fn tiny() -> Self {
+        ModelArch {
+            name: "tiny".into(),
+            vocab: 256,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_head: 32,
+            d_ff: 256,
+            n_experts: 1,
+            active_experts: 1,
+        }
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 1
+    }
+
+    /// Parameter count (embedding tied).
+    pub fn n_params(&self) -> u64 {
+        let attn = self.d_model * self.n_heads * self.d_head
+            + 2 * self.d_model * self.n_kv_heads * self.d_head
+            + self.n_heads * self.d_head * self.d_model;
+        let ffn = 3 * self.d_model * self.d_ff * self.n_experts;
+        let gate = if self.is_moe() { self.d_model * self.n_experts } else { 0 };
+        self.vocab * self.d_model + self.n_layers * (attn + ffn + gate)
+    }
+
+    /// FLOPs of one forward pass over `m` tokens (2*MACs), counting only
+    /// activated experts for MoE.
+    pub fn fwd_flops(&self, m: u64, kv_len: u64) -> u64 {
+        let qkvo = 2 * m
+            * (self.d_model * self.n_heads * self.d_head
+                + 2 * self.d_model * self.n_kv_heads * self.d_head
+                + self.n_heads * self.d_head * self.d_model);
+        let attn = 2 * m * kv_len * self.n_heads * self.d_head * 2;
+        let ffn = 2 * m * 3 * self.d_model * self.d_ff * self.active_experts;
+        let head = 2 * m * self.d_model * self.vocab;
+        self.n_layers * (qkvo + attn + ffn) + head
+    }
+
+    /// Weight bytes touched by one forward pass at `bits_w` weight
+    /// precision (MoE: only activated experts are streamed).
+    pub fn weight_bytes(&self, bits_w: u32) -> u64 {
+        let attn = self.d_model * self.n_heads * self.d_head
+            + 2 * self.d_model * self.n_kv_heads * self.d_head
+            + self.n_heads * self.d_head * self.d_model;
+        let ffn = 3 * self.d_model * self.d_ff * self.active_experts;
+        let body = self.n_layers * (attn + ffn);
+        let embed = self.vocab * self.d_model;
+        (body + embed) * bits_w as u64 / 8
+    }
+
+    /// KV bytes for `s` cached positions at `bits_kv` precision.
+    pub fn kv_bytes(&self, batch: u64, s: u64, bits_kv: u32) -> u64 {
+        2 * self.n_layers * batch * self.n_kv_heads * s * self.d_head
+            * bits_kv as u64 / 8
+    }
+}
+
+/// Blocked-diffusion workload geometry (paper §6.2 reference:
+/// steps=16, block_length=64, gen_len=256, B=16).
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub model: ModelArch,
+    pub batch: u64,
+    pub prompt_len: u64,
+    pub gen_len: u64,
+    pub block_len: u64,
+    pub steps_per_block: u64,
+    pub cache: CacheMode,
+}
+
+impl Workload {
+    pub fn paper_reference(model: ModelArch, cache: CacheMode) -> Self {
+        Workload {
+            model,
+            batch: 16,
+            prompt_len: 128,
+            gen_len: 256,
+            block_len: 64,
+            steps_per_block: 16,
+            cache,
+        }
+    }
+
+    pub fn n_blocks(&self) -> u64 {
+        crate::util::ceil_div(self.gen_len, self.block_len)
+    }
+
+    pub fn total_len(&self) -> u64 {
+        self.prompt_len + self.gen_len
+    }
+
+    /// Generated tokens per request batch.
+    pub fn tokens_out(&self) -> u64 {
+        self.batch * self.gen_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pe_count_calibration() {
+        // paper: area calibrated at 4096 PEs; BLEN=64 MLEN=... gives
+        // (512/64)*64*64 = 32768? No: one sub-array grid is sized so that
+        // dart_default has 8*64*64; check total_pes formula consistency.
+        let hw = HwConfig::dart_default();
+        assert_eq!(hw.structure_pes(), (512 / 64) * 64 * 64);
+        assert_eq!(hw.total_pes(), 8 * (512 / 64) * 64 * 64);
+        let v = HwConfig::validation_point();
+        assert_eq!(v.total_pes(), (64 / 4) * 4 * 4);
+    }
+
+    #[test]
+    fn hbm_peaks() {
+        let h2 = HbmSpec::hbm2e_2stack();
+        assert_eq!(h2.total_pch(), 64);
+        assert!((h2.peak_bw() - 819.2e9).abs() < 1e9);
+        let h4 = HbmSpec::hbm2e_4stack();
+        assert!((h4.peak_bw() - 1638.4e9).abs() < 1e9);
+    }
+
+    #[test]
+    fn llada_param_counts() {
+        let d = ModelArch::llada_8b();
+        let p = d.n_params() as f64;
+        assert!(p > 7.0e9 && p < 10.0e9, "LLaDA-8B params {p}");
+        let m = ModelArch::llada_moe_7b();
+        let pm = m.n_params() as f64;
+        assert!(pm > 5.0e9 && pm < 9.0e9, "MoE params {pm}");
+        // active fraction of the MoE FFN must be n_active/n_experts
+        assert_eq!(m.active_experts, 8);
+    }
+
+    #[test]
+    fn flops_scale_with_m() {
+        let d = ModelArch::tiny();
+        let f1 = d.fwd_flops(16, 80);
+        let f2 = d.fwd_flops(32, 80);
+        assert!(f2 > f1 && f2 < 2 * f1 + d.vocab * d.d_model * 200);
+    }
+
+    #[test]
+    fn workload_geometry() {
+        let w = Workload::paper_reference(ModelArch::llada_8b(),
+                                          CacheMode::Dual);
+        assert_eq!(w.n_blocks(), 4);
+        assert_eq!(w.total_len(), 384);
+        assert_eq!(w.tokens_out(), 16 * 256);
+    }
+
+    #[test]
+    fn cache_mode_parse() {
+        assert_eq!(CacheMode::parse("Dual"), Some(CacheMode::Dual));
+        assert_eq!(CacheMode::parse("prefix"), Some(CacheMode::Prefix));
+        assert_eq!(CacheMode::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,216 @@
+//! TOML-subset config parser (serde/toml stand-in, DESIGN.md S7).
+//!
+//! Supports: `[section]` headers, `key = value` with integer, float,
+//! boolean and quoted-string values, `#` comments. Enough for hardware /
+//! workload override files shipped with the examples.
+
+use std::collections::HashMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(v) if *v >= 0 => Some(*v as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(v) => Some(*v as f64),
+            Value::Float(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parsed document: section -> key -> value. Keys before any `[section]`
+/// land in the `""` section.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigDoc {
+    pub sections: HashMap<String, HashMap<String, Value>>,
+}
+
+impl ConfigDoc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Option<u64> {
+        self.get(section, key).and_then(Value::as_u64)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key).and_then(Value::as_f64)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key).and_then(Value::as_str)
+    }
+}
+
+fn parse_value(raw: &str, line: usize) -> Result<Value, ParseError> {
+    let t = raw.trim();
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(stripped) = t.strip_prefix('"') {
+        if let Some(inner) = stripped.strip_suffix('"') {
+            return Ok(Value::Str(inner.to_string()));
+        }
+        return Err(ParseError { line, message: format!("unterminated string {t:?}") });
+    }
+    // allow 1_000_000 separators
+    let cleaned: String = t.chars().filter(|c| *c != '_').collect();
+    if let Ok(v) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(ParseError { line, message: format!("cannot parse value {t:?}") })
+}
+
+/// Parse a TOML-subset document.
+pub fn parse_config(text: &str) -> Result<ConfigDoc, ParseError> {
+    let mut doc = ConfigDoc::default();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = match raw.find('#') {
+            // naive comment strip is fine: our strings never contain '#'
+            Some(pos) if !raw[..pos].contains('"') || raw[..pos].matches('"').count() % 2 == 0 => &raw[..pos],
+            _ => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name.strip_suffix(']').ok_or(ParseError {
+                line: line_no,
+                message: "missing closing ]".into(),
+            })?;
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or(ParseError {
+            line: line_no,
+            message: format!("expected key = value, got {line:?}"),
+        })?;
+        let value = parse_value(v, line_no)?;
+        doc.sections
+            .entry(section.clone())
+            .or_default()
+            .insert(k.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Apply `[hw]` overrides from a config doc onto an `HwConfig`.
+pub fn apply_hw_overrides(doc: &ConfigDoc, hw: &mut super::HwConfig) {
+    if let Some(v) = doc.get_u64("hw", "blen") { hw.blen = v as u32; }
+    if let Some(v) = doc.get_u64("hw", "mlen") { hw.mlen = v as u32; }
+    if let Some(v) = doc.get_u64("hw", "vlen") { hw.vlen = v as u32; }
+    if let Some(v) = doc.get_u64("hw", "hlen") { hw.hlen = v as u32; }
+    if let Some(v) = doc.get_f64("hw", "clock_ghz") { hw.clock_hz = v * 1e9; }
+    if let Some(v) = doc.get_u64("hw", "vector_sram") { hw.vector_sram = v; }
+    if let Some(v) = doc.get_u64("hw", "matrix_sram") { hw.matrix_sram = v; }
+    if let Some(v) = doc.get_u64("hw", "v_chunk") { hw.v_chunk = v as u32; }
+    if let Some(v) = doc.get_u64("hw", "hbm_stacks") {
+        hw.hbm.stacks = v as u32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# top comment
+title = "dart"
+
+[hw]
+blen = 64           # systolic tile
+vlen = 2_048
+clock_ghz = 1.0
+enable = true
+
+[workload]
+cache = "dual"
+batch = 16
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = parse_config(DOC).unwrap();
+        assert_eq!(d.get_str("", "title"), Some("dart"));
+        assert_eq!(d.get_u64("hw", "blen"), Some(64));
+        assert_eq!(d.get_u64("hw", "vlen"), Some(2048));
+        assert_eq!(d.get_f64("hw", "clock_ghz"), Some(1.0));
+        assert_eq!(d.get("hw", "enable").unwrap().as_bool(), Some(true));
+        assert_eq!(d.get_str("workload", "cache"), Some("dual"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_config("not a kv line").is_err());
+        assert!(parse_config("[unclosed").is_err());
+        assert!(parse_config("k = @@@").is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let d = parse_config(DOC).unwrap();
+        let mut hw = crate::config::HwConfig::dart_edge();
+        apply_hw_overrides(&d, &mut hw);
+        assert_eq!(hw.blen, 64);
+        assert_eq!(hw.vlen, 2048);
+    }
+
+    #[test]
+    fn error_carries_line() {
+        let err = parse_config("a = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+}

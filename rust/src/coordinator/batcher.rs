@@ -1,0 +1,187 @@
+//! Dynamic batcher: groups pending requests into the largest compiled
+//! batch variant, padding with replicas when a batch is ragged (padded
+//! lanes are generated and discarded — the executable's batch dimension
+//! is shape-static).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// compiled batch variants, ascending (from the manifest)
+    pub variants: Vec<usize>,
+    /// max time a request may wait for batchmates
+    pub max_wait: Duration,
+    /// queue capacity (backpressure bound)
+    pub capacity: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            variants: vec![1, 4],
+            max_wait: Duration::from_millis(20),
+            capacity: 1024,
+        }
+    }
+}
+
+/// A queued item with arrival time.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub item: T,
+    pub arrived: Instant,
+}
+
+/// The batch the batcher decided to run.
+#[derive(Debug)]
+pub struct BatchPlan<T> {
+    pub items: Vec<T>,
+    /// executable batch size (>= items.len(); pad to this)
+    pub variant: usize,
+}
+
+pub struct Batcher<T> {
+    pub cfg: BatcherConfig,
+    queue: VecDeque<Pending<T>>,
+    pub enqueued: u64,
+    pub rejected: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(mut cfg: BatcherConfig) -> Self {
+        cfg.variants.sort_unstable();
+        assert!(!cfg.variants.is_empty());
+        Batcher { cfg, queue: VecDeque::new(), enqueued: 0, rejected: 0 }
+    }
+
+    /// Enqueue; false = queue full (backpressure).
+    pub fn push(&mut self, item: T) -> bool {
+        if self.queue.len() >= self.cfg.capacity {
+            self.rejected += 1;
+            return false;
+        }
+        self.queue.push_back(Pending { item, arrived: Instant::now() });
+        self.enqueued += 1;
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Smallest compiled variant that fits `n` requests (or the largest
+    /// variant if n exceeds it).
+    fn variant_for(&self, n: usize) -> usize {
+        *self.cfg.variants.iter().find(|&&v| v >= n)
+            .unwrap_or(self.cfg.variants.last().unwrap())
+    }
+
+    /// Decide the next batch: fire when a full largest-variant batch is
+    /// waiting, or when the oldest request exceeded max_wait.
+    pub fn next_batch(&mut self) -> Option<BatchPlan<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let biggest = *self.cfg.variants.last().unwrap();
+        let oldest_wait = self.queue.front().unwrap().arrived.elapsed();
+        if self.queue.len() < biggest && oldest_wait < self.cfg.max_wait {
+            return None; // keep waiting for batchmates
+        }
+        let take = self.queue.len().min(biggest);
+        let variant = self.variant_for(take);
+        let items = (0..take)
+            .map(|_| self.queue.pop_front().unwrap().item)
+            .collect();
+        Some(BatchPlan { items, variant })
+    }
+
+    /// Force-drain everything (shutdown path).
+    pub fn drain(&mut self) -> Vec<BatchPlan<T>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let biggest = *self.cfg.variants.last().unwrap();
+            let take = self.queue.len().min(biggest);
+            let variant = self.variant_for(take);
+            let items = (0..take)
+                .map(|_| self.queue.pop_front().unwrap().item)
+                .collect();
+            out.push(BatchPlan { items, variant });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(wait_ms: u64) -> BatcherConfig {
+        BatcherConfig {
+            variants: vec![1, 4],
+            max_wait: Duration::from_millis(wait_ms),
+            capacity: 8,
+        }
+    }
+
+    #[test]
+    fn fires_immediately_when_full() {
+        let mut b = Batcher::new(cfg(1000));
+        for i in 0..4 {
+            assert!(b.push(i));
+        }
+        let plan = b.next_batch().unwrap();
+        assert_eq!(plan.items, vec![0, 1, 2, 3]);
+        assert_eq!(plan.variant, 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn waits_for_batchmates_then_times_out() {
+        let mut b = Batcher::new(cfg(5));
+        b.push(7);
+        assert!(b.next_batch().is_none()); // still inside max_wait
+        std::thread::sleep(Duration::from_millis(8));
+        let plan = b.next_batch().unwrap();
+        assert_eq!(plan.items, vec![7]);
+        assert_eq!(plan.variant, 1); // smallest variant that fits
+    }
+
+    #[test]
+    fn ragged_batch_picks_padding_variant() {
+        let mut b = Batcher::new(cfg(0));
+        b.push(1);
+        b.push(2);
+        std::thread::sleep(Duration::from_millis(1));
+        let plan = b.next_batch().unwrap();
+        assert_eq!(plan.items.len(), 2);
+        assert_eq!(plan.variant, 4); // pad 2 -> 4
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut b = Batcher::new(cfg(1000));
+        for i in 0..8 {
+            assert!(b.push(i));
+        }
+        assert!(!b.push(99));
+        assert_eq!(b.rejected, 1);
+    }
+
+    #[test]
+    fn drain_flushes_all() {
+        let mut b = Batcher::new(cfg(1000));
+        for i in 0..6 {
+            b.push(i);
+        }
+        let plans = b.drain();
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].items.len(), 4);
+        assert_eq!(plans[1].items.len(), 2);
+        assert!(b.is_empty());
+    }
+}

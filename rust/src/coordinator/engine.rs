@@ -1,0 +1,213 @@
+//! Blocked-diffusion generation engine: the Rust re-implementation of
+//! python/compile/model.py's `generate` control flow over the PJRT
+//! executables (the two are pinned to each other through the manifest
+//! goldens and the parity integration test).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::CacheMode;
+use crate::kvcache::{KvCache, KvQuantPolicy, KvShape};
+use crate::runtime::{Executor, Tensor};
+use crate::sampling::{self, SamplePrecision};
+
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    pub cache: CacheMode,
+    pub kv_policy: KvQuantPolicy,
+    pub sample_precision: SamplePrecision,
+    pub v_chunk: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            cache: CacheMode::Dual,
+            kv_policy: KvQuantPolicy::fp32(),
+            sample_precision: SamplePrecision::Fp32,
+            v_chunk: 128,
+        }
+    }
+}
+
+/// Per-batch generation outcome with stage timings (the Fig. 1 shape).
+#[derive(Clone, Debug)]
+pub struct GenerationResult {
+    /// [B, L_tot] generated grids
+    pub tokens: Vec<Vec<i32>>,
+    pub model_s: f64,
+    pub sampling_s: f64,
+    pub steps: usize,
+    pub kv_packed_bytes: u64,
+}
+
+impl GenerationResult {
+    pub fn total_s(&self) -> f64 {
+        self.model_s + self.sampling_s
+    }
+
+    pub fn sampling_frac(&self) -> f64 {
+        self.sampling_s / self.total_s().max(1e-12)
+    }
+}
+
+pub struct GenerationEngine {
+    pub ex: Executor,
+    pub cfg: EngineConfig,
+}
+
+impl GenerationEngine {
+    pub fn new(ex: Executor, cfg: EngineConfig) -> Self {
+        GenerationEngine { ex, cfg }
+    }
+
+    /// Pre-compile every executable needed for batch size `b` under the
+    /// configured cache mode (avoids compile jitter on the hot path).
+    pub fn warmup(&mut self, b: usize) -> Result<()> {
+        let g = self.ex.manifest.geometry;
+        self.ex.compile(&format!("full_b{b}"))?;
+        match self.cfg.cache {
+            CacheMode::Dual => self.ex.compile(&format!("refine_dual_b{b}"))?,
+            CacheMode::Prefix => {
+                for n in 0..g.n_blocks {
+                    self.ex.compile(&format!("refine_prefix_b{b}_n{n}"))?;
+                }
+            }
+            CacheMode::None => {}
+        }
+        Ok(())
+    }
+
+    /// Generate completions for `prompts` (each exactly `prompt_len`
+    /// tokens; the batch size must be a compiled variant).
+    pub fn generate(&mut self, prompts: &[Vec<i32>]) -> Result<GenerationResult> {
+        let g = self.ex.manifest.geometry;
+        let b = prompts.len();
+        if !self.ex.manifest.batches.contains(&b) {
+            bail!("no compiled variant for batch size {b}");
+        }
+        for p in prompts {
+            if p.len() != g.prompt_len {
+                bail!("prompt length {} != {}", p.len(), g.prompt_len);
+            }
+        }
+
+        // x: [B, L_tot] — prompt then masks
+        let mut x = vec![g.mask_id; b * g.total_len];
+        for (bi, p) in prompts.iter().enumerate() {
+            x[bi * g.total_len..bi * g.total_len + g.prompt_len]
+                .copy_from_slice(p);
+        }
+
+        let kv_shape = KvShape {
+            n_layers: g.n_layers,
+            batch: b,
+            n_kv_heads: g.n_kv_heads,
+            seq: g.total_len,
+            d_head: g.d_head,
+        };
+        let kv_dims = self.ex.manifest.kv_dims(b);
+        let mut cache = KvCache::new(self.cfg.cache, self.cfg.kv_policy);
+        let ks = sampling::num_transfer_tokens(g.block_len, g.steps_per_block);
+
+        let mut model_s = 0.0;
+        let mut sampling_s = 0.0;
+        let mut steps = 0usize;
+
+        for blk in 0..g.n_blocks {
+            let s_n = g.prompt_len + blk * g.block_len;
+            let e_n = s_n + g.block_len;
+            for t in 0..g.steps_per_block {
+                let t0 = Instant::now();
+                let warm = t == 0 || self.cfg.cache == CacheMode::None;
+                // logits for the active block, [B, L, V]
+                let logits: Vec<f32> = if warm {
+                    let out = self.ex.run(
+                        &format!("full_b{b}"),
+                        &[Tensor::i32(vec![b, g.total_len], x.clone())])?;
+                    cache.store_warm(out[1].as_f32(), out[2].as_f32(), kv_shape);
+                    // slice active block logits out of [B, L_tot, V]
+                    let all = out[0].as_f32();
+                    let mut lg = Vec::with_capacity(b * g.block_len * g.vocab);
+                    for bi in 0..b {
+                        let base = (bi * g.total_len + s_n) * g.vocab;
+                        lg.extend_from_slice(
+                            &all[base..base + g.block_len * g.vocab]);
+                    }
+                    lg
+                } else {
+                    match self.cfg.cache {
+                        CacheMode::Dual => {
+                            let (kc, vc) = cache.full().expect("warm first");
+                            let x_act = self.active_block(&x, b, s_n, e_n, g.total_len);
+                            let out = self.ex.run(
+                                &format!("refine_dual_b{b}"),
+                                &[Tensor::i32(vec![b, g.block_len], x_act),
+                                  Tensor::f32(kv_dims.clone(), kc.to_vec()),
+                                  Tensor::f32(kv_dims.clone(), vc.to_vec()),
+                                  Tensor::scalar_i32(s_n as i32)])?;
+                            cache.refresh_block(out[1].as_f32(), out[2].as_f32(),
+                                                s_n, g.block_len);
+                            out[0].as_f32().to_vec()
+                        }
+                        CacheMode::Prefix => {
+                            let (kp, vp) = cache.prefix(s_n).expect("warm first");
+                            let tail = g.total_len - s_n;
+                            let mut x_tail = Vec::with_capacity(b * tail);
+                            for bi in 0..b {
+                                let base = bi * g.total_len + s_n;
+                                x_tail.extend_from_slice(&x[base..base + tail]);
+                            }
+                            let mut dims = kv_dims.clone();
+                            dims[3] = s_n;
+                            let out = self.ex.run(
+                                &format!("refine_prefix_b{b}_n{blk}"),
+                                &[Tensor::i32(vec![b, tail], x_tail),
+                                  Tensor::f32(dims.clone(), kp),
+                                  Tensor::f32(dims, vp)])?;
+                            out[0].as_f32().to_vec()
+                        }
+                        CacheMode::None => unreachable!(),
+                    }
+                };
+                model_s += t0.elapsed().as_secs_f64();
+
+                // sampling stage: the Rust Vector-Scalar engine
+                let t1 = Instant::now();
+                let x_act = self.active_block(&x, b, s_n, e_n, g.total_len);
+                let kvec = vec![ks[t]; b];
+                let res = sampling::sample_block(
+                    &logits, &x_act, b, g.block_len, g.vocab, &kvec,
+                    g.mask_id, self.cfg.v_chunk, self.cfg.sample_precision);
+                for bi in 0..b {
+                    let dst = bi * g.total_len + s_n;
+                    x[dst..dst + g.block_len].copy_from_slice(
+                        &res.x_new[bi * g.block_len..(bi + 1) * g.block_len]);
+                }
+                sampling_s += t1.elapsed().as_secs_f64();
+                steps += 1;
+            }
+        }
+
+        let tokens = (0..b)
+            .map(|bi| x[bi * g.total_len..(bi + 1) * g.total_len].to_vec())
+            .collect();
+        Ok(GenerationResult {
+            tokens,
+            model_s,
+            sampling_s,
+            steps,
+            kv_packed_bytes: cache.packed_bytes(),
+        })
+    }
+
+    fn active_block(&self, x: &[i32], b: usize, s_n: usize, e_n: usize,
+                    l_tot: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(b * (e_n - s_n));
+        for bi in 0..b {
+            out.extend_from_slice(&x[bi * l_tot + s_n..bi * l_tot + e_n]);
+        }
+        out
+    }
+}

@@ -1,0 +1,89 @@
+//! Serving metrics: request latencies, stage breakdown, throughput.
+
+use std::time::Instant;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub batches_run: u64,
+    pub padded_lanes: u64,
+    latencies_s: Vec<f64>,
+    pub model_s: f64,
+    pub sampling_s: f64,
+    started: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn record_batch(&mut self, real: usize, padded: usize,
+                        tokens_per_req: usize, model_s: f64,
+                        sampling_s: f64, latencies: &[f64]) {
+        self.requests_completed += real as u64;
+        self.tokens_generated += (real * tokens_per_req) as u64;
+        self.batches_run += 1;
+        self.padded_lanes += (padded - real) as u64;
+        self.model_s += model_s;
+        self.sampling_s += sampling_s;
+        self.latencies_s.extend_from_slice(latencies);
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    pub fn tps(&self) -> f64 {
+        self.tokens_generated as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    pub fn latency_summary(&self) -> Option<crate::stats::Summary> {
+        if self.latencies_s.is_empty() {
+            None
+        } else {
+            Some(crate::stats::Summary::from_samples(&self.latencies_s))
+        }
+    }
+
+    pub fn sampling_frac(&self) -> f64 {
+        self.sampling_s / (self.model_s + self.sampling_s).max(1e-12)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "requests {}  tokens {}  batches {}  padded lanes {}\n\
+             wall {:.2}s  TPS {:.1}  model {:.2}s  sampling {:.2}s ({:.1}%)",
+            self.requests_completed, self.tokens_generated, self.batches_run,
+            self.padded_lanes, self.elapsed_s(), self.tps(), self.model_s,
+            self.sampling_s, self.sampling_frac() * 100.0);
+        if let Some(l) = self.latency_summary() {
+            s.push_str(&format!(
+                "\nlatency p50 {}  p95 {}  max {}",
+                crate::stats::fmt_time(l.p50),
+                crate::stats::fmt_time(l.p95),
+                crate::stats::fmt_time(l.max)));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let mut m = Metrics::default();
+        m.start();
+        m.record_batch(3, 4, 64, 0.9, 0.1, &[0.5, 0.6, 0.7]);
+        assert_eq!(m.requests_completed, 3);
+        assert_eq!(m.tokens_generated, 192);
+        assert_eq!(m.padded_lanes, 1);
+        assert!((m.sampling_frac() - 0.1).abs() < 1e-9);
+        let l = m.latency_summary().unwrap();
+        assert_eq!(l.n, 3);
+        assert!(m.report().contains("requests 3"));
+    }
+}

@@ -1,0 +1,26 @@
+//! The DART serving coordinator (Fig. 2's host side).
+//!
+//! Rust owns the event loop, process topology, metrics and CLI; python
+//! authored + AOT-compiled the model once and is never on the request
+//! path. Components:
+//!
+//! * [`engine`] — the blocked-diffusion generation engine: drives the
+//!   PJRT executables through the warm/refine schedule of the selected
+//!   cache mode, with the Rust sampling engine committing tokens and the
+//!   Rust KV-cache manager (optionally BAOS+MX-quantized) holding state
+//!   between steps;
+//! * [`batcher`] — request queue + dynamic batcher (pads to the nearest
+//!   compiled batch variant, bounded wait);
+//! * [`server`] — the worker thread owning the PJRT client, mpsc
+//!   request/response plumbing, backpressure;
+//! * [`metrics`] — latency/throughput accounting for the e2e driver.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use engine::{EngineConfig, GenerationEngine, GenerationResult};
+pub use metrics::Metrics;
+pub use server::{Coordinator, Request, Response};

@@ -1,0 +1,207 @@
+//! The coordinator server: a worker thread owns the PJRT client (PJRT
+//! handles are not Sync) and drains the dynamic batcher; callers submit
+//! prompts over an mpsc channel and receive completions on a
+//! per-request return channel. std-thread runtime (no tokio offline —
+//! DESIGN.md S7); the blocking recv in the worker is the event loop.
+
+use std::path::Path;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::engine::{EngineConfig, GenerationEngine};
+use super::metrics::Metrics;
+use crate::runtime::Executor;
+
+/// A generation request: a prompt of exactly `prompt_len` tokens.
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub reply: Sender<Response>,
+    pub submitted: Instant,
+}
+
+/// The completion for one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub tokens: Vec<i32>,
+    pub latency_s: f64,
+    pub model_s: f64,
+    pub sampling_s: f64,
+}
+
+enum Msg {
+    Submit(Request),
+    Shutdown(Sender<Metrics>),
+}
+
+/// Client handle to a running coordinator.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the coordinator: spawns the worker thread, which loads the
+    /// artifacts and compiles every batch variant *inside* the thread
+    /// (PJRT handles are not Send; the worker owns the client for its
+    /// whole lifetime). Blocks until warmup succeeds or fails.
+    pub fn start(artifacts: &Path, engine_cfg: EngineConfig,
+                 batcher_cfg: Option<BatcherConfig>) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir = artifacts.to_path_buf();
+        let worker = std::thread::Builder::new()
+            .name("dart-coordinator".into())
+            .spawn(move || {
+                let setup = (|| -> Result<(GenerationEngine, BatcherConfig)> {
+                    let ex = Executor::load(&dir)?;
+                    let variants = ex.manifest.batches.clone();
+                    let bcfg = batcher_cfg.unwrap_or(BatcherConfig {
+                        variants,
+                        ..BatcherConfig::default()
+                    });
+                    let mut engine = GenerationEngine::new(ex, engine_cfg);
+                    for &b in &bcfg.variants {
+                        engine.warmup(b)?;
+                    }
+                    Ok((engine, bcfg))
+                })();
+                match setup {
+                    Ok((engine, bcfg)) => {
+                        let _ = ready_tx.send(Ok(()));
+                        worker_loop(engine, bcfg, rx);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                }
+            })?;
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("worker died"))??;
+        Ok(Coordinator { tx, worker: Some(worker) })
+    }
+
+    /// Submit a prompt; returns the receiver for the completion.
+    pub fn submit(&self, prompt: Vec<i32>) -> Receiver<Response> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Submit(Request {
+            prompt,
+            reply,
+            submitted: Instant::now(),
+        }));
+        rx
+    }
+
+    /// Stop the worker and collect final metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        let (mtx, mrx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Shutdown(mtx));
+        let metrics = mrx.recv().unwrap_or_default();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        metrics
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if let Some(h) = self.worker.take() {
+            let (mtx, _mrx) = mpsc::channel();
+            let _ = self.tx.send(Msg::Shutdown(mtx));
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(mut engine: GenerationEngine, bcfg: BatcherConfig,
+               rx: Receiver<Msg>) {
+    let mut batcher: Batcher<Request> = Batcher::new(bcfg);
+    let mut metrics = Metrics::default();
+    metrics.start();
+    let poll = Duration::from_millis(2);
+    loop {
+        // ingest
+        match rx.recv_timeout(if batcher.is_empty() {
+            Duration::from_millis(50)
+        } else {
+            poll
+        }) {
+            Ok(Msg::Submit(req)) => {
+                if !batcher.push(req) {
+                    // backpressure: reject by dropping the reply sender —
+                    // the caller sees a disconnected channel
+                    continue;
+                }
+                // keep pulling whatever is immediately available
+                while let Ok(msg) = rx.try_recv() {
+                    match msg {
+                        Msg::Submit(r) => {
+                            batcher.push(r);
+                        }
+                        Msg::Shutdown(mtx) => {
+                            run_drain(&mut engine, &mut batcher, &mut metrics);
+                            let _ = mtx.send(metrics);
+                            return;
+                        }
+                    }
+                }
+            }
+            Ok(Msg::Shutdown(mtx)) => {
+                run_drain(&mut engine, &mut batcher, &mut metrics);
+                let _ = mtx.send(metrics);
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+        // serve
+        while let Some(plan) = batcher.next_batch() {
+            run_batch(&mut engine, plan.items, plan.variant, &mut metrics);
+        }
+    }
+}
+
+fn run_drain(engine: &mut GenerationEngine, batcher: &mut Batcher<Request>,
+             metrics: &mut Metrics) {
+    for plan in batcher.drain() {
+        run_batch(engine, plan.items, plan.variant, metrics);
+    }
+}
+
+fn run_batch(engine: &mut GenerationEngine, reqs: Vec<Request>,
+             variant: usize, metrics: &mut Metrics) {
+    let real = reqs.len();
+    let mut prompts: Vec<Vec<i32>> =
+        reqs.iter().map(|r| r.prompt.clone()).collect();
+    // pad ragged batches by replicating the first prompt
+    while prompts.len() < variant {
+        prompts.push(prompts[0].clone());
+    }
+    match engine.generate(&prompts) {
+        Ok(result) => {
+            let g = engine.ex.manifest.geometry;
+            let mut latencies = Vec::with_capacity(real);
+            for (i, req) in reqs.into_iter().enumerate() {
+                let latency = req.submitted.elapsed().as_secs_f64();
+                latencies.push(latency);
+                let _ = req.reply.send(Response {
+                    tokens: result.tokens[i].clone(),
+                    latency_s: latency,
+                    model_s: result.model_s,
+                    sampling_s: result.sampling_s,
+                });
+            }
+            metrics.record_batch(real, variant,
+                                 g.total_len - g.prompt_len,
+                                 result.model_s, result.sampling_s,
+                                 &latencies);
+        }
+        Err(e) => {
+            eprintln!("dart-coordinator: batch failed: {e:#}");
+            // reply channels drop → callers observe disconnect
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! HBM2e DRAM model (paper §4.2 — Ramulator-style memory subsystem).
+//!
+//! Models what matters for the NPU's bandwidth behaviour: pseudo-channel
+//! parallelism, bank-level parallelism with open-row policy, row
+//! activate/precharge timing, refresh (tREFI/tRFC), and read-path
+//! scheduling gaps. Two fidelities implement the Table 2 cross-validation
+//! (DESIGN.md substitution S1):
+//!
+//! * [`Fidelity::Ideal`] — the paper's simulator configuration: ideal
+//!   bank-level parallelism, refresh disabled; streaming traffic achieves
+//!   the pin-rate (datasheet) bandwidth.
+//! * [`Fidelity::PhysicalProxy`] — stands in for the AMD Alveo V80
+//!   measurements: refresh enabled plus the scheduling/bank-conflict
+//!   penalties the datasheet does not capture; lands at ~93% (write) and
+//!   ~86% (read) of spec, matching the published physical numbers.
+//!
+//! The transactional interface ([`HbmModel::transact`]) is what the
+//! cycle-accurate simulator drives; [`HbmModel::stream_bandwidth`]
+//! regenerates Table 2.
+
+use crate::config::HbmSpec;
+
+/// DRAM timing parameters in nanoseconds (HBM2e-class defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct DramTiming {
+    pub t_rcd: f64,
+    pub t_cl: f64,
+    pub t_rp: f64,
+    pub t_ras: f64,
+    /// refresh cycle time
+    pub t_rfc: f64,
+    /// refresh interval
+    pub t_refi: f64,
+    /// data-bus occupancy of one 32 B burst per pseudo-channel
+    pub t_burst: f64,
+    /// extra per-row scheduling gap on reads (reorder/turnaround), proxy only
+    pub read_row_gap: f64,
+    /// bytes per burst
+    pub burst_bytes: u64,
+    /// row (page) size per bank, bytes
+    pub row_bytes: u64,
+    /// banks per pseudo-channel
+    pub banks: u32,
+}
+
+impl DramTiming {
+    pub fn hbm2e() -> Self {
+        DramTiming {
+            t_rcd: 14.0,
+            t_cl: 14.0,
+            t_rp: 14.0,
+            t_ras: 33.0,
+            t_rfc: 260.0,
+            t_refi: 3900.0,
+            t_burst: 2.5, // 32 B / 12.8 GB/s
+            read_row_gap: 6.0,
+            burst_bytes: 32,
+            row_bytes: 1024,
+            banks: 16,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fidelity {
+    Ideal,
+    PhysicalProxy,
+}
+
+/// Per-bank state: open row and earliest next-activate time.
+#[derive(Clone, Copy, Debug, Default)]
+struct Bank {
+    open_row: Option<u64>,
+    ready_ns: f64,
+}
+
+/// Per-pseudo-channel state.
+#[derive(Clone, Debug)]
+struct Channel {
+    banks: Vec<Bank>,
+    /// data bus free time
+    bus_free_ns: f64,
+    /// next refresh deadline
+    next_refresh_ns: f64,
+}
+
+/// Bandwidth measurement report.
+#[derive(Clone, Copy, Debug)]
+pub struct BwReport {
+    pub bytes: u64,
+    pub seconds: f64,
+    pub bytes_per_sec: f64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub refreshes: u64,
+}
+
+/// Address interleaving granularity across pseudo-channels.
+const INTERLEAVE_BYTES: u64 = 256;
+
+pub struct HbmModel {
+    pub spec: HbmSpec,
+    pub timing: DramTiming,
+    pub fidelity: Fidelity,
+    channels: Vec<Channel>,
+    pub now_ns: f64,
+    row_hits: u64,
+    row_misses: u64,
+    refreshes: u64,
+}
+
+impl HbmModel {
+    pub fn new(spec: HbmSpec, fidelity: Fidelity) -> Self {
+        let timing = DramTiming::hbm2e();
+        let nch = spec.total_pch() as usize;
+        HbmModel {
+            spec,
+            timing,
+            fidelity,
+            channels: vec![
+                Channel {
+                    banks: vec![Bank::default(); timing.banks as usize],
+                    bus_free_ns: 0.0,
+                    next_refresh_ns: timing.t_refi,
+                };
+                nch
+            ],
+            now_ns: 0.0,
+            row_hits: 0,
+            row_misses: 0,
+            refreshes: 0,
+        }
+    }
+
+    fn map(&self, addr: u64) -> (usize, usize, u64) {
+        let nch = self.channels.len() as u64;
+        let block = addr / INTERLEAVE_BYTES;
+        let ch = (block % nch) as usize;
+        let ch_local = block / nch * INTERLEAVE_BYTES + addr % INTERLEAVE_BYTES;
+        let row_global = ch_local / self.timing.row_bytes;
+        let bank = (row_global % self.timing.banks as u64) as usize;
+        let row = row_global / self.timing.banks as u64;
+        (ch, bank, row)
+    }
+
+    /// One burst access on a channel; returns data-available time (ns).
+    fn access_burst(&mut self, ch: usize, bank: usize, row: u64, write: bool,
+                    at_ns: f64) -> f64 {
+        let t = self.timing;
+        let proxy = self.fidelity == Fidelity::PhysicalProxy;
+        let c = &mut self.channels[ch];
+
+        let mut start = at_ns.max(c.bus_free_ns);
+
+        // refresh: all banks stall for tRFC every tREFI (proxy only —
+        // the paper's simulator models ideal refresh-free parallelism)
+        if proxy && start >= c.next_refresh_ns {
+            start += t.t_rfc;
+            c.next_refresh_ns += t.t_refi;
+            self.refreshes += 1;
+        }
+
+        let b = &mut c.banks[bank];
+        let hit = b.open_row == Some(row);
+        let data_start = if hit {
+            self.row_hits += 1;
+            start.max(b.ready_ns)
+        } else {
+            self.row_misses += 1;
+            // precharge + activate. Bank-level parallelism hides the row
+            // overhead behind the previous row's data phase on *both*
+            // fidelities (real HBM schedulers do this too — the physical
+            // deficit comes from refresh + scheduling gaps, not BLP):
+            // model the overlap by letting PRE/ACT begin tRAS early.
+            let act_start = start.max(b.ready_ns) - t.t_ras.min(start);
+            let opened = act_start.max(0.0) + t.t_rp + t.t_rcd;
+            b.open_row = Some(row);
+            // proxy: read-path scheduling/turnaround gap per row switch
+            let gap = if proxy && !write { t.read_row_gap } else { 0.0 };
+            opened.max(start) + gap
+        };
+        let fin = data_start + t.t_burst;
+        b.ready_ns = data_start; // row stays open
+        c.bus_free_ns = fin;
+        fin
+    }
+
+    /// Transactional access for the cycle simulator: transfer `bytes`
+    /// starting at `addr` (sequential) beginning no earlier than
+    /// `start_ns`; returns completion time in ns.
+    pub fn transact(&mut self, addr: u64, bytes: u64, write: bool,
+                    start_ns: f64) -> f64 {
+        let t = self.timing;
+        let mut fin = start_ns;
+        let mut a = addr;
+        let end = addr + bytes.max(1);
+        while a < end {
+            let (ch, bank, row) = self.map(a);
+            let f = self.access_burst(ch, bank, row, write, start_ns);
+            fin = fin.max(f);
+            a += t.burst_bytes;
+        }
+        // first-access latency (CAS) applies once per transaction
+        self.now_ns = fin;
+        fin + if write { 0.0 } else { t.t_cl }
+    }
+
+    /// Measure sustained streaming bandwidth over `bytes` of sequential
+    /// traffic (the Table 2 methodology: 64 MB continuous R/W).
+    pub fn stream_bandwidth(&mut self, bytes: u64, write: bool) -> BwReport {
+        self.reset();
+        let t = self.timing;
+        let mut a = 0u64;
+        let mut fin = 0f64;
+        while a < bytes {
+            let (ch, bank, row) = self.map(a);
+            let f = self.access_burst(ch, bank, row, write, 0.0);
+            fin = fin.max(f);
+            a += t.burst_bytes;
+        }
+        let secs = fin * 1e-9;
+        BwReport {
+            bytes,
+            seconds: secs,
+            bytes_per_sec: bytes as f64 / secs,
+            row_hits: self.row_hits,
+            row_misses: self.row_misses,
+            refreshes: self.refreshes,
+        }
+    }
+
+    /// Random-access bandwidth (row-miss heavy) — used by tests and the
+    /// DSE to show the model responds to locality.
+    pub fn random_bandwidth(&mut self, bytes: u64, write: bool, seed: u64)
+                            -> BwReport {
+        self.reset();
+        let t = self.timing;
+        let mut rng = crate::util::SplitMix64::new(seed);
+        let span = 1u64 << 30;
+        let n = bytes / t.burst_bytes;
+        let mut fin = 0f64;
+        for _ in 0..n {
+            let addr = rng.range(0, span / t.burst_bytes) * t.burst_bytes;
+            let (ch, bank, row) = self.map(addr);
+            let f = self.access_burst(ch, bank, row, write, 0.0);
+            fin = fin.max(f);
+        }
+        let secs = fin * 1e-9;
+        BwReport {
+            bytes,
+            seconds: secs,
+            bytes_per_sec: bytes as f64 / secs,
+            row_hits: self.row_hits,
+            row_misses: self.row_misses,
+            refreshes: self.refreshes,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for c in &mut self.channels {
+            c.bus_free_ns = 0.0;
+            c.next_refresh_ns = self.timing.t_refi;
+            for b in &mut c.banks {
+                *b = Bank::default();
+            }
+        }
+        self.now_ns = 0.0;
+        self.row_hits = 0;
+        self.row_misses = 0;
+        self.refreshes = 0;
+    }
+
+    /// Effective streaming bandwidth in bytes/s (cached-friendly helper
+    /// for the analytical simulator: spec peak derated by fidelity).
+    pub fn effective_stream_bw(&self, write: bool) -> f64 {
+        let peak = self.spec.peak_bw();
+        match self.fidelity {
+            Fidelity::Ideal => peak,
+            Fidelity::PhysicalProxy => {
+                let t = self.timing;
+                let refresh_eff = 1.0 - t.t_rfc / t.t_refi;
+                let data_per_row = t.row_bytes as f64 / t.burst_bytes as f64 * t.t_burst;
+                let row_eff = if write {
+                    1.0
+                } else {
+                    data_per_row / (data_per_row + t.read_row_gap)
+                };
+                peak * refresh_eff * row_eff
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HbmSpec;
+
+    const MB64: u64 = 64 << 20;
+
+    #[test]
+    fn ideal_streaming_hits_spec() {
+        let mut m = HbmModel::new(HbmSpec::hbm2e_2stack(), Fidelity::Ideal);
+        let r = m.stream_bandwidth(MB64, true);
+        let spec = m.spec.peak_bw();
+        let ratio = r.bytes_per_sec / spec;
+        assert!(ratio > 0.97 && ratio < 1.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn proxy_write_around_93pct() {
+        let mut m = HbmModel::new(HbmSpec::hbm2e_2stack(),
+                                  Fidelity::PhysicalProxy);
+        let r = m.stream_bandwidth(MB64, true);
+        let ratio = r.bytes_per_sec / m.spec.peak_bw();
+        assert!(ratio > 0.88 && ratio < 0.97, "write ratio {ratio}");
+        assert!(r.refreshes > 0);
+    }
+
+    #[test]
+    fn proxy_read_below_write() {
+        let mut m = HbmModel::new(HbmSpec::hbm2e_2stack(),
+                                  Fidelity::PhysicalProxy);
+        let w = m.stream_bandwidth(MB64, true);
+        let r = m.stream_bandwidth(MB64, false);
+        assert!(r.bytes_per_sec < w.bytes_per_sec,
+                "read {} !< write {}", r.bytes_per_sec, w.bytes_per_sec);
+        let ratio = r.bytes_per_sec / m.spec.peak_bw();
+        assert!(ratio > 0.80 && ratio < 0.92, "read ratio {ratio}");
+    }
+
+    #[test]
+    fn four_stack_scales_2x() {
+        let mut m2 = HbmModel::new(HbmSpec::hbm2e_2stack(), Fidelity::Ideal);
+        let mut m4 = HbmModel::new(HbmSpec::hbm2e_4stack(), Fidelity::Ideal);
+        let b2 = m2.stream_bandwidth(MB64, true).bytes_per_sec;
+        let b4 = m4.stream_bandwidth(2 * MB64, true).bytes_per_sec;
+        let scale = b4 / b2;
+        assert!(scale > 1.9 && scale < 2.1, "scale {scale}");
+    }
+
+    #[test]
+    fn random_worse_than_sequential() {
+        let mut m = HbmModel::new(HbmSpec::hbm2e_2stack(),
+                                  Fidelity::PhysicalProxy);
+        let seq = m.stream_bandwidth(8 << 20, false).bytes_per_sec;
+        let rnd = m.random_bandwidth(8 << 20, false, 7).bytes_per_sec;
+        assert!(rnd < seq, "random {rnd} !< seq {seq}");
+        // and it should be substantially worse (row misses dominate)
+        assert!(rnd < 0.8 * seq);
+    }
+
+    #[test]
+    fn row_hit_tracking() {
+        let mut m = HbmModel::new(HbmSpec::hbm2e_2stack(), Fidelity::Ideal);
+        let r = m.stream_bandwidth(1 << 20, true);
+        assert!(r.row_hits > r.row_misses);
+    }
+
+    #[test]
+    fn transact_monotonic_time() {
+        let mut m = HbmModel::new(HbmSpec::hbm2e_2stack(), Fidelity::Ideal);
+        let f1 = m.transact(0, 4096, false, 0.0);
+        let f2 = m.transact(1 << 20, 4096, false, f1);
+        assert!(f2 > f1);
+        assert!(f1 > 0.0);
+    }
+
+    #[test]
+    fn effective_bw_matches_measured_proxy() {
+        let m = HbmModel::new(HbmSpec::hbm2e_2stack(), Fidelity::PhysicalProxy);
+        let est = m.effective_stream_bw(true);
+        let mut mm = HbmModel::new(HbmSpec::hbm2e_2stack(),
+                                   Fidelity::PhysicalProxy);
+        let meas = mm.stream_bandwidth(MB64, true).bytes_per_sec;
+        let rel = (est - meas).abs() / meas;
+        assert!(rel < 0.08, "closed-form {est} vs measured {meas}");
+    }
+}

@@ -1,0 +1,313 @@
+//! Text assembler / disassembler for the DART ISA.
+//!
+//! Syntax: one instruction per line, `MNEMONIC op1, op2, ...` with `#`
+//! comments. Operands are unsigned integers except `S_MOV_F` (float),
+//! `S_MOV_I`/`S_ADD_I` immediates (signed) and the GEMM transpose flag
+//! (`t`/`n`). The DART compiler emits this format and the cycle-accurate
+//! simulator consumes it (paper §4.2 "running DART compiler-generated
+//! assembly").
+
+use super::{Instr, Program};
+
+/// Disassemble one instruction into canonical text.
+pub fn disasm(ins: &Instr) -> String {
+    use Instr::*;
+    let m = ins.mnemonic();
+    match ins {
+        MGemm { dst, act, wgt, m: mm, k, n, transpose } => format!(
+            "{m} {dst}, {act}, {wgt}, {mm}, {k}, {n}, {}",
+            if *transpose { "t" } else { "n" }),
+        MSum { dst, src, parts, len } => format!("{m} {dst}, {src}, {parts}, {len}"),
+        VAddVV { dst, a, b, len } | VSubVV { dst, a, b, len }
+        | VMulVV { dst, a, b, len } => format!("{m} {dst}, {a}, {b}, {len}"),
+        VExpV { dst, src, len } | VRecipV { dst, src, len } =>
+            format!("{m} {dst}, {src}, {len}"),
+        VAddVS { dst, a, s, len } | VMulVS { dst, a, s, len } =>
+            format!("{m} {dst}, {a}, f{s}, {len}"),
+        VRedMax { dst, src, len } | VRedSum { dst, src, len } =>
+            format!("{m} f{dst}, {src}, {len}"),
+        VRedMaxIdx { dst_val, dst_idx, src, len, idx_base } =>
+            format!("{m} f{dst_val}, r{dst_idx}, {src}, {len}, {idx_base}"),
+        VTopkMask { dst, conf, mask, k, len } =>
+            format!("{m} {dst}, {conf}, {mask}, r{k}, {len}"),
+        VSelectInt { dst, mask, a, b, len } =>
+            format!("{m} {dst}, {mask}, {a}, {b}, {len}"),
+        VEqIs { dst, src, imm, len } => format!("{m} {dst}, {src}, {imm}, {len}"),
+        VQuantMx { dst, src, len, bits } =>
+            format!("{m} {dst}, {src}, {len}, {bits}"),
+        SStFp { src, addr } => format!("{m} f{src}, {addr}"),
+        SLdFp { dst, addr } => format!("{m} f{dst}, {addr}"),
+        SStInt { src, addr } => format!("{m} r{src}, {addr}"),
+        SLdInt { dst, addr } => format!("{m} r{dst}, {addr}"),
+        SMapVFp { dst, src, len } => format!("{m} {dst}, {src}, {len}"),
+        SRecip { dst, src } => format!("{m} f{dst}, f{src}"),
+        SAddF { dst, a, b } | SMulF { dst, a, b } =>
+            format!("{m} f{dst}, f{a}, f{b}"),
+        SMovI { dst, imm } => format!("{m} r{dst}, {imm}"),
+        SMovF { dst, imm } => format!("{m} f{dst}, {imm}"),
+        SAddI { dst, a, imm } => format!("{m} r{dst}, r{a}, {imm}"),
+        SSoftmax { v, len } | SLayerNorm { v, len } | SSilu { v, len }
+        | SGelu { v, len } => format!("{m} {v}, {len}"),
+        HPrefetchV { hbm, dst, len } | HPrefetchM { hbm, dst, len } =>
+            format!("{m} {hbm}, {dst}, {len}"),
+        HStore { src, hbm, len } => format!("{m} {src}, {hbm}, {len}"),
+        CLoop { count } => format!("{m} {count}"),
+        CEndLoop | CBarrier | CHalt => m.to_string(),
+    }
+}
+
+/// Disassemble a whole program.
+pub fn disasm_program(p: &Program) -> String {
+    let mut out = String::new();
+    let mut indent = 0usize;
+    for ins in &p.instrs {
+        if matches!(ins, Instr::CEndLoop) {
+            indent = indent.saturating_sub(1);
+        }
+        out.push_str(&"  ".repeat(indent));
+        out.push_str(&disasm(ins));
+        out.push('\n');
+        if matches!(ins, Instr::CLoop { .. }) {
+            indent += 1;
+        }
+    }
+    out
+}
+
+#[derive(Debug)]
+pub struct AsmError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+struct Ops<'a> {
+    toks: Vec<&'a str>,
+    pos: usize,
+    line: usize,
+}
+
+impl<'a> Ops<'a> {
+    fn err(&self, msg: &str) -> AsmError {
+        AsmError { line: self.line, message: msg.to_string() }
+    }
+
+    fn next(&mut self) -> Result<&'a str, AsmError> {
+        let t = self.toks.get(self.pos).copied()
+            .ok_or_else(|| self.err("missing operand"))?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn u32(&mut self) -> Result<u32, AsmError> {
+        let t = self.next()?;
+        t.parse().map_err(|_| self.err(&format!("bad u32 {t:?}")))
+    }
+
+    fn u64(&mut self) -> Result<u64, AsmError> {
+        let t = self.next()?;
+        t.parse().map_err(|_| self.err(&format!("bad u64 {t:?}")))
+    }
+
+    fn i32(&mut self) -> Result<i32, AsmError> {
+        let t = self.next()?;
+        t.parse().map_err(|_| self.err(&format!("bad i32 {t:?}")))
+    }
+
+    fn f32(&mut self) -> Result<f32, AsmError> {
+        let t = self.next()?;
+        t.parse().map_err(|_| self.err(&format!("bad f32 {t:?}")))
+    }
+
+    fn fp(&mut self) -> Result<u8, AsmError> {
+        let t = self.next()?;
+        t.strip_prefix('f').and_then(|r| r.parse().ok())
+            .ok_or_else(|| self.err(&format!("expected fN register, got {t:?}")))
+    }
+
+    fn gp(&mut self) -> Result<u8, AsmError> {
+        let t = self.next()?;
+        t.strip_prefix('r').and_then(|r| r.parse().ok())
+            .ok_or_else(|| self.err(&format!("expected rN register, got {t:?}")))
+    }
+
+    fn flag(&mut self) -> Result<bool, AsmError> {
+        match self.next()? {
+            "t" => Ok(true),
+            "n" => Ok(false),
+            other => Err(self.err(&format!("expected t/n, got {other:?}"))),
+        }
+    }
+
+    fn done(&self) -> Result<(), AsmError> {
+        if self.pos == self.toks.len() {
+            Ok(())
+        } else {
+            Err(self.err("trailing operands"))
+        }
+    }
+}
+
+/// Assemble one line (mnemonic + operands) into an instruction.
+pub fn asm_line(line: &str, line_no: usize) -> Result<Option<Instr>, AsmError> {
+    let code = line.split('#').next().unwrap_or("").trim();
+    if code.is_empty() {
+        return Ok(None);
+    }
+    let (mn, rest) = code.split_once(char::is_whitespace)
+        .unwrap_or((code, ""));
+    let toks: Vec<&str> = rest.split(',').map(str::trim)
+        .filter(|t| !t.is_empty()).collect();
+    let mut o = Ops { toks, pos: 0, line: line_no };
+    use Instr::*;
+    let ins = match mn {
+        "M_GEMM" => MGemm { dst: o.u32()?, act: o.u32()?, wgt: o.u32()?,
+                            m: o.u32()?, k: o.u32()?, n: o.u32()?,
+                            transpose: o.flag()? },
+        "M_SUM" => MSum { dst: o.u32()?, src: o.u32()?, parts: o.u32()?,
+                          len: o.u32()? },
+        "V_ADD_VV" => VAddVV { dst: o.u32()?, a: o.u32()?, b: o.u32()?, len: o.u32()? },
+        "V_SUB_VV" => VSubVV { dst: o.u32()?, a: o.u32()?, b: o.u32()?, len: o.u32()? },
+        "V_MUL_VV" => VMulVV { dst: o.u32()?, a: o.u32()?, b: o.u32()?, len: o.u32()? },
+        "V_EXP_V" => VExpV { dst: o.u32()?, src: o.u32()?, len: o.u32()? },
+        "V_RECIP_V" => VRecipV { dst: o.u32()?, src: o.u32()?, len: o.u32()? },
+        "V_ADD_VS" => VAddVS { dst: o.u32()?, a: o.u32()?, s: o.fp()?, len: o.u32()? },
+        "V_MUL_VS" => VMulVS { dst: o.u32()?, a: o.u32()?, s: o.fp()?, len: o.u32()? },
+        "V_RED_MAX" => VRedMax { dst: o.fp()?, src: o.u32()?, len: o.u32()? },
+        "V_RED_SUM" => VRedSum { dst: o.fp()?, src: o.u32()?, len: o.u32()? },
+        "V_RED_MAX_IDX" => VRedMaxIdx { dst_val: o.fp()?, dst_idx: o.gp()?,
+                                        src: o.u32()?, len: o.u32()?,
+                                        idx_base: o.u32()? },
+        "V_TOPK_MASK" => VTopkMask { dst: o.u32()?, conf: o.u32()?,
+                                     mask: o.u32()?, k: o.gp()?, len: o.u32()? },
+        "V_SELECT_INT" => VSelectInt { dst: o.u32()?, mask: o.u32()?,
+                                       a: o.u32()?, b: o.u32()?, len: o.u32()? },
+        "V_QUANT_MX" => VQuantMx { dst: o.u32()?, src: o.u32()?, len: o.u32()?,
+                                   bits: o.u32()? as u8 },
+        "V_EQ_IS" => VEqIs { dst: o.u32()?, src: o.u32()?, imm: o.i32()?,
+                             len: o.u32()? },
+        "S_ST_FP" => SStFp { src: o.fp()?, addr: o.u32()? },
+        "S_LD_FP" => SLdFp { dst: o.fp()?, addr: o.u32()? },
+        "S_ST_INT" => SStInt { src: o.gp()?, addr: o.u32()? },
+        "S_LD_INT" => SLdInt { dst: o.gp()?, addr: o.u32()? },
+        "S_MAP_V_FP" => SMapVFp { dst: o.u32()?, src: o.u32()?, len: o.u32()? },
+        "S_RECIP" => SRecip { dst: o.fp()?, src: o.fp()? },
+        "S_ADD_F" => SAddF { dst: o.fp()?, a: o.fp()?, b: o.fp()? },
+        "S_MUL_F" => SMulF { dst: o.fp()?, a: o.fp()?, b: o.fp()? },
+        "S_MOV_I" => SMovI { dst: o.gp()?, imm: o.i32()? },
+        "S_MOV_F" => SMovF { dst: o.fp()?, imm: o.f32()? },
+        "S_ADD_I" => SAddI { dst: o.gp()?, a: o.gp()?, imm: o.i32()? },
+        "S_SOFTMAX" => SSoftmax { v: o.u32()?, len: o.u32()? },
+        "S_LAYERNORM" => SLayerNorm { v: o.u32()?, len: o.u32()? },
+        "S_SILU" => SSilu { v: o.u32()?, len: o.u32()? },
+        "S_GELU" => SGelu { v: o.u32()?, len: o.u32()? },
+        "H_PREFETCH_V" => HPrefetchV { hbm: o.u64()?, dst: o.u32()?, len: o.u32()? },
+        "H_PREFETCH_M" => HPrefetchM { hbm: o.u64()?, dst: o.u32()?, len: o.u32()? },
+        "H_STORE" => HStore { src: o.u32()?, hbm: o.u64()?, len: o.u32()? },
+        "C_LOOP" => CLoop { count: o.u32()? },
+        "C_END_LOOP" => CEndLoop,
+        "C_BARRIER" => CBarrier,
+        "C_HALT" => CHalt,
+        other => return Err(AsmError {
+            line: line_no,
+            message: format!("unknown mnemonic {other:?}"),
+        }),
+    };
+    o.done()?;
+    Ok(Some(ins))
+}
+
+/// Assemble a full program from text.
+pub fn assemble(text: &str) -> Result<Program, AsmError> {
+    let mut instrs = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if let Some(ins) = asm_line(line, i + 1)? {
+            instrs.push(ins);
+        }
+    }
+    Ok(Program::new(instrs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr::*;
+
+    fn roundtrip(ins: Instr) {
+        let text = disasm(&ins);
+        let back = asm_line(&text, 1).unwrap().unwrap();
+        assert_eq!(back, ins, "text was {text:?}");
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        for ins in [
+            MGemm { dst: 1, act: 2, wgt: 3, m: 4, k: 5, n: 6, transpose: true },
+            MSum { dst: 1, src: 2, parts: 4, len: 64 },
+            VAddVV { dst: 0, a: 8, b: 16, len: 8 },
+            VSubVV { dst: 0, a: 8, b: 16, len: 8 },
+            VMulVV { dst: 0, a: 8, b: 16, len: 8 },
+            VExpV { dst: 0, src: 0, len: 128 },
+            VRecipV { dst: 4, src: 8, len: 16 },
+            VAddVS { dst: 0, a: 4, s: 3, len: 8 },
+            VMulVS { dst: 0, a: 4, s: 3, len: 8 },
+            VRedMax { dst: 2, src: 0, len: 128 },
+            VRedSum { dst: 3, src: 0, len: 128 },
+            VRedMaxIdx { dst_val: 1, dst_idx: 2, src: 0, len: 128, idx_base: 512 },
+            VTopkMask { dst: 0, conf: 64, mask: 32, k: 5, len: 32 },
+            VSelectInt { dst: 0, mask: 8, a: 16, b: 24, len: 8 },
+            VQuantMx { dst: 0, src: 64, len: 32, bits: 4 },
+            VEqIs { dst: 0, src: 8, imm: -3, len: 8 },
+            SStFp { src: 7, addr: 12 },
+            SLdFp { dst: 7, addr: 12 },
+            SStInt { src: 3, addr: 9 },
+            SLdInt { dst: 3, addr: 9 },
+            SMapVFp { dst: 0, src: 0, len: 32 },
+            SRecip { dst: 1, src: 2 },
+            SAddF { dst: 0, a: 1, b: 2 },
+            SMulF { dst: 0, a: 1, b: 2 },
+            SMovI { dst: 4, imm: -7 },
+            SMovF { dst: 4, imm: 2.5 },
+            SAddI { dst: 4, a: 4, imm: 1 },
+            SSoftmax { v: 0, len: 64 },
+            SLayerNorm { v: 0, len: 64 },
+            SSilu { v: 0, len: 64 },
+            SGelu { v: 0, len: 64 },
+            HPrefetchV { hbm: 1 << 33, dst: 0, len: 4096 },
+            HPrefetchM { hbm: 123, dst: 4, len: 64 },
+            HStore { src: 0, hbm: 77, len: 128 },
+            CLoop { count: 9 },
+            CEndLoop,
+            CBarrier,
+            CHalt,
+        ] {
+            roundtrip(ins);
+        }
+    }
+
+    #[test]
+    fn program_roundtrip_with_comments() {
+        let text = "# sampling phase 1\nC_LOOP 4\n  V_EXP_V 0, 0, 128  # in place\n  V_RED_SUM f1, 0, 128\nC_END_LOOP\nC_HALT\n";
+        let p = assemble(text).unwrap();
+        assert_eq!(p.instrs.len(), 5);
+        let text2 = disasm_program(&p);
+        let p2 = assemble(&text2).unwrap();
+        assert_eq!(p.instrs, p2.instrs);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(asm_line("BOGUS_OP 1, 2", 1).is_err());
+        assert!(asm_line("V_EXP_V 1", 1).is_err());          // missing ops
+        assert!(asm_line("V_EXP_V 1, 2, 3, 4", 1).is_err()); // trailing
+        assert!(asm_line("S_ST_FP r1, 2", 1).is_err());      // wrong regfile
+        assert!(asm_line("M_GEMM 1,2,3,4,5,6,x", 1).is_err());
+    }
+}

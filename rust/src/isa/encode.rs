@@ -1,0 +1,354 @@
+//! Binary instruction encoding (the wire format the instruction decoder
+//! in Fig. 5 consumes). Fixed 24-byte records: opcode u8, flags u8,
+//! three u16 register/small fields, four u32 operand words, one u64
+//! HBM address. Dense, alignment-friendly, and trivially seekable —
+//! a realistic fit for a hardware instruction fetch unit.
+
+use super::Instr;
+
+pub const RECORD_BYTES: usize = 24;
+
+#[derive(Debug, PartialEq)]
+pub struct DecodeError(pub String);
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "decode error: {}", self.0)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+#[repr(u8)]
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Op {
+    MGemm = 0x01, MSum = 0x02,
+    VAddVV = 0x10, VSubVV = 0x11, VMulVV = 0x12, VExpV = 0x13,
+    VRecipV = 0x14, VAddVS = 0x15, VMulVS = 0x16, VRedMax = 0x17,
+    VRedSum = 0x18, VRedMaxIdx = 0x19, VTopkMask = 0x1A,
+    VSelectInt = 0x1B, VQuantMx = 0x1C, VEqIs = 0x1D,
+    SStFp = 0x30, SLdFp = 0x31, SStInt = 0x32, SLdInt = 0x33,
+    SMapVFp = 0x34, SRecip = 0x35, SAddF = 0x36, SMulF = 0x37,
+    SMovI = 0x38, SMovF = 0x39, SAddI = 0x3A, SSoftmax = 0x3B,
+    SLayerNorm = 0x3C, SSilu = 0x3D, SGelu = 0x3E,
+    HPrefetchV = 0x50, HPrefetchM = 0x51, HStore = 0x52,
+    CLoop = 0x70, CEndLoop = 0x71, CBarrier = 0x72, CHalt = 0x7F,
+}
+
+struct Rec {
+    op: u8,
+    flags: u8,
+    h: [u16; 3],
+    w: [u32; 4],
+    hbm: u64,
+}
+
+impl Rec {
+    fn new(op: Op) -> Self {
+        Rec { op: op as u8, flags: 0, h: [0; 3], w: [0; 4], hbm: 0 }
+    }
+
+    fn to_bytes(&self) -> [u8; RECORD_BYTES] {
+        let mut b = [0u8; RECORD_BYTES];
+        b[0] = self.op;
+        b[1] = self.flags;
+        for i in 0..3 {
+            b[2 + i * 2..4 + i * 2].copy_from_slice(&self.h[i].to_le_bytes());
+        }
+        // words live at offset 8..24 overlapping hbm? No: w at 8..24 is 16
+        // bytes; hbm reuses w[0..2] slots when present (flag bit 0x80).
+        for i in 0..4 {
+            b[8 + i * 4..12 + i * 4].copy_from_slice(&self.w[i].to_le_bytes());
+        }
+        if self.flags & 0x80 != 0 {
+            b[8..16].copy_from_slice(&self.hbm.to_le_bytes());
+        }
+        b
+    }
+
+    fn from_bytes(b: &[u8]) -> Self {
+        let mut h = [0u16; 3];
+        for (i, slot) in h.iter_mut().enumerate() {
+            *slot = u16::from_le_bytes([b[2 + i * 2], b[3 + i * 2]]);
+        }
+        let mut w = [0u32; 4];
+        for (i, slot) in w.iter_mut().enumerate() {
+            *slot = u32::from_le_bytes(b[8 + i * 4..12 + i * 4].try_into().unwrap());
+        }
+        let hbm = u64::from_le_bytes(b[8..16].try_into().unwrap());
+        Rec { op: b[0], flags: b[1], h, w, hbm }
+    }
+}
+
+/// Encode one instruction into its 24-byte record.
+pub fn encode(ins: &Instr) -> [u8; RECORD_BYTES] {
+    use Instr::*;
+    let mut r;
+    match ins {
+        MGemm { dst, act, wgt, m, k, n, transpose } => {
+            r = Rec::new(Op::MGemm);
+            r.flags |= if *transpose { 1 } else { 0 };
+            r.w = [*dst, *act, *wgt, *m];
+            r.h = [*k as u16, *n as u16, 0];
+        }
+        MSum { dst, src, parts, len } => {
+            r = Rec::new(Op::MSum);
+            r.w = [*dst, *src, *parts, *len];
+        }
+        VAddVV { dst, a, b, len } => { r = Rec::new(Op::VAddVV); r.w = [*dst, *a, *b, *len]; }
+        VSubVV { dst, a, b, len } => { r = Rec::new(Op::VSubVV); r.w = [*dst, *a, *b, *len]; }
+        VMulVV { dst, a, b, len } => { r = Rec::new(Op::VMulVV); r.w = [*dst, *a, *b, *len]; }
+        VExpV { dst, src, len } => { r = Rec::new(Op::VExpV); r.w = [*dst, *src, *len, 0]; }
+        VRecipV { dst, src, len } => { r = Rec::new(Op::VRecipV); r.w = [*dst, *src, *len, 0]; }
+        VAddVS { dst, a, s, len } => {
+            r = Rec::new(Op::VAddVS);
+            r.w = [*dst, *a, *len, 0];
+            r.h[0] = *s as u16;
+        }
+        VMulVS { dst, a, s, len } => {
+            r = Rec::new(Op::VMulVS);
+            r.w = [*dst, *a, *len, 0];
+            r.h[0] = *s as u16;
+        }
+        VRedMax { dst, src, len } => {
+            r = Rec::new(Op::VRedMax);
+            r.w = [*src, *len, 0, 0];
+            r.h[0] = *dst as u16;
+        }
+        VRedSum { dst, src, len } => {
+            r = Rec::new(Op::VRedSum);
+            r.w = [*src, *len, 0, 0];
+            r.h[0] = *dst as u16;
+        }
+        VRedMaxIdx { dst_val, dst_idx, src, len, idx_base } => {
+            r = Rec::new(Op::VRedMaxIdx);
+            r.w = [*src, *len, *idx_base, 0];
+            r.h = [*dst_val as u16, *dst_idx as u16, 0];
+        }
+        VTopkMask { dst, conf, mask, k, len } => {
+            r = Rec::new(Op::VTopkMask);
+            r.w = [*dst, *conf, *mask, *len];
+            r.h[0] = *k as u16;
+        }
+        VSelectInt { dst, mask, a, b, len } => {
+            r = Rec::new(Op::VSelectInt);
+            r.w = [*dst, *mask, *a, *b];
+            r.h[0] = *len as u16;
+        }
+        VQuantMx { dst, src, len, bits } => {
+            r = Rec::new(Op::VQuantMx);
+            r.w = [*dst, *src, *len, 0];
+            r.h[0] = *bits as u16;
+        }
+        VEqIs { dst, src, imm, len } => {
+            r = Rec::new(Op::VEqIs);
+            r.w = [*dst, *src, *imm as u32, *len];
+        }
+        SStFp { src, addr } => { r = Rec::new(Op::SStFp); r.w = [*addr, 0, 0, 0]; r.h[0] = *src as u16; }
+        SLdFp { dst, addr } => { r = Rec::new(Op::SLdFp); r.w = [*addr, 0, 0, 0]; r.h[0] = *dst as u16; }
+        SStInt { src, addr } => { r = Rec::new(Op::SStInt); r.w = [*addr, 0, 0, 0]; r.h[0] = *src as u16; }
+        SLdInt { dst, addr } => { r = Rec::new(Op::SLdInt); r.w = [*addr, 0, 0, 0]; r.h[0] = *dst as u16; }
+        SMapVFp { dst, src, len } => { r = Rec::new(Op::SMapVFp); r.w = [*dst, *src, *len, 0]; }
+        SRecip { dst, src } => { r = Rec::new(Op::SRecip); r.h = [*dst as u16, *src as u16, 0]; }
+        SAddF { dst, a, b } => { r = Rec::new(Op::SAddF); r.h = [*dst as u16, *a as u16, *b as u16]; }
+        SMulF { dst, a, b } => { r = Rec::new(Op::SMulF); r.h = [*dst as u16, *a as u16, *b as u16]; }
+        SMovI { dst, imm } => { r = Rec::new(Op::SMovI); r.w[0] = *imm as u32; r.h[0] = *dst as u16; }
+        SMovF { dst, imm } => { r = Rec::new(Op::SMovF); r.w[0] = imm.to_bits(); r.h[0] = *dst as u16; }
+        SAddI { dst, a, imm } => {
+            r = Rec::new(Op::SAddI);
+            r.w[0] = *imm as u32;
+            r.h = [*dst as u16, *a as u16, 0];
+        }
+        SSoftmax { v, len } => { r = Rec::new(Op::SSoftmax); r.w = [*v, *len, 0, 0]; }
+        SLayerNorm { v, len } => { r = Rec::new(Op::SLayerNorm); r.w = [*v, *len, 0, 0]; }
+        SSilu { v, len } => { r = Rec::new(Op::SSilu); r.w = [*v, *len, 0, 0]; }
+        SGelu { v, len } => { r = Rec::new(Op::SGelu); r.w = [*v, *len, 0, 0]; }
+        HPrefetchV { hbm, dst, len } => {
+            r = Rec::new(Op::HPrefetchV);
+            r.flags |= 0x80;
+            r.hbm = *hbm;
+            r.w[2] = *dst;
+            r.w[3] = *len;
+        }
+        HPrefetchM { hbm, dst, len } => {
+            r = Rec::new(Op::HPrefetchM);
+            r.flags |= 0x80;
+            r.hbm = *hbm;
+            r.w[2] = *dst;
+            r.w[3] = *len;
+        }
+        HStore { src, hbm, len } => {
+            r = Rec::new(Op::HStore);
+            r.flags |= 0x80;
+            r.hbm = *hbm;
+            r.w[2] = *src;
+            r.w[3] = *len;
+        }
+        CLoop { count } => { r = Rec::new(Op::CLoop); r.w[0] = *count; }
+        CEndLoop => r = Rec::new(Op::CEndLoop),
+        CBarrier => r = Rec::new(Op::CBarrier),
+        CHalt => r = Rec::new(Op::CHalt),
+    }
+    r.to_bytes()
+}
+
+/// Decode one 24-byte record.
+pub fn decode(bytes: &[u8]) -> Result<Instr, DecodeError> {
+    if bytes.len() < RECORD_BYTES {
+        return Err(DecodeError("short record".into()));
+    }
+    let r = Rec::from_bytes(bytes);
+    use Instr::*;
+    let ins = match r.op {
+        x if x == Op::MGemm as u8 => MGemm {
+            dst: r.w[0], act: r.w[1], wgt: r.w[2], m: r.w[3],
+            k: r.h[0] as u32, n: r.h[1] as u32, transpose: r.flags & 1 != 0,
+        },
+        x if x == Op::MSum as u8 => MSum { dst: r.w[0], src: r.w[1], parts: r.w[2], len: r.w[3] },
+        x if x == Op::VAddVV as u8 => VAddVV { dst: r.w[0], a: r.w[1], b: r.w[2], len: r.w[3] },
+        x if x == Op::VSubVV as u8 => VSubVV { dst: r.w[0], a: r.w[1], b: r.w[2], len: r.w[3] },
+        x if x == Op::VMulVV as u8 => VMulVV { dst: r.w[0], a: r.w[1], b: r.w[2], len: r.w[3] },
+        x if x == Op::VExpV as u8 => VExpV { dst: r.w[0], src: r.w[1], len: r.w[2] },
+        x if x == Op::VRecipV as u8 => VRecipV { dst: r.w[0], src: r.w[1], len: r.w[2] },
+        x if x == Op::VAddVS as u8 => VAddVS { dst: r.w[0], a: r.w[1], s: r.h[0] as u8, len: r.w[2] },
+        x if x == Op::VMulVS as u8 => VMulVS { dst: r.w[0], a: r.w[1], s: r.h[0] as u8, len: r.w[2] },
+        x if x == Op::VRedMax as u8 => VRedMax { dst: r.h[0] as u8, src: r.w[0], len: r.w[1] },
+        x if x == Op::VRedSum as u8 => VRedSum { dst: r.h[0] as u8, src: r.w[0], len: r.w[1] },
+        x if x == Op::VRedMaxIdx as u8 => VRedMaxIdx {
+            dst_val: r.h[0] as u8, dst_idx: r.h[1] as u8,
+            src: r.w[0], len: r.w[1], idx_base: r.w[2],
+        },
+        x if x == Op::VTopkMask as u8 => VTopkMask {
+            dst: r.w[0], conf: r.w[1], mask: r.w[2], k: r.h[0] as u8, len: r.w[3],
+        },
+        x if x == Op::VSelectInt as u8 => VSelectInt {
+            dst: r.w[0], mask: r.w[1], a: r.w[2], b: r.w[3], len: r.h[0] as u32,
+        },
+        x if x == Op::VQuantMx as u8 => VQuantMx {
+            dst: r.w[0], src: r.w[1], len: r.w[2], bits: r.h[0] as u8,
+        },
+        x if x == Op::VEqIs as u8 => VEqIs {
+            dst: r.w[0], src: r.w[1], imm: r.w[2] as i32, len: r.w[3],
+        },
+        x if x == Op::SStFp as u8 => SStFp { src: r.h[0] as u8, addr: r.w[0] },
+        x if x == Op::SLdFp as u8 => SLdFp { dst: r.h[0] as u8, addr: r.w[0] },
+        x if x == Op::SStInt as u8 => SStInt { src: r.h[0] as u8, addr: r.w[0] },
+        x if x == Op::SLdInt as u8 => SLdInt { dst: r.h[0] as u8, addr: r.w[0] },
+        x if x == Op::SMapVFp as u8 => SMapVFp { dst: r.w[0], src: r.w[1], len: r.w[2] },
+        x if x == Op::SRecip as u8 => SRecip { dst: r.h[0] as u8, src: r.h[1] as u8 },
+        x if x == Op::SAddF as u8 => SAddF { dst: r.h[0] as u8, a: r.h[1] as u8, b: r.h[2] as u8 },
+        x if x == Op::SMulF as u8 => SMulF { dst: r.h[0] as u8, a: r.h[1] as u8, b: r.h[2] as u8 },
+        x if x == Op::SMovI as u8 => SMovI { dst: r.h[0] as u8, imm: r.w[0] as i32 },
+        x if x == Op::SMovF as u8 => SMovF { dst: r.h[0] as u8, imm: f32::from_bits(r.w[0]) },
+        x if x == Op::SAddI as u8 => SAddI { dst: r.h[0] as u8, a: r.h[1] as u8, imm: r.w[0] as i32 },
+        x if x == Op::SSoftmax as u8 => SSoftmax { v: r.w[0], len: r.w[1] },
+        x if x == Op::SLayerNorm as u8 => SLayerNorm { v: r.w[0], len: r.w[1] },
+        x if x == Op::SSilu as u8 => SSilu { v: r.w[0], len: r.w[1] },
+        x if x == Op::SGelu as u8 => SGelu { v: r.w[0], len: r.w[1] },
+        x if x == Op::HPrefetchV as u8 => HPrefetchV { hbm: r.hbm, dst: r.w[2], len: r.w[3] },
+        x if x == Op::HPrefetchM as u8 => HPrefetchM { hbm: r.hbm, dst: r.w[2], len: r.w[3] },
+        x if x == Op::HStore as u8 => HStore { src: r.w[2], hbm: r.hbm, len: r.w[3] },
+        x if x == Op::CLoop as u8 => CLoop { count: r.w[0] },
+        x if x == Op::CEndLoop as u8 => CEndLoop,
+        x if x == Op::CBarrier as u8 => CBarrier,
+        x if x == Op::CHalt as u8 => CHalt,
+        other => return Err(DecodeError(format!("unknown opcode {other:#x}"))),
+    };
+    Ok(ins)
+}
+
+/// Encode a whole program.
+pub fn encode_program(p: &super::Program) -> Vec<u8> {
+    let mut out = Vec::with_capacity(p.instrs.len() * RECORD_BYTES);
+    for ins in &p.instrs {
+        out.extend_from_slice(&encode(ins));
+    }
+    out
+}
+
+/// Decode a binary blob back into a program.
+pub fn decode_program(bytes: &[u8]) -> Result<super::Program, DecodeError> {
+    if bytes.len() % RECORD_BYTES != 0 {
+        return Err(DecodeError("blob not a multiple of record size".into()));
+    }
+    let instrs = bytes
+        .chunks(RECORD_BYTES)
+        .map(decode)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(super::Program::new(instrs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr::*;
+
+    #[test]
+    fn roundtrip_every_variant() {
+        let all = vec![
+            MGemm { dst: 9, act: 8, wgt: 7, m: 6, k: 5, n: 4, transpose: true },
+            MSum { dst: 1, src: 2, parts: 3, len: 4 },
+            VAddVV { dst: 1, a: 2, b: 3, len: 4 },
+            VSubVV { dst: 1, a: 2, b: 3, len: 4 },
+            VMulVV { dst: 1, a: 2, b: 3, len: 4 },
+            VExpV { dst: 1, src: 2, len: 3 },
+            VRecipV { dst: 1, src: 2, len: 3 },
+            VAddVS { dst: 1, a: 2, s: 3, len: 4 },
+            VMulVS { dst: 1, a: 2, s: 3, len: 4 },
+            VRedMax { dst: 1, src: 2, len: 3 },
+            VRedSum { dst: 1, src: 2, len: 3 },
+            VRedMaxIdx { dst_val: 1, dst_idx: 2, src: 3, len: 4, idx_base: 5 },
+            VTopkMask { dst: 1, conf: 2, mask: 3, k: 4, len: 5 },
+            VSelectInt { dst: 1, mask: 2, a: 3, b: 4, len: 5 },
+            VQuantMx { dst: 1, src: 2, len: 3, bits: 4 },
+            VEqIs { dst: 1, src: 2, imm: -5, len: 4 },
+            SStFp { src: 1, addr: 2 },
+            SLdFp { dst: 1, addr: 2 },
+            SStInt { src: 1, addr: 2 },
+            SLdInt { dst: 1, addr: 2 },
+            SMapVFp { dst: 1, src: 2, len: 3 },
+            SRecip { dst: 1, src: 2 },
+            SAddF { dst: 1, a: 2, b: 3 },
+            SMulF { dst: 1, a: 2, b: 3 },
+            SMovI { dst: 1, imm: -42 },
+            SMovF { dst: 1, imm: -2.75 },
+            SAddI { dst: 1, a: 2, imm: -3 },
+            SSoftmax { v: 1, len: 2 },
+            SLayerNorm { v: 1, len: 2 },
+            SSilu { v: 1, len: 2 },
+            SGelu { v: 1, len: 2 },
+            HPrefetchV { hbm: 1 << 40, dst: 2, len: 3 },
+            HPrefetchM { hbm: 99, dst: 2, len: 3 },
+            HStore { src: 1, hbm: 1 << 35, len: 3 },
+            CLoop { count: 5 },
+            CEndLoop,
+            CBarrier,
+            CHalt,
+        ];
+        for ins in all {
+            let bytes = encode(&ins);
+            let back = decode(&bytes).unwrap();
+            assert_eq!(back, ins);
+        }
+    }
+
+    #[test]
+    fn program_blob_roundtrip() {
+        let p = crate::isa::Program::new(vec![
+            CLoop { count: 2 },
+            VExpV { dst: 0, src: 0, len: 64 },
+            CEndLoop,
+            CHalt,
+        ]);
+        let blob = encode_program(&p);
+        assert_eq!(blob.len(), 4 * RECORD_BYTES);
+        let p2 = decode_program(&blob).unwrap();
+        assert_eq!(p.instrs, p2.instrs);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode(&[0xEEu8; RECORD_BYTES]).is_err());
+        assert!(decode_program(&[0u8; 10]).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! The DART ISA (paper Table 1 + the six sampling-critical instructions).
+//!
+//! Five instruction classes drive the two engines:
+//!
+//! * **M** — matrix: GEMM/GEMV on the systolic Matrix Unit, result-adder
+//!   reduction (`M_SUM`), with or without transposed weight access;
+//! * **V** — vector: elementwise + reduction ops over VLEN lanes in
+//!   Vector SRAM, MX quantization, and the sampling-critical
+//!   `V_RED_MAX_IDX` / `V_TOPK_MASK` / `V_SELECT_INT`;
+//! * **S** — scalar: FP/INT register ops, the FP↔Vector bridges
+//!   (`S_ST_FP`, `S_MAP_V_FP`, …), and compound transcendental helpers
+//!   (softmax, layernorm, SiLU/GELU) that run on the Scalar Unit;
+//! * **H** — HBM: background prefetch into the Matrix/Vector SRAMs and
+//!   store-back (`H_PREFETCH_*`, `H_STORE`);
+//! * **C** — control: nested hardware loops, barriers, halt.
+//!
+//! All addresses are in *elements* within their SRAM domain (f32 for
+//! Vector/FP/Matrix, i32 for Int, f32 for HBM) — the compiler handles
+//! byte-level layout. Submodules: [`program`] (containers + builder),
+//! [`asm`] (text assembler/disassembler), [`encode`] (binary round trip).
+
+pub mod asm;
+pub mod encode;
+pub mod program;
+
+pub use program::{Program, ProgramBuilder};
+
+/// FP / GP register indices (the scalar register files).
+pub type FpReg = u8;
+pub type GpReg = u8;
+
+pub const NUM_FP_REGS: usize = 16;
+pub const NUM_GP_REGS: usize = 16;
+
+/// One DART instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Instr {
+    // ----- Matrix (M) -----
+    /// dst[m,n] (VectorSRAM) = act[m,k] (VectorSRAM) @ wgt[k,n] (MatrixSRAM)
+    MGemm { dst: u32, act: u32, wgt: u32, m: u32, k: u32, n: u32, transpose: bool },
+    /// result adder tree: dst[len] = sum of `parts` partial-sum vectors
+    MSum { dst: u32, src: u32, parts: u32, len: u32 },
+
+    // ----- Vector (V) -----
+    VAddVV { dst: u32, a: u32, b: u32, len: u32 },
+    VSubVV { dst: u32, a: u32, b: u32, len: u32 },
+    VMulVV { dst: u32, a: u32, b: u32, len: u32 },
+    /// in-place-capable exp (the Stable-Max `V_EXP_V`: dst may equal src)
+    VExpV { dst: u32, src: u32, len: u32 },
+    VRecipV { dst: u32, src: u32, len: u32 },
+    /// broadcast scalar FP reg across a vector op
+    VAddVS { dst: u32, a: u32, s: FpReg, len: u32 },
+    VMulVS { dst: u32, a: u32, s: FpReg, len: u32 },
+    VRedMax { dst: FpReg, src: u32, len: u32 },
+    VRedSum { dst: FpReg, src: u32, len: u32 },
+    /// fused max-with-index in a single pass (sampling-critical).
+    /// `idx_base` offsets the reported index by the chunk's position so
+    /// streaming chunks produce global vocabulary ids.
+    VRedMaxIdx { dst_val: FpReg, dst_idx: GpReg, src: u32, len: u32, idx_base: u32 },
+    /// streaming insertion top-k over FP confidences (sampling-critical):
+    /// produces an int boolean transfer mask. k comes from a GP reg.
+    VTopkMask { dst: u32, conf: u32, mask: u32, k: GpReg, len: u32 },
+    /// masked elementwise select over Int SRAM (torch.where equivalent)
+    VSelectInt { dst: u32, mask: u32, a: u32, b: u32, len: u32 },
+    /// integer equality-to-immediate mask: dst[i] = (src[i] == imm)
+    /// (builds the m_idx eligibility mask of Alg. 2 line 6)
+    VEqIs { dst: u32, src: u32, imm: i32, len: u32 },
+    /// MX block fake-quant in the vector datapath (KV path, §3.1.1)
+    VQuantMx { dst: u32, src: u32, len: u32, bits: u8 },
+
+    // ----- Scalar (S) -----
+    SStFp { src: FpReg, addr: u32 },
+    SLdFp { dst: FpReg, addr: u32 },
+    SStInt { src: GpReg, addr: u32 },
+    SLdInt { dst: GpReg, addr: u32 },
+    /// gather L FP-SRAM scalars into a dense Vector-SRAM vector
+    SMapVFp { dst: u32, src: u32, len: u32 },
+    SRecip { dst: FpReg, src: FpReg },
+    SAddF { dst: FpReg, a: FpReg, b: FpReg },
+    SMulF { dst: FpReg, a: FpReg, b: FpReg },
+    SMovI { dst: GpReg, imm: i32 },
+    SMovF { dst: FpReg, imm: f32 },
+    SAddI { dst: GpReg, a: GpReg, imm: i32 },
+    /// compound scalar-unit transcendentals over a Vector-SRAM span
+    SSoftmax { v: u32, len: u32 },
+    SLayerNorm { v: u32, len: u32 },
+    SSilu { v: u32, len: u32 },
+    SGelu { v: u32, len: u32 },
+
+    // ----- HBM (H) -----
+    HPrefetchV { hbm: u64, dst: u32, len: u32 },
+    HPrefetchM { hbm: u64, dst: u32, len: u32 },
+    HStore { src: u32, hbm: u64, len: u32 },
+
+    // ----- Control (C) -----
+    /// begin a hardware loop executing the body `count` times
+    CLoop { count: u32 },
+    CEndLoop,
+    /// wait for all outstanding H transfers
+    CBarrier,
+    CHalt,
+}
+
+/// Functional unit an instruction issues to (for the timing models).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Unit {
+    Matrix,
+    Vector,
+    Scalar,
+    Hbm,
+    Control,
+}
+
+impl Instr {
+    pub fn unit(&self) -> Unit {
+        use Instr::*;
+        match self {
+            MGemm { .. } | MSum { .. } => Unit::Matrix,
+            VAddVV { .. } | VSubVV { .. } | VMulVV { .. } | VExpV { .. }
+            | VRecipV { .. } | VAddVS { .. } | VMulVS { .. }
+            | VRedMax { .. } | VRedSum { .. } | VRedMaxIdx { .. }
+            | VTopkMask { .. } | VSelectInt { .. } | VQuantMx { .. }
+            | VEqIs { .. } => Unit::Vector,
+            SStFp { .. } | SLdFp { .. } | SStInt { .. } | SLdInt { .. }
+            | SMapVFp { .. } | SRecip { .. } | SAddF { .. } | SMulF { .. }
+            | SMovI { .. } | SMovF { .. } | SAddI { .. } | SSoftmax { .. }
+            | SLayerNorm { .. } | SSilu { .. } | SGelu { .. } => Unit::Scalar,
+            HPrefetchV { .. } | HPrefetchM { .. } | HStore { .. } => Unit::Hbm,
+            CLoop { .. } | CEndLoop | CBarrier | CHalt => Unit::Control,
+        }
+    }
+
+    /// The mnemonic used by the assembler/disassembler.
+    pub fn mnemonic(&self) -> &'static str {
+        use Instr::*;
+        match self {
+            MGemm { .. } => "M_GEMM",
+            MSum { .. } => "M_SUM",
+            VAddVV { .. } => "V_ADD_VV",
+            VSubVV { .. } => "V_SUB_VV",
+            VMulVV { .. } => "V_MUL_VV",
+            VExpV { .. } => "V_EXP_V",
+            VRecipV { .. } => "V_RECIP_V",
+            VAddVS { .. } => "V_ADD_VS",
+            VMulVS { .. } => "V_MUL_VS",
+            VRedMax { .. } => "V_RED_MAX",
+            VRedSum { .. } => "V_RED_SUM",
+            VRedMaxIdx { .. } => "V_RED_MAX_IDX",
+            VTopkMask { .. } => "V_TOPK_MASK",
+            VSelectInt { .. } => "V_SELECT_INT",
+            VEqIs { .. } => "V_EQ_IS",
+            VQuantMx { .. } => "V_QUANT_MX",
+            SStFp { .. } => "S_ST_FP",
+            SLdFp { .. } => "S_LD_FP",
+            SStInt { .. } => "S_ST_INT",
+            SLdInt { .. } => "S_LD_INT",
+            SMapVFp { .. } => "S_MAP_V_FP",
+            SRecip { .. } => "S_RECIP",
+            SAddF { .. } => "S_ADD_F",
+            SMulF { .. } => "S_MUL_F",
+            SMovI { .. } => "S_MOV_I",
+            SMovF { .. } => "S_MOV_F",
+            SAddI { .. } => "S_ADD_I",
+            SSoftmax { .. } => "S_SOFTMAX",
+            SLayerNorm { .. } => "S_LAYERNORM",
+            SSilu { .. } => "S_SILU",
+            SGelu { .. } => "S_GELU",
+            HPrefetchV { .. } => "H_PREFETCH_V",
+            HPrefetchM { .. } => "H_PREFETCH_M",
+            HStore { .. } => "H_STORE",
+            CLoop { .. } => "C_LOOP",
+            CEndLoop => "C_END_LOOP",
+            CBarrier => "C_BARRIER",
+            CHalt => "C_HALT",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn units_are_classified() {
+        assert_eq!(Instr::MGemm { dst: 0, act: 0, wgt: 0, m: 1, k: 1, n: 1,
+                                  transpose: false }.unit(), Unit::Matrix);
+        assert_eq!(Instr::VExpV { dst: 0, src: 0, len: 8 }.unit(), Unit::Vector);
+        assert_eq!(Instr::SStFp { src: 0, addr: 0 }.unit(), Unit::Scalar);
+        assert_eq!(Instr::HStore { src: 0, hbm: 0, len: 4 }.unit(), Unit::Hbm);
+        assert_eq!(Instr::CHalt.unit(), Unit::Control);
+    }
+
+    #[test]
+    fn sampling_critical_mnemonics_match_table1() {
+        // the six sampling-critical instructions of Table 1
+        let crit = [
+            Instr::VRedMaxIdx { dst_val: 0, dst_idx: 0, src: 0, len: 1, idx_base: 0 }
+                .mnemonic(),
+            Instr::SStFp { src: 0, addr: 0 }.mnemonic(),
+            Instr::SStInt { src: 0, addr: 0 }.mnemonic(),
+            Instr::SMapVFp { dst: 0, src: 0, len: 1 }.mnemonic(),
+            Instr::VTopkMask { dst: 0, conf: 0, mask: 0, k: 0, len: 1 }.mnemonic(),
+            Instr::VSelectInt { dst: 0, mask: 0, a: 0, b: 0, len: 1 }.mnemonic(),
+        ];
+        assert_eq!(crit, ["V_RED_MAX_IDX", "S_ST_FP", "S_ST_INT",
+                          "S_MAP_V_FP", "V_TOPK_MASK", "V_SELECT_INT"]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Program container + builder for DART ISA instruction streams.
+
+use super::Instr;
+
+/// A flat instruction stream with structured-loop validation.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+}
+
+impl Program {
+    pub fn new(instrs: Vec<Instr>) -> Self {
+        Program { instrs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Validate structural well-formedness: balanced loops, halt last
+    /// (if present), loop counts nonzero.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut depth = 0i32;
+        for (i, ins) in self.instrs.iter().enumerate() {
+            match ins {
+                Instr::CLoop { count } => {
+                    if *count == 0 {
+                        return Err(format!("instr {i}: zero-trip C_LOOP"));
+                    }
+                    depth += 1;
+                }
+                Instr::CEndLoop => {
+                    depth -= 1;
+                    if depth < 0 {
+                        return Err(format!("instr {i}: unmatched C_END_LOOP"));
+                    }
+                }
+                Instr::CHalt if i + 1 != self.instrs.len() => {
+                    return Err(format!("instr {i}: C_HALT not last"));
+                }
+                _ => {}
+            }
+        }
+        if depth != 0 {
+            return Err(format!("{depth} unclosed C_LOOP(s)"));
+        }
+        Ok(())
+    }
+
+    /// Total dynamic instruction count after loop expansion (loops fully
+    /// unrolled). Used by the simulators for progress accounting.
+    pub fn dynamic_len(&self) -> u64 {
+        fn walk(instrs: &[Instr], mut i: usize, end: usize) -> (u64, usize) {
+            let mut count = 0u64;
+            while i < end {
+                match &instrs[i] {
+                    Instr::CLoop { count: trips } => {
+                        // find matching end
+                        let mut depth = 1;
+                        let mut j = i + 1;
+                        while depth > 0 {
+                            match &instrs[j] {
+                                Instr::CLoop { .. } => depth += 1,
+                                Instr::CEndLoop => depth -= 1,
+                                _ => {}
+                            }
+                            j += 1;
+                        }
+                        let (body, _) = walk(instrs, i + 1, j - 1);
+                        count += 2 + body * *trips as u64;
+                        i = j;
+                    }
+                    _ => {
+                        count += 1;
+                        i += 1;
+                    }
+                }
+            }
+            (count, i)
+        }
+        walk(&self.instrs, 0, self.instrs.len()).0
+    }
+
+    /// Instruction histogram by mnemonic (compiler statistics).
+    pub fn histogram(&self) -> Vec<(&'static str, usize)> {
+        let mut map = std::collections::HashMap::new();
+        for ins in &self.instrs {
+            *map.entry(ins.mnemonic()).or_insert(0usize) += 1;
+        }
+        let mut v: Vec<_> = map.into_iter().collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        v
+    }
+}
+
+/// Convenience builder with loop scoping.
+#[derive(Default)]
+pub struct ProgramBuilder {
+    instrs: Vec<Instr>,
+}
+
+impl ProgramBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, ins: Instr) -> &mut Self {
+        self.instrs.push(ins);
+        self
+    }
+
+    /// Emit `C_LOOP count { body } C_END_LOOP`.
+    pub fn repeat<F: FnOnce(&mut Self)>(&mut self, count: u32, body: F) -> &mut Self {
+        if count == 0 {
+            return self;
+        }
+        if count == 1 {
+            body(self);
+            return self;
+        }
+        self.instrs.push(Instr::CLoop { count });
+        body(self);
+        self.instrs.push(Instr::CEndLoop);
+        self
+    }
+
+    pub fn barrier(&mut self) -> &mut Self {
+        self.instrs.push(Instr::CBarrier);
+        self
+    }
+
+    pub fn finish(mut self) -> Program {
+        if !matches!(self.instrs.last(), Some(Instr::CHalt)) {
+            self.instrs.push(Instr::CHalt);
+        }
+        let p = Program::new(self.instrs);
+        debug_assert!(p.validate().is_ok(), "{:?}", p.validate());
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr::*;
+
+    #[test]
+    fn validate_balanced() {
+        let p = Program::new(vec![
+            CLoop { count: 2 },
+            VExpV { dst: 0, src: 0, len: 8 },
+            CEndLoop,
+            CHalt,
+        ]);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_unbalanced() {
+        assert!(Program::new(vec![CEndLoop]).validate().is_err());
+        assert!(Program::new(vec![CLoop { count: 1 }]).validate().is_err());
+        assert!(Program::new(vec![CLoop { count: 0 }, CEndLoop])
+            .validate().is_err());
+        assert!(Program::new(vec![CHalt, CHalt]).validate().is_err());
+    }
+
+    #[test]
+    fn dynamic_len_expands_loops() {
+        let p = Program::new(vec![
+            CLoop { count: 3 },
+            VExpV { dst: 0, src: 0, len: 8 },
+            CLoop { count: 2 },
+            VRedSum { dst: 0, src: 0, len: 8 },
+            CEndLoop,
+            CEndLoop,
+            CHalt,
+        ]);
+        // outer: 2 + 3*(1 + (2 + 2*1)) = 2 + 3*5 = 17; +1 halt
+        assert_eq!(p.dynamic_len(), 18);
+    }
+
+    #[test]
+    fn builder_repeat_one_elides_loop() {
+        let mut b = ProgramBuilder::new();
+        b.repeat(1, |b| { b.push(VExpV { dst: 0, src: 0, len: 4 }); });
+        let p = b.finish();
+        assert_eq!(p.instrs.len(), 2); // body + halt, no loop wrapper
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut b = ProgramBuilder::new();
+        b.push(VExpV { dst: 0, src: 0, len: 4 });
+        b.push(VExpV { dst: 4, src: 4, len: 4 });
+        b.push(VRedSum { dst: 0, src: 0, len: 8 });
+        let h = b.finish().histogram();
+        assert_eq!(h[0], ("V_EXP_V", 2));
+    }
+}

@@ -1,0 +1,354 @@
+//! Blocked-diffusion KV cache manager (paper §2.2, Fig. 4).
+//!
+//! Owns the runtime KV state between PJRT calls and implements the three
+//! strategies' retention/refresh semantics:
+//!
+//! * **None** — nothing retained; every step is a full recompute.
+//! * **Prefix** — after the warm step the cache is truncated to the
+//!   prefix (everything before the active block); refinement steps read
+//!   the prefix slice only.
+//! * **Dual** — the full warm-step cache is retained; refinement steps
+//!   replace the active block's KV in place while the suffix stays
+//!   frozen (stale) until the next block's warm step.
+//!
+//! Storage is optionally MX-quantized with BAOS smoothing — the Rust
+//! `quant` module sits on the real KV path exactly where the hardware's
+//! BAOS + MX quantizer sits before `H_STORE` (Alg. 1 line 5).
+
+use crate::config::CacheMode;
+use crate::quant::{BaosFactors, BaosVariant, MxFormat, MxTensor};
+
+/// Quantization policy for cached KV.
+#[derive(Clone, Copy, Debug)]
+pub struct KvQuantPolicy {
+    pub fmt: MxFormat,
+    pub baos: Option<(BaosVariant, f32)>,
+}
+
+impl KvQuantPolicy {
+    pub fn fp32() -> Self {
+        KvQuantPolicy { fmt: MxFormat::Fp32, baos: None }
+    }
+
+    pub fn mxint4_baos(variant: BaosVariant, alpha: f32) -> Self {
+        KvQuantPolicy { fmt: MxFormat::MxInt4, baos: Some((variant, alpha)) }
+    }
+
+    pub fn mxint4_naive() -> Self {
+        KvQuantPolicy { fmt: MxFormat::MxInt4, baos: None }
+    }
+}
+
+/// One K or V tensor stored quantized: layout [N_L, B, Hkv, S, D]
+/// flattened, quantized along D (innermost).
+struct StoredTensor {
+    data: MxTensor,
+    baos: Option<BaosFactors>,
+}
+
+/// Geometry of the cached tensors.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvShape {
+    pub n_layers: usize,
+    pub batch: usize,
+    pub n_kv_heads: usize,
+    pub seq: usize,
+    pub d_head: usize,
+}
+
+impl KvShape {
+    pub fn numel(&self) -> usize {
+        self.n_layers * self.batch * self.n_kv_heads * self.seq * self.d_head
+    }
+
+    /// Groups for BAOS calibration: factors are per (B, H, 1, D) — the
+    /// layer axis folds into the group axis here (one factor set per
+    /// layer × batch × head).
+    fn baos_groups(&self) -> (usize, usize, usize) {
+        (self.n_layers * self.batch * self.n_kv_heads, self.seq, self.d_head)
+    }
+}
+
+/// The per-request-batch KV cache.
+pub struct KvCache {
+    pub mode: CacheMode,
+    pub policy: KvQuantPolicy,
+    pub shape: Option<KvShape>,
+    k: Option<StoredTensor>,
+    v: Option<StoredTensor>,
+    /// f32 shadows for in-place dual-mode block refresh
+    k_shadow: Vec<f32>,
+    v_shadow: Vec<f32>,
+    /// statistics
+    pub warm_stores: u64,
+    pub block_refreshes: u64,
+}
+
+impl KvCache {
+    pub fn new(mode: CacheMode, policy: KvQuantPolicy) -> Self {
+        KvCache {
+            mode,
+            policy,
+            shape: None,
+            k: None,
+            v: None,
+            k_shadow: Vec::new(),
+            v_shadow: Vec::new(),
+            warm_stores: 0,
+            block_refreshes: 0,
+        }
+    }
+
+    fn store_one(&self, x: &[f32], shape: KvShape) -> StoredTensor {
+        let baos = self.policy.baos.map(|(variant, alpha)| {
+            let (g, s, d) = shape.baos_groups();
+            BaosFactors::calibrate(x, g, s, d, variant, alpha)
+        });
+        let data = match &baos {
+            Some(f) => {
+                let mut y = x.to_vec();
+                f.smooth(&mut y);
+                MxTensor::quantize(&y, self.policy.fmt)
+            }
+            None => MxTensor::quantize(x, self.policy.fmt),
+        };
+        StoredTensor { data, baos }
+    }
+
+    fn load_one(t: &StoredTensor) -> Vec<f32> {
+        let mut y = t.data.dequantize();
+        if let Some(f) = &t.baos {
+            f.unsmooth(&mut y);
+        }
+        y
+    }
+
+    /// Warm step: store the full freshly recomputed KV (both strategies
+    /// begin every generation block this way). This is also the BAOS
+    /// online-calibration point.
+    pub fn store_warm(&mut self, k: &[f32], v: &[f32], shape: KvShape) {
+        assert_eq!(k.len(), shape.numel());
+        assert_eq!(v.len(), shape.numel());
+        if self.mode == CacheMode::None {
+            return; // no cache retained
+        }
+        self.shape = Some(shape);
+        self.k = Some(self.store_one(k, shape));
+        self.v = Some(self.store_one(v, shape));
+        self.k_shadow = Self::load_one(self.k.as_ref().unwrap());
+        self.v_shadow = Self::load_one(self.v.as_ref().unwrap());
+        self.warm_stores += 1;
+    }
+
+    /// Full-cache view for dual-mode refinement (dequantized).
+    pub fn full(&self) -> Option<(&[f32], &[f32])> {
+        if self.k.is_none() {
+            return None;
+        }
+        Some((&self.k_shadow, &self.v_shadow))
+    }
+
+    /// Prefix slice [.., :prefix_len, :] for prefix-mode refinement.
+    pub fn prefix(&self, prefix_len: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        let shape = self.shape?;
+        assert!(prefix_len <= shape.seq);
+        let take = |src: &[f32]| {
+            let mut out = Vec::with_capacity(
+                shape.n_layers * shape.batch * shape.n_kv_heads * prefix_len
+                    * shape.d_head);
+            let groups = shape.n_layers * shape.batch * shape.n_kv_heads;
+            for g in 0..groups {
+                let base = g * shape.seq * shape.d_head;
+                out.extend_from_slice(
+                    &src[base..base + prefix_len * shape.d_head]);
+            }
+            out
+        };
+        Some((take(&self.k_shadow), take(&self.v_shadow)))
+    }
+
+    /// Dual-mode in-place refresh: replace the active block's KV
+    /// ([.., block_start..block_start+block_len, :]) with freshly
+    /// computed values, re-quantizing through the *warm-step* BAOS
+    /// factors (§4.4.1: factors are stable within a block and reused).
+    pub fn refresh_block(&mut self, k_act: &[f32], v_act: &[f32],
+                         block_start: usize, block_len: usize) {
+        let shape = self.shape.expect("refresh before warm store");
+        let groups = shape.n_layers * shape.batch * shape.n_kv_heads;
+        assert_eq!(k_act.len(), groups * block_len * shape.d_head);
+
+        let requant = |x_act: &[f32], stored: &StoredTensor,
+                       shadow: &mut [f32]| {
+            // fake-quant the active slice through stored factors + format
+            let q = match &stored.baos {
+                Some(f) => {
+                    // factors are per-channel (independent of S), so they
+                    // apply to the active slice directly
+                    let mut y = x_act.to_vec();
+                    f.smooth(&mut y);
+                    let mut q = crate::quant::fake_quant(&y, stored.data.fmt);
+                    f.unsmooth(&mut q);
+                    q
+                }
+                None => crate::quant::fake_quant(x_act, stored.data.fmt),
+            };
+            for g in 0..groups {
+                let src = g * block_len * shape.d_head;
+                let dst = (g * shape.seq + block_start) * shape.d_head;
+                shadow[dst..dst + block_len * shape.d_head]
+                    .copy_from_slice(&q[src..src + block_len * shape.d_head]);
+            }
+        };
+        // take the shadows out to keep borrows disjoint
+        let mut k_shadow = std::mem::take(&mut self.k_shadow);
+        requant(k_act, self.k.as_ref().expect("no cache"), &mut k_shadow);
+        self.k_shadow = k_shadow;
+        let mut v_shadow = std::mem::take(&mut self.v_shadow);
+        requant(v_act, self.v.as_ref().expect("no cache"), &mut v_shadow);
+        self.v_shadow = v_shadow;
+        self.block_refreshes += 1;
+    }
+
+    /// Packed cache footprint in bytes under the current policy.
+    pub fn packed_bytes(&self) -> u64 {
+        match (&self.k, &self.v) {
+            (Some(k), Some(v)) => k.data.packed_bytes() + v.data.packed_bytes(),
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn shape() -> KvShape {
+        KvShape { n_layers: 2, batch: 1, n_kv_heads: 2, seq: 16, d_head: 32 }
+    }
+
+    fn rand_kv(seed: u64, shape: KvShape) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = SplitMix64::new(seed);
+        (rng.normal_vec(shape.numel(), 1.0), rng.normal_vec(shape.numel(), 1.0))
+    }
+
+    #[test]
+    fn none_mode_retains_nothing() {
+        let mut c = KvCache::new(CacheMode::None, KvQuantPolicy::fp32());
+        let s = shape();
+        let (k, v) = rand_kv(0, s);
+        c.store_warm(&k, &v, s);
+        assert!(c.full().is_none());
+        assert_eq!(c.packed_bytes(), 0);
+    }
+
+    #[test]
+    fn fp32_roundtrip_exact() {
+        let mut c = KvCache::new(CacheMode::Dual, KvQuantPolicy::fp32());
+        let s = shape();
+        let (k, v) = rand_kv(1, s);
+        c.store_warm(&k, &v, s);
+        let (kk, vv) = c.full().unwrap();
+        assert_eq!(kk, &k[..]);
+        assert_eq!(vv, &v[..]);
+    }
+
+    #[test]
+    fn mxint4_bounded_error_and_baos_better() {
+        let s = shape();
+        let (mut k, v) = rand_kv(2, s);
+        // inject channel outliers
+        for (i, val) in k.iter_mut().enumerate() {
+            if i % s.d_head == 3 {
+                *val = *val * 14.0 + 3.0;
+            }
+        }
+        let err = |policy: KvQuantPolicy| {
+            let mut c = KvCache::new(CacheMode::Dual, policy);
+            c.store_warm(&k, &v, s);
+            let (kk, _) = c.full().unwrap();
+            k.iter().zip(kk).map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>().sqrt()
+        };
+        let naive = err(KvQuantPolicy::mxint4_naive());
+        let baos = err(KvQuantPolicy::mxint4_baos(BaosVariant::Mean, 1.0));
+        assert!(baos < naive, "baos {baos} !< naive {naive}");
+    }
+
+    #[test]
+    fn prefix_slice_matches() {
+        let mut c = KvCache::new(CacheMode::Prefix, KvQuantPolicy::fp32());
+        let s = shape();
+        let (k, v) = rand_kv(3, s);
+        c.store_warm(&k, &v, s);
+        let (kp, _vp) = c.prefix(4).unwrap();
+        // check first group's slice
+        assert_eq!(&kp[..4 * s.d_head], &k[..4 * s.d_head]);
+        // second group starts at seq*d_head in source, 4*d_head in dest
+        assert_eq!(&kp[4 * s.d_head..8 * s.d_head],
+                   &k[s.seq * s.d_head..s.seq * s.d_head + 4 * s.d_head]);
+        assert_eq!(kp.len(), s.n_layers * s.batch * s.n_kv_heads * 4 * s.d_head);
+    }
+
+    #[test]
+    fn dual_refresh_in_place() {
+        let mut c = KvCache::new(CacheMode::Dual, KvQuantPolicy::fp32());
+        let s = shape();
+        let (k, v) = rand_kv(4, s);
+        c.store_warm(&k, &v, s);
+        let groups = s.n_layers * s.batch * s.n_kv_heads;
+        let block_start = 8;
+        let block_len = 4;
+        let k_act = vec![9.0f32; groups * block_len * s.d_head];
+        let v_act = vec![-9.0f32; groups * block_len * s.d_head];
+        c.refresh_block(&k_act, &v_act, block_start, block_len);
+        let (kk, vv) = c.full().unwrap();
+        // active block replaced
+        let dst = block_start * s.d_head;
+        assert_eq!(kk[dst], 9.0);
+        assert_eq!(vv[dst], -9.0);
+        // prefix and suffix untouched (frozen/stale)
+        assert_eq!(kk[0], k[0]);
+        let suffix = (block_start + block_len) * s.d_head;
+        assert_eq!(kk[suffix], k[suffix]);
+        assert_eq!(c.block_refreshes, 1);
+    }
+
+    #[test]
+    fn baos_factors_reused_on_refresh() {
+        let s = shape();
+        let (mut k, v) = rand_kv(5, s);
+        for (i, val) in k.iter_mut().enumerate() {
+            if i % s.d_head == 7 {
+                *val *= 12.0;
+            }
+        }
+        let mut c = KvCache::new(CacheMode::Dual,
+                                 KvQuantPolicy::mxint4_baos(BaosVariant::Mean, 1.0));
+        c.store_warm(&k, &v, s);
+        let groups = s.n_layers * s.batch * s.n_kv_heads;
+        let k_act = vec![1.0f32; groups * 4 * s.d_head];
+        c.refresh_block(&k_act.clone(), &k_act, 0, 4);
+        let (kk, _) = c.full().unwrap();
+        assert!(kk.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn packed_bytes_shrink_with_format() {
+        let s = shape();
+        let (k, v) = rand_kv(6, s);
+        let bytes = |fmt| {
+            let mut c = KvCache::new(CacheMode::Dual,
+                                     KvQuantPolicy { fmt, baos: None });
+            c.store_warm(&k, &v, s);
+            c.packed_bytes()
+        };
+        let b4 = bytes(MxFormat::MxInt4);
+        let b8 = bytes(MxFormat::MxInt8);
+        let b16 = bytes(MxFormat::Bf16);
+        assert!(b4 < b8 && b8 < b16);
+        // 4-bit ≈ 4.25/16 of bf16
+        let ratio = b4 as f64 / b16 as f64;
+        assert!(ratio < 0.28, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,45 @@
+//! # DART — an NPU stack for Diffusion-LLM inference
+//!
+//! Rust reproduction of *"NPU Design for Diffusion Language Model
+//! Inference"* (DART): the first configurable NPU platform for dLLM
+//! inference. This crate is Layer 3 of the three-layer stack described in
+//! `DESIGN.md`:
+//!
+//! * [`isa`] / [`compiler`] — the dLLM-oriented ISA and the model→ISA
+//!   compiler (paper §3.1.3, Table 1, Algorithms 1–2);
+//! * [`sim`] — the tri-path simulation framework: analytical roofline,
+//!   transaction-level cycle-accurate, and RTL-reference pipeline models
+//!   (paper §4.1–§4.2, §5);
+//! * [`hbm`] / [`mem`] — the HBM2e DRAM model and the decoupled
+//!   three-domain on-chip SRAM hierarchy (paper §3.2.2, §5.1);
+//! * [`sampling`] — the Vector-Scalar sampling engine golden model:
+//!   Stable-Max decomposition, streaming top-k, masked integer update
+//!   (paper §3.2);
+//! * [`quant`] / [`kvcache`] — bit-exact MX formats, BAOS online
+//!   smoothing, and the blocked-diffusion KV cache manager
+//!   (paper §2.2, §3.1.1, §4.4);
+//! * [`runtime`] / [`coordinator`] — the PJRT artifact runtime and the
+//!   serving coordinator that executes real blocked-diffusion generation
+//!   end-to-end with python never on the request path;
+//! * [`gpu`] — analytical A6000/H100 baselines for Table 6 / Fig. 9.
+//!
+//! Substrates ([`cli`], [`stats`], [`report`], [`util`]) are built from
+//! scratch because the offline crate registry lacks clap/criterion/serde
+//! (DESIGN.md substitution S7).
+
+pub mod cli;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod gpu;
+pub mod hbm;
+pub mod isa;
+pub mod kvcache;
+pub mod mem;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sampling;
+pub mod sim;
+pub mod stats;
+pub mod util;

@@ -1,0 +1,264 @@
+//! `dart` — the DART NPU stack CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   serve      run the serving coordinator on a synthetic request stream
+//!   generate   one blocked-diffusion generation through the PJRT model
+//!   simulate   analytical simulation of a paper workload
+//!   sweep      Fig. 9-style design-space sweep
+//!   hbm        Table 2 HBM bandwidth validation
+//!   asm        assemble/disassemble DART ISA files
+//!   area       7nm area/power report for a hardware config
+
+use dart::cli::Args;
+use dart::config::{CacheMode, HwConfig, ModelArch, Workload};
+use dart::coordinator::{Coordinator, EngineConfig};
+use dart::gpu::GpuSpec;
+use dart::kvcache::KvQuantPolicy;
+use dart::quant::BaosVariant;
+use dart::report::{self, Table};
+use dart::sampling::SamplePrecision;
+use dart::sim::analytical::{AnalyticalSim, PrecisionConfig};
+use dart::util::SplitMix64;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("hbm") => cmd_hbm(&args),
+        Some("asm") => cmd_asm(&args),
+        Some("area") => cmd_area(&args),
+        _ => {
+            eprintln!("usage: dart <serve|generate|simulate|sweep|hbm|asm|area> [flags]");
+            eprintln!("  serve     --requests N --cache MODE --kv POLICY");
+            eprintln!("  generate  --cache MODE --batch B");
+            eprintln!("  simulate  --model llada8b|moe --cache MODE");
+            eprintln!("  sweep     --model llada8b|moe");
+            eprintln!("  hbm       --stacks 2|4 --fidelity ideal|physical");
+            eprintln!("  asm       <file.asm> [--encode out.bin]");
+            eprintln!("  area      --blen N --mlen N --vlen N --grid N");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn hw_from(args: &Args) -> HwConfig {
+    let mut hw = HwConfig::dart_default();
+    hw.blen = args.get_usize("blen", hw.blen as usize) as u32;
+    hw.mlen = args.get_usize("mlen", hw.mlen as usize) as u32;
+    hw.vlen = args.get_usize("vlen", hw.vlen as usize) as u32;
+    hw.grid = args.get_usize("grid", hw.grid as usize) as u32;
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).expect("config file");
+        let doc = dart::config::parse_config(&text).expect("config parse");
+        dart::config::apply_hw_overrides(&doc, &mut hw);
+    }
+    hw
+}
+
+fn cache_from(args: &Args) -> CacheMode {
+    CacheMode::parse(args.get_or("cache", "dual")).expect("bad --cache")
+}
+
+fn model_from(args: &Args) -> ModelArch {
+    match args.get_or("model", "llada8b") {
+        "llada8b" => ModelArch::llada_8b(),
+        "moe" => ModelArch::llada_moe_7b(),
+        "tiny" => ModelArch::tiny(),
+        other => panic!("unknown model {other:?}"),
+    }
+}
+
+fn kv_policy_from(args: &Args) -> KvQuantPolicy {
+    match args.get_or("kv", "fp32") {
+        "fp32" => KvQuantPolicy::fp32(),
+        "mxint4" => KvQuantPolicy::mxint4_naive(),
+        "baos" => KvQuantPolicy::mxint4_baos(BaosVariant::Mean, 1.0),
+        other => panic!("unknown kv policy {other:?}"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let Some(dir) = dart::runtime::artifacts_dir() else {
+        eprintln!("artifacts not built: run `make artifacts`");
+        return 1;
+    };
+    let n = args.get_usize("requests", 16);
+    let cfg = EngineConfig {
+        cache: cache_from(args),
+        kv_policy: kv_policy_from(args),
+        sample_precision: SamplePrecision::parse(
+            args.get_or("sampling", "fp32")).expect("bad --sampling"),
+        v_chunk: args.get_usize("v-chunk", 128),
+    };
+    println!("starting coordinator ({:?}) ...", cfg.cache);
+    let coord = Coordinator::start(&dir, cfg, None).expect("coordinator");
+    let mut rng = SplitMix64::new(42);
+    let prompt_len = 16; // tiny-model geometry
+    let handles: Vec<_> = (0..n).map(|_| {
+        let prompt: Vec<i32> = (0..prompt_len)
+            .map(|_| rng.range(4, 52) as i32).collect();
+        coord.submit(prompt)
+    }).collect();
+    for (i, h) in handles.iter().enumerate() {
+        match h.recv() {
+            Ok(r) => println!("req {i:3}: latency {:.1} ms, {} tokens",
+                              r.latency_s * 1e3, r.tokens.len()),
+            Err(_) => println!("req {i:3}: dropped"),
+        }
+    }
+    let metrics = coord.shutdown();
+    println!("\n{}", metrics.report());
+    0
+}
+
+fn cmd_generate(args: &Args) -> i32 {
+    let Some(dir) = dart::runtime::artifacts_dir() else {
+        eprintln!("artifacts not built: run `make artifacts`");
+        return 1;
+    };
+    let ex = dart::runtime::Executor::load(&dir).expect("load artifacts");
+    let g = ex.manifest.geometry;
+    let mut eng = dart::coordinator::GenerationEngine::new(ex, EngineConfig {
+        cache: cache_from(args),
+        kv_policy: kv_policy_from(args),
+        ..EngineConfig::default()
+    });
+    let b = args.get_usize("batch", 1);
+    let mut rng = SplitMix64::new(7);
+    let prompts: Vec<Vec<i32>> = (0..b).map(|_| {
+        (0..g.prompt_len).map(|_| rng.range(4, 52) as i32).collect()
+    }).collect();
+    let r = eng.generate(&prompts).expect("generate");
+    for row in &r.tokens {
+        println!("{row:?}");
+    }
+    println!("model {:.1} ms  sampling {:.1} ms ({:.1}%)  steps {}",
+             r.model_s * 1e3, r.sampling_s * 1e3,
+             r.sampling_frac() * 100.0, r.steps);
+    0
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let hw = hw_from(args);
+    let w = Workload::paper_reference(model_from(args), cache_from(args));
+    let sim = AnalyticalSim::new(hw, PrecisionConfig::dart_full_quant());
+    let r = sim.run(&w);
+    let a6000 = GpuSpec::a6000().run(&w, SamplePrecision::Bf16);
+    let h100 = GpuSpec::h100().run(&w, SamplePrecision::Bf16);
+    let mut t = Table::new(
+        &format!("{} / {}", w.model.name, w.cache.name()),
+        &["device", "total(s)", "TPS", "samp%", "tok/J", "TPSxA6000"]);
+    t.row(&["A6000".into(), report::f2(a6000.total_s),
+            report::f1(a6000.tps), report::pct(a6000.sampling_frac),
+            report::f3(a6000.tok_per_j), "x1.00".into()]);
+    t.row(&["H100".into(), report::f2(h100.total_s), report::f1(h100.tps),
+            report::pct(h100.sampling_frac), report::f3(h100.tok_per_j),
+            report::speedup(h100.tps / a6000.tps)]);
+    t.row(&["DART".into(), report::f2(r.total_s), report::f1(r.tps),
+            report::pct(r.sampling_frac), report::f3(r.tok_per_j),
+            report::speedup(r.tps / a6000.tps)]);
+    t.print();
+    0
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let model = model_from(args);
+    let mut t = Table::new("design-space sweep (Fig. 9 shape)",
+                           &["cache", "VLEN", "MLEN", "BLEN", "TPS", "tok/J"]);
+    for cache in CacheMode::ALL {
+        let w = Workload::paper_reference(model.clone(), cache);
+        for vlen in [256u32, 512, 1024, 2048] {
+            for mlen in [256u32, 512, 1024] {
+                for blen in [4u32, 16, 64] {
+                    if mlen < blen {
+                        continue;
+                    }
+                    let hw = HwConfig::dart_default().with_dims(blen, mlen, vlen);
+                    let sim = AnalyticalSim::new(
+                        hw, PrecisionConfig::dart_full_quant());
+                    let r = sim.run(&w);
+                    t.row(&[cache.name().into(), vlen.to_string(),
+                            mlen.to_string(), blen.to_string(),
+                            report::f1(r.tps), report::f3(r.tok_per_j)]);
+                }
+            }
+        }
+    }
+    if args.has("csv") {
+        println!("{}", t.to_csv());
+    } else {
+        t.print();
+    }
+    0
+}
+
+fn cmd_hbm(args: &Args) -> i32 {
+    use dart::config::HbmSpec;
+    use dart::hbm::{Fidelity, HbmModel};
+    let spec = if args.get_usize("stacks", 2) == 4 {
+        HbmSpec::hbm2e_4stack()
+    } else {
+        HbmSpec::hbm2e_2stack()
+    };
+    let fid = if args.get_or("fidelity", "ideal") == "physical" {
+        Fidelity::PhysicalProxy
+    } else {
+        Fidelity::Ideal
+    };
+    let mut m = HbmModel::new(spec, fid);
+    let bytes = 64 << 20;
+    let w = m.stream_bandwidth(bytes, true);
+    let r = m.stream_bandwidth(bytes, false);
+    println!("spec peak {} GB/s", report::gbs(spec.peak_bw()));
+    println!("write {} GB/s ({:.1}%)  read {} GB/s ({:.1}%)",
+             report::gbs(w.bytes_per_sec),
+             100.0 * w.bytes_per_sec / spec.peak_bw(),
+             report::gbs(r.bytes_per_sec),
+             100.0 * r.bytes_per_sec / spec.peak_bw());
+    0
+}
+
+fn cmd_asm(args: &Args) -> i32 {
+    let Some(path) = args.positional.first() else {
+        eprintln!("usage: dart asm <file.asm> [--encode out.bin]");
+        return 2;
+    };
+    let text = std::fs::read_to_string(path).expect("read asm");
+    match dart::isa::asm::assemble(&text) {
+        Ok(prog) => {
+            if let Err(e) = prog.validate() {
+                eprintln!("invalid program: {e}");
+                return 1;
+            }
+            println!("{} instructions ({} dynamic)", prog.len(),
+                     prog.dynamic_len());
+            for (mn, count) in prog.histogram() {
+                println!("  {mn:<16} {count}");
+            }
+            if let Some(out) = args.get("encode") {
+                let blob = dart::isa::encode::encode_program(&prog);
+                std::fs::write(out, &blob).expect("write binary");
+                println!("encoded {} bytes to {out}", blob.len());
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cmd_area(args: &Args) -> i32 {
+    let hw = hw_from(args);
+    let a = dart::sim::power::area(&hw);
+    println!("PEs {}  compute {:.3} mm²  SRAM {:.3} mm²  total {:.3} mm²",
+             hw.total_pes(), a.compute_mm2, a.sram_mm2, a.total_mm2);
+    println!("{:.2} TOPS  {:.2} TOPS/mm² (incl. SRAM)  {:.2} TOPS/mm² (compute)",
+             a.tops, a.tops_per_mm2, a.tops / a.compute_mm2);
+    0
+}

@@ -1,0 +1,253 @@
+//! Decoupled mixed-precision on-chip memory hierarchy (paper §3.2.2).
+//!
+//! Three physically isolated domains serve the sampling engine —
+//! **Vector SRAM** (logit chunks + in-place exp_shifted values),
+//! **FP SRAM** (per-position confidence scalars), **Int SRAM** (token
+//! ids + boolean masks) — plus the **Matrix SRAM** holding weight/KV
+//! tiles for the Transformer Engine. Physical isolation removes
+//! address-decoder contention between the transformer and sampling
+//! stages; the footprint equations (Eq. 4–6) size each domain.
+
+use crate::config::HwConfig;
+
+/// SRAM domain identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Domain {
+    Vector,
+    Fp,
+    Int,
+    Matrix,
+}
+
+impl Domain {
+    pub const ALL: [Domain; 4] =
+        [Domain::Vector, Domain::Fp, Domain::Int, Domain::Matrix];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::Vector => "vector",
+            Domain::Fp => "fp",
+            Domain::Int => "int",
+            Domain::Matrix => "matrix",
+        }
+    }
+}
+
+/// Eq. 4: Vector SRAM elements for the sampling stage.
+/// `r` is the per-iteration preload depth in performance mode
+/// (R blocks of V logits resident; edge mode streams V_chunk).
+pub fn vector_elements(b: u64, l: u64, v: u64, v_chunk: u64, r: u64) -> u64 {
+    if v_chunk < v {
+        3 * b * l + v_chunk
+    } else {
+        3 * b * l + v * l * r
+    }
+}
+
+/// Eq. 5: FP SRAM elements (confidence scalars + transcendental temps).
+pub fn fp_elements(l: u64, vlen: u64) -> u64 {
+    l.max(vlen)
+}
+
+/// Eq. 6: Int SRAM elements (token indices + boolean transfer masks).
+pub fn int_elements(b: u64, l: u64) -> u64 {
+    2 * b * l
+}
+
+/// Byte widths per element (BF16 vector/fp data, i32 tokens).
+pub const VECTOR_ELEM_BYTES: u64 = 2;
+pub const FP_ELEM_BYTES: u64 = 2;
+pub const INT_ELEM_BYTES: u64 = 4;
+
+/// Sampling-stage SRAM footprint report (the bottom insets of Fig. 7).
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingFootprint {
+    pub vector_bytes: u64,
+    pub fp_bytes: u64,
+    pub int_bytes: u64,
+}
+
+impl SamplingFootprint {
+    pub fn compute(b: u64, l: u64, v: u64, v_chunk: u64, r: u64, vlen: u64)
+                   -> Self {
+        SamplingFootprint {
+            vector_bytes: vector_elements(b, l, v, v_chunk, r) * VECTOR_ELEM_BYTES,
+            fp_bytes: fp_elements(l, vlen) * FP_ELEM_BYTES,
+            int_bytes: int_elements(b, l) * INT_ELEM_BYTES,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.vector_bytes + self.fp_bytes + self.int_bytes
+    }
+
+    /// Does this configuration fit the hardware's SRAM domains?
+    pub fn fits(&self, hw: &HwConfig) -> bool {
+        self.vector_bytes <= hw.vector_sram
+            && self.fp_bytes <= hw.fp_sram
+            && self.int_bytes <= hw.int_sram
+    }
+}
+
+/// Functional SRAM state for the cycle-accurate simulator: the four
+/// domains as element arrays (f32 for Vector/FP/Matrix, i32 for Int),
+/// with bounds-checked accessors that model the address decoders.
+#[derive(Clone, Debug)]
+pub struct SramState {
+    pub vector: Vec<f32>,
+    pub fp: Vec<f32>,
+    pub int: Vec<i32>,
+    pub matrix: Vec<f32>,
+}
+
+impl SramState {
+    pub fn new(hw: &HwConfig) -> Self {
+        // element capacities follow the byte capacities at f32/i32 grain
+        // (the simulator holds full-precision shadows; byte-accurate
+        // capacity checks use the *_ELEM_BYTES constants above)
+        SramState {
+            vector: vec![0.0; (hw.vector_sram / 4) as usize],
+            fp: vec![0.0; (hw.fp_sram / 4) as usize],
+            int: vec![0; (hw.int_sram / 4) as usize],
+            matrix: vec![0.0; (hw.matrix_sram / 4) as usize],
+        }
+    }
+
+    pub fn with_elements(vector: usize, fp: usize, int: usize, matrix: usize)
+                         -> Self {
+        SramState {
+            vector: vec![0.0; vector],
+            fp: vec![0.0; fp],
+            int: vec![0; int],
+            matrix: vec![0.0; matrix],
+        }
+    }
+
+    pub fn v(&self, addr: u32, len: u32) -> &[f32] {
+        &self.vector[addr as usize..(addr + len) as usize]
+    }
+
+    pub fn v_mut(&mut self, addr: u32, len: u32) -> &mut [f32] {
+        &mut self.vector[addr as usize..(addr + len) as usize]
+    }
+
+    pub fn m(&self, addr: u32, len: u32) -> &[f32] {
+        &self.matrix[addr as usize..(addr + len) as usize]
+    }
+
+    pub fn m_mut(&mut self, addr: u32, len: u32) -> &mut [f32] {
+        &mut self.matrix[addr as usize..(addr + len) as usize]
+    }
+
+    pub fn i(&self, addr: u32, len: u32) -> &[i32] {
+        &self.int[addr as usize..(addr + len) as usize]
+    }
+
+    pub fn i_mut(&mut self, addr: u32, len: u32) -> &mut [i32] {
+        &mut self.int[addr as usize..(addr + len) as usize]
+    }
+}
+
+/// Prefetch engine bookkeeping: background HBM→SRAM transfers that
+/// complete at a future cycle (overlap modeled by the cycle simulator).
+#[derive(Clone, Debug, Default)]
+pub struct PrefetchEngine {
+    /// (destination domain, addr, len, finish_cycle)
+    outstanding: Vec<(Domain, u32, u32, u64)>,
+}
+
+impl PrefetchEngine {
+    pub fn issue(&mut self, domain: Domain, addr: u32, len: u32, finish: u64) {
+        self.outstanding.push((domain, addr, len, finish));
+    }
+
+    /// Earliest cycle at which a read of [addr, addr+len) in `domain` is
+    /// safe (all overlapping outstanding transfers complete).
+    pub fn ready_at(&self, domain: Domain, addr: u32, len: u32) -> u64 {
+        self.outstanding
+            .iter()
+            .filter(|(d, a, l, _)| {
+                *d == domain && *a < addr + len && addr < *a + *l
+            })
+            .map(|&(_, _, _, f)| f)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// All outstanding transfers complete (C_BARRIER semantics).
+    pub fn drain_at(&self) -> u64 {
+        self.outstanding.iter().map(|&(_, _, _, f)| f).max().unwrap_or(0)
+    }
+
+    pub fn retire(&mut self, now: u64) {
+        self.outstanding.retain(|&(_, _, _, f)| f > now);
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.outstanding.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq4_edge_vs_performance() {
+        // edge mode: V_chunk < V
+        assert_eq!(vector_elements(2, 64, 128_000, 128, 1), 3 * 2 * 64 + 128);
+        // performance mode: full-V preload with R resident blocks
+        assert_eq!(vector_elements(2, 64, 2048, 2048, 1),
+                   3 * 2 * 64 + 2048 * 64);
+    }
+
+    #[test]
+    fn eq5_eq6() {
+        assert_eq!(fp_elements(64, 128), 128);
+        assert_eq!(fp_elements(256, 64), 256);
+        assert_eq!(int_elements(16, 32), 1024);
+    }
+
+    #[test]
+    fn footprint_dominated_by_b_and_vchunk() {
+        // paper Fig. 7 inset observation: T and V don't move the footprint
+        let f1 = SamplingFootprint::compute(2, 64, 2_000, 128, 1, 64);
+        let f2 = SamplingFootprint::compute(2, 64, 128_000, 128, 1, 64);
+        assert_eq!(f1.total(), f2.total());
+        let f4 = SamplingFootprint::compute(4, 64, 2_000, 128, 1, 64);
+        assert!(f4.total() > f1.total());
+        let fc = SamplingFootprint::compute(2, 64, 128_000, 4096, 1, 64);
+        assert!(fc.vector_bytes > f1.vector_bytes);
+    }
+
+    #[test]
+    fn fits_checks_domains() {
+        let hw = crate::config::HwConfig::dart_edge();
+        let ok = SamplingFootprint::compute(2, 64, 128_000, 128, 1, 64);
+        assert!(ok.fits(&hw));
+        let too_big = SamplingFootprint::compute(512, 64, 128_000, 128_000, 8, 64);
+        assert!(!too_big.fits(&hw));
+    }
+
+    #[test]
+    fn sram_state_roundtrip() {
+        let mut s = SramState::with_elements(64, 8, 8, 64);
+        s.v_mut(4, 4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.v(4, 4), &[1.0, 2.0, 3.0, 4.0]);
+        s.i_mut(0, 2).copy_from_slice(&[7, -9]);
+        assert_eq!(s.i(0, 2), &[7, -9]);
+    }
+
+    #[test]
+    fn prefetch_overlap_detection() {
+        let mut p = PrefetchEngine::default();
+        p.issue(Domain::Vector, 0, 128, 100);
+        p.issue(Domain::Matrix, 0, 64, 50);
+        assert_eq!(p.ready_at(Domain::Vector, 64, 32), 100); // overlaps
+        assert_eq!(p.ready_at(Domain::Vector, 128, 32), 0);  // disjoint
+        assert_eq!(p.ready_at(Domain::Matrix, 32, 8), 50);
+        assert_eq!(p.drain_at(), 100);
+        p.retire(60);
+        assert_eq!(p.in_flight(), 1);
+    }
+}

@@ -1,0 +1,215 @@
+//! BAOS — Block-Adaptive Online Smoothing on the runtime KV path
+//! (paper §4.4, Fig. 8).
+//!
+//! At each generation block's warm step the coordinator calls
+//! [`BaosFactors::calibrate`] on the freshly recomputed KV tensor
+//! ([B, H, S, D] innermost-contiguous); the per-channel (c, f) factors of
+//! shape (B, H, 1, D) are then reused by [`BaosFactors::smooth`] /
+//! [`BaosFactors::unsmooth`] for every refinement step of that block —
+//! zero-overhead online calibration with no offline data.
+
+use super::{fake_quant, MxFormat};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaosVariant {
+    /// temporal-mean center (paper Eq. 8, ᾱ rows of Table 5)
+    Mean,
+    /// midpoint center (α̂ rows)
+    MinMax,
+}
+
+impl BaosVariant {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mean" => Some(BaosVariant::Mean),
+            "minmax" => Some(BaosVariant::MinMax),
+            _ => None,
+        }
+    }
+}
+
+/// Per-channel smoothing factors for one KV tensor.
+#[derive(Clone, Debug)]
+pub struct BaosFactors {
+    pub variant: BaosVariant,
+    pub alpha: f32,
+    /// channels = B*H*D entries laid out as [B][H][D]
+    pub center: Vec<f32>,
+    pub scale: Vec<f32>,
+    pub dims: (usize, usize, usize), // (B*H, S, D) at calibration time
+}
+
+const EPS: f32 = 1e-6;
+
+impl BaosFactors {
+    /// Calibrate from a warm-step tensor `x` with layout [G, S, D]
+    /// (G = B*H groups, innermost-contiguous D). Matches
+    /// quantlib.baos.BaosState._factors.
+    pub fn calibrate(x: &[f32], g: usize, s: usize, d: usize,
+                     variant: BaosVariant, alpha: f32) -> Self {
+        assert_eq!(x.len(), g * s * d);
+        let mut center = vec![0f32; g * d];
+        let mut scale = vec![0f32; g * d];
+        for gi in 0..g {
+            for di in 0..d {
+                let mut xmin = f32::INFINITY;
+                let mut xmax = f32::NEG_INFINITY;
+                let mut sum = 0f64;
+                for si in 0..s {
+                    let v = x[(gi * s + si) * d + di];
+                    xmin = xmin.min(v);
+                    xmax = xmax.max(v);
+                    sum += v as f64;
+                }
+                let c = match variant {
+                    BaosVariant::Mean => (sum / s as f64) as f32,
+                    BaosVariant::MinMax => 0.5 * (xmin + xmax),
+                };
+                let f = (xmax - c).max(c - xmin).max(EPS).powf(alpha);
+                center[gi * d + di] = c;
+                scale[gi * d + di] = f;
+            }
+        }
+        BaosFactors { variant, alpha, center, scale, dims: (g, s, d) }
+    }
+
+    /// (x - c) / f, in place; x layout [G, S', D] for any S'.
+    pub fn smooth(&self, x: &mut [f32]) {
+        let (g, _, d) = self.dims;
+        let s = x.len() / (g * d);
+        assert_eq!(x.len(), g * s * d);
+        for gi in 0..g {
+            for si in 0..s {
+                let base = (gi * s + si) * d;
+                for di in 0..d {
+                    let ch = gi * d + di;
+                    x[base + di] = (x[base + di] - self.center[ch]) / self.scale[ch];
+                }
+            }
+        }
+    }
+
+    /// x * f + c, in place.
+    pub fn unsmooth(&self, x: &mut [f32]) {
+        let (g, _, d) = self.dims;
+        let s = x.len() / (g * d);
+        assert_eq!(x.len(), g * s * d);
+        for gi in 0..g {
+            for si in 0..s {
+                let base = (gi * s + si) * d;
+                for di in 0..d {
+                    let ch = gi * d + di;
+                    x[base + di] = x[base + di] * self.scale[ch] + self.center[ch];
+                }
+            }
+        }
+    }
+
+    /// Smoothed fake-quant round trip (the accuracy-path composite).
+    pub fn fake_quant(&self, x: &[f32], fmt: MxFormat) -> Vec<f32> {
+        let mut y = x.to_vec();
+        self.smooth(&mut y);
+        let mut q = fake_quant(&y, fmt);
+        self.unsmooth(&mut q);
+        q
+    }
+}
+
+/// L2 error of plain vs BAOS-smoothed quantization — the DSE metric the
+/// kv_quant_demo example reports per layer.
+pub fn smoothing_gain(x: &[f32], g: usize, s: usize, d: usize,
+                      fmt: MxFormat, variant: BaosVariant, alpha: f32)
+                      -> (f64, f64) {
+    let naive = fake_quant(x, fmt);
+    let f = BaosFactors::calibrate(x, g, s, d, variant, alpha);
+    let smoothed = f.fake_quant(x, fmt);
+    let err = |q: &[f32]| {
+        x.iter().zip(q).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt()
+    };
+    (err(&naive), err(&smoothed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn outlier_tensor(g: usize, s: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        let mut x = rng.normal_vec(g * s * d, 1.0);
+        for (i, v) in x.iter_mut().enumerate() {
+            if i % d == 3 {
+                *v = *v * 15.0 + 4.0; // outlier channel, as profiled in §4.4
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn smooth_unsmooth_roundtrip_lossless() {
+        let x = outlier_tensor(4, 8, 32, 0);
+        let f = BaosFactors::calibrate(&x, 4, 8, 32, BaosVariant::Mean, 0.9);
+        let mut y = x.clone();
+        f.smooth(&mut y);
+        f.unsmooth(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn baos_beats_naive_on_outliers() {
+        let x = outlier_tensor(2, 16, 32, 1);
+        let (naive, smoothed) = smoothing_gain(
+            &x, 2, 16, 32, MxFormat::MxInt4, BaosVariant::Mean, 1.0);
+        assert!(smoothed < naive, "baos {smoothed} !< naive {naive}");
+    }
+
+    #[test]
+    fn minmax_centers_at_midpoint() {
+        // single group, S=2 with values {0, 10} per channel
+        let x = vec![0f32, 10.0].repeat(32);
+        // layout [1, 2, 32]: first S row all 0s, second all 10s
+        let mut xs = vec![0f32; 64];
+        xs[32..].fill(10.0);
+        let f = BaosFactors::calibrate(&xs, 1, 2, 32, BaosVariant::MinMax, 1.0);
+        assert!(f.center.iter().all(|&c| (c - 5.0).abs() < 1e-6));
+        assert!(f.scale.iter().all(|&s| (s - 5.0).abs() < 1e-6));
+        let _ = x;
+    }
+
+    #[test]
+    fn alpha_compresses_factor_range() {
+        let x = outlier_tensor(1, 16, 32, 2);
+        let f1 = BaosFactors::calibrate(&x, 1, 16, 32, BaosVariant::Mean, 1.0);
+        let f6 = BaosFactors::calibrate(&x, 1, 16, 32, BaosVariant::Mean, 0.6);
+        let range = |f: &BaosFactors| {
+            let mx = f.scale.iter().cloned().fold(0f32, f32::max);
+            let mn = f.scale.iter().cloned().fold(f32::INFINITY, f32::min);
+            mx / mn
+        };
+        assert!(range(&f6) < range(&f1));
+    }
+
+    #[test]
+    fn factors_reused_across_steps() {
+        let x = outlier_tensor(2, 8, 32, 3);
+        let f = BaosFactors::calibrate(&x, 2, 8, 32, BaosVariant::Mean, 1.0);
+        let c0 = f.center.clone();
+        // applying to a drifted refinement tensor must not recalibrate
+        let drifted: Vec<f32> = x.iter().map(|v| v * 1.5).collect();
+        let _ = f.fake_quant(&drifted, MxFormat::MxInt4);
+        assert_eq!(f.center, c0);
+    }
+
+    #[test]
+    fn different_s_at_apply_time() {
+        // calibrate on S=8, apply on S=2 (active block) — must work
+        let x = outlier_tensor(2, 8, 32, 4);
+        let f = BaosFactors::calibrate(&x, 2, 8, 32, BaosVariant::Mean, 1.0);
+        let mut act = outlier_tensor(2, 2, 32, 5);
+        f.smooth(&mut act);
+        f.unsmooth(&mut act);
+        assert!(act.iter().all(|v| v.is_finite()));
+    }
+}

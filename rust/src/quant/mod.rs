@@ -1,0 +1,331 @@
+//! Bit-exact MX (microscaling) formats + BAOS smoothing in Rust
+//! (paper §3.1.1, §4.3, §4.4).
+//!
+//! This module sits on the *runtime* KV path: the coordinator stores the
+//! PJRT-produced KV cache in packed MX form (optionally BAOS-smoothed)
+//! and dequantizes when feeding refinement executables — exactly where
+//! the DART hardware quantizes before `H_STORE` (Alg. 1 line 5).
+//!
+//! Numerics match `python/compile/quantlib/mx.py` element-for-element
+//! (cross-checked against manifest goldens in the integration tests).
+
+pub mod baos;
+
+pub use baos::{BaosFactors, BaosVariant};
+
+/// Shared MX block size along the innermost axis (OCP spec: 32).
+pub const MX_BLOCK: usize = 32;
+
+const E4M3_MAX: f32 = 448.0;
+
+/// Supported element formats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MxFormat {
+    MxInt4,
+    MxInt6,
+    MxInt8,
+    MxFp8,
+    Bf16,
+    Fp32,
+}
+
+impl MxFormat {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mxint4" => Some(MxFormat::MxInt4),
+            "mxint6" => Some(MxFormat::MxInt6),
+            "mxint8" => Some(MxFormat::MxInt8),
+            "mxfp8" => Some(MxFormat::MxFp8),
+            "bf16" => Some(MxFormat::Bf16),
+            "fp32" | "none" => Some(MxFormat::Fp32),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MxFormat::MxInt4 => "mxint4",
+            MxFormat::MxInt6 => "mxint6",
+            MxFormat::MxInt8 => "mxint8",
+            MxFormat::MxFp8 => "mxfp8",
+            MxFormat::Bf16 => "bf16",
+            MxFormat::Fp32 => "fp32",
+        }
+    }
+
+    /// Bits per element (excluding the shared E8M0 scale).
+    pub fn bits(&self) -> u32 {
+        match self {
+            MxFormat::MxInt4 => 4,
+            MxFormat::MxInt6 => 6,
+            MxFormat::MxInt8 | MxFormat::MxFp8 => 8,
+            MxFormat::Bf16 => 16,
+            MxFormat::Fp32 => 32,
+        }
+    }
+
+    /// Effective bits/element including the amortized block scale.
+    pub fn effective_bits(&self) -> f64 {
+        match self {
+            MxFormat::Bf16 | MxFormat::Fp32 => self.bits() as f64,
+            _ => self.bits() as f64 + 8.0 / MX_BLOCK as f64,
+        }
+    }
+}
+
+/// Per-block power-of-two scale such that maxabs/scale <= qmax
+/// (identical to quantlib.mx._pow2_scale).
+fn pow2_scale(maxabs: f32, qmax: f32) -> f32 {
+    let m = maxabs.max(1e-30);
+    let mut scale = (m / qmax).log2().floor().exp2();
+    if m / scale > qmax {
+        scale *= 2.0;
+    }
+    scale
+}
+
+/// Round-half-to-even (banker's rounding), matching numpy's `np.round`
+/// used by the python goldens.
+#[inline]
+fn round_ties_even(x: f32) -> f32 {
+    x.round_ties_even()
+}
+
+/// Same semantics for |x| < 2^22 via the float magic-number trick: one
+/// add + one sub in the IEEE default rounding mode (ties-to-even), no
+/// libm call. Valid for MX codes, which are bounded by qmax ≤ 127
+/// (§Perf iteration 2b: ~2x on the quantize hot loop).
+#[inline]
+fn round_ties_even_small(x: f32) -> f32 {
+    const MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
+    (x + MAGIC) - MAGIC
+}
+
+/// BF16 round-trip (round-to-nearest-even on the upper 16 bits).
+pub fn bf16_roundtrip(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1)) & 0xFFFF_0000;
+    f32::from_bits(rounded)
+}
+
+/// E4M3 round-trip (saturating, matching quantlib.mx._to_e4m3).
+pub fn e4m3_roundtrip(x: f32) -> f32 {
+    let sign = x.is_sign_negative();
+    let mut a = x.abs().min(E4M3_MAX);
+    let exp = if a == 0.0 { -127 } else { (a.to_bits() >> 23) as i32 - 127 };
+    let step = ((exp.max(-7) - 3) as f32).exp2();
+    a = round_ties_even(a / step) * step;
+    a = a.min(E4M3_MAX);
+    if sign { -a } else { a }
+}
+
+/// A packed MX tensor: one i8 code per element + one scale per block.
+/// Packing codes at full bytes (not bit-packed) keeps the hot dequant
+/// loop branch-free; capacity accounting uses `MxFormat::effective_bits`.
+#[derive(Clone, Debug)]
+pub struct MxTensor {
+    pub fmt: MxFormat,
+    pub len: usize,
+    /// quantized element codes (ints for MXINT; f32 bits for fp formats)
+    codes: Vec<i8>,
+    fp_codes: Vec<f32>,
+    /// per-block scales (power of two)
+    scales: Vec<f32>,
+}
+
+impl MxTensor {
+    /// Quantize `x` (innermost-contiguous) into packed MX form.
+    /// `x.len()` must be a multiple of [`MX_BLOCK`] for block formats.
+    pub fn quantize(x: &[f32], fmt: MxFormat) -> Self {
+        match fmt {
+            MxFormat::Fp32 | MxFormat::Bf16 => {
+                let fp_codes = x
+                    .iter()
+                    .map(|&v| if fmt == MxFormat::Bf16 { bf16_roundtrip(v) } else { v })
+                    .collect();
+                MxTensor { fmt, len: x.len(), codes: Vec::new(), fp_codes, scales: Vec::new() }
+            }
+            MxFormat::MxFp8 => {
+                assert_eq!(x.len() % MX_BLOCK, 0, "len not multiple of MX block");
+                let nb = x.len() / MX_BLOCK;
+                let mut scales = Vec::with_capacity(nb);
+                let mut fp_codes = Vec::with_capacity(x.len());
+                for b in 0..nb {
+                    let blk = &x[b * MX_BLOCK..(b + 1) * MX_BLOCK];
+                    let maxabs = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
+                    let scale = pow2_scale(maxabs, E4M3_MAX);
+                    scales.push(scale);
+                    for &v in blk {
+                        fp_codes.push(e4m3_roundtrip(v / scale));
+                    }
+                }
+                MxTensor { fmt, len: x.len(), codes: Vec::new(), fp_codes, scales }
+            }
+            _ => {
+                assert_eq!(x.len() % MX_BLOCK, 0, "len not multiple of MX block");
+                let qmax = ((1i32 << (fmt.bits() - 1)) - 1) as f32;
+                let nb = x.len() / MX_BLOCK;
+                let mut scales = Vec::with_capacity(nb);
+                let mut codes = Vec::with_capacity(x.len());
+                for blk in x.chunks_exact(MX_BLOCK) {
+                    let maxabs = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
+                    let scale = pow2_scale(maxabs, qmax);
+                    // reciprocal multiply: scale is an exact power of
+                    // two, so 1/scale is exact and the quotient is
+                    // bit-identical to division (§Perf iteration 2)
+                    let inv = 1.0 / scale;
+                    scales.push(scale);
+                    for &v in blk {
+                        // |v*inv| <= qmax by scale construction, within
+                        // the magic-trick domain
+                        let q = round_ties_even_small(v * inv).clamp(-qmax, qmax);
+                        codes.push(q as i8);
+                    }
+                }
+                MxTensor { fmt, len: x.len(), codes, fp_codes: Vec::new(), scales }
+            }
+        }
+    }
+
+    /// Dequantize into `out` (must have `self.len` capacity).
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        match self.fmt {
+            MxFormat::Fp32 | MxFormat::Bf16 => out.copy_from_slice(&self.fp_codes),
+            MxFormat::MxFp8 => {
+                for (b, &scale) in self.scales.iter().enumerate() {
+                    let base = b * MX_BLOCK;
+                    for i in 0..MX_BLOCK {
+                        out[base + i] = self.fp_codes[base + i] * scale;
+                    }
+                }
+            }
+            _ => {
+                for (b, &scale) in self.scales.iter().enumerate() {
+                    let base = b * MX_BLOCK;
+                    for i in 0..MX_BLOCK {
+                        out[base + i] = self.codes[base + i] as f32 * scale;
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.len];
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Storage footprint in bytes if bit-packed (what HBM would hold).
+    pub fn packed_bytes(&self) -> u64 {
+        (self.len as f64 * self.fmt.effective_bits() / 8.0).ceil() as u64
+    }
+}
+
+/// One-shot fake-quant round trip (quantize → dequantize).
+pub fn fake_quant(x: &[f32], fmt: MxFormat) -> Vec<f32> {
+    MxTensor::quantize(x, fmt).dequantize()
+}
+
+/// Relative L2 quantization error.
+pub fn quant_error(x: &[f32], fmt: MxFormat) -> f64 {
+    let q = fake_quant(x, fmt);
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (a, b) in x.iter().zip(&q) {
+        num += ((a - b) as f64).powi(2);
+        den += (*a as f64).powi(2);
+    }
+    (num / den.max(1e-24)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn bf16_matches_definition() {
+        // 1.0 + 2^-9 rounds to 1.0 in bf16 (8 mantissa bits)
+        assert_eq!(bf16_roundtrip(1.0 + 1.0 / 512.0), 1.0);
+        assert_eq!(bf16_roundtrip(1.0 + 1.0 / 128.0), 1.0078125);
+        assert_eq!(bf16_roundtrip(-3.5), -3.5);
+    }
+
+    #[test]
+    fn e4m3_saturates_and_grids() {
+        assert_eq!(e4m3_roundtrip(1000.0), 448.0);
+        assert_eq!(e4m3_roundtrip(-1000.0), -448.0);
+        // 3 mantissa bits at exponent 0: grid step 1/8
+        assert_eq!(e4m3_roundtrip(1.0 + 1.0 / 16.0), 1.0); // tie to even
+        assert_eq!(e4m3_roundtrip(1.25), 1.25);
+    }
+
+    #[test]
+    fn mxint_roundtrip_idempotent() {
+        let mut rng = SplitMix64::new(0);
+        let x = rng.normal_vec(128, 5.0);
+        for fmt in [MxFormat::MxInt4, MxFormat::MxInt8, MxFormat::MxFp8] {
+            let q1 = fake_quant(&x, fmt);
+            let q2 = fake_quant(&q1, fmt);
+            assert_eq!(q1, q2, "{fmt:?} not idempotent");
+        }
+    }
+
+    #[test]
+    fn error_monotone_in_bits() {
+        let mut rng = SplitMix64::new(1);
+        let x = rng.normal_vec(1024, 3.0);
+        let e4 = quant_error(&x, MxFormat::MxInt4);
+        let e6 = quant_error(&x, MxFormat::MxInt6);
+        let e8 = quant_error(&x, MxFormat::MxInt8);
+        assert!(e4 > e6 && e6 > e8 && e8 > 0.0, "{e4} {e6} {e8}");
+    }
+
+    #[test]
+    fn scales_are_pow2() {
+        let mut rng = SplitMix64::new(2);
+        let x = rng.normal_vec(64, 17.0);
+        let t = MxTensor::quantize(&x, MxFormat::MxInt8);
+        for s in &t.scales {
+            assert_eq!(s.log2().fract(), 0.0, "scale {s} not pow2");
+        }
+    }
+
+    #[test]
+    fn max_element_within_one_step() {
+        let mut x = vec![0.001f32; 32];
+        x[0] = 100.0;
+        let q = fake_quant(&x, MxFormat::MxInt4);
+        assert!((q[0] - 100.0).abs() <= 100.0 / 7.0);
+    }
+
+    #[test]
+    fn packed_bytes_accounting() {
+        let x = vec![1.0f32; 64];
+        let t4 = MxTensor::quantize(&x, MxFormat::MxInt4);
+        // 64 elems * 4 bits + 2 scales * 8 bits = 34 bytes
+        assert_eq!(t4.packed_bytes(), 34);
+        let t16 = MxTensor::quantize(&x, MxFormat::Bf16);
+        assert_eq!(t16.packed_bytes(), 128);
+    }
+
+    #[test]
+    fn fp32_lossless() {
+        let mut rng = SplitMix64::new(3);
+        let x = rng.normal_vec(96, 2.0);
+        assert_eq!(fake_quant(&x, MxFormat::Fp32), x);
+    }
+
+    #[test]
+    fn property_bounded_error() {
+        crate::stats::prop_check("mxint8 rel err < 2%", 32, |rng| {
+            let scale = (rng.next_f64() * 6.0 - 3.0).exp2() as f32;
+            rng.normal_vec(256, scale)
+        }, |x| {
+            let e = quant_error(x, MxFormat::MxInt8);
+            if e < 0.02 { Ok(()) } else { Err(format!("err {e}")) }
+        });
+    }
+}

@@ -1,0 +1,148 @@
+//! Table / series renderers: every bench prints paper-shaped rows
+//! through these helpers (ASCII tables + CSV for plotting).
+
+/// A simple column-aligned ASCII table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(),
+                   "row width mismatch in table {:?}", self.title);
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let line = |cells: &[String], w: &[usize]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                // right-align numeric-looking cells
+                let numeric = c.chars().next().map(
+                    |ch| ch.is_ascii_digit() || ch == '-' || ch == '+'
+                        || ch == '.' || ch == 'x' || ch == '×').unwrap_or(false)
+                    && c.chars().any(|ch| ch.is_ascii_digit());
+                if numeric {
+                    s.push_str(&format!("{c:>width$}", width = w[i]));
+                } else {
+                    s.push_str(&format!("{c:<width$}", width = w[i]));
+                }
+            }
+            s
+        };
+        out.push_str(&line(&self.headers, &w));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format helpers shared by benches.
+pub fn f1(v: f64) -> String { format!("{v:.1}") }
+pub fn f2(v: f64) -> String { format!("{v:.2}") }
+pub fn f3(v: f64) -> String { format!("{v:.3}") }
+pub fn speedup(v: f64) -> String { format!("x{v:.2}") }
+pub fn pct(v: f64) -> String { format!("{:.1}%", v * 100.0) }
+pub fn gbs(bytes_per_sec: f64) -> String {
+    format!("{:.1}", bytes_per_sec / 1e9)
+}
+pub fn si(v: f64) -> String {
+    if v >= 1e9 { format!("{:.2}G", v / 1e9) }
+    else if v >= 1e6 { format!("{:.2}M", v / 1e6) }
+    else if v >= 1e3 { format!("{:.2}k", v / 1e3) }
+    else { format!("{v:.1}") }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "val"]);
+        t.row_strs(&["alpha", "1.5"]);
+        t.row_strs(&["b", "22.0"]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("alpha"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn csv_output() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_strs(&["1", "2"]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(speedup(4.906), "x4.91");
+        assert_eq!(pct(0.707), "70.7%");
+        assert_eq!(si(2.5e6), "2.50M");
+        assert_eq!(gbs(819.2e9), "819.2");
+    }
+}

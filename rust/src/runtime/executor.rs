@@ -1,0 +1,224 @@
+//! PJRT executor: compile HLO-text artifacts once, run them many times.
+//!
+//! Wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. Outputs
+//! arrive as a 1-tuple (aot.py lowers with `return_tuple=True`) whose
+//! elements we decompose into [`Tensor`]s.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, Manifest};
+use super::weights::Weights;
+
+/// A host tensor: shape + f32 or i32 storage.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor::F32 { dims, data }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor::I32 { dims, data }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::I32 { dims: vec![], data: vec![v] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Tensor::I32 { data, .. } => data,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Tensor::F32 { dims, data } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                if dims.is_empty() {
+                    l.reshape(&[])?
+                } else {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    l.reshape(&d)?
+                }
+            }
+            Tensor::I32 { dims, data } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                if dims.is_empty() {
+                    l.reshape(&[])?
+                } else {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    l.reshape(&d)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &super::manifest::TensorSpec)
+                    -> Result<Tensor> {
+        Ok(match spec.dtype {
+            DType::F32 => Tensor::F32 {
+                dims: spec.dims.clone(),
+                data: lit.to_vec::<f32>()?,
+            },
+            DType::I32 => Tensor::I32 {
+                dims: spec.dims.clone(),
+                data: lit.to_vec::<i32>()?,
+            },
+        })
+    }
+}
+
+/// Compiled-executable cache over a PJRT CPU client.
+pub struct Executor {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub weights: Weights,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// weight literals in manifest param order, converted once
+    weight_tensors: Vec<Tensor>,
+    pub executions: u64,
+}
+
+impl Executor {
+    /// Load manifest + weights and connect the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let weights = Weights::load(&manifest.weights_file)?;
+        let mut weight_tensors = Vec::new();
+        for name in &manifest.param_order {
+            let t = weights.get(name)
+                .with_context(|| format!("weight {name:?} missing"))?;
+            weight_tensors.push(Tensor::f32(t.dims.clone(), t.data.clone()));
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT client: {e}"))?;
+        Ok(Executor {
+            client,
+            manifest,
+            weights,
+            compiled: HashMap::new(),
+            weight_tensors,
+            executions: 0,
+        })
+    }
+
+    /// Compile (and cache) one executable variant.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.executable(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("path utf8")?)
+            .map_err(|e| anyhow::anyhow!("HLO parse {name}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_compiled(&self, name: &str) -> bool {
+        self.compiled.contains_key(name)
+    }
+
+    /// Execute `name` with `extra` inputs followed by the model weights
+    /// (the argument convention of every aot.py executable).
+    pub fn run(&mut self, name: &str, extra: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.compile(name)?;
+        let spec = self.manifest.executable(name)?.clone();
+        let n_expected = spec.inputs.len();
+        let n_given = extra.len() + self.weight_tensors.len();
+        if n_expected != n_given {
+            bail!("{name}: expected {n_expected} inputs, got {n_given}");
+        }
+        // shape-check the non-weight inputs against the manifest
+        for (t, s) in extra.iter().zip(&spec.inputs) {
+            if t.dims() != s.dims.as_slice() {
+                bail!("{name}: input {:?} dims {:?} != manifest {:?}",
+                      s.name, t.dims(), s.dims);
+            }
+        }
+        let mut literals = Vec::with_capacity(n_given);
+        for t in extra.iter().chain(self.weight_tensors.iter()) {
+            literals.push(t.to_literal()?);
+        }
+        let exe = self.compiled.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+        let lit = result[0][0].to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True → always a tuple
+        let parts = lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("tuple {name}: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: {} outputs, manifest says {}",
+                  parts.len(), spec.outputs.len());
+        }
+        self.executions += 1;
+        parts.iter().zip(&spec.outputs)
+            .map(|(l, s)| Tensor::from_literal(l, s))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden check: run full_b4 on the manifest's golden tokens and
+    /// compare logits summaries against the python-computed values.
+    #[test]
+    fn full_forward_matches_python_golden() {
+        let Some(dir) = crate::runtime::artifacts_dir() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        let mut ex = Executor::load(&dir).unwrap();
+        let g = ex.manifest.geometry;
+        let modv = ex.manifest.root
+            .at(&["goldens", "full_tokens_mod"]).unwrap().as_i64().unwrap() as i32;
+        let tokens: Vec<i32> = (0..4 * g.total_len as i32)
+            .map(|i| i % modv).collect();
+        let out = ex.run("full_b4",
+                         &[Tensor::i32(vec![4, g.total_len], tokens)]).unwrap();
+        assert_eq!(out.len(), 3);
+        let logits = out[0].as_f32();
+        let golden = ex.manifest.root.at(&["goldens", "full_logits"]).unwrap();
+        let sum: f64 = logits.iter().map(|&v| v as f64).sum();
+        let gsum = golden.get("sum").unwrap().as_f64().unwrap();
+        assert!((sum - gsum).abs() / gsum.abs().max(1.0) < 2e-3,
+                "sum {sum} vs golden {gsum}");
+        let first8 = golden.get("first8").unwrap().as_f32_vec().unwrap();
+        for (a, b) in logits.iter().take(8).zip(&first8) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Typed view over `artifacts/manifest.json` (written by aot.py):
+//! executable inventory with I/O shapes, model/generation geometry,
+//! and the golden test vectors shared with the python test suite.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::json::{parse, Json};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecutableSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Generation geometry from the manifest's config block.
+#[derive(Clone, Copy, Debug)]
+pub struct GenGeometry {
+    pub prompt_len: usize,
+    pub block_len: usize,
+    pub n_blocks: usize,
+    pub steps_per_block: usize,
+    pub total_len: usize,
+    pub vocab: usize,
+    pub mask_id: i32,
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub root: Json,
+    pub executables: HashMap<String, ExecutableSpec>,
+    pub param_order: Vec<String>,
+    pub batches: Vec<usize>,
+    pub geometry: GenGeometry,
+    pub weights_file: PathBuf,
+}
+
+fn specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr().context("expected spec array")?.iter().map(|t| {
+        let t = t.as_arr().context("spec triple")?;
+        Ok(TensorSpec {
+            name: t[0].as_str().context("name")?.to_string(),
+            dtype: DType::parse(t[1].as_str().context("dtype")?)?,
+            dims: t[2].as_usize_vec().context("dims")?,
+        })
+    }).collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?}"))?;
+        let root = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if root.get("format").and_then(Json::as_str)
+            != Some("dart-manifest-v1")
+        {
+            bail!("unsupported manifest format");
+        }
+        let mut executables = HashMap::new();
+        for (name, ex) in root.get("executables")
+            .and_then(Json::as_obj).context("executables")?
+        {
+            executables.insert(name.clone(), ExecutableSpec {
+                name: name.clone(),
+                file: dir.join(ex.get("file").and_then(Json::as_str)
+                               .context("file")?),
+                inputs: specs(ex.get("inputs").context("inputs")?)?,
+                outputs: specs(ex.get("outputs").context("outputs")?)?,
+            });
+        }
+        let param_order = root.get("param_order").and_then(Json::as_arr)
+            .context("param_order")?
+            .iter().map(|v| v.as_str().unwrap_or("").to_string()).collect();
+        let batches = root.get("batches").and_then(Json::as_arr)
+            .context("batches")?
+            .iter().filter_map(|v| v.as_u64().map(|x| x as usize)).collect();
+
+        let g = |path: &[&str]| -> Result<usize> {
+            root.at(path).and_then(Json::as_u64).map(|v| v as usize)
+                .with_context(|| format!("missing config {path:?}"))
+        };
+        let geometry = GenGeometry {
+            prompt_len: g(&["config", "gen", "prompt_len"])?,
+            block_len: g(&["config", "gen", "block_len"])?,
+            n_blocks: g(&["config", "gen", "n_blocks"])?,
+            steps_per_block: g(&["config", "gen", "steps_per_block"])?,
+            total_len: g(&["config", "gen", "total_len"])?,
+            vocab: g(&["config", "model", "vocab_size"])?,
+            mask_id: root.at(&["config", "model", "mask_id"])
+                .and_then(Json::as_i64).context("mask_id")? as i32,
+            n_layers: g(&["config", "model", "n_layers"])?,
+            n_kv_heads: g(&["config", "model", "n_kv_heads"])?,
+            d_head: g(&["config", "model", "d_head"])?,
+        };
+        let weights_file = dir.join(root.get("weights_file")
+            .and_then(Json::as_str).context("weights_file")?);
+        Ok(Manifest { dir: dir.to_path_buf(), root, executables,
+                      param_order, batches, geometry, weights_file })
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.executables.get(name)
+            .with_context(|| format!("no executable {name:?} in manifest"))
+    }
+
+    /// KV cache shape for batch `b`: [N_L, b, Hkv, L_tot, D].
+    pub fn kv_dims(&self, b: usize) -> Vec<usize> {
+        let g = &self.geometry;
+        vec![g.n_layers, b, g.n_kv_heads, g.total_len, g.d_head]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let Some(dir) = crate::runtime::artifacts_dir() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.batches.contains(&1));
+        let full = m.executable("full_b1").unwrap();
+        assert_eq!(full.inputs[0].dtype, DType::I32);
+        assert_eq!(full.inputs[0].dims, vec![1, m.geometry.total_len]);
+        assert_eq!(full.outputs[0].dims,
+                   vec![1, m.geometry.total_len, m.geometry.vocab]);
+        assert_eq!(m.param_order.len(), 11);
+        assert!(m.weights_file.exists());
+        // every referenced HLO file exists
+        for ex in m.executables.values() {
+            assert!(ex.file.exists(), "{:?}", ex.file);
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! PJRT artifact runtime: loads the AOT-compiled L2 executables and runs
+//! them from the Rust request path (python is never on it).
+//!
+//! The interchange format is **HLO text** — jax ≥ 0.5 emits
+//! HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md).
+//!
+//! * [`json`] — minimal JSON parser (serde_json stand-in, DESIGN.md S7)
+//!   for `artifacts/manifest.json`;
+//! * [`manifest`] — typed manifest: executables, shapes, goldens;
+//! * [`weights`] — the DARTWTS1 trained-parameter container;
+//! * [`executor`] — `PjRtClient` wrapper: compile once per variant,
+//!   execute with f32/i32 tensors.
+
+pub mod executor;
+pub mod json;
+pub mod manifest;
+pub mod weights;
+
+pub use executor::{Executor, Tensor};
+pub use manifest::Manifest;
+pub use weights::Weights;
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: $DART_ARTIFACTS, ./artifacts, or
+/// ../artifacts (for tests running from rust/).
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("DART_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = Path::new(cand);
+        if p.join("manifest.json").exists() {
+            return Some(p.to_path_buf());
+        }
+    }
+    None
+}

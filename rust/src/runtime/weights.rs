@@ -1,0 +1,140 @@
+//! DARTWTS1 weight container parser (written by python/compile/aot.py).
+//!
+//! Format: magic `DARTWTS1`, u32 tensor count, then per tensor:
+//! u32 name_len, name bytes, u32 ndim, u64 dims[ndim], f32 data (LE).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct WeightTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl WeightTensor {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    pub tensors: Vec<WeightTensor>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Self> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading weights {path:?}"))?;
+        Self::parse(&data)
+    }
+
+    pub fn parse(data: &[u8]) -> Result<Self> {
+        if data.len() < 12 || &data[..8] != b"DARTWTS1" {
+            bail!("bad DARTWTS1 magic");
+        }
+        let mut off = 8usize;
+        let rd_u32 = |data: &[u8], off: &mut usize| -> Result<u32> {
+            let v = u32::from_le_bytes(
+                data.get(*off..*off + 4).context("truncated")?.try_into()?);
+            *off += 4;
+            Ok(v)
+        };
+        let count = rd_u32(data, &mut off)?;
+        let mut tensors = Vec::with_capacity(count as usize);
+        let mut by_name = HashMap::new();
+        for _ in 0..count {
+            let nlen = rd_u32(data, &mut off)? as usize;
+            let name = String::from_utf8(
+                data.get(off..off + nlen).context("truncated name")?.to_vec())?;
+            off += nlen;
+            let ndim = rd_u32(data, &mut off)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let d = u64::from_le_bytes(
+                    data.get(off..off + 8).context("truncated dims")?
+                        .try_into()?);
+                off += 8;
+                dims.push(d as usize);
+            }
+            let numel: usize = dims.iter().product();
+            let bytes = data.get(off..off + numel * 4)
+                .context("truncated tensor data")?;
+            off += numel * 4;
+            let mut vals = vec![0f32; numel];
+            for (i, c) in bytes.chunks_exact(4).enumerate() {
+                vals[i] = f32::from_le_bytes(c.try_into().unwrap());
+            }
+            by_name.insert(name.clone(), tensors.len());
+            tensors.push(WeightTensor { name, dims, data: vals });
+        }
+        if off != data.len() {
+            bail!("trailing bytes in weight file");
+        }
+        Ok(Weights { tensors, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&WeightTensor> {
+        self.by_name.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_blob() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"DARTWTS1");
+        b.extend_from_slice(&2u32.to_le_bytes());
+        // tensor "a": [2,2]
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(b'a');
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u64.to_le_bytes());
+        b.extend_from_slice(&2u64.to_le_bytes());
+        for v in [1f32, 2.0, 3.0, 4.0] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        // tensor "bb": [3]
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(b"bb");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&3u64.to_le_bytes());
+        for v in [5f32, 6.0, 7.0] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parses_sample() {
+        let w = Weights::parse(&sample_blob()).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        let a = w.get("a").unwrap();
+        assert_eq!(a.dims, vec![2, 2]);
+        assert_eq!(a.data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.get("bb").unwrap().numel(), 3);
+        assert_eq!(w.total_params(), 7);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        assert!(Weights::parse(b"NOTMAGIC").is_err());
+        let mut blob = sample_blob();
+        blob.truncate(blob.len() - 2);
+        assert!(Weights::parse(&blob).is_err());
+        let mut blob = sample_blob();
+        blob.push(0);
+        assert!(Weights::parse(&blob).is_err());
+    }
+}

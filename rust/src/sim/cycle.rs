@@ -1,0 +1,761 @@
+//! Transaction-level cycle-accurate simulator (paper §4.2).
+//!
+//! Executes DART compiler-generated programs with **functional
+//! numerics** (real data in the modeled SRAM domains, cross-checked
+//! against the golden models and PyTorch-equivalent oracles) and
+//! **transaction-level timing**: in-order issue, stall-on-dependency via
+//! a register + SRAM-interval scoreboard, per-unit occupancy, background
+//! HBM prefetch overlap through the Ramulator-style [`crate::hbm`]
+//! model.
+//!
+//! Timing fidelity is the paper's: per-instruction latencies come from
+//! the RTL-calibrated [`super::latency::LatencyLib`]; inter-stage
+//! pipeline fill/drain is *not* modeled here (that is [`super::rtl`]'s
+//! job), which is exactly the documented source of Table 3's
+//! compound-sequence deltas.
+
+use crate::config::HwConfig;
+use crate::hbm::{Fidelity, HbmModel};
+use crate::isa::{Instr, Program, Unit};
+use crate::mem::{Domain, SramState};
+use crate::quant;
+use crate::sim::latency::LatencyLib;
+
+/// Simulation outcome.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    pub cycles: u64,
+    pub instrs: u64,
+    pub stall_cycles: u64,
+    pub hbm_bytes: u64,
+    pub unit_busy: [(u64, &'static str); 4],
+    pub hbm_busy_cycles: u64,
+}
+
+impl SimReport {
+    /// Effective HBM bandwidth achieved over the run.
+    pub fn hbm_bw(&self, clock_hz: f64) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.hbm_bytes as f64 / (self.cycles as f64 / clock_hz)
+    }
+}
+
+/// Outstanding write (scoreboard entry): resource + finish cycle.
+#[derive(Clone, Debug)]
+enum Write {
+    Sram(Domain, u32, u32, u64),
+    FpReg(u8, u64),
+    GpReg(u8, u64),
+}
+
+pub struct CycleSim {
+    pub hw: HwConfig,
+    pub lat: LatencyLib,
+    pub sram: SramState,
+    pub fp_regs: [f32; crate::isa::NUM_FP_REGS],
+    pub gp_regs: [i32; crate::isa::NUM_GP_REGS],
+    /// functional HBM contents (f32 elements; ints are bit-cast)
+    pub hbm_data: Vec<f32>,
+    hbm: HbmModel,
+    /// RTL-reference mode: add pipeline fill/drain per op (Table 3)
+    pub rtl_fills: bool,
+    writes: Vec<Write>,
+    unit_free: [u64; 4],
+    unit_busy: [u64; 4],
+    now: u64,
+    stalls: u64,
+    hbm_bytes: u64,
+    hbm_ns_base: f64,
+}
+
+fn unit_idx(u: Unit) -> usize {
+    match u {
+        Unit::Matrix => 0,
+        Unit::Vector => 1,
+        Unit::Scalar => 2,
+        Unit::Hbm => 3,
+        Unit::Control => 2, // control shares the scalar sequencer
+    }
+}
+
+impl CycleSim {
+    pub fn new(hw: HwConfig, hbm_elements: usize) -> Self {
+        let lat = LatencyLib::new(hw.clone());
+        let sram = SramState::new(&hw);
+        let hbm = HbmModel::new(hw.hbm, Fidelity::Ideal);
+        CycleSim {
+            hw,
+            lat,
+            sram,
+            fp_regs: [0.0; crate::isa::NUM_FP_REGS],
+            gp_regs: [0; crate::isa::NUM_GP_REGS],
+            hbm_data: vec![0.0; hbm_elements],
+            hbm,
+            rtl_fills: false,
+            writes: Vec::new(),
+            unit_free: [0; 4],
+            unit_busy: [0; 4],
+            now: 0,
+            stalls: 0,
+            hbm_bytes: 0,
+            hbm_ns_base: 0.0,
+        }
+    }
+
+    /// Load int data into functional HBM (bit-cast to the f32 backing).
+    pub fn hbm_store_i32(&mut self, addr: usize, data: &[i32]) {
+        for (i, &v) in data.iter().enumerate() {
+            self.hbm_data[addr + i] = f32::from_bits(v as u32);
+        }
+    }
+
+    pub fn hbm_store_f32(&mut self, addr: usize, data: &[f32]) {
+        self.hbm_data[addr..addr + data.len()].copy_from_slice(data);
+    }
+
+    // ---- scoreboard ------------------------------------------------------
+
+    fn read_ready(&self, domain: Domain, addr: u32, len: u32) -> u64 {
+        self.writes.iter().filter_map(|w| match w {
+            Write::Sram(d, a, l, f)
+                if *d == domain && *a < addr + len && addr < *a + *l => Some(*f),
+            _ => None,
+        }).max().unwrap_or(0)
+    }
+
+    fn fp_ready(&self, reg: u8) -> u64 {
+        self.writes.iter().filter_map(|w| match w {
+            Write::FpReg(r, f) if *r == reg => Some(*f),
+            _ => None,
+        }).max().unwrap_or(0)
+    }
+
+    fn gp_ready(&self, reg: u8) -> u64 {
+        self.writes.iter().filter_map(|w| match w {
+            Write::GpReg(r, f) if *r == reg => Some(*f),
+            _ => None,
+        }).max().unwrap_or(0)
+    }
+
+    fn retire(&mut self) {
+        let now = self.now;
+        self.writes.retain(|w| match w {
+            Write::Sram(_, _, _, f) | Write::FpReg(_, f) | Write::GpReg(_, f) => *f > now,
+        });
+    }
+
+    /// Earliest issue cycle for `ins` given dependencies (RAW + WAW).
+    fn deps_ready(&self, ins: &Instr) -> u64 {
+        use Instr::*;
+        let v = Domain::Vector;
+        let m = Domain::Matrix;
+        let i = Domain::Int;
+        let f = Domain::Fp;
+        match ins {
+            MGemm { act, wgt, m: mm, k, n, dst, .. } => self
+                .read_ready(v, *act, mm * k)
+                .max(self.read_ready(m, *wgt, k * n))
+                .max(self.read_ready(v, *dst, mm * n)),
+            MSum { src, parts, len, dst } => self
+                .read_ready(v, *src, parts * len)
+                .max(self.read_ready(v, *dst, *len)),
+            VAddVV { a, b, len, dst } | VSubVV { a, b, len, dst }
+            | VMulVV { a, b, len, dst } => self
+                .read_ready(v, *a, *len)
+                .max(self.read_ready(v, *b, *len))
+                .max(self.read_ready(v, *dst, *len)),
+            VExpV { src, len, dst } | VRecipV { src, len, dst }
+            | VQuantMx { src, len, dst, .. } => self
+                .read_ready(v, *src, *len)
+                .max(self.read_ready(v, *dst, *len)),
+            VAddVS { a, s, len, dst } | VMulVS { a, s, len, dst } => self
+                .read_ready(v, *a, *len)
+                .max(self.fp_ready(*s))
+                .max(self.read_ready(v, *dst, *len)),
+            VRedMax { src, len, dst } | VRedSum { src, len, dst } => self
+                .read_ready(v, *src, *len)
+                .max(self.fp_ready(*dst)),
+            VRedMaxIdx { src, len, dst_val, dst_idx, .. } => self
+                .read_ready(v, *src, *len)
+                .max(self.fp_ready(*dst_val))
+                .max(self.gp_ready(*dst_idx)),
+            VTopkMask { conf, mask, k, len, dst } => self
+                .read_ready(v, *conf, *len)
+                .max(self.read_ready(i, *mask, *len))
+                .max(self.gp_ready(*k))
+                .max(self.read_ready(i, *dst, *len)),
+            VSelectInt { mask, a, b, len, dst } => self
+                .read_ready(i, *mask, *len)
+                .max(self.read_ready(i, *a, *len))
+                .max(self.read_ready(i, *b, *len))
+                .max(self.read_ready(i, *dst, *len)),
+            VEqIs { src, len, dst, .. } => self
+                .read_ready(i, *src, *len)
+                .max(self.read_ready(i, *dst, *len)),
+            SStFp { src, addr } => self.fp_ready(*src).max(self.read_ready(f, *addr, 1)),
+            SLdFp { dst, addr } => self.read_ready(f, *addr, 1).max(self.fp_ready(*dst)),
+            SStInt { src, addr } => self.gp_ready(*src).max(self.read_ready(i, *addr, 1)),
+            SLdInt { dst, addr } => self.read_ready(i, *addr, 1).max(self.gp_ready(*dst)),
+            SMapVFp { src, len, dst } => self
+                .read_ready(f, *src, *len)
+                .max(self.read_ready(v, *dst, *len)),
+            SRecip { dst, src } => self.fp_ready(*src).max(self.fp_ready(*dst)),
+            SAddF { dst, a, b } | SMulF { dst, a, b } => self
+                .fp_ready(*a).max(self.fp_ready(*b)).max(self.fp_ready(*dst)),
+            SMovI { dst, .. } => self.gp_ready(*dst),
+            SMovF { dst, .. } => self.fp_ready(*dst),
+            SAddI { dst, a, .. } => self.gp_ready(*a).max(self.gp_ready(*dst)),
+            SSoftmax { v: addr, len } | SLayerNorm { v: addr, len }
+            | SSilu { v: addr, len } | SGelu { v: addr, len } =>
+                self.read_ready(v, *addr, *len),
+            HPrefetchV { dst, len, .. } => self.read_ready(v, *dst, *len),
+            HPrefetchM { dst, len, .. } => self.read_ready(m, *dst, *len),
+            HStore { src, len, .. } => self.read_ready(v, *src, *len),
+            CLoop { .. } | CEndLoop | CBarrier | CHalt => 0,
+        }
+    }
+
+    // ---- functional execution --------------------------------------------
+
+    fn exec(&mut self, ins: &Instr, finish: u64) {
+        use Instr::*;
+        let wv = |s: &mut Self, a: u32, l: u32, f: u64| {
+            s.writes.push(Write::Sram(Domain::Vector, a, l, f))
+        };
+        match ins {
+            MGemm { dst, act, wgt, m, k, n, transpose } => {
+                let (m, k, n) = (*m as usize, *k as usize, *n as usize);
+                let a = self.sram.v(*act, (m * k) as u32).to_vec();
+                let w = self.sram.m(*wgt, (k * n) as u32).to_vec();
+                let out = self.sram.v_mut(*dst, (m * n) as u32);
+                for mi in 0..m {
+                    for ni in 0..n {
+                        let mut acc = 0f32;
+                        for ki in 0..k {
+                            let wv = if *transpose { w[ni * k + ki] } else { w[ki * n + ni] };
+                            acc += a[mi * k + ki] * wv;
+                        }
+                        out[mi * n + ni] = acc;
+                    }
+                }
+                wv(self, *dst, (m * n) as u32, finish);
+            }
+            MSum { dst, src, parts, len } => {
+                let mut acc = vec![0f32; *len as usize];
+                for p in 0..*parts {
+                    let part = self.sram.v(src + p * len, *len);
+                    for (a, &x) in acc.iter_mut().zip(part) {
+                        *a += x;
+                    }
+                }
+                self.sram.v_mut(*dst, *len).copy_from_slice(&acc);
+                wv(self, *dst, *len, finish);
+            }
+            VAddVV { dst, a, b, len } | VSubVV { dst, a, b, len }
+            | VMulVV { dst, a, b, len } => {
+                let av = self.sram.v(*a, *len).to_vec();
+                let bv = self.sram.v(*b, *len).to_vec();
+                let out = self.sram.v_mut(*dst, *len);
+                for j in 0..*len as usize {
+                    out[j] = match ins {
+                        VAddVV { .. } => av[j] + bv[j],
+                        VSubVV { .. } => av[j] - bv[j],
+                        _ => av[j] * bv[j],
+                    };
+                }
+                wv(self, *dst, *len, finish);
+            }
+            VExpV { dst, src, len } => {
+                // hot path in sampling programs: avoid the temp copy
+                // (src may alias dst — the paper's in-place V_EXP_V)
+                if dst == src {
+                    for v in self.sram.v_mut(*dst, *len) {
+                        *v = v.exp();
+                    }
+                } else {
+                    let s = self.sram.v(*src, *len).to_vec();
+                    let out = self.sram.v_mut(*dst, *len);
+                    for j in 0..*len as usize {
+                        out[j] = s[j].exp();
+                    }
+                }
+                wv(self, *dst, *len, finish);
+            }
+            VRecipV { dst, src, len } => {
+                let s = self.sram.v(*src, *len).to_vec();
+                let out = self.sram.v_mut(*dst, *len);
+                for j in 0..*len as usize {
+                    out[j] = 1.0 / s[j];
+                }
+                wv(self, *dst, *len, finish);
+            }
+            VAddVS { dst, a, s, len } => {
+                let sv = self.fp_regs[*s as usize];
+                if dst == a {
+                    for v in self.sram.v_mut(*dst, *len) {
+                        *v += sv;
+                    }
+                } else {
+                    let av = self.sram.v(*a, *len).to_vec();
+                    let out = self.sram.v_mut(*dst, *len);
+                    for j in 0..*len as usize {
+                        out[j] = av[j] + sv;
+                    }
+                }
+                wv(self, *dst, *len, finish);
+            }
+            VMulVS { dst, a, s, len } => {
+                let sv = self.fp_regs[*s as usize];
+                let av = self.sram.v(*a, *len).to_vec();
+                let out = self.sram.v_mut(*dst, *len);
+                for j in 0..*len as usize {
+                    out[j] = av[j] * sv;
+                }
+                wv(self, *dst, *len, finish);
+            }
+            VRedMax { dst, src, len } => {
+                let m = self.sram.v(*src, *len).iter().cloned()
+                    .fold(f32::NEG_INFINITY, f32::max);
+                self.fp_regs[*dst as usize] = self.fp_regs[*dst as usize].max(m);
+                self.writes.push(Write::FpReg(*dst, finish));
+            }
+            VRedSum { dst, src, len } => {
+                let s: f32 = self.sram.v(*src, *len).iter().sum();
+                self.fp_regs[*dst as usize] += s;
+                self.writes.push(Write::FpReg(*dst, finish));
+            }
+            VRedMaxIdx { dst_val, dst_idx, src, len, idx_base } => {
+                // accumulating fused max-with-index: updates (val, idx)
+                // registers only on strict improvement, so chunk streams
+                // fold into a running global argmax
+                let data = self.sram.v(*src, *len);
+                let mut cm = f32::NEG_INFINITY;
+                let mut ci = 0u32;
+                for (j, &val) in data.iter().enumerate() {
+                    if val > cm {
+                        cm = val;
+                        ci = j as u32;
+                    }
+                }
+                if cm > self.fp_regs[*dst_val as usize] {
+                    self.fp_regs[*dst_val as usize] = cm;
+                    self.gp_regs[*dst_idx as usize] = (idx_base + ci) as i32;
+                }
+                self.writes.push(Write::FpReg(*dst_val, finish));
+                self.writes.push(Write::GpReg(*dst_idx, finish));
+            }
+            VTopkMask { dst, conf, mask, k, len } => {
+                let confs = self.sram.v(*conf, *len).to_vec();
+                let masks = self.sram.i(*mask, *len).to_vec();
+                let kk = self.gp_regs[*k as usize].max(0) as usize;
+                let sel = crate::sampling::topk_mask(&confs, &masks, kk);
+                let out = self.sram.i_mut(*dst, *len);
+                for (o, s) in out.iter_mut().zip(&sel) {
+                    *o = *s as i32;
+                }
+                self.writes.push(Write::Sram(Domain::Int, *dst, *len, finish));
+            }
+            VSelectInt { dst, mask, a, b, len } => {
+                let m = self.sram.i(*mask, *len).to_vec();
+                let av = self.sram.i(*a, *len).to_vec();
+                let bv = self.sram.i(*b, *len).to_vec();
+                let out = self.sram.i_mut(*dst, *len);
+                for j in 0..*len as usize {
+                    out[j] = if m[j] != 0 { av[j] } else { bv[j] };
+                }
+                self.writes.push(Write::Sram(Domain::Int, *dst, *len, finish));
+            }
+            VEqIs { dst, src, imm, len } => {
+                let s = self.sram.i(*src, *len).to_vec();
+                let out = self.sram.i_mut(*dst, *len);
+                for j in 0..*len as usize {
+                    out[j] = (s[j] == *imm) as i32;
+                }
+                self.writes.push(Write::Sram(Domain::Int, *dst, *len, finish));
+            }
+            VQuantMx { dst, src, len, bits } => {
+                let fmt = match bits {
+                    4 => quant::MxFormat::MxInt4,
+                    6 => quant::MxFormat::MxInt6,
+                    _ => quant::MxFormat::MxInt8,
+                };
+                let s = self.sram.v(*src, *len).to_vec();
+                let q = quant::fake_quant(&s, fmt);
+                self.sram.v_mut(*dst, *len).copy_from_slice(&q);
+                wv(self, *dst, *len, finish);
+            }
+            SStFp { src, addr } => {
+                self.sram.fp[*addr as usize] = self.fp_regs[*src as usize];
+                self.writes.push(Write::Sram(Domain::Fp, *addr, 1, finish));
+            }
+            SLdFp { dst, addr } => {
+                self.fp_regs[*dst as usize] = self.sram.fp[*addr as usize];
+                self.writes.push(Write::FpReg(*dst, finish));
+            }
+            SStInt { src, addr } => {
+                self.sram.int[*addr as usize] = self.gp_regs[*src as usize];
+                self.writes.push(Write::Sram(Domain::Int, *addr, 1, finish));
+            }
+            SLdInt { dst, addr } => {
+                self.gp_regs[*dst as usize] = self.sram.int[*addr as usize];
+                self.writes.push(Write::GpReg(*dst, finish));
+            }
+            SMapVFp { dst, src, len } => {
+                let vals: Vec<f32> =
+                    self.sram.fp[*src as usize..(*src + *len) as usize].to_vec();
+                self.sram.v_mut(*dst, *len).copy_from_slice(&vals);
+                wv(self, *dst, *len, finish);
+            }
+            SRecip { dst, src } => {
+                self.fp_regs[*dst as usize] = 1.0 / self.fp_regs[*src as usize];
+                self.writes.push(Write::FpReg(*dst, finish));
+            }
+            SAddF { dst, a, b } => {
+                self.fp_regs[*dst as usize] =
+                    self.fp_regs[*a as usize] + self.fp_regs[*b as usize];
+                self.writes.push(Write::FpReg(*dst, finish));
+            }
+            SMulF { dst, a, b } => {
+                self.fp_regs[*dst as usize] =
+                    self.fp_regs[*a as usize] * self.fp_regs[*b as usize];
+                self.writes.push(Write::FpReg(*dst, finish));
+            }
+            SMovI { dst, imm } => {
+                self.gp_regs[*dst as usize] = *imm;
+                self.writes.push(Write::GpReg(*dst, finish));
+            }
+            SMovF { dst, imm } => {
+                self.fp_regs[*dst as usize] = *imm;
+                self.writes.push(Write::FpReg(*dst, finish));
+            }
+            SAddI { dst, a, imm } => {
+                self.gp_regs[*dst as usize] = self.gp_regs[*a as usize] + imm;
+                self.writes.push(Write::GpReg(*dst, finish));
+            }
+            SSoftmax { v, len } => {
+                let data = self.sram.v(*v, *len).to_vec();
+                let m = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f32> = data.iter().map(|&x| (x - m).exp()).collect();
+                let s: f32 = exps.iter().sum();
+                let out = self.sram.v_mut(*v, *len);
+                for (o, e) in out.iter_mut().zip(&exps) {
+                    *o = e / s;
+                }
+                wv(self, *v, *len, finish);
+            }
+            SLayerNorm { v, len } => {
+                let data = self.sram.v(*v, *len).to_vec();
+                let n = *len as f32;
+                let mean: f32 = data.iter().sum::<f32>() / n;
+                let var: f32 = data.iter().map(|&x| (x - mean) * (x - mean))
+                    .sum::<f32>() / n;
+                let inv = 1.0 / (var + 1e-5).sqrt();
+                let out = self.sram.v_mut(*v, *len);
+                for (o, &x) in out.iter_mut().zip(&data) {
+                    *o = (x - mean) * inv;
+                }
+                wv(self, *v, *len, finish);
+            }
+            SSilu { v, len } => {
+                let data = self.sram.v(*v, *len).to_vec();
+                let out = self.sram.v_mut(*v, *len);
+                for (o, &x) in out.iter_mut().zip(&data) {
+                    *o = x / (1.0 + (-x).exp());
+                }
+                wv(self, *v, *len, finish);
+            }
+            SGelu { v, len } => {
+                let data = self.sram.v(*v, *len).to_vec();
+                let out = self.sram.v_mut(*v, *len);
+                for (o, &x) in out.iter_mut().zip(&data) {
+                    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+                    *o = 0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh());
+                }
+                wv(self, *v, *len, finish);
+            }
+            HPrefetchV { hbm, dst, len } => {
+                let src = *hbm as usize;
+                let data = self.hbm_data[src..src + *len as usize].to_vec();
+                self.sram.v_mut(*dst, *len).copy_from_slice(&data);
+                wv(self, *dst, *len, finish);
+            }
+            HPrefetchM { hbm, dst, len } => {
+                let src = *hbm as usize;
+                let data = self.hbm_data[src..src + *len as usize].to_vec();
+                self.sram.m_mut(*dst, *len).copy_from_slice(&data);
+                self.writes.push(Write::Sram(Domain::Matrix, *dst, *len, finish));
+            }
+            HStore { src, hbm, len } => {
+                let data = self.sram.v(*src, *len).to_vec();
+                let dst = *hbm as usize;
+                self.hbm_data[dst..dst + *len as usize].copy_from_slice(&data);
+                // HBM contents guarded by the barrier mechanism
+            }
+            CLoop { .. } | CEndLoop | CBarrier | CHalt => {}
+        }
+    }
+
+    // ---- main loop ---------------------------------------------------------
+
+    /// Run a program to completion; returns the timing report.
+    pub fn run(&mut self, prog: &Program) -> SimReport {
+        prog.validate().expect("invalid program");
+        let clock_ghz = self.hw.clock_hz / 1e9;
+        let mut instrs = 0u64;
+        // loop stack: (body_start_pc, remaining_trips)
+        let mut stack: Vec<(usize, u32)> = Vec::new();
+        let mut pc = 0usize;
+        while pc < prog.instrs.len() {
+            let ins = &prog.instrs[pc];
+            instrs += 1;
+            match ins {
+                Instr::CLoop { count } => {
+                    stack.push((pc + 1, *count - 1));
+                    pc += 1;
+                    continue;
+                }
+                Instr::CEndLoop => {
+                    let (start, rem) = stack.pop().expect("unbalanced loop");
+                    if rem > 0 {
+                        stack.push((start, rem - 1));
+                        pc = start;
+                    } else {
+                        pc += 1;
+                    }
+                    continue;
+                }
+                Instr::CBarrier => {
+                    // wait for all outstanding writes + HBM transfers
+                    let drain = self.writes.iter().map(|w| match w {
+                        Write::Sram(_, _, _, f) | Write::FpReg(_, f)
+                        | Write::GpReg(_, f) => *f,
+                    }).max().unwrap_or(0);
+                    self.now = self.now.max(drain).max(
+                        (self.hbm.now_ns * clock_ghz) as u64);
+                    self.retire();
+                    pc += 1;
+                    continue;
+                }
+                Instr::CHalt => break,
+                _ => {}
+            }
+
+            let unit = unit_idx(ins.unit());
+            let ready = self.deps_ready(ins).max(self.unit_free[unit]).max(self.now);
+            self.stalls += ready - self.now;
+            // in-order issue: program order advances time
+            self.now = ready;
+            self.retire();
+
+            let finish = if unit == 3 {
+                // HBM transaction: latency from the DRAM model
+                let (hbm_addr, len, write) = match ins {
+                    Instr::HPrefetchV { hbm, len, .. }
+                    | Instr::HPrefetchM { hbm, len, .. } => (*hbm, *len, false),
+                    Instr::HStore { hbm, len, .. } => (*hbm, *len, true),
+                    _ => unreachable!(),
+                };
+                let bytes = len as u64 * 4;
+                self.hbm_bytes += bytes;
+                let start_ns = self.now as f64 / clock_ghz;
+                let fin_ns = self.hbm.transact(hbm_addr * 4, bytes, write,
+                                               start_ns.max(self.hbm_ns_base));
+                self.hbm_ns_base = fin_ns;
+                (fin_ns * clock_ghz).ceil() as u64
+            } else {
+                let mut cycles = self.lat.instr(ins);
+                if self.rtl_fills {
+                    cycles += match ins {
+                        Instr::MGemm { .. } | Instr::MSum { .. } =>
+                            self.lat.p.rtl_gemm_fill,
+                        Instr::SSoftmax { .. } | Instr::SLayerNorm { .. } =>
+                            self.lat.p.rtl_drain,
+                        _ => 0,
+                    };
+                }
+                self.now + cycles
+            };
+
+            // the issuing unit is busy until `finish` except the HBM
+            // engine, which queues in the background (prefetch overlap)
+            if unit == 3 {
+                self.unit_free[unit] = self.now + 1;
+                self.unit_busy[unit] += finish.saturating_sub(self.now);
+            } else {
+                self.unit_free[unit] = finish;
+                self.unit_busy[unit] += finish - self.now;
+            }
+            self.exec(ins, finish);
+            pc += 1;
+        }
+        // final drain
+        let drain = self.writes.iter().map(|w| match w {
+            Write::Sram(_, _, _, f) | Write::FpReg(_, f) | Write::GpReg(_, f) => *f,
+        }).max().unwrap_or(0);
+        let hbm_end = (self.hbm.now_ns * clock_ghz) as u64;
+        self.now = self.now.max(drain).max(hbm_end);
+
+        SimReport {
+            cycles: self.now,
+            instrs,
+            stall_cycles: self.stalls,
+            hbm_bytes: self.hbm_bytes,
+            unit_busy: [
+                (self.unit_busy[0], "matrix"),
+                (self.unit_busy[1], "vector"),
+                (self.unit_busy[2], "scalar"),
+                (self.unit_busy[3], "hbm"),
+            ],
+            hbm_busy_cycles: self.unit_busy[3],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+    use crate::isa::{Instr::*, ProgramBuilder};
+
+    fn sim() -> CycleSim {
+        CycleSim::new(HwConfig::validation_point(), 1 << 20)
+    }
+
+    #[test]
+    fn vector_add_functional_and_timed() {
+        let mut s = sim();
+        s.sram.v_mut(0, 4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        s.sram.v_mut(4, 4).copy_from_slice(&[10.0, 20.0, 30.0, 40.0]);
+        let mut b = ProgramBuilder::new();
+        b.push(VAddVV { dst: 8, a: 0, b: 4, len: 4 });
+        let r = s.run(&b.finish());
+        assert_eq!(s.sram.v(8, 4), &[11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(r.cycles, 7); // 6 fill + 1 chunk
+    }
+
+    #[test]
+    fn raw_dependency_stalls() {
+        let mut s = sim();
+        s.sram.v_mut(0, 8).copy_from_slice(&[1.0; 8]);
+        let mut b = ProgramBuilder::new();
+        b.push(VAddVV { dst: 8, a: 0, b: 0, len: 8 });   // finish @7
+        b.push(VMulVV { dst: 16, a: 8, b: 8, len: 8 });  // RAW on 8
+        let r = s.run(&b.finish());
+        // the second op can't start before cycle 7; unit also busy to 7
+        assert_eq!(r.cycles, 14);
+        assert_eq!(s.sram.v(16, 8)[0], 4.0);
+    }
+
+    #[test]
+    fn independent_units_overlap() {
+        let mut s = sim();
+        s.sram.v_mut(0, 8).fill(1.0);
+        s.sram.m_mut(0, 8).fill(1.0);
+        let mut b = ProgramBuilder::new();
+        // scalar op + vector op on disjoint data overlap in time
+        b.push(VAddVV { dst: 16, a: 0, b: 0, len: 8 });
+        b.push(SMovF { dst: 1, imm: 3.0 });
+        let r = s.run(&b.finish());
+        assert_eq!(r.cycles, 7); // scalar hid under vector
+    }
+
+    #[test]
+    fn gemm_functional_matches_matmul() {
+        let mut s = sim();
+        // act [2x3] @ wgt [3x2]
+        s.sram.v_mut(0, 6).copy_from_slice(&[1., 2., 3., 4., 5., 6.]);
+        s.sram.m_mut(0, 6).copy_from_slice(&[7., 8., 9., 10., 11., 12.]);
+        let mut b = ProgramBuilder::new();
+        b.push(MGemm { dst: 16, act: 0, wgt: 0, m: 2, k: 3, n: 2,
+                       transpose: false });
+        s.run(&b.finish());
+        // [[1,2,3],[4,5,6]] @ [[7,8],[9,10],[11,12]] = [[58,64],[139,154]]
+        assert_eq!(s.sram.v(16, 4), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn gemm_transpose() {
+        let mut s = sim();
+        s.sram.v_mut(0, 2).copy_from_slice(&[1., 2.]);
+        // w stored [n=2, k=2] row-major, used transposed
+        s.sram.m_mut(0, 4).copy_from_slice(&[1., 0., 0., 1.]);
+        let mut b = ProgramBuilder::new();
+        b.push(MGemm { dst: 8, act: 0, wgt: 0, m: 1, k: 2, n: 2,
+                       transpose: true });
+        s.run(&b.finish());
+        assert_eq!(s.sram.v(8, 2), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn loops_execute_functionally() {
+        let mut s = sim();
+        s.sram.v_mut(0, 4).fill(1.0);
+        let mut b = ProgramBuilder::new();
+        b.repeat(5, |b| {
+            b.push(VAddVV { dst: 0, a: 0, b: 0, len: 4 }); // doubles
+        });
+        s.run(&b.finish());
+        assert_eq!(s.sram.v(0, 1)[0], 32.0); // 2^5
+    }
+
+    #[test]
+    fn red_max_idx_accumulates_across_chunks() {
+        let mut s = sim();
+        s.sram.v_mut(0, 8).copy_from_slice(&[1., 2., 9., 4., 5., 6., 7., 8.]);
+        let mut b = ProgramBuilder::new();
+        b.push(SMovF { dst: 0, imm: f32::NEG_INFINITY });
+        b.push(SMovI { dst: 0, imm: 0 });
+        b.push(VRedMaxIdx { dst_val: 0, dst_idx: 0, src: 0, len: 4, idx_base: 100 });
+        b.push(VRedMaxIdx { dst_val: 0, dst_idx: 0, src: 4, len: 4, idx_base: 104 });
+        s.run(&b.finish());
+        assert_eq!(s.fp_regs[0], 9.0);
+        assert_eq!(s.gp_regs[0], 102); // global index of the 9.0
+    }
+
+    #[test]
+    fn hbm_prefetch_moves_data_and_takes_time() {
+        let mut s = sim();
+        s.hbm_store_f32(1000, &[5.0, 6.0, 7.0, 8.0]);
+        let mut b = ProgramBuilder::new();
+        b.push(HPrefetchV { hbm: 1000, dst: 0, len: 4 });
+        b.barrier();
+        b.push(VAddVV { dst: 8, a: 0, b: 0, len: 4 });
+        let r = s.run(&b.finish());
+        assert_eq!(s.sram.v(8, 4), &[10.0, 12.0, 14.0, 16.0]);
+        assert!(r.hbm_bytes == 16);
+        assert!(r.cycles > 7); // includes HBM latency
+    }
+
+    #[test]
+    fn softmax_functional() {
+        let mut s = sim();
+        s.sram.v_mut(0, 4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let mut b = ProgramBuilder::new();
+        b.push(SSoftmax { v: 0, len: 4 });
+        s.run(&b.finish());
+        let out = s.sram.v(0, 4);
+        let sum: f32 = out.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(out[3] > out[2] && out[2] > out[1]);
+    }
+
+    #[test]
+    fn rtl_mode_adds_fill() {
+        let run = |rtl: bool| {
+            let mut s = sim();
+            s.rtl_fills = rtl;
+            s.sram.v_mut(0, 64).fill(1.0);
+            s.sram.m_mut(0, 64 * 64).fill(0.5);
+            let mut b = ProgramBuilder::new();
+            b.push(MGemm { dst: 128, act: 0, wgt: 0, m: 1, k: 64, n: 64,
+                           transpose: false });
+            s.run(&b.finish()).cycles
+        };
+        let sim_c = run(false);
+        let rtl_c = run(true);
+        assert_eq!(sim_c, 80);
+        assert_eq!(rtl_c, 86); // the Table 3 +6 pipeline-fill delta
+    }
+}

@@ -1,0 +1,200 @@
+//! Per-instruction pipelined latency library (paper §4.1, Table 3).
+//!
+//! Cycle counts are derived from the unit microarchitecture and
+//! calibrated so the Table 3 validation point (VLEN=8, BLEN=4)
+//! reproduces the published RTL measurements exactly:
+//!
+//! * vector elementwise: `fill(6) + ceil(len/VLEN)`  → V_ADD_VV = 7
+//! * comparator-tree reductions: `(log2(VLEN)+1)·1 + chunks−1`
+//!   → V_RED_MAX = 4 (single-cycle comparators)
+//! * FP-adder-tree reductions: `(log2(VLEN)+1)·5 + chunks−1`
+//!   → V_RED_SUM = 20 (5-cycle pipelined FP adders)
+//! * streaming top-k: one element per cycle + 2 → L=32 ⇒ 34, L=64 ⇒ 66
+//! * GEMM: `tiles·(1+BLEN)` with
+//!   `tiles = ceil(m/BLEN)·ceil(n/BLEN)·ceil(k/MLEN)`
+//!   → [1×64×64] @ BLEN=4/MLEN=64 ⇒ 16 tiles ⇒ 80
+//! * softmax (compound on the scalar engine):
+//!   red_max + exp + red_sum + recip = 4+7+20+7 = 38
+//!
+//! The RTL-reference model ([`super::rtl`]) adds the pipeline fill/drain
+//! constants on top (+6/GEMM-op, +5 softmax drain, +6 per compound
+//! vector stage), reproducing Table 3's compound-sequence deltas.
+
+use crate::config::HwConfig;
+use crate::isa::Instr;
+use crate::util::ceil_div;
+
+/// Latency parameters (cycles).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyParams {
+    /// vector-unit pipeline fill for elementwise ops
+    pub v_fill: u64,
+    /// FP adder pipeline depth (reduction tree stage latency)
+    pub fp_add_lat: u64,
+    /// comparator stage latency
+    pub cmp_lat: u64,
+    /// scalar op latency
+    pub scalar_lat: u64,
+    /// systolic per-tile issue interval (output-stationary: 1 + BLEN)
+    pub gemm_tile_extra: u64,
+    /// RTL pipeline-fill overhead per matrix op (measured −6 in Table 3)
+    pub rtl_gemm_fill: u64,
+    /// RTL pipeline-drain overhead per compound scalar stage (−5)
+    pub rtl_drain: u64,
+}
+
+impl Default for LatencyParams {
+    fn default() -> Self {
+        LatencyParams {
+            v_fill: 6,
+            fp_add_lat: 5,
+            cmp_lat: 1,
+            scalar_lat: 1,
+            gemm_tile_extra: 1,
+            rtl_gemm_fill: 6,
+            rtl_drain: 5,
+        }
+    }
+}
+
+/// The latency library bound to a hardware configuration.
+#[derive(Clone, Debug)]
+pub struct LatencyLib {
+    pub hw: HwConfig,
+    pub p: LatencyParams,
+}
+
+impl LatencyLib {
+    pub fn new(hw: HwConfig) -> Self {
+        LatencyLib { hw, p: LatencyParams::default() }
+    }
+
+    fn vlen(&self) -> u64 {
+        self.hw.vlen as u64
+    }
+
+    fn chunks(&self, len: u64) -> u64 {
+        ceil_div(len.max(1), self.vlen())
+    }
+
+    pub fn v_elementwise(&self, len: u64) -> u64 {
+        self.p.v_fill + self.chunks(len)
+    }
+
+    fn tree_levels(&self) -> u64 {
+        (64 - (self.vlen().max(2) - 1).leading_zeros() as u64) + 1
+    }
+
+    pub fn v_red_cmp(&self, len: u64) -> u64 {
+        self.tree_levels() * self.p.cmp_lat + self.chunks(len) - 1
+    }
+
+    pub fn v_red_fp(&self, len: u64) -> u64 {
+        self.tree_levels() * self.p.fp_add_lat + self.chunks(len) - 1
+    }
+
+    pub fn v_topk(&self, len: u64) -> u64 {
+        len + 2
+    }
+
+    /// GEMM tile count under the systolic tiling (paper Fig. 6).
+    pub fn gemm_tiles(&self, m: u64, k: u64, n: u64) -> u64 {
+        let blen = self.hw.blen as u64;
+        let mlen = self.hw.mlen as u64;
+        ceil_div(m, blen) * ceil_div(n, blen) * ceil_div(k, mlen)
+    }
+
+    pub fn gemm(&self, m: u64, k: u64, n: u64) -> u64 {
+        self.gemm_tiles(m, k, n) * (self.p.gemm_tile_extra + self.hw.blen as u64)
+    }
+
+    pub fn softmax(&self, len: u64) -> u64 {
+        self.v_red_cmp(len) + self.v_elementwise(len) + self.v_red_fp(len)
+            + self.v_elementwise(len) // recip+scale pass
+    }
+
+    /// Transaction-level latency of one instruction (no pipeline fill).
+    pub fn instr(&self, ins: &Instr) -> u64 {
+        use Instr::*;
+        match ins {
+            MGemm { m, k, n, .. } => self.gemm(*m as u64, *k as u64, *n as u64),
+            MSum { parts, len, .. } => {
+                let levels = 64 - (parts.max(&2) - 1).leading_zeros() as u64;
+                levels * self.p.fp_add_lat + self.chunks(*len as u64)
+            }
+            VAddVV { len, .. } | VSubVV { len, .. } | VMulVV { len, .. }
+            | VExpV { len, .. } | VRecipV { len, .. } | VAddVS { len, .. }
+            | VMulVS { len, .. } | VSelectInt { len, .. } | VEqIs { len, .. } =>
+                self.v_elementwise(*len as u64),
+            VQuantMx { len, .. } => 2 * self.v_elementwise(*len as u64),
+            VRedMax { len, .. } | VRedMaxIdx { len, .. } =>
+                self.v_red_cmp(*len as u64),
+            VRedSum { len, .. } => self.v_red_fp(*len as u64),
+            VTopkMask { len, .. } => self.v_topk(*len as u64),
+            SMapVFp { len, .. } => *len as u64 + 2,
+            SSoftmax { len, .. } => self.softmax(*len as u64),
+            SLayerNorm { len, .. } => self.softmax(*len as u64) + self.v_elementwise(*len as u64),
+            SSilu { len, .. } | SGelu { len, .. } =>
+                2 * self.v_elementwise(*len as u64),
+            SStFp { .. } | SLdFp { .. } | SStInt { .. } | SLdInt { .. }
+            | SRecip { .. } | SAddF { .. } | SMulF { .. } | SMovI { .. }
+            | SMovF { .. } | SAddI { .. } => self.p.scalar_lat,
+            // H latency comes from the HBM model; 1 issue cycle here
+            HPrefetchV { .. } | HPrefetchM { .. } | HStore { .. } => 1,
+            CLoop { .. } | CEndLoop | CBarrier | CHalt => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+    use crate::isa::Instr::*;
+
+    fn lib() -> LatencyLib {
+        LatencyLib::new(HwConfig::validation_point()) // VLEN=8, BLEN=4
+    }
+
+    #[test]
+    fn table3_single_instruction_calibration() {
+        let l = lib();
+        // Table 3 single-instruction rows at VLEN=8, BLEN=4
+        assert_eq!(l.instr(&VAddVV { dst: 0, a: 0, b: 0, len: 8 }), 7);
+        assert_eq!(l.instr(&VExpV { dst: 0, src: 0, len: 8 }), 7);
+        assert_eq!(l.instr(&VRedMax { dst: 0, src: 0, len: 8 }), 4);
+        assert_eq!(l.instr(&VRedSum { dst: 0, src: 0, len: 8 }), 20);
+        assert_eq!(l.instr(&VTopkMask { dst: 0, conf: 0, mask: 0, k: 0, len: 32 }), 34);
+        assert_eq!(l.instr(&VTopkMask { dst: 0, conf: 0, mask: 0, k: 0, len: 64 }), 66);
+    }
+
+    #[test]
+    fn table3_gemm_tiles() {
+        let l = lib(); // BLEN=4, MLEN=64
+        assert_eq!(l.gemm_tiles(1, 64, 64), 16);
+        assert_eq!(l.gemm(1, 64, 64), 80); // 16 tiles x (1+4)
+    }
+
+    #[test]
+    fn table3_softmax_compound() {
+        let l = lib();
+        assert_eq!(l.softmax(8), 38); // 4 + 7 + 20 + 7
+    }
+
+    #[test]
+    fn latency_scales_with_len() {
+        let l = lib();
+        let a = l.instr(&VAddVV { dst: 0, a: 0, b: 0, len: 8 });
+        let b = l.instr(&VAddVV { dst: 0, a: 0, b: 0, len: 80 });
+        assert_eq!(b - a, 9); // 9 extra VLEN-8 chunks
+    }
+
+    #[test]
+    fn wider_vlen_fewer_cycles() {
+        let wide = LatencyLib::new(HwConfig::dart_default()); // VLEN=2048
+        let narrow = lib();
+        let len = 4096u32;
+        assert!(wide.instr(&VExpV { dst: 0, src: 0, len })
+                < narrow.instr(&VExpV { dst: 0, src: 0, len }));
+    }
+}

@@ -1,0 +1,28 @@
+//! The tri-path simulation framework (paper §4–§5).
+//!
+//! * [`latency`] — the per-instruction pipelined latency library shared
+//!   by all timing models, RTL-calibrated at the Table 3 validation
+//!   point (VLEN=8, BLEN=4): single-instruction error is zero by
+//!   construction, exactly as in the paper.
+//! * [`cycle`] — the transaction-level cycle-accurate simulator:
+//!   in-order issue with stall-on-dependency, functional numerics
+//!   cross-checked against the golden models, HBM + prefetch overlap.
+//! * [`rtl`] — the RTL-reference configuration (Verilator substitute,
+//!   DESIGN.md S2): the same engine with the per-op pipeline fill/drain
+//!   overheads the transaction-level model deliberately omits; ground
+//!   truth for the Table 3 compound-sequence comparison.
+//! * [`analytical`] — closed-form roofline model for design-space sweeps
+//!   (~orders of magnitude faster than [`cycle`]; cross-validated within
+//!   a few percent in Table 4).
+//! * [`power`] — parametric 7nm power/area models anchored to the
+//!   paper's ASAP7 reference points (0.237 mm², 27.83 TOPs/mm²).
+
+pub mod analytical;
+pub mod cycle;
+pub mod latency;
+pub mod power;
+pub mod rtl;
+
+pub use analytical::{AnalyticalSim, PhaseReport, RunReport};
+pub use cycle::{CycleSim, SimReport};
+pub use latency::LatencyLib;

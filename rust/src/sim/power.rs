@@ -1,0 +1,157 @@
+//! Parametric 7 nm power + area models (paper §4.1 / §6.2, DESIGN.md
+//! substitution S3).
+//!
+//! Constants are anchored to the paper's post-synthesis reference points
+//! (Synopsys DC, ASAP7 @ 1 GHz): one 4096-PE macro-structure occupies
+//! **0.237 mm²** of compute area and delivers **27.83 TOPs/mm²**; the
+//! full configuration's power lands in the regime that yields the
+//! published ×12–×23 tok/J advantage over A6000. DSE only needs these
+//! models to scale *relatively* across (BLEN, MLEN, VLEN, SRAM, HBM)
+//! configurations.
+
+use crate::config::HwConfig;
+
+/// Reference points from the paper's 7 nm synthesis.
+pub const REF_PES: f64 = 4096.0;
+pub const REF_COMPUTE_AREA_MM2: f64 = 0.237;
+pub const REF_TOPS_PER_MM2: f64 = 27.83;
+
+/// Energy constants (7 nm class).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// J per INT MAC (MXINT8 act x MXINT4 weight, incl. operand movement)
+    pub mac_j: f64,
+    /// J per vector-lane op (BF16)
+    pub vector_op_j: f64,
+    /// J per on-chip SRAM byte accessed
+    pub sram_byte_j: f64,
+    /// J per HBM byte transferred
+    pub hbm_byte_j: f64,
+    /// static/leakage + clocking power, W (scales weakly with area)
+    pub static_w: f64,
+}
+
+impl EnergyModel {
+    pub fn asap7(hw: &HwConfig) -> Self {
+        let sram_mb = (hw.vector_sram + hw.matrix_sram + hw.fp_sram
+            + hw.int_sram) as f64 / (1 << 20) as f64;
+        EnergyModel {
+            mac_j: 0.25e-12,
+            vector_op_j: 0.8e-12,
+            sram_byte_j: 0.06e-12,
+            hbm_byte_j: 4.0e-12,
+            static_w: 15.0 + 0.25 * sram_mb + 2.0e-5 * hw.total_pes() as f64,
+        }
+    }
+}
+
+/// Area model.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaReport {
+    pub compute_mm2: f64,
+    pub sram_mm2: f64,
+    pub total_mm2: f64,
+    pub tops: f64,
+    pub tops_per_mm2: f64,
+}
+
+/// Compute + SRAM area for a configuration (7 nm).
+pub fn area(hw: &HwConfig) -> AreaReport {
+    let compute = hw.total_pes() as f64 / REF_PES * REF_COMPUTE_AREA_MM2;
+    // 7nm SRAM macro density ≈ 0.45 mm²/MB (incl. periphery)
+    let sram_mb = (hw.vector_sram + hw.matrix_sram + hw.fp_sram
+        + hw.int_sram) as f64 / (1 << 20) as f64;
+    let sram = 0.45 * sram_mb;
+    let tops = 2.0 * hw.total_pes() as f64 * hw.clock_hz / 1e12;
+    AreaReport {
+        compute_mm2: compute,
+        sram_mm2: sram,
+        total_mm2: compute + sram,
+        tops,
+        tops_per_mm2: tops / (compute + sram),
+    }
+}
+
+/// Energy accounting for one run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyReport {
+    pub macs: f64,
+    pub vector_ops: f64,
+    pub sram_bytes: f64,
+    pub hbm_bytes: f64,
+    pub seconds: f64,
+    pub dynamic_j: f64,
+    pub static_j: f64,
+    pub total_j: f64,
+    pub avg_w: f64,
+}
+
+impl EnergyReport {
+    pub fn compute(model: &EnergyModel, macs: f64, vector_ops: f64,
+                   sram_bytes: f64, hbm_bytes: f64, seconds: f64) -> Self {
+        let dynamic = macs * model.mac_j + vector_ops * model.vector_op_j
+            + sram_bytes * model.sram_byte_j + hbm_bytes * model.hbm_byte_j;
+        let static_j = model.static_w * seconds;
+        EnergyReport {
+            macs,
+            vector_ops,
+            sram_bytes,
+            hbm_bytes,
+            seconds,
+            dynamic_j: dynamic,
+            static_j,
+            total_j: dynamic + static_j,
+            avg_w: (dynamic + static_j) / seconds.max(1e-12),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+
+    #[test]
+    fn reference_point_reproduced() {
+        // one macro-structure at BLEN=64/MLEN=512 is 32768 PEs = 8 ref
+        // units; compute area must scale linearly from 0.237 mm²/4096 PE
+        let mut hw = HwConfig::dart_default();
+        hw.grid = 1;
+        let a = area(&hw);
+        let expect = 32768.0 / REF_PES * REF_COMPUTE_AREA_MM2;
+        assert!((a.compute_mm2 - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tops_per_mm2_in_published_regime() {
+        let a = area(&HwConfig::dart_default());
+        // paper: 27.83 TOPs/mm² for the compute region; with SRAM counted
+        // the density drops but stays within the same order
+        let compute_density = a.tops / a.compute_mm2;
+        assert!((compute_density - 2.0 * 1e9 * REF_PES / 0.237 / 1e12).abs()
+                / compute_density < 0.05);
+        assert!(a.tops_per_mm2 > 5.0 && a.tops_per_mm2 < 80.0,
+                "{}", a.tops_per_mm2);
+    }
+
+    #[test]
+    fn energy_scales_with_work() {
+        let hw = HwConfig::dart_default();
+        let m = EnergyModel::asap7(&hw);
+        let e1 = EnergyReport::compute(&m, 1e12, 1e9, 1e9, 1e9, 0.1);
+        let e2 = EnergyReport::compute(&m, 2e12, 2e9, 2e9, 2e9, 0.1);
+        assert!(e2.dynamic_j > 1.9 * e1.dynamic_j);
+        assert_eq!(e1.static_j, e2.static_j);
+    }
+
+    #[test]
+    fn npu_power_regime() {
+        // the full DART config under load should land well under GPU TDPs
+        let hw = HwConfig::dart_default();
+        let m = EnergyModel::asap7(&hw);
+        // 1 second at 80% MAC utilization + 400 GB/s HBM
+        let macs = 0.8 * hw.total_pes() as f64 * hw.clock_hz;
+        let e = EnergyReport::compute(&m, macs, 1e10, 5e11, 4e11, 1.0);
+        assert!(e.avg_w > 20.0 && e.avg_w < 200.0, "avg {}", e.avg_w);
+    }
+}

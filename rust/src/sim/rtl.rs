@@ -1,0 +1,76 @@
+//! RTL-reference pipeline model — the Verilator substitute (DESIGN.md
+//! substitution S2, paper §5.2).
+//!
+//! The paper validates its transaction-level simulator bottom-up against
+//! Verilator RTL and attributes **all** compound-sequence error to
+//! pipeline inter-stage costs the simulator does not model: a constant
+//! ≈6-cycle first-tile pipeline-fill per matrix op and a ≈5-cycle drain
+//! between a compound scalar op's reduction and elementwise stages.
+//!
+//! We reproduce that structure exactly: the RTL reference is the same
+//! execution engine with those fill/drain constants enabled
+//! (single-instruction latencies are shared — "exact by construction" —
+//! so compound deltas isolate the pipeline overheads, giving Table 3's
+//! −7%/−11.6%/−8.9% shape).
+
+use crate::config::HwConfig;
+use crate::isa::Program;
+use crate::sim::cycle::{CycleSim, SimReport};
+
+/// Run a program on the RTL-reference configuration.
+pub fn run_rtl(hw: HwConfig, hbm_elements: usize, prog: &Program) -> SimReport {
+    let mut sim = CycleSim::new(hw, hbm_elements);
+    sim.rtl_fills = true;
+    sim.run(prog)
+}
+
+/// Run the same program on both models; returns (rtl, sim, rel_error).
+/// Negative error = simulator underestimates (the paper's sign).
+pub fn cross_validate(hw: &HwConfig, hbm_elements: usize, prog: &Program)
+                      -> (SimReport, SimReport, f64) {
+    let rtl = run_rtl(hw.clone(), hbm_elements, prog);
+    let mut s = CycleSim::new(hw.clone(), hbm_elements);
+    let sim = s.run(prog);
+    let err = sim.cycles as f64 / rtl.cycles as f64 - 1.0;
+    (rtl, sim, err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler;
+    use crate::config::HwConfig;
+
+    #[test]
+    fn single_instructions_identical_by_construction() {
+        // single vector instructions carry no fill constants in either
+        // model — Table 3's "Sim ≡ RTL by construction"
+        let hw = HwConfig::validation_point();
+        let prog = crate::isa::asm::assemble(
+            "V_EXP_V 0, 0, 8\nC_HALT\n").unwrap();
+        let (rtl, sim, err) = cross_validate(&hw, 64, &prog);
+        assert_eq!(rtl.cycles, sim.cycles);
+        assert_eq!(err, 0.0);
+    }
+
+    #[test]
+    fn gemm_compound_error_is_minus_seven_pct() {
+        let hw = HwConfig::validation_point();
+        let prog = compiler::gemm_program(1, 64, 64);
+        let (rtl, sim, err) = cross_validate(&hw, 1 << 16, &prog);
+        assert_eq!(sim.cycles, 80);
+        assert_eq!(rtl.cycles, 86);
+        assert!((err - (-0.0698)).abs() < 0.01, "err {err}");
+    }
+
+    #[test]
+    fn error_shrinks_with_tile_count() {
+        // the −6 is constant per op, so relative error diminishes at
+        // larger tile counts (paper: "at larger tile counts the relative
+        // impact diminishes further")
+        let hw = HwConfig::validation_point();
+        let small = cross_validate(&hw, 1 << 16, &compiler::gemm_program(1, 64, 64)).2;
+        let large = cross_validate(&hw, 1 << 20, &compiler::gemm_program(4, 64, 256)).2;
+        assert!(large.abs() < small.abs(), "small {small}, large {large}");
+    }
+}

@@ -1,0 +1,198 @@
+//! Measurement substrate: timing harness with warmup + percentile
+//! statistics (the criterion stand-in, DESIGN.md S7) and a small
+//! property-test driver (the proptest stand-in).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of samples (seconds).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty());
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        let pct = |p: f64| s[(p * (n - 1) as f64).round() as usize];
+        Summary {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: s[0],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            max: s[n - 1],
+        }
+    }
+}
+
+/// A single benchmark result with throughput accounting.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// optional items-per-iteration for throughput reporting
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        self.items_per_iter / self.summary.mean
+    }
+
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        let tp = if self.items_per_iter > 0.0 {
+            format!("  {:>12.0} items/s", self.throughput())
+        } else {
+            String::new()
+        };
+        format!(
+            "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  (n={}){}",
+            self.name,
+            fmt_time(s.mean),
+            fmt_time(s.p50),
+            fmt_time(s.p95),
+            s.n,
+            tp
+        )
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+/// Benchmark runner: warms up, then samples `f` until `budget` elapses
+/// (at least `min_iters`). Returns per-iteration timings.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            budget: Duration::from_millis(800),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            budget: Duration::from_millis(200),
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&self, name: &str, items_per_iter: f64,
+                             mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters || start.elapsed() < self.budget {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        BenchResult {
+            name: name.to_string(),
+            summary: Summary::from_samples(&samples),
+            items_per_iter,
+        }
+    }
+}
+
+/// Property-test driver (proptest stand-in): runs `check` against `cases`
+/// seeded inputs produced by `gen`; panics with the seed on failure so
+/// the case is reproducible.
+pub fn prop_check<T, G, C>(name: &str, cases: usize, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut crate::util::SplitMix64) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    for seed in 0..cases as u64 {
+        let mut rng = crate::util::SplitMix64::new(0xDA27 ^ seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!("property `{name}` failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_percentiles() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let m = Summary::from_samples(&s);
+        assert_eq!(m.min, 1.0);
+        assert_eq!(m.max, 100.0);
+        assert!((m.p50 - 50.0).abs() <= 1.0);
+        assert!((m.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bencher_runs() {
+        let b = Bencher::quick();
+        let r = b.bench("noop", 1.0, || { std::hint::black_box(1 + 1); });
+        assert!(r.summary.n >= 3);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn prop_check_passes() {
+        prop_check("u64 roundtrip", 16, |r| r.next_u64(), |v| {
+            if *v == *v { Ok(()) } else { Err("NaN u64?!".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn prop_check_fails_with_seed() {
+        prop_check("always-fails", 2, |r| r.next_u64(),
+                   |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2e-9).contains("ns"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2.0).contains(" s"));
+    }
+}

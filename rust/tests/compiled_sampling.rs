@@ -1,0 +1,119 @@
+//! Compiler → cycle-simulator functional validation: the compiled
+//! Algorithm 2 program, executed on the cycle-accurate simulator, must
+//! produce *exactly* the tokens/confidences of the golden sampling
+//! engine — and match the manifest goldens shared with the python suite.
+
+use dart::compiler::{sampling_program, SamplingLayout};
+use dart::config::HwConfig;
+use dart::sampling::{self, SamplePrecision};
+use dart::sim::cycle::CycleSim;
+use dart::util::SplitMix64;
+
+/// Run the compiled program on the cycle sim; returns (x_new, report).
+fn run_compiled(b: usize, l: usize, v: usize, v_chunk: usize, mask_id: i32,
+                z: &[f32], x: &[i32], k: &[u32], hw: HwConfig)
+                -> (Vec<i32>, dart::sim::cycle::SimReport) {
+    let layout = SamplingLayout::new(b as u32, l as u32, v as u32,
+                                     v_chunk as u32, mask_id);
+    let prog = sampling_program(&layout, k);
+    let mut sim = CycleSim::new(hw, b * l * v + 16);
+    sim.hbm_store_f32(layout.hbm_logits as usize, z);
+    sim.sram.i_mut(layout.x_addr, (b * l) as u32).copy_from_slice(x);
+    let report = sim.run(&prog);
+    let x_new = sim.sram.i(layout.x_addr, (b * l) as u32).to_vec();
+    (x_new, report)
+}
+
+fn hw_for(v_chunk: usize) -> HwConfig {
+    let mut hw = HwConfig::dart_edge();
+    hw.vector_sram = ((2 * v_chunk + 256) * 4) as u64;
+    hw.int_sram = 64 << 10;
+    hw.v_chunk = v_chunk as u32;
+    hw
+}
+
+#[test]
+fn compiled_program_matches_golden_engine() {
+    let (b, l, v, mask_id) = (2usize, 16usize, 256usize, 0i32);
+    let mut rng = SplitMix64::new(7);
+    let z = rng.normal_vec(b * l * v, 3.0);
+    let mut x = vec![mask_id; b * l];
+    for i in 0..6 {
+        x[i] = 40 + i as i32;
+    }
+    let k = [3usize, 5usize];
+    let golden = sampling::sample_block(&z, &x, b, l, v, &k, mask_id, 64,
+                                        SamplePrecision::Fp32);
+    let (got, report) = run_compiled(b, l, v, 64, mask_id, &z, &x,
+                                     &[3, 5], hw_for(64));
+    assert_eq!(got, golden.x_new);
+    assert!(report.cycles > 0);
+    assert!(report.hbm_bytes as usize >= 2 * b * l * v * 4); // two passes
+}
+
+#[test]
+fn chunk_size_does_not_change_tokens() {
+    let (b, l, v, mask_id) = (1usize, 8usize, 512usize, 0i32);
+    let mut rng = SplitMix64::new(9);
+    let z = rng.normal_vec(b * l * v, 4.0);
+    let x = vec![mask_id; b * l];
+    let mut base: Option<Vec<i32>> = None;
+    for chunk in [32usize, 128, 512] {
+        let (got, _) = run_compiled(b, l, v, chunk, mask_id, &z, &x, &[4],
+                                    hw_for(chunk));
+        match &base {
+            None => base = Some(got),
+            Some(bb) => assert_eq!(&got, bb, "chunk {chunk}"),
+        }
+    }
+}
+
+#[test]
+fn bigger_vchunk_fewer_cycles() {
+    // Fig. 7(d): larger V_chunk amortizes control/reduction overheads
+    let (b, l, v, mask_id) = (1usize, 4usize, 4096usize, 0i32);
+    let mut rng = SplitMix64::new(11);
+    let z = rng.normal_vec(b * l * v, 2.0);
+    let x = vec![mask_id; b * l];
+    let (_, small) = run_compiled(b, l, v, 128, mask_id, &z, &x, &[2],
+                                  hw_for(128));
+    let (_, big) = run_compiled(b, l, v, 2048, mask_id, &z, &x, &[2],
+                                hw_for(2048));
+    assert!(big.cycles < small.cycles,
+            "big {} !< small {}", big.cycles, small.cycles);
+}
+
+#[test]
+fn matches_manifest_sampling_golden() {
+    let Some(dir) = dart::runtime::artifacts_dir() else {
+        eprintln!("artifacts not built; skipping");
+        return;
+    };
+    let m = dart::runtime::Manifest::load(&dir).unwrap();
+    let g = m.root.at(&["goldens", "sampling"]).unwrap();
+    let b = g.get("b").unwrap().as_u64().unwrap() as usize;
+    let l = g.get("l").unwrap().as_u64().unwrap() as usize;
+    let v = g.get("v").unwrap().as_u64().unwrap() as usize;
+    let mask_id = g.get("mask_id").unwrap().as_i64().unwrap() as i32;
+    let z = g.get("z").unwrap().as_f32_vec().unwrap();
+    let x = g.get("x").unwrap().as_i32_vec().unwrap();
+    let k: Vec<u32> = g.get("k").unwrap().as_i32_vec().unwrap()
+        .iter().map(|&v| v as u32).collect();
+    let expect = g.get("x_new").unwrap().as_i32_vec().unwrap();
+
+    // golden engine agrees with the python oracle
+    let ku: Vec<usize> = k.iter().map(|&v| v as usize).collect();
+    let res = sampling::sample_block(&z, &x, b, l, v, &ku, mask_id, 16,
+                                     SamplePrecision::Fp32);
+    assert_eq!(res.x_new, expect, "golden engine vs python oracle");
+    let conf_expect = g.get("conf").unwrap().as_f32_vec().unwrap();
+    for (a, e) in res.conf.iter().zip(&conf_expect) {
+        assert!((a - e).abs() < 1e-5, "{a} vs {e}");
+    }
+    let am = g.get("argmax").unwrap().as_i32_vec().unwrap();
+    assert_eq!(res.argmax, am);
+
+    // compiled program agrees too
+    let (got, _) = run_compiled(b, l, v, 16, mask_id, &z, &x, &k, hw_for(16));
+    assert_eq!(got, expect, "compiled program vs python oracle");
+}

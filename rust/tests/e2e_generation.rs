@@ -1,0 +1,137 @@
+//! End-to-end parity: the Rust coordinator's blocked-diffusion loop over
+//! the PJRT executables must reproduce the python reference generation
+//! (manifest goldens) for every cache strategy, and the KV-quantized
+//! paths must stay close to the fp32 path.
+//!
+//! Skipped when artifacts are not built (`make artifacts`).
+
+use dart::config::CacheMode;
+use dart::coordinator::{EngineConfig, GenerationEngine};
+use dart::kvcache::KvQuantPolicy;
+use dart::quant::BaosVariant;
+use dart::runtime::{artifacts_dir, Executor};
+use dart::sampling::SamplePrecision;
+
+fn engine(cache: CacheMode, kv: KvQuantPolicy) -> Option<GenerationEngine> {
+    let dir = artifacts_dir()?;
+    let ex = Executor::load(&dir).ok()?;
+    Some(GenerationEngine::new(ex, EngineConfig {
+        cache,
+        kv_policy: kv,
+        sample_precision: SamplePrecision::Fp32,
+        v_chunk: 64,
+    }))
+}
+
+fn golden(eng: &GenerationEngine, key: &str) -> Vec<i32> {
+    eng.ex.manifest.root
+        .at(&["goldens", "generation", key]).unwrap()
+        .as_i32_vec().unwrap()
+}
+
+fn agreement(a: &[i32], b: &[i32]) -> f64 {
+    let same = a.iter().zip(b).filter(|(x, y)| x == y).count();
+    same as f64 / a.len() as f64
+}
+
+#[test]
+fn generation_matches_python_reference_all_modes() {
+    for (mode, key) in [(CacheMode::None, "none"),
+                        (CacheMode::Prefix, "prefix"),
+                        (CacheMode::Dual, "dual")] {
+        let Some(mut eng) = engine(mode, KvQuantPolicy::fp32()) else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        let prompt = golden(&eng, "prompt");
+        let expect = golden(&eng, key);
+        let res = eng.generate(&[prompt.clone()]).unwrap();
+        let got = &res.tokens[0];
+        assert_eq!(got.len(), expect.len());
+        // prompt region is identical by construction
+        assert_eq!(&got[..prompt.len()], &prompt[..]);
+        // generated region: logit-level fp differences between the ref
+        // and the AOT pallas path can flip low-confidence commitments;
+        // require near-total agreement
+        let agree = agreement(got, &expect);
+        assert!(agree >= 0.9, "{key}: agreement {agree}");
+        // nothing left masked
+        let g = eng.ex.manifest.geometry;
+        assert!(got[g.prompt_len..].iter().all(|&t| t != g.mask_id));
+    }
+}
+
+#[test]
+fn batched_generation_consistent_with_single() {
+    let Some(mut eng) = engine(CacheMode::Dual, KvQuantPolicy::fp32()) else {
+        eprintln!("artifacts not built; skipping");
+        return;
+    };
+    let prompt = golden(&eng, "prompt");
+    let single = eng.generate(&[prompt.clone()]).unwrap().tokens[0].clone();
+    // batch of 4 identical prompts: every row must equal the single run
+    let res = eng.generate(&[prompt.clone(), prompt.clone(),
+                             prompt.clone(), prompt]).unwrap();
+    for row in &res.tokens {
+        assert_eq!(row, &single);
+    }
+}
+
+#[test]
+fn kv_quantized_paths_stay_close() {
+    let Some(mut base) = engine(CacheMode::Dual, KvQuantPolicy::fp32()) else {
+        eprintln!("artifacts not built; skipping");
+        return;
+    };
+    let prompt = golden(&base, "prompt");
+    let fp = base.generate(&[prompt.clone()]).unwrap().tokens[0].clone();
+
+    // BAOS-smoothed MXINT4 KV on the *real* runtime path
+    let mut baos = engine(CacheMode::Dual,
+                          KvQuantPolicy::mxint4_baos(BaosVariant::Mean, 1.0))
+        .unwrap();
+    let qb = baos.generate(&[prompt.clone()]).unwrap();
+    let agree_baos = agreement(&qb.tokens[0], &fp);
+    assert!(agree_baos > 0.75, "baos agreement {agree_baos}");
+    // the packed cache must actually be ~4-bit sized
+    let mut fp32_eng = engine(CacheMode::Dual, KvQuantPolicy::fp32()).unwrap();
+    let rf = fp32_eng.generate(&[prompt.clone()]).unwrap();
+    assert!(qb.kv_packed_bytes * 5 < rf.kv_packed_bytes,
+            "4-bit cache {} vs fp32 {}", qb.kv_packed_bytes,
+            rf.kv_packed_bytes);
+
+    // naive MXINT4 should not beat BAOS in agreement with the fp path
+    let mut naive = engine(CacheMode::Dual, KvQuantPolicy::mxint4_naive())
+        .unwrap();
+    let qn = naive.generate(&[prompt]).unwrap();
+    let agree_naive = agreement(&qn.tokens[0], &fp);
+    assert!(agree_baos >= agree_naive - 0.05,
+            "baos {agree_baos} vs naive {agree_naive}");
+}
+
+#[test]
+fn sampling_precisions_on_runtime_path() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("artifacts not built; skipping");
+        return;
+    };
+    let prompt_len;
+    let fp = {
+        let ex = Executor::load(&dir).unwrap();
+        prompt_len = ex.manifest.geometry.prompt_len;
+        let mut eng = GenerationEngine::new(ex, EngineConfig::default());
+        let prompt = golden(&eng, "prompt");
+        eng.generate(&[prompt]).unwrap().tokens[0].clone()
+    };
+    for prec in [SamplePrecision::Bf16, SamplePrecision::MxFp8] {
+        let ex = Executor::load(&dir).unwrap();
+        let mut eng = GenerationEngine::new(ex, EngineConfig {
+            sample_precision: prec,
+            ..EngineConfig::default()
+        });
+        let prompt = golden(&eng, "prompt");
+        let got = eng.generate(&[prompt]).unwrap().tokens[0].clone();
+        let agree = agreement(&got[prompt_len..], &fp[prompt_len..]);
+        assert!(agree > 0.7, "{prec:?} agreement {agree}");
+    }
+}
