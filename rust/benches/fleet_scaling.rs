@@ -1,0 +1,70 @@
+//! Fleet scale-out bench: generated-token throughput vs device count for
+//! a fixed saturating backlog (every request offered at t~0 so the fleet
+//! runs flat-out; admission control off — this measures capacity, not
+//! SLO policy). A healthy data-parallel fabric shows monotonically
+//! increasing throughput 1 -> 8 devices; the speedup column quantifies
+//! how close the router + batcher get to linear.
+//!
+//!     cargo bench --bench fleet_scaling [-- --smoke]
+//!
+//! `--smoke` shrinks the trace for the CI fast path (scripts/ci.sh).
+
+use dart::cli::Args;
+use dart::cluster::{generate_trace, Arrival, ClusterTopology, FleetSim,
+                    RoutePolicy, SloConfig, TraceSpec};
+use dart::config::{CacheMode, HwConfig, ModelArch};
+use dart::report::{self, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let n_requests = args.get_usize("requests",
+                                    if smoke { 64 } else { 512 });
+    let device_counts: &[usize] =
+        if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+
+    // one shared backlog: everything arrives within ~milliseconds, so
+    // makespan == capacity-bound service time
+    let trace = generate_trace(&TraceSpec::chat(
+        n_requests, Arrival::Poisson { rps: 1.0e5 }, 42));
+    let tokens: u64 = trace.iter().map(|r| r.gen_len as u64).sum();
+    println!("fleet_scaling: {} requests, {} generated tokens, \
+              LLaDA-8B / dual cache, least-outstanding router\n",
+             trace.len(), tokens);
+
+    let mut t = Table::new(
+        "throughput vs device count (saturating backlog)",
+        &["devices", "makespan(s)", "tok/s", "speedup", "mean util",
+          "padding waste"]);
+    let mut results: Vec<(usize, f64)> = Vec::new();
+    let mut base_tps = 0.0;
+    for &n in device_counts {
+        let topo = ClusterTopology::homogeneous(
+            n, HwConfig::dart_default(), ModelArch::llada_8b(),
+            CacheMode::Dual);
+        let mut slo = SloConfig::auto(&topo);
+        slo.admission = false; // capacity measurement: admit everything
+        let mut sim = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo);
+        let m = sim.run(&trace);
+        assert_eq!(m.completed as usize, trace.len(),
+                   "bench trace must fully complete");
+        let tps = m.throughput_tps();
+        if base_tps == 0.0 {
+            base_tps = tps;
+        }
+        t.row(&[n.to_string(), report::f2(m.horizon_s), report::f1(tps),
+                report::speedup(tps / base_tps),
+                report::pct(m.mean_utilization()),
+                report::pct(m.padding_waste_frac())]);
+        results.push((n, tps));
+    }
+    t.print();
+
+    let monotonic = results.windows(2).all(|w| w[1].1 > w[0].1);
+    println!("monotonic scaling {} -> {} devices: {}",
+             results.first().unwrap().0, results.last().unwrap().0,
+             if monotonic { "OK" } else { "FAIL" });
+    if !monotonic {
+        std::process::exit(1);
+    }
+}

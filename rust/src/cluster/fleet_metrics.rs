@@ -1,0 +1,259 @@
+//! Cluster-wide accounting: TTFT/TPOT/E2E percentile reservoirs,
+//! goodput (SLO-attaining throughput), shed/retry counters, per-device
+//! utilization, and padding-waste tokens — the fleet analogue of
+//! [`crate::coordinator::Metrics`], rendered through [`crate::report`].
+
+use crate::report::{self, Table};
+use crate::stats::{fmt_time, Reservoir};
+
+/// Per-device rollup inside a fleet run.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceStats {
+    pub name: String,
+    pub batches: u64,
+    pub requests: u64,
+    pub padded_lanes: u64,
+    pub busy_s: f64,
+    pub tokens: u64,
+}
+
+/// Why a request never produced tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// admission control predicted an SLO miss on every candidate
+    SloPredicted,
+    /// every candidate queue was at capacity (backpressure)
+    Capacity,
+}
+
+#[derive(Clone, Debug)]
+pub struct FleetMetrics {
+    /// time-to-first-block-of-tokens, seconds
+    pub ttft: Reservoir,
+    /// per-token pace after the first block, seconds/token
+    pub tpot: Reservoir,
+    /// end-to-end request latency, seconds
+    pub e2e: Reservoir,
+    pub admitted: u64,
+    pub completed: u64,
+    pub shed_slo: u64,
+    pub shed_capacity: u64,
+    /// placement attempts beyond the first (router fall-through)
+    pub retries: u64,
+    pub slo_met: u64,
+    /// real generated tokens delivered to requesters
+    pub tokens: u64,
+    /// tokens delivered inside both SLO deadlines
+    pub slo_tokens: u64,
+    /// tokens burned in padded executable lanes (whole wasted lanes)
+    pub padded_lane_tokens: u64,
+    /// tokens burned padding short requests up to the batch's max
+    /// lengths (ragged sequence padding inside real lanes)
+    pub ragged_pad_tokens: u64,
+    /// virtual-time span of the run (last completion), seconds
+    pub horizon_s: f64,
+    pub devices: Vec<DeviceStats>,
+}
+
+impl FleetMetrics {
+    pub fn new(device_names: Vec<String>) -> Self {
+        FleetMetrics {
+            ttft: Reservoir::with_seed(4096, 0x77F7),
+            tpot: Reservoir::with_seed(4096, 0x7907),
+            e2e: Reservoir::with_seed(4096, 0xE2E),
+            admitted: 0,
+            completed: 0,
+            shed_slo: 0,
+            shed_capacity: 0,
+            retries: 0,
+            slo_met: 0,
+            tokens: 0,
+            slo_tokens: 0,
+            padded_lane_tokens: 0,
+            ragged_pad_tokens: 0,
+            horizon_s: 0.0,
+            devices: device_names
+                .into_iter()
+                .map(|name| DeviceStats { name, ..DeviceStats::default() })
+                .collect(),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_completion(&mut self, device: usize, ttft_s: f64,
+                             tpot_s: f64, e2e_s: f64, gen_len: usize,
+                             slo_met: bool) {
+        self.completed += 1;
+        self.tokens += gen_len as u64;
+        self.ttft.push(ttft_s);
+        self.tpot.push(tpot_s);
+        self.e2e.push(e2e_s);
+        if slo_met {
+            self.slo_met += 1;
+            self.slo_tokens += gen_len as u64;
+        }
+        let d = &mut self.devices[device];
+        d.requests += 1;
+        d.tokens += gen_len as u64;
+    }
+
+    pub fn record_shed(&mut self, reason: ShedReason) {
+        match reason {
+            ShedReason::SloPredicted => self.shed_slo += 1,
+            ShedReason::Capacity => self.shed_capacity += 1,
+        }
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed_slo + self.shed_capacity
+    }
+
+    pub fn offered(&self) -> u64 {
+        self.completed + self.shed()
+    }
+
+    /// Raw generated-token throughput over the run horizon.
+    pub fn throughput_tps(&self) -> f64 {
+        self.tokens as f64 / self.horizon_s.max(1e-9)
+    }
+
+    /// Goodput: only tokens delivered inside both SLO deadlines count.
+    pub fn goodput_tps(&self) -> f64 {
+        self.slo_tokens as f64 / self.horizon_s.max(1e-9)
+    }
+
+    pub fn goodput_rps(&self) -> f64 {
+        self.slo_met as f64 / self.horizon_s.max(1e-9)
+    }
+
+    /// Fraction of offered requests that completed inside SLO.
+    pub fn slo_attainment(&self) -> f64 {
+        self.slo_met as f64 / (self.offered() as f64).max(1.0)
+    }
+
+    /// busy seconds / horizon for one device.
+    pub fn utilization(&self, device: usize) -> f64 {
+        self.devices[device].busy_s / self.horizon_s.max(1e-9)
+    }
+
+    pub fn mean_utilization(&self) -> f64 {
+        if self.devices.is_empty() {
+            return 0.0;
+        }
+        (0..self.devices.len()).map(|i| self.utilization(i)).sum::<f64>()
+            / self.devices.len() as f64
+    }
+
+    /// Fraction of generated-token work burned on padding (whole padded
+    /// lanes + ragged sequence padding) relative to all token work done.
+    pub fn padding_waste_frac(&self) -> f64 {
+        let waste = (self.padded_lane_tokens + self.ragged_pad_tokens) as f64;
+        let total = waste + self.tokens as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            waste / total
+        }
+    }
+
+    /// Human report: fleet summary, latency percentiles, per-device table.
+    /// `slo` is the (ttft_s, tpot_s) deadline pair used for goodput.
+    pub fn report(&self, slo: Option<(f64, f64)>) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "offered {}  completed {}  shed {} (slo {} / capacity {})  \
+             retries {}\n",
+            self.offered(), self.completed, self.shed(), self.shed_slo,
+            self.shed_capacity, self.retries));
+        out.push_str(&format!(
+            "horizon {:.2}s  throughput {:.1} tok/s  goodput {:.1} tok/s \
+             ({:.1} req/s)  SLO attainment {}\n",
+            self.horizon_s, self.throughput_tps(), self.goodput_tps(),
+            self.goodput_rps(), report::pct(self.slo_attainment())));
+        if let Some((ttft, tpot)) = slo {
+            out.push_str(&format!(
+                "SLO deadlines: TTFT <= {}  TPOT <= {}\n",
+                fmt_time(ttft), fmt_time(tpot)));
+        }
+        out.push_str(&format!(
+            "padding waste {} (lane tokens {}, ragged tokens {})\n",
+            report::pct(self.padding_waste_frac()),
+            self.padded_lane_tokens, self.ragged_pad_tokens));
+
+        let mut lat = Table::new("fleet latency",
+                                 &["metric", "p50", "p95", "p99", "max"]);
+        for (name, r) in [("TTFT", &self.ttft), ("TPOT", &self.tpot),
+                          ("E2E", &self.e2e)] {
+            if let Some(s) = r.summary() {
+                lat.row(&[name.into(), fmt_time(s.p50), fmt_time(s.p95),
+                          fmt_time(s.p99), fmt_time(s.max)]);
+            }
+        }
+        out.push('\n');
+        out.push_str(&lat.render());
+
+        let mut dev = Table::new(
+            "per-device",
+            &["device", "batches", "requests", "padded lanes", "tokens",
+              "busy(s)", "utilization"]);
+        for (i, d) in self.devices.iter().enumerate() {
+            dev.row(&[d.name.clone(), d.batches.to_string(),
+                      d.requests.to_string(), d.padded_lanes.to_string(),
+                      d.tokens.to_string(), report::f2(d.busy_s),
+                      report::pct(self.utilization(i))]);
+        }
+        out.push('\n');
+        out.push_str(&dev.render());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FleetMetrics {
+        let mut m = FleetMetrics::new(vec!["npu0".into(), "npu1".into()]);
+        m.horizon_s = 10.0;
+        m.devices[0].busy_s = 8.0;
+        m.devices[1].busy_s = 4.0;
+        m.record_completion(0, 0.5, 0.01, 2.0, 100, true);
+        m.record_completion(1, 3.0, 0.05, 9.0, 200, false);
+        m.record_shed(ShedReason::Capacity);
+        m.record_shed(ShedReason::SloPredicted);
+        m.padded_lane_tokens = 50;
+        m.ragged_pad_tokens = 50;
+        m
+    }
+
+    #[test]
+    fn goodput_counts_only_slo_tokens() {
+        let m = sample();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.offered(), 4);
+        assert_eq!(m.tokens, 300);
+        assert_eq!(m.slo_tokens, 100);
+        assert!((m.throughput_tps() - 30.0).abs() < 1e-9);
+        assert!((m.goodput_tps() - 10.0).abs() < 1e-9);
+        assert!((m.slo_attainment() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_and_waste() {
+        let m = sample();
+        assert!((m.utilization(0) - 0.8).abs() < 1e-9);
+        assert!((m.utilization(1) - 0.4).abs() < 1e-9);
+        assert!((m.mean_utilization() - 0.6).abs() < 1e-9);
+        assert!((m.padding_waste_frac() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_mentions_the_headline_numbers() {
+        let m = sample();
+        let r = m.report(Some((1.0, 0.02)));
+        for needle in ["TTFT", "TPOT", "E2E", "p50", "p95", "p99",
+                       "goodput", "utilization", "npu1", "shed"] {
+            assert!(r.contains(needle), "report missing {needle}\n{r}");
+        }
+    }
+}

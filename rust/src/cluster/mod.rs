@@ -1,0 +1,87 @@
+//! Multi-NPU scale-out serving fabric (the paper's Fig. 2 host side,
+//! replicated): topology description, data-parallel request routing,
+//! SLO-aware continuous-batching admission, trace-driven load
+//! generation, and fleet-wide metrics.
+//!
+//! The paper measures one DART device; serving heavy traffic is a fleet
+//! problem, so this layer composes N devices behind a router and prices
+//! them with the analytical simulator in a virtual-time discrete-event
+//! loop. Components:
+//!
+//! * [`topology`] — cluster description: per-device [`crate::config::HwConfig`],
+//!   cache mode, compiled batch variants, and the host↔device
+//!   interconnect latency model; `[cluster]` config-file overrides;
+//! * [`router`] — placement over data-parallel replicas: round-robin,
+//!   least-outstanding-work, and batch-variant-aware policies;
+//! * [`scheduler`] — [`FleetSim`], the discrete-event driver: per-device
+//!   [`crate::coordinator::Batcher`] queues in virtual time, SLO
+//!   (TTFT/TPOT) admission control with shed/retry, backpressure;
+//! * [`workload`] — deterministic trace generation (Poisson / bursty /
+//!   uniform arrivals crossed with a mixed-length request mix) and a
+//!   replayable plain-text trace format;
+//! * [`fleet_metrics`] — cluster p50/p95/p99 TTFT/TPOT/E2E, goodput vs
+//!   throughput, per-device utilization, padding-waste accounting.
+//!
+//! [`LocalFleet`] is the real-backend counterpart: N
+//! [`crate::coordinator::Coordinator`] workers (one PJRT client each)
+//! behind the same round-robin placement, for machines that have the
+//! AOT artifacts built.
+
+pub mod fleet_metrics;
+pub mod router;
+pub mod scheduler;
+pub mod topology;
+pub mod workload;
+
+pub use fleet_metrics::{DeviceStats, FleetMetrics, ShedReason};
+pub use router::{DeviceLoad, RoutePolicy, Router};
+pub use scheduler::{fleet_capacity_tps, FleetSim, SloConfig};
+pub use topology::{ClusterTopology, DeviceSpec, InterconnectModel};
+pub use workload::{generate_trace, trace_from_text, trace_to_text, Arrival,
+                   MixEntry, TraceRequest, TraceSpec};
+
+use std::path::Path;
+use std::sync::mpsc::Receiver;
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, EngineConfig, Metrics, Response};
+
+/// A fleet of real serving workers on this host: one
+/// [`Coordinator`] (and thus one PJRT client + engine) per simulated
+/// device, with round-robin placement. The per-worker dynamic batcher
+/// still does the variant packing; this just spreads request streams
+/// across engines.
+pub struct LocalFleet {
+    workers: Vec<Coordinator>,
+    next: usize,
+}
+
+impl LocalFleet {
+    /// Start `n` named coordinators over the same artifact directory.
+    pub fn start(artifacts: &Path, n: usize, cfg: EngineConfig)
+                 -> Result<Self> {
+        assert!(n > 0, "fleet needs at least one worker");
+        let workers = (0..n)
+            .map(|i| Coordinator::start_named(
+                artifacts, &format!("npu{i}"), cfg, None))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(LocalFleet { workers, next: 0 })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a prompt to the next worker in rotation.
+    pub fn submit(&mut self, prompt: Vec<i32>) -> Receiver<Response> {
+        let rx = self.workers[self.next].submit(prompt);
+        self.next = (self.next + 1) % self.workers.len();
+        rx
+    }
+
+    /// Stop every worker and collect per-device metrics.
+    pub fn shutdown(self) -> Vec<Metrics> {
+        self.workers.into_iter().map(|w| w.shutdown()).collect()
+    }
+}

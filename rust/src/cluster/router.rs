@@ -1,0 +1,163 @@
+//! Request routing over data-parallel replicas.
+//!
+//! The router ranks devices best-first from a per-arrival load snapshot;
+//! the scheduler walks that ranking so SLO-rejected or backpressured
+//! placements automatically fall through to the next candidate.
+//! Policies:
+//!
+//! * `RoundRobin` — classic rotation, ignores load (the baseline);
+//! * `LeastOutstanding` — least outstanding *work* (estimated seconds of
+//!   queued + in-flight service), not just queue depth, so a device
+//!   chewing on a long-form batch stops attracting traffic even when
+//!   its queue looks short;
+//! * `VariantAware` — least-outstanding, tie-broken toward the device
+//!   where one more request brings the pending queue closest to an
+//!   exactly-fillable compiled batch variant (minimizes padded lanes,
+//!   the shape-static executable's waste mode). The padding signal is
+//!   the batcher's own [`crate::coordinator::Batcher::plan_padding_for`],
+//!   so the ranking can never disagree with what the batcher will
+//!   actually emit.
+
+/// Router-visible snapshot of one device at an arrival instant.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceLoad {
+    pub queue_len: usize,
+    pub queue_capacity: usize,
+    /// estimated seconds of work already committed to this device
+    pub outstanding_s: f64,
+    /// padded lanes a batch would carry if one more request joined the
+    /// queue and it flushed at the smallest fitting compiled variant
+    pub pad_if_added: usize,
+}
+
+impl DeviceLoad {
+    pub fn is_full(&self) -> bool {
+        self.queue_len >= self.queue_capacity
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastOutstanding,
+    VariantAware,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Some(RoutePolicy::RoundRobin),
+            "least" | "least-outstanding" | "lo" =>
+                Some(RoutePolicy::LeastOutstanding),
+            "variant" | "variant-aware" | "va" =>
+                Some(RoutePolicy::VariantAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastOutstanding => "least-outstanding",
+            RoutePolicy::VariantAware => "variant-aware",
+        }
+    }
+}
+
+pub struct Router {
+    pub policy: RoutePolicy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Router { policy, rr_next: 0 }
+    }
+
+    /// Rank device indices best-first for one arrival. Devices with full
+    /// queues sink to the back regardless of policy so the scheduler's
+    /// fall-through retry naturally skips them.
+    pub fn rank(&mut self, loads: &[DeviceLoad]) -> Vec<usize> {
+        let n = loads.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                idx.rotate_left(self.rr_next % n.max(1));
+                self.rr_next = (self.rr_next + 1) % n.max(1);
+            }
+            RoutePolicy::LeastOutstanding => {
+                idx.sort_by(|&a, &b| {
+                    loads[a].outstanding_s
+                        .partial_cmp(&loads[b].outstanding_s)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(loads[a].queue_len.cmp(&loads[b].queue_len))
+                });
+            }
+            RoutePolicy::VariantAware => {
+                idx.sort_by(|&a, &b| {
+                    loads[a].pad_if_added.cmp(&loads[b].pad_if_added).then(
+                        loads[a].outstanding_s
+                            .partial_cmp(&loads[b].outstanding_s)
+                            .unwrap_or(std::cmp::Ordering::Equal))
+                });
+            }
+        }
+        // stable partition: non-full devices keep their policy order
+        let (open, full): (Vec<usize>, Vec<usize>) =
+            idx.into_iter().partition(|&i| !loads[i].is_full());
+        let mut out = open;
+        out.extend(full);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(queue_len: usize, outstanding_s: f64, pad: usize) -> DeviceLoad {
+        DeviceLoad {
+            queue_len,
+            queue_capacity: 16,
+            outstanding_s,
+            pad_if_added: pad,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let loads = vec![load(0, 0.0, 0); 3];
+        assert_eq!(r.rank(&loads)[0], 0);
+        assert_eq!(r.rank(&loads)[0], 1);
+        assert_eq!(r.rank(&loads)[0], 2);
+        assert_eq!(r.rank(&loads)[0], 0);
+    }
+
+    #[test]
+    fn least_outstanding_picks_idlest() {
+        let mut r = Router::new(RoutePolicy::LeastOutstanding);
+        let loads = vec![load(4, 9.0, 0), load(1, 0.5, 0), load(2, 3.0, 0)];
+        assert_eq!(r.rank(&loads), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn variant_aware_prefers_exact_fill() {
+        let mut r = Router::new(RoutePolicy::VariantAware);
+        // device 1 would complete a compiled variant exactly (0 padding)
+        let loads = vec![load(1, 1.0, 2), load(3, 1.0, 0), load(0, 1.0, 3)];
+        assert_eq!(r.rank(&loads)[0], 1);
+        // padding equal -> falls back to outstanding work
+        let loads = vec![load(1, 5.0, 1), load(1, 0.5, 1)];
+        assert_eq!(r.rank(&loads)[0], 1);
+    }
+
+    #[test]
+    fn full_devices_sink_to_back() {
+        let mut r = Router::new(RoutePolicy::LeastOutstanding);
+        let mut a = load(16, 0.0, 0); // full but idlest
+        a.queue_capacity = 16;
+        let loads = vec![a, load(2, 7.0, 0)];
+        assert_eq!(r.rank(&loads), vec![1, 0]);
+    }
+}

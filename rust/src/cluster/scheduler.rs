@@ -1,0 +1,461 @@
+//! SLO-aware fleet scheduling: a virtual-time discrete-event simulator
+//! that drives N analytical DART devices through a request trace with
+//! continuous-batching admission, deadline-based shed/retry, and
+//! cluster-wide accounting.
+//!
+//! Each simulated device owns a real [`crate::coordinator::Batcher`]
+//! (driven through its virtual-time API — the same queueing/variant
+//! logic the live serving worker uses) and an
+//! [`crate::sim::analytical::AnalyticalSim`] service model that prices a
+//! flushed batch at the device's hardware point. The event loop
+//! interleaves trace arrivals with device-free events; admission control
+//! predicts TTFT from the router's load snapshot and sheds (or retries on
+//! the next-ranked device) when the prediction blows the deadline, so an
+//! overloaded fleet degrades by rejecting early instead of timing out
+//! every queued request.
+
+use std::collections::HashMap;
+
+use crate::config::Workload;
+use crate::coordinator::batcher::{BatchPlan, Batcher, BatcherConfig};
+use crate::sim::analytical::{AnalyticalSim, PrecisionConfig};
+
+use super::fleet_metrics::{FleetMetrics, ShedReason};
+use super::router::{DeviceLoad, RoutePolicy, Router};
+use super::topology::{ClusterTopology, DeviceSpec};
+use super::workload::TraceRequest;
+
+/// Service-level objectives and the shed/retry policy around them.
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// time-to-first-token-block deadline, seconds
+    pub ttft_s: f64,
+    /// per-token pace deadline after the first block, seconds/token
+    pub tpot_s: f64,
+    /// additional placement attempts after the first-ranked device
+    pub max_retries: usize,
+    /// predict-and-shed at admission (false = admit everything and let
+    /// deadlines be missed — the measurement mode for raw throughput)
+    pub admission: bool,
+}
+
+impl SloConfig {
+    /// Deadlines derived from the fleet's own unloaded service curve:
+    /// a single-request batch must be able to meet them with ~4x queueing
+    /// headroom, so the knobs stay meaningful across hardware points and
+    /// models without hand tuning.
+    pub fn auto(topo: &ClusterTopology) -> Self {
+        let mut svc = ServiceModel::new(&topo.devices[0], topo);
+        let gen = (4 * topo.block_len) as usize;
+        let (total, first) = svc.service(1, 128, gen);
+        let tail_tokens = (gen as u64 - topo.block_len).max(1) as f64;
+        SloConfig {
+            ttft_s: 4.0 * first,
+            tpot_s: 4.0 * (total - first) / tail_tokens,
+            max_retries: 2,
+            admission: true,
+        }
+    }
+}
+
+/// Closed-form service pricing for one device: memoized over the
+/// (variant, prompt, gen) grid the length mix actually produces.
+pub(crate) struct ServiceModel {
+    sim: AnalyticalSim,
+    model: crate::config::ModelArch,
+    cache: crate::config::CacheMode,
+    block_len: u64,
+    steps_per_block: u64,
+    memo: HashMap<(usize, usize, usize), (f64, f64)>,
+    /// calibrated generated-tokens/s at the largest variant — the
+    /// router's backlog→seconds conversion factor
+    pub tokens_per_s: f64,
+}
+
+impl ServiceModel {
+    pub(crate) fn new(spec: &DeviceSpec, topo: &ClusterTopology) -> Self {
+        let sim = AnalyticalSim::new(spec.hw.clone(),
+                                     PrecisionConfig::dart_full_quant());
+        let mut m = ServiceModel {
+            sim,
+            model: topo.model.clone(),
+            cache: spec.cache,
+            block_len: topo.block_len,
+            steps_per_block: topo.steps_per_block,
+            memo: HashMap::new(),
+            tokens_per_s: 1.0,
+        };
+        let biggest = *spec.batch_variants.iter().max().unwrap_or(&1);
+        let gen = (4 * topo.block_len) as usize;
+        let (total, _) = m.service(biggest, 128, gen);
+        m.tokens_per_s = (biggest * gen) as f64 / total.max(1e-9);
+        m
+    }
+
+    /// (total_s, first_block_s) for a batch of `variant` lanes padded to
+    /// `prompt` x `gen` tokens. First-block time is approximated as an
+    /// equal share across generation blocks.
+    pub(crate) fn service(&mut self, variant: usize, prompt: usize,
+                          gen: usize) -> (f64, f64) {
+        if let Some(&hit) = self.memo.get(&(variant, prompt, gen)) {
+            return hit;
+        }
+        let w = Workload {
+            model: self.model.clone(),
+            batch: variant as u64,
+            prompt_len: prompt as u64,
+            gen_len: gen as u64,
+            block_len: self.block_len,
+            steps_per_block: self.steps_per_block,
+            cache: self.cache,
+        };
+        let total = self.sim.run(&w).total_s;
+        let first = total / w.n_blocks().max(1) as f64;
+        self.memo.insert((variant, prompt, gen), (total, first));
+        (total, first)
+    }
+}
+
+/// One simulated device: the live Batcher in virtual time + the service
+/// model + busy-window state.
+struct SimDevice {
+    batcher: Batcher<InFlight>,
+    svc: ServiceModel,
+    busy_until: f64,
+    busy_s: f64,
+}
+
+/// A routed request waiting in a device queue.
+struct InFlight {
+    req: TraceRequest,
+    dispatch_s: f64,
+}
+
+impl SimDevice {
+    fn new(spec: &DeviceSpec, topo: &ClusterTopology) -> Self {
+        let bcfg = BatcherConfig {
+            variants: spec.batch_variants.clone(),
+            max_wait: std::time::Duration::from_secs_f64(spec.max_wait_s),
+            capacity: spec.queue_capacity,
+        };
+        SimDevice {
+            batcher: Batcher::new(bcfg),
+            svc: ServiceModel::new(spec, topo),
+            busy_until: 0.0,
+            busy_s: 0.0,
+        }
+    }
+
+    /// Estimated seconds of committed work: the rest of the in-flight
+    /// batch plus queued generation tokens at the calibrated pace.
+    fn outstanding_s(&self, now: f64) -> f64 {
+        let busy = (self.busy_until - now).max(0.0);
+        let queued_tokens: usize =
+            self.batcher.iter_items().map(|i| i.req.gen_len).sum();
+        busy + queued_tokens as f64 / self.svc.tokens_per_s
+    }
+
+    /// Padded lanes the batcher would actually emit if one more request
+    /// joined (the variant-aware router signal: distance from the queue
+    /// depth to the smallest compiled variant that fits it).
+    fn pad_if_added(&self) -> usize {
+        self.batcher.plan_padding_for(self.batcher.len() + 1)
+    }
+
+    /// Next virtual time this device can make progress, if any.
+    fn next_action_time(&self, now: f64) -> Option<f64> {
+        if self.busy_until > now {
+            return Some(self.busy_until);
+        }
+        self.batcher.next_fire_at().map(|t| t.max(now))
+    }
+}
+
+/// The cluster driver: topology + router + SLO policy.
+pub struct FleetSim {
+    pub topo: ClusterTopology,
+    pub slo: SloConfig,
+    router: Router,
+}
+
+impl FleetSim {
+    pub fn new(topo: ClusterTopology, policy: RoutePolicy,
+               slo: SloConfig) -> Self {
+        FleetSim { topo, slo, router: Router::new(policy) }
+    }
+
+    /// Serve a trace to completion; the trace must be arrival-sorted
+    /// (generate_trace / trace_from_text both guarantee it).
+    pub fn run(&mut self, trace: &[TraceRequest]) -> FleetMetrics {
+        let mut devices: Vec<SimDevice> = self.topo.devices.iter()
+            .map(|spec| SimDevice::new(spec, &self.topo))
+            .collect();
+        let mut metrics = FleetMetrics::new(
+            self.topo.devices.iter().map(|d| d.name.clone()).collect());
+
+        let mut next_arrival = 0usize;
+        let mut now = 0.0f64;
+        loop {
+            let t_arr = trace.get(next_arrival).map(|r| r.arrival_s);
+            let t_dev = devices.iter()
+                .filter_map(|d| d.next_action_time(now))
+                .fold(None, |acc: Option<f64>, t| Some(match acc {
+                    Some(a) if a <= t => a,
+                    _ => t,
+                }));
+            let step_to = match (t_arr, t_dev) {
+                (None, None) => break,
+                (Some(a), None) => a,
+                (None, Some(d)) => d,
+                (Some(a), Some(d)) => a.min(d),
+            };
+            now = now.max(step_to);
+
+            while next_arrival < trace.len()
+                && trace[next_arrival].arrival_s <= now
+            {
+                let req = trace[next_arrival];
+                next_arrival += 1;
+                self.admit(req, now, &mut devices, &mut metrics);
+            }
+
+            for (di, d) in devices.iter_mut().enumerate() {
+                if d.busy_until <= now {
+                    if let Some(plan) = d.batcher.next_batch_at(now) {
+                        execute_plan(d, di, plan, now, self.topo.block_len,
+                                     &self.slo, &mut metrics);
+                    }
+                }
+            }
+        }
+
+        let horizon = devices.iter()
+            .map(|d| d.busy_until)
+            .fold(now, f64::max);
+        metrics.horizon_s = horizon;
+        for (di, d) in devices.iter().enumerate() {
+            metrics.devices[di].busy_s = d.busy_s;
+        }
+        metrics
+    }
+
+    /// Route + admission-control one arrival: walk the router's ranking,
+    /// skipping devices whose predicted TTFT blows the deadline or whose
+    /// queue is full, up to the retry budget; shed if nothing sticks.
+    fn admit(&mut self, req: TraceRequest, now: f64,
+             devices: &mut [SimDevice], metrics: &mut FleetMetrics) {
+        let loads: Vec<DeviceLoad> = devices.iter()
+            .map(|d| DeviceLoad {
+                queue_len: d.batcher.len(),
+                queue_capacity: d.batcher.cfg.capacity,
+                outstanding_s: d.outstanding_s(now),
+                pad_if_added: d.pad_if_added(),
+            })
+            .collect();
+        let order = self.router.rank(&loads);
+        let dispatch = self.topo.interconnect
+            .dispatch_s(self.topo.request_bytes(req.prompt_len));
+
+        let mut saw_capacity_reject = false;
+        for (attempt, &di) in order.iter()
+            .take(self.slo.max_retries + 1).enumerate()
+        {
+            if attempt > 0 {
+                metrics.retries += 1;
+            }
+            let d = &mut devices[di];
+            if self.slo.admission {
+                let fill = (loads[di].queue_len + 1)
+                    .min(*d.batcher.cfg.variants.last().unwrap());
+                let (_, first) =
+                    d.svc.service(fill, req.prompt_len, req.gen_len);
+                let max_wait = d.batcher.cfg.max_wait.as_secs_f64();
+                let predicted_ttft =
+                    dispatch + loads[di].outstanding_s + max_wait + first;
+                if predicted_ttft > self.slo.ttft_s {
+                    continue;
+                }
+            }
+            if d.batcher.push_at(InFlight { req, dispatch_s: dispatch }, now) {
+                metrics.admitted += 1;
+                return;
+            }
+            saw_capacity_reject = true;
+        }
+        metrics.record_shed(if saw_capacity_reject {
+            ShedReason::Capacity
+        } else {
+            ShedReason::SloPredicted
+        });
+    }
+}
+
+/// Price a flushed batch on its device and account every lane.
+fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
+                now: f64, block_len: u64, slo: &SloConfig,
+                metrics: &mut FleetMetrics) {
+    let real = plan.items.len();
+    let variant = plan.variant;
+    let pmax = plan.items.iter().map(|i| i.req.prompt_len).max().unwrap();
+    let gmax = plan.items.iter().map(|i| i.req.gen_len).max().unwrap();
+    let (total, first) = d.svc.service(variant, pmax, gmax);
+    // blocked diffusion commits tokens block-synchronously: block k of
+    // every lane lands at ~k * per_block into the run
+    let blocks_max = crate::util::ceil_div(gmax as u64, block_len).max(1);
+    let per_block = total / blocks_max as f64;
+    d.busy_until = now + total;
+    d.busy_s += total;
+
+    let ds = &mut metrics.devices[di];
+    ds.batches += 1;
+    ds.padded_lanes += (variant - real) as u64;
+    metrics.padded_lane_tokens += ((variant - real) * gmax) as u64;
+
+    for inf in plan.items {
+        let queued_s = now - inf.req.arrival_s;
+        let ttft = inf.dispatch_s + queued_s + first;
+        let e2e = inf.dispatch_s + queued_s + total;
+        // decode pace: this request's own tokens are all committed once
+        // its own block count has run, even if the batch continues to
+        // gmax for longer lanes — a single-block request pays no TPOT
+        // (everything arrived in the first block; TTFT covers it), and
+        // the extra batch time it sits through shows up in E2E only
+        let blocks_i =
+            crate::util::ceil_div(inf.req.gen_len as u64, block_len).max(1);
+        let tail_tokens = (inf.req.gen_len as u64).saturating_sub(block_len);
+        let tpot = if blocks_i > 1 && tail_tokens > 0 {
+            (blocks_i - 1) as f64 * per_block / tail_tokens as f64
+        } else {
+            0.0
+        };
+        let slo_met = ttft <= slo.ttft_s && tpot <= slo.tpot_s;
+        metrics.ragged_pad_tokens += (gmax - inf.req.gen_len) as u64;
+        metrics.record_completion(di, ttft, tpot, e2e, inf.req.gen_len,
+                                  slo_met);
+    }
+}
+
+/// Aggregate generated-token capacity of the fleet (sum of each
+/// device's calibrated largest-variant pace) — the load generator's
+/// reference point for picking an offered rate.
+pub fn fleet_capacity_tps(topo: &ClusterTopology) -> f64 {
+    topo.devices.iter()
+        .map(|spec| ServiceModel::new(spec, topo).tokens_per_s)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CacheMode, HwConfig, ModelArch};
+    use crate::cluster::workload::{generate_trace, Arrival, TraceSpec};
+
+    fn small_topo(n: usize) -> ClusterTopology {
+        ClusterTopology::homogeneous(
+            n, HwConfig::dart_default(), ModelArch::llada_8b(),
+            CacheMode::Dual)
+    }
+
+    fn saturating_trace(n: usize) -> Vec<crate::cluster::TraceRequest> {
+        generate_trace(&TraceSpec::chat(
+            n, Arrival::Poisson { rps: 1.0e5 }, 42))
+    }
+
+    #[test]
+    fn completes_every_request_without_admission_control() {
+        let topo = small_topo(2);
+        let mut slo = SloConfig::auto(&topo);
+        slo.admission = false;
+        let mut sim = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo);
+        let trace = saturating_trace(40);
+        let m = sim.run(&trace);
+        assert_eq!(m.completed, 40);
+        assert_eq!(m.shed(), 0);
+        assert!(m.tokens > 0);
+        assert!(m.horizon_s > 0.0);
+        assert!(m.ttft.summary().unwrap().p50 > 0.0);
+        // both devices did work under least-outstanding routing
+        assert!(m.devices.iter().all(|d| d.requests > 0), "{:?}", m.devices);
+    }
+
+    #[test]
+    fn more_devices_finish_a_fixed_backlog_faster() {
+        let trace = saturating_trace(64);
+        let run = |n: usize| {
+            let topo = small_topo(n);
+            let mut slo = SloConfig::auto(&topo);
+            slo.admission = false;
+            FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+                .run(&trace)
+        };
+        let m1 = run(1);
+        let m4 = run(4);
+        assert_eq!(m1.completed, 64);
+        assert_eq!(m4.completed, 64);
+        assert!(m4.horizon_s < m1.horizon_s,
+                "4 devices {} vs 1 device {}", m4.horizon_s, m1.horizon_s);
+        assert!(m4.throughput_tps() > m1.throughput_tps());
+    }
+
+    #[test]
+    fn admission_control_sheds_under_overload_and_protects_ttft() {
+        let topo = small_topo(1);
+        let slo = SloConfig::auto(&topo);
+        let mut sim = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo);
+        // far more offered work than one device can hold inside TTFT
+        let trace = saturating_trace(200);
+        let m = sim.run(&trace);
+        assert!(m.shed() > 0, "expected sheds under overload");
+        assert!(m.completed > 0);
+        // everything that *was* admitted should sit near the deadline
+        // envelope (the prediction is an estimate — allow generous slack,
+        // the point is that TTFT doesn't grow with the 200-deep backlog)
+        let p50 = m.ttft.summary().unwrap().p50;
+        let p95 = m.ttft.summary().unwrap().p95;
+        assert!(p50 <= 2.0 * sim.slo.ttft_s,
+                "p50 TTFT {} vs deadline {}", p50, sim.slo.ttft_s);
+        assert!(p95 <= 4.0 * sim.slo.ttft_s,
+                "p95 TTFT {} vs deadline {}", p95, sim.slo.ttft_s);
+    }
+
+    #[test]
+    fn light_load_meets_slo() {
+        let topo = small_topo(4);
+        let cap = fleet_capacity_tps(&topo);
+        let spec = TraceSpec::chat(60, Arrival::Poisson { rps: 0.0 }, 5);
+        // offer ~30% of capacity
+        let rps = 0.3 * cap / spec.mean_gen_len();
+        let spec = TraceSpec::chat(60, Arrival::Poisson { rps }, 5);
+        let slo = SloConfig::auto(&topo);
+        let mut sim = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo);
+        let m = sim.run(&generate_trace(&spec));
+        assert!(m.shed() * 10 <= m.offered(),
+                "light load shed {} of {}", m.shed(), m.offered());
+        assert!(m.slo_attainment() > 0.7,
+                "attainment {}", m.slo_attainment());
+        assert!(m.goodput_tps() > 0.0);
+    }
+
+    #[test]
+    fn service_model_memoizes_and_scales() {
+        let topo = small_topo(1);
+        let mut svc = ServiceModel::new(&topo.devices[0], &topo);
+        let (t1, f1) = svc.service(1, 128, 256);
+        let (t1b, _) = svc.service(1, 128, 256);
+        assert_eq!(t1, t1b);
+        assert!(f1 < t1);
+        let (t16, _) = svc.service(16, 128, 256);
+        // batching amortizes: 16 lanes cost far less than 16 singles
+        assert!(t16 < 16.0 * t1, "t16 {t16} vs 16*t1 {}", 16.0 * t1);
+        let (tlong, _) = svc.service(1, 128, 512);
+        assert!(tlong > t1);
+    }
+
+    #[test]
+    fn capacity_estimate_scales_with_devices() {
+        let c1 = fleet_capacity_tps(&small_topo(1));
+        let c4 = fleet_capacity_tps(&small_topo(4));
+        assert!((c4 / c1 - 4.0).abs() < 1e-6);
+        assert!(c1 > 0.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Cluster description: which NPU devices exist, how each is configured,
+//! and the host↔device interconnect between them — the paper's Fig. 2
+//! host side scaled out from one DART device to a data-parallel fleet.
+//!
+//! Every device carries its own hardware point ([`crate::config::HwConfig`]),
+//! KV-cache mode and compiled batch-variant set, so heterogeneous fleets
+//! (e.g. a few `dart_default` cards fronted by `dart_edge` overflow
+//! devices) are expressible. Overrides load from the same TOML-subset
+//! config files the rest of the stack uses (`[cluster]` section via
+//! [`crate::config::parse_config`]).
+
+use crate::config::{CacheMode, ConfigDoc, HwConfig, ModelArch};
+
+/// Latency model for shipping a request from the router to a device:
+/// fixed per-hop latency plus serialization at link bandwidth. Token
+/// grids are small, so this mostly guards against pathological SLO
+/// budgets rather than dominating them.
+#[derive(Clone, Copy, Debug)]
+pub struct InterconnectModel {
+    /// per-hop fixed latency, seconds
+    pub base_s: f64,
+    /// link bandwidth, bytes/s
+    pub bytes_per_s: f64,
+}
+
+impl InterconnectModel {
+    /// PCIe Gen4 x16 host link (~25 GB/s effective).
+    pub fn pcie_gen4() -> Self {
+        InterconnectModel { base_s: 5e-6, bytes_per_s: 25.0e9 }
+    }
+
+    /// NVLink-class fabric.
+    pub fn nvlink() -> Self {
+        InterconnectModel { base_s: 1e-6, bytes_per_s: 240.0e9 }
+    }
+
+    /// 100G Ethernet scale-out (disaggregated router tier).
+    pub fn ethernet_100g() -> Self {
+        InterconnectModel { base_s: 50e-6, bytes_per_s: 12.5e9 }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pcie" | "pcie4" => Some(Self::pcie_gen4()),
+            "nvlink" => Some(Self::nvlink()),
+            "eth" | "ethernet" | "100g" => Some(Self::ethernet_100g()),
+            _ => None,
+        }
+    }
+
+    /// One-way dispatch latency for a `bytes`-sized payload.
+    pub fn dispatch_s(&self, bytes: u64) -> f64 {
+        self.base_s + bytes as f64 / self.bytes_per_s
+    }
+}
+
+/// One NPU device slot in the cluster.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub hw: HwConfig,
+    pub cache: CacheMode,
+    /// compiled batch variants available on this device, ascending
+    pub batch_variants: Vec<usize>,
+    /// max time a request may wait for batchmates on this device
+    pub max_wait_s: f64,
+    /// per-device admission queue bound (backpressure)
+    pub queue_capacity: usize,
+}
+
+/// The whole fleet: shared model, per-device specs, interconnect, and
+/// the blocked-diffusion geometry every device serves.
+#[derive(Clone, Debug)]
+pub struct ClusterTopology {
+    pub model: ModelArch,
+    pub block_len: u64,
+    pub steps_per_block: u64,
+    pub devices: Vec<DeviceSpec>,
+    pub interconnect: InterconnectModel,
+}
+
+impl ClusterTopology {
+    /// N identical devices at one hardware point (the common data-parallel
+    /// deployment; paper §6.2 geometry: block_len 64, 16 steps/block).
+    pub fn homogeneous(n: usize, hw: HwConfig, model: ModelArch,
+                       cache: CacheMode) -> Self {
+        assert!(n > 0, "cluster needs at least one device");
+        let devices = (0..n)
+            .map(|i| DeviceSpec {
+                name: format!("npu{i}"),
+                hw: hw.clone(),
+                cache,
+                batch_variants: vec![1, 2, 4, 8, 16],
+                max_wait_s: 0.05,
+                queue_capacity: 1024,
+            })
+            .collect();
+        ClusterTopology {
+            model,
+            block_len: 64,
+            steps_per_block: 16,
+            devices,
+            interconnect: InterconnectModel::pcie_gen4(),
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Wire bytes for a request payload (i32 token ids).
+    pub fn request_bytes(&self, prompt_len: usize) -> u64 {
+        (prompt_len * 4) as u64
+    }
+
+    /// Apply `[cluster]` overrides from a parsed config file:
+    /// `devices`, `max_wait_ms`, `queue_capacity`, `variants` (comma
+    /// list), `link` (pcie|nvlink|eth), `block_len`, `steps_per_block`,
+    /// `cache`. Device count changes replicate device 0's spec.
+    pub fn apply_overrides(&mut self, doc: &ConfigDoc) {
+        if let Some(n) = doc.get_u64("cluster", "devices") {
+            let proto = self.devices[0].clone();
+            self.devices = (0..n.max(1) as usize)
+                .map(|i| DeviceSpec { name: format!("npu{i}"), ..proto.clone() })
+                .collect();
+        }
+        if let Some(ms) = doc.get_f64("cluster", "max_wait_ms") {
+            for d in &mut self.devices {
+                d.max_wait_s = ms / 1e3;
+            }
+        }
+        if let Some(cap) = doc.get_u64("cluster", "queue_capacity") {
+            for d in &mut self.devices {
+                d.queue_capacity = cap as usize;
+            }
+        }
+        if let Some(list) = doc.get_str("cluster", "variants") {
+            let variants: Vec<usize> = list
+                .split(',')
+                .filter_map(|v| v.trim().parse().ok())
+                .filter(|&v| v > 0)
+                .collect();
+            if !variants.is_empty() {
+                for d in &mut self.devices {
+                    d.batch_variants = variants.clone();
+                }
+            }
+        }
+        if let Some(link) = doc.get_str("cluster", "link") {
+            if let Some(ic) = InterconnectModel::parse(link) {
+                self.interconnect = ic;
+            }
+        }
+        if let Some(v) = doc.get_u64("cluster", "block_len") {
+            self.block_len = v.max(1);
+        }
+        if let Some(v) = doc.get_u64("cluster", "steps_per_block") {
+            self.steps_per_block = v.max(1);
+        }
+        if let Some(c) = doc.get_str("cluster", "cache") {
+            if let Some(mode) = CacheMode::parse(c) {
+                for d in &mut self.devices {
+                    d.cache = mode;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_config;
+
+    #[test]
+    fn homogeneous_fleet_shape() {
+        let t = ClusterTopology::homogeneous(
+            4, HwConfig::dart_default(), ModelArch::llada_8b(),
+            CacheMode::Dual);
+        assert_eq!(t.n_devices(), 4);
+        assert_eq!(t.devices[3].name, "npu3");
+        assert_eq!(t.devices[0].batch_variants.last(), Some(&16));
+        assert_eq!(t.block_len, 64);
+    }
+
+    #[test]
+    fn dispatch_latency_scales_with_bytes() {
+        let ic = InterconnectModel::pcie_gen4();
+        let small = ic.dispatch_s(4 * 128);
+        let big = ic.dispatch_s(4 * 4096);
+        assert!(big > small);
+        assert!(small >= ic.base_s);
+        // eth hop costs more than nvlink for the same payload
+        assert!(InterconnectModel::ethernet_100g().dispatch_s(1024)
+                > InterconnectModel::nvlink().dispatch_s(1024));
+    }
+
+    #[test]
+    fn cluster_overrides_apply() {
+        let doc = parse_config(r#"
+[cluster]
+devices = 6
+max_wait_ms = 12.5
+queue_capacity = 64
+variants = "1, 4, 8"
+link = "nvlink"
+cache = "prefix"
+block_len = 32
+"#).unwrap();
+        let mut t = ClusterTopology::homogeneous(
+            2, HwConfig::dart_edge(), ModelArch::tiny(), CacheMode::Dual);
+        t.apply_overrides(&doc);
+        assert_eq!(t.n_devices(), 6);
+        assert!((t.devices[5].max_wait_s - 0.0125).abs() < 1e-12);
+        assert_eq!(t.devices[0].queue_capacity, 64);
+        assert_eq!(t.devices[0].batch_variants, vec![1, 4, 8]);
+        assert_eq!(t.devices[0].cache, CacheMode::Prefix);
+        assert_eq!(t.block_len, 32);
+        assert!((t.interconnect.bytes_per_s - 240.0e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn link_parse() {
+        assert!(InterconnectModel::parse("pcie").is_some());
+        assert!(InterconnectModel::parse("NVLINK").is_some());
+        assert!(InterconnectModel::parse("token-ring").is_none());
+    }
+}

@@ -1,0 +1,276 @@
+//! Trace-driven load generation: deterministic arrival processes
+//! (Poisson, bursty on/off, uniform pacing) crossed with a mixed
+//! prompt/output-length distribution, plus a replayable plain-text trace
+//! format so a run can be captured once and re-served bit-identically
+//! across router/scheduler experiments.
+//!
+//! Randomness comes from [`crate::util::Lcg64`] only — the same spec +
+//! seed always yields the same trace, and "SlowFast"-style per-request
+//! cost variability enters through the length mix, not hidden state.
+
+use crate::util::Lcg64;
+
+/// Arrival process shapes (rates in requests/s).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// memoryless arrivals at a constant mean rate
+    Poisson { rps: f64 },
+    /// on/off modulated Poisson: `duty` fraction of every `cycle_s`
+    /// window runs at `burst_mult × rps`, the rest idles at a trickle —
+    /// the diurnal-spike shape that breaks mean-rate provisioning
+    Bursty { rps: f64, burst_mult: f64, cycle_s: f64, duty: f64 },
+    /// fixed 1/rps pacing (closed-loop benchmark drivers)
+    Uniform { rps: f64 },
+}
+
+impl Arrival {
+    /// Instantaneous rate at time `t`.
+    fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            Arrival::Poisson { rps } | Arrival::Uniform { rps } => rps,
+            Arrival::Bursty { rps, burst_mult, cycle_s, duty } => {
+                let phase = (t / cycle_s).fract();
+                if phase < duty {
+                    rps * burst_mult
+                } else {
+                    // keep a trickle so the off-phase still terminates
+                    (rps * 0.1).max(1e-3)
+                }
+            }
+        }
+    }
+
+    pub fn parse(s: &str, rps: f64) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "poisson" => Some(Arrival::Poisson { rps }),
+            "bursty" => Some(Arrival::Bursty {
+                rps,
+                burst_mult: 4.0,
+                cycle_s: 20.0,
+                duty: 0.25,
+            }),
+            "uniform" => Some(Arrival::Uniform { rps }),
+            _ => None,
+        }
+    }
+}
+
+/// One class of requests in the length mix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MixEntry {
+    pub weight: f64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+/// Everything needed to (re)generate a trace deterministically.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub arrival: Arrival,
+    pub mix: Vec<MixEntry>,
+    pub n: usize,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    /// A chat-shaped mix over the paper's §6.2 geometry (gen lengths in
+    /// whole 64-token blocks): short turns dominate, a long-form tail
+    /// drives the per-request cost variability the scheduler must absorb.
+    pub fn chat(n: usize, arrival: Arrival, seed: u64) -> Self {
+        TraceSpec {
+            arrival,
+            mix: vec![
+                MixEntry { weight: 0.50, prompt_len: 64, gen_len: 64 },
+                MixEntry { weight: 0.30, prompt_len: 128, gen_len: 128 },
+                MixEntry { weight: 0.15, prompt_len: 256, gen_len: 256 },
+                MixEntry { weight: 0.05, prompt_len: 512, gen_len: 512 },
+            ],
+            n,
+            seed,
+        }
+    }
+
+    /// Expected generated tokens per request under the mix.
+    pub fn mean_gen_len(&self) -> f64 {
+        let wsum: f64 = self.mix.iter().map(|m| m.weight).sum();
+        self.mix.iter().map(|m| m.weight * m.gen_len as f64).sum::<f64>()
+            / wsum.max(1e-12)
+    }
+}
+
+/// One request in a trace (times on the virtual serving clock).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRequest {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+/// Generate the full arrival trace for a spec.
+pub fn generate_trace(spec: &TraceSpec) -> Vec<TraceRequest> {
+    let mut rng = Lcg64::new(spec.seed);
+    let weights: Vec<f64> = spec.mix.iter().map(|m| m.weight).collect();
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(spec.n);
+    for id in 0..spec.n as u64 {
+        let rate = spec.arrival.rate_at(t);
+        t += match spec.arrival {
+            Arrival::Uniform { rps } => 1.0 / rps,
+            _ => rng.exp(rate),
+        };
+        let m = spec.mix[rng.pick_weighted(&weights)];
+        out.push(TraceRequest {
+            id,
+            arrival_s: t,
+            prompt_len: m.prompt_len,
+            gen_len: m.gen_len,
+        });
+    }
+    out
+}
+
+/// Serialize a trace to the replay format:
+/// `# dart-trace v1` header, then `id arrival_s prompt_len gen_len`
+/// rows (whitespace-separated, `#` comments ignored on read).
+pub fn trace_to_text(trace: &[TraceRequest]) -> String {
+    let mut s = String::from("# dart-trace v1\n# id arrival_s prompt_len gen_len\n");
+    for r in trace {
+        s.push_str(&format!("{} {:.6} {} {}\n",
+                            r.id, r.arrival_s, r.prompt_len, r.gen_len));
+    }
+    s
+}
+
+/// Parse a replay-format trace; requests are re-sorted by arrival time.
+pub fn trace_from_text(text: &str) -> Result<Vec<TraceRequest>, String> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 4 {
+            return Err(format!("trace line {}: expected 4 fields, got {}",
+                               i + 1, f.len()));
+        }
+        let parse_err = |what: &str| {
+            format!("trace line {}: bad {what} {:?}", i + 1, line)
+        };
+        let arrival_s: f64 = f[1].parse().map_err(|_| parse_err("arrival"))?;
+        if !arrival_s.is_finite() {
+            // f64::parse accepts "nan"/"inf", which would poison the
+            // sort below and every latency derived from the trace
+            return Err(parse_err("arrival"));
+        }
+        out.push(TraceRequest {
+            id: f[0].parse().map_err(|_| parse_err("id"))?,
+            arrival_s,
+            prompt_len: f[2].parse().map_err(|_| parse_err("prompt_len"))?,
+            gen_len: f[3].parse().map_err(|_| parse_err("gen_len"))?,
+        });
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic() {
+        let spec = TraceSpec::chat(64, Arrival::Poisson { rps: 10.0 }, 7);
+        assert_eq!(generate_trace(&spec), generate_trace(&spec));
+        let other = TraceSpec::chat(64, Arrival::Poisson { rps: 10.0 }, 8);
+        assert_ne!(generate_trace(&spec), generate_trace(&other));
+    }
+
+    #[test]
+    fn poisson_mean_rate() {
+        let spec = TraceSpec::chat(4000, Arrival::Poisson { rps: 20.0 }, 1);
+        let t = generate_trace(&spec);
+        let span = t.last().unwrap().arrival_s;
+        let rate = t.len() as f64 / span;
+        assert!((rate - 20.0).abs() < 2.0, "rate {rate}");
+        // arrivals are sorted by construction
+        assert!(t.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        let n = 4000;
+        let gaps = |arrival| {
+            let t = generate_trace(&TraceSpec::chat(n, arrival, 3));
+            let mut g: Vec<f64> = t.windows(2)
+                .map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+            g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mean = g.iter().sum::<f64>() / g.len() as f64;
+            let var = g.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / g.len() as f64;
+            var.sqrt() / mean // coefficient of variation
+        };
+        let cv_poisson = gaps(Arrival::Poisson { rps: 10.0 });
+        let cv_bursty = gaps(Arrival::Bursty {
+            rps: 10.0, burst_mult: 4.0, cycle_s: 5.0, duty: 0.25 });
+        assert!(cv_bursty > cv_poisson * 1.2,
+                "bursty CV {cv_bursty} vs poisson {cv_poisson}");
+    }
+
+    #[test]
+    fn uniform_pacing_is_exact() {
+        let spec = TraceSpec {
+            arrival: Arrival::Uniform { rps: 4.0 },
+            mix: vec![MixEntry { weight: 1.0, prompt_len: 64, gen_len: 64 }],
+            n: 8,
+            seed: 0,
+        };
+        let t = generate_trace(&spec);
+        for w in t.windows(2) {
+            assert!((w[1].arrival_s - w[0].arrival_s - 0.25).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn trace_roundtrips_through_text() {
+        let spec = TraceSpec::chat(
+            32,
+            Arrival::Bursty { rps: 8.0, burst_mult: 4.0, cycle_s: 10.0,
+                              duty: 0.25 },
+            11);
+        let trace = generate_trace(&spec);
+        let text = trace_to_text(&trace);
+        let back = trace_from_text(&text).unwrap();
+        assert_eq!(trace.len(), back.len());
+        for (a, b) in trace.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.gen_len, b.gen_len);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn malformed_trace_rejected() {
+        assert!(trace_from_text("0 1.0 64").is_err());
+        assert!(trace_from_text("x 1.0 64 64").is_err());
+        assert!(trace_from_text("0 nan 64 64").is_err());
+        assert!(trace_from_text("0 inf 64 64").is_err());
+        assert!(trace_from_text("# only comments\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn mean_gen_len_weighted() {
+        let spec = TraceSpec {
+            arrival: Arrival::Poisson { rps: 1.0 },
+            mix: vec![
+                MixEntry { weight: 1.0, prompt_len: 1, gen_len: 100 },
+                MixEntry { weight: 3.0, prompt_len: 1, gen_len: 200 },
+            ],
+            n: 1,
+            seed: 0,
+        };
+        assert!((spec.mean_gen_len() - 175.0).abs() < 1e-9);
+    }
+}

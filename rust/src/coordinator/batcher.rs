@@ -1,7 +1,26 @@
-//! Dynamic batcher: groups pending requests into the largest compiled
-//! batch variant, padding with replicas when a batch is ragged (padded
-//! lanes are generated and discarded — the executable's batch dimension
-//! is shape-static).
+//! Dynamic batcher: groups pending requests into the *smallest*
+//! compiled batch variant that fits them (the executable's batch
+//! dimension is shape-static, so a ragged batch must pad up to a
+//! compiled size — padded lanes are generated and discarded).
+//!
+//! A flush of n requests always runs as one batch at the smallest
+//! compiled variant `>= n` (never the largest): padding is bounded by
+//! the gap to the next variant, and the flush is never split into
+//! serial sub-batches — batch cost is sublinear in the variant size, so
+//! one padded run beats several exact small ones on both TTFT and
+//! throughput. Cumulative padded-lane waste is tracked in the batcher's
+//! own `padded_lanes` counter (the serving [`super::metrics::Metrics`]
+//! accounts the same waste independently per recorded batch).
+//!
+//! Time is pluggable: the serving path uses wall-clock [`push`] /
+//! [`next_batch`], while the cluster's discrete-event simulator drives
+//! the same queue in virtual time through [`push_at`] / [`next_batch_at`]
+//! (seconds on an arbitrary monotonic axis).
+//!
+//! [`push`]: Batcher::push
+//! [`next_batch`]: Batcher::next_batch
+//! [`push_at`]: Batcher::push_at
+//! [`next_batch_at`]: Batcher::next_batch_at
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -26,11 +45,11 @@ impl Default for BatcherConfig {
     }
 }
 
-/// A queued item with arrival time.
+/// A queued item with its arrival time on the batcher's clock axis.
 #[derive(Debug)]
 pub struct Pending<T> {
     pub item: T,
-    pub arrived: Instant,
+    pub arrived_s: f64,
 }
 
 /// The batch the batcher decided to run.
@@ -41,27 +60,57 @@ pub struct BatchPlan<T> {
     pub variant: usize,
 }
 
+impl<T> BatchPlan<T> {
+    /// Lanes that will run replicated filler work and be discarded.
+    pub fn padded_lanes(&self) -> usize {
+        self.variant - self.items.len()
+    }
+}
+
 pub struct Batcher<T> {
     pub cfg: BatcherConfig,
     queue: VecDeque<Pending<T>>,
+    /// zero point of the wall-clock convenience API
+    epoch: Instant,
     pub enqueued: u64,
     pub rejected: u64,
+    /// cumulative padded lanes across every plan this batcher issued
+    pub padded_lanes: u64,
 }
 
 impl<T> Batcher<T> {
     pub fn new(mut cfg: BatcherConfig) -> Self {
         cfg.variants.sort_unstable();
+        cfg.variants.dedup();
         assert!(!cfg.variants.is_empty());
-        Batcher { cfg, queue: VecDeque::new(), enqueued: 0, rejected: 0 }
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            epoch: Instant::now(),
+            enqueued: 0,
+            rejected: 0,
+            padded_lanes: 0,
+        }
     }
 
-    /// Enqueue; false = queue full (backpressure).
+    /// Seconds elapsed on the wall-clock axis.
+    fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Enqueue at the current wall-clock time; false = queue full.
     pub fn push(&mut self, item: T) -> bool {
+        let now = self.now_s();
+        self.push_at(item, now)
+    }
+
+    /// Enqueue at virtual time `now_s`; false = queue full (backpressure).
+    pub fn push_at(&mut self, item: T, now_s: f64) -> bool {
         if self.queue.len() >= self.cfg.capacity {
             self.rejected += 1;
             return false;
         }
-        self.queue.push_back(Pending { item, arrived: Instant::now() });
+        self.queue.push_back(Pending { item, arrived_s: now_s });
         self.enqueued += 1;
         true
     }
@@ -74,6 +123,29 @@ impl<T> Batcher<T> {
         self.queue.is_empty()
     }
 
+    /// Queued items, oldest first (router load inspection).
+    pub fn iter_items(&self) -> impl Iterator<Item = &T> {
+        self.queue.iter().map(|p| &p.item)
+    }
+
+    /// Arrival time of the oldest queued request, on the caller's axis.
+    pub fn oldest_arrived_s(&self) -> Option<f64> {
+        self.queue.front().map(|p| p.arrived_s)
+    }
+
+    /// Earliest time a batch can fire: immediately once a full
+    /// largest-variant batch is queued, otherwise when the oldest
+    /// request's `max_wait` expires. None if the queue is empty.
+    pub fn next_fire_at(&self) -> Option<f64> {
+        let oldest = self.oldest_arrived_s()?;
+        let biggest = *self.cfg.variants.last().unwrap();
+        if self.queue.len() >= biggest {
+            Some(oldest)
+        } else {
+            Some(oldest + self.cfg.max_wait.as_secs_f64())
+        }
+    }
+
     /// Smallest compiled variant that fits `n` requests (or the largest
     /// variant if n exceeds it).
     fn variant_for(&self, n: usize) -> usize {
@@ -81,36 +153,63 @@ impl<T> Batcher<T> {
             .unwrap_or(self.cfg.variants.last().unwrap())
     }
 
-    /// Decide the next batch: fire when a full largest-variant batch is
-    /// waiting, or when the oldest request exceeded max_wait.
-    pub fn next_batch(&mut self) -> Option<BatchPlan<T>> {
-        if self.queue.is_empty() {
-            return None;
+    /// Padded lanes the next plan would carry for a queue of `n` items:
+    /// the gap up to the smallest variant that fits. The router's
+    /// variant-aware placement uses this as its fragmentation signal so
+    /// policy and batcher can never disagree.
+    pub fn plan_padding_for(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
         }
         let biggest = *self.cfg.variants.last().unwrap();
-        let oldest_wait = self.queue.front().unwrap().arrived.elapsed();
-        if self.queue.len() < biggest && oldest_wait < self.cfg.max_wait {
-            return None; // keep waiting for batchmates
-        }
+        let take = n.min(biggest);
+        self.variant_for(take) - take
+    }
+
+    /// Pop the next plan off a non-empty queue: everything available (up
+    /// to the largest variant) as one batch, padded to the smallest
+    /// compiled variant that holds it.
+    fn make_plan(&mut self) -> BatchPlan<T> {
+        let biggest = *self.cfg.variants.last().unwrap();
         let take = self.queue.len().min(biggest);
         let variant = self.variant_for(take);
         let items = (0..take)
             .map(|_| self.queue.pop_front().unwrap().item)
             .collect();
-        Some(BatchPlan { items, variant })
+        self.padded_lanes += (variant - take) as u64;
+        BatchPlan { items, variant }
+    }
+
+    /// Decide the next batch on the wall clock.
+    pub fn next_batch(&mut self) -> Option<BatchPlan<T>> {
+        let now = self.now_s();
+        self.next_batch_at(now)
+    }
+
+    /// Decide the next batch at virtual time `now_s`: fire when a full
+    /// largest-variant batch is waiting, or when the oldest request
+    /// exceeded max_wait.
+    pub fn next_batch_at(&mut self, now_s: f64) -> Option<BatchPlan<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let biggest = *self.cfg.variants.last().unwrap();
+        let oldest_wait = now_s - self.queue.front().unwrap().arrived_s;
+        // 1ns slack so a caller stepping exactly to next_fire_at() fires
+        // despite f64 rounding (the discrete-event loop depends on it)
+        if self.queue.len() < biggest
+            && oldest_wait < self.cfg.max_wait.as_secs_f64() - 1e-9
+        {
+            return None; // keep waiting for batchmates
+        }
+        Some(self.make_plan())
     }
 
     /// Force-drain everything (shutdown path).
     pub fn drain(&mut self) -> Vec<BatchPlan<T>> {
         let mut out = Vec::new();
         while !self.queue.is_empty() {
-            let biggest = *self.cfg.variants.last().unwrap();
-            let take = self.queue.len().min(biggest);
-            let variant = self.variant_for(take);
-            let items = (0..take)
-                .map(|_| self.queue.pop_front().unwrap().item)
-                .collect();
-            out.push(BatchPlan { items, variant });
+            out.push(self.make_plan());
         }
         out
     }
@@ -137,6 +236,7 @@ mod tests {
         let plan = b.next_batch().unwrap();
         assert_eq!(plan.items, vec![0, 1, 2, 3]);
         assert_eq!(plan.variant, 4);
+        assert_eq!(plan.padded_lanes(), 0);
         assert!(b.is_empty());
     }
 
@@ -152,14 +252,39 @@ mod tests {
     }
 
     #[test]
-    fn ragged_batch_picks_padding_variant() {
+    fn timeout_flush_is_one_batch_at_smallest_fit() {
+        // 3 pending, variants {1, 4}: one padded b=4 run, never three
+        // serial b=1 runs (batch cost is sublinear in the variant size)
         let mut b = Batcher::new(cfg(0));
+        for i in 1..=3 {
+            b.push(i);
+        }
+        std::thread::sleep(Duration::from_millis(1));
+        let plan = b.next_batch().unwrap();
+        assert_eq!(plan.items, vec![1, 2, 3]);
+        assert_eq!(plan.variant, 4);
+        assert_eq!(plan.padded_lanes(), 1);
+        assert_eq!(b.padded_lanes, 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn pads_to_smallest_fitting_variant_not_largest() {
+        // variants {1, 2, 4}: a ragged flush of 2 picks the b=2 variant
+        // (zero padding), not the largest b=4
+        let mut b = Batcher::new(BatcherConfig {
+            variants: vec![1, 2, 4],
+            max_wait: Duration::from_millis(0),
+            capacity: 8,
+        });
         b.push(1);
         b.push(2);
         std::thread::sleep(Duration::from_millis(1));
         let plan = b.next_batch().unwrap();
         assert_eq!(plan.items.len(), 2);
-        assert_eq!(plan.variant, 4); // pad 2 -> 4
+        assert_eq!(plan.variant, 2);
+        assert_eq!(plan.padded_lanes(), 0);
+        assert_eq!(b.padded_lanes, 0);
     }
 
     #[test]
@@ -170,6 +295,21 @@ mod tests {
         }
         assert!(!b.push(99));
         assert_eq!(b.rejected, 1);
+        assert_eq!(b.enqueued, 8);
+        // draining frees capacity again
+        let _ = b.drain();
+        assert!(b.push(100));
+    }
+
+    #[test]
+    fn empty_queue_yields_nothing() {
+        let mut b: Batcher<u32> = Batcher::new(cfg(0));
+        assert!(b.next_batch().is_none());
+        assert!(b.next_batch_at(1e9).is_none());
+        assert!(b.drain().is_empty());
+        assert_eq!(b.next_fire_at(), None);
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
     }
 
     #[test]
@@ -179,9 +319,73 @@ mod tests {
             b.push(i);
         }
         let plans = b.drain();
+        // 6 = full 4 + ragged 2 padded to 4 with variants {1,4}
         assert_eq!(plans.len(), 2);
         assert_eq!(plans[0].items.len(), 4);
         assert_eq!(plans[1].items.len(), 2);
+        assert_eq!(plans[1].variant, 4);
+        assert_eq!(b.padded_lanes, 2);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn plan_padding_prediction_matches_actual_plans() {
+        for variants in [vec![1usize, 4], vec![4, 8], vec![2, 4, 16]] {
+            for n in 1..=20usize {
+                let mut b = Batcher::new(BatcherConfig {
+                    variants: variants.clone(),
+                    max_wait: Duration::from_millis(0),
+                    capacity: 64,
+                });
+                for i in 0..n {
+                    b.push_at(i, 0.0);
+                }
+                let predicted = b.plan_padding_for(n);
+                let plan = b.next_batch_at(1.0).unwrap();
+                assert_eq!(predicted, plan.padded_lanes(),
+                           "variants {variants:?} n {n}");
+            }
+        }
+        let b: Batcher<u32> = Batcher::new(cfg(0));
+        assert_eq!(b.plan_padding_for(0), 0);
+    }
+
+    #[test]
+    fn virtual_time_axis_is_honored() {
+        // drive the batcher purely on simulated seconds: a lone request
+        // enqueued at t=10 must not fire until t >= 10 + max_wait
+        let mut b = Batcher::new(BatcherConfig {
+            variants: vec![1, 4],
+            max_wait: Duration::from_millis(500),
+            capacity: 8,
+        });
+        assert!(b.push_at(7, 10.0));
+        assert!(b.next_batch_at(10.2).is_none());
+        assert_eq!(b.next_fire_at(), Some(10.5));
+        let plan = b.next_batch_at(10.5).unwrap();
+        assert_eq!(plan.items, vec![7]);
+        // a full batch fires immediately regardless of wait
+        for i in 0..4 {
+            b.push_at(i, 20.0);
+        }
+        assert_eq!(b.next_fire_at(), Some(20.0));
+        assert_eq!(b.next_batch_at(20.0).unwrap().variant, 4);
+    }
+
+    #[test]
+    fn capacity_backpressure_in_virtual_time() {
+        let mut b = Batcher::new(BatcherConfig {
+            variants: vec![4],
+            max_wait: Duration::from_millis(100),
+            capacity: 2,
+        });
+        assert!(b.push_at(1, 0.0));
+        assert!(b.push_at(2, 0.0));
+        assert!(!b.push_at(3, 0.0));
+        assert_eq!(b.rejected, 1);
+        // ragged flush at timeout pads 2 -> 4 (no exact variant below)
+        let plan = b.next_batch_at(0.1).unwrap();
+        assert_eq!(plan.variant, 4);
+        assert_eq!(plan.padded_lanes(), 2);
     }
 }

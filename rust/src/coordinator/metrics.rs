@@ -1,14 +1,21 @@
-//! Serving metrics: request latencies, stage breakdown, throughput.
+//! Serving metrics: request latencies, stage breakdown, throughput,
+//! padded-lane waste. Latency percentiles (p50/p95/p99) are backed by a
+//! fixed-size [`crate::stats::Reservoir`], so memory stays bounded under
+//! sustained production load instead of growing with every request.
 
 use std::time::Instant;
+
+use crate::stats::Reservoir;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests_completed: u64,
     pub tokens_generated: u64,
     pub batches_run: u64,
+    /// executable lanes that ran replicated filler work (ragged batches
+    /// padded up to a compiled variant) — pure waste
     pub padded_lanes: u64,
-    latencies_s: Vec<f64>,
+    latencies: Reservoir,
     pub model_s: f64,
     pub sampling_s: f64,
     started: Option<Instant>,
@@ -28,7 +35,9 @@ impl Metrics {
         self.padded_lanes += (padded - real) as u64;
         self.model_s += model_s;
         self.sampling_s += sampling_s;
-        self.latencies_s.extend_from_slice(latencies);
+        for &l in latencies {
+            self.latencies.push(l);
+        }
     }
 
     pub fn elapsed_s(&self) -> f64 {
@@ -40,29 +49,38 @@ impl Metrics {
     }
 
     pub fn latency_summary(&self) -> Option<crate::stats::Summary> {
-        if self.latencies_s.is_empty() {
-            None
-        } else {
-            Some(crate::stats::Summary::from_samples(&self.latencies_s))
-        }
+        self.latencies.summary()
     }
 
     pub fn sampling_frac(&self) -> f64 {
         self.sampling_s / (self.model_s + self.sampling_s).max(1e-12)
     }
 
+    /// Fraction of launched executable lanes that carried padding
+    /// instead of a real request.
+    pub fn padding_waste_frac(&self) -> f64 {
+        let lanes = self.padded_lanes + self.requests_completed;
+        if lanes == 0 {
+            0.0
+        } else {
+            self.padded_lanes as f64 / lanes as f64
+        }
+    }
+
     pub fn report(&self) -> String {
         let mut s = format!(
-            "requests {}  tokens {}  batches {}  padded lanes {}\n\
+            "requests {}  tokens {}  batches {}  padded lanes {} ({:.1}% lane waste)\n\
              wall {:.2}s  TPS {:.1}  model {:.2}s  sampling {:.2}s ({:.1}%)",
             self.requests_completed, self.tokens_generated, self.batches_run,
-            self.padded_lanes, self.elapsed_s(), self.tps(), self.model_s,
+            self.padded_lanes, self.padding_waste_frac() * 100.0,
+            self.elapsed_s(), self.tps(), self.model_s,
             self.sampling_s, self.sampling_frac() * 100.0);
         if let Some(l) = self.latency_summary() {
             s.push_str(&format!(
-                "\nlatency p50 {}  p95 {}  max {}",
+                "\nlatency p50 {}  p95 {}  p99 {}  max {}",
                 crate::stats::fmt_time(l.p50),
                 crate::stats::fmt_time(l.p95),
+                crate::stats::fmt_time(l.p99),
                 crate::stats::fmt_time(l.max)));
         }
         s
@@ -82,8 +100,24 @@ mod tests {
         assert_eq!(m.tokens_generated, 192);
         assert_eq!(m.padded_lanes, 1);
         assert!((m.sampling_frac() - 0.1).abs() < 1e-9);
+        assert!((m.padding_waste_frac() - 0.25).abs() < 1e-9);
         let l = m.latency_summary().unwrap();
         assert_eq!(l.n, 3);
         assert!(m.report().contains("requests 3"));
+        assert!(m.report().contains("p99"));
+    }
+
+    #[test]
+    fn latency_memory_stays_bounded() {
+        let mut m = Metrics::default();
+        m.start();
+        for i in 0..10_000 {
+            m.record_batch(1, 1, 8, 0.0, 0.0, &[i as f64 * 1e-4]);
+        }
+        let l = m.latency_summary().unwrap();
+        // reservoir cap, not the 10k stream length
+        assert!(l.n <= 4096, "reservoir leaked: n={}", l.n);
+        assert!(l.p99 > l.p50);
+        assert_eq!(m.padding_waste_frac(), 0.0);
     }
 }

@@ -9,11 +9,16 @@
 //!   cache mode, with the Rust sampling engine committing tokens and the
 //!   Rust KV-cache manager (optionally BAOS+MX-quantized) holding state
 //!   between steps;
-//! * [`batcher`] — request queue + dynamic batcher (pads to the nearest
-//!   compiled batch variant, bounded wait);
+//! * [`batcher`] — request queue + dynamic batcher: smallest-fitting
+//!   compiled batch variant, exact-fill preferred over padding, bounded
+//!   wait, padded-lane waste accounting; drivable in wall-clock or
+//!   virtual time (the [`crate::cluster`] simulator reuses it per
+//!   device);
 //! * [`server`] — the worker thread owning the PJRT client, mpsc
-//!   request/response plumbing, backpressure;
-//! * [`metrics`] — latency/throughput accounting for the e2e driver.
+//!   request/response plumbing, backpressure; instantiable per device
+//!   via [`Coordinator::start_named`] for multi-NPU fleets;
+//! * [`metrics`] — latency/throughput accounting for the e2e driver,
+//!   with reservoir-backed p50/p95/p99 percentiles.
 
 pub mod batcher;
 pub mod engine;

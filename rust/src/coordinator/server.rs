@@ -50,11 +50,20 @@ impl Coordinator {
     /// whole lifetime). Blocks until warmup succeeds or fails.
     pub fn start(artifacts: &Path, engine_cfg: EngineConfig,
                  batcher_cfg: Option<BatcherConfig>) -> Result<Self> {
+        Coordinator::start_named(artifacts, "0", engine_cfg, batcher_cfg)
+    }
+
+    /// Start one coordinator of a fleet: identical to [`Coordinator::start`]
+    /// but tags the worker thread with a device name so N coordinators
+    /// (one per NPU) are distinguishable — the per-device entry point the
+    /// [`crate::cluster`] scale-out layer builds on.
+    pub fn start_named(artifacts: &Path, name: &str, engine_cfg: EngineConfig,
+                       batcher_cfg: Option<BatcherConfig>) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let dir = artifacts.to_path_buf();
         let worker = std::thread::Builder::new()
-            .name("dart-coordinator".into())
+            .name(format!("dart-coordinator-{name}"))
             .spawn(move || {
                 let setup = (|| -> Result<(GenerationEngine, BatcherConfig)> {
                     let ex = Executor::load(&dir)?;

@@ -21,6 +21,12 @@
 //! * [`runtime`] / [`coordinator`] — the PJRT artifact runtime and the
 //!   serving coordinator that executes real blocked-diffusion generation
 //!   end-to-end with python never on the request path;
+//! * [`cluster`] — the scale-out layer above the coordinator: the
+//!   paper's Fig. 2 host side replicated into a multi-NPU fleet, with a
+//!   data-parallel request router, SLO-aware (TTFT/TPOT) admission
+//!   scheduling, trace-driven load generation, and cluster-wide
+//!   goodput/utilization/padding-waste metrics (`serve-cluster` in the
+//!   CLI, `fleet_scaling` in the benches);
 //! * [`gpu`] — analytical A6000/H100 baselines for Table 6 / Fig. 9.
 //!
 //! Substrates ([`cli`], [`stats`], [`report`], [`util`]) are built from
@@ -28,6 +34,7 @@
 //! (DESIGN.md substitution S7).
 
 pub mod cli;
+pub mod cluster;
 pub mod compiler;
 pub mod config;
 pub mod coordinator;

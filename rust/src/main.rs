@@ -1,15 +1,19 @@
 //! `dart` — the DART NPU stack CLI (leader entrypoint).
 //!
 //! Subcommands:
-//!   serve      run the serving coordinator on a synthetic request stream
-//!   generate   one blocked-diffusion generation through the PJRT model
-//!   simulate   analytical simulation of a paper workload
-//!   sweep      Fig. 9-style design-space sweep
-//!   hbm        Table 2 HBM bandwidth validation
-//!   asm        assemble/disassemble DART ISA files
-//!   area       7nm area/power report for a hardware config
+//!   serve          run the serving coordinator on a synthetic request stream
+//!   serve-cluster  drive a simulated multi-NPU fleet through a trace with
+//!                  SLO-aware routing/admission and fleet metrics
+//!   generate       one blocked-diffusion generation through the PJRT model
+//!   simulate       analytical simulation of a paper workload
+//!   sweep          Fig. 9-style design-space sweep
+//!   hbm            Table 2 HBM bandwidth validation
+//!   asm            assemble/disassemble DART ISA files
+//!   area           7nm area/power report for a hardware config
 
 use dart::cli::Args;
+use dart::cluster::{self, Arrival, ClusterTopology, FleetSim, RoutePolicy,
+                    SloConfig, TraceSpec};
 use dart::config::{CacheMode, HwConfig, ModelArch, Workload};
 use dart::coordinator::{Coordinator, EngineConfig};
 use dart::gpu::GpuSpec;
@@ -24,6 +28,7 @@ fn main() {
     let args = Args::from_env();
     let code = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
+        Some("serve-cluster") => cmd_serve_cluster(&args),
         Some("generate") => cmd_generate(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("sweep") => cmd_sweep(&args),
@@ -31,8 +36,14 @@ fn main() {
         Some("asm") => cmd_asm(&args),
         Some("area") => cmd_area(&args),
         _ => {
-            eprintln!("usage: dart <serve|generate|simulate|sweep|hbm|asm|area> [flags]");
+            eprintln!("usage: dart <serve|serve-cluster|generate|simulate|sweep|hbm|asm|area> [flags]");
             eprintln!("  serve     --requests N --cache MODE --kv POLICY");
+            eprintln!("  serve-cluster --devices N --requests N --rate RPS \
+                       --arrival poisson|bursty|uniform --router least|rr|variant");
+            eprintln!("                --load FRAC --ttft-slo-ms N --tpot-slo-ms N \
+                       --no-admission --seed N");
+            eprintln!("                --trace-out FILE | --replay FILE \
+                       --link pcie|nvlink|eth --config FILE");
             eprintln!("  generate  --cache MODE --batch B");
             eprintln!("  simulate  --model llada8b|moe --cache MODE");
             eprintln!("  sweep     --model llada8b|moe");
@@ -112,6 +123,81 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     let metrics = coord.shutdown();
     println!("\n{}", metrics.report());
+    0
+}
+
+/// Simulated multi-NPU fleet serving: build a topology, generate (or
+/// replay) an arrival trace, drive it through the SLO-aware scheduler,
+/// and print fleet TTFT/TPOT percentiles, goodput, and per-device
+/// utilization. Runs entirely on the analytical device model — no AOT
+/// artifacts needed.
+fn cmd_serve_cluster(args: &Args) -> i32 {
+    let n_devices = args.get_usize("devices", 4);
+    let mut topo = ClusterTopology::homogeneous(
+        n_devices, hw_from(args), model_from(args), cache_from(args));
+    if let Some(link) = args.get("link") {
+        topo.interconnect = dart::cluster::InterconnectModel::parse(link)
+            .expect("bad --link (pcie|nvlink|eth)");
+    }
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).expect("config file");
+        let doc = dart::config::parse_config(&text).expect("config parse");
+        topo.apply_overrides(&doc);
+    }
+
+    let n = args.get_usize("requests", 256);
+    let seed = args.get_usize("seed", 42) as u64;
+    // offered rate: explicit --rate wins, otherwise a --load fraction
+    // (default 70%) of the fleet's calibrated token capacity
+    let capacity_tps = cluster::fleet_capacity_tps(&topo);
+    let probe = TraceSpec::chat(n, Arrival::Poisson { rps: 1.0 }, seed);
+    let auto_rps = args.get_f64("load", 0.7) * capacity_tps
+        / probe.mean_gen_len();
+    let rps = args.get_f64("rate", auto_rps);
+    let arrival = Arrival::parse(args.get_or("arrival", "poisson"), rps)
+        .expect("bad --arrival (poisson|bursty|uniform)");
+
+    // replay ignores the generator knobs (--requests/--arrival/--rate):
+    // the trace file is the offered load, and the header says so
+    let (trace, trace_desc) = if let Some(path) = args.get("replay") {
+        let text = std::fs::read_to_string(path).expect("read trace");
+        (cluster::trace_from_text(&text).expect("parse trace"),
+         format!("replayed from {path}"))
+    } else {
+        (cluster::generate_trace(&TraceSpec::chat(n, arrival, seed)),
+         format!("{arrival:?}, seed {seed}"))
+    };
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, cluster::trace_to_text(&trace))
+            .expect("write trace");
+        println!("wrote {} requests to {path}", trace.len());
+    }
+
+    let mut slo = SloConfig::auto(&topo);
+    if let Some(ms) = args.get("ttft-slo-ms") {
+        slo.ttft_s = ms.parse::<f64>().expect("--ttft-slo-ms number") / 1e3;
+    }
+    if let Some(ms) = args.get("tpot-slo-ms") {
+        slo.tpot_s = ms.parse::<f64>().expect("--tpot-slo-ms number") / 1e3;
+    }
+    if args.has("no-admission") {
+        slo.admission = false;
+    }
+    let policy = RoutePolicy::parse(args.get_or("router", "least"))
+        .expect("bad --router (least|rr|variant)");
+
+    println!("== DART fleet: {} devices x {}, {} cache, {} router ==",
+             topo.n_devices(), topo.model.name,
+             topo.devices[0].cache.name(), policy.name());
+    println!("trace: {} requests, {}, fleet capacity ~{:.0} tok/s",
+             trace.len(), trace_desc, capacity_tps);
+    println!("SLO: TTFT <= {:.0} ms, TPOT <= {:.2} ms/tok, admission {}\n",
+             slo.ttft_s * 1e3, slo.tpot_s * 1e3,
+             if slo.admission { "on" } else { "off" });
+
+    let mut sim = FleetSim::new(topo, policy, slo);
+    let metrics = sim.run(&trace);
+    println!("{}", metrics.report(Some((slo.ttft_s, slo.tpot_s))));
     0
 }
 

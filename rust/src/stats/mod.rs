@@ -40,6 +40,79 @@ impl Summary {
     }
 }
 
+/// Fixed-size uniform sample reservoir (Vitter's Algorithm R) for
+/// percentile tracking under sustained load: memory stays bounded no
+/// matter how many latencies stream through, and every observation has
+/// equal probability cap/seen of being retained. Deterministic — the
+/// replacement RNG is a seeded [`crate::util::SplitMix64`].
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: crate::util::SplitMix64,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir::new(4096)
+    }
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Self {
+        Reservoir::with_seed(cap, 0x5EED_0D0D)
+    }
+
+    pub fn with_seed(cap: usize, seed: u64) -> Self {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Reservoir {
+            cap,
+            seen: 0,
+            samples: Vec::new(),
+            rng: crate::util::SplitMix64::new(seed),
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.next_u64() % self.seen;
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+
+    /// Total observations streamed through (>= retained count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Retained sample count.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn summary(&self) -> Option<Summary> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(Summary::from_samples(&self.samples))
+        }
+    }
+}
+
 /// A single benchmark result with throughput accounting.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -164,6 +237,41 @@ mod tests {
         assert_eq!(m.max, 100.0);
         assert!((m.p50 - 50.0).abs() <= 1.0);
         assert!((m.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reservoir_under_capacity_keeps_everything() {
+        let mut r = Reservoir::new(16);
+        for i in 0..10 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 10);
+        assert_eq!(r.seen(), 10);
+        let s = r.summary().unwrap();
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_tracks_percentiles() {
+        let mut r = Reservoir::new(256);
+        // stream 100k uniform [0,1000) samples through a 256-slot window
+        let mut rng = crate::util::SplitMix64::new(9);
+        for _ in 0..100_000 {
+            r.push(rng.next_f64() * 1000.0);
+        }
+        assert_eq!(r.len(), 256);
+        assert_eq!(r.seen(), 100_000);
+        let s = r.summary().unwrap();
+        // uniform stream: p50 near 500 within sampling noise
+        assert!((s.p50 - 500.0).abs() < 120.0, "p50 {}", s.p50);
+        assert!(s.p99 > s.p50 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn reservoir_empty_summary_is_none() {
+        assert!(Reservoir::new(4).summary().is_none());
+        assert!(Reservoir::new(4).is_empty());
     }
 
     #[test]

@@ -52,6 +52,70 @@ impl SplitMix64 {
     }
 }
 
+/// Knuth MMIX LCG with an xor-fold output stage — the cluster workload
+/// generator's random source. A distinct generator from [`SplitMix64`]
+/// so replayed traces stay byte-stable even if the test RNG evolves;
+/// the raw LCG state advance is a single fused multiply-add, and the
+/// output mix decorrelates the weak low bits.
+#[derive(Clone, Debug)]
+pub struct Lcg64 {
+    state: u64,
+}
+
+impl Lcg64 {
+    pub fn new(seed: u64) -> Self {
+        // scramble the seed so 0 / small seeds don't start in a
+        // low-entropy region of the lattice
+        Self {
+            state: seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(0x2545_F491_4F6C_DD1D),
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(1_442_695_040_888_963_407);
+        let x = self.state;
+        (x ^ (x >> 33)).wrapping_mul(0xFF51_AFD7_ED55_8CCD)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.next_u64() % (hi - lo)
+    }
+
+    /// Exponential inter-arrival sample at `rate` events/s (Poisson
+    /// process increment).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -(1.0 - self.next_f64()).ln() / rate
+    }
+
+    /// Index sampled proportionally to `weights` (not necessarily
+    /// normalized).
+    pub fn pick_weighted(&mut self, weights: &[f64]) -> usize {
+        debug_assert!(!weights.is_empty());
+        let total: f64 = weights.iter().sum();
+        let mut u = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
 /// Ceiling division.
 pub fn ceil_div(a: u64, b: u64) -> u64 {
     debug_assert!(b > 0);
@@ -115,6 +179,42 @@ mod tests {
             / xs.len() as f64;
         assert!(mean.abs() < 0.05, "mean {mean}");
         assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn lcg_deterministic_and_distinct_from_splitmix() {
+        let mut a = Lcg64::new(42);
+        let mut b = Lcg64::new(42);
+        let mut s = SplitMix64::new(42);
+        for _ in 0..100 {
+            let v = a.next_u64();
+            assert_eq!(v, b.next_u64());
+            // the two generators must not be the same stream
+            let _ = s.next_u64();
+        }
+        let mut a2 = Lcg64::new(42);
+        assert_ne!(a2.next_u64(), SplitMix64::new(42).next_u64());
+    }
+
+    #[test]
+    fn lcg_exponential_mean() {
+        let mut r = Lcg64::new(7);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.exp(4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn lcg_weighted_pick() {
+        let mut r = Lcg64::new(3);
+        let mut counts = [0usize; 3];
+        for _ in 0..6000 {
+            counts[r.pick_weighted(&[1.0, 2.0, 3.0])] += 1;
+        }
+        assert!(counts[2] > counts[1] && counts[1] > counts[0],
+                "{counts:?}");
+        // degenerate single-entry mix
+        assert_eq!(r.pick_weighted(&[5.0]), 0);
     }
 
     #[test]

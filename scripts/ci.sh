@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# CI gate for the DART repo.
+#
+#   scripts/ci.sh           tier-1 gate: release build + tests + fmt check
+#   scripts/ci.sh --smoke   tier-1 gate + fast fleet-scaling smoke run
+#
+# The tier-1 gate (ROADMAP.md) must stay green: `cargo build --release &&
+# cargo test -q`. rustfmt is checked when the component is installed so
+# minimal toolchains still pass the gate.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== style: cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "== style: rustfmt not installed, skipping fmt check =="
+fi
+
+if [[ "${1:-}" == "--smoke" ]]; then
+    echo "== smoke: fleet_scaling bench (reduced trace) =="
+    cargo bench --bench fleet_scaling -- --smoke
+    echo "== smoke: serve-cluster 2 devices x 32 requests =="
+    cargo run --release -- serve-cluster --devices 2 --requests 32
+fi
+
+echo "ci: OK"
