@@ -1,0 +1,354 @@
+//! The measured per-device latency curve: batch variant × seq-len
+//! bucket → total / first-block latency with percentile spread.
+//!
+//! A curve is produced by [`super::profiler::Calibrator`] (many jittered
+//! workloads per cell through the analytical fast path, spot-checked
+//! against the cycle simulator) and consumed by three layers: the
+//! coordinator batcher's cost-based flush policy, the cluster
+//! scheduler's percentile TTFT admission predictor, and the
+//! `calibrate` CLI / `calib_policies` bench reports.
+//!
+//! Curves persist to a plain-text format (`# dart-latency-curve v1`)
+//! in the same hand-rolled style as the cluster trace files, so a
+//! device can be profiled once and the table replayed across serving
+//! experiments.
+
+use crate::report::Table;
+
+/// Which percentile of the measured spread a lookup should return.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pct {
+    P50,
+    P95,
+}
+
+/// One measured cell: a compiled batch variant at a total-sequence-length
+/// bucket `[bucket_lo, bucket_hi)`.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub variant: usize,
+    /// total sequence length (prompt + gen) bucket, inclusive low edge
+    pub bucket_lo: u64,
+    /// exclusive high edge
+    pub bucket_hi: u64,
+    /// generated tokens of the representative workload in this cell
+    pub gen_tokens: u64,
+    pub p50_total_s: f64,
+    pub p95_total_s: f64,
+    pub p50_first_s: f64,
+    pub p95_first_s: f64,
+    /// jittered workload samples behind the percentiles
+    pub samples: u32,
+}
+
+impl CurvePoint {
+    pub fn total_s(&self, pct: Pct) -> f64 {
+        match pct {
+            Pct::P50 => self.p50_total_s,
+            Pct::P95 => self.p95_total_s,
+        }
+    }
+
+    pub fn first_s(&self, pct: Pct) -> f64 {
+        match pct {
+            Pct::P50 => self.p50_first_s,
+            Pct::P95 => self.p95_first_s,
+        }
+    }
+}
+
+/// A device's full measured latency table.
+#[derive(Clone, Debug)]
+pub struct LatencyCurve {
+    pub device: String,
+    /// sorted by (variant, bucket_lo)
+    pub points: Vec<CurvePoint>,
+}
+
+impl LatencyCurve {
+    pub fn new(device: &str, mut points: Vec<CurvePoint>) -> Self {
+        points.sort_by_key(|p| (p.variant, p.bucket_lo));
+        LatencyCurve { device: device.to_string(), points }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Distinct calibrated variants, ascending.
+    pub fn variants(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.points.iter().map(|p| p.variant).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Midpoint of the middle bucket — the representative sequence
+    /// length used when a caller needs one cost per variant.
+    pub fn mid_seq_len(&self) -> u64 {
+        let mut los: Vec<u64> = self.points.iter().map(|p| p.bucket_lo).collect();
+        los.sort_unstable();
+        los.dedup();
+        if los.is_empty() {
+            return 0;
+        }
+        let lo = los[los.len() / 2];
+        let hi = self.points.iter()
+            .find(|p| p.bucket_lo == lo)
+            .map(|p| p.bucket_hi)
+            .unwrap_or(lo + 1);
+        (lo + hi) / 2
+    }
+
+    /// The cell covering (variant, seq_len): the smallest calibrated
+    /// variant `>= variant` (or the largest when none fits — mirroring
+    /// the batcher's pad-up rule), and the bucket containing `seq_len`
+    /// (clamped to the nearest edge bucket).
+    pub fn lookup(&self, variant: usize, seq_len: u64) -> Option<&CurvePoint> {
+        // points are sorted by (variant, bucket_lo) at construction, so
+        // one allocation-free pass suffices — this sits on the
+        // scheduler's per-arrival admission path
+        let v = self.points.iter().map(|p| p.variant)
+            .find(|&pv| pv >= variant)
+            .or_else(|| self.points.last().map(|p| p.variant))?;
+        let mut first: Option<&CurvePoint> = None;
+        let mut last: Option<&CurvePoint> = None;
+        for p in self.points.iter().filter(|p| p.variant == v) {
+            if p.bucket_lo <= seq_len && seq_len < p.bucket_hi {
+                return Some(p);
+            }
+            if first.is_none() {
+                first = Some(p);
+            }
+            last = Some(p);
+        }
+        // clamp: below the first bucket or at/above the last
+        if first.map(|p| seq_len < p.bucket_lo).unwrap_or(false) {
+            first
+        } else {
+            last
+        }
+    }
+
+    /// Measured total batch latency for serving `variant` lanes of
+    /// `seq_len` total tokens.
+    pub fn total_s(&self, variant: usize, seq_len: u64, pct: Pct) -> Option<f64> {
+        self.lookup(variant, seq_len).map(|p| p.total_s(pct))
+    }
+
+    /// Measured first-block latency (the TTFT service component).
+    pub fn first_block_s(&self, variant: usize, seq_len: u64, pct: Pct)
+                         -> Option<f64> {
+        self.lookup(variant, seq_len).map(|p| p.first_s(pct))
+    }
+
+    /// One measured cost per variant at a reference sequence length —
+    /// the shape the batcher's [`crate::coordinator::batcher::CostModel`]
+    /// consumes.
+    pub fn variant_costs(&self, seq_len: u64, pct: Pct) -> Vec<(usize, f64)> {
+        self.variants().into_iter()
+            .filter_map(|v| self.total_s(v, seq_len, pct).map(|s| (v, s)))
+            .collect()
+    }
+
+    /// Measured generated-tokens/s pace at the largest variant and the
+    /// representative bucket — the scheduler's backlog→seconds factor
+    /// (replacing the analytic tokens/s scalar).
+    pub fn measured_tokens_per_s(&self) -> Option<f64> {
+        let biggest = *self.variants().last()?;
+        let p = self.lookup(biggest, self.mid_seq_len())?;
+        Some((p.variant as u64 * p.gen_tokens) as f64
+             / p.p50_total_s.max(1e-12))
+    }
+
+    // ---- persistence -----------------------------------------------------
+
+    /// Serialize to the replay format: `# dart-latency-curve v1` header,
+    /// a `device <name>` line, then one row per cell.
+    pub fn to_text(&self) -> String {
+        let mut s = String::from("# dart-latency-curve v1\n");
+        s.push_str(&format!("device {}\n", self.device));
+        s.push_str("# variant bucket_lo bucket_hi gen_tokens \
+                    p50_total_s p95_total_s p50_first_s p95_first_s samples\n");
+        for p in &self.points {
+            // 17 significant digits: f64 values roundtrip exactly
+            s.push_str(&format!(
+                "{} {} {} {} {:.17e} {:.17e} {:.17e} {:.17e} {}\n",
+                p.variant, p.bucket_lo, p.bucket_hi, p.gen_tokens,
+                p.p50_total_s, p.p95_total_s, p.p50_first_s, p.p95_first_s,
+                p.samples));
+        }
+        s
+    }
+
+    /// Parse the replay format (whitespace-separated, `#` comments
+    /// ignored); rows are re-sorted.
+    pub fn from_text(text: &str) -> Result<Self, String> {
+        let mut device = String::from("unknown");
+        let mut points = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("device ") {
+                device = name.trim().to_string();
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 9 {
+                return Err(format!("curve line {}: expected 9 fields, got {}",
+                                   i + 1, f.len()));
+            }
+            let err = |what: &str| {
+                format!("curve line {}: bad {what} {:?}", i + 1, line)
+            };
+            let fnum = |j: usize, what: &str| -> Result<f64, String> {
+                let v: f64 = f[j].parse().map_err(|_| err(what))?;
+                if v.is_finite() && v >= 0.0 {
+                    Ok(v)
+                } else {
+                    Err(err(what))
+                }
+            };
+            points.push(CurvePoint {
+                variant: f[0].parse().map_err(|_| err("variant"))?,
+                bucket_lo: f[1].parse().map_err(|_| err("bucket_lo"))?,
+                bucket_hi: f[2].parse().map_err(|_| err("bucket_hi"))?,
+                gen_tokens: f[3].parse().map_err(|_| err("gen_tokens"))?,
+                p50_total_s: fnum(4, "p50_total_s")?,
+                p95_total_s: fnum(5, "p95_total_s")?,
+                p50_first_s: fnum(6, "p50_first_s")?,
+                p95_first_s: fnum(7, "p95_first_s")?,
+                samples: f[8].parse().map_err(|_| err("samples"))?,
+            });
+        }
+        Ok(LatencyCurve::new(&device, points))
+    }
+
+    /// Human-readable table for the `calibrate` CLI.
+    pub fn render_table(&self) -> String {
+        let mut t = Table::new(
+            &format!("latency curve — {}", self.device),
+            &["variant", "seq bucket", "gen", "p50 total",
+              "p95 total", "p50 first", "p95 first", "n"]);
+        for p in &self.points {
+            t.row(&[p.variant.to_string(),
+                    format!("[{}, {})", p.bucket_lo, p.bucket_hi),
+                    p.gen_tokens.to_string(),
+                    crate::stats::fmt_time(p.p50_total_s),
+                    crate::stats::fmt_time(p.p95_total_s),
+                    crate::stats::fmt_time(p.p50_first_s),
+                    crate::stats::fmt_time(p.p95_first_s),
+                    p.samples.to_string()]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(variant: usize, lo: u64, hi: u64, total: f64) -> CurvePoint {
+        CurvePoint {
+            variant,
+            bucket_lo: lo,
+            bucket_hi: hi,
+            gen_tokens: (lo + hi) / 3,
+            p50_total_s: total,
+            p95_total_s: total * 1.2,
+            p50_first_s: total / 4.0,
+            p95_first_s: total / 3.0,
+            samples: 5,
+        }
+    }
+
+    fn curve() -> LatencyCurve {
+        LatencyCurve::new("npu0", vec![
+            point(1, 96, 256, 0.010),
+            point(1, 256, 512, 0.020),
+            point(4, 96, 256, 0.016),
+            point(4, 256, 512, 0.032),
+        ])
+    }
+
+    #[test]
+    fn lookup_picks_variant_and_bucket() {
+        let c = curve();
+        assert_eq!(c.variants(), vec![1, 4]);
+        let p = c.lookup(1, 128).unwrap();
+        assert_eq!((p.variant, p.bucket_lo), (1, 96));
+        // variant rounds up like the batcher's pad-up rule
+        let p = c.lookup(3, 300).unwrap();
+        assert_eq!((p.variant, p.bucket_lo), (4, 256));
+        // above the largest variant clamps to it
+        assert_eq!(c.lookup(9, 300).unwrap().variant, 4);
+        // out-of-range seq lens clamp to the edge buckets
+        assert_eq!(c.lookup(1, 10).unwrap().bucket_lo, 96);
+        assert_eq!(c.lookup(1, 4096).unwrap().bucket_lo, 256);
+    }
+
+    #[test]
+    fn percentile_lookups() {
+        let c = curve();
+        let p50 = c.total_s(4, 128, Pct::P50).unwrap();
+        let p95 = c.total_s(4, 128, Pct::P95).unwrap();
+        assert!(p95 > p50);
+        let f50 = c.first_block_s(4, 128, Pct::P50).unwrap();
+        assert!(f50 < p50);
+    }
+
+    #[test]
+    fn variant_costs_cover_every_variant() {
+        let c = curve();
+        let costs = c.variant_costs(300, Pct::P50);
+        assert_eq!(costs.len(), 2);
+        assert_eq!(costs[0].0, 1);
+        assert!((costs[0].1 - 0.020).abs() < 1e-12);
+        assert!((costs[1].1 - 0.032).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measured_pace_is_positive() {
+        let c = curve();
+        let tps = c.measured_tokens_per_s().unwrap();
+        assert!(tps > 0.0);
+        let empty = LatencyCurve::new("x", vec![]);
+        assert!(empty.measured_tokens_per_s().is_none());
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let c = curve();
+        let text = c.to_text();
+        let back = LatencyCurve::from_text(&text).unwrap();
+        assert_eq!(back.device, "npu0");
+        assert_eq!(back.points.len(), c.points.len());
+        for (a, b) in c.points.iter().zip(&back.points) {
+            assert_eq!(a.variant, b.variant);
+            assert_eq!(a.bucket_lo, b.bucket_lo);
+            assert_eq!(a.bucket_hi, b.bucket_hi);
+            assert_eq!(a.gen_tokens, b.gen_tokens);
+            assert!((a.p50_total_s - b.p50_total_s).abs() < 1e-15);
+            assert!((a.p95_first_s - b.p95_first_s).abs() < 1e-15);
+            assert_eq!(a.samples, b.samples);
+        }
+    }
+
+    #[test]
+    fn malformed_curve_rejected() {
+        assert!(LatencyCurve::from_text("1 2 3").is_err());
+        assert!(LatencyCurve::from_text("x 96 256 64 1 1 1 1 5").is_err());
+        assert!(LatencyCurve::from_text("1 96 256 64 nan 1 1 1 5").is_err());
+        assert!(LatencyCurve::from_text("# only comments\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn render_mentions_every_variant() {
+        let r = curve().render_table();
+        assert!(r.contains("npu0"));
+        assert!(r.contains("p95 total"));
+    }
+}

@@ -1,0 +1,32 @@
+//! Device calibration: measured batch-variant latency curves.
+//!
+//! The paper's sampling-dominated latency profile makes per-batch cost
+//! highly non-linear in batch size and sequence length, so scheduling
+//! decisions driven by analytic scalars (a single tokens/s estimate, a
+//! static exact-fill-vs-pad-up rule) leave goodput on the table. This
+//! subsystem profiles every compiled batch variant of a device through
+//! the tri-path simulator and distills the measurements into a
+//! persistable per-device [`LatencyCurve`] (latency vs batch variant ×
+//! seq-len bucket, with p50/p95 spread). The curves then drive:
+//!
+//! * the coordinator batcher's **cost-based flush policy**
+//!   ([`crate::coordinator::batcher::CostModel`]) — exact-fill vs
+//!   pad-up decided by measured variant latencies plus expected-arrival
+//!   wait cost;
+//! * the cluster scheduler's **percentile TTFT admission predictor**
+//!   — measured p95 first-block latency instead of the calibrated
+//!   tokens/s scalar;
+//! * the `calibrate` CLI subcommand and the `calib_policies` bench,
+//!   which quantify the shed-rate / padding-waste deltas of
+//!   curve-driven vs static policies.
+//!
+//! The analytical simulator is the profiling fast path;
+//! [`spot_check_sampling`] cross-validates it against the
+//! cycle-accurate simulator at a matched sampling shape (the Table 4
+//! methodology, callable in-process).
+
+pub mod curve;
+pub mod profiler;
+
+pub use curve::{CurvePoint, LatencyCurve, Pct};
+pub use profiler::{spot_check_sampling, CalibConfig, Calibrator, SpotCheck};

@@ -1,0 +1,266 @@
+//! The calibration profiler: drive every compiled batch variant of a
+//! device through the tri-path simulator and distill the measurements
+//! into a [`LatencyCurve`].
+//!
+//! The fast path is the analytical simulator ([`AnalyticalSim`]): each
+//! (variant × seq-len-bucket) cell is profiled over several *jittered*
+//! workloads drawn inside the bucket (deterministic [`SplitMix64`]
+//! seed), so the recorded p50/p95 spread reflects the real in-bucket
+//! shape variation the scheduler will face — not a synthetic error bar.
+//!
+//! [`spot_check_sampling`] closes the loop against ground truth: the
+//! compiled Algorithm 2 program is executed on the cycle-accurate
+//! simulator at a matched shape and compared with the analytical
+//! sampling-step latency (the Table 4 cross-validation, in-process).
+
+use crate::compiler::{sampling_program, SamplingLayout};
+use crate::config::{CacheMode, HwConfig, ModelArch, Workload};
+use crate::sampling::SamplePrecision;
+use crate::sim::analytical::{AnalyticalSim, PrecisionConfig};
+use crate::sim::cycle::CycleSim;
+use crate::stats::quantile;
+use crate::util::SplitMix64;
+
+use super::curve::{CurvePoint, LatencyCurve};
+
+/// What to profile: the variant set, the total-sequence-length buckets,
+/// and how many jittered workloads to draw per cell.
+#[derive(Clone, Debug)]
+pub struct CalibConfig {
+    /// compiled batch variants, ascending
+    pub variants: Vec<usize>,
+    /// `[lo, hi)` total-sequence-length (prompt + gen) buckets
+    pub buckets: Vec<(u64, u64)>,
+    /// jittered workload draws per (variant, bucket) cell
+    pub samples_per_cell: usize,
+    pub block_len: u64,
+    pub steps_per_block: u64,
+    pub seed: u64,
+}
+
+impl CalibConfig {
+    /// The serving-stack default: the chat mix's length range in four
+    /// power-of-two buckets over the paper's §6.2 block geometry.
+    pub fn serving_default(variants: &[usize]) -> Self {
+        let mut variants = variants.to_vec();
+        variants.sort_unstable();
+        variants.dedup();
+        if variants.is_empty() {
+            variants.push(1);
+        }
+        CalibConfig {
+            variants,
+            buckets: vec![(96, 256), (256, 512), (512, 1024), (1024, 2048)],
+            samples_per_cell: 5,
+            block_len: 64,
+            steps_per_block: 16,
+            seed: 0xCA11B,
+        }
+    }
+}
+
+/// Profiles one hardware point into a [`LatencyCurve`].
+pub struct Calibrator {
+    sim: AnalyticalSim,
+    model: ModelArch,
+    cache: CacheMode,
+    pub cfg: CalibConfig,
+}
+
+impl Calibrator {
+    pub fn new(hw: HwConfig, model: ModelArch, cache: CacheMode,
+               cfg: CalibConfig) -> Self {
+        let sim = AnalyticalSim::new(hw, PrecisionConfig::dart_full_quant());
+        Calibrator { sim, model, cache, cfg }
+    }
+
+    /// Draw one jittered workload inside a bucket: total length uniform
+    /// in `[lo, hi)`, generation taking ~2/3 of it rounded to whole
+    /// blocks (the blocked-diffusion commit granularity).
+    fn draw_workload(&self, rng: &mut SplitMix64, variant: usize,
+                     lo: u64, hi: u64) -> Workload {
+        let block = self.cfg.block_len.max(1);
+        let total = rng.range(lo, hi.max(lo + 1));
+        let mut gen = (2 * total / 3 / block).max(1) * block;
+        if gen + 8 > total {
+            gen = block;
+        }
+        let prompt = total.saturating_sub(gen).max(8);
+        Workload {
+            model: self.model.clone(),
+            batch: variant as u64,
+            prompt_len: prompt,
+            gen_len: gen,
+            block_len: block,
+            steps_per_block: self.cfg.steps_per_block,
+            cache: self.cache,
+        }
+    }
+
+    /// Profile every (variant, bucket) cell into a curve for `device`.
+    pub fn profile(&self, device: &str) -> LatencyCurve {
+        let mut points = Vec::new();
+        for &variant in &self.cfg.variants {
+            for &(lo, hi) in &self.cfg.buckets {
+                // seeded per *bucket* (not per variant): every variant
+                // profiles the identical jittered workload draws, so
+                // cross-variant cost comparisons (the batcher's
+                // exact-fill-vs-pad-up split) are apples-to-apples
+                let mut rng = SplitMix64::new(self.cfg.seed ^ lo);
+                let n = self.cfg.samples_per_cell.max(1);
+                let mut totals = Vec::with_capacity(n);
+                let mut firsts = Vec::with_capacity(n);
+                let mut gen_sum = 0u64;
+                for _ in 0..n {
+                    let w = self.draw_workload(&mut rng, variant, lo, hi);
+                    let total = self.sim.run(&w).total_s;
+                    totals.push(total);
+                    firsts.push(total / w.n_blocks().max(1) as f64);
+                    gen_sum += w.gen_len;
+                }
+                points.push(CurvePoint {
+                    variant,
+                    bucket_lo: lo,
+                    bucket_hi: hi,
+                    gen_tokens: gen_sum / n as u64,
+                    p50_total_s: quantile(&totals, 0.50),
+                    p95_total_s: quantile(&totals, 0.95),
+                    p50_first_s: quantile(&firsts, 0.50),
+                    p95_first_s: quantile(&firsts, 0.95),
+                    samples: n as u32,
+                });
+            }
+        }
+        LatencyCurve::new(device, points)
+    }
+}
+
+/// Result of one analytical-vs-cycle spot check on a sampling step.
+#[derive(Clone, Copy, Debug)]
+pub struct SpotCheck {
+    pub analytical_s: f64,
+    pub cycle_s: f64,
+    pub cycles: u64,
+}
+
+impl SpotCheck {
+    /// |analytical − cycle| / cycle.
+    pub fn rel_err(&self) -> f64 {
+        crate::util::rel_err(self.analytical_s, self.cycle_s)
+    }
+}
+
+/// Execute the compiled Algorithm 2 program on the cycle-accurate
+/// simulator at `(b, l, v, v_chunk)` and compare against the analytical
+/// sampling-step latency — the Table 4 cross-validation as a callable.
+/// SRAM domains are sized exactly as the Table 4 harness sizes them.
+pub fn spot_check_sampling(base: &HwConfig, b: usize, l: usize, v: usize,
+                           v_chunk: usize, seed: u64) -> SpotCheck {
+    let v_chunk = v_chunk.clamp(1, v);
+    let mut hw = base.clone();
+    hw.v_chunk = v_chunk as u32;
+    hw.vector_sram = ((2 * v_chunk + 4 * l) * 4) as u64;
+    hw.int_sram = (5 * b * l * 4).max(1 << 14) as u64;
+
+    let layout = SamplingLayout::new(b as u32, l as u32, v as u32,
+                                     v_chunk as u32, 0);
+    let prog = sampling_program(&layout, &vec![(l / 2).max(1) as u32; b]);
+    let mut sim = CycleSim::new(hw.clone(), b * l * v + 64);
+    let mut rng = SplitMix64::new(seed);
+    // chunked fill to bound peak temp memory (large V × many positions)
+    let mut off = 0usize;
+    while off < b * l * v {
+        let n = (1 << 20).min(b * l * v - off);
+        let z = rng.normal_vec(n, 3.0);
+        sim.hbm_store_f32(off, &z);
+        off += n;
+    }
+    // token grid defaults to all-masked (mask_id 0 over zeroed Int SRAM)
+    let rep = sim.run(&prog);
+    let cycle_s = rep.cycles as f64 / hw.clock_hz;
+
+    let asim = AnalyticalSim::new(hw, PrecisionConfig {
+        sampling: SamplePrecision::Fp32,
+        ..PrecisionConfig::dart_full_quant()
+    });
+    let analytical_s = asim.sampling_step(b as u64, l as u64, v as u64)
+        .seconds;
+    SpotCheck { analytical_s, cycle_s, cycles: rep.cycles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::curve::Pct;
+
+    fn calibrator(hw: HwConfig) -> Calibrator {
+        let mut cfg = CalibConfig::serving_default(&[1, 4, 16]);
+        cfg.samples_per_cell = 3;
+        Calibrator::new(hw, ModelArch::llada_8b(), CacheMode::Dual, cfg)
+    }
+
+    #[test]
+    fn profile_is_deterministic_and_complete() {
+        let c = calibrator(HwConfig::dart_default());
+        let a = c.profile("npu0");
+        let b = c.profile("npu0");
+        assert_eq!(a.points.len(), 3 * 4);
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.p50_total_s.to_bits(), y.p50_total_s.to_bits());
+            assert_eq!(x.p95_first_s.to_bits(), y.p95_first_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn curve_shape_is_physical() {
+        let c = calibrator(HwConfig::dart_default()).profile("npu0");
+        for p in &c.points {
+            assert!(p.p50_total_s > 0.0);
+            assert!(p.p95_total_s >= p.p50_total_s);
+            assert!(p.p50_first_s <= p.p50_total_s);
+            assert!(p.p95_first_s >= p.p50_first_s);
+        }
+        // bigger variant costs more at the same bucket (batch is not free)
+        let t1 = c.total_s(1, 300, Pct::P50).unwrap();
+        let t16 = c.total_s(16, 300, Pct::P50).unwrap();
+        assert!(t16 > t1, "t16 {t16} vs t1 {t1}");
+        // ... but is sublinear (the whole point of batching)
+        assert!(t16 < 16.0 * t1, "t16 {t16} vs 16*t1 {}", 16.0 * t1);
+        // longer sequences cost more at the same variant
+        let short = c.total_s(4, 128, Pct::P50).unwrap();
+        let long = c.total_s(4, 1500, Pct::P50).unwrap();
+        assert!(long > short);
+    }
+
+    #[test]
+    fn edge_point_is_slower_than_datacenter() {
+        let dc = calibrator(HwConfig::dart_default()).profile("dc");
+        let edge = calibrator(HwConfig::dart_edge()).profile("edge");
+        let a = dc.total_s(4, 300, Pct::P50).unwrap();
+        let b = edge.total_s(4, 300, Pct::P50).unwrap();
+        assert!(b > a, "edge {b} vs dc {a}");
+    }
+
+    #[test]
+    fn curve_roundtrips_through_text() {
+        let c = calibrator(HwConfig::dart_edge()).profile("edge0");
+        let back = LatencyCurve::from_text(&c.to_text()).unwrap();
+        assert_eq!(back.device, "edge0");
+        assert_eq!(back.points.len(), c.points.len());
+        let a = c.measured_tokens_per_s().unwrap();
+        let b = back.measured_tokens_per_s().unwrap();
+        assert!(crate::util::rel_err(b, a) < 1e-6);
+    }
+
+    #[test]
+    fn spot_check_small_shape_agrees_roughly() {
+        // a cheap sanity shape; the full Table 4 geometry lives in
+        // rust/tests/cross_path.rs
+        let s = spot_check_sampling(&HwConfig::dart_default(),
+                                    1, 8, 16_384, 16_384, 11);
+        assert!(s.analytical_s > 0.0 && s.cycle_s > 0.0);
+        assert!(s.cycles > 0);
+        assert!(s.rel_err() < 0.6, "rel err {}", s.rel_err());
+    }
+}

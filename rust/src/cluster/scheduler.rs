@@ -13,11 +13,22 @@
 //! the next-ranked device) when the prediction blows the deadline, so an
 //! overloaded fleet degrades by rejecting early instead of timing out
 //! every queued request.
+//!
+//! When the topology is calibrated ([`ClusterTopology::calibrate`]),
+//! two policies switch from analytic scalars to measured curves: the
+//! admission predictor prices the first-block TTFT component at the
+//! device curve's p95 (a conservative tail estimate), and each device's
+//! batcher runs the cost-based flush policy
+//! ([`crate::coordinator::batcher::CostModel`]) built from the same
+//! curve — so heterogeneous edge+datacenter fleets are scheduled on
+//! what each device actually measures, not on a shared model.
 
 use std::collections::HashMap;
 
+use crate::calib::{LatencyCurve, Pct};
 use crate::config::Workload;
-use crate::coordinator::batcher::{BatchPlan, Batcher, BatcherConfig};
+use crate::coordinator::batcher::{BatchPlan, Batcher, BatcherConfig,
+                                  CostModel, FlushPolicy};
 use crate::sim::analytical::{AnalyticalSim, PrecisionConfig};
 
 use super::fleet_metrics::{FleetMetrics, ShedReason};
@@ -59,7 +70,10 @@ impl SloConfig {
 }
 
 /// Closed-form service pricing for one device: memoized over the
-/// (variant, prompt, gen) grid the length mix actually produces.
+/// (variant, prompt, gen) grid the length mix actually produces. When
+/// the device carries a measured [`LatencyCurve`], the admission-facing
+/// quantities (backlog pace, first-block TTFT component) come from the
+/// curve's percentiles instead of the analytic scalars.
 pub(crate) struct ServiceModel {
     sim: AnalyticalSim,
     model: crate::config::ModelArch,
@@ -67,9 +81,12 @@ pub(crate) struct ServiceModel {
     block_len: u64,
     steps_per_block: u64,
     memo: HashMap<(usize, usize, usize), (f64, f64)>,
-    /// calibrated generated-tokens/s at the largest variant — the
-    /// router's backlog→seconds conversion factor
+    /// generated-tokens/s at the largest variant — the router's
+    /// backlog→seconds conversion factor (measured p50 pace when a
+    /// curve is attached, analytic calibration otherwise)
     pub tokens_per_s: f64,
+    /// measured batch-variant latency curve, when calibrated
+    curve: Option<LatencyCurve>,
 }
 
 impl ServiceModel {
@@ -84,12 +101,34 @@ impl ServiceModel {
             steps_per_block: topo.steps_per_block,
             memo: HashMap::new(),
             tokens_per_s: 1.0,
+            curve: spec.curve.clone(),
         };
         let biggest = *spec.batch_variants.iter().max().unwrap_or(&1);
         let gen = (4 * topo.block_len) as usize;
         let (total, _) = m.service(biggest, 128, gen);
         m.tokens_per_s = (biggest * gen) as f64 / total.max(1e-9);
+        if let Some(tps) = m.curve.as_ref()
+            .and_then(|c| c.measured_tokens_per_s())
+        {
+            m.tokens_per_s = tps;
+        }
         m
+    }
+
+    /// The TTFT service component the admission predictor uses:
+    /// measured p95 first-block latency from the device curve when
+    /// calibrated (a conservative tail estimate — the whole point of
+    /// the percentile predictor), analytic mean otherwise.
+    pub(crate) fn first_block_p95(&mut self, variant: usize, prompt: usize,
+                                  gen: usize) -> f64 {
+        if let Some(c) = &self.curve {
+            if let Some(f) = c.first_block_s(
+                variant, (prompt + gen) as u64, Pct::P95)
+            {
+                return f;
+            }
+        }
+        self.service(variant, prompt, gen).1
     }
 
     /// (total_s, first_block_s) for a batch of `variant` lanes padded to
@@ -133,10 +172,19 @@ struct InFlight {
 
 impl SimDevice {
     fn new(spec: &DeviceSpec, topo: &ClusterTopology) -> Self {
+        // a calibrated device drives its batcher with the measured
+        // variant costs at the curve's representative sequence length;
+        // uncalibrated devices keep the static policy
+        let policy = match &spec.curve {
+            Some(curve) => FlushPolicy::CostBased(CostModel::from_pairs(
+                &curve.variant_costs(curve.mid_seq_len(), Pct::P50))),
+            None => FlushPolicy::Static,
+        };
         let bcfg = BatcherConfig {
             variants: spec.batch_variants.clone(),
             max_wait: std::time::Duration::from_secs_f64(spec.max_wait_s),
             capacity: spec.queue_capacity,
+            policy,
         };
         SimDevice {
             batcher: Batcher::new(bcfg),
@@ -267,8 +315,11 @@ impl FleetSim {
             if self.slo.admission {
                 let fill = (loads[di].queue_len + 1)
                     .min(*d.batcher.cfg.variants.last().unwrap());
-                let (_, first) =
-                    d.svc.service(fill, req.prompt_len, req.gen_len);
+                // measured-percentile TTFT predictor: p95 first-block
+                // from the device curve when calibrated, analytic mean
+                // otherwise (see ServiceModel::first_block_p95)
+                let first =
+                    d.svc.first_block_p95(fill, req.prompt_len, req.gen_len);
                 let max_wait = d.batcher.cfg.max_wait.as_secs_f64();
                 let predicted_ttft =
                     dispatch + loads[di].outstanding_s + max_wait + first;
@@ -457,5 +508,102 @@ mod tests {
         let c4 = fleet_capacity_tps(&small_topo(4));
         assert!((c4 / c1 - 4.0).abs() < 1e-6);
         assert!(c1 > 0.0);
+    }
+
+    #[test]
+    fn calibrated_service_model_uses_measured_percentiles() {
+        let topo = small_topo(1);
+        let mut analytic = ServiceModel::new(&topo.devices[0], &topo);
+        let mut cal_topo = topo.clone();
+        cal_topo.calibrate();
+        let mut measured =
+            ServiceModel::new(&cal_topo.devices[0], &cal_topo);
+        // both paces are physical and in the same ballpark, but the
+        // measured one comes from the curve (bucketed + jittered), so
+        // the two are not the same number
+        assert!(analytic.tokens_per_s > 0.0);
+        assert!(measured.tokens_per_s > 0.0);
+        let ratio = measured.tokens_per_s / analytic.tokens_per_s;
+        assert!(ratio > 0.2 && ratio < 5.0, "ratio {ratio}");
+        assert!(measured.tokens_per_s != analytic.tokens_per_s);
+        // the p95 predictor is at least as conservative as the curve's
+        // own p50 at the same cell
+        let curve = cal_topo.devices[0].curve.as_ref().unwrap();
+        let f95 = measured.first_block_p95(4, 128, 256);
+        let f50 = curve
+            .first_block_s(4, 384, crate::calib::Pct::P50)
+            .unwrap();
+        assert!(f95 >= f50, "p95 {f95} vs p50 {f50}");
+        // uncalibrated falls back to the analytic mean
+        let fa = analytic.first_block_p95(4, 128, 256);
+        let (_, sa) = analytic.service(4, 128, 256);
+        assert!((fa - sa).abs() < 1e-15);
+    }
+
+    #[test]
+    fn calibrated_fleet_completes_saturating_backlog() {
+        let mut topo = small_topo(2);
+        topo.calibrate();
+        let mut slo = SloConfig::auto(&topo);
+        slo.admission = false;
+        let mut sim = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo);
+        let m = sim.run(&saturating_trace(64));
+        assert_eq!(m.completed, 64);
+        assert!(m.horizon_s > 0.0);
+        assert!(m.devices.iter().all(|d| d.requests > 0), "{:?}", m.devices);
+    }
+
+    #[test]
+    fn cost_based_flush_fires_lone_straggler_early() {
+        // a burst of 5 at t=0 (flushed identically under both policies:
+        // the measured curve is weight-streaming-sublinear, so pad-up
+        // wins) followed by one lone straggler at t=10 with the device
+        // idle. Static holds the straggler the full max_wait; the
+        // cost-based policy sees a ~3 s interarrival EWMA, concludes
+        // batchmates cannot arrive inside the window, and fires
+        // immediately — the fleet horizon shifts earlier by max_wait.
+        let req = |id: u64, t: f64| crate::cluster::TraceRequest {
+            id, arrival_s: t, prompt_len: 128, gen_len: 256,
+        };
+        let mut trace: Vec<crate::cluster::TraceRequest> =
+            (0..5).map(|i| req(i, 0.0)).collect();
+        trace.push(req(5, 10.0));
+        let run = |calibrated: bool| {
+            let mut topo = small_topo(1);
+            if calibrated {
+                topo.calibrate();
+            }
+            let mut slo = SloConfig::auto(&topo);
+            slo.admission = false;
+            FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+                .run(&trace)
+        };
+        let stat = run(false);
+        let cal = run(true);
+        assert_eq!(stat.completed, 6);
+        assert_eq!(cal.completed, 6);
+        let max_wait = 0.05; // homogeneous() default
+        let delta = stat.horizon_s - cal.horizon_s;
+        assert!((delta - max_wait).abs() < 1e-6,
+                "expected the straggler to fire ~{max_wait}s earlier, \
+                 horizon {} vs {}", stat.horizon_s, cal.horizon_s);
+    }
+
+    #[test]
+    fn heterogeneous_calibrated_fleet_routes_by_measured_speed() {
+        let mut topo = ClusterTopology::edge_datacenter(
+            1, 1, ModelArch::llada_8b(), CacheMode::Dual);
+        topo.calibrate();
+        let mut slo = SloConfig::auto(&topo);
+        slo.admission = false;
+        let mut sim = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo);
+        let trace = saturating_trace(48);
+        let m = sim.run(&trace);
+        assert_eq!(m.completed, 48);
+        // least-outstanding over measured paces: the fast dc device
+        // absorbs more requests than the edge device
+        assert!(m.devices[0].requests > m.devices[1].requests,
+                "dc {} vs edge {}", m.devices[0].requests,
+                m.devices[1].requests);
     }
 }

@@ -9,6 +9,7 @@
 //! config files the rest of the stack uses (`[cluster]` section via
 //! [`crate::config::parse_config`]).
 
+use crate::calib::{CalibConfig, Calibrator, LatencyCurve};
 use crate::config::{CacheMode, ConfigDoc, HwConfig, ModelArch};
 
 /// Latency model for shipping a request from the router to a device:
@@ -66,6 +67,10 @@ pub struct DeviceSpec {
     pub max_wait_s: f64,
     /// per-device admission queue bound (backpressure)
     pub queue_capacity: usize,
+    /// measured batch-variant latency curve (attached by
+    /// [`ClusterTopology::calibrate`]); None = uncalibrated, the
+    /// scheduler falls back to analytic scalars and the static batcher
+    pub curve: Option<LatencyCurve>,
 }
 
 /// The whole fleet: shared model, per-device specs, interconnect, and
@@ -93,6 +98,7 @@ impl ClusterTopology {
                 batch_variants: vec![1, 2, 4, 8, 16],
                 max_wait_s: 0.05,
                 queue_capacity: 1024,
+                curve: None,
             })
             .collect();
         ClusterTopology {
@@ -102,6 +108,96 @@ impl ClusterTopology {
             devices,
             interconnect: InterconnectModel::pcie_gen4(),
         }
+    }
+
+    /// A heterogeneous fleet: `n_dc` datacenter devices at the paper's
+    /// Table 6 operating point fronting `n_edge` edge devices at the
+    /// small-SRAM point (the mixed deployment the on-device dLLM work
+    /// targets). Edge devices compile fewer variants and tolerate a
+    /// longer batching wait; per-device curves (via
+    /// [`Self::calibrate`]) are what make routing/admission across the
+    /// speed mismatch meaningful.
+    pub fn edge_datacenter(n_dc: usize, n_edge: usize, model: ModelArch,
+                           cache: CacheMode) -> Self {
+        assert!(n_dc + n_edge > 0, "cluster needs at least one device");
+        let mut devices = Vec::with_capacity(n_dc + n_edge);
+        for i in 0..n_dc {
+            devices.push(DeviceSpec {
+                name: format!("dc{i}"),
+                hw: HwConfig::dart_default(),
+                cache,
+                batch_variants: vec![1, 2, 4, 8, 16],
+                max_wait_s: 0.05,
+                queue_capacity: 1024,
+                curve: None,
+            });
+        }
+        for i in 0..n_edge {
+            devices.push(DeviceSpec {
+                name: format!("edge{i}"),
+                hw: HwConfig::dart_edge(),
+                cache,
+                batch_variants: vec![1, 2, 4],
+                max_wait_s: 0.10,
+                queue_capacity: 256,
+                curve: None,
+            });
+        }
+        ClusterTopology {
+            model,
+            block_len: 64,
+            steps_per_block: 16,
+            devices,
+            interconnect: InterconnectModel::ethernet_100g(),
+        }
+    }
+
+    /// Profile every device's compiled batch variants through the
+    /// analytical fast path and attach the measured [`LatencyCurve`]s.
+    /// Idempotent; devices sharing a hardware point are still profiled
+    /// individually (their variant sets may differ).
+    pub fn calibrate(&mut self) {
+        for d in &mut self.devices {
+            let mut cfg = CalibConfig::serving_default(&d.batch_variants);
+            cfg.block_len = self.block_len;
+            cfg.steps_per_block = self.steps_per_block;
+            let cal = Calibrator::new(d.hw.clone(), self.model.clone(),
+                                      d.cache, cfg);
+            d.curve = Some(cal.profile(&d.name));
+        }
+    }
+
+    /// Attach a previously persisted curve (see
+    /// [`LatencyCurve::from_text`]) to every device whose compiled
+    /// variant set matches the curve's — the replay half of the
+    /// profile-once workflow (appropriate for homogeneous fleets;
+    /// heterogeneous fleets should re-profile with [`Self::calibrate`]).
+    /// Mismatched devices are left uncalibrated (analytic admission +
+    /// static batcher) so the admission predictor and the batcher can
+    /// never price from different variant tables. Returns the number of
+    /// devices the curve was attached to.
+    pub fn attach_curve(&mut self, curve: &LatencyCurve) -> usize {
+        let cv = curve.variants();
+        let mut attached = 0;
+        for d in &mut self.devices {
+            let mut dv = d.batch_variants.clone();
+            dv.sort_unstable();
+            dv.dedup();
+            if dv != cv {
+                continue;
+            }
+            let mut c = curve.clone();
+            c.device = d.name.clone();
+            d.curve = Some(c);
+            attached += 1;
+        }
+        attached
+    }
+
+    /// True when every device carries a measured curve.
+    pub fn is_calibrated(&self) -> bool {
+        !self.devices.is_empty()
+            && self.devices.iter().all(|d| d.curve.is_some())
     }
 
     pub fn n_devices(&self) -> usize {
@@ -164,6 +260,12 @@ impl ClusterTopology {
                 }
             }
         }
+        // last, so the curves are measured against the final topology
+        if let Some(v) = doc.get("cluster", "calibrated") {
+            if v.as_bool() == Some(true) {
+                self.calibrate();
+            }
+        }
     }
 }
 
@@ -224,5 +326,81 @@ block_len = 32
         assert!(InterconnectModel::parse("pcie").is_some());
         assert!(InterconnectModel::parse("NVLINK").is_some());
         assert!(InterconnectModel::parse("token-ring").is_none());
+    }
+
+    #[test]
+    fn edge_datacenter_fleet_is_heterogeneous() {
+        let t = ClusterTopology::edge_datacenter(
+            2, 3, ModelArch::llada_8b(), CacheMode::Dual);
+        assert_eq!(t.n_devices(), 5);
+        assert_eq!(t.devices[0].name, "dc0");
+        assert_eq!(t.devices[2].name, "edge0");
+        assert!(t.devices[0].hw.vlen > t.devices[2].hw.vlen);
+        assert!(t.devices[0].batch_variants.last()
+                > t.devices[2].batch_variants.last());
+        assert!(!t.is_calibrated());
+    }
+
+    #[test]
+    fn calibrate_attaches_per_device_curves() {
+        let mut t = ClusterTopology::edge_datacenter(
+            1, 1, ModelArch::llada_8b(), CacheMode::Dual);
+        t.calibrate();
+        assert!(t.is_calibrated());
+        let dc = t.devices[0].curve.as_ref().unwrap();
+        let edge = t.devices[1].curve.as_ref().unwrap();
+        assert_eq!(dc.device, "dc0");
+        // each device's curve covers exactly its own variant set
+        assert_eq!(dc.variants(), vec![1, 2, 4, 8, 16]);
+        assert_eq!(edge.variants(), vec![1, 2, 4]);
+        // the edge point is measurably slower
+        use crate::calib::Pct;
+        let a = dc.total_s(4, 300, Pct::P50).unwrap();
+        let b = edge.total_s(4, 300, Pct::P50).unwrap();
+        assert!(b > a, "edge {b} vs dc {a}");
+    }
+
+    #[test]
+    fn persisted_curve_replays_onto_a_fleet() {
+        // the profile-once workflow: calibrate one device, persist the
+        // curve, attach the parsed copy to a fresh fleet
+        let mut donor = ClusterTopology::homogeneous(
+            1, HwConfig::dart_edge(), ModelArch::llada_8b(),
+            CacheMode::Dual);
+        donor.calibrate();
+        let text = donor.devices[0].curve.as_ref().unwrap().to_text();
+        let curve = crate::calib::LatencyCurve::from_text(&text).unwrap();
+        let mut fleet = ClusterTopology::homogeneous(
+            3, HwConfig::dart_edge(), ModelArch::llada_8b(),
+            CacheMode::Dual);
+        assert_eq!(fleet.attach_curve(&curve), 3);
+        assert!(fleet.is_calibrated());
+        assert_eq!(fleet.devices[2].curve.as_ref().unwrap().device, "npu2");
+        use crate::calib::Pct;
+        let a = donor.devices[0].curve.as_ref().unwrap()
+            .total_s(4, 300, Pct::P95).unwrap();
+        let b = fleet.devices[1].curve.as_ref().unwrap()
+            .total_s(4, 300, Pct::P95).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits());
+        // a curve for a different variant set is refused, not half-used
+        let mut mismatched = ClusterTopology::homogeneous(
+            2, HwConfig::dart_edge(), ModelArch::llada_8b(),
+            CacheMode::Dual);
+        mismatched.devices[0].batch_variants = vec![1, 2, 4];
+        assert_eq!(mismatched.attach_curve(&curve), 1);
+        assert!(!mismatched.is_calibrated());
+        assert!(mismatched.devices[0].curve.is_none());
+        assert!(mismatched.devices[1].curve.is_some());
+    }
+
+    #[test]
+    fn calibrated_override_applies() {
+        let doc = parse_config("[cluster]\ndevices = 2\ncalibrated = true\n")
+            .unwrap();
+        let mut t = ClusterTopology::homogeneous(
+            1, HwConfig::dart_edge(), ModelArch::tiny(), CacheMode::Dual);
+        t.apply_overrides(&doc);
+        assert_eq!(t.n_devices(), 2);
+        assert!(t.is_calibrated());
     }
 }

@@ -1,15 +1,27 @@
-//! Dynamic batcher: groups pending requests into the *smallest*
-//! compiled batch variant that fits them (the executable's batch
-//! dimension is shape-static, so a ragged batch must pad up to a
-//! compiled size — padded lanes are generated and discarded).
+//! Dynamic batcher: groups pending requests into compiled batch
+//! variants (the executable's batch dimension is shape-static, so a
+//! ragged batch must pad up to a compiled size — padded lanes are
+//! generated and discarded).
 //!
-//! A flush of n requests always runs as one batch at the smallest
-//! compiled variant `>= n` (never the largest): padding is bounded by
-//! the gap to the next variant, and the flush is never split into
-//! serial sub-batches — batch cost is sublinear in the variant size, so
-//! one padded run beats several exact small ones on both TTFT and
-//! throughput. Cumulative padded-lane waste is tracked in the batcher's
-//! own `padded_lanes` counter (the serving [`super::metrics::Metrics`]
+//! Two flush policies:
+//!
+//! * [`FlushPolicy::Static`] — the original rule: fire when a full
+//!   largest-variant batch is queued or the oldest request exceeds
+//!   `max_wait`, always running everything available as one batch at
+//!   the smallest compiled variant that fits it.
+//! * [`FlushPolicy::CostBased`] — driven by a measured
+//!   [`CostModel`] (per-variant latencies from a
+//!   [`crate::calib::LatencyCurve`] or a synthetic table in tests).
+//!   Two decisions become economic instead of structural: *when* to
+//!   fire (keep waiting only while the measured amortization gain of a
+//!   fuller variant beats the expected-arrival wait cost, estimated
+//!   from an online interarrival EWMA) and *what* to run (exact-fill a
+//!   smaller variant and leave the remainder queued when the measured
+//!   pad-up variant is disproportionately expensive — e.g. it spills a
+//!   cache working set — otherwise pad up as before).
+//!
+//! Cumulative padded-lane waste is tracked in the batcher's own
+//! `padded_lanes` counter (the serving [`super::metrics::Metrics`]
 //! accounts the same waste independently per recorded batch).
 //!
 //! Time is pluggable: the serving path uses wall-clock [`push`] /
@@ -25,6 +37,151 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+/// Measured cost of one compiled batch variant (seconds per flush).
+#[derive(Clone, Copy, Debug)]
+pub struct VariantCost {
+    pub variant: usize,
+    pub latency_s: f64,
+}
+
+/// The measured-latency table behind the cost-based flush policy, plus
+/// the decision rules themselves. Both decisions are pure functions of
+/// the table so they can be unit-tested against synthetic curves.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// ascending by variant, deduped
+    costs: Vec<VariantCost>,
+}
+
+impl CostModel {
+    pub fn new(mut costs: Vec<VariantCost>) -> Self {
+        costs.sort_by_key(|c| c.variant);
+        costs.dedup_by_key(|c| c.variant);
+        assert!(!costs.is_empty(), "cost model needs at least one variant");
+        CostModel { costs }
+    }
+
+    /// Build from `(variant, latency_s)` pairs (the shape
+    /// [`crate::calib::LatencyCurve::variant_costs`] emits).
+    pub fn from_pairs(pairs: &[(usize, f64)]) -> Self {
+        CostModel::new(pairs.iter()
+            .map(|&(variant, latency_s)| VariantCost { variant, latency_s })
+            .collect())
+    }
+
+    /// The modeled variant set, ascending.
+    pub fn variants(&self) -> Vec<usize> {
+        self.costs.iter().map(|c| c.variant).collect()
+    }
+
+    /// The cell for the smallest modeled variant that fits `n` (largest
+    /// when none does) — the single home of the pad-up round-up rule.
+    fn cost_for(&self, n: usize) -> &VariantCost {
+        self.costs.iter().find(|c| c.variant >= n)
+            .unwrap_or_else(|| self.costs.last().unwrap())
+    }
+
+    fn variant_for(&self, n: usize) -> usize {
+        self.cost_for(n).variant
+    }
+
+    /// Measured latency of flushing `n` requests at the smallest
+    /// fitting variant.
+    pub fn latency_for(&self, n: usize) -> f64 {
+        self.cost_for(n).latency_s
+    }
+
+    /// Device seconds to serve a queue of `n` if flushed right now,
+    /// priced at the plan [`Self::split`] would actually run (an
+    /// exact-fill split takes two flushes: the exact variant now plus
+    /// the leftover later).
+    fn flush_now_cost(&self, n: usize) -> f64 {
+        let (take, _) = self.split(n);
+        if take >= n {
+            self.latency_for(n)
+        } else {
+            self.latency_for(take) + self.latency_for(n - take)
+        }
+    }
+
+    /// Exact-fill vs pad-up for a flush of `take0` requests: returns
+    /// `(take, variant)`. Padding up runs everything now at the smallest
+    /// fitting variant; exact-filling runs the largest variant `<=
+    /// take0` and leaves the remainder queued. The cheaper total device
+    /// time wins (remainder priced at its own later flush), with ties
+    /// going to pad-up (one flush, better latency).
+    pub fn split(&self, take0: usize) -> (usize, usize) {
+        let v_pad = self.variant_for(take0);
+        if v_pad == take0 {
+            return (take0, v_pad); // already an exact fill
+        }
+        let Some(v_exact) = self.costs.iter().rev()
+            .map(|c| c.variant).find(|&v| v <= take0)
+        else {
+            return (take0, v_pad); // no smaller variant exists: must pad
+        };
+        let leftover = take0 - v_exact;
+        let cost_pad = self.latency_for(take0);
+        let cost_exact = self.latency_for(v_exact)
+            + self.latency_for(leftover.max(1));
+        if cost_exact < cost_pad {
+            (v_exact, v_exact)
+        } else {
+            (take0, v_pad)
+        }
+    }
+
+    /// Expected seconds for the queue to grow from `n` to the next
+    /// strictly-larger variant at the observed arrival pace (0.0 when
+    /// no larger variant exists).
+    pub fn fill_gap_s(&self, n: usize, mean_interarrival_s: f64) -> f64 {
+        match self.costs.iter().map(|c| c.variant).find(|&v| v > n) {
+            Some(target) => (target - n) as f64
+                * mean_interarrival_s.max(0.0),
+            None => 0.0,
+        }
+    }
+
+    /// Should a queue of `n` keep waiting for batchmates? Waiting
+    /// targets the next strictly-larger variant: worth it only when it
+    /// can plausibly fill inside the *remaining* wait window
+    /// (`(target − n) · E[interarrival] <= window_s`) *and* the
+    /// amortized device time per request at the target, plus the
+    /// expected extra wait (traded one-for-one against device seconds),
+    /// beats flushing now.
+    pub fn should_wait(&self, n: usize, mean_interarrival_s: f64,
+                       window_s: f64) -> bool {
+        if n == 0 {
+            return true;
+        }
+        let Some(target) = self.costs.iter()
+            .map(|c| c.variant).find(|&v| v > n)
+        else {
+            return false; // already at (or past) the largest variant
+        };
+        let gap = (target - n) as f64 * mean_interarrival_s.max(0.0);
+        if gap > window_s {
+            return false; // can't fill the target inside the window
+        }
+        // flushing now is priced at the plan split() would actually run
+        // (possibly an exact-fill pair of flushes), so the wait decision
+        // and the flush decision share one economics
+        let per_now = self.flush_now_cost(n) / n as f64;
+        let per_wait = self.latency_for(target) / target as f64 + gap;
+        per_wait < per_now
+    }
+}
+
+/// How the batcher decides when to fire and which variant to run.
+#[derive(Clone, Debug, Default)]
+pub enum FlushPolicy {
+    /// fire on full-largest-variant or max_wait; pad to smallest fit
+    #[default]
+    Static,
+    /// measured-curve decisions (see [`CostModel`])
+    CostBased(CostModel),
+}
+
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
     /// compiled batch variants, ascending (from the manifest)
@@ -33,6 +190,8 @@ pub struct BatcherConfig {
     pub max_wait: Duration,
     /// queue capacity (backpressure bound)
     pub capacity: usize,
+    /// flush decision policy
+    pub policy: FlushPolicy,
 }
 
 impl Default for BatcherConfig {
@@ -41,6 +200,7 @@ impl Default for BatcherConfig {
             variants: vec![1, 4],
             max_wait: Duration::from_millis(20),
             capacity: 1024,
+            policy: FlushPolicy::Static,
         }
     }
 }
@@ -67,6 +227,10 @@ impl<T> BatchPlan<T> {
     }
 }
 
+/// Smoothing factor of the online interarrival EWMA feeding the
+/// cost-based wait decision.
+const IA_EWMA_ALPHA: f64 = 0.3;
+
 pub struct Batcher<T> {
     pub cfg: BatcherConfig,
     queue: VecDeque<Pending<T>>,
@@ -76,6 +240,10 @@ pub struct Batcher<T> {
     pub rejected: u64,
     /// cumulative padded lanes across every plan this batcher issued
     pub padded_lanes: u64,
+    /// last arrival time on the batcher's clock axis
+    last_arrival_s: Option<f64>,
+    /// EWMA of arrival gaps (None until two arrivals observed)
+    ia_ewma_s: Option<f64>,
 }
 
 impl<T> Batcher<T> {
@@ -83,6 +251,15 @@ impl<T> Batcher<T> {
         cfg.variants.sort_unstable();
         cfg.variants.dedup();
         assert!(!cfg.variants.is_empty());
+        // a cost model for a different variant set cannot price this
+        // queue's plans; serve statically rather than misprice
+        let mismatched = match &cfg.policy {
+            FlushPolicy::CostBased(cm) => cm.variants() != cfg.variants,
+            FlushPolicy::Static => false,
+        };
+        if mismatched {
+            cfg.policy = FlushPolicy::Static;
+        }
         Batcher {
             cfg,
             queue: VecDeque::new(),
@@ -90,6 +267,8 @@ impl<T> Batcher<T> {
             enqueued: 0,
             rejected: 0,
             padded_lanes: 0,
+            last_arrival_s: None,
+            ia_ewma_s: None,
         }
     }
 
@@ -110,6 +289,14 @@ impl<T> Batcher<T> {
             self.rejected += 1;
             return false;
         }
+        if let Some(last) = self.last_arrival_s {
+            let gap = (now_s - last).max(0.0);
+            self.ia_ewma_s = Some(match self.ia_ewma_s {
+                Some(prev) => IA_EWMA_ALPHA * gap + (1.0 - IA_EWMA_ALPHA) * prev,
+                None => gap,
+            });
+        }
+        self.last_arrival_s = Some(now_s);
         self.queue.push_back(Pending { item, arrived_s: now_s });
         self.enqueued += 1;
         true
@@ -133,16 +320,74 @@ impl<T> Batcher<T> {
         self.queue.front().map(|p| p.arrived_s)
     }
 
-    /// Earliest time a batch can fire: immediately once a full
-    /// largest-variant batch is queued, otherwise when the oldest
-    /// request's `max_wait` expires. None if the queue is empty.
+    /// Observed mean interarrival gap (EWMA); before two arrivals have
+    /// been seen, assume the full wait window so lone requests are not
+    /// held hostage to an unknown arrival rate.
+    pub fn mean_interarrival_s(&self) -> f64 {
+        self.ia_ewma_s.unwrap_or_else(|| self.cfg.max_wait.as_secs_f64())
+    }
+
+    /// Does the policy fire immediately for a queue of `n` with
+    /// `window_s` seconds left before the oldest request's deadline?
+    /// (The deadline path itself — oldest request past `max_wait` —
+    /// fires regardless and is handled by the callers.)
+    fn fires_now(&self, n: usize, window_s: f64) -> bool {
+        if n == 0 {
+            return false;
+        }
+        let biggest = *self.cfg.variants.last().unwrap();
+        if n >= biggest {
+            return true;
+        }
+        match &self.cfg.policy {
+            FlushPolicy::Static => false,
+            FlushPolicy::CostBased(cm) => !cm.should_wait(
+                n, self.mean_interarrival_s(), window_s),
+        }
+    }
+
+    /// Earliest time a batch can fire: immediately once the policy says
+    /// the queue is worth flushing (full largest variant, or a
+    /// cost-based "waiting doesn't pay"); at the crossover where the
+    /// remaining window can no longer fit the expected fill gap
+    /// (cost-based); otherwise when the oldest request's `max_wait`
+    /// expires. None if the queue is empty. Consistent with
+    /// [`Self::next_batch_at`] by construction — the interarrival EWMA
+    /// only changes on pushes, so the returned time stays valid until
+    /// the next event.
     pub fn next_fire_at(&self) -> Option<f64> {
         let oldest = self.oldest_arrived_s()?;
+        let max_wait = self.cfg.max_wait.as_secs_f64();
+        let deadline = oldest + max_wait;
+        let n = self.queue.len();
+        if n >= *self.cfg.variants.last().unwrap() {
+            return Some(oldest);
+        }
+        match &self.cfg.policy {
+            FlushPolicy::Static => Some(deadline),
+            FlushPolicy::CostBased(cm) => {
+                let ia = self.mean_interarrival_s();
+                if !cm.should_wait(n, ia, max_wait) {
+                    // waiting never pays (economics, or infeasible even
+                    // with the whole window): fire as soon as possible
+                    Some(oldest)
+                } else {
+                    // waiting pays while the target can still fill;
+                    // fire when the remaining window shrinks below the
+                    // expected fill gap
+                    Some(deadline - cm.fill_gap_s(n, ia).min(max_wait))
+                }
+            }
+        }
+    }
+
+    /// The `(take, variant)` the policy would run for a queue of `n`.
+    fn plan_for(&self, n: usize) -> (usize, usize) {
         let biggest = *self.cfg.variants.last().unwrap();
-        if self.queue.len() >= biggest {
-            Some(oldest)
-        } else {
-            Some(oldest + self.cfg.max_wait.as_secs_f64())
+        let take0 = n.min(biggest);
+        match &self.cfg.policy {
+            FlushPolicy::Static => (take0, self.variant_for(take0)),
+            FlushPolicy::CostBased(cm) => cm.split(take0),
         }
     }
 
@@ -153,26 +398,25 @@ impl<T> Batcher<T> {
             .unwrap_or(self.cfg.variants.last().unwrap())
     }
 
-    /// Padded lanes the next plan would carry for a queue of `n` items:
-    /// the gap up to the smallest variant that fits. The router's
-    /// variant-aware placement uses this as its fragmentation signal so
+    /// Padded lanes the next plan would carry for a queue of `n` items.
+    /// The router's variant-aware placement uses this as its
+    /// fragmentation signal; it is computed through the same
+    /// [`Self::plan_for`] decision the batcher will actually make, so
     /// policy and batcher can never disagree.
     pub fn plan_padding_for(&self, n: usize) -> usize {
         if n == 0 {
             return 0;
         }
-        let biggest = *self.cfg.variants.last().unwrap();
-        let take = n.min(biggest);
-        self.variant_for(take) - take
+        let (take, variant) = self.plan_for(n);
+        variant - take
     }
 
-    /// Pop the next plan off a non-empty queue: everything available (up
-    /// to the largest variant) as one batch, padded to the smallest
-    /// compiled variant that holds it.
+    /// Pop the next plan off a non-empty queue, as decided by the flush
+    /// policy (static: everything available padded to the smallest fit;
+    /// cost-based: possibly an exact smaller variant with the remainder
+    /// left queued).
     fn make_plan(&mut self) -> BatchPlan<T> {
-        let biggest = *self.cfg.variants.last().unwrap();
-        let take = self.queue.len().min(biggest);
-        let variant = self.variant_for(take);
+        let (take, variant) = self.plan_for(self.queue.len());
         let items = (0..take)
             .map(|_| self.queue.pop_front().unwrap().item)
             .collect();
@@ -186,19 +430,18 @@ impl<T> Batcher<T> {
         self.next_batch_at(now)
     }
 
-    /// Decide the next batch at virtual time `now_s`: fire when a full
-    /// largest-variant batch is waiting, or when the oldest request
-    /// exceeded max_wait.
+    /// Decide the next batch at virtual time `now_s`: fire when the
+    /// policy says so, or when the oldest request exceeded max_wait.
     pub fn next_batch_at(&mut self, now_s: f64) -> Option<BatchPlan<T>> {
         if self.queue.is_empty() {
             return None;
         }
-        let biggest = *self.cfg.variants.last().unwrap();
         let oldest_wait = now_s - self.queue.front().unwrap().arrived_s;
+        let remaining = self.cfg.max_wait.as_secs_f64() - oldest_wait;
         // 1ns slack so a caller stepping exactly to next_fire_at() fires
         // despite f64 rounding (the discrete-event loop depends on it)
-        if self.queue.len() < biggest
-            && oldest_wait < self.cfg.max_wait.as_secs_f64() - 1e-9
+        if !self.fires_now(self.queue.len(), remaining - 1e-9)
+            && remaining > 1e-9
         {
             return None; // keep waiting for batchmates
         }
@@ -224,6 +467,18 @@ mod tests {
             variants: vec![1, 4],
             max_wait: Duration::from_millis(wait_ms),
             capacity: 8,
+            policy: FlushPolicy::Static,
+        }
+    }
+
+    /// A synthetic measured curve: L(4) = 1.0 s, L(8) = `l8` s.
+    fn cost_cfg(l8: f64, wait_ms: u64) -> BatcherConfig {
+        BatcherConfig {
+            variants: vec![4, 8],
+            max_wait: Duration::from_millis(wait_ms),
+            capacity: 64,
+            policy: FlushPolicy::CostBased(CostModel::from_pairs(
+                &[(4, 1.0), (8, l8)])),
         }
     }
 
@@ -276,6 +531,7 @@ mod tests {
             variants: vec![1, 2, 4],
             max_wait: Duration::from_millis(0),
             capacity: 8,
+            policy: FlushPolicy::Static,
         });
         b.push(1);
         b.push(2);
@@ -336,6 +592,7 @@ mod tests {
                     variants: variants.clone(),
                     max_wait: Duration::from_millis(0),
                     capacity: 64,
+                    policy: FlushPolicy::Static,
                 });
                 for i in 0..n {
                     b.push_at(i, 0.0);
@@ -358,6 +615,7 @@ mod tests {
             variants: vec![1, 4],
             max_wait: Duration::from_millis(500),
             capacity: 8,
+            policy: FlushPolicy::Static,
         });
         assert!(b.push_at(7, 10.0));
         assert!(b.next_batch_at(10.2).is_none());
@@ -378,6 +636,7 @@ mod tests {
             variants: vec![4],
             max_wait: Duration::from_millis(100),
             capacity: 2,
+            policy: FlushPolicy::Static,
         });
         assert!(b.push_at(1, 0.0));
         assert!(b.push_at(2, 0.0));
@@ -387,5 +646,162 @@ mod tests {
         let plan = b.next_batch_at(0.1).unwrap();
         assert_eq!(plan.variant, 4);
         assert_eq!(plan.padded_lanes(), 2);
+    }
+
+    // ---- cost-based policy: decisions against synthetic curves ---------
+
+    #[test]
+    fn cost_model_split_prefers_pad_up_on_sublinear_curve() {
+        // L(4)=1.0, L(8)=1.2: padding 5 -> 8 (1.2 s) beats two flushes
+        // (4 now + 1 later = 2.0 s)
+        let cm = CostModel::from_pairs(&[(4, 1.0), (8, 1.2)]);
+        assert_eq!(cm.split(5), (5, 8));
+        assert_eq!(cm.split(4), (4, 4)); // exact fill is exact
+        assert_eq!(cm.split(8), (8, 8));
+        // below the smallest variant there is nothing to exact-fill
+        assert_eq!(cm.split(2), (2, 4));
+    }
+
+    #[test]
+    fn cost_model_split_prefers_exact_fill_on_expensive_big_variant() {
+        // a measured curve where the b=8 variant is disproportionately
+        // slow (e.g. spills the KV working set): run the exact b=4 now
+        // and leave the remainder queued
+        let cm = CostModel::from_pairs(&[(4, 1.0), (8, 3.5)]);
+        assert_eq!(cm.split(5), (4, 4));
+        assert_eq!(cm.split(7), (4, 4)); // 1.0 + 1.0 < 3.5 still
+        assert_eq!(cm.split(8), (8, 8)); // exact fill stays exact
+    }
+
+    #[test]
+    fn cost_model_wait_decision_balances_amortization_and_delay() {
+        let cm = CostModel::from_pairs(&[(1, 0.2), (8, 1.2)]);
+        // fast arrivals: amortizing to b=8 (0.15 s/req + 0.012 s wait)
+        // beats flushing 2 now as two exact b=1 runs (0.2 s/req)
+        assert!(cm.should_wait(2, 0.002, 0.1));
+        // sparse arrivals: the target can't fill inside the window
+        assert!(!cm.should_wait(2, 0.05, 0.1));
+        // already at the largest variant: nothing to wait for
+        assert!(!cm.should_wait(8, 0.001, 0.1));
+        // n=1 with cheap exact variant: flushing now costs 0.2 s/req,
+        // waiting costs >= 0.15 + 7*ia; at ia=4 ms waiting still wins
+        assert!(cm.should_wait(1, 0.004, 0.1));
+        // ... but not when the gap blows the window
+        assert!(!cm.should_wait(1, 0.02, 0.1));
+    }
+
+    #[test]
+    fn wait_decision_prices_flush_now_at_the_actual_split_plan() {
+        // n=2, ia=10ms: flushing now runs split(2) = two exact b=1
+        // flushes at 0.2 s/req — cheaper than waiting for b=8
+        // (1.2/8 + 6*0.01 = 0.21 s/req). Pricing flush-now at the
+        // pad-up latency L(8)/2 = 0.6 would wrongly keep waiting.
+        let cm = CostModel::from_pairs(&[(1, 0.2), (8, 1.2)]);
+        assert_eq!(cm.split(2), (1, 1));
+        assert!(!cm.should_wait(2, 0.01, 0.1));
+    }
+
+    #[test]
+    fn cost_based_batcher_fires_lone_request_early_when_arrivals_sparse() {
+        // no interarrival signal yet -> assume the full wait window ->
+        // waiting for 7 more arrivals cannot pay; static policy would
+        // sit on the request until the deadline
+        let mut b = Batcher::new(BatcherConfig {
+            variants: vec![1, 8],
+            max_wait: Duration::from_millis(100),
+            capacity: 64,
+            policy: FlushPolicy::CostBased(CostModel::from_pairs(
+                &[(1, 0.2), (8, 1.2)])),
+        });
+        assert!(b.push_at(42, 5.0));
+        assert_eq!(b.next_fire_at(), Some(5.0));
+        let plan = b.next_batch_at(5.0).unwrap();
+        assert_eq!(plan.items, vec![42]);
+        assert_eq!(plan.variant, 1);
+        assert_eq!(plan.padded_lanes(), 0);
+    }
+
+    #[test]
+    fn cost_based_batcher_waits_when_amortization_pays_then_exact_fills() {
+        let mut b = Batcher::new(BatcherConfig {
+            variants: vec![1, 8],
+            max_wait: Duration::from_millis(100),
+            capacity: 64,
+            policy: FlushPolicy::CostBased(CostModel::from_pairs(
+                &[(1, 0.2), (8, 1.2)])),
+        });
+        assert!(b.push_at(1, 0.0));
+        assert!(b.push_at(2, 0.002)); // EWMA interarrival = 2 ms
+        assert!(b.mean_interarrival_s() < 0.01);
+        // waiting pays: 1.2/8 + 6*0.002 = 0.162 < flush-now's exact-fill
+        // pricing (L(1)+L(1))/2 = 0.2
+        assert!(b.next_batch_at(0.003).is_none());
+        // ... but only while the b=8 target can still fill inside the
+        // remaining window: the fire point is deadline − fill gap =
+        // 0.1 − 6*0.002 = 0.088, not the full deadline
+        let fire = b.next_fire_at().unwrap();
+        assert!((fire - 0.088).abs() < 1e-9, "fire at {fire}");
+        assert!(b.next_batch_at(0.087).is_none());
+        // at the crossover: split(2) exact-fills b=1 (0.2+0.2 < 1.2)
+        // and leaves the second request queued
+        let plan = b.next_batch_at(0.089).unwrap();
+        assert_eq!(plan.items, vec![1]);
+        assert_eq!(plan.variant, 1);
+        assert_eq!(b.len(), 1);
+        // the leftover fires by its own deadline at the latest
+        let plan = b.next_batch_at(0.11).unwrap();
+        assert_eq!(plan.items, vec![2]);
+    }
+
+    #[test]
+    fn cost_based_pad_up_vs_exact_fill_through_the_batcher() {
+        // sublinear curve: 5 queued -> one padded b=8 run
+        let mut b = Batcher::new(cost_cfg(1.2, 0));
+        for i in 0..5 {
+            b.push_at(i, 0.0);
+        }
+        let plan = b.next_batch_at(1.0).unwrap();
+        assert_eq!(plan.items.len(), 5);
+        assert_eq!(plan.variant, 8);
+        assert_eq!(plan.padded_lanes(), 3);
+        assert_eq!(b.padded_lanes, 3);
+
+        // expensive big variant: 5 queued -> exact b=4 run + 1 left
+        let mut b = Batcher::new(cost_cfg(3.5, 0));
+        for i in 0..5 {
+            b.push_at(i, 0.0);
+        }
+        assert_eq!(b.plan_padding_for(5), 0); // router signal agrees
+        let plan = b.next_batch_at(1.0).unwrap();
+        assert_eq!(plan.items.len(), 4);
+        assert_eq!(plan.variant, 4);
+        assert_eq!(plan.padded_lanes(), 0);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn mismatched_cost_model_falls_back_to_static() {
+        let b: Batcher<u32> = Batcher::new(BatcherConfig {
+            variants: vec![1, 4],
+            max_wait: Duration::from_millis(10),
+            capacity: 8,
+            policy: FlushPolicy::CostBased(CostModel::from_pairs(
+                &[(2, 0.5), (16, 1.0)])),
+        });
+        assert!(matches!(b.cfg.policy, FlushPolicy::Static));
+    }
+
+    #[test]
+    fn interarrival_ewma_tracks_gaps() {
+        let mut b: Batcher<u32> = Batcher::new(cfg(1000));
+        assert!((b.mean_interarrival_s() - 1.0).abs() < 1e-9); // window
+        b.push_at(0, 0.0);
+        b.push_at(1, 0.010);
+        assert!((b.mean_interarrival_s() - 0.010).abs() < 1e-9);
+        b.push_at(2, 0.020);
+        // EWMA stays at 10 ms for uniform 10 ms gaps
+        assert!((b.mean_interarrival_s() - 0.010).abs() < 1e-9);
+        b.push_at(3, 0.120); // a 100 ms gap drags the mean up
+        assert!(b.mean_interarrival_s() > 0.030);
     }
 }

@@ -9,11 +9,11 @@
 //!   cache mode, with the Rust sampling engine committing tokens and the
 //!   Rust KV-cache manager (optionally BAOS+MX-quantized) holding state
 //!   between steps;
-//! * [`batcher`] — request queue + dynamic batcher: smallest-fitting
-//!   compiled batch variant, exact-fill preferred over padding, bounded
-//!   wait, padded-lane waste accounting; drivable in wall-clock or
-//!   virtual time (the [`crate::cluster`] simulator reuses it per
-//!   device);
+//! * [`batcher`] — request queue + dynamic batcher: compiled batch
+//!   variant selection (static smallest-fit, or cost-based from a
+//!   measured [`crate::calib::LatencyCurve`]), bounded wait,
+//!   padded-lane waste accounting; drivable in wall-clock or virtual
+//!   time (the [`crate::cluster`] simulator reuses it per device);
 //! * [`server`] — the worker thread owning the PJRT client, mpsc
 //!   request/response plumbing, backpressure; instantiable per device
 //!   via [`Coordinator::start_named`] for multi-NPU fleets;
@@ -25,7 +25,8 @@ pub mod engine;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{Batcher, BatcherConfig, CostModel, FlushPolicy,
+                  VariantCost};
 pub use engine::{EngineConfig, GenerationEngine, GenerationResult};
 pub use metrics::Metrics;
 pub use server::{Coordinator, Request, Response};

@@ -27,12 +27,19 @@
 //!   scheduling, trace-driven load generation, and cluster-wide
 //!   goodput/utilization/padding-waste metrics (`serve-cluster` in the
 //!   CLI, `fleet_scaling` in the benches);
+//! * [`calib`] — device calibration: measured batch-variant latency
+//!   curves (latency vs batch size × seq-len bucket, p50/p95 spread)
+//!   profiled through the tri-path simulator, persisted in a replayable
+//!   text format, and threaded through the batcher's cost-based flush
+//!   policy and the scheduler's percentile TTFT admission predictor
+//!   (`calibrate` in the CLI, `calib_policies` in the benches);
 //! * [`gpu`] — analytical A6000/H100 baselines for Table 6 / Fig. 9.
 //!
 //! Substrates ([`cli`], [`stats`], [`report`], [`util`]) are built from
 //! scratch because the offline crate registry lacks clap/criterion/serde
 //! (DESIGN.md substitution S7).
 
+pub mod calib;
 pub mod cli;
 pub mod cluster;
 pub mod compiler;

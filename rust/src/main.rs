@@ -4,6 +4,9 @@
 //!   serve          run the serving coordinator on a synthetic request stream
 //!   serve-cluster  drive a simulated multi-NPU fleet through a trace with
 //!                  SLO-aware routing/admission and fleet metrics
+//!   calibrate      profile compiled batch variants into per-device
+//!                  LatencyCurve tables (cost-based batching / percentile
+//!                  TTFT admission), with optional CycleSim spot-check
 //!   generate       one blocked-diffusion generation through the PJRT model
 //!   simulate       analytical simulation of a paper workload
 //!   sweep          Fig. 9-style design-space sweep
@@ -29,6 +32,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("serve-cluster") => cmd_serve_cluster(&args),
+        Some("calibrate") => cmd_calibrate(&args),
         Some("generate") => cmd_generate(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("sweep") => cmd_sweep(&args),
@@ -36,14 +40,17 @@ fn main() {
         Some("asm") => cmd_asm(&args),
         Some("area") => cmd_area(&args),
         _ => {
-            eprintln!("usage: dart <serve|serve-cluster|generate|simulate|sweep|hbm|asm|area> [flags]");
+            eprintln!("usage: dart <serve|serve-cluster|calibrate|generate|simulate|sweep|hbm|asm|area> [flags]");
             eprintln!("  serve     --requests N --cache MODE --kv POLICY");
             eprintln!("  serve-cluster --devices N --requests N --rate RPS \
                        --arrival poisson|bursty|uniform --router least|rr|variant");
             eprintln!("                --load FRAC --ttft-slo-ms N --tpot-slo-ms N \
-                       --no-admission --seed N");
+                       --no-admission --seed N --calibrated --curve FILE");
             eprintln!("                --trace-out FILE | --replay FILE \
                        --link pcie|nvlink|eth --config FILE");
+            eprintln!("  calibrate --presets default,edge --variants \"1,2,4,8,16\" \
+                       --samples N --model M --cache MODE");
+            eprintln!("            --out PREFIX --spot-check");
             eprintln!("  generate  --cache MODE --batch B");
             eprintln!("  simulate  --model llada8b|moe --cache MODE");
             eprintln!("  sweep     --model llada8b|moe");
@@ -173,6 +180,29 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
         println!("wrote {} requests to {path}", trace.len());
     }
 
+    // measured curves: cost-based batching + percentile TTFT admission.
+    // --curve FILE replays a persisted table (from `calibrate --out`);
+    // --calibrated re-profiles in-process (and wins if both are given,
+    // since heterogeneous fleets need per-device profiling)
+    if let Some(path) = args.get("curve") {
+        let text = std::fs::read_to_string(path).expect("read curve file");
+        let curve = dart::calib::LatencyCurve::from_text(&text)
+            .expect("parse curve file");
+        let attached = topo.attach_curve(&curve);
+        if attached < topo.n_devices() {
+            eprintln!("warning: curve variant set {:?} matches only \
+                       {attached}/{} devices; the rest serve with the \
+                       analytic predictor and static batcher",
+                      curve.variants(), topo.n_devices());
+        }
+        println!("attached measured curve from {path} to {attached} devices");
+    }
+    if args.has("calibrated") {
+        topo.calibrate();
+        println!("calibrated {} devices (measured latency curves attached)",
+                 topo.n_devices());
+    }
+
     let mut slo = SloConfig::auto(&topo);
     if let Some(ms) = args.get("ttft-slo-ms") {
         slo.ttft_s = ms.parse::<f64>().expect("--ttft-slo-ms number") / 1e3;
@@ -198,6 +228,88 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
     let mut sim = FleetSim::new(topo, policy, slo);
     let metrics = sim.run(&trace);
     println!("{}", metrics.report(Some((slo.ttft_s, slo.tpot_s))));
+    0
+}
+
+/// Profile compiled batch variants into per-device `LatencyCurve`
+/// tables: every `--presets` hardware point is swept over variant ×
+/// seq-len-bucket cells through the analytical fast path (p50/p95
+/// spread from jittered in-bucket workloads). `--out PREFIX` persists
+/// each curve to `PREFIX-<preset>.curve` in the replayable text
+/// format; `--spot-check` cross-validates the analytical sampling
+/// latency against the cycle-accurate simulator at a matched shape.
+fn cmd_calibrate(args: &Args) -> i32 {
+    use dart::calib::{spot_check_sampling, CalibConfig, Calibrator};
+
+    let variants: Vec<usize> = args.get_or("variants", "1,2,4,8,16")
+        .split(',')
+        .filter_map(|v| v.trim().parse().ok())
+        .filter(|&v| v > 0)
+        .collect();
+    if variants.is_empty() {
+        eprintln!("--variants needs a comma list of positive batch sizes");
+        return 2;
+    }
+    let model = model_from(args);
+    let cache = cache_from(args);
+    let samples = args.get_usize("samples", 5);
+
+    let presets: Vec<&str> = args.get_or("presets", "default,edge")
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let mut wrote_any = false;
+    for preset in &presets {
+        let hw = match *preset {
+            "default" => HwConfig::dart_default(),
+            "edge" => HwConfig::dart_edge(),
+            "validation" => HwConfig::validation_point(),
+            other => {
+                eprintln!("unknown preset {other:?} (default|edge|validation)");
+                return 2;
+            }
+        };
+        let mut cfg = CalibConfig::serving_default(&variants);
+        cfg.samples_per_cell = samples;
+        cfg.seed = args.get_usize("seed", 0xCA11B) as u64;
+        let cal = Calibrator::new(hw, model.clone(), cache, cfg);
+        let name = format!("dart-{preset}");
+        let curve = cal.profile(&name);
+        println!("{}", curve.render_table());
+        if let Some(pace) = curve.measured_tokens_per_s() {
+            println!("measured pace at largest variant: {pace:.1} tok/s\n");
+        }
+        if let Some(prefix) = args.get("out") {
+            let path = format!("{prefix}-{preset}.curve");
+            std::fs::write(&path, curve.to_text()).expect("write curve");
+            println!("wrote {path}");
+            wrote_any = true;
+        }
+    }
+    if wrote_any {
+        println!();
+    }
+
+    if args.has("spot-check") {
+        // cross-validate the profiling fast path against ground truth:
+        // compiled Alg. 2 on the cycle simulator at the Table 4
+        // geometry (batch scaled down; both models are linear in B)
+        let (b, l, v) = (2usize, 32usize, 126_464usize);
+        println!("spot-check: compiled sampling (B={b}, L={l}, V={v}) \
+                  on CycleSim vs AnalyticalSim ...");
+        let s = spot_check_sampling(&HwConfig::dart_default(), b, l, v, v, 3);
+        println!("  cycle-accurate {:.3} ms ({} cycles)  analytical \
+                  {:.3} ms  rel err {:.1}%",
+                 s.cycle_s * 1e3, s.cycles, s.analytical_s * 1e3,
+                 s.rel_err() * 100.0);
+        if s.rel_err() > 0.25 {
+            eprintln!("spot-check FAILED: analytical model drifted beyond \
+                       25% of the cycle-accurate reference");
+            return 1;
+        }
+        println!("  OK (within 25%)");
+    }
     0
 }
 

@@ -113,6 +113,22 @@ impl Reservoir {
     }
 }
 
+/// Linear-interpolated quantile over an unsorted, non-empty sample set
+/// (`p` clamped to [0, 1]) — the calibration profiler's percentile
+/// extractor; `Summary::from_samples` keeps its nearest-rank convention
+/// for backward-comparable bench reports.
+pub fn quantile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty(), "quantile of empty sample set");
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = p.clamp(0.0, 1.0);
+    let pos = p * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    s[lo] + (s[hi] - s[lo]) * frac
+}
+
 /// A single benchmark result with throughput accounting.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -237,6 +253,18 @@ mod tests {
         assert_eq!(m.max, 100.0);
         assert!((m.p50 - 50.0).abs() <= 1.0);
         assert!((m.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let s = [10.0, 20.0, 30.0, 40.0];
+        assert!((quantile(&s, 0.0) - 10.0).abs() < 1e-12);
+        assert!((quantile(&s, 1.0) - 40.0).abs() < 1e-12);
+        assert!((quantile(&s, 0.5) - 25.0).abs() < 1e-12);
+        assert!((quantile(&s, 0.95) - 38.5).abs() < 1e-12);
+        assert!((quantile(&[7.0], 0.5) - 7.0).abs() < 1e-12);
+        // out-of-range p clamps
+        assert!((quantile(&s, 2.0) - 40.0).abs() < 1e-12);
     }
 
     #[test]

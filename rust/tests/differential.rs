@@ -1,0 +1,291 @@
+//! Differential test net for the sampling engine: `sample_block` (the
+//! production sampler on the serving path, chunked + streaming top-k)
+//! against a deliberately naive scalar reference, over randomized
+//! `(b, l, v, v_chunk, k)` shapes and the edge cases that bite
+//! schedulers: `k = 0`, `k = block_len`, confidence ties, and fully
+//! unmasked blocks.
+//!
+//! The naive reference accumulates the Stable-Max denominator term by
+//! term in f64 (no chunking), so confidences can differ from the
+//! engine's chunked accumulation in the last ULPs. Token selections are
+//! compared exactly, with a divergence tolerated *only* when the
+//! differing positions sit within float noise of the row's selection
+//! boundary (a genuine confidence tie).
+
+use dart::sampling::{sample_block, SamplePrecision, SampleResult};
+use dart::stats::prop_check;
+use dart::util::SplitMix64;
+
+// ---- naive scalar reference ---------------------------------------------
+
+/// Per-row Stable-Max confidence + earliest argmax, no chunking.
+fn naive_conf_argmax(row: &[f32]) -> (f32, u32) {
+    let mut m = f32::NEG_INFINITY;
+    let mut mi = 0u32;
+    for (i, &val) in row.iter().enumerate() {
+        if val > m {
+            m = val;
+            mi = i as u32;
+        }
+    }
+    let mut denom = 0f64;
+    for &val in row {
+        denom += ((val - m).exp()) as f64;
+    }
+    ((1.0 / denom) as f32, mi)
+}
+
+/// Sort-based top-k with the engine's tie rule (earliest index wins).
+fn naive_topk(conf: &[f32], eligible: &[bool], k: usize) -> Vec<bool> {
+    let mut idx: Vec<usize> =
+        (0..conf.len()).filter(|&i| eligible[i]).collect();
+    idx.sort_by(|&a, &b| {
+        conf[b].partial_cmp(&conf[a]).unwrap().then(a.cmp(&b))
+    });
+    let mut out = vec![false; conf.len()];
+    for &i in idx.iter().take(k) {
+        out[i] = true;
+    }
+    out
+}
+
+struct NaiveResult {
+    x_new: Vec<i32>,
+    conf: Vec<f32>,
+    argmax: Vec<i32>,
+    transfer: Vec<bool>,
+}
+
+/// The whole Alg. 2 step, scalar and obvious.
+fn naive_sample_block(z: &[f32], x: &[i32], b: usize, l: usize, v: usize,
+                      k: &[usize], mask_id: i32) -> NaiveResult {
+    assert_eq!(z.len(), b * l * v);
+    let mut conf = Vec::with_capacity(b * l);
+    let mut argmax = Vec::with_capacity(b * l);
+    for pos in 0..b * l {
+        let (c, i) = naive_conf_argmax(&z[pos * v..(pos + 1) * v]);
+        conf.push(c);
+        argmax.push(i as i32);
+    }
+    let mut x_new = x.to_vec();
+    let mut transfer = vec![false; b * l];
+    for bi in 0..b {
+        let row = bi * l..(bi + 1) * l;
+        let eligible: Vec<bool> =
+            x[row.clone()].iter().map(|&t| t == mask_id).collect();
+        let sel = naive_topk(&conf[row.clone()], &eligible, k[bi]);
+        for (li, &s) in sel.iter().enumerate() {
+            let p = bi * l + li;
+            transfer[p] = s;
+            if s {
+                x_new[p] = argmax[p];
+            }
+        }
+    }
+    NaiveResult { x_new, conf, argmax, transfer }
+}
+
+// ---- comparison with boundary-tie tolerance -----------------------------
+
+/// Exact comparison of engine vs naive selections; a divergence is
+/// accepted only as a float-noise tie at the selection boundary.
+fn assert_equivalent(r: &SampleResult, n: &NaiveResult, b: usize, l: usize,
+                     ctx: &str) {
+    assert_eq!(r.argmax, n.argmax, "argmax diverged: {ctx}");
+    for (i, (&a, &e)) in r.conf.iter().zip(&n.conf).enumerate() {
+        let tol = 1e-4 * e.abs().max(1e-30);
+        assert!((a - e).abs() <= tol,
+                "conf[{i}] {a} vs naive {e}: {ctx}");
+    }
+    for bi in 0..b {
+        let row = bi * l..(bi + 1) * l;
+        let g = &r.transfer[row.clone()];
+        let nn = &n.transfer[row.clone()];
+        let n_sel_g = g.iter().filter(|&&s| s).count();
+        let n_sel_n = nn.iter().filter(|&&s| s).count();
+        assert_eq!(n_sel_g, n_sel_n, "selection count diverged: {ctx}");
+        if g == nn {
+            assert_eq!(&r.x_new[row.clone()], &n.x_new[row.clone()],
+                       "x_new diverged with equal selections: {ctx}");
+            continue;
+        }
+        // tie at the boundary: every differing position's confidence
+        // must sit within float noise of the smallest selected one
+        let boundary = row.clone().filter(|&p| r.transfer[p])
+            .map(|p| r.conf[p])
+            .fold(f32::INFINITY, f32::min);
+        for p in row.clone() {
+            if r.transfer[p] != n.transfer[p] {
+                let tol = 1e-4 * boundary.abs().max(1e-30);
+                assert!((r.conf[p] - boundary).abs() <= tol,
+                        "selection diverged off-boundary at {p}: conf {} \
+                         vs boundary {boundary}: {ctx}", r.conf[p]);
+            }
+        }
+    }
+}
+
+/// Structural invariants that hold regardless of the reference.
+fn assert_invariants(r: &SampleResult, x: &[i32], b: usize, l: usize,
+                     k: &[usize], mask_id: i32, ctx: &str) {
+    for bi in 0..b {
+        let row = bi * l..(bi + 1) * l;
+        let eligible = x[row.clone()].iter()
+            .filter(|&&t| t == mask_id).count();
+        let committed = row.clone().filter(|&p| r.transfer[p]).count();
+        assert_eq!(committed, k[bi].min(eligible),
+                   "committed != min(k, eligible): {ctx}");
+        for p in row.clone() {
+            if r.transfer[p] {
+                assert_eq!(x[p], mask_id,
+                           "transfer landed on unmasked position: {ctx}");
+                assert_eq!(r.x_new[p], r.argmax[p],
+                           "committed token != argmax: {ctx}");
+            } else if x[p] != mask_id {
+                assert_eq!(r.x_new[p], x[p],
+                           "unmasked position changed: {ctx}");
+            }
+            assert!(r.conf[p].is_finite() && r.conf[p] > 0.0
+                        && r.conf[p] <= 1.0 + 1e-6,
+                    "conf out of range: {ctx}");
+        }
+    }
+}
+
+// ---- edge cases ----------------------------------------------------------
+
+#[test]
+fn k_zero_commits_nothing() {
+    let mut rng = SplitMix64::new(1);
+    let (b, l, v) = (2usize, 8usize, 64usize);
+    let z = rng.normal_vec(b * l * v, 3.0);
+    let x = vec![-1i32; b * l]; // all masked (mask_id = -1)
+    let r = sample_block(&z, &x, b, l, v, &[0, 0], -1, 16,
+                         SamplePrecision::Fp32);
+    assert_eq!(r.x_new, x);
+    assert!(r.transfer.iter().all(|&t| !t));
+    let n = naive_sample_block(&z, &x, b, l, v, &[0, 0], -1);
+    assert_equivalent(&r, &n, b, l, "k=0");
+}
+
+#[test]
+fn k_equals_block_len_commits_every_masked_position() {
+    let mut rng = SplitMix64::new(2);
+    let (b, l, v) = (2usize, 12usize, 48usize);
+    let z = rng.normal_vec(b * l * v, 2.0);
+    let x = vec![-1i32; b * l];
+    let k = [l, l];
+    let r = sample_block(&z, &x, b, l, v, &k, -1, 48,
+                         SamplePrecision::Fp32);
+    assert!(r.transfer.iter().all(|&t| t));
+    assert_eq!(r.x_new, r.argmax);
+    assert_invariants(&r, &x, b, l, &k, -1, "k=l");
+    let n = naive_sample_block(&z, &x, b, l, v, &k, -1);
+    assert_equivalent(&r, &n, b, l, "k=l");
+}
+
+#[test]
+fn fully_unmasked_block_is_identity() {
+    let mut rng = SplitMix64::new(3);
+    let (b, l, v) = (2usize, 8usize, 32usize);
+    let z = rng.normal_vec(b * l * v, 3.0);
+    // no position carries mask_id 0: nothing is eligible
+    let x: Vec<i32> = (0..b * l).map(|i| 5 + i as i32).collect();
+    for k in [0usize, 3, l] {
+        let r = sample_block(&z, &x, b, l, v, &[k, k], 0, 8,
+                             SamplePrecision::Fp32);
+        assert_eq!(r.x_new, x, "k={k}");
+        assert!(r.transfer.iter().all(|&t| !t), "k={k}");
+        let n = naive_sample_block(&z, &x, b, l, v, &[k, k], 0);
+        assert_equivalent(&r, &n, b, l, "unmasked");
+    }
+}
+
+#[test]
+fn confidence_ties_resolve_to_earliest_position() {
+    let (b, l, v) = (1usize, 6usize, 40usize);
+    // uniform rows everywhere (conf = 1/V, the low floor); positions 1
+    // and 4 get identical peaked rows -> bitwise-equal high
+    // confidences; k=1 must pick position 1 (earliest)
+    let mut z = vec![0.0f32; b * l * v];
+    z[v + 5] = 10.0;
+    z[4 * v + 5] = 10.0;
+    let x = vec![-1i32; b * l];
+    let r = sample_block(&z, &x, b, l, v, &[1], -1, 8,
+                         SamplePrecision::Fp32);
+    assert_eq!(r.conf[1].to_bits(), r.conf[4].to_bits(),
+               "tie construction failed");
+    assert!(r.transfer[1] && !r.transfer[4]);
+    let n = naive_sample_block(&z, &x, b, l, v, &[1], -1);
+    assert_equivalent(&r, &n, b, l, "tie");
+}
+
+#[test]
+fn argmax_tie_within_a_row_takes_earliest_index() {
+    let (b, l, v) = (1usize, 2usize, 32usize);
+    let mut z = vec![0.0f32; b * l * v];
+    // row 0: duplicate max at indices 3 and 20 -> argmax must be 3
+    z[3] = 5.0;
+    z[20] = 5.0;
+    // row 1: unique max
+    z[v + 7] = 4.0;
+    let x = vec![-1i32; b * l];
+    let r = sample_block(&z, &x, b, l, v, &[2], -1, 8,
+                         SamplePrecision::Fp32);
+    assert_eq!(r.argmax, vec![3, 7]);
+    let n = naive_sample_block(&z, &x, b, l, v, &[2], -1);
+    assert_equivalent(&r, &n, b, l, "argmax tie");
+}
+
+// ---- randomized differential sweep --------------------------------------
+
+#[test]
+fn randomized_shapes_match_naive_reference() {
+    prop_check("sample_block == naive reference", 48, |rng| {
+        let b = 1 + (rng.next_u64() % 3) as usize;
+        let l = 1 + (rng.next_u64() % 20) as usize;
+        let v = 2 + (rng.next_u64() % 90) as usize;
+        // v_chunk sweeps degenerate (1), ragged, exact, and oversized
+        let v_chunk = 1 + (rng.next_u64() % (v as u64 + 3)) as usize;
+        let mask_id = 0i32;
+        let z = rng.normal_vec(b * l * v, 3.0);
+        // random prefill: ~40% of positions already decoded
+        let x: Vec<i32> = (0..b * l)
+            .map(|_| if rng.next_u64() % 10 < 4 {
+                1 + (rng.next_u64() % 50) as i32
+            } else {
+                mask_id
+            })
+            .collect();
+        // k sweeps 0..=l+2 (clamping is part of the contract)
+        let k: Vec<usize> = (0..b)
+            .map(|_| (rng.next_u64() % (l as u64 + 3)) as usize)
+            .collect();
+        (b, l, v, v_chunk, z, x, k)
+    }, |(b, l, v, v_chunk, z, x, k)| {
+        let r = sample_block(z, x, *b, *l, *v, k, 0, *v_chunk,
+                             SamplePrecision::Fp32);
+        let ctx = format!("b={b} l={l} v={v} v_chunk={v_chunk} k={k:?}");
+        assert_invariants(&r, x, *b, *l, k, 0, &ctx);
+        let n = naive_sample_block(z, x, *b, *l, *v, k, 0);
+        assert_equivalent(&r, &n, *b, *l, &ctx);
+        Ok(())
+    });
+}
+
+#[test]
+fn chunking_never_changes_tokens_vs_naive() {
+    // one shape, every chunking: the engine must agree with the
+    // chunking-free reference regardless of v_chunk
+    let mut rng = SplitMix64::new(9);
+    let (b, l, v) = (2usize, 10usize, 70usize);
+    let z = rng.normal_vec(b * l * v, 4.0);
+    let x = vec![0i32; b * l];
+    let k = [4usize, 7];
+    let n = naive_sample_block(&z, &x, b, l, v, &k, 0);
+    for v_chunk in [1usize, 7, 32, 64, 70, 128] {
+        let r = sample_block(&z, &x, b, l, v, &k, 0, v_chunk,
+                             SamplePrecision::Fp32);
+        assert_equivalent(&r, &n, b, l, &format!("v_chunk={v_chunk}"));
+    }
+}

@@ -1,12 +1,18 @@
 #!/usr/bin/env bash
 # CI gate for the DART repo.
 #
-#   scripts/ci.sh           tier-1 gate: release build + tests + fmt check
-#   scripts/ci.sh --smoke   tier-1 gate + fast fleet-scaling smoke run
+#   scripts/ci.sh           tier-1 gate: release build + tests + fmt/lint
+#                           + test-count regression guard
+#   scripts/ci.sh --smoke   tier-1 gate + fast fleet/calib smoke runs
 #
 # The tier-1 gate (ROADMAP.md) must stay green: `cargo build --release &&
-# cargo test -q`. rustfmt is checked when the component is installed so
-# minimal toolchains still pass the gate.
+# cargo test -q`. rustfmt/clippy are checked when the components are
+# installed so minimal toolchains still pass the gate.
+#
+# The test-count guard ratchets: the total passing-test count is compared
+# against scripts/test_baseline.txt and must never drop; when it grows,
+# the baseline file is advanced in place (commit it with the change that
+# added the tests).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -15,7 +21,37 @@ echo "== tier-1: cargo build --release =="
 cargo build --release
 
 echo "== tier-1: cargo test -q =="
-cargo test -q
+test_log=$(mktemp)
+cargo test -q 2>&1 | tee "$test_log"
+
+# sum "N passed" across every test binary in the run
+passed=$(grep -Eo '[0-9]+ passed' "$test_log" | awk '{s+=$1} END {print s+0}')
+rm -f "$test_log"
+baseline_file="scripts/test_baseline.txt"
+recorded=0
+if [[ -f "$baseline_file" ]]; then
+    recorded=$(grep -Eo '^[0-9]+' "$baseline_file" | head -1 || true)
+    recorded=${recorded:-0}
+fi
+echo "== tier-1: test-count guard: $passed passing (baseline $recorded) =="
+if (( passed < recorded )); then
+    echo "FAIL: passing-test count dropped from $recorded to $passed"
+    exit 1
+fi
+if (( passed > recorded )); then
+    {
+        echo "$passed"
+        echo "# tier-1 passing-test count baseline (auto-ratcheted by"
+        echo "# scripts/ci.sh; must never drop). Commit this file when"
+        echo "# it advances, or the ratchet has no teeth on fresh checkouts."
+    } > "$baseline_file"
+    echo "baseline advanced $recorded -> $passed: COMMIT $baseline_file"
+    if [[ "${CI_RATCHET_STRICT:-0}" == "1" ]]; then
+        echo "FAIL (CI_RATCHET_STRICT): baseline file is stale; commit the"
+        echo "advanced $baseline_file with this change"
+        exit 1
+    fi
+fi
 
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== style: cargo fmt --check =="
@@ -24,11 +60,20 @@ else
     echo "== style: rustfmt not installed, skipping fmt check =="
 fi
 
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== lint: cargo clippy --all-targets -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== lint: clippy not installed, skipping lint check =="
+fi
+
 if [[ "${1:-}" == "--smoke" ]]; then
     echo "== smoke: fleet_scaling bench (reduced trace) =="
     cargo bench --bench fleet_scaling -- --smoke
-    echo "== smoke: serve-cluster 2 devices x 32 requests =="
-    cargo run --release -- serve-cluster --devices 2 --requests 32
+    echo "== smoke: calib_policies bench (reduced trace) =="
+    cargo bench --bench calib_policies -- --smoke
+    echo "== smoke: serve-cluster 2 devices x 32 requests, calibrated =="
+    cargo run --release -- serve-cluster --devices 2 --requests 32 --calibrated
 fi
 
 echo "ci: OK"
