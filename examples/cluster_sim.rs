@@ -5,9 +5,10 @@
 //!
 //!     cargo run --release --example cluster_sim
 
-use dart::cluster::{fleet_capacity_tps, generate_trace, trace_from_text,
-                    trace_to_text, Arrival, ClusterTopology, FleetSim,
-                    RoutePolicy, SloConfig, TraceSpec};
+use dart::cluster::{chat_offered_rps, fleet_capacity_tps, generate_trace,
+                    trace_from_text, trace_to_text, Arrival,
+                    ClusterTopology, FleetSim, RoutePolicy, SloConfig,
+                    TraceSpec};
 use dart::config::{CacheMode, HwConfig, ModelArch};
 
 fn main() {
@@ -20,8 +21,7 @@ fn main() {
              topo.n_devices());
 
     // 2. a Poisson chat trace at 60% of capacity, deterministic seed
-    let spec = TraceSpec::chat(256, Arrival::Poisson { rps: 1.0 }, 7);
-    let rps = 0.6 * capacity / spec.mean_gen_len();
+    let rps = chat_offered_rps(capacity, 0.6);
     let spec = TraceSpec::chat(256, Arrival::Poisson { rps }, 7);
     let trace = generate_trace(&spec);
     println!("trace: {} requests at {rps:.2} req/s (60% load)\n",

@@ -13,9 +13,9 @@
 //! `--smoke` shrinks the traces for the CI fast path (scripts/ci.sh).
 
 use dart::cli::Args;
-use dart::cluster::{fleet_capacity_tps, generate_trace, Arrival,
-                    ClusterTopology, FleetMetrics, FleetSim, RoutePolicy,
-                    SloConfig, TraceSpec};
+use dart::cluster::{chat_offered_rps, fleet_capacity_tps, generate_trace,
+                    Arrival, ClusterTopology, FleetMetrics, FleetSim,
+                    RoutePolicy, SloConfig, TraceSpec};
 use dart::config::{CacheMode, HwConfig, ModelArch};
 use dart::report::{self, Table};
 
@@ -68,8 +68,7 @@ fn main() {
           "padding waste", "padded lanes"]);
     let mut any_delta = false;
     for sc in &scenarios {
-        let probe = TraceSpec::chat(n_requests, (sc.arrival)(1.0), seed);
-        let rps = sc.load * capacity / probe.mean_gen_len();
+        let rps = chat_offered_rps(capacity, sc.load);
         let trace = generate_trace(
             &TraceSpec::chat(n_requests, (sc.arrival)(rps), seed));
         let mut rows: Vec<(u64, u64)> = Vec::new();

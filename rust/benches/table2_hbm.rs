@@ -1,6 +1,6 @@
 //! Table 2 reproduction: memory-subsystem validation. The DART simulator
 //! (ideal fidelity) vs the physical-proxy configuration standing in for
-//! the AMD Alveo V80 HBM2e measurements (DESIGN.md S1), against the
+//! the AMD Alveo V80 HBM2e measurements (docs/ARCHITECTURE.md S1), against the
 //! datasheet spec; plus the 4-stack peak-NPU projection.
 //!
 //! Methodology mirrors §5.1: 64 MB of continuous read/write traffic.

@@ -1,5 +1,5 @@
 //! Table 3 reproduction: compute-pipeline validation, DART simulator vs
-//! the RTL-reference pipeline model (Verilator substitute, DESIGN.md S2)
+//! the RTL-reference pipeline model (Verilator substitute, docs/ARCHITECTURE.md S2)
 //! at the paper's validation point VLEN=8, BLEN=4.
 //!
 //! Single instructions are identical by construction (the simulator's

@@ -102,8 +102,11 @@ impl LatencyCurve {
 
     /// The cell covering (variant, seq_len): the smallest calibrated
     /// variant `>= variant` (or the largest when none fits — mirroring
-    /// the batcher's pad-up rule), and the bucket containing `seq_len`
-    /// (clamped to the nearest edge bucket).
+    /// the batcher's pad-up rule), and the bucket containing `seq_len`.
+    /// A `seq_len` no bucket covers — outside the profiled range, or in
+    /// a gap of a sparse hand-trimmed curve — clamps to the bucket with
+    /// the nearest edge (ties to the lower bucket), so a short request
+    /// is never priced at a distant long-sequence cell.
     pub fn lookup(&self, variant: usize, seq_len: u64) -> Option<&CurvePoint> {
         // points are sorted by (variant, bucket_lo) at construction, so
         // one allocation-free pass suffices — this sits on the
@@ -111,23 +114,23 @@ impl LatencyCurve {
         let v = self.points.iter().map(|p| p.variant)
             .find(|&pv| pv >= variant)
             .or_else(|| self.points.last().map(|p| p.variant))?;
-        let mut first: Option<&CurvePoint> = None;
-        let mut last: Option<&CurvePoint> = None;
+        let mut best: Option<(&CurvePoint, u64)> = None;
         for p in self.points.iter().filter(|p| p.variant == v) {
             if p.bucket_lo <= seq_len && seq_len < p.bucket_hi {
                 return Some(p);
             }
-            if first.is_none() {
-                first = Some(p);
+            let dist = if seq_len < p.bucket_lo {
+                p.bucket_lo - seq_len
+            } else {
+                // saturating: a degenerate hand-edited row (hi == 0)
+                // must not underflow on the admission path
+                seq_len.saturating_sub(p.bucket_hi.saturating_sub(1))
+            };
+            if best.map(|(_, d)| dist < d).unwrap_or(true) {
+                best = Some((p, dist));
             }
-            last = Some(p);
         }
-        // clamp: below the first bucket or at/above the last
-        if first.map(|p| seq_len < p.bucket_lo).unwrap_or(false) {
-            first
-        } else {
-            last
-        }
+        best.map(|(p, _)| p)
     }
 
     /// Measured total batch latency for serving `variant` lanes of
@@ -182,7 +185,28 @@ impl LatencyCurve {
     }
 
     /// Parse the replay format (whitespace-separated, `#` comments
-    /// ignored); rows are re-sorted.
+    /// ignored); rows are re-sorted. This is the replay half of the
+    /// profile-once workflow: `calibrate --out` persists a curve via
+    /// [`Self::to_text`], and a later serving run re-attaches the
+    /// parsed copy (e.g. `serve-cluster --curve FILE`, or
+    /// [`crate::cluster::ClusterTopology::attach_curve`] in code).
+    ///
+    /// ```
+    /// use dart::calib::{LatencyCurve, Pct};
+    ///
+    /// let text = "device npu0\n\
+    ///             1 96 256 128 0.010 0.012 0.003 0.004 5\n\
+    ///             4 96 256 128 0.016 0.019 0.004 0.005 5\n";
+    /// let curve = LatencyCurve::from_text(text).unwrap();
+    /// assert_eq!(curve.device, "npu0");
+    /// assert_eq!(curve.variants(), vec![1, 4]);
+    /// // measured p50 batch latency for 4 lanes of ~128 total tokens
+    /// let t = curve.total_s(4, 128, Pct::P50).unwrap();
+    /// assert!((t - 0.016).abs() < 1e-12);
+    /// // the text format round-trips exactly
+    /// let back = LatencyCurve::from_text(&curve.to_text()).unwrap();
+    /// assert_eq!(back.points.len(), curve.points.len());
+    /// ```
     pub fn from_text(text: &str) -> Result<Self, String> {
         let mut device = String::from("unknown");
         let mut points = Vec::new();
@@ -287,6 +311,23 @@ mod tests {
         // out-of-range seq lens clamp to the edge buckets
         assert_eq!(c.lookup(1, 10).unwrap().bucket_lo, 96);
         assert_eq!(c.lookup(1, 4096).unwrap().bucket_lo, 256);
+    }
+
+    #[test]
+    fn lookup_in_a_bucket_gap_picks_the_nearest_edge() {
+        // a sparse hand-trimmed curve: [96,256) and [1024,2048) with a
+        // hole between — a 300-token request must price at the nearby
+        // short bucket, not the distant long-sequence cell
+        let c = LatencyCurve::new("npu0", vec![
+            point(1, 96, 256, 0.010),
+            point(1, 1024, 2048, 0.080),
+        ]);
+        assert_eq!(c.lookup(1, 300).unwrap().bucket_lo, 96);
+        // near the far edge of the hole, the long bucket wins
+        assert_eq!(c.lookup(1, 1000).unwrap().bucket_lo, 1024);
+        // just below the crossover between the 255 and 1024 edges
+        // (384 vs 385 away), the lower bucket still wins
+        assert_eq!(c.lookup(1, 639).unwrap().bucket_lo, 96);
     }
 
     #[test]

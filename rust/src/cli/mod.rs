@@ -1,4 +1,4 @@
-//! Argument-parsing substrate (clap stand-in, DESIGN.md S7).
+//! Argument-parsing substrate (clap stand-in, docs/ARCHITECTURE.md S7).
 //!
 //! Supports `binary <subcommand> --flag value --switch positional ...`.
 

@@ -131,6 +131,18 @@ impl FleetMetrics {
         self.slo_met as f64 / (self.offered() as f64).max(1.0)
     }
 
+    /// Fraction of offered requests that were shed (admission or
+    /// backpressure).
+    pub fn shed_frac(&self) -> f64 {
+        self.shed() as f64 / (self.offered() as f64).max(1.0)
+    }
+
+    /// p95 TTFT over completed requests (0.0 when nothing completed) —
+    /// the study renderer's headline tail number.
+    pub fn ttft_p95(&self) -> f64 {
+        self.ttft.summary().map(|s| s.p95).unwrap_or(0.0)
+    }
+
     /// busy seconds / horizon for one device.
     pub fn utilization(&self, device: usize) -> f64 {
         self.devices[device].busy_s / self.horizon_s.max(1e-9)
@@ -236,6 +248,10 @@ mod tests {
         assert!((m.throughput_tps() - 30.0).abs() < 1e-9);
         assert!((m.goodput_tps() - 10.0).abs() < 1e-9);
         assert!((m.slo_attainment() - 0.25).abs() < 1e-9);
+        assert!((m.shed_frac() - 0.5).abs() < 1e-9);
+        // two TTFT samples 0.5 / 3.0: nearest-rank p95 lands on the max
+        assert!((m.ttft_p95() - 3.0).abs() < 1e-9);
+        assert_eq!(FleetMetrics::new(vec!["x".into()]).ttft_p95(), 0.0);
     }
 
     #[test]

@@ -17,7 +17,8 @@
 //!   [`crate::coordinator::Batcher`] queues in virtual time, SLO
 //!   (TTFT/TPOT) admission control with shed/retry, backpressure;
 //! * [`workload`] — deterministic trace generation (Poisson / bursty /
-//!   uniform arrivals crossed with a mixed-length request mix) and a
+//!   uniform arrivals, optionally under a [`Diurnal`] time-of-day rate
+//!   envelope, crossed with a mixed-length request mix) and a
 //!   replayable plain-text trace format;
 //! * [`fleet_metrics`] — cluster p50/p95/p99 TTFT/TPOT/E2E, goodput vs
 //!   throughput, per-device utilization, padding-waste accounting.
@@ -37,8 +38,9 @@ pub use fleet_metrics::{DeviceStats, FleetMetrics, ShedReason};
 pub use router::{DeviceLoad, RoutePolicy, Router};
 pub use scheduler::{fleet_capacity_tps, FleetSim, SloConfig};
 pub use topology::{ClusterTopology, DeviceSpec, InterconnectModel};
-pub use workload::{generate_trace, trace_from_text, trace_to_text, Arrival,
-                   MixEntry, TraceRequest, TraceSpec};
+pub use workload::{chat_offered_rps, generate_trace, trace_from_text,
+                   trace_to_text, Arrival, Diurnal, MixEntry, TraceRequest,
+                   TraceSpec};
 
 use std::path::Path;
 use std::sync::mpsc::Receiver;

@@ -54,18 +54,32 @@ impl SloConfig {
     /// Deadlines derived from the fleet's own unloaded service curve:
     /// a single-request batch must be able to meet them with ~4x queueing
     /// headroom, so the knobs stay meaningful across hardware points and
-    /// models without hand tuning.
+    /// models without hand tuning. The curve of the *slowest* device
+    /// sets the deadline, so every member of a heterogeneous fleet
+    /// (e.g. [`ClusterTopology::edge_datacenter`]) can participate
+    /// instead of the edge tier shedding everything it is offered;
+    /// homogeneous fleets get exactly the old single-device deadlines.
     pub fn auto(topo: &ClusterTopology) -> Self {
-        let mut svc = ServiceModel::new(&topo.devices[0], topo);
         let gen = (4 * topo.block_len) as usize;
-        let (total, first) = svc.service(1, 128, gen);
         let tail_tokens = (gen as u64 - topo.block_len).max(1) as f64;
-        SloConfig {
-            ttft_s: 4.0 * first,
-            tpot_s: 4.0 * (total - first) / tail_tokens,
-            max_retries: 2,
-            admission: true,
+        let mut ttft_s = 0.0f64;
+        let mut tpot_s = 0.0f64;
+        // one service simulation per distinct device class, not per
+        // device: the unloaded (1, 128, gen) point depends only on
+        // (hw, cache), so a 32-device two-tier fleet costs two sims
+        let mut seen: Vec<String> = Vec::new();
+        for spec in &topo.devices {
+            let key = format!("{:?}|{:?}", spec.hw, spec.cache);
+            if seen.contains(&key) {
+                continue;
+            }
+            seen.push(key);
+            let mut svc = ServiceModel::new(spec, topo);
+            let (total, first) = svc.service(1, 128, gen);
+            ttft_s = ttft_s.max(4.0 * first);
+            tpot_s = tpot_s.max(4.0 * (total - first) / tail_tokens);
         }
+        SloConfig { ttft_s, tpot_s, max_retries: 2, admission: true }
     }
 }
 
@@ -500,6 +514,24 @@ mod tests {
         assert!(t16 < 16.0 * t1, "t16 {t16} vs 16*t1 {}", 16.0 * t1);
         let (tlong, _) = svc.service(1, 128, 512);
         assert!(tlong > t1);
+    }
+
+    #[test]
+    fn auto_slo_is_set_by_the_slowest_device() {
+        let slo_dc = SloConfig::auto(&small_topo(1));
+        let mixed = ClusterTopology::edge_datacenter(
+            1, 1, ModelArch::llada_8b(), CacheMode::Dual);
+        let slo_mixed = SloConfig::auto(&mixed);
+        // the edge tier is slower, so mixed deadlines widen vs dc-only
+        assert!(slo_mixed.ttft_s > slo_dc.ttft_s,
+                "mixed {} vs dc {}", slo_mixed.ttft_s, slo_dc.ttft_s);
+        assert!(slo_mixed.tpot_s > slo_dc.tpot_s);
+        // ... to exactly the deadlines an edge-only fleet would get
+        let edge_only = ClusterTopology::edge_datacenter(
+            0, 2, ModelArch::llada_8b(), CacheMode::Dual);
+        let slo_edge = SloConfig::auto(&edge_only);
+        assert_eq!(slo_mixed.ttft_s.to_bits(), slo_edge.ttft_s.to_bits());
+        assert_eq!(slo_mixed.tpot_s.to_bits(), slo_edge.tpot_s.to_bits());
     }
 
     #[test]

@@ -117,6 +117,21 @@ impl ClusterTopology {
     /// longer batching wait; per-device curves (via
     /// [`Self::calibrate`]) are what make routing/admission across the
     /// speed mismatch meaningful.
+    ///
+    /// ```
+    /// use dart::cluster::ClusterTopology;
+    /// use dart::config::{CacheMode, ModelArch};
+    ///
+    /// let mut fleet = ClusterTopology::edge_datacenter(
+    ///     2, 6, ModelArch::tiny(), CacheMode::Dual);
+    /// assert_eq!(fleet.n_devices(), 8);
+    /// assert_eq!(fleet.devices[0].name, "dc0");
+    /// assert_eq!(fleet.devices[2].name, "edge0");
+    /// // measured scheduling needs per-device curves attached:
+    /// assert!(!fleet.is_calibrated());
+    /// fleet.calibrate();
+    /// assert!(fleet.is_calibrated());
+    /// ```
     pub fn edge_datacenter(n_dc: usize, n_edge: usize, model: ModelArch,
                            cache: CacheMode) -> Self {
         assert!(n_dc + n_edge > 0, "cluster needs at least one device");
@@ -154,16 +169,33 @@ impl ClusterTopology {
 
     /// Profile every device's compiled batch variants through the
     /// analytical fast path and attach the measured [`LatencyCurve`]s.
-    /// Idempotent; devices sharing a hardware point are still profiled
-    /// individually (their variant sets may differ).
+    /// Idempotent. Devices sharing a profiling class — identical
+    /// (hardware point, cache mode, variant set) — are profiled once
+    /// and share the curve (renamed per device): the profiler is
+    /// deterministic, so the clone is bit-identical to re-profiling,
+    /// and a 30-edge-device fleet calibrates in two profiles, not 30.
     pub fn calibrate(&mut self) {
+        let mut profiled: Vec<(String, LatencyCurve)> = Vec::new();
         for d in &mut self.devices {
-            let mut cfg = CalibConfig::serving_default(&d.batch_variants);
-            cfg.block_len = self.block_len;
-            cfg.steps_per_block = self.steps_per_block;
-            let cal = Calibrator::new(d.hw.clone(), self.model.clone(),
-                                      d.cache, cfg);
-            d.curve = Some(cal.profile(&d.name));
+            let key = format!("{:?}|{:?}|{:?}", d.hw, d.cache,
+                              d.batch_variants);
+            let curve = match profiled.iter().find(|(k, _)| *k == key) {
+                Some((_, c)) => c.clone(),
+                None => {
+                    let mut cfg =
+                        CalibConfig::serving_default(&d.batch_variants);
+                    cfg.block_len = self.block_len;
+                    cfg.steps_per_block = self.steps_per_block;
+                    let cal = Calibrator::new(
+                        d.hw.clone(), self.model.clone(), d.cache, cfg);
+                    let c = cal.profile(&d.name);
+                    profiled.push((key, c.clone()));
+                    c
+                }
+            };
+            let mut c = curve;
+            c.device = d.name.clone();
+            d.curve = Some(c);
         }
     }
 
@@ -358,6 +390,29 @@ block_len = 32
         let a = dc.total_s(4, 300, Pct::P50).unwrap();
         let b = edge.total_s(4, 300, Pct::P50).unwrap();
         assert!(b > a, "edge {b} vs dc {a}");
+    }
+
+    #[test]
+    fn calibrate_dedupes_identical_profiling_classes() {
+        let mut t = ClusterTopology::edge_datacenter(
+            2, 3, ModelArch::llada_8b(), CacheMode::Dual);
+        t.calibrate();
+        assert!(t.is_calibrated());
+        // same-class devices share bit-identical curves, renamed each
+        let a = t.devices[0].curve.as_ref().unwrap();
+        let b = t.devices[1].curve.as_ref().unwrap();
+        assert_eq!((a.device.as_str(), b.device.as_str()), ("dc0", "dc1"));
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.p50_total_s.to_bits(), y.p50_total_s.to_bits());
+            assert_eq!(x.p95_first_s.to_bits(), y.p95_first_s.to_bits());
+        }
+        // a different class (edge: other hw + variant set) still gets
+        // its own profile
+        let e = t.devices[2].curve.as_ref().unwrap();
+        assert_eq!(e.device, "edge0");
+        assert_eq!(e.variants(), vec![1, 2, 4]);
+        assert_ne!(a.variants(), e.variants());
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Trace-driven load generation: deterministic arrival processes
-//! (Poisson, bursty on/off, uniform pacing) crossed with a mixed
+//! (Poisson, bursty on/off, uniform pacing), an optional diurnal
+//! time-of-day rate envelope over any of them, crossed with a mixed
 //! prompt/output-length distribution, plus a replayable plain-text trace
 //! format so a run can be captured once and re-served bit-identically
 //! across router/scheduler experiments.
@@ -7,8 +8,42 @@
 //! Randomness comes from [`crate::util::Lcg64`] only — the same spec +
 //! seed always yields the same trace, and "SlowFast"-style per-request
 //! cost variability enters through the length mix, not hidden state.
+//! The [`Diurnal`] envelope is a pure function of virtual time, so
+//! enveloped traces stay exactly as replayable as flat ones.
 
 use crate::util::Lcg64;
+
+/// A deterministic time-of-day rate envelope: a single-cosine day
+/// curve with mean exactly 1, multiplied onto the instantaneous rate
+/// of whatever base [`Arrival`] process it wraps (via
+/// [`TraceSpec::with_envelope`]). The trough sits at `t = 0` and the
+/// peak at `t = period_s / 2`, so a trace ramps up into its first
+/// peak — the diurnal shape that breaks mean-rate provisioning without
+/// changing the offered mean.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Diurnal {
+    /// length of one simulated "day", seconds of virtual time
+    pub period_s: f64,
+    /// peak-to-mean swing in `[0, 1)`:
+    /// `scale(t) = 1 − swing · cos(2π · t / period_s)`, so the rate
+    /// swings between `(1 − swing)` and `(1 + swing)` times the base
+    pub swing: f64,
+}
+
+impl Diurnal {
+    /// The default day shape: an 0.85 swing (peak ≈ 12x the trough),
+    /// matching the day/night amplitude of public serving traces.
+    pub fn day(period_s: f64) -> Self {
+        Diurnal { period_s, swing: 0.85 }
+    }
+
+    /// Envelope multiplier at time `t` (mean 1 over a full period,
+    /// floored at 1e-3 so the off-peak trickle still terminates).
+    pub fn scale(&self, t: f64) -> f64 {
+        let phase = std::f64::consts::TAU * (t / self.period_s.max(1e-9));
+        (1.0 - self.swing * phase.cos()).max(1e-3)
+    }
+}
 
 /// Arrival process shapes (rates in requests/s).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -70,9 +105,26 @@ pub struct TraceSpec {
     pub mix: Vec<MixEntry>,
     pub n: usize,
     pub seed: u64,
+    /// optional diurnal rate envelope multiplied onto the base arrival
+    /// process (None = flat, the pre-envelope behavior)
+    pub envelope: Option<Diurnal>,
 }
 
 impl TraceSpec {
+    /// Wrap the base arrival process in a diurnal rate envelope.
+    ///
+    /// ```
+    /// use dart::cluster::{generate_trace, Arrival, Diurnal, TraceSpec};
+    ///
+    /// let spec = TraceSpec::chat(64, Arrival::Poisson { rps: 20.0 }, 7)
+    ///     .with_envelope(Diurnal::day(10.0));
+    /// // replayable like any other trace: same spec + seed, same trace
+    /// assert_eq!(generate_trace(&spec), generate_trace(&spec));
+    /// ```
+    pub fn with_envelope(mut self, env: Diurnal) -> Self {
+        self.envelope = Some(env);
+        self
+    }
     /// A chat-shaped mix over the paper's §6.2 geometry (gen lengths in
     /// whole 64-token blocks): short turns dominate, a long-form tail
     /// drives the per-request cost variability the scheduler must absorb.
@@ -87,6 +139,7 @@ impl TraceSpec {
             ],
             n,
             seed,
+            envelope: None,
         }
     }
 
@@ -96,6 +149,17 @@ impl TraceSpec {
         self.mix.iter().map(|m| m.weight * m.gen_len as f64).sum::<f64>()
             / wsum.max(1e-12)
     }
+}
+
+/// Offered request rate that loads `capacity_tps` of generated-token
+/// capacity at fraction `load` under the chat-shaped length mix — the
+/// one load-targeting rule shared by `serve-cluster`, the serving
+/// benches, and the study grid, so "70% load" means the same operating
+/// point everywhere.
+pub fn chat_offered_rps(capacity_tps: f64, load: f64) -> f64 {
+    let mean_gen = TraceSpec::chat(1, Arrival::Poisson { rps: 1.0 }, 0)
+        .mean_gen_len();
+    load * capacity_tps / mean_gen
 }
 
 /// One request in a trace (times on the virtual serving clock).
@@ -114,9 +178,14 @@ pub fn generate_trace(spec: &TraceSpec) -> Vec<TraceRequest> {
     let mut t = 0.0f64;
     let mut out = Vec::with_capacity(spec.n);
     for id in 0..spec.n as u64 {
-        let rate = spec.arrival.rate_at(t);
+        let mut rate = spec.arrival.rate_at(t);
+        if let Some(env) = spec.envelope {
+            rate *= env.scale(t);
+        }
         t += match spec.arrival {
-            Arrival::Uniform { rps } => 1.0 / rps,
+            // pacing stays deterministic under the envelope: the gap is
+            // 1/rate, so the off-peak paces out and the peak packs in
+            Arrival::Uniform { .. } => 1.0 / rate,
             _ => rng.exp(rate),
         };
         let m = spec.mix[rng.pick_weighted(&weights)];
@@ -225,6 +294,7 @@ mod tests {
             mix: vec![MixEntry { weight: 1.0, prompt_len: 64, gen_len: 64 }],
             n: 8,
             seed: 0,
+            envelope: None,
         };
         let t = generate_trace(&spec);
         for w in t.windows(2) {
@@ -261,6 +331,96 @@ mod tests {
     }
 
     #[test]
+    fn diurnal_trace_is_bit_identical_across_runs() {
+        let spec = TraceSpec::chat(256, Arrival::Poisson { rps: 20.0 }, 13)
+            .with_envelope(Diurnal::day(6.0));
+        let a = generate_trace(&spec);
+        let b = generate_trace(&spec);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!((x.prompt_len, x.gen_len), (y.prompt_len, y.gen_len));
+        }
+        // a different seed yields a different trace under the same envelope
+        let other = TraceSpec::chat(256, Arrival::Poisson { rps: 20.0 }, 14)
+            .with_envelope(Diurnal::day(6.0));
+        assert_ne!(a, generate_trace(&other));
+    }
+
+    #[test]
+    fn diurnal_envelope_modulates_interarrival_rate() {
+        // the peak-phase half of the day must hold far more arrivals
+        // than the trough-phase half (swing 0.85: analytic ratio ~3.4x)
+        let period = 8.0;
+        let spec = TraceSpec::chat(4000, Arrival::Poisson { rps: 50.0 }, 3)
+            .with_envelope(Diurnal::day(period));
+        let trace = generate_trace(&spec);
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for r in &trace {
+            let phase = (r.arrival_s / period).fract();
+            if (0.25..0.75).contains(&phase) {
+                peak += 1; // centered on the t = period/2 crest
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(peak > 2 * trough, "peak {peak} vs trough {trough}");
+        // ... while the offered mean stays on the base rate
+        let span = trace.last().unwrap().arrival_s;
+        let rate = trace.len() as f64 / span;
+        assert!((rate - 50.0).abs() < 10.0, "mean rate {rate}");
+    }
+
+    #[test]
+    fn diurnal_scale_has_unit_mean_and_stays_positive() {
+        let env = Diurnal::day(10.0);
+        let n = 10_000;
+        let mean: f64 = (0..n)
+            .map(|i| env.scale(10.0 * i as f64 / n as f64))
+            .sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 1e-3, "mean {mean}");
+        for i in 0..n {
+            assert!(env.scale(10.0 * i as f64 / n as f64) > 0.0);
+        }
+        // full swing still floors above zero rather than stalling
+        let hard = Diurnal { period_s: 10.0, swing: 1.0 };
+        assert!(hard.scale(0.0) >= 1e-3);
+    }
+
+    #[test]
+    fn envelope_composes_over_bursty_base() {
+        // envelope over the bursty base keeps the on/off microstructure
+        // but adds the day-scale swell: the enveloped trace's peak-half
+        // share must exceed the flat bursty trace's
+        let period = 16.0;
+        let base = Arrival::Bursty {
+            rps: 40.0, burst_mult: 4.0, cycle_s: 2.0, duty: 0.25 };
+        let flat = generate_trace(&TraceSpec::chat(3000, base, 5));
+        let env = generate_trace(
+            &TraceSpec::chat(3000, base, 5)
+                .with_envelope(Diurnal::day(period)));
+        let peak_share = |t: &[TraceRequest]| {
+            let n = t.iter()
+                .filter(|r| (0.25..0.75)
+                    .contains(&(r.arrival_s / period).fract()))
+                .count();
+            n as f64 / t.len() as f64
+        };
+        assert!(peak_share(&env) > peak_share(&flat) + 0.1,
+                "env {} vs flat {}", peak_share(&env), peak_share(&flat));
+    }
+
+    #[test]
+    fn chat_offered_rps_targets_the_mix_mean() {
+        // chat mix mean gen length is 134.4 tokens, so a capacity of
+        // exactly one mean request per second at full load is 1 rps
+        assert!((chat_offered_rps(134.4, 1.0) - 1.0).abs() < 1e-9);
+        assert!((chat_offered_rps(134.4, 0.5) - 0.5).abs() < 1e-9);
+        assert!((chat_offered_rps(268.8, 1.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn mean_gen_len_weighted() {
         let spec = TraceSpec {
             arrival: Arrival::Poisson { rps: 1.0 },
@@ -270,6 +430,7 @@ mod tests {
             ],
             n: 1,
             seed: 0,
+            envelope: None,
         };
         assert!((spec.mean_gen_len() - 175.0).abs() < 1e-9);
     }

@@ -6,7 +6,7 @@
 //! model architecture and blocked-diffusion geometry.
 //!
 //! A hand-rolled TOML-subset parser (`parse_config`) loads overrides from
-//! disk (no serde offline — DESIGN.md S7).
+//! disk (no serde offline — docs/ARCHITECTURE.md S7).
 
 mod parser;
 pub use parser::{apply_hw_overrides, parse_config, ConfigDoc, ParseError};

@@ -1,4 +1,4 @@
-//! TOML-subset config parser (serde/toml stand-in, DESIGN.md S7).
+//! TOML-subset config parser (serde/toml stand-in, docs/ARCHITECTURE.md S7).
 //!
 //! Supports: `[section]` headers, `key = value` with integer, float,
 //! boolean and quoted-string values, `#` comments. Enough for hardware /

@@ -173,6 +173,22 @@ impl CostModel {
 }
 
 /// How the batcher decides when to fire and which variant to run.
+///
+/// The cost-based policy turns both flush decisions into economics on a
+/// measured curve — sublinear curves pad up, disproportionately
+/// expensive big variants exact-fill:
+///
+/// ```
+/// use dart::coordinator::batcher::CostModel;
+///
+/// // measured: L(4) = 1.0 s, L(8) = 1.2 s (sublinear, so pad up)
+/// let cm = CostModel::from_pairs(&[(4, 1.0), (8, 1.2)]);
+/// assert_eq!(cm.split(5), (5, 8));  // run all 5 padded to 8, one flush
+///
+/// // an expensive big variant flips the decision to exact-fill
+/// let cm = CostModel::from_pairs(&[(4, 1.0), (8, 3.5)]);
+/// assert_eq!(cm.split(5), (4, 4));  // run 4 now, leave 1 queued
+/// ```
 #[derive(Clone, Debug, Default)]
 pub enum FlushPolicy {
     /// fire on full-largest-variant or max_wait; pad to smallest fit

@@ -2,7 +2,7 @@
 //! handles are not Sync) and drains the dynamic batcher; callers submit
 //! prompts over an mpsc channel and receive completions on a
 //! per-request return channel. std-thread runtime (no tokio offline —
-//! DESIGN.md S7); the blocking recv in the worker is the event loop.
+//! docs/ARCHITECTURE.md S7); the blocking recv in the worker is the event loop.
 
 use std::path::Path;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};

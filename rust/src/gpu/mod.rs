@@ -1,5 +1,5 @@
 //! Analytical GPU baselines: NVIDIA A6000 and H100 roofline models
-//! executing the identical blocked-diffusion workload (DESIGN.md
+//! executing the identical blocked-diffusion workload (docs/ARCHITECTURE.md
 //! substitution S4 — stands in for the paper's dInfer/vLLM measurements
 //! in Fig. 1, Table 6 and Fig. 9).
 //!

@@ -4,7 +4,7 @@
 //! parallelism, bank-level parallelism with open-row policy, row
 //! activate/precharge timing, refresh (tREFI/tRFC), and read-path
 //! scheduling gaps. Two fidelities implement the Table 2 cross-validation
-//! (DESIGN.md substitution S1):
+//! (docs/ARCHITECTURE.md substitution S1):
 //!
 //! * [`Fidelity::Ideal`] — the paper's simulator configuration: ideal
 //!   bank-level parallelism, refresh disabled; streaming traffic achieves

@@ -1,9 +1,10 @@
 //! # DART — an NPU stack for Diffusion-LLM inference
 //!
-//! Rust reproduction of *"NPU Design for Diffusion Language Model
-//! Inference"* (DART): the first configurable NPU platform for dLLM
-//! inference. This crate is Layer 3 of the three-layer stack described in
-//! `DESIGN.md`:
+//! Rust reproduction of *"Beyond GEMM-Centric NPUs: Enabling Efficient
+//! Diffusion LLM Sampling"* (DART): the first configurable NPU platform
+//! for dLLM inference. This crate is Layer 3 of the three-layer stack
+//! described in `docs/ARCHITECTURE.md` (layer diagram + data-flow
+//! walkthrough):
 //!
 //! * [`isa`] / [`compiler`] — the dLLM-oriented ISA and the model→ISA
 //!   compiler (paper §3.1.3, Table 1, Algorithms 1–2);
@@ -33,11 +34,17 @@
 //!   text format, and threaded through the batcher's cost-based flush
 //!   policy and the scheduler's percentile TTFT admission predictor
 //!   (`calibrate` in the CLI, `calib_policies` in the benches);
+//! * [`study`] — the fleet study harness above cluster + calib:
+//!   parameterized experiment grids (fleet shape × router policy ×
+//!   admission mode under diurnal traces) whose output artifact is a
+//!   committed, byte-reproducible Markdown report (`fleet-study` in the
+//!   CLI, `fleet_study` in the benches, `docs/STUDY_fleet.md` the
+//!   generated document);
 //! * [`gpu`] — analytical A6000/H100 baselines for Table 6 / Fig. 9.
 //!
 //! Substrates ([`cli`], [`stats`], [`report`], [`util`]) are built from
 //! scratch because the offline crate registry lacks clap/criterion/serde
-//! (DESIGN.md substitution S7).
+//! (docs/ARCHITECTURE.md, substitution S7).
 
 pub mod calib;
 pub mod cli;
@@ -56,4 +63,5 @@ pub mod runtime;
 pub mod sampling;
 pub mod sim;
 pub mod stats;
+pub mod study;
 pub mod util;

@@ -7,6 +7,9 @@
 //!   calibrate      profile compiled batch variants into per-device
 //!                  LatencyCurve tables (cost-based batching / percentile
 //!                  TTFT admission), with optional CycleSim spot-check
+//!   fleet-study    run the diurnal mixed-topology policy sweep and emit
+//!                  the committed Markdown study (docs/STUDY_fleet.md);
+//!                  --smoke re-renders and diffs against the committed file
 //!   generate       one blocked-diffusion generation through the PJRT model
 //!   simulate       analytical simulation of a paper workload
 //!   sweep          Fig. 9-style design-space sweep
@@ -33,6 +36,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("serve-cluster") => cmd_serve_cluster(&args),
         Some("calibrate") => cmd_calibrate(&args),
+        Some("fleet-study") => cmd_fleet_study(&args),
         Some("generate") => cmd_generate(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("sweep") => cmd_sweep(&args),
@@ -40,14 +44,16 @@ fn main() {
         Some("asm") => cmd_asm(&args),
         Some("area") => cmd_area(&args),
         _ => {
-            eprintln!("usage: dart <serve|serve-cluster|calibrate|generate|simulate|sweep|hbm|asm|area> [flags]");
+            eprintln!("usage: dart <serve|serve-cluster|calibrate|fleet-study|generate|simulate|sweep|hbm|asm|area> [flags]");
             eprintln!("  serve     --requests N --cache MODE --kv POLICY");
             eprintln!("  serve-cluster --devices N --requests N --rate RPS \
                        --arrival poisson|bursty|uniform --router least|rr|variant");
             eprintln!("                --load FRAC --ttft-slo-ms N --tpot-slo-ms N \
                        --no-admission --seed N --calibrated --curve FILE");
             eprintln!("                --trace-out FILE | --replay FILE \
-                       --link pcie|nvlink|eth --config FILE");
+                       --link pcie|nvlink|eth --config FILE --diurnal [SECS]");
+            eprintln!("  fleet-study --seed N --out FILE --requests N \
+                       --load FRAC | --smoke");
             eprintln!("  calibrate --presets default,edge --variants \"1,2,4,8,16\" \
                        --samples N --model M --cache MODE");
             eprintln!("            --out PREFIX --spot-check");
@@ -157,22 +163,39 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
     // offered rate: explicit --rate wins, otherwise a --load fraction
     // (default 70%) of the fleet's calibrated token capacity
     let capacity_tps = cluster::fleet_capacity_tps(&topo);
-    let probe = TraceSpec::chat(n, Arrival::Poisson { rps: 1.0 }, seed);
-    let auto_rps = args.get_f64("load", 0.7) * capacity_tps
-        / probe.mean_gen_len();
+    let auto_rps =
+        cluster::chat_offered_rps(capacity_tps, args.get_f64("load", 0.7));
     let rps = args.get_f64("rate", auto_rps);
     let arrival = Arrival::parse(args.get_or("arrival", "poisson"), rps)
         .expect("bad --arrival (poisson|bursty|uniform)");
 
-    // replay ignores the generator knobs (--requests/--arrival/--rate):
-    // the trace file is the offered load, and the header says so
+    // optional diurnal envelope over the base arrival process:
+    // --diurnal SECS sets the day period, bare --diurnal fits two
+    // simulated days into the expected trace span
+    let envelope = if let Some(p) = args.get("diurnal") {
+        Some(dart::cluster::Diurnal::day(
+            p.parse().expect("--diurnal expects seconds")))
+    } else if args.has("diurnal") {
+        Some(dart::cluster::Diurnal::day(n as f64 / rps / 2.0))
+    } else {
+        None
+    };
+
+    // replay ignores the generator knobs (--requests/--arrival/--rate/
+    // --diurnal): the trace file is the offered load, and the header
+    // says so
     let (trace, trace_desc) = if let Some(path) = args.get("replay") {
         let text = std::fs::read_to_string(path).expect("read trace");
         (cluster::trace_from_text(&text).expect("parse trace"),
          format!("replayed from {path}"))
     } else {
-        (cluster::generate_trace(&TraceSpec::chat(n, arrival, seed)),
-         format!("{arrival:?}, seed {seed}"))
+        let mut spec = TraceSpec::chat(n, arrival, seed);
+        let mut desc = format!("{arrival:?}, seed {seed}");
+        if let Some(env) = envelope {
+            spec = spec.with_envelope(env);
+            desc.push_str(&format!(", diurnal period {:.1}s", env.period_s));
+        }
+        (cluster::generate_trace(&spec), desc)
     };
     if let Some(path) = args.get("trace-out") {
         std::fs::write(path, cluster::trace_to_text(&trace))
@@ -309,6 +332,87 @@ fn cmd_calibrate(args: &Args) -> i32 {
             return 1;
         }
         println!("  OK (within 25%)");
+    }
+    0
+}
+
+/// Run the diurnal mixed-topology fleet study (`study::StudyGrid`) and
+/// emit the Markdown report. Modes:
+///
+///   --out FILE    write the rendered study (the committed
+///                 docs/STUDY_fleet.md workflow)
+///   --smoke       regenerate in memory and byte-compare against the
+///                 committed file at --out (default docs/STUDY_fleet.md);
+///                 nonzero exit on drift — the scripts/ci.sh docs gate
+///   (neither)     print the Markdown to stdout
+///
+/// Deterministic under a fixed --seed: the same seed always renders the
+/// same bytes, so the committed study is a reproducible artifact.
+fn cmd_fleet_study(args: &Args) -> i32 {
+    use dart::study::{render_study, StudyConfig, StudyGrid};
+
+    let seed = args.get_usize("seed", 7) as u64;
+    let mut cfg = StudyConfig::reference(seed);
+    cfg.requests_per_cell =
+        args.get_usize("requests", cfg.requests_per_cell);
+    cfg.load = args.get_f64("load", cfg.load);
+    let n_cells = cfg.shapes.len() * cfg.policies.len() * 2;
+
+    // check mode reads the committed file *before* the (minutes-long)
+    // grid run so a missing or unreadable file fails immediately
+    let check = args.has("smoke") || args.has("check");
+    let committed = if check {
+        let path = args.get_or("out", "docs/STUDY_fleet.md");
+        match std::fs::read_to_string(path) {
+            Ok(text) => Some(text),
+            Err(e) => {
+                eprintln!("fleet-study --smoke: cannot read {path}: {e}");
+                eprintln!("regenerate it with: dart fleet-study --seed \
+                           {seed} --out {path}");
+                return 1;
+            }
+        }
+    } else {
+        None
+    };
+
+    eprintln!("fleet-study: {} shapes x {} policies x 2 admission modes \
+               = {} cells, seed {}",
+              cfg.shapes.len(), cfg.policies.len(), n_cells, seed);
+    let mut done = 0usize;
+    let result = StudyGrid::new(cfg).run_with_progress(|cell| {
+        done += 1;
+        eprintln!("  [{done}/{n_cells}] {} / {} / {}: goodput {:.1} tok/s, \
+                   shed {:.1}%",
+                  cell.shape, cell.policy.name(), cell.admission_label(),
+                  cell.metrics.goodput_tps(),
+                  100.0 * cell.metrics.shed_frac());
+    });
+    let md = render_study(&result);
+
+    if let Some(committed) = committed {
+        let path = args.get_or("out", "docs/STUDY_fleet.md");
+        if committed == md {
+            println!("fleet-study --smoke: {path} is up to date \
+                      ({} bytes)", md.len());
+            return 0;
+        }
+        let drift = committed.lines().zip(md.lines())
+            .position(|(a, b)| a != b)
+            .map(|i| i + 1)
+            .unwrap_or(committed.lines().count().min(md.lines().count()) + 1);
+        eprintln!("fleet-study --smoke: {path} DRIFTED from the code \
+                   (first difference at line {drift})");
+        eprintln!("refresh it with: dart fleet-study --seed {seed} \
+                   --out {path}");
+        return 1;
+    }
+
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &md).expect("write study doc");
+        println!("wrote {} bytes to {path}", md.len());
+    } else {
+        print!("{md}");
     }
     0
 }

@@ -1,5 +1,9 @@
 //! Table / series renderers: every bench prints paper-shaped rows
-//! through these helpers (ASCII tables + CSV for plotting).
+//! through these helpers (ASCII tables + CSV for plotting + GFM
+//! Markdown), and [`MarkdownDoc`] assembles whole committed documents
+//! (headings, paragraphs, pipe tables, code fences) byte-stably — the
+//! `fleet-study` subcommand regenerates `docs/STUDY_fleet.md` through
+//! it, and CI diffs the output against the committed file.
 
 /// A simple column-aligned ASCII table.
 #[derive(Clone, Debug, Default)]
@@ -52,12 +56,7 @@ impl Table {
                 if i > 0 {
                     s.push_str("  ");
                 }
-                // right-align numeric-looking cells
-                let numeric = c.chars().next().map(
-                    |ch| ch.is_ascii_digit() || ch == '-' || ch == '+'
-                        || ch == '.' || ch == 'x' || ch == '×').unwrap_or(false)
-                    && c.chars().any(|ch| ch.is_ascii_digit());
-                if numeric {
+                if cell_is_numeric(c) {
                     s.push_str(&format!("{c:>width$}", width = w[i]));
                 } else {
                     s.push_str(&format!("{c:<width$}", width = w[i]));
@@ -72,6 +71,39 @@ impl Table {
         for row in &self.rows {
             out.push_str(&line(row, &w));
             out.push('\n');
+        }
+        out
+    }
+
+    /// Render as a GitHub-flavored Markdown pipe table. A column is
+    /// right-aligned when every one of its body cells looks numeric
+    /// (same heuristic as the ASCII renderer); the title is *not*
+    /// emitted — document structure (headings) belongs to
+    /// [`MarkdownDoc`]. Output is a pure function of the rows, so the
+    /// committed study docs regenerate byte-identically.
+    pub fn to_markdown(&self) -> String {
+        let ncols = self.headers.len();
+        let right: Vec<bool> = (0..ncols)
+            .map(|i| !self.rows.is_empty()
+                 && self.rows.iter().all(|r| cell_is_numeric(&r[i])))
+            .collect();
+        let mut out = String::new();
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for c in cells {
+                s.push_str(&format!(" {} |", c.replace('|', "\\|")));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers));
+        out.push('|');
+        for r in &right {
+            out.push_str(if *r { " --: |" } else { " :-- |" });
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
         }
         out
     }
@@ -92,12 +124,85 @@ impl Table {
     }
 }
 
+/// Shared alignment heuristic: a cell "looks numeric" when it starts
+/// with a digit/sign/point (or an `x`/`×` speedup prefix) and contains
+/// at least one digit.
+fn cell_is_numeric(c: &str) -> bool {
+    c.chars().next().map(
+        |ch| ch.is_ascii_digit() || ch == '-' || ch == '+'
+            || ch == '.' || ch == 'x' || ch == '×').unwrap_or(false)
+        && c.chars().any(|ch| ch.is_ascii_digit())
+}
+
+/// A byte-stable Markdown document builder: blocks are appended in
+/// order, separated by exactly one blank line, and [`Self::render`]
+/// ends with a single trailing newline. No timestamps, no environment
+/// lookups — rendering the same blocks always yields the same bytes,
+/// which is the contract that lets CI diff regenerated study docs
+/// against the committed ones.
+#[derive(Clone, Debug, Default)]
+pub struct MarkdownDoc {
+    blocks: Vec<String>,
+}
+
+impl MarkdownDoc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn block(&mut self, s: String) -> &mut Self {
+        self.blocks.push(s);
+        self
+    }
+
+    pub fn h1(&mut self, text: &str) -> &mut Self {
+        self.block(format!("# {text}"))
+    }
+
+    pub fn h2(&mut self, text: &str) -> &mut Self {
+        self.block(format!("## {text}"))
+    }
+
+    pub fn h3(&mut self, text: &str) -> &mut Self {
+        self.block(format!("### {text}"))
+    }
+
+    pub fn para(&mut self, text: &str) -> &mut Self {
+        self.block(text.to_string())
+    }
+
+    /// One bulleted list block from pre-written item lines.
+    pub fn bullets(&mut self, items: &[String]) -> &mut Self {
+        let lines: Vec<String> =
+            items.iter().map(|i| format!("- {i}")).collect();
+        self.block(lines.join("\n"))
+    }
+
+    /// Fenced code block (` ```lang `).
+    pub fn code(&mut self, lang: &str, body: &str) -> &mut Self {
+        self.block(format!("```{lang}\n{}\n```", body.trim_end()))
+    }
+
+    /// A [`Table`] as a GFM pipe table (title dropped — add a heading).
+    pub fn table(&mut self, t: &Table) -> &mut Self {
+        self.block(t.to_markdown().trim_end().to_string())
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = self.blocks.join("\n\n");
+        out.push('\n');
+        out
+    }
+}
+
 /// Format helpers shared by benches.
 pub fn f1(v: f64) -> String { format!("{v:.1}") }
 pub fn f2(v: f64) -> String { format!("{v:.2}") }
 pub fn f3(v: f64) -> String { format!("{v:.3}") }
 pub fn speedup(v: f64) -> String { format!("x{v:.2}") }
 pub fn pct(v: f64) -> String { format!("{:.1}%", v * 100.0) }
+/// Signed percentage for delta-vs-baseline columns (`+12.3%` / `-4.0%`).
+pub fn signed_pct(v: f64) -> String { format!("{:+.1}%", v * 100.0) }
 pub fn gbs(bytes_per_sec: f64) -> String {
     format!("{:.1}", bytes_per_sec / 1e9)
 }
@@ -142,7 +247,53 @@ mod tests {
     fn format_helpers() {
         assert_eq!(speedup(4.906), "x4.91");
         assert_eq!(pct(0.707), "70.7%");
+        assert_eq!(signed_pct(0.123), "+12.3%");
+        assert_eq!(signed_pct(-0.04), "-4.0%");
+        assert_eq!(signed_pct(0.0), "+0.0%");
         assert_eq!(si(2.5e6), "2.50M");
         assert_eq!(gbs(819.2e9), "819.2");
+    }
+
+    #[test]
+    fn markdown_table_golden() {
+        // golden bytes: numeric columns right-align, text columns left,
+        // embedded pipes escape — must never drift, the committed study
+        // docs depend on it
+        let mut t = Table::new("ignored title", &["name", "tok/s", "note"]);
+        t.row_strs(&["alpha", "12.5", "ok"]);
+        t.row_strs(&["beta", "3.0", "a|b"]);
+        assert_eq!(
+            t.to_markdown(),
+            "| name | tok/s | note |\n\
+             | :-- | --: | :-- |\n\
+             | alpha | 12.5 | ok |\n\
+             | beta | 3.0 | a\\|b |\n");
+    }
+
+    #[test]
+    fn markdown_table_empty_body_left_aligns() {
+        let t = Table::new("", &["a", "b"]);
+        assert_eq!(t.to_markdown(), "| a | b |\n| :-- | :-- |\n");
+    }
+
+    #[test]
+    fn markdown_doc_golden() {
+        let mut t = Table::new("", &["k", "v"]);
+        t.row_strs(&["x", "1"]);
+        let mut d = MarkdownDoc::new();
+        d.h1("Title")
+            .para("Intro text.")
+            .h2("Data")
+            .table(&t)
+            .bullets(&["first".into(), "second".into()])
+            .code("sh", "cargo run\n");
+        assert_eq!(
+            d.render(),
+            "# Title\n\nIntro text.\n\n## Data\n\n\
+             | k | v |\n| :-- | --: |\n| x | 1 |\n\n\
+             - first\n- second\n\n\
+             ```sh\ncargo run\n```\n");
+        // byte-stable: rendering twice is identical
+        assert_eq!(d.render(), d.render());
     }
 }

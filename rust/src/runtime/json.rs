@@ -1,4 +1,4 @@
-//! Minimal JSON parser (serde_json stand-in, DESIGN.md S7).
+//! Minimal JSON parser (serde_json stand-in, docs/ARCHITECTURE.md S7).
 //!
 //! Full JSON grammar minus exotic escapes (\u is decoded for the BMP);
 //! numbers parse to f64 with i64 fast-path. Enough for manifest.json

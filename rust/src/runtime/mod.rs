@@ -6,7 +6,7 @@
 //! rejects; the text parser reassigns ids (see python/compile/aot.py and
 //! /opt/xla-example/README.md).
 //!
-//! * [`json`] — minimal JSON parser (serde_json stand-in, DESIGN.md S7)
+//! * [`json`] — minimal JSON parser (serde_json stand-in, docs/ARCHITECTURE.md S7)
 //!   for `artifacts/manifest.json`;
 //! * [`manifest`] — typed manifest: executables, shapes, goldens;
 //! * [`weights`] — the DARTWTS1 trained-parameter container;

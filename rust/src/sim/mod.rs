@@ -8,7 +8,7 @@
 //!   in-order issue with stall-on-dependency, functional numerics
 //!   cross-checked against the golden models, HBM + prefetch overlap.
 //! * [`rtl`] — the RTL-reference configuration (Verilator substitute,
-//!   DESIGN.md S2): the same engine with the per-op pipeline fill/drain
+//!   docs/ARCHITECTURE.md S2): the same engine with the per-op pipeline fill/drain
 //!   overheads the transaction-level model deliberately omits; ground
 //!   truth for the Table 3 compound-sequence comparison.
 //! * [`analytical`] — closed-form roofline model for design-space sweeps

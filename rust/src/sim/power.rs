@@ -1,4 +1,4 @@
-//! Parametric 7 nm power + area models (paper §4.1 / §6.2, DESIGN.md
+//! Parametric 7 nm power + area models (paper §4.1 / §6.2, docs/ARCHITECTURE.md
 //! substitution S3).
 //!
 //! Constants are anchored to the paper's post-synthesis reference points

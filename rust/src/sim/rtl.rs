@@ -1,4 +1,4 @@
-//! RTL-reference pipeline model — the Verilator substitute (DESIGN.md
+//! RTL-reference pipeline model — the Verilator substitute (docs/ARCHITECTURE.md
 //! substitution S2, paper §5.2).
 //!
 //! The paper validates its transaction-level simulator bottom-up against

@@ -1,5 +1,5 @@
 //! Measurement substrate: timing harness with warmup + percentile
-//! statistics (the criterion stand-in, DESIGN.md S7) and a small
+//! statistics (the criterion stand-in, docs/ARCHITECTURE.md S7) and a small
 //! property-test driver (the proptest stand-in).
 
 use std::time::{Duration, Instant};

@@ -1,0 +1,346 @@
+//! The study grid runner: fleet shape × router policy × admission mode
+//! over per-shape diurnal traces, one [`FleetMetrics`] per cell.
+//!
+//! Determinism contract: every cell is a pure function of
+//! [`StudyConfig`] — traces come from the seeded [`crate::util::Lcg64`]
+//! generator, calibration from the seeded profiler, and the fleet
+//! simulator runs in virtual time — so the whole grid (and therefore
+//! the rendered study document) is bit-identical across runs.
+
+use crate::cluster::{chat_offered_rps, fleet_capacity_tps, generate_trace,
+                     Arrival, ClusterTopology, Diurnal, FleetMetrics,
+                     FleetSim, RoutePolicy, SloConfig, TraceSpec};
+use crate::config::{CacheMode, HwConfig, ModelArch};
+
+/// One fleet shape in the sweep: `n_dc` datacenter devices
+/// ([`HwConfig::dart_default`]) plus `n_edge` edge devices
+/// ([`HwConfig::dart_edge`]). `n_edge == 0` builds the homogeneous
+/// PCIe-attached fleet; any edge presence builds the Ethernet-attached
+/// mixed topology ([`ClusterTopology::edge_datacenter`]).
+#[derive(Clone, Debug)]
+pub struct ShapeSpec {
+    pub name: String,
+    pub n_dc: usize,
+    pub n_edge: usize,
+}
+
+impl ShapeSpec {
+    pub fn new(name: &str, n_dc: usize, n_edge: usize) -> Self {
+        assert!(n_dc + n_edge > 0, "shape {name:?} needs devices");
+        ShapeSpec { name: name.to_string(), n_dc, n_edge }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_dc + self.n_edge
+    }
+
+    /// Materialize the topology (uncalibrated; the grid calibrates the
+    /// copy used for curve-driven cells).
+    pub fn build(&self, model: &ModelArch, cache: CacheMode)
+                 -> ClusterTopology {
+        if self.n_edge == 0 {
+            ClusterTopology::homogeneous(
+                self.n_dc, HwConfig::dart_default(), model.clone(), cache)
+        } else {
+            ClusterTopology::edge_datacenter(
+                self.n_dc, self.n_edge, model.clone(), cache)
+        }
+    }
+}
+
+/// The full experiment grid description.
+#[derive(Clone, Debug)]
+pub struct StudyConfig {
+    pub shapes: Vec<ShapeSpec>,
+    pub policies: Vec<RoutePolicy>,
+    /// requests per cell trace (each shape generates one trace shared
+    /// by all of its cells)
+    pub requests_per_cell: usize,
+    /// offered mean load as a fraction of the shape's analytic token
+    /// capacity (the diurnal peak runs at ~`(1 + swing) ×` this)
+    pub load: f64,
+    /// simulated days the trace spans (sets the envelope period from
+    /// the expected trace span)
+    pub envelope_periods: f64,
+    /// diurnal peak-to-mean swing in `[0, 1)`
+    pub envelope_swing: f64,
+    pub seed: u64,
+    pub model: ModelArch,
+    pub cache: CacheMode,
+    /// the named baseline cell for per-cell delta columns
+    pub baseline_policy: RoutePolicy,
+    pub baseline_calibrated: bool,
+}
+
+impl StudyConfig {
+    /// The committed-study grid (`docs/STUDY_fleet.md`): three fleet
+    /// shapes spanning 16–32 devices, all three router policies, static
+    /// vs calibrated admission, mean load at 85% of analytic capacity
+    /// so the diurnal peak oversubscribes the fleet.
+    pub fn reference(seed: u64) -> Self {
+        StudyConfig {
+            shapes: vec![
+                ShapeSpec::new("homogeneous-16", 16, 0),
+                ShapeSpec::new("edge-heavy", 4, 28),
+                ShapeSpec::new("dc-heavy", 12, 4),
+            ],
+            policies: vec![RoutePolicy::RoundRobin,
+                           RoutePolicy::LeastOutstanding,
+                           RoutePolicy::VariantAware],
+            requests_per_cell: 240,
+            load: 0.85,
+            envelope_periods: 2.0,
+            envelope_swing: 0.85,
+            seed,
+            model: ModelArch::llada_8b(),
+            cache: CacheMode::Dual,
+            baseline_policy: RoutePolicy::LeastOutstanding,
+            baseline_calibrated: false,
+        }
+    }
+
+    /// A tiny grid for unit tests and the bench smoke path: two small
+    /// shapes, two policies, short traces.
+    pub fn smoke(seed: u64) -> Self {
+        StudyConfig {
+            shapes: vec![
+                ShapeSpec::new("homogeneous-2", 2, 0),
+                ShapeSpec::new("mixed-3", 1, 2),
+            ],
+            policies: vec![RoutePolicy::RoundRobin,
+                           RoutePolicy::LeastOutstanding],
+            requests_per_cell: 48,
+            load: 0.85,
+            envelope_periods: 2.0,
+            envelope_swing: 0.85,
+            seed,
+            model: ModelArch::llada_8b(),
+            cache: CacheMode::Dual,
+            baseline_policy: RoutePolicy::LeastOutstanding,
+            baseline_calibrated: false,
+        }
+    }
+
+    fn admission_modes(&self) -> [bool; 2] {
+        [false, true]
+    }
+}
+
+/// One grid cell: a (shape, policy, admission-mode) run.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub shape: String,
+    pub devices: usize,
+    pub policy: RoutePolicy,
+    /// true = measured curves attached (cost-based batching + p95 TTFT
+    /// admission); false = analytic scalars + static batcher
+    pub calibrated: bool,
+    pub metrics: FleetMetrics,
+}
+
+impl CellResult {
+    pub fn admission_label(&self) -> &'static str {
+        if self.calibrated { "calibrated" } else { "static" }
+    }
+}
+
+/// Per-shape context shared by that shape's cells.
+#[derive(Clone, Debug)]
+pub struct ShapeRun {
+    pub shape: ShapeSpec,
+    /// analytic generated-token capacity of the uncalibrated fleet
+    pub capacity_tps: f64,
+    /// offered mean request rate derived from `load`
+    pub offered_rps: f64,
+    pub slo: SloConfig,
+    pub envelope: Diurnal,
+    /// last arrival time of the generated trace
+    pub trace_span_s: f64,
+    pub trace_len: usize,
+}
+
+/// Everything the renderer needs: config, per-shape context, cells in
+/// (shape, admission, policy) order.
+#[derive(Clone, Debug)]
+pub struct StudyResult {
+    pub cfg: StudyConfig,
+    pub shapes: Vec<ShapeRun>,
+    pub cells: Vec<CellResult>,
+}
+
+impl StudyResult {
+    pub fn cell(&self, shape: &str, policy: RoutePolicy, calibrated: bool)
+                -> Option<&CellResult> {
+        self.cells.iter().find(|c| c.shape == shape
+                               && c.policy == policy
+                               && c.calibrated == calibrated)
+    }
+
+    /// The named baseline cell for a shape (delta reference).
+    pub fn baseline(&self, shape: &str) -> Option<&CellResult> {
+        self.cell(shape, self.cfg.baseline_policy,
+                  self.cfg.baseline_calibrated)
+    }
+
+    /// The goodput winner among a shape's cells (first-listed wins ties,
+    /// so the result is deterministic).
+    pub fn best_goodput(&self, shape: &str) -> Option<&CellResult> {
+        self.cells.iter()
+            .filter(|c| c.shape == shape)
+            .fold(None, |best: Option<&CellResult>, c| match best {
+                Some(b) if b.metrics.goodput_tps()
+                    >= c.metrics.goodput_tps() => Some(b),
+                _ => Some(c),
+            })
+    }
+
+    /// Cells of one shape, in run order.
+    pub fn shape_cells(&self, shape: &str) -> Vec<&CellResult> {
+        self.cells.iter().filter(|c| c.shape == shape).collect()
+    }
+}
+
+/// Runs the grid. Construction is cheap; [`Self::run`] does the work.
+pub struct StudyGrid {
+    pub cfg: StudyConfig,
+}
+
+impl StudyGrid {
+    pub fn new(cfg: StudyConfig) -> Self {
+        assert!(!cfg.shapes.is_empty() && !cfg.policies.is_empty(),
+                "study grid needs at least one shape and one policy");
+        StudyGrid { cfg }
+    }
+
+    pub fn run(&self) -> StudyResult {
+        self.run_with_progress(|_| {})
+    }
+
+    /// Run every cell, invoking `progress` after each one (the CLI
+    /// narrates long grids through this without touching the result).
+    pub fn run_with_progress<F: FnMut(&CellResult)>(&self, mut progress: F)
+                                                    -> StudyResult {
+        let cfg = &self.cfg;
+        let mut shapes = Vec::with_capacity(cfg.shapes.len());
+        let mut cells = Vec::new();
+        for (si, shape) in cfg.shapes.iter().enumerate() {
+            let ref_topo = shape.build(&cfg.model, cfg.cache);
+            let capacity_tps = fleet_capacity_tps(&ref_topo);
+            // offered mean rate: `load` fraction of analytic capacity.
+            // Referenced to the *uncalibrated* estimate so static and
+            // calibrated cells face the identical trace.
+            let offered_rps = chat_offered_rps(capacity_tps, cfg.load);
+            // envelope period from the expected span so every shape's
+            // trace covers `envelope_periods` simulated days
+            let expected_span = cfg.requests_per_cell as f64 / offered_rps;
+            let envelope = Diurnal {
+                period_s: expected_span / cfg.envelope_periods.max(1e-3),
+                swing: cfg.envelope_swing,
+            };
+            let spec = TraceSpec::chat(
+                cfg.requests_per_cell,
+                Arrival::Poisson { rps: offered_rps },
+                cfg.seed.wrapping_add(
+                    (si as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)))
+                .with_envelope(envelope);
+            let trace = generate_trace(&spec);
+            // one SLO per shape, derived from the uncalibrated fleet so
+            // both admission modes chase the same deadlines
+            let slo = SloConfig::auto(&ref_topo);
+            shapes.push(ShapeRun {
+                shape: shape.clone(),
+                capacity_tps,
+                offered_rps,
+                slo,
+                envelope,
+                trace_span_s: trace.last().map(|r| r.arrival_s).unwrap_or(0.0),
+                trace_len: trace.len(),
+            });
+            for calibrated in cfg.admission_modes() {
+                let mut topo = shape.build(&cfg.model, cfg.cache);
+                if calibrated {
+                    topo.calibrate();
+                }
+                for &policy in &cfg.policies {
+                    let metrics = FleetSim::new(topo.clone(), policy, slo)
+                        .run(&trace);
+                    let cell = CellResult {
+                        shape: shape.name.clone(),
+                        devices: shape.n_devices(),
+                        policy,
+                        calibrated,
+                        metrics,
+                    };
+                    progress(&cell);
+                    cells.push(cell);
+                }
+            }
+        }
+        StudyResult { cfg: cfg.clone(), shapes, cells }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_grid_covers_every_cell_and_accounts_for_every_request() {
+        let cfg = StudyConfig::smoke(11);
+        let n_cells = cfg.shapes.len() * cfg.policies.len() * 2;
+        let r = StudyGrid::new(cfg).run();
+        assert_eq!(r.cells.len(), n_cells);
+        assert_eq!(r.shapes.len(), 2);
+        for cell in &r.cells {
+            let shape = r.shapes.iter()
+                .find(|s| s.shape.name == cell.shape).unwrap();
+            assert_eq!(cell.metrics.offered() as usize, shape.trace_len,
+                       "{}/{:?}/{}", cell.shape, cell.policy,
+                       cell.admission_label());
+            assert!(cell.metrics.completed > 0,
+                    "{}/{:?} completed nothing", cell.shape, cell.policy);
+        }
+        // baseline and winner resolve for every shape
+        for s in &r.shapes {
+            assert!(r.baseline(&s.shape.name).is_some());
+            assert!(r.best_goodput(&s.shape.name).is_some());
+            assert_eq!(r.shape_cells(&s.shape.name).len(),
+                       n_cells / r.shapes.len());
+        }
+    }
+
+    #[test]
+    fn grid_is_deterministic_across_runs() {
+        let grid = StudyGrid::new(StudyConfig::smoke(7));
+        let a = grid.run();
+        let b = grid.run();
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(x.shape, y.shape);
+            assert_eq!(x.policy, y.policy);
+            assert_eq!(x.calibrated, y.calibrated);
+            assert_eq!(x.metrics.completed, y.metrics.completed);
+            assert_eq!(x.metrics.tokens, y.metrics.tokens);
+            assert_eq!(x.metrics.horizon_s.to_bits(),
+                       y.metrics.horizon_s.to_bits());
+            assert_eq!(x.metrics.ttft_p95().to_bits(),
+                       y.metrics.ttft_p95().to_bits());
+        }
+        for (x, y) in a.shapes.iter().zip(&b.shapes) {
+            assert_eq!(x.capacity_tps.to_bits(), y.capacity_tps.to_bits());
+            assert_eq!(x.trace_span_s.to_bits(), y.trace_span_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn shape_builds_match_their_kind() {
+        let homog = ShapeSpec::new("h", 3, 0)
+            .build(&ModelArch::llada_8b(), CacheMode::Dual);
+        assert_eq!(homog.n_devices(), 3);
+        assert_eq!(homog.devices[0].name, "npu0");
+        let mixed = ShapeSpec::new("m", 1, 2)
+            .build(&ModelArch::llada_8b(), CacheMode::Dual);
+        assert_eq!(mixed.n_devices(), 3);
+        assert_eq!(mixed.devices[0].name, "dc0");
+        assert_eq!(mixed.devices[1].name, "edge0");
+    }
+}

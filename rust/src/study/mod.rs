@@ -1,0 +1,33 @@
+//! Fleet study harness: parameterized experiment grids over the
+//! cluster/calib stack, rendered into committed Markdown reports.
+//!
+//! The paper proves its speedup one device at a time; the serving
+//! question is fleet-scale. This subsystem runs the large-scale
+//! mixed-topology study the roadmap asks for — tens of edge+datacenter
+//! devices under a diurnal arrival envelope, swept over router policy ×
+//! admission mode (measured curves vs analytic scalars) × fleet shape —
+//! and writes the result table *as a document*:
+//!
+//! * [`grid`] — [`StudyGrid`]: builds each [`ShapeSpec`] into a
+//!   [`crate::cluster::ClusterTopology`], targets the offered load at a
+//!   fraction of the fleet's analytic capacity, generates one diurnal
+//!   trace per shape (identical across every cell of that shape, so
+//!   policies are compared on the same arrivals), and collects one
+//!   [`crate::cluster::FleetMetrics`] per grid cell;
+//! * [`doc`] — [`render_study`]: the Markdown report generator built on
+//!   [`crate::report::MarkdownDoc`] — shape table, per-shape policy
+//!   sweep with deltas vs a named baseline cell, and a generated
+//!   analysis section (which policy wins where, shed/goodput/padding
+//!   tradeoffs).
+//!
+//! Everything is seeded and virtual-time: `fleet-study --seed 7 --out
+//! docs/STUDY_fleet.md` regenerates the committed study byte-identically
+//! (`scripts/ci.sh --smoke` gates on exactly that), and the `fleet_study`
+//! bench prints the same grid as ASCII tables.
+
+pub mod doc;
+pub mod grid;
+
+pub use doc::render_study;
+pub use grid::{CellResult, ShapeRun, ShapeSpec, StudyConfig, StudyGrid,
+               StudyResult};

@@ -5,8 +5,8 @@
 //! contract for scheduling experiments).
 
 use dart::cluster::{generate_trace, trace_from_text, trace_to_text,
-                    Arrival, ClusterTopology, FleetMetrics, FleetSim,
-                    RoutePolicy, SloConfig, TraceSpec};
+                    Arrival, ClusterTopology, Diurnal, FleetMetrics,
+                    FleetSim, RoutePolicy, SloConfig, TraceSpec};
 use dart::config::{CacheMode, ModelArch};
 
 /// Every counter, every accumulator, and the raw latency reservoirs —
@@ -93,4 +93,29 @@ fn calibrated_heterogeneous_fleet_is_deterministic() {
     let c2 = run(&replayed);
     assert_metrics_identical(&c1, &c2, "calibrated replay rerun");
     assert!(c1.completed + c1.shed() == 40, "replay accounting");
+}
+
+#[test]
+fn diurnal_trace_serves_deterministically_through_the_fleet() {
+    // the study harness's workload: a diurnal envelope over a Poisson
+    // base, served twice directly and twice through the trace-file
+    // round-trip — the whole chain must be bit-identical
+    let spec = TraceSpec::chat(48, Arrival::Poisson { rps: 150.0 }, 23)
+        .with_envelope(Diurnal::day(0.2));
+    let trace = generate_trace(&spec);
+    let replayed = trace_from_text(&trace_to_text(&trace)).unwrap();
+    let run = |t: &[dart::cluster::TraceRequest]| {
+        let topo = ClusterTopology::homogeneous(
+            2, dart::config::HwConfig::dart_default(),
+            ModelArch::llada_8b(), CacheMode::Dual);
+        let slo = SloConfig::auto(&topo);
+        FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo).run(t)
+    };
+    let a = run(&trace);
+    let b = run(&trace);
+    assert_metrics_identical(&a, &b, "diurnal rerun");
+    assert!(a.completed + a.shed() == 48, "diurnal accounting");
+    let c1 = run(&replayed);
+    let c2 = run(&replayed);
+    assert_metrics_identical(&c1, &c2, "diurnal replay rerun");
 }

@@ -2,8 +2,9 @@
 # CI gate for the DART repo.
 #
 #   scripts/ci.sh           tier-1 gate: release build + tests + fmt/lint
-#                           + test-count regression guard
+#                           + test-count regression guard + docs gate
 #   scripts/ci.sh --smoke   tier-1 gate + fast fleet/calib smoke runs
+#                           + committed-study drift check (fleet-study)
 #
 # The tier-1 gate (ROADMAP.md) must stay green: `cargo build --release &&
 # cargo test -q`. rustfmt/clippy are checked when the components are
@@ -67,13 +68,23 @@ else
     echo "== lint: clippy not installed, skipping lint check =="
 fi
 
+# docs gate: rustdoc must build clean (broken intra-doc links and bad
+# examples are errors, not noise) — doctests themselves already ran
+# under `cargo test -q` above
+echo "== docs: cargo doc --no-deps (warnings as errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 if [[ "${1:-}" == "--smoke" ]]; then
     echo "== smoke: fleet_scaling bench (reduced trace) =="
     cargo bench --bench fleet_scaling -- --smoke
     echo "== smoke: calib_policies bench (reduced trace) =="
     cargo bench --bench calib_policies -- --smoke
+    echo "== smoke: fleet_study bench (reduced grid) =="
+    cargo bench --bench fleet_study -- --smoke
     echo "== smoke: serve-cluster 2 devices x 32 requests, calibrated =="
     cargo run --release -- serve-cluster --devices 2 --requests 32 --calibrated
+    echo "== docs: fleet-study regen check (committed study must not drift) =="
+    cargo run --release -- fleet-study --smoke
 fi
 
 echo "ci: OK"
