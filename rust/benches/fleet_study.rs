@@ -23,9 +23,10 @@ fn main() {
     } else {
         StudyConfig::reference(seed)
     };
-    println!("fleet_study: {} shapes x {} policies x 2 admission modes, \
-              {} requests/cell, seed {seed}\n",
-             cfg.shapes.len(), cfg.policies.len(), cfg.requests_per_cell);
+    println!("fleet_study: {} shapes x {} policies x 2 admission modes \
+              x {} schedules, {} requests/cell, seed {seed}\n",
+             cfg.shapes.len(), cfg.policies.len(), cfg.schedules.len(),
+             cfg.requests_per_cell);
 
     let result = StudyGrid::new(cfg).run();
 
@@ -40,7 +41,7 @@ fn main() {
                  shape.trace_len, shape.envelope.period_s);
         let mut t = Table::new(
             &format!("policy sweep — {}", shape.shape.name),
-            &["router", "admission", "shed", "attainment",
+            &["router", "admission", "schedule", "shed", "attainment",
               "goodput tok/s", "p95 TTFT", "padding", "util"]);
         for c in result.shape_cells(&shape.shape.name) {
             let m = &c.metrics;
@@ -48,6 +49,7 @@ fn main() {
                 lost += 1;
             }
             t.row(&[c.policy.name().into(), c.admission_label().into(),
+                    c.schedule.name().into(),
                     report::pct(m.shed_frac()),
                     report::pct(m.slo_attainment()),
                     report::f1(m.goodput_tps()),
@@ -57,14 +59,18 @@ fn main() {
         }
         t.print();
         for &policy in &result.cfg.policies {
-            let stat = result.cell(&shape.shape.name, policy, false);
-            let cal = result.cell(&shape.shape.name, policy, true);
-            if let (Some(s), Some(c)) = (stat, cal) {
-                if s.metrics.shed() != c.metrics.shed()
-                    || s.metrics.slo_met != c.metrics.slo_met
-                    || s.metrics.horizon_s != c.metrics.horizon_s
-                {
-                    any_admission_delta = true;
+            for &schedule in &result.cfg.schedules {
+                let stat =
+                    result.cell(&shape.shape.name, policy, false, schedule);
+                let cal =
+                    result.cell(&shape.shape.name, policy, true, schedule);
+                if let (Some(s), Some(c)) = (stat, cal) {
+                    if s.metrics.shed() != c.metrics.shed()
+                        || s.metrics.slo_met != c.metrics.slo_met
+                        || s.metrics.horizon_s != c.metrics.horizon_s
+                    {
+                        any_admission_delta = true;
+                    }
                 }
             }
         }

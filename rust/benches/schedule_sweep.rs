@@ -1,0 +1,190 @@
+//! Adaptive denoising schedules on the Table-4 sampling geometry:
+//! realized steps, end-to-end latency deltas, and steps-aware
+//! admission/batching pricing for `ConfidenceThreshold` / `SlowFast`
+//! vs `Fixed`.
+//!
+//!     cargo bench --bench schedule_sweep [-- --smoke]
+//!
+//! Three sections:
+//!   1. realized steps per block (synthetic confidence process, mean
+//!      over seeds) and the resulting analytic latency of the paper's
+//!      §6.2 reference workload billed at realized rather than
+//!      configured steps;
+//!   2. the same policies driven through the *real* sampling engine on
+//!      synthetic logits (per-step `confidence_argmax` + top-k commit),
+//!      proving the realized-step savings are not an artifact of the
+//!      pricing model;
+//!   3. a calibrated 2-device fleet serving one shared trace under each
+//!      schedule: admission and batching priced from the steps-aware
+//!      curve, reported as goodput/shed/horizon deltas vs `Fixed`.
+//!
+//! Exit is nonzero if any adaptive policy fails to realize fewer steps
+//! than `Fixed` or the fleet outcomes are indistinguishable — either
+//! would mean the schedule axis is measuring nothing.
+
+use dart::cli::Args;
+use dart::cluster::{chat_offered_rps, fleet_capacity_tps, generate_trace,
+                    Arrival, ClusterTopology, FleetSim, RoutePolicy,
+                    SloConfig, TraceSpec};
+use dart::config::{CacheMode, HwConfig, ModelArch, Workload};
+use dart::report::{self, Table};
+use dart::sampling::{self, SamplePrecision};
+use dart::schedule::{simulate_block, BlockRun, ScheduleSpec};
+use dart::sim::analytical::{AnalyticalSim, PrecisionConfig};
+use dart::util::SplitMix64;
+
+/// Drive one policy through real sampling on synthetic logits: a
+/// [rows, block_len] grid denoised with per-step `confidence_argmax`
+/// over V-wide logits; returns realized steps.
+fn realized_steps_real_sampling(spec: ScheduleSpec, rows: usize,
+                                block_len: usize, v: usize,
+                                max_steps: usize, seed: u64) -> usize {
+    let policy = spec.build();
+    let mask_id = -1i32;
+    let mut rng = SplitMix64::new(seed);
+    let mut x = vec![mask_id; rows * block_len];
+    let mut run = BlockRun::new(policy.as_ref(), rows, block_len, max_steps);
+    for t in 0..max_steps {
+        // logits sharpen as denoising progresses (growing sigma →
+        // growing top-1 softmax confidence) — the dynamic adaptive
+        // schedules exploit; Fixed ignores confidence and runs the cap
+        let z = rng.normal_vec(rows * block_len * v, 3.0 * (t + 1) as f32);
+        let (conf, idx) = sampling::confidence_argmax(
+            &z, rows * block_len, v, v, SamplePrecision::Fp32);
+        let kvec = run.step_commits(&x, &conf, mask_id);
+        let res = sampling::commit_block(&conf, &idx, &x, rows, block_len,
+                                         &kvec, mask_id);
+        x = res.x_new;
+        if run.record(&res.transfer) {
+            break;
+        }
+    }
+    run.steps()
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let seed = args.get_usize("seed", 7) as u64;
+    // Table 4 sampling geometry (B=16, L=32) over the §6.2 step cap;
+    // smoke shrinks the real-sampling vocab and the fleet trace
+    let (block_len, cap) = (32usize, 16usize);
+    let real_v = if smoke { 2_048 } else { 16_384 };
+    let real_rows = if smoke { 2 } else { 16 };
+    let n_requests = if smoke { 48 } else { 256 };
+
+    let schedules = [ScheduleSpec::Fixed, ScheduleSpec::conf_default(),
+                     ScheduleSpec::slowfast_default()];
+    println!("schedule_sweep: block_len {block_len}, step cap {cap}, \
+              real-sampling V={real_v} x {real_rows} rows, seed {seed}\n");
+
+    // ---- 1. expected steps + analytic latency ---------------------------
+    let w = Workload::paper_reference(ModelArch::llada_8b(),
+                                      CacheMode::Dual);
+    let sim = AnalyticalSim::new(HwConfig::dart_default(),
+                                 PrecisionConfig::dart_full_quant());
+    let fixed_total = sim
+        .run_scheduled(&w, ScheduleSpec::Fixed.expected_steps(
+            w.block_len as usize, w.steps_per_block as usize))
+        .total_s;
+    let mut t1 = Table::new(
+        "expected realized steps and billed latency (paper §6.2 reference)",
+        &["schedule", "steps/block", "total", "Δ vs fixed", "TPS"]);
+    let mut expected = Vec::new();
+    for spec in schedules {
+        let e = spec.expected_steps(w.block_len as usize,
+                                    w.steps_per_block as usize);
+        let r = sim.run_scheduled(&w, e);
+        t1.row(&[spec.name().into(), report::f1(e),
+                 dart::stats::fmt_time(r.total_s),
+                 report::signed_pct(r.total_s / fixed_total - 1.0),
+                 report::f1(r.tps)]);
+        expected.push((spec, e));
+    }
+    t1.print();
+
+    // ---- 2. realized steps on the real sampling engine ------------------
+    let mut t2 = Table::new(
+        "realized steps, real sampling on synthetic logits",
+        &["schedule", "realized/block (sim)", "realized/block (engine)",
+          "steps saved"]);
+    let mut engine_steps = Vec::new();
+    for (spec, _) in &expected {
+        let sim_steps =
+            simulate_block(spec.build().as_ref(), block_len, cap, seed)
+                .steps;
+        let real = realized_steps_real_sampling(
+            *spec, real_rows, block_len, real_v, cap, seed);
+        t2.row(&[spec.name().into(), sim_steps.to_string(),
+                 real.to_string(),
+                 report::pct(1.0 - real as f64 / cap as f64)]);
+        engine_steps.push((*spec, real));
+    }
+    t2.print();
+
+    // ---- 3. steps-aware admission/batching on a calibrated fleet --------
+    let ref_topo = ClusterTopology::homogeneous(
+        2, HwConfig::dart_default(), ModelArch::llada_8b(), CacheMode::Dual);
+    let capacity = fleet_capacity_tps(&ref_topo);
+    let rps = chat_offered_rps(capacity, 0.95);
+    let trace = generate_trace(
+        &TraceSpec::chat(n_requests, Arrival::Poisson { rps }, seed));
+    let mut t3 = Table::new(
+        "calibrated 2-device fleet, shared trace, steps-aware pricing",
+        &["schedule", "shed", "attainment", "goodput tok/s", "horizon",
+          "p95 TTFT"]);
+    let mut fleet = Vec::new();
+    for (spec, _) in &expected {
+        let mut topo = ClusterTopology::homogeneous(
+            2, HwConfig::dart_default(), ModelArch::llada_8b(),
+            CacheMode::Dual);
+        topo.schedule = *spec;
+        topo.calibrate();
+        // deadlines pinned to the fixed-schedule fleet so every
+        // schedule chases the same SLO on the same arrivals
+        let slo = SloConfig::auto(&ref_topo);
+        let m = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+            .run(&trace);
+        t3.row(&[spec.name().into(), report::pct(m.shed_frac()),
+                 report::pct(m.slo_attainment()),
+                 report::f1(m.goodput_tps()),
+                 dart::stats::fmt_time(m.horizon_s),
+                 dart::stats::fmt_time(m.ttft_p95())]);
+        fleet.push((*spec, m));
+    }
+    t3.print();
+
+    // ---- shape checks ----------------------------------------------------
+    let fixed_engine = engine_steps[0].1;
+    let mut failed = false;
+    for &(spec, steps) in &engine_steps[1..] {
+        if steps >= fixed_engine {
+            println!("FAIL: {} realized {steps} steps on the engine, \
+                      fixed realized {fixed_engine}", spec.name());
+            failed = true;
+        }
+    }
+    for &(spec, e) in &expected[1..] {
+        if e >= cap as f64 {
+            println!("FAIL: {} expected steps {e} not below the cap {cap}",
+                     spec.name());
+            failed = true;
+        }
+    }
+    let fixed_m = &fleet[0].1;
+    let any_fleet_delta = fleet[1..].iter().any(|(_, m)| {
+        m.horizon_s != fixed_m.horizon_s || m.shed() != fixed_m.shed()
+            || m.slo_met != fixed_m.slo_met
+    });
+    if !any_fleet_delta {
+        println!("FAIL: adaptive schedules were indistinguishable from \
+                  fixed on the fleet");
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("\nOK: adaptive schedules realize fewer steps than fixed \
+              (engine-verified) and the steps-aware pricing changes \
+              fleet outcomes");
+}

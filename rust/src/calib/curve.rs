@@ -63,12 +63,45 @@ pub struct LatencyCurve {
     pub device: String,
     /// sorted by (variant, bucket_lo)
     pub points: Vec<CurvePoint>,
+    /// configured denoising-step cap the cells were profiled at
+    pub steps_per_block: u64,
+    /// *realized* steps per block the profiling billed — the
+    /// expected-steps dimension: equal to `steps_per_block` for the
+    /// fixed schedule, smaller for adaptive schedules
+    /// ([`crate::schedule::ScheduleSpec::expected_steps`]). Consumers
+    /// that serve under a different schedule rescale lookups by
+    /// [`Self::step_scale`].
+    pub expected_steps: f64,
 }
 
 impl LatencyCurve {
     pub fn new(device: &str, mut points: Vec<CurvePoint>) -> Self {
         points.sort_by_key(|p| (p.variant, p.bucket_lo));
-        LatencyCurve { device: device.to_string(), points }
+        LatencyCurve {
+            device: device.to_string(),
+            points,
+            steps_per_block: 16,
+            expected_steps: 16.0,
+        }
+    }
+
+    /// Record which schedule the curve was profiled under (the
+    /// configured cap and the realized-steps expectation billed).
+    pub fn with_schedule(mut self, steps_per_block: u64,
+                         expected_steps: f64) -> Self {
+        self.steps_per_block = steps_per_block.max(1);
+        self.expected_steps = expected_steps
+            .clamp(1.0, self.steps_per_block as f64);
+        self
+    }
+
+    /// Latency multiplier for serving at `serving_expected_steps`
+    /// realized steps per block from a curve profiled at
+    /// [`Self::expected_steps`] (per-step-linear approximation; exactly
+    /// 1.0 when the schedules match, so matched pricing is untouched
+    /// bit-for-bit).
+    pub fn step_scale(&self, serving_expected_steps: f64) -> f64 {
+        serving_expected_steps.max(1.0) / self.expected_steps.max(1.0)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -166,11 +199,16 @@ impl LatencyCurve {
 
     // ---- persistence -----------------------------------------------------
 
-    /// Serialize to the replay format: `# dart-latency-curve v1` header,
-    /// a `device <name>` line, then one row per cell.
+    /// Serialize to the replay format: `# dart-latency-curve v2` header,
+    /// a `device <name>` line, a `schedule <cap> <expected>` line (the
+    /// expected-steps dimension), then one row per cell.
     pub fn to_text(&self) -> String {
-        let mut s = String::from("# dart-latency-curve v1\n");
+        let mut s = String::from("# dart-latency-curve v2\n");
         s.push_str(&format!("device {}\n", self.device));
+        // the schedule line is the expected-steps dimension; v1 files
+        // without it parse as fixed-16 (the historical profile point)
+        s.push_str(&format!("schedule {} {:.17e}\n",
+                            self.steps_per_block, self.expected_steps));
         s.push_str("# variant bucket_lo bucket_hi gen_tokens \
                     p50_total_s p95_total_s p50_first_s p95_first_s samples\n");
         for p in &self.points {
@@ -209,6 +247,7 @@ impl LatencyCurve {
     /// ```
     pub fn from_text(text: &str) -> Result<Self, String> {
         let mut device = String::from("unknown");
+        let mut schedule: Option<(u64, f64)> = None;
         let mut points = Vec::new();
         for (i, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
@@ -217,6 +256,21 @@ impl LatencyCurve {
             }
             if let Some(name) = line.strip_prefix("device ") {
                 device = name.trim().to_string();
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("schedule ") {
+                let f: Vec<&str> = rest.split_whitespace().collect();
+                let bad = || format!("curve line {}: bad schedule {line:?}",
+                                     i + 1);
+                if f.len() != 2 {
+                    return Err(bad());
+                }
+                let cap: u64 = f[0].parse().map_err(|_| bad())?;
+                let exp: f64 = f[1].parse().map_err(|_| bad())?;
+                if cap == 0 || !exp.is_finite() || exp <= 0.0 {
+                    return Err(bad());
+                }
+                schedule = Some((cap, exp));
                 continue;
             }
             let f: Vec<&str> = line.split_whitespace().collect();
@@ -247,7 +301,11 @@ impl LatencyCurve {
                 samples: f[8].parse().map_err(|_| err("samples"))?,
             });
         }
-        Ok(LatencyCurve::new(&device, points))
+        let mut curve = LatencyCurve::new(&device, points);
+        if let Some((cap, exp)) = schedule {
+            curve = curve.with_schedule(cap, exp);
+        }
+        Ok(curve)
     }
 
     /// Human-readable table for the `calibrate` CLI.
@@ -384,6 +442,33 @@ mod tests {
         assert!(LatencyCurve::from_text("x 96 256 64 1 1 1 1 5").is_err());
         assert!(LatencyCurve::from_text("1 96 256 64 nan 1 1 1 5").is_err());
         assert!(LatencyCurve::from_text("# only comments\n").unwrap().is_empty());
+        // malformed schedule metadata is an error, not a silent default
+        assert!(LatencyCurve::from_text("schedule 16\n").is_err());
+        assert!(LatencyCurve::from_text("schedule 0 16.0\n").is_err());
+        assert!(LatencyCurve::from_text("schedule 16 nan\n").is_err());
+    }
+
+    #[test]
+    fn schedule_dimension_roundtrips_and_defaults() {
+        // v1 files (no schedule line) parse as the historical fixed-16
+        // profile point
+        let v1 = LatencyCurve::from_text(
+            "device npu0\n1 96 256 128 0.01 0.012 0.003 0.004 5\n").unwrap();
+        assert_eq!(v1.steps_per_block, 16);
+        assert!((v1.expected_steps - 16.0).abs() < 1e-12);
+        // a recorded schedule survives the text roundtrip bit-exactly
+        let c = curve().with_schedule(16, 9.25);
+        let back = LatencyCurve::from_text(&c.to_text()).unwrap();
+        assert_eq!(back.steps_per_block, 16);
+        assert_eq!(back.expected_steps.to_bits(), 9.25f64.to_bits());
+        // step_scale: matched schedules price untouched, mismatched
+        // rescale per-step-linearly
+        assert_eq!(back.step_scale(9.25).to_bits(), 1.0f64.to_bits());
+        assert!((back.step_scale(18.5) - 2.0).abs() < 1e-12);
+        assert!(back.step_scale(4.0) < 1.0);
+        // with_schedule clamps the expectation into [1, cap]
+        let clamped = curve().with_schedule(8, 99.0);
+        assert!((clamped.expected_steps - 8.0).abs() < 1e-12);
     }
 
     #[test]

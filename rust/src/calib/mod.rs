@@ -24,6 +24,14 @@
 //! [`spot_check_sampling`] cross-validates it against the
 //! cycle-accurate simulator at a matched sampling shape (the Table 4
 //! methodology, callable in-process).
+//!
+//! Curves carry an **expected-steps dimension**
+//! ([`LatencyCurve::expected_steps`]): profiling bills the configured
+//! denoising schedule's expected *realized* steps per block
+//! ([`crate::schedule::ScheduleSpec::expected_steps`]) rather than the
+//! configured cap, and a curve replayed under a different schedule
+//! rescales per-step-linearly via [`LatencyCurve::step_scale`] — so
+//! admission and batching price variable-step requests honestly.
 
 pub mod curve;
 pub mod profiler;

@@ -16,6 +16,7 @@
 use crate::compiler::{sampling_program, SamplingLayout};
 use crate::config::{CacheMode, HwConfig, ModelArch, Workload};
 use crate::sampling::SamplePrecision;
+use crate::schedule::ScheduleSpec;
 use crate::sim::analytical::{AnalyticalSim, PrecisionConfig};
 use crate::sim::cycle::CycleSim;
 use crate::stats::quantile;
@@ -35,6 +36,10 @@ pub struct CalibConfig {
     pub samples_per_cell: usize,
     pub block_len: u64,
     pub steps_per_block: u64,
+    /// denoising-schedule policy the profile bills: cells are priced at
+    /// the policy's *expected realized* steps per block, and the curve
+    /// records that expectation ([`LatencyCurve::expected_steps`])
+    pub schedule: ScheduleSpec,
     pub seed: u64,
 }
 
@@ -54,6 +59,7 @@ impl CalibConfig {
             samples_per_cell: 5,
             block_len: 64,
             steps_per_block: 16,
+            schedule: ScheduleSpec::Fixed,
             seed: 0xCA11B,
         }
     }
@@ -98,7 +104,12 @@ impl Calibrator {
     }
 
     /// Profile every (variant, bucket) cell into a curve for `device`.
+    /// Cells are billed at the configured schedule's expected realized
+    /// steps per block (identical to the legacy fixed-cap pricing when
+    /// the schedule is [`ScheduleSpec::Fixed`]).
     pub fn profile(&self, device: &str) -> LatencyCurve {
+        let expected_steps = self.cfg.schedule.expected_steps(
+            self.cfg.block_len as usize, self.cfg.steps_per_block as usize);
         let mut points = Vec::new();
         for &variant in &self.cfg.variants {
             for &(lo, hi) in &self.cfg.buckets {
@@ -113,7 +124,8 @@ impl Calibrator {
                 let mut gen_sum = 0u64;
                 for _ in 0..n {
                     let w = self.draw_workload(&mut rng, variant, lo, hi);
-                    let total = self.sim.run(&w).total_s;
+                    let total =
+                        self.sim.run_scheduled(&w, expected_steps).total_s;
                     totals.push(total);
                     firsts.push(total / w.n_blocks().max(1) as f64);
                     gen_sum += w.gen_len;
@@ -132,6 +144,7 @@ impl Calibrator {
             }
         }
         LatencyCurve::new(device, points)
+            .with_schedule(self.cfg.steps_per_block, expected_steps)
     }
 }
 
@@ -251,6 +264,32 @@ mod tests {
         let a = c.measured_tokens_per_s().unwrap();
         let b = back.measured_tokens_per_s().unwrap();
         assert!(crate::util::rel_err(b, a) < 1e-6);
+        assert_eq!(back.steps_per_block, c.steps_per_block);
+        assert_eq!(back.expected_steps.to_bits(), c.expected_steps.to_bits());
+    }
+
+    #[test]
+    fn adaptive_schedule_profiles_cheaper_than_fixed() {
+        use crate::calib::curve::Pct;
+        let mk = |schedule| {
+            let mut cfg = CalibConfig::serving_default(&[1, 4]);
+            cfg.samples_per_cell = 3;
+            cfg.schedule = schedule;
+            Calibrator::new(HwConfig::dart_default(), ModelArch::llada_8b(),
+                            CacheMode::Dual, cfg).profile("npu0")
+        };
+        let fixed = mk(ScheduleSpec::Fixed);
+        let slowfast = mk(ScheduleSpec::slowfast_default());
+        // the fixed curve records the cap as its expectation; the
+        // adaptive curve records fewer realized steps and cheaper cells
+        assert!((fixed.expected_steps - 16.0).abs() < 1e-12);
+        assert!(slowfast.expected_steps < fixed.expected_steps);
+        let tf = fixed.total_s(4, 300, Pct::P50).unwrap();
+        let ts = slowfast.total_s(4, 300, Pct::P50).unwrap();
+        assert!(ts < tf, "slowfast {ts} vs fixed {tf}");
+        // measured pace speeds up correspondingly
+        assert!(slowfast.measured_tokens_per_s().unwrap()
+                > fixed.measured_tokens_per_s().unwrap());
     }
 
     #[test]

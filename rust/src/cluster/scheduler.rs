@@ -22,6 +22,13 @@
 //! ([`crate::coordinator::batcher::CostModel`]) built from the same
 //! curve — so heterogeneous edge+datacenter fleets are scheduled on
 //! what each device actually measures, not on a shared model.
+//!
+//! Both paths bill the fleet's denoising schedule
+//! ([`ClusterTopology::schedule`]) at its *expected realized* steps per
+//! block rather than the configured cap: the analytic service model
+//! runs [`crate::sim::analytical::AnalyticalSim::run_scheduled`], and
+//! curve lookups rescale by [`LatencyCurve::step_scale`] when the
+//! serving schedule differs from the one the curve was profiled under.
 
 use std::collections::HashMap;
 
@@ -94,6 +101,14 @@ pub(crate) struct ServiceModel {
     cache: crate::config::CacheMode,
     block_len: u64,
     steps_per_block: u64,
+    /// expected *realized* denoising steps per block under the fleet's
+    /// schedule policy — what every service quantity bills instead of
+    /// the configured cap (equal to the cap under `Fixed`)
+    expected_steps: f64,
+    /// latency multiplier for curve lookups: serving expectation over
+    /// the curve's profiled expectation (exactly 1.0 when the curve was
+    /// profiled under the serving schedule)
+    curve_scale: f64,
     memo: HashMap<(usize, usize, usize), (f64, f64)>,
     /// generated-tokens/s at the largest variant — the router's
     /// backlog→seconds conversion factor (measured p50 pace when a
@@ -107,12 +122,19 @@ impl ServiceModel {
     pub(crate) fn new(spec: &DeviceSpec, topo: &ClusterTopology) -> Self {
         let sim = AnalyticalSim::new(spec.hw.clone(),
                                      PrecisionConfig::dart_full_quant());
+        let expected_steps = topo.schedule.expected_steps(
+            topo.block_len as usize, topo.steps_per_block as usize);
+        let curve_scale = spec.curve.as_ref()
+            .map(|c| c.step_scale(expected_steps))
+            .unwrap_or(1.0);
         let mut m = ServiceModel {
             sim,
             model: topo.model.clone(),
             cache: spec.cache,
             block_len: topo.block_len,
             steps_per_block: topo.steps_per_block,
+            expected_steps,
+            curve_scale,
             memo: HashMap::new(),
             tokens_per_s: 1.0,
             curve: spec.curve.clone(),
@@ -124,7 +146,9 @@ impl ServiceModel {
         if let Some(tps) = m.curve.as_ref()
             .and_then(|c| c.measured_tokens_per_s())
         {
-            m.tokens_per_s = tps;
+            // measured pace reflects the curve's own schedule; rescale
+            // to the serving schedule (no-op on a matched profile)
+            m.tokens_per_s = tps / m.curve_scale.max(1e-9);
         }
         m
     }
@@ -132,22 +156,26 @@ impl ServiceModel {
     /// The TTFT service component the admission predictor uses:
     /// measured p95 first-block latency from the device curve when
     /// calibrated (a conservative tail estimate — the whole point of
-    /// the percentile predictor), analytic mean otherwise.
+    /// the percentile predictor), analytic mean otherwise. Curve
+    /// lookups are rescaled to the serving schedule's expected realized
+    /// steps, so variable-step requests are priced honestly even from a
+    /// fixed-schedule profile.
     pub(crate) fn first_block_p95(&mut self, variant: usize, prompt: usize,
                                   gen: usize) -> f64 {
         if let Some(c) = &self.curve {
             if let Some(f) = c.first_block_s(
                 variant, (prompt + gen) as u64, Pct::P95)
             {
-                return f;
+                return f * self.curve_scale;
             }
         }
         self.service(variant, prompt, gen).1
     }
 
     /// (total_s, first_block_s) for a batch of `variant` lanes padded to
-    /// `prompt` x `gen` tokens. First-block time is approximated as an
-    /// equal share across generation blocks.
+    /// `prompt` x `gen` tokens, billed at the schedule's expected
+    /// realized steps. First-block time is approximated as an equal
+    /// share across generation blocks.
     pub(crate) fn service(&mut self, variant: usize, prompt: usize,
                           gen: usize) -> (f64, f64) {
         if let Some(&hit) = self.memo.get(&(variant, prompt, gen)) {
@@ -162,7 +190,7 @@ impl ServiceModel {
             steps_per_block: self.steps_per_block,
             cache: self.cache,
         };
-        let total = self.sim.run(&w).total_s;
+        let total = self.sim.run_scheduled(&w, self.expected_steps).total_s;
         let first = total / w.n_blocks().max(1) as f64;
         self.memo.insert((variant, prompt, gen), (total, first));
         (total, first)
@@ -187,11 +215,21 @@ struct InFlight {
 impl SimDevice {
     fn new(spec: &DeviceSpec, topo: &ClusterTopology) -> Self {
         // a calibrated device drives its batcher with the measured
-        // variant costs at the curve's representative sequence length;
-        // uncalibrated devices keep the static policy
+        // variant costs at the curve's representative sequence length,
+        // rescaled to the serving schedule's expected realized steps
+        // (a no-op on a matched profile); uncalibrated devices keep the
+        // static policy
         let policy = match &spec.curve {
-            Some(curve) => FlushPolicy::CostBased(CostModel::from_pairs(
-                &curve.variant_costs(curve.mid_seq_len(), Pct::P50))),
+            Some(curve) => {
+                let scale = curve.step_scale(topo.schedule.expected_steps(
+                    topo.block_len as usize, topo.steps_per_block as usize));
+                let costs: Vec<(usize, f64)> = curve
+                    .variant_costs(curve.mid_seq_len(), Pct::P50)
+                    .into_iter()
+                    .map(|(v, s)| (v, s * scale))
+                    .collect();
+                FlushPolicy::CostBased(CostModel::from_pairs(&costs))
+            }
             None => FlushPolicy::Static,
         };
         let bcfg = BatcherConfig {
@@ -570,6 +608,70 @@ mod tests {
         let fa = analytic.first_block_p95(4, 128, 256);
         let (_, sa) = analytic.service(4, 128, 256);
         assert!((fa - sa).abs() < 1e-15);
+    }
+
+    #[test]
+    fn adaptive_schedule_prices_below_fixed_everywhere() {
+        use crate::schedule::ScheduleSpec;
+        // analytic path: the slowfast fleet prices service cheaper and
+        // paces faster than the fixed fleet at the same hardware point
+        let fixed = small_topo(1);
+        let mut fast = small_topo(1);
+        fast.schedule = ScheduleSpec::slowfast_default();
+        let mut svc_fixed = ServiceModel::new(&fixed.devices[0], &fixed);
+        let mut svc_fast = ServiceModel::new(&fast.devices[0], &fast);
+        let (tf, ff) = svc_fixed.service(4, 128, 256);
+        let (ta, fa) = svc_fast.service(4, 128, 256);
+        assert!(ta < tf, "adaptive total {ta} vs fixed {tf}");
+        assert!(fa < ff, "adaptive first {fa} vs fixed {ff}");
+        assert!(svc_fast.tokens_per_s > svc_fixed.tokens_per_s);
+
+        // calibrated path: a curve profiled under the serving schedule
+        // prices untouched (scale 1), and the p95 predictor follows the
+        // schedule down
+        let mut cal_fixed = small_topo(1);
+        cal_fixed.calibrate();
+        let mut cal_fast = small_topo(1);
+        cal_fast.schedule = ScheduleSpec::slowfast_default();
+        cal_fast.calibrate();
+        let mut m_fixed =
+            ServiceModel::new(&cal_fixed.devices[0], &cal_fixed);
+        let mut m_fast = ServiceModel::new(&cal_fast.devices[0], &cal_fast);
+        let pf = m_fixed.first_block_p95(4, 128, 256);
+        let pa = m_fast.first_block_p95(4, 128, 256);
+        assert!(pa < pf, "adaptive p95 {pa} vs fixed {pf}");
+
+        // cross-schedule replay: a fixed-profiled curve served under
+        // slowfast rescales lookups down instead of billing the cap
+        let mut replayed = small_topo(1);
+        replayed.calibrate(); // fixed-schedule curve
+        replayed.schedule = ScheduleSpec::slowfast_default();
+        let mut m_replay =
+            ServiceModel::new(&replayed.devices[0], &replayed);
+        let pr = m_replay.first_block_p95(4, 128, 256);
+        assert!(pr < pf, "rescaled replay {pr} vs fixed {pf}");
+    }
+
+    #[test]
+    fn adaptive_schedule_finishes_a_fixed_backlog_faster() {
+        use crate::schedule::ScheduleSpec;
+        let trace = saturating_trace(48);
+        let run = |schedule| {
+            let mut topo = small_topo(2);
+            topo.schedule = schedule;
+            let mut slo = SloConfig::auto(&topo);
+            slo.admission = false;
+            FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+                .run(&trace)
+        };
+        let fixed = run(ScheduleSpec::Fixed);
+        let fast = run(ScheduleSpec::slowfast_default());
+        assert_eq!(fixed.completed, 48);
+        assert_eq!(fast.completed, 48);
+        assert!(fast.horizon_s < fixed.horizon_s,
+                "slowfast horizon {} vs fixed {}", fast.horizon_s,
+                fixed.horizon_s);
+        assert!(fast.throughput_tps() > fixed.throughput_tps());
     }
 
     #[test]

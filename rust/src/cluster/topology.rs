@@ -11,6 +11,7 @@
 
 use crate::calib::{CalibConfig, Calibrator, LatencyCurve};
 use crate::config::{CacheMode, ConfigDoc, HwConfig, ModelArch};
+use crate::schedule::ScheduleSpec;
 
 /// Latency model for shipping a request from the router to a device:
 /// fixed per-hop latency plus serialization at link bandwidth. Token
@@ -80,6 +81,10 @@ pub struct ClusterTopology {
     pub model: ModelArch,
     pub block_len: u64,
     pub steps_per_block: u64,
+    /// fleet-wide denoising-schedule policy; the service models bill
+    /// the policy's expected realized steps instead of the configured
+    /// cap, and [`Self::calibrate`] profiles curves under it
+    pub schedule: ScheduleSpec,
     pub devices: Vec<DeviceSpec>,
     pub interconnect: InterconnectModel,
 }
@@ -105,6 +110,7 @@ impl ClusterTopology {
             model,
             block_len: 64,
             steps_per_block: 16,
+            schedule: ScheduleSpec::Fixed,
             devices,
             interconnect: InterconnectModel::pcie_gen4(),
         }
@@ -162,6 +168,7 @@ impl ClusterTopology {
             model,
             block_len: 64,
             steps_per_block: 16,
+            schedule: ScheduleSpec::Fixed,
             devices,
             interconnect: InterconnectModel::ethernet_100g(),
         }
@@ -186,6 +193,9 @@ impl ClusterTopology {
                         CalibConfig::serving_default(&d.batch_variants);
                     cfg.block_len = self.block_len;
                     cfg.steps_per_block = self.steps_per_block;
+                    // the curve is profiled under the fleet's schedule,
+                    // so admission/batching price realized steps
+                    cfg.schedule = self.schedule;
                     let cal = Calibrator::new(
                         d.hw.clone(), self.model.clone(), d.cache, cfg);
                     let c = cal.profile(&d.name);
@@ -244,7 +254,8 @@ impl ClusterTopology {
     /// Apply `[cluster]` overrides from a parsed config file:
     /// `devices`, `max_wait_ms`, `queue_capacity`, `variants` (comma
     /// list), `link` (pcie|nvlink|eth), `block_len`, `steps_per_block`,
-    /// `cache`. Device count changes replicate device 0's spec.
+    /// `schedule` (fixed|conf|slowfast), `cache`. Device count changes
+    /// replicate device 0's spec.
     pub fn apply_overrides(&mut self, doc: &ConfigDoc) {
         if let Some(n) = doc.get_u64("cluster", "devices") {
             let proto = self.devices[0].clone();
@@ -284,6 +295,11 @@ impl ClusterTopology {
         }
         if let Some(v) = doc.get_u64("cluster", "steps_per_block") {
             self.steps_per_block = v.max(1);
+        }
+        if let Some(s) = doc.get_str("cluster", "schedule") {
+            if let Some(spec) = ScheduleSpec::parse(s) {
+                self.schedule = spec;
+            }
         }
         if let Some(c) = doc.get_str("cluster", "cache") {
             if let Some(mode) = CacheMode::parse(c) {
@@ -446,6 +462,33 @@ block_len = 32
         assert!(!mismatched.is_calibrated());
         assert!(mismatched.devices[0].curve.is_none());
         assert!(mismatched.devices[1].curve.is_some());
+    }
+
+    #[test]
+    fn schedule_override_applies_and_curves_record_it() {
+        let doc = parse_config("[cluster]\nschedule = \"slowfast\"\n")
+            .unwrap();
+        let mut t = ClusterTopology::homogeneous(
+            1, HwConfig::dart_edge(), ModelArch::llada_8b(), CacheMode::Dual);
+        assert_eq!(t.schedule, ScheduleSpec::Fixed);
+        t.apply_overrides(&doc);
+        assert_eq!(t.schedule, ScheduleSpec::slowfast_default());
+        t.calibrate();
+        let curve = t.devices[0].curve.as_ref().unwrap();
+        // the profiled curve carries the adaptive expectation, priced
+        // below the fixed cap
+        assert!(curve.expected_steps < t.steps_per_block as f64,
+                "expected {} vs cap {}", curve.expected_steps,
+                t.steps_per_block);
+        let mut fixed = ClusterTopology::homogeneous(
+            1, HwConfig::dart_edge(), ModelArch::llada_8b(), CacheMode::Dual);
+        fixed.calibrate();
+        let fc = fixed.devices[0].curve.as_ref().unwrap();
+        assert!((fc.expected_steps - 16.0).abs() < 1e-12);
+        use crate::calib::Pct;
+        let a = curve.total_s(4, 300, Pct::P50).unwrap();
+        let b = fc.total_s(4, 300, Pct::P50).unwrap();
+        assert!(a < b, "slowfast {a} vs fixed {b}");
     }
 
     #[test]

@@ -9,7 +9,11 @@
 //! seed always yields the same trace, and "SlowFast"-style per-request
 //! cost variability enters through the length mix, not hidden state.
 //! The [`Diurnal`] envelope is a pure function of virtual time, so
-//! enveloped traces stay exactly as replayable as flat ones.
+//! enveloped traces stay exactly as replayable as flat ones; its
+//! optional length-mix modulation ([`Diurnal::with_length_mix`]) skews
+//! the mix long-form at night while staying close to the daily mean
+//! (exactly mean-preserving in weight space; see
+//! [`Diurnal::mix_weights_at`]).
 
 use crate::util::Lcg64;
 
@@ -28,13 +32,29 @@ pub struct Diurnal {
     /// `scale(t) = 1 − swing · cos(2π · t / period_s)`, so the rate
     /// swings between `(1 − swing)` and `(1 + swing)` times the base
     pub swing: f64,
+    /// optional time-of-day *length-mix* modulation in `[0, 1)`:
+    /// 0 (the default) leaves the mix flat; positive values upweight
+    /// long-generation classes at night (the rate trough) and
+    /// short-turn classes at the daytime peak — the "long-form at
+    /// night" shape that stresses the batcher differently from rate
+    /// swings alone. See [`Self::mix_weights_at`].
+    pub length_swing: f64,
 }
 
 impl Diurnal {
     /// The default day shape: an 0.85 swing (peak ≈ 12x the trough),
     /// matching the day/night amplitude of public serving traces.
+    /// Length-mix modulation is off; opt in with
+    /// [`Self::with_length_mix`].
     pub fn day(period_s: f64) -> Self {
-        Diurnal { period_s, swing: 0.85 }
+        Diurnal { period_s, swing: 0.85, length_swing: 0.0 }
+    }
+
+    /// Enable night-time length-mix modulation at `length_swing`
+    /// (clamped to `[0, 0.95]`).
+    pub fn with_length_mix(mut self, length_swing: f64) -> Self {
+        self.length_swing = length_swing.clamp(0.0, 0.95);
+        self
     }
 
     /// Envelope multiplier at time `t` (mean 1 over a full period,
@@ -42,6 +62,39 @@ impl Diurnal {
     pub fn scale(&self, t: f64) -> f64 {
         let phase = std::f64::consts::TAU * (t / self.period_s.max(1e-9));
         (1.0 - self.swing * phase.cos()).max(1e-3)
+    }
+
+    /// `+1` at the night trough (`t = 0`), `−1` at the daytime peak.
+    fn nightness(&self, t: f64) -> f64 {
+        (std::f64::consts::TAU * (t / self.period_s.max(1e-9))).cos()
+    }
+
+    /// Length-mix weights at time `t`: each entry's weight is scaled by
+    /// `1 + length_swing · nightness(t) · longness`, where `longness`
+    /// spans `[−1, +1]` from the shortest to the longest `gen_len` in
+    /// the mix; floors at 5% of the base weight so no class ever
+    /// vanishes. The modulation integrates to zero over a full period
+    /// in *weight* space, keeping the daily weight means on the base
+    /// mix; the realized selection mix is only approximately
+    /// mean-preserving — pick probabilities renormalize by the
+    /// time-varying weight sum, and a rate envelope concentrates
+    /// arrivals in the day phase — so offered token load under heavy
+    /// `length_swing` drifts a few percent from the flat-mix target
+    /// (by design: this knob exists to stress the batcher, not to hold
+    /// the operating point fixed).
+    pub fn mix_weights_at(&self, t: f64, mix: &[MixEntry]) -> Vec<f64> {
+        let night = self.nightness(t);
+        let min_g = mix.iter().map(|m| m.gen_len).min().unwrap_or(0);
+        let max_g = mix.iter().map(|m| m.gen_len).max().unwrap_or(0);
+        let span = (max_g - min_g).max(1) as f64;
+        mix.iter()
+            .map(|m| {
+                let longness =
+                    2.0 * ((m.gen_len - min_g) as f64 / span) - 1.0;
+                let mul = 1.0 + self.length_swing * night * longness;
+                (m.weight * mul).max(m.weight * 0.05)
+            })
+            .collect()
     }
 }
 
@@ -188,7 +241,15 @@ pub fn generate_trace(spec: &TraceSpec) -> Vec<TraceRequest> {
             Arrival::Uniform { .. } => 1.0 / rate,
             _ => rng.exp(rate),
         };
-        let m = spec.mix[rng.pick_weighted(&weights)];
+        // one weighted pick either way, so enabling the length-mix flag
+        // never shifts the RNG stream of the arrival process
+        let m = match spec.envelope.filter(|e| e.length_swing > 0.0) {
+            Some(env) => {
+                let w = env.mix_weights_at(t, &spec.mix);
+                spec.mix[rng.pick_weighted(&w)]
+            }
+            None => spec.mix[rng.pick_weighted(&weights)],
+        };
         out.push(TraceRequest {
             id,
             arrival_s: t,
@@ -384,8 +445,100 @@ mod tests {
             assert!(env.scale(10.0 * i as f64 / n as f64) > 0.0);
         }
         // full swing still floors above zero rather than stalling
-        let hard = Diurnal { period_s: 10.0, swing: 1.0 };
+        let hard = Diurnal { period_s: 10.0, swing: 1.0, length_swing: 0.0 };
         assert!(hard.scale(0.0) >= 1e-3);
+    }
+
+    #[test]
+    fn length_mix_modulation_is_deterministic_and_off_by_default() {
+        // off by default: an enveloped trace is bit-identical to the
+        // pre-flag behavior (the flag must not shift the RNG stream)
+        let flat = TraceSpec::chat(128, Arrival::Poisson { rps: 30.0 }, 9)
+            .with_envelope(Diurnal::day(8.0));
+        let zero = TraceSpec::chat(128, Arrival::Poisson { rps: 30.0 }, 9)
+            .with_envelope(Diurnal::day(8.0).with_length_mix(0.0));
+        assert_eq!(generate_trace(&flat), generate_trace(&zero));
+        // on: two runs of the same spec are bit-identical
+        let spec = TraceSpec::chat(512, Arrival::Poisson { rps: 30.0 }, 9)
+            .with_envelope(Diurnal::day(8.0).with_length_mix(0.8));
+        let a = generate_trace(&spec);
+        let b = generate_trace(&spec);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!((x.id, x.prompt_len, x.gen_len),
+                       (y.id, y.prompt_len, y.gen_len));
+        }
+    }
+
+    #[test]
+    fn night_half_skews_long_form() {
+        // long-form at night: mean gen length in the trough-phase half
+        // of the day must exceed the peak-phase half
+        let period = 8.0;
+        let spec = TraceSpec::chat(6000, Arrival::Poisson { rps: 80.0 }, 4)
+            .with_envelope(Diurnal::day(period).with_length_mix(0.9));
+        let trace = generate_trace(&spec);
+        let (mut night_sum, mut night_n) = (0usize, 0usize);
+        let (mut day_sum, mut day_n) = (0usize, 0usize);
+        for r in &trace {
+            let phase = (r.arrival_s / period).fract();
+            if (0.25..0.75).contains(&phase) {
+                day_sum += r.gen_len; // centered on the daytime crest
+                day_n += 1;
+            } else {
+                night_sum += r.gen_len;
+                night_n += 1;
+            }
+        }
+        let night_mean = night_sum as f64 / night_n.max(1) as f64;
+        let day_mean = day_sum as f64 / day_n.max(1) as f64;
+        assert!(night_mean > day_mean * 1.15,
+                "night {night_mean:.1} vs day {day_mean:.1}");
+        // ... while the flat-mix trace shows no such skew
+        let flat = generate_trace(
+            &TraceSpec::chat(6000, Arrival::Poisson { rps: 80.0 }, 4)
+                .with_envelope(Diurnal::day(period)));
+        let (mut fn_sum, mut fn_n, mut fd_sum, mut fd_n) = (0, 0usize, 0, 0usize);
+        for r in &flat {
+            let phase = (r.arrival_s / period).fract();
+            if (0.25..0.75).contains(&phase) {
+                fd_sum += r.gen_len;
+                fd_n += 1;
+            } else {
+                fn_sum += r.gen_len;
+                fn_n += 1;
+            }
+        }
+        let flat_ratio = (fn_sum as f64 / fn_n.max(1) as f64)
+            / (fd_sum as f64 / fd_n.max(1) as f64);
+        assert!(flat_ratio < 1.15, "flat mix skewed {flat_ratio:.2}");
+    }
+
+    #[test]
+    fn mix_weights_preserve_the_daily_mean() {
+        // the modulation must integrate to ~zero over a full period in
+        // weight space (selection probabilities additionally
+        // renormalize per pick and are only approximately preserved —
+        // documented on mix_weights_at)
+        let env = Diurnal::day(10.0).with_length_mix(0.9);
+        let mix = TraceSpec::chat(1, Arrival::Poisson { rps: 1.0 }, 0).mix;
+        let n = 10_000;
+        let mut sums = vec![0.0f64; mix.len()];
+        for i in 0..n {
+            let w = env.mix_weights_at(10.0 * i as f64 / n as f64, &mix);
+            for (s, v) in sums.iter_mut().zip(&w) {
+                *s += v;
+            }
+        }
+        for (s, m) in sums.iter().zip(&mix) {
+            let mean = s / n as f64;
+            assert!((mean - m.weight).abs() < 0.02 * m.weight.max(0.05),
+                    "mean weight {mean} vs base {}", m.weight);
+        }
+        // weights never go non-positive even at full swing
+        let w0 = env.mix_weights_at(0.0, &mix);
+        assert!(w0.iter().all(|&v| v > 0.0));
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::config::CacheMode;
 use crate::kvcache::{KvCache, KvQuantPolicy, KvShape};
 use crate::runtime::{Executor, Tensor};
 use crate::sampling::{self, SamplePrecision};
+use crate::schedule::{BlockRun, ScheduleSpec, StepTrace};
 
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
@@ -18,6 +19,9 @@ pub struct EngineConfig {
     pub kv_policy: KvQuantPolicy,
     pub sample_precision: SamplePrecision,
     pub v_chunk: usize,
+    /// denoising-schedule policy; `Fixed` reproduces the pre-schedule
+    /// engine bit-exactly, adaptive policies early-exit blocks
+    pub schedule: ScheduleSpec,
 }
 
 impl Default for EngineConfig {
@@ -27,6 +31,7 @@ impl Default for EngineConfig {
             kv_policy: KvQuantPolicy::fp32(),
             sample_precision: SamplePrecision::Fp32,
             v_chunk: 128,
+            schedule: ScheduleSpec::Fixed,
         }
     }
 }
@@ -38,8 +43,12 @@ pub struct GenerationResult {
     pub tokens: Vec<Vec<i32>>,
     pub model_s: f64,
     pub sampling_s: f64,
+    /// model forwards actually run (== configured under `Fixed`,
+    /// fewer under adaptive schedules)
     pub steps: usize,
     pub kv_packed_bytes: u64,
+    /// realized steps per block under the configured schedule policy
+    pub step_trace: StepTrace,
 }
 
 impl GenerationResult {
@@ -109,15 +118,18 @@ impl GenerationEngine {
         };
         let kv_dims = self.ex.manifest.kv_dims(b);
         let mut cache = KvCache::new(self.cfg.cache, self.cfg.kv_policy);
-        let ks = sampling::num_transfer_tokens(g.block_len, g.steps_per_block);
+        let policy = self.cfg.schedule.build();
 
         let mut model_s = 0.0;
         let mut sampling_s = 0.0;
         let mut steps = 0usize;
+        let mut step_trace = StepTrace::new(policy.name());
 
         for blk in 0..g.n_blocks {
             let s_n = g.prompt_len + blk * g.block_len;
             let e_n = s_n + g.block_len;
+            let mut run = BlockRun::new(policy.as_ref(), b, g.block_len,
+                                        g.steps_per_block);
             for t in 0..g.steps_per_block {
                 let t0 = Instant::now();
                 let warm = t == 0 || self.cfg.cache == CacheMode::None;
@@ -173,13 +185,17 @@ impl GenerationEngine {
                 };
                 model_s += t0.elapsed().as_secs_f64();
 
-                // sampling stage: the Rust Vector-Scalar engine
+                // sampling stage: the Rust Vector-Scalar engine — phase
+                // 1 first, so the schedule policy sees the live
+                // confidence vector before choosing per-row commits
                 let t1 = Instant::now();
                 let x_act = self.active_block(&x, b, s_n, e_n, g.total_len);
-                let kvec = vec![ks[t]; b];
-                let res = sampling::sample_block(
-                    &logits, &x_act, b, g.block_len, g.vocab, &kvec,
-                    g.mask_id, self.cfg.v_chunk, self.cfg.sample_precision);
+                let (conf, idx) = sampling::confidence_argmax(
+                    &logits, b * g.block_len, g.vocab, self.cfg.v_chunk,
+                    self.cfg.sample_precision);
+                let kvec = run.step_commits(&x_act, &conf, g.mask_id);
+                let res = sampling::commit_block(
+                    &conf, &idx, &x_act, b, g.block_len, &kvec, g.mask_id);
                 for bi in 0..b {
                     let dst = bi * g.total_len + s_n;
                     x[dst..dst + g.block_len].copy_from_slice(
@@ -187,7 +203,14 @@ impl GenerationEngine {
                 }
                 sampling_s += t1.elapsed().as_secs_f64();
                 steps += 1;
+                if run.record(&res.transfer) {
+                    // every row of the block is committed — skip the
+                    // remaining configured steps (a no-op under Fixed,
+                    // whose schedule exhausts the mask on the last step)
+                    break;
+                }
             }
+            step_trace.blocks.push(run.finish(blk));
         }
 
         let tokens = (0..b)
@@ -199,6 +222,7 @@ impl GenerationEngine {
             sampling_s,
             steps,
             kv_packed_bytes: cache.packed_bytes(),
+            step_trace,
         })
     }
 

@@ -16,6 +16,12 @@
 //! * [`sampling`] — the Vector-Scalar sampling engine golden model:
 //!   Stable-Max decomposition, streaming top-k, masked integer update
 //!   (paper §3.2);
+//! * [`schedule`] — adaptive denoising schedules: the
+//!   [`schedule::SchedulePolicy`] trait (fixed / confidence-threshold /
+//!   SlowFast stepping), deterministic [`schedule::StepTrace`] records,
+//!   and the synthetic confidence process that prices expected realized
+//!   steps for every cost model above (`schedule_sweep` in the benches,
+//!   `--schedule` on the serving CLIs);
 //! * [`quant`] / [`kvcache`] — bit-exact MX formats, BAOS online
 //!   smoothing, and the blocked-diffusion KV cache manager
 //!   (paper §2.2, §3.1.1, §4.4);
@@ -61,6 +67,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod sampling;
+pub mod schedule;
 pub mod sim;
 pub mod stats;
 pub mod study;

@@ -27,6 +27,7 @@ use dart::kvcache::KvQuantPolicy;
 use dart::quant::BaosVariant;
 use dart::report::{self, Table};
 use dart::sampling::SamplePrecision;
+use dart::schedule::ScheduleSpec;
 use dart::sim::analytical::{AnalyticalSim, PrecisionConfig};
 use dart::util::SplitMix64;
 
@@ -45,19 +46,23 @@ fn main() {
         Some("area") => cmd_area(&args),
         _ => {
             eprintln!("usage: dart <serve|serve-cluster|calibrate|fleet-study|generate|simulate|sweep|hbm|asm|area> [flags]");
-            eprintln!("  serve     --requests N --cache MODE --kv POLICY");
+            eprintln!("  serve     --requests N --cache MODE --kv POLICY \
+                       --schedule fixed|conf|slowfast");
             eprintln!("  serve-cluster --devices N --requests N --rate RPS \
                        --arrival poisson|bursty|uniform --router least|rr|variant");
             eprintln!("                --load FRAC --ttft-slo-ms N --tpot-slo-ms N \
                        --no-admission --seed N --calibrated --curve FILE");
             eprintln!("                --trace-out FILE | --replay FILE \
                        --link pcie|nvlink|eth --config FILE --diurnal [SECS]");
+            eprintln!("                --length-mix SWING \
+                       --schedule fixed|conf|slowfast");
             eprintln!("  fleet-study --seed N --out FILE --requests N \
                        --load FRAC | --smoke");
             eprintln!("  calibrate --presets default,edge --variants \"1,2,4,8,16\" \
                        --samples N --model M --cache MODE");
             eprintln!("            --out PREFIX --spot-check");
-            eprintln!("  generate  --cache MODE --batch B");
+            eprintln!("  generate  --cache MODE --batch B \
+                       --schedule fixed|conf|slowfast");
             eprintln!("  simulate  --model llada8b|moe --cache MODE");
             eprintln!("  sweep     --model llada8b|moe");
             eprintln!("  hbm       --stacks 2|4 --fidelity ideal|physical");
@@ -85,6 +90,11 @@ fn hw_from(args: &Args) -> HwConfig {
 
 fn cache_from(args: &Args) -> CacheMode {
     CacheMode::parse(args.get_or("cache", "dual")).expect("bad --cache")
+}
+
+fn schedule_from(args: &Args) -> ScheduleSpec {
+    ScheduleSpec::parse(args.get_or("schedule", "fixed"))
+        .expect("bad --schedule (fixed|conf|slowfast)")
 }
 
 fn model_from(args: &Args) -> ModelArch {
@@ -117,6 +127,7 @@ fn cmd_serve(args: &Args) -> i32 {
         sample_precision: SamplePrecision::parse(
             args.get_or("sampling", "fp32")).expect("bad --sampling"),
         v_chunk: args.get_usize("v-chunk", 128),
+        schedule: schedule_from(args),
     };
     println!("starting coordinator ({:?}) ...", cfg.cache);
     let coord = Coordinator::start(&dir, cfg, None).expect("coordinator");
@@ -148,6 +159,8 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
     let n_devices = args.get_usize("devices", 4);
     let mut topo = ClusterTopology::homogeneous(
         n_devices, hw_from(args), model_from(args), cache_from(args));
+    // denoising schedule before calibration, so curves profile under it
+    topo.schedule = schedule_from(args);
     if let Some(link) = args.get("link") {
         topo.interconnect = dart::cluster::InterconnectModel::parse(link)
             .expect("bad --link (pcie|nvlink|eth)");
@@ -171,8 +184,9 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
 
     // optional diurnal envelope over the base arrival process:
     // --diurnal SECS sets the day period, bare --diurnal fits two
-    // simulated days into the expected trace span
-    let envelope = if let Some(p) = args.get("diurnal") {
+    // simulated days into the expected trace span; --length-mix SWING
+    // additionally skews the length mix long-form at night
+    let mut envelope = if let Some(p) = args.get("diurnal") {
         Some(dart::cluster::Diurnal::day(
             p.parse().expect("--diurnal expects seconds")))
     } else if args.has("diurnal") {
@@ -180,6 +194,13 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
     } else {
         None
     };
+    if let Some(swing) = args.get("length-mix") {
+        let swing: f64 = swing.parse().expect("--length-mix expects a \
+                                               fraction in [0, 1)");
+        envelope = Some(envelope
+            .expect("--length-mix needs --diurnal")
+            .with_length_mix(swing));
+    }
 
     // replay ignores the generator knobs (--requests/--arrival/--rate/
     // --diurnal): the trace file is the offered load, and the header
@@ -194,6 +215,10 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
         if let Some(env) = envelope {
             spec = spec.with_envelope(env);
             desc.push_str(&format!(", diurnal period {:.1}s", env.period_s));
+            if env.length_swing > 0.0 {
+                desc.push_str(&format!(", length-mix swing {:.2}",
+                                       env.length_swing));
+            }
         }
         (cluster::generate_trace(&spec), desc)
     };
@@ -239,11 +264,17 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
     let policy = RoutePolicy::parse(args.get_or("router", "least"))
         .expect("bad --router (least|rr|variant)");
 
-    println!("== DART fleet: {} devices x {}, {} cache, {} router ==",
+    println!("== DART fleet: {} devices x {}, {} cache, {} router, \
+              {} schedule ==",
              topo.n_devices(), topo.model.name,
-             topo.devices[0].cache.name(), policy.name());
-    println!("trace: {} requests, {}, fleet capacity ~{:.0} tok/s",
-             trace.len(), trace_desc, capacity_tps);
+             topo.devices[0].cache.name(), policy.name(),
+             topo.schedule.name());
+    println!("trace: {} requests, {}, fleet capacity ~{:.0} tok/s \
+              (expected {:.1}/{} steps per block)",
+             trace.len(), trace_desc, capacity_tps,
+             topo.schedule.expected_steps(topo.block_len as usize,
+                                          topo.steps_per_block as usize),
+             topo.steps_per_block);
     println!("SLO: TTFT <= {:.0} ms, TPOT <= {:.2} ms/tok, admission {}\n",
              slo.ttft_s * 1e3, slo.tpot_s * 1e3,
              if slo.admission { "on" } else { "off" });
@@ -356,7 +387,7 @@ fn cmd_fleet_study(args: &Args) -> i32 {
     cfg.requests_per_cell =
         args.get_usize("requests", cfg.requests_per_cell);
     cfg.load = args.get_f64("load", cfg.load);
-    let n_cells = cfg.shapes.len() * cfg.policies.len() * 2;
+    let n_cells = cfg.n_cells();
 
     // check mode reads the committed file *before* the (minutes-long)
     // grid run so a missing or unreadable file fails immediately
@@ -377,14 +408,16 @@ fn cmd_fleet_study(args: &Args) -> i32 {
     };
 
     eprintln!("fleet-study: {} shapes x {} policies x 2 admission modes \
-               = {} cells, seed {}",
-              cfg.shapes.len(), cfg.policies.len(), n_cells, seed);
+               x {} schedules = {} cells, seed {}",
+              cfg.shapes.len(), cfg.policies.len(), cfg.schedules.len(),
+              n_cells, seed);
     let mut done = 0usize;
     let result = StudyGrid::new(cfg).run_with_progress(|cell| {
         done += 1;
-        eprintln!("  [{done}/{n_cells}] {} / {} / {}: goodput {:.1} tok/s, \
-                   shed {:.1}%",
-                  cell.shape, cell.policy.name(), cell.admission_label(),
+        eprintln!("  [{done}/{n_cells}] {} / {} / {} / {}: goodput \
+                   {:.1} tok/s, shed {:.1}%",
+                  cell.shape, cell.policy.name(), cell.schedule.name(),
+                  cell.admission_label(),
                   cell.metrics.goodput_tps(),
                   100.0 * cell.metrics.shed_frac());
     });
@@ -427,6 +460,7 @@ fn cmd_generate(args: &Args) -> i32 {
     let mut eng = dart::coordinator::GenerationEngine::new(ex, EngineConfig {
         cache: cache_from(args),
         kv_policy: kv_policy_from(args),
+        schedule: schedule_from(args),
         ..EngineConfig::default()
     });
     let b = args.get_usize("batch", 1);
@@ -438,9 +472,12 @@ fn cmd_generate(args: &Args) -> i32 {
     for row in &r.tokens {
         println!("{row:?}");
     }
-    println!("model {:.1} ms  sampling {:.1} ms ({:.1}%)  steps {}",
+    println!("model {:.1} ms  sampling {:.1} ms ({:.1}%)  steps {}/{} \
+              ({} schedule, {:.0}% steps saved)",
              r.model_s * 1e3, r.sampling_s * 1e3,
-             r.sampling_frac() * 100.0, r.steps);
+             r.sampling_frac() * 100.0, r.step_trace.realized_steps(),
+             r.step_trace.configured_steps(), r.step_trace.policy,
+             r.step_trace.savings_frac() * 100.0);
     0
 }
 

@@ -158,18 +158,21 @@ pub struct SampleResult {
     pub transfer: Vec<bool>,
 }
 
-/// Full Alg. 2 intra-block step over a [B, L, V] logit tensor.
+/// Phases 3–4 of Alg. 2 over precomputed phase-1 outputs: top-k
+/// commitment and masked update for a [B, L] grid, given the per-position
+/// confidences and argmaxes that [`confidence_argmax`] produced.
 ///
-/// `x` is the current [B, L] token grid; `k[b]` tokens are committed per
-/// row. Returns the updated grid plus the intermediate tensors (the
-/// cycle simulator cross-checks against these).
-pub fn sample_block(z: &[f32], x: &[i32], b: usize, l: usize, v: usize,
-                    k: &[usize], mask_id: i32, v_chunk: usize,
-                    prec: SamplePrecision) -> SampleResult {
-    assert_eq!(z.len(), b * l * v);
+/// Split out of [`sample_block`] so a schedule policy
+/// ([`crate::schedule::SchedulePolicy`]) can observe the live confidence
+/// vector *before* choosing how many tokens each row commits this step
+/// — the commit path itself is byte-for-byte the one `sample_block`
+/// always ran.
+pub fn commit_block(conf: &[f32], idx: &[u32], x: &[i32], b: usize,
+                    l: usize, k: &[usize], mask_id: i32) -> SampleResult {
+    assert_eq!(conf.len(), b * l);
+    assert_eq!(idx.len(), b * l);
     assert_eq!(x.len(), b * l);
     assert_eq!(k.len(), b);
-    let (conf, idx) = confidence_argmax(z, b * l, v, v_chunk, prec);
     let argmax: Vec<i32> = idx.iter().map(|&i| i as i32).collect();
     let mut x_new = Vec::with_capacity(b * l);
     let mut transfer_all = Vec::with_capacity(b * l);
@@ -185,15 +188,63 @@ pub fn sample_block(z: &[f32], x: &[i32], b: usize, l: usize, v: usize,
         x_new.extend_from_slice(&xn);
         transfer_all.extend_from_slice(&transfer);
     }
-    SampleResult { x_new, conf, argmax, transfer: transfer_all }
+    SampleResult { x_new, conf: conf.to_vec(), argmax,
+                   transfer: transfer_all }
 }
 
+/// Full Alg. 2 intra-block step over a [B, L, V] logit tensor.
+///
+/// `x` is the current [B, L] token grid; `k[b]` tokens are committed per
+/// row. Returns the updated grid plus the intermediate tensors (the
+/// cycle simulator cross-checks against these).
+pub fn sample_block(z: &[f32], x: &[i32], b: usize, l: usize, v: usize,
+                    k: &[usize], mask_id: i32, v_chunk: usize,
+                    prec: SamplePrecision) -> SampleResult {
+    assert_eq!(z.len(), b * l * v);
+    let (conf, idx) = confidence_argmax(z, b * l, v, v_chunk, prec);
+    commit_block(&conf, &idx, x, b, l, k, mask_id)
+}
+
+/// An invalid fixed transfer schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleError {
+    /// `steps == 0` — the per-step division is undefined.
+    ZeroSteps,
+    /// `steps > block_len` — the tail steps would commit zero tokens
+    /// (each a full model forward that changes nothing).
+    StepsExceedBlock { block_len: usize, steps: usize },
+}
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleError::ZeroSteps =>
+                write!(f, "transfer schedule needs at least one step"),
+            ScheduleError::StepsExceedBlock { block_len, steps } =>
+                write!(f, "{steps} steps over a {block_len}-token block \
+                           would run zero-token steps"),
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
+
 /// The LLaDA transfer schedule: tokens committed at each of `steps`
-/// denoising steps for a block of `block_len` (remainder to early steps).
-pub fn num_transfer_tokens(block_len: usize, steps: usize) -> Vec<usize> {
+/// denoising steps for a block of `block_len` (remainder to early
+/// steps). Validated: `steps == 0` (division by zero) and
+/// `steps > block_len` (zero-token steps) are errors, so every returned
+/// schedule sums to `block_len` with every entry positive.
+pub fn num_transfer_tokens(block_len: usize, steps: usize)
+                           -> Result<Vec<usize>, ScheduleError> {
+    if steps == 0 {
+        return Err(ScheduleError::ZeroSteps);
+    }
+    if steps > block_len {
+        return Err(ScheduleError::StepsExceedBlock { block_len, steps });
+    }
     let base = block_len / steps;
     let rem = block_len % steps;
-    (0..steps).map(|t| base + usize::from(t < rem)).collect()
+    Ok((0..steps).map(|t| base + usize::from(t < rem)).collect())
 }
 
 #[cfg(test)]
@@ -339,8 +390,73 @@ mod tests {
 
     #[test]
     fn transfer_schedule() {
-        assert_eq!(num_transfer_tokens(16, 8), vec![2; 8]);
-        assert_eq!(num_transfer_tokens(7, 3), vec![3, 2, 2]);
-        assert_eq!(num_transfer_tokens(16, 5).iter().sum::<usize>(), 16);
+        assert_eq!(num_transfer_tokens(16, 8).unwrap(), vec![2; 8]);
+        assert_eq!(num_transfer_tokens(7, 3).unwrap(), vec![3, 2, 2]);
+        assert_eq!(num_transfer_tokens(16, 5).unwrap()
+                       .iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn transfer_schedule_rejects_degenerate_steps() {
+        // steps == 0 used to divide by zero; steps > block_len used to
+        // emit zero-token steps (wasted full model forwards)
+        assert_eq!(num_transfer_tokens(16, 0), Err(ScheduleError::ZeroSteps));
+        assert_eq!(num_transfer_tokens(4, 9),
+                   Err(ScheduleError::StepsExceedBlock {
+                       block_len: 4, steps: 9 }));
+        // the boundary is valid: one token per step
+        assert_eq!(num_transfer_tokens(4, 4).unwrap(), vec![1; 4]);
+        assert_eq!(num_transfer_tokens(1, 1).unwrap(), vec![1]);
+        // errors render for CLI surfaces
+        assert!(ScheduleError::ZeroSteps.to_string().contains("step"));
+        assert!(num_transfer_tokens(4, 9).unwrap_err().to_string()
+                    .contains("zero-token"));
+    }
+
+    #[test]
+    fn transfer_schedule_entries_all_positive_and_sum_to_block() {
+        crate::stats::prop_check("validated schedule shape", 64, |rng| {
+            let block = 1 + (rng.next_u64() % 96) as usize;
+            let steps = 1 + (rng.next_u64() % block as u64) as usize;
+            (block, steps)
+        }, |&(block, steps)| {
+            let ks = num_transfer_tokens(block, steps)
+                .map_err(|e| e.to_string())?;
+            if ks.len() != steps {
+                return Err(format!("{} entries for {steps} steps", ks.len()));
+            }
+            if ks.iter().sum::<usize>() != block {
+                return Err(format!("sum {} != {block}",
+                                   ks.iter().sum::<usize>()));
+            }
+            if ks.iter().any(|&k| k == 0) {
+                return Err("zero-token step in validated schedule".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn commit_block_matches_sample_block_exactly() {
+        // the split phase-1 / phase-3–4 path must be bit-identical to
+        // the fused sample_block (the schedule layer relies on this)
+        let mut rng = SplitMix64::new(5);
+        let (b, l, v) = (3usize, 12usize, 96usize);
+        let z = rng.normal_vec(b * l * v, 3.0);
+        let mut x = vec![0i32; b * l];
+        x[2] = 9;
+        x[15] = 11;
+        let k = [2usize, 4, 6];
+        let fused = sample_block(&z, &x, b, l, v, &k, 0, 32,
+                                 SamplePrecision::Fp32);
+        let (conf, idx) = confidence_argmax(&z, b * l, v, 32,
+                                            SamplePrecision::Fp32);
+        let split = commit_block(&conf, &idx, &x, b, l, &k, 0);
+        assert_eq!(split.x_new, fused.x_new);
+        assert_eq!(split.transfer, fused.transfer);
+        assert_eq!(split.argmax, fused.argmax);
+        for (a, bb) in split.conf.iter().zip(&fused.conf) {
+            assert_eq!(a.to_bits(), bb.to_bits());
+        }
     }
 }

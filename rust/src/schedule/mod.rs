@@ -1,0 +1,41 @@
+//! Adaptive denoising schedules: how many sampling steps actually run.
+//!
+//! The paper's engine inherits LLaDA's *fixed* per-block transfer
+//! schedule ([`crate::sampling::num_transfer_tokens`]): every block runs
+//! exactly `steps_per_block` model forwards no matter what the
+//! confidences say. But the dominant lever on dLLM sampling latency is
+//! the realized step count — SlowFast Sampling (arXiv:2506.10848) shows
+//! confidence-driven schedules cut steps multi-fold with negligible
+//! quality loss. This subsystem makes the step count a policy:
+//!
+//! * [`policy`] — the [`SchedulePolicy`] trait and its three
+//!   implementations: [`Fixed`] (bit-exact reproduction of the
+//!   pre-schedule engine), [`ConfidenceThreshold`] (commit everything
+//!   above τ, capped per step, early-exit the block when done) and
+//!   [`SlowFast`] (exploratory slow steps, then capped fast cascades);
+//!   plus [`ScheduleSpec`], the copyable description configs, CLI flags
+//!   and study grids carry.
+//! * [`trace`] — [`BlockRun`], the batched per-block driver the
+//!   generation engine steps through, and [`StepTrace`], the
+//!   deterministic record of realized steps per block.
+//! * [`sim`] — the seeded synthetic confidence process (substitution
+//!   S8) that prices a policy's *expected* realized steps for the
+//!   analytic serving stack: [`crate::sim::analytical::AnalyticalSim::run_scheduled`]
+//!   bills realized rather than configured steps, calibration records
+//!   the expectation on every [`crate::calib::LatencyCurve`], and the
+//!   cluster scheduler's admission/batching price variable-step
+//!   requests from it.
+//!
+//! The policy decides *how many* tokens commit; *which* tokens is
+//! always the sampling engine's streaming top-k — so every schedule
+//! inherits the paper's Alg. 2 semantics, and `Fixed` is bit-identical
+//! to the seed engine (`rust/tests/schedule_equivalence.rs`).
+
+pub mod policy;
+pub mod sim;
+pub mod trace;
+
+pub use policy::{BlockStepper, ConfidenceThreshold, Fixed, SchedulePolicy,
+                 ScheduleSpec, SlowFast};
+pub use sim::{mean_realized_steps, simulate_block};
+pub use trace::{BlockRun, BlockTrace, StepTrace};

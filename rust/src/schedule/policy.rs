@@ -1,0 +1,398 @@
+//! Schedule policies: how many tokens each row commits at each
+//! denoising step.
+//!
+//! A policy sees only what the hardware sampling engine already
+//! produces — the live confidence vector of the still-masked positions
+//! ([`crate::sampling::confidence_argmax`]) — and answers one question
+//! per step: *how many* tokens should this row commit now? *Which*
+//! tokens is never the policy's call: the commit path is always the
+//! engine's streaming top-k ([`crate::sampling::commit_block`]), so
+//! every policy inherits the paper's tie-breaking and masking semantics
+//! unchanged.
+//!
+//! Three policies:
+//!
+//! * [`Fixed`] — the LLaDA transfer schedule
+//!   ([`crate::sampling::num_transfer_tokens`]); bit-exact reproduction
+//!   of the pre-schedule engine.
+//! * [`ConfidenceThreshold`] — commit every token whose confidence
+//!   clears `tau`, capped per step; early-exit the block when nothing
+//!   is left.
+//! * [`SlowFast`] — a few exploratory slow steps (at most one cautious
+//!   commit each), then capped fast cascades (SlowFast Sampling,
+//!   arXiv:2506.10848).
+//!
+//! Termination contract: every stepper tracks the *forced floor* — the
+//! minimum number of commits that keeps the block finishable inside the
+//! configured step cap given each future step's commit capacity — so
+//! adaptive schedules never blow the cap, and only ever commit a
+//! below-threshold token when that floor forces them to.
+
+use crate::sampling::num_transfer_tokens;
+
+/// Per-block stepping state produced by [`SchedulePolicy::begin_block`].
+///
+/// `commits` is called once per denoising step with the confidences of
+/// the row's still-masked positions (unsorted, in position order) and
+/// returns how many of them to commit this step; the caller commits the
+/// top-`k` by confidence. A return of 0 is a pure refinement step (a
+/// model forward that commits nothing).
+pub trait BlockStepper {
+    fn commits(&mut self, masked_conf: &[f32]) -> usize;
+}
+
+/// A denoising-schedule policy: builds per-row steppers and prices its
+/// own expected realized steps for the analytic serving stack.
+pub trait SchedulePolicy {
+    fn name(&self) -> &'static str;
+
+    /// Fresh stepping state for one row of one `block_len`-token block
+    /// with at most `max_steps` denoising steps.
+    fn begin_block(&self, block_len: usize, max_steps: usize)
+                   -> Box<dyn BlockStepper>;
+
+    /// Expected realized steps per block — what the cost models bill
+    /// instead of the configured cap. Defaults to driving this policy
+    /// through the seeded synthetic confidence process
+    /// ([`super::sim::mean_realized_steps`]); [`Fixed`] overrides with
+    /// the exact count.
+    fn expected_steps(&self, block_len: usize, max_steps: usize) -> f64
+    where
+        Self: Sized,
+    {
+        super::sim::mean_realized_steps(self, block_len, max_steps)
+    }
+}
+
+/// Minimum commits now that keep `remaining` finishable within
+/// `steps_left` steps when every later step can commit at most its
+/// entry of `future_cap` (a per-step capacity iterator starting at the
+/// *next* step).
+fn forced_floor(remaining: usize, future_capacity: usize) -> usize {
+    remaining.saturating_sub(future_capacity)
+}
+
+// ---- Fixed ----------------------------------------------------------------
+
+/// The paper's fixed per-block transfer schedule: step `t` commits
+/// `num_transfer_tokens(block_len, steps)[t]` tokens regardless of
+/// confidence — bit-exact with the pre-schedule engine loop.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fixed;
+
+struct FixedStepper {
+    ks: Vec<usize>,
+    step: usize,
+}
+
+impl BlockStepper for FixedStepper {
+    fn commits(&mut self, masked_conf: &[f32]) -> usize {
+        let k = self.ks.get(self.step).copied().unwrap_or(0);
+        self.step += 1;
+        k.min(masked_conf.len())
+    }
+}
+
+impl SchedulePolicy for Fixed {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn begin_block(&self, block_len: usize, max_steps: usize)
+                   -> Box<dyn BlockStepper> {
+        // degenerate geometries (0 steps, more steps than tokens) clamp
+        // to the nearest valid schedule instead of erroring: the engine
+        // validates its manifest geometry separately, and a stepper has
+        // no error channel
+        let steps = max_steps.clamp(1, block_len.max(1));
+        let ks = num_transfer_tokens(block_len.max(1), steps)
+            .expect("clamped schedule is always valid");
+        Box::new(FixedStepper { ks, step: 0 })
+    }
+
+    fn expected_steps(&self, block_len: usize, max_steps: usize) -> f64 {
+        max_steps.clamp(1, block_len.max(1)) as f64
+    }
+}
+
+// ---- ConfidenceThreshold --------------------------------------------------
+
+/// Commit every still-masked token whose confidence clears `tau`,
+/// capped at `max_per_step` per step; the forced floor tops the count
+/// up only when the step budget would otherwise run out.
+#[derive(Clone, Copy, Debug)]
+pub struct ConfidenceThreshold {
+    /// commit confidence threshold
+    pub tau: f32,
+    /// per-step commit cap (exceeded only by the forced floor)
+    pub max_per_step: usize,
+}
+
+struct ThresholdStepper {
+    tau: f32,
+    cap: usize,
+    max_steps: usize,
+    step: usize,
+}
+
+impl BlockStepper for ThresholdStepper {
+    fn commits(&mut self, masked_conf: &[f32]) -> usize {
+        let remaining = masked_conf.len();
+        let steps_left = self.max_steps.saturating_sub(self.step).max(1);
+        self.step += 1;
+        let above = masked_conf.iter().filter(|&&c| c >= self.tau).count();
+        let forced = forced_floor(remaining, (steps_left - 1) * self.cap);
+        above.min(self.cap).max(forced).min(remaining)
+    }
+}
+
+impl SchedulePolicy for ConfidenceThreshold {
+    fn name(&self) -> &'static str {
+        "conf"
+    }
+
+    fn begin_block(&self, _block_len: usize, max_steps: usize)
+                   -> Box<dyn BlockStepper> {
+        Box::new(ThresholdStepper {
+            tau: self.tau,
+            cap: self.max_per_step.max(1),
+            max_steps: max_steps.max(1),
+            step: 0,
+        })
+    }
+}
+
+// ---- SlowFast -------------------------------------------------------------
+
+/// SlowFast-style stepping: `slow_steps` exploratory steps that commit
+/// at most one token each (and only if its confidence clears the
+/// halved exploration threshold), then fast cascades committing up to
+/// `fast_cap` tokens above `tau` per step.
+#[derive(Clone, Copy, Debug)]
+pub struct SlowFast {
+    /// exploratory steps before the cascade phase
+    pub slow_steps: usize,
+    /// cascade commit threshold (exploration uses [`Self::slow_tau`])
+    pub tau: f32,
+    /// per-step cascade cap (exceeded only by the forced floor)
+    pub fast_cap: usize,
+}
+
+impl SlowFast {
+    /// The exploration-phase threshold: half the cascade threshold, so
+    /// slow steps make progress on anything reasonably confident while
+    /// the cascade still waits for real signal.
+    pub fn slow_tau(&self) -> f32 {
+        self.tau * 0.5
+    }
+}
+
+struct SlowFastStepper {
+    cfg: SlowFast,
+    max_steps: usize,
+    step: usize,
+}
+
+impl SlowFastStepper {
+    /// Total commit capacity of the steps after the current one.
+    fn future_capacity(&self) -> usize {
+        let next = self.step + 1;
+        (next..self.max_steps)
+            .map(|s| if s < self.cfg.slow_steps {
+                1
+            } else {
+                self.cfg.fast_cap.max(1)
+            })
+            .sum()
+    }
+}
+
+impl BlockStepper for SlowFastStepper {
+    fn commits(&mut self, masked_conf: &[f32]) -> usize {
+        let remaining = masked_conf.len();
+        let forced = forced_floor(remaining, self.future_capacity());
+        let slow = self.step < self.cfg.slow_steps;
+        self.step += 1;
+        let want = if slow {
+            let top = masked_conf.iter().cloned()
+                .fold(f32::NEG_INFINITY, f32::max);
+            usize::from(top >= self.cfg.slow_tau())
+        } else {
+            masked_conf.iter().filter(|&&c| c >= self.cfg.tau).count()
+                .min(self.cfg.fast_cap.max(1))
+        };
+        want.max(forced).min(remaining)
+    }
+}
+
+impl SchedulePolicy for SlowFast {
+    fn name(&self) -> &'static str {
+        "slowfast"
+    }
+
+    fn begin_block(&self, _block_len: usize, max_steps: usize)
+                   -> Box<dyn BlockStepper> {
+        Box::new(SlowFastStepper {
+            cfg: *self,
+            max_steps: max_steps.max(1),
+            step: 0,
+        })
+    }
+}
+
+// ---- ScheduleSpec ---------------------------------------------------------
+
+/// A copyable description of a schedule policy — what configs, CLI
+/// flags, topologies and study grids carry; [`Self::build`] turns it
+/// into the trait object the stepping loops drive.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScheduleSpec {
+    Fixed,
+    Confidence { tau: f32, max_per_step: usize },
+    SlowFast { slow_steps: usize, tau: f32, fast_cap: usize },
+}
+
+impl ScheduleSpec {
+    /// The default adaptive threshold point (τ 0.5, ≤16 commits/step).
+    pub fn conf_default() -> Self {
+        ScheduleSpec::Confidence { tau: 0.5, max_per_step: 16 }
+    }
+
+    /// The default SlowFast point (2 slow steps, τ 0.45, ≤24/cascade).
+    pub fn slowfast_default() -> Self {
+        ScheduleSpec::SlowFast { slow_steps: 2, tau: 0.45, fast_cap: 24 }
+    }
+
+    /// `fixed | conf | slowfast` (the `--schedule` CLI vocabulary).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" => Some(ScheduleSpec::Fixed),
+            "conf" | "confidence" => Some(Self::conf_default()),
+            "slowfast" | "slow-fast" => Some(Self::slowfast_default()),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleSpec::Fixed => "fixed",
+            ScheduleSpec::Confidence { .. } => "conf",
+            ScheduleSpec::SlowFast { .. } => "slowfast",
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn SchedulePolicy> {
+        match *self {
+            ScheduleSpec::Fixed => Box::new(Fixed),
+            ScheduleSpec::Confidence { tau, max_per_step } =>
+                Box::new(ConfidenceThreshold { tau, max_per_step }),
+            ScheduleSpec::SlowFast { slow_steps, tau, fast_cap } =>
+                Box::new(SlowFast { slow_steps, tau, fast_cap }),
+        }
+    }
+
+    /// Expected realized steps per block under this policy (the
+    /// steps-aware cost models' pricing input).
+    pub fn expected_steps(&self, block_len: usize, max_steps: usize) -> f64 {
+        match *self {
+            ScheduleSpec::Fixed =>
+                Fixed.expected_steps(block_len, max_steps),
+            ScheduleSpec::Confidence { tau, max_per_step } =>
+                ConfidenceThreshold { tau, max_per_step }
+                    .expected_steps(block_len, max_steps),
+            ScheduleSpec::SlowFast { slow_steps, tau, fast_cap } =>
+                SlowFast { slow_steps, tau, fast_cap }
+                    .expected_steps(block_len, max_steps),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_stepper_replays_the_transfer_schedule() {
+        let mut s = Fixed.begin_block(16, 5);
+        let ks = num_transfer_tokens(16, 5).unwrap();
+        let mut remaining = 16usize;
+        for (t, &k) in ks.iter().enumerate() {
+            let conf = vec![0.1f32; remaining];
+            assert_eq!(s.commits(&conf), k, "step {t}");
+            remaining -= k;
+        }
+        assert_eq!(remaining, 0);
+        // degenerate geometries clamp instead of panicking
+        let mut z = Fixed.begin_block(4, 0);
+        assert_eq!(z.commits(&[0.5; 4]), 4);
+        let mut wide = Fixed.begin_block(4, 9);
+        assert_eq!(wide.commits(&[0.5; 4]), 1);
+        assert!((Fixed.expected_steps(4, 9) - 4.0).abs() < 1e-12);
+        assert!((Fixed.expected_steps(64, 16) - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threshold_commits_count_above_tau() {
+        let p = ConfidenceThreshold { tau: 0.5, max_per_step: 4 };
+        let mut s = p.begin_block(8, 16);
+        // 3 above threshold, generous budget: commit exactly those 3
+        assert_eq!(s.commits(&[0.9, 0.1, 0.6, 0.2, 0.55, 0.3, 0.1, 0.4]), 3);
+        // 6 above, capped at 4
+        assert_eq!(s.commits(&[0.9, 0.8, 0.7, 0.6, 0.55, 0.52, 0.1, 0.2]), 4);
+        // nothing above, nothing forced: a pure refinement step
+        assert_eq!(s.commits(&[0.1, 0.2, 0.3]), 0);
+    }
+
+    #[test]
+    fn threshold_forced_floor_guarantees_the_cap() {
+        // 8 tokens, 2 steps, cap 5: step 1 must commit >= 3 even though
+        // nothing clears tau, step 2 must finish
+        let p = ConfidenceThreshold { tau: 0.9, max_per_step: 5 };
+        let mut s = p.begin_block(8, 2);
+        let k1 = s.commits(&[0.1f32; 8]);
+        assert_eq!(k1, 3);
+        let k2 = s.commits(&vec![0.1f32; 8 - k1]);
+        assert_eq!(k2, 8 - k1);
+    }
+
+    #[test]
+    fn slowfast_explores_then_cascades() {
+        let p = SlowFast { slow_steps: 2, tau: 0.6, fast_cap: 3 };
+        let mut s = p.begin_block(16, 16);
+        // slow step with a confident top token: one cautious commit
+        assert_eq!(s.commits(&[0.1, 0.4, 0.2, 0.1]), 1);
+        // slow step with nothing above slow_tau (0.3): no commit
+        assert_eq!(s.commits(&[0.1, 0.2, 0.25, 0.1]), 0);
+        // fast step: all above tau, capped at fast_cap
+        assert_eq!(s.commits(&[0.9, 0.8, 0.7, 0.65, 0.61]), 3);
+        assert!((p.slow_tau() - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spec_parses_and_builds() {
+        assert_eq!(ScheduleSpec::parse("fixed"), Some(ScheduleSpec::Fixed));
+        assert_eq!(ScheduleSpec::parse("CONF"),
+                   Some(ScheduleSpec::conf_default()));
+        assert_eq!(ScheduleSpec::parse("slowfast"),
+                   Some(ScheduleSpec::slowfast_default()));
+        assert_eq!(ScheduleSpec::parse("bogus"), None);
+        for spec in [ScheduleSpec::Fixed, ScheduleSpec::conf_default(),
+                     ScheduleSpec::slowfast_default()] {
+            assert_eq!(spec.build().name(), spec.name());
+        }
+    }
+
+    #[test]
+    fn adaptive_expected_steps_beat_fixed_on_the_paper_geometry() {
+        let fixed = ScheduleSpec::Fixed.expected_steps(64, 16);
+        let conf = ScheduleSpec::conf_default().expected_steps(64, 16);
+        let slowfast = ScheduleSpec::slowfast_default().expected_steps(64, 16);
+        assert!((fixed - 16.0).abs() < 1e-12);
+        assert!(conf < fixed, "conf {conf} vs fixed {fixed}");
+        assert!(slowfast < fixed, "slowfast {slowfast} vs fixed {fixed}");
+        // and stay physical: at least one step, never above the cap
+        for e in [conf, slowfast] {
+            assert!((1.0..=16.0).contains(&e), "expected steps {e}");
+        }
+    }
+}

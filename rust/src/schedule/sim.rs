@@ -1,0 +1,164 @@
+//! Synthetic confidence process for pricing schedules without a model
+//! (docs/ARCHITECTURE.md substitution S8).
+//!
+//! The serving stack needs to know how many denoising steps an adaptive
+//! schedule *realizes* long before any logits exist — admission control,
+//! batch pricing and calibration all run on the analytical path. Real
+//! dLLM confidence traces are not available offline, so this module
+//! substitutes a deterministic cascade model of the empirical shape the
+//! SlowFast work reports: each token carries a seeded latent *reveal
+//! time*; committing context accelerates everyone else's reveal
+//! (`t_eff = t · (1 + 2·frac_committed)`), so confidence-driven
+//! schedules start cautious and then cascade — the multi-fold step cuts
+//! the dynamic-schedule literature measures.
+//!
+//! Everything is a pure function of `(policy, block_len, max_steps,
+//! seed)`: the same spec always prices to the same expected steps, which
+//! keeps calibrated curves and fleet metrics bit-reproducible.
+
+use crate::util::SplitMix64;
+
+use super::policy::SchedulePolicy;
+use super::trace::BlockTrace;
+
+/// Seeds behind [`mean_realized_steps`] — fixed so every consumer
+/// (cost models, benches, tests) prices from the identical expectation.
+const EXPECTATION_SEEDS: [u64; 4] = [11, 29, 47, 71];
+
+/// Confidence of one still-masked token under the cascade model.
+fn confidence(reveal: f64, t_eff: f64) -> f32 {
+    if t_eff >= reveal {
+        // revealed: high confidence, increasing the longer it has been
+        // revealed (bounded by 1.0)
+        (0.9 + 0.1 * (1.0 - reveal / t_eff)) as f32
+    } else {
+        // not yet revealed: confidence ramps toward the threshold zone
+        (0.6 * t_eff / reveal) as f32
+    }
+}
+
+/// Drive `policy` through one synthetic block: per-token reveal times
+/// drawn from the seeded RNG, commits always the top-`k` by confidence
+/// (earliest index on ties — the engine's own rule). Returns the
+/// realized [`BlockTrace`].
+pub fn simulate_block(policy: &dyn SchedulePolicy, block_len: usize,
+                      max_steps: usize, seed: u64) -> BlockTrace {
+    let block_len = block_len.max(1);
+    let max_steps = max_steps.max(1);
+    let mut rng = SplitMix64::new(seed ^ 0x5C4E_D011);
+    let reveal: Vec<f64> = (0..block_len)
+        .map(|_| 1.0 + rng.next_f64() * 1.5 * max_steps as f64)
+        .collect();
+    let mut stepper = policy.begin_block(block_len, max_steps);
+    let mut masked: Vec<usize> = (0..block_len).collect();
+    let mut commits = Vec::new();
+    let mut steps = 0usize;
+    for t in 0..max_steps {
+        let frac = (block_len - masked.len()) as f64 / block_len as f64;
+        let t_eff = (t as f64 + 1.0) * (1.0 + 2.0 * frac);
+        let conf: Vec<f32> = masked.iter()
+            .map(|&i| confidence(reveal[i], t_eff))
+            .collect();
+        let k = stepper.commits(&conf).min(masked.len());
+        steps += 1;
+        commits.push(k);
+        if k > 0 {
+            // commit through the engine's own top-k rule, so the
+            // synthetic process can never diverge from the tie/NaN
+            // semantics it is calibrated to mirror
+            let eligible = vec![1i32; conf.len()];
+            let take = crate::sampling::topk_mask(&conf, &eligible, k);
+            masked = masked.iter().zip(&take)
+                .filter(|(_, &t)| !t)
+                .map(|(&m, _)| m)
+                .collect();
+        }
+        if masked.is_empty() {
+            break;
+        }
+    }
+    BlockTrace { block: 0, configured_steps: max_steps, steps, commits }
+}
+
+/// Expected realized steps per block: the mean over a fixed seed set.
+/// This is what [`super::policy::SchedulePolicy::expected_steps`]
+/// defaults to, and therefore what every steps-aware cost model bills.
+pub fn mean_realized_steps(policy: &dyn SchedulePolicy, block_len: usize,
+                           max_steps: usize) -> f64 {
+    let sum: usize = EXPECTATION_SEEDS.iter()
+        .map(|&s| simulate_block(policy, block_len, max_steps, s).steps)
+        .sum();
+    (sum as f64 / EXPECTATION_SEEDS.len() as f64).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::policy::{ConfidenceThreshold, Fixed, SlowFast};
+
+    #[test]
+    fn simulation_is_deterministic() {
+        let p = ConfidenceThreshold { tau: 0.5, max_per_step: 16 };
+        let a = simulate_block(&p, 64, 16, 7);
+        let b = simulate_block(&p, 64, 16, 7);
+        assert_eq!(a, b);
+        let c = simulate_block(&p, 64, 16, 8);
+        assert!(a != c || a.steps == c.steps,
+                "different seeds may differ, must not crash");
+    }
+
+    #[test]
+    fn every_simulated_block_terminates_and_commits_everything() {
+        for (block, cap) in [(64usize, 16usize), (32, 16), (7, 3), (1, 1),
+                             (64, 64)] {
+            for seed in 0..4u64 {
+                for policy in [&Fixed as &dyn crate::schedule::SchedulePolicy,
+                               &ConfidenceThreshold { tau: 0.5,
+                                                      max_per_step: 16 },
+                               &SlowFast { slow_steps: 2, tau: 0.45,
+                                           fast_cap: 24 }] {
+                    let tr = simulate_block(policy, block, cap, seed);
+                    assert!(tr.steps <= cap,
+                            "{} steps {} > cap {cap}", policy.name(),
+                            tr.steps);
+                    assert_eq!(tr.commits.iter().sum::<usize>(), block,
+                               "{} committed != block {block}",
+                               policy.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_realizes_exactly_the_configured_steps() {
+        let tr = simulate_block(&Fixed, 64, 16, 3);
+        assert_eq!(tr.steps, 16);
+        assert_eq!(tr.commits, vec![4; 16]);
+    }
+
+    #[test]
+    fn cascade_accelerates_the_threshold_policy() {
+        // the defining shape: adaptive commits start small and grow as
+        // committed context accelerates reveals
+        let p = ConfidenceThreshold { tau: 0.5, max_per_step: 16 };
+        let tr = simulate_block(&p, 64, 16, 11);
+        assert!(tr.steps < 16, "no step savings: {tr:?}");
+        let first_half: usize = tr.commits[..tr.commits.len() / 2].iter()
+            .sum();
+        let second_half: usize = tr.commits[tr.commits.len() / 2..].iter()
+            .sum();
+        assert!(second_half > first_half,
+                "no cascade: {first_half} then {second_half}");
+    }
+
+    #[test]
+    fn mean_realized_steps_is_physical() {
+        let conf = mean_realized_steps(
+            &ConfidenceThreshold { tau: 0.5, max_per_step: 16 }, 64, 16);
+        let sf = mean_realized_steps(
+            &SlowFast { slow_steps: 2, tau: 0.45, fast_cap: 24 }, 64, 16);
+        for e in [conf, sf] {
+            assert!((1.0..16.0).contains(&e), "expected steps {e}");
+        }
+    }
+}

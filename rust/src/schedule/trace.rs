@@ -1,0 +1,222 @@
+//! Deterministic records of realized stepping, and the batched
+//! per-block driver that produces them.
+//!
+//! [`BlockRun`] is the policy-side half of the generation loop: the
+//! engine (or a test harness with synthetic logits) computes phase-1
+//! confidences, [`BlockRun::step_commits`] asks each row's stepper how
+//! many tokens to commit, the caller commits them through
+//! [`crate::sampling::commit_block`], and [`BlockRun::record`] accounts
+//! the realized transfer — returning `true` the moment every row of the
+//! block is fully committed so the caller can early-exit the remaining
+//! configured steps.
+
+use super::policy::{BlockStepper, SchedulePolicy};
+
+/// Realized stepping of one generation block (batched: commit counts
+/// are summed across rows; `steps` is the number of model forwards the
+/// block actually ran, i.e. the max over rows).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockTrace {
+    pub block: usize,
+    /// the configured step cap
+    pub configured_steps: usize,
+    /// model forwards actually run for this block
+    pub steps: usize,
+    /// tokens committed at each realized step, summed over rows
+    pub commits: Vec<usize>,
+}
+
+/// Realized stepping of a whole generation: one [`BlockTrace`] per
+/// block, in block order. Deterministic for a deterministic run — two
+/// identical generations yield identical traces.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StepTrace {
+    /// [`crate::schedule::SchedulePolicy::name`] of the driving policy
+    pub policy: String,
+    pub blocks: Vec<BlockTrace>,
+}
+
+impl StepTrace {
+    pub fn new(policy: &str) -> Self {
+        StepTrace { policy: policy.to_string(), blocks: Vec::new() }
+    }
+
+    /// Total model forwards actually run.
+    pub fn realized_steps(&self) -> usize {
+        self.blocks.iter().map(|b| b.steps).sum()
+    }
+
+    /// Total forwards the fixed schedule would have run.
+    pub fn configured_steps(&self) -> usize {
+        self.blocks.iter().map(|b| b.configured_steps).sum()
+    }
+
+    /// Fraction of configured steps the schedule saved (0 for `Fixed`).
+    pub fn savings_frac(&self) -> f64 {
+        let cfg = self.configured_steps();
+        if cfg == 0 {
+            return 0.0;
+        }
+        1.0 - self.realized_steps() as f64 / cfg as f64
+    }
+}
+
+/// Drives one block of a batched generation under a schedule policy:
+/// one stepper per row, remaining-mask accounting, and the realized
+/// [`BlockTrace`].
+pub struct BlockRun {
+    steppers: Vec<Box<dyn BlockStepper>>,
+    /// outstanding masked positions per row; seeded from the first
+    /// observed mask state, so partially decoded blocks account
+    /// correctly (a freshly opened generation block is fully masked)
+    remaining: Vec<usize>,
+    initialized: bool,
+    block_len: usize,
+    configured_steps: usize,
+    steps: usize,
+    commits: Vec<usize>,
+}
+
+impl BlockRun {
+    pub fn new(policy: &dyn SchedulePolicy, rows: usize, block_len: usize,
+               max_steps: usize) -> Self {
+        BlockRun {
+            steppers: (0..rows)
+                .map(|_| policy.begin_block(block_len, max_steps))
+                .collect(),
+            remaining: vec![block_len; rows],
+            initialized: false,
+            block_len,
+            configured_steps: max_steps,
+            steps: 0,
+            commits: Vec::new(),
+        }
+    }
+
+    /// Per-row commit counts for this step. `x_active` is the [rows,
+    /// block_len] active-block token grid, `conf` the matching phase-1
+    /// confidences; each stepper sees only its row's still-masked
+    /// confidences (position order, exactly what the top-k commit path
+    /// will rank).
+    pub fn step_commits(&mut self, x_active: &[i32], conf: &[f32],
+                        mask_id: i32) -> Vec<usize> {
+        let rows = self.steppers.len();
+        assert_eq!(x_active.len(), rows * self.block_len);
+        assert_eq!(conf.len(), rows * self.block_len);
+        let init = !self.initialized;
+        self.initialized = true;
+        let mut masked_conf = Vec::with_capacity(self.block_len);
+        (0..rows).map(|bi| {
+            masked_conf.clear();
+            let row = bi * self.block_len..(bi + 1) * self.block_len;
+            for (t, c) in x_active[row.clone()].iter().zip(&conf[row]) {
+                if *t == mask_id {
+                    masked_conf.push(*c);
+                }
+            }
+            if init {
+                self.remaining[bi] = masked_conf.len();
+            }
+            self.steppers[bi].commits(&masked_conf)
+        }).collect()
+    }
+
+    /// Account one realized transfer mask ([rows, block_len]); returns
+    /// `true` when every row of the block is fully committed.
+    pub fn record(&mut self, transfer: &[bool]) -> bool {
+        let rows = self.steppers.len();
+        assert_eq!(transfer.len(), rows * self.block_len);
+        let mut total = 0usize;
+        for bi in 0..rows {
+            let row = bi * self.block_len..(bi + 1) * self.block_len;
+            let n = transfer[row].iter().filter(|&&t| t).count();
+            self.remaining[bi] = self.remaining[bi].saturating_sub(n);
+            total += n;
+        }
+        self.steps += 1;
+        self.commits.push(total);
+        self.done()
+    }
+
+    pub fn done(&self) -> bool {
+        self.remaining.iter().all(|&r| r == 0)
+    }
+
+    /// Realized steps so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// The block's trace record.
+    pub fn finish(&self, block: usize) -> BlockTrace {
+        BlockTrace {
+            block,
+            configured_steps: self.configured_steps,
+            steps: self.steps,
+            commits: self.commits.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::policy::{ConfidenceThreshold, Fixed};
+
+    #[test]
+    fn block_run_tracks_fixed_schedule_exactly() {
+        let (rows, block_len, steps) = (2usize, 8usize, 4usize);
+        let mut run = BlockRun::new(&Fixed, rows, block_len, steps);
+        let mut x = vec![0i32; rows * block_len]; // all masked
+        let conf = vec![0.5f32; rows * block_len];
+        for t in 0..steps {
+            let ks = run.step_commits(&x, &conf, 0);
+            assert_eq!(ks, vec![2, 2], "step {t}");
+            // commit the first ks[bi] masked positions per row
+            let mut transfer = vec![false; rows * block_len];
+            for bi in 0..rows {
+                let mut left = ks[bi];
+                for i in 0..block_len {
+                    let j = bi * block_len + i;
+                    if left > 0 && x[j] == 0 {
+                        transfer[j] = true;
+                        x[j] = 7;
+                        left -= 1;
+                    }
+                }
+            }
+            let done = run.record(&transfer);
+            assert_eq!(done, t == steps - 1, "step {t}");
+        }
+        let trace = run.finish(0);
+        assert_eq!(trace.steps, steps);
+        assert_eq!(trace.commits, vec![4; steps]);
+        assert_eq!(trace.configured_steps, steps);
+    }
+
+    #[test]
+    fn early_exit_when_rows_finish_before_the_cap() {
+        let p = ConfidenceThreshold { tau: 0.1, max_per_step: 64 };
+        let mut run = BlockRun::new(&p, 1, 4, 16);
+        let x = vec![0i32; 4];
+        let ks = run.step_commits(&x, &[0.9, 0.8, 0.7, 0.6], 0);
+        assert_eq!(ks, vec![4]);
+        assert!(run.record(&[true, true, true, true]));
+        let trace = run.finish(3);
+        assert_eq!((trace.block, trace.steps), (3, 1));
+        assert_eq!(trace.commits, vec![4]);
+    }
+
+    #[test]
+    fn step_trace_savings_accounting() {
+        let mut tr = StepTrace::new("conf");
+        tr.blocks.push(BlockTrace {
+            block: 0, configured_steps: 16, steps: 8, commits: vec![8; 8] });
+        tr.blocks.push(BlockTrace {
+            block: 1, configured_steps: 16, steps: 4, commits: vec![16; 4] });
+        assert_eq!(tr.realized_steps(), 12);
+        assert_eq!(tr.configured_steps(), 32);
+        assert!((tr.savings_frac() - 0.625).abs() < 1e-12);
+        assert_eq!(StepTrace::new("fixed").savings_frac(), 0.0);
+    }
+}

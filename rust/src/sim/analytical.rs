@@ -197,6 +197,27 @@ impl AnalyticalSim {
     /// Execute the blocked-diffusion workload; `T_block = T_warm +
     /// (steps−1)·T_refine` per generation block.
     pub fn run(&self, w: &Workload) -> RunReport {
+        self.run_scheduled(w, w.steps_per_block as f64)
+    }
+
+    /// Execute the workload billing `steps_per_block` *realized* steps
+    /// per block instead of the configured cap — the steps-aware cost
+    /// path for adaptive denoising schedules
+    /// ([`crate::schedule::ScheduleSpec::expected_steps`]). Fractional
+    /// step counts are meaningful: an expectation of 9.25 steps bills a
+    /// quarter refine more than 9. Clamped to `[1, w.steps_per_block]`
+    /// (a block always runs its warm step); at exactly the configured
+    /// cap this is bit-identical to [`Self::run`].
+    pub fn run_scheduled(&self, w: &Workload, steps_per_block: f64)
+                         -> RunReport {
+        let cap = w.steps_per_block as f64;
+        let steps = if cap >= 1.0 {
+            steps_per_block.clamp(1.0, cap)
+        } else {
+            // degenerate zero-step geometry: preserve the legacy
+            // warm-only accounting
+            0.0
+        };
         let l_tot = w.total_len();
         let mut model = PhaseReport::default();
         let mut sampling = PhaseReport::default();
@@ -204,7 +225,7 @@ impl AnalyticalSim {
             let s_n = w.prompt_len + blk * w.block_len;
             // warm step: full sequence, weights streamed
             model.add(self.forward(w, w.batch * l_tot, l_tot, true));
-            let refines = w.steps_per_block.saturating_sub(1);
+            let refines = (steps - 1.0).max(0.0);
             let refine = match w.cache {
                 CacheMode::None =>
                     self.forward(w, w.batch * l_tot, l_tot, true),
@@ -213,10 +234,10 @@ impl AnalyticalSim {
                 CacheMode::Dual =>
                     self.forward(w, w.batch * w.block_len, l_tot, false),
             };
-            model.add(refine.scaled(refines as f64));
+            model.add(refine.scaled(refines));
             sampling.add(self.sampling_step(w.batch, w.block_len,
                                             w.model.vocab)
-                         .scaled(w.steps_per_block as f64));
+                         .scaled(steps));
         }
         let total = model.seconds + sampling.seconds;
         let tokens = w.tokens_out() as f64;
@@ -329,6 +350,35 @@ mod tests {
         let wm = Workload::paper_reference(ModelArch::llada_moe_7b(), CacheMode::Dual);
         let sim = AnalyticalSim::new(HwConfig::dart_default(), p);
         assert!(sim.run(&wm).tps > 2.0 * sim.run(&wd).tps);
+    }
+
+    #[test]
+    fn scheduled_run_bills_realized_steps() {
+        let w = Workload::paper_reference(ModelArch::llada_8b(),
+                                          CacheMode::Dual);
+        let sim = AnalyticalSim::new(HwConfig::dart_default(),
+                                     PrecisionConfig::dart_full_quant());
+        // at the configured cap the scheduled path is bit-identical
+        let full = sim.run(&w);
+        let at_cap = sim.run_scheduled(&w, w.steps_per_block as f64);
+        assert_eq!(full.total_s.to_bits(), at_cap.total_s.to_bits());
+        assert_eq!(full.sampling.seconds.to_bits(),
+                   at_cap.sampling.seconds.to_bits());
+        // fewer realized steps cost strictly less, monotonically
+        let half = sim.run_scheduled(&w, 8.0);
+        let quarter = sim.run_scheduled(&w, 4.0);
+        assert!(half.total_s < full.total_s);
+        assert!(quarter.total_s < half.total_s);
+        // fractional expectations land between their neighbors
+        let mid = sim.run_scheduled(&w, 8.5);
+        assert!(mid.total_s > half.total_s && mid.total_s < full.total_s);
+        // clamped: below one step bills one step, above the cap bills
+        // the cap
+        let floor = sim.run_scheduled(&w, 0.2);
+        let one = sim.run_scheduled(&w, 1.0);
+        assert_eq!(floor.total_s.to_bits(), one.total_s.to_bits());
+        let over = sim.run_scheduled(&w, 99.0);
+        assert_eq!(over.total_s.to_bits(), full.total_s.to_bits());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! property `scripts/ci.sh --smoke` gates on.
 
 use crate::report::{self, MarkdownDoc, Table};
+use crate::schedule::ScheduleSpec;
 use crate::stats::fmt_time;
 
 use super::grid::{CellResult, StudyResult};
@@ -31,6 +32,7 @@ pub fn cell_row(c: &CellResult, baseline_goodput: Option<f64>,
     vec![
         c.policy.name().to_string(),
         c.admission_label().to_string(),
+        c.schedule.name().to_string(),
         report::pct(m.shed_frac()),
         report::pct(m.slo_attainment()),
         report::f1(m.goodput_tps()),
@@ -41,9 +43,9 @@ pub fn cell_row(c: &CellResult, baseline_goodput: Option<f64>,
     ]
 }
 
-const SWEEP_HEADERS: [&str; 9] = [
-    "router", "admission", "shed", "attainment", "goodput tok/s",
-    "Δ goodput", "p95 TTFT", "padding waste", "mean util"];
+const SWEEP_HEADERS: [&str; 10] = [
+    "router", "admission", "schedule", "shed", "attainment",
+    "goodput tok/s", "Δ goodput", "p95 TTFT", "padding waste", "mean util"];
 
 /// Mean of `f` over cells passing `keep` (0.0 on an empty selection).
 fn mean_over<F, K>(cells: &[CellResult], keep: K, f: F) -> f64
@@ -88,40 +90,97 @@ fn analysis_paras(r: &StudyResult) -> Vec<String> {
             _ => String::new(),
         };
         winners.push(format!(
-            "On **{}** ({} devices), {} routing with {} admission wins \
-             at {} tok/s goodput{vs}, shedding {} of offered requests at \
-             {} SLO attainment.",
+            "On **{}** ({} devices), {} routing with {} admission under \
+             the {} schedule wins at {} tok/s goodput{vs}, shedding {} \
+             of offered requests at {} SLO attainment.",
             s.shape.name, s.shape.n_devices(), best.policy.name(),
-            best.admission_label(),
+            best.admission_label(), best.schedule.name(),
             report::f1(best.metrics.goodput_tps()),
             report::pct(best.metrics.shed_frac()),
             report::pct(best.metrics.slo_attainment())));
     }
     paras.push(winners.join("\n"));
 
-    // calibrated vs static, aggregated over matched (shape, policy) pairs
+    let mean = |v: &[f64]| if v.is_empty() { 0.0 }
+               else { v.iter().sum::<f64>() / v.len() as f64 };
+
+    // adaptive schedules vs fixed, aggregated over matched
+    // (shape, policy, admission) triples; the expected-steps figures
+    // use the geometry the grid actually built (identical across
+    // shapes: the topology constructors share one block geometry)
+    let geom = r.cfg.shapes[0].build(&r.cfg.model, r.cfg.cache);
+    let (g_block, g_cap) = (geom.block_len as usize,
+                            geom.steps_per_block as usize);
+    let mut sched_lines = Vec::new();
+    for &schedule in &r.cfg.schedules {
+        if schedule == ScheduleSpec::Fixed {
+            continue;
+        }
+        let expected = schedule.expected_steps(g_block, g_cap);
+        let mut gd = Vec::new();
+        let mut hd = Vec::new();
+        for s in &r.shapes {
+            for &policy in &r.cfg.policies {
+                for calibrated in [false, true] {
+                    let fixed = r.cell(&s.shape.name, policy, calibrated,
+                                       ScheduleSpec::Fixed);
+                    let adp = r.cell(&s.shape.name, policy, calibrated,
+                                     schedule);
+                    if let (Some(f), Some(a)) = (fixed, adp) {
+                        if f.metrics.goodput_tps() > 0.0 {
+                            gd.push((a.metrics.goodput_tps()
+                                     - f.metrics.goodput_tps())
+                                    / f.metrics.goodput_tps());
+                        }
+                        if f.metrics.horizon_s > 0.0 {
+                            hd.push((a.metrics.horizon_s
+                                     - f.metrics.horizon_s)
+                                    / f.metrics.horizon_s);
+                        }
+                    }
+                }
+            }
+        }
+        sched_lines.push(format!(
+            "**{}** realizes ~{} of the {g_cap} configured steps per \
+             block and moves goodput by {} (horizon by {}) against the \
+             fixed schedule on matched cells.",
+            schedule.name(), report::f1(expected),
+            report::signed_pct(mean(&gd)), report::signed_pct(mean(&hd))));
+    }
+    if !sched_lines.is_empty() {
+        paras.push(format!(
+            "Adaptive denoising schedules change what a \"request\" costs: \
+             admission and batching price each cell at the schedule's \
+             expected realized steps (the steps-aware calibration \
+             dimension), not the configured cap.\n{}",
+            sched_lines.join("\n")));
+    }
+
+    // calibrated vs static, aggregated over matched
+    // (shape, policy, schedule) triples
     let mut gdeltas = Vec::new();
     let mut sdeltas = Vec::new();
     let mut pdeltas = Vec::new();
     for s in &r.shapes {
         for &policy in &r.cfg.policies {
-            let stat = r.cell(&s.shape.name, policy, false);
-            let cal = r.cell(&s.shape.name, policy, true);
-            if let (Some(st), Some(ca)) = (stat, cal) {
-                if st.metrics.goodput_tps() > 0.0 {
-                    gdeltas.push((ca.metrics.goodput_tps()
-                                  - st.metrics.goodput_tps())
-                                 / st.metrics.goodput_tps());
+            for &schedule in &r.cfg.schedules {
+                let stat = r.cell(&s.shape.name, policy, false, schedule);
+                let cal = r.cell(&s.shape.name, policy, true, schedule);
+                if let (Some(st), Some(ca)) = (stat, cal) {
+                    if st.metrics.goodput_tps() > 0.0 {
+                        gdeltas.push((ca.metrics.goodput_tps()
+                                      - st.metrics.goodput_tps())
+                                     / st.metrics.goodput_tps());
+                    }
+                    sdeltas.push(ca.metrics.shed_frac()
+                                 - st.metrics.shed_frac());
+                    pdeltas.push(ca.metrics.padding_waste_frac()
+                                 - st.metrics.padding_waste_frac());
                 }
-                sdeltas.push(ca.metrics.shed_frac()
-                             - st.metrics.shed_frac());
-                pdeltas.push(ca.metrics.padding_waste_frac()
-                             - st.metrics.padding_waste_frac());
             }
         }
     }
-    let mean = |v: &[f64]| if v.is_empty() { 0.0 }
-               else { v.iter().sum::<f64>() / v.len() as f64 };
     paras.push(format!(
         "Switching the admission predictor and flush policy from \
          analytic scalars to measured latency curves moves goodput by \
@@ -197,15 +256,23 @@ pub fn render_study(r: &StudyResult) -> String {
     }
     cmd.push_str(" --out docs/STUDY_fleet.md");
     d.code("sh", &cmd);
+    let schedule_names = cfg.schedules.iter()
+        .map(|s| s.name())
+        .collect::<Vec<_>>()
+        .join("/");
     d.para(&format!(
         "Grid: {} fleet shapes × {} router policies × 2 admission modes \
-         (static analytic scalars vs measured latency curves), {} \
-         requests per cell at {} of each shape's analytic token \
-         capacity, under a diurnal envelope spanning {} simulated days \
-         (swing {}, so the peak offers ~{}x the mean rate). Model: {}, \
-         {} cache. Baseline cell for the delta column: {} routing with \
-         {} admission.",
-        cfg.shapes.len(), cfg.policies.len(), cfg.requests_per_cell,
+         (static analytic scalars vs measured latency curves) × {} \
+         denoising schedules ({schedule_names}), {} requests per cell \
+         at {} of each shape's analytic token capacity, under a diurnal \
+         envelope spanning {} simulated days (swing {}, so the peak \
+         offers ~{}x the mean rate). Adaptive schedules are priced at \
+         their expected realized steps throughout — admission, batching \
+         and calibration all bill realized rather than configured \
+         steps. Model: {}, {} cache. Baseline cell for the delta \
+         column: {} routing with {} admission under the fixed schedule.",
+        cfg.shapes.len(), cfg.policies.len(), cfg.schedules.len(),
+        cfg.requests_per_cell,
         report::pct(cfg.load), report::f1(cfg.envelope_periods),
         report::f2(cfg.envelope_swing),
         report::f2(1.0 + cfg.envelope_swing), cfg.model.name,
@@ -245,7 +312,8 @@ pub fn render_study(r: &StudyResult) -> String {
             .map(|b| b.metrics.goodput_tps());
         for c in r.shape_cells(&s.shape.name) {
             let is_base = c.policy == cfg.baseline_policy
-                && c.calibrated == cfg.baseline_calibrated;
+                && c.calibrated == cfg.baseline_calibrated
+                && c.schedule == ScheduleSpec::Fixed;
             t.row(&cell_row(c, base_goodput, is_base));
         }
         d.table(&t);
@@ -297,6 +365,7 @@ mod tests {
             shape: "fixture".into(),
             devices: 2,
             policy: RoutePolicy::VariantAware,
+            schedule: ScheduleSpec::slowfast_default(),
             calibrated: true,
             metrics: m,
         }
@@ -310,6 +379,7 @@ mod tests {
         assert_eq!(row, vec![
             "variant-aware".to_string(),
             "calibrated".to_string(),
+            "slowfast".to_string(),
             "50.0%".to_string(),    // 2 shed of 4 offered
             "25.0%".to_string(),    // 1 in-SLO of 4 offered
             "10.0".to_string(),     // 100 SLO tokens / 10 s
@@ -319,10 +389,10 @@ mod tests {
             "60.0%".to_string(),    // mean of 80% and 40%
         ]);
         // the baseline row marks itself instead of a delta
-        assert_eq!(cell_row(&fixture(), Some(8.0), true)[5], "(base)");
+        assert_eq!(cell_row(&fixture(), Some(8.0), true)[6], "(base)");
         // an unusable baseline degrades to n/a, never a division blowup
-        assert_eq!(cell_row(&fixture(), Some(0.0), false)[5], "n/a");
-        assert_eq!(cell_row(&fixture(), None, false)[5], "n/a");
+        assert_eq!(cell_row(&fixture(), Some(0.0), false)[6], "n/a");
+        assert_eq!(cell_row(&fixture(), None, false)[6], "n/a");
     }
 
     #[test]
@@ -334,12 +404,16 @@ mod tests {
         for needle in ["# DART fleet study", "## Fleet shapes",
                        "## Policy sweep", "## Analysis",
                        "## Reproducibility", "(base)", "fleet-study",
-                       "homogeneous-2", "mixed-3", "| router |"] {
+                       "homogeneous-2", "mixed-3", "| router |",
+                       "| schedule |", "denoising schedules",
+                       "realizes ~", "| slowfast |"] {
             assert!(a.contains(needle), "study doc missing {needle:?}");
         }
-        // one sweep row per (policy, admission) cell of each shape
+        // one sweep row per (schedule, admission, policy) cell of each
+        // shape
         let rows = a.matches("| round-robin |").count()
             + a.matches("| least-outstanding |").count();
-        assert_eq!(rows, 8, "2 shapes x 2 policies x 2 admission modes");
+        assert_eq!(rows, 16,
+                   "2 shapes x 2 schedules x 2 admission x 2 policies");
     }
 }

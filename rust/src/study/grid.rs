@@ -1,16 +1,25 @@
-//! The study grid runner: fleet shape × router policy × admission mode
-//! over per-shape diurnal traces, one [`FleetMetrics`] per cell.
+//! The study grid runner: fleet shape × schedule policy × router policy
+//! × admission mode over per-shape diurnal traces, one [`FleetMetrics`]
+//! per cell.
 //!
 //! Determinism contract: every cell is a pure function of
 //! [`StudyConfig`] — traces come from the seeded [`crate::util::Lcg64`]
 //! generator, calibration from the seeded profiler, and the fleet
 //! simulator runs in virtual time — so the whole grid (and therefore
 //! the rendered study document) is bit-identical across runs.
+//!
+//! Cells fan out across threads: each (shape, schedule, admission)
+//! unit is independent, so [`StudyGrid::run_with_progress`] spawns one
+//! scoped thread per unit and reduces the results in the *pinned*
+//! serial iteration order — the parallel grid is bit-identical to
+//! [`StudyGrid::run_serial`] (gated by
+//! `rust/tests/fleet_determinism.rs`), it just finishes sooner.
 
 use crate::cluster::{chat_offered_rps, fleet_capacity_tps, generate_trace,
                      Arrival, ClusterTopology, Diurnal, FleetMetrics,
                      FleetSim, RoutePolicy, SloConfig, TraceSpec};
 use crate::config::{CacheMode, HwConfig, ModelArch};
+use crate::schedule::ScheduleSpec;
 
 /// One fleet shape in the sweep: `n_dc` datacenter devices
 /// ([`HwConfig::dart_default`]) plus `n_edge` edge devices
@@ -53,6 +62,10 @@ impl ShapeSpec {
 pub struct StudyConfig {
     pub shapes: Vec<ShapeSpec>,
     pub policies: Vec<RoutePolicy>,
+    /// denoising-schedule axis: each entry reruns every (admission,
+    /// router) cell with the fleet serving (and, when calibrated,
+    /// profiled) under that schedule
+    pub schedules: Vec<ScheduleSpec>,
     /// requests per cell trace (each shape generates one trace shared
     /// by all of its cells)
     pub requests_per_cell: usize,
@@ -75,8 +88,9 @@ pub struct StudyConfig {
 impl StudyConfig {
     /// The committed-study grid (`docs/STUDY_fleet.md`): three fleet
     /// shapes spanning 16–32 devices, all three router policies, static
-    /// vs calibrated admission, mean load at 85% of analytic capacity
-    /// so the diurnal peak oversubscribes the fleet.
+    /// vs calibrated admission, all three denoising schedules, mean
+    /// load at 85% of analytic capacity so the diurnal peak
+    /// oversubscribes the fleet.
     pub fn reference(seed: u64) -> Self {
         StudyConfig {
             shapes: vec![
@@ -87,6 +101,9 @@ impl StudyConfig {
             policies: vec![RoutePolicy::RoundRobin,
                            RoutePolicy::LeastOutstanding,
                            RoutePolicy::VariantAware],
+            schedules: vec![ScheduleSpec::Fixed,
+                            ScheduleSpec::conf_default(),
+                            ScheduleSpec::slowfast_default()],
             requests_per_cell: 240,
             load: 0.85,
             envelope_periods: 2.0,
@@ -100,7 +117,7 @@ impl StudyConfig {
     }
 
     /// A tiny grid for unit tests and the bench smoke path: two small
-    /// shapes, two policies, short traces.
+    /// shapes, two policies, two schedules, short traces.
     pub fn smoke(seed: u64) -> Self {
         StudyConfig {
             shapes: vec![
@@ -109,6 +126,8 @@ impl StudyConfig {
             ],
             policies: vec![RoutePolicy::RoundRobin,
                            RoutePolicy::LeastOutstanding],
+            schedules: vec![ScheduleSpec::Fixed,
+                            ScheduleSpec::slowfast_default()],
             requests_per_cell: 48,
             load: 0.85,
             envelope_periods: 2.0,
@@ -124,14 +143,22 @@ impl StudyConfig {
     fn admission_modes(&self) -> [bool; 2] {
         [false, true]
     }
+
+    /// Cells in the grid: shapes × schedules × admission × routers.
+    pub fn n_cells(&self) -> usize {
+        self.shapes.len() * self.schedules.len() * 2 * self.policies.len()
+    }
 }
 
-/// One grid cell: a (shape, policy, admission-mode) run.
+/// One grid cell: a (shape, schedule, policy, admission-mode) run.
 #[derive(Clone, Debug)]
 pub struct CellResult {
     pub shape: String,
     pub devices: usize,
     pub policy: RoutePolicy,
+    /// the denoising schedule the fleet served (and, when calibrated,
+    /// profiled) under
+    pub schedule: ScheduleSpec,
     /// true = measured curves attached (cost-based batching + p95 TTFT
     /// admission); false = analytic scalars + static batcher
     pub calibrated: bool,
@@ -169,17 +196,19 @@ pub struct StudyResult {
 }
 
 impl StudyResult {
-    pub fn cell(&self, shape: &str, policy: RoutePolicy, calibrated: bool)
-                -> Option<&CellResult> {
+    pub fn cell(&self, shape: &str, policy: RoutePolicy, calibrated: bool,
+                schedule: ScheduleSpec) -> Option<&CellResult> {
         self.cells.iter().find(|c| c.shape == shape
                                && c.policy == policy
-                               && c.calibrated == calibrated)
+                               && c.calibrated == calibrated
+                               && c.schedule == schedule)
     }
 
-    /// The named baseline cell for a shape (delta reference).
+    /// The named baseline cell for a shape (delta reference): the
+    /// configured baseline router/admission under the fixed schedule.
     pub fn baseline(&self, shape: &str) -> Option<&CellResult> {
         self.cell(shape, self.cfg.baseline_policy,
-                  self.cfg.baseline_calibrated)
+                  self.cfg.baseline_calibrated, ScheduleSpec::Fixed)
     }
 
     /// The goodput winner among a shape's cells (first-listed wins ties,
@@ -205,10 +234,21 @@ pub struct StudyGrid {
     pub cfg: StudyConfig,
 }
 
+/// One independent unit of grid work: every router-policy cell of a
+/// (shape, schedule, admission) combination, sharing one topology
+/// build/calibration.
+#[derive(Clone, Copy)]
+struct Unit {
+    shape_idx: usize,
+    schedule: ScheduleSpec,
+    calibrated: bool,
+}
+
 impl StudyGrid {
     pub fn new(cfg: StudyConfig) -> Self {
-        assert!(!cfg.shapes.is_empty() && !cfg.policies.is_empty(),
-                "study grid needs at least one shape and one policy");
+        assert!(!cfg.shapes.is_empty() && !cfg.policies.is_empty()
+                && !cfg.schedules.is_empty(),
+                "study grid needs at least one shape, policy and schedule");
         StudyGrid { cfg }
     }
 
@@ -216,19 +256,18 @@ impl StudyGrid {
         self.run_with_progress(|_| {})
     }
 
-    /// Run every cell, invoking `progress` after each one (the CLI
-    /// narrates long grids through this without touching the result).
-    pub fn run_with_progress<F: FnMut(&CellResult)>(&self, mut progress: F)
-                                                    -> StudyResult {
+    /// Per-shape context (capacity targeting, diurnal trace, SLO) in
+    /// shape order — identical for the serial and parallel paths.
+    fn shape_runs(&self) -> (Vec<ShapeRun>, Vec<Vec<crate::cluster::TraceRequest>>) {
         let cfg = &self.cfg;
         let mut shapes = Vec::with_capacity(cfg.shapes.len());
-        let mut cells = Vec::new();
+        let mut traces = Vec::with_capacity(cfg.shapes.len());
         for (si, shape) in cfg.shapes.iter().enumerate() {
             let ref_topo = shape.build(&cfg.model, cfg.cache);
             let capacity_tps = fleet_capacity_tps(&ref_topo);
             // offered mean rate: `load` fraction of analytic capacity.
-            // Referenced to the *uncalibrated* estimate so static and
-            // calibrated cells face the identical trace.
+            // Referenced to the *uncalibrated fixed-schedule* estimate
+            // so every cell of a shape faces the identical trace.
             let offered_rps = chat_offered_rps(capacity_tps, cfg.load);
             // envelope period from the expected span so every shape's
             // trace covers `envelope_periods` simulated days
@@ -236,6 +275,7 @@ impl StudyGrid {
             let envelope = Diurnal {
                 period_s: expected_span / cfg.envelope_periods.max(1e-3),
                 swing: cfg.envelope_swing,
+                length_swing: 0.0,
             };
             let spec = TraceSpec::chat(
                 cfg.requests_per_cell,
@@ -244,8 +284,10 @@ impl StudyGrid {
                     (si as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)))
                 .with_envelope(envelope);
             let trace = generate_trace(&spec);
-            // one SLO per shape, derived from the uncalibrated fleet so
-            // both admission modes chase the same deadlines
+            // one SLO per shape, derived from the uncalibrated
+            // fixed-schedule fleet so every cell chases the same
+            // deadlines (adaptive schedules then beat them by running
+            // fewer steps — exactly the comparison the study is after)
             let slo = SloConfig::auto(&ref_topo);
             shapes.push(ShapeRun {
                 shape: shape.clone(),
@@ -256,27 +298,86 @@ impl StudyGrid {
                 trace_span_s: trace.last().map(|r| r.arrival_s).unwrap_or(0.0),
                 trace_len: trace.len(),
             });
-            for calibrated in cfg.admission_modes() {
-                let mut topo = shape.build(&cfg.model, cfg.cache);
-                if calibrated {
-                    topo.calibrate();
+            traces.push(trace);
+        }
+        (shapes, traces)
+    }
+
+    /// Units in pinned (shape, schedule, admission) order — the
+    /// reduction order of both execution paths.
+    fn units(&self) -> Vec<Unit> {
+        let cfg = &self.cfg;
+        let mut units = Vec::new();
+        for shape_idx in 0..cfg.shapes.len() {
+            for &schedule in &cfg.schedules {
+                for calibrated in cfg.admission_modes() {
+                    units.push(Unit { shape_idx, schedule, calibrated });
                 }
-                for &policy in &cfg.policies {
-                    let metrics = FleetSim::new(topo.clone(), policy, slo)
-                        .run(&trace);
-                    let cell = CellResult {
-                        shape: shape.name.clone(),
-                        devices: shape.n_devices(),
-                        policy,
-                        calibrated,
-                        metrics,
-                    };
+            }
+        }
+        units
+    }
+
+    /// All router-policy cells of one unit, in policy order.
+    fn run_unit(&self, u: Unit, trace: &[crate::cluster::TraceRequest],
+                slo: SloConfig) -> Vec<CellResult> {
+        let cfg = &self.cfg;
+        let shape = &cfg.shapes[u.shape_idx];
+        let mut topo = shape.build(&cfg.model, cfg.cache);
+        topo.schedule = u.schedule;
+        if u.calibrated {
+            topo.calibrate();
+        }
+        cfg.policies.iter().map(|&policy| CellResult {
+            shape: shape.name.clone(),
+            devices: shape.n_devices(),
+            policy,
+            schedule: u.schedule,
+            calibrated: u.calibrated,
+            metrics: FleetSim::new(topo.clone(), policy, slo).run(trace),
+        }).collect()
+    }
+
+    /// Run every cell, invoking `progress` after each one (the CLI
+    /// narrates long grids through this without touching the result).
+    ///
+    /// Units fan out across scoped threads — shapes, schedules and
+    /// admission modes are independent — and the results are reduced in
+    /// the pinned serial order, so the parallel grid is bit-identical
+    /// to [`Self::run_serial`]; `progress` fires on the caller's thread
+    /// in that same pinned order as units complete.
+    pub fn run_with_progress<F: FnMut(&CellResult)>(&self, mut progress: F)
+                                                    -> StudyResult {
+        let (shapes, traces) = self.shape_runs();
+        let units = self.units();
+        let mut cells = Vec::with_capacity(self.cfg.n_cells());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = units.iter().map(|&u| {
+                let trace = &traces[u.shape_idx];
+                let slo = shapes[u.shape_idx].slo;
+                s.spawn(move || self.run_unit(u, trace, slo))
+            }).collect();
+            for h in handles {
+                for cell in h.join().expect("study unit thread panicked") {
                     progress(&cell);
                     cells.push(cell);
                 }
             }
+        });
+        StudyResult { cfg: self.cfg.clone(), shapes, cells }
+    }
+
+    /// The single-threaded reference path: identical cells in identical
+    /// order, one unit at a time. `rust/tests/fleet_determinism.rs`
+    /// proves [`Self::run`] reduces bit-identically to this.
+    pub fn run_serial(&self) -> StudyResult {
+        let (shapes, traces) = self.shape_runs();
+        let mut cells = Vec::with_capacity(self.cfg.n_cells());
+        for u in self.units() {
+            cells.extend(self.run_unit(
+                u, &traces[u.shape_idx], shapes[u.shape_idx].slo));
         }
-        StudyResult { cfg: cfg.clone(), shapes, cells }
+        StudyResult { cfg: self.cfg.clone(), shapes, cells }
     }
 }
 
@@ -287,7 +388,8 @@ mod tests {
     #[test]
     fn smoke_grid_covers_every_cell_and_accounts_for_every_request() {
         let cfg = StudyConfig::smoke(11);
-        let n_cells = cfg.shapes.len() * cfg.policies.len() * 2;
+        let n_cells = cfg.n_cells();
+        assert_eq!(n_cells, 2 * 2 * 2 * 2, "shapes x schedules x adm x rtr");
         let r = StudyGrid::new(cfg).run();
         assert_eq!(r.cells.len(), n_cells);
         assert_eq!(r.shapes.len(), 2);
@@ -295,14 +397,16 @@ mod tests {
             let shape = r.shapes.iter()
                 .find(|s| s.shape.name == cell.shape).unwrap();
             assert_eq!(cell.metrics.offered() as usize, shape.trace_len,
-                       "{}/{:?}/{}", cell.shape, cell.policy,
-                       cell.admission_label());
+                       "{}/{:?}/{}/{}", cell.shape, cell.policy,
+                       cell.schedule.name(), cell.admission_label());
             assert!(cell.metrics.completed > 0,
                     "{}/{:?} completed nothing", cell.shape, cell.policy);
         }
         // baseline and winner resolve for every shape
         for s in &r.shapes {
             assert!(r.baseline(&s.shape.name).is_some());
+            assert_eq!(r.baseline(&s.shape.name).unwrap().schedule,
+                       ScheduleSpec::Fixed);
             assert!(r.best_goodput(&s.shape.name).is_some());
             assert_eq!(r.shape_cells(&s.shape.name).len(),
                        n_cells / r.shapes.len());
@@ -317,6 +421,7 @@ mod tests {
         for (x, y) in a.cells.iter().zip(&b.cells) {
             assert_eq!(x.shape, y.shape);
             assert_eq!(x.policy, y.policy);
+            assert_eq!(x.schedule, y.schedule);
             assert_eq!(x.calibrated, y.calibrated);
             assert_eq!(x.metrics.completed, y.metrics.completed);
             assert_eq!(x.metrics.tokens, y.metrics.tokens);
@@ -328,6 +433,24 @@ mod tests {
         for (x, y) in a.shapes.iter().zip(&b.shapes) {
             assert_eq!(x.capacity_tps.to_bits(), y.capacity_tps.to_bits());
             assert_eq!(x.trace_span_s.to_bits(), y.trace_span_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn schedule_axis_changes_outcomes_on_every_shape() {
+        let r = StudyGrid::new(StudyConfig::smoke(5)).run();
+        for s in &r.shapes {
+            let name = &s.shape.name;
+            let policy = RoutePolicy::LeastOutstanding;
+            let fixed = r.cell(name, policy, false, ScheduleSpec::Fixed)
+                .unwrap();
+            let fast = r.cell(name, policy, false,
+                              ScheduleSpec::slowfast_default()).unwrap();
+            // the adaptive schedule must move the outcome: fewer
+            // realized steps -> shorter horizon or fewer sheds
+            assert!(fast.metrics.horizon_s != fixed.metrics.horizon_s
+                    || fast.metrics.shed() != fixed.metrics.shed(),
+                    "{name}: schedule axis indistinguishable");
         }
     }
 

@@ -12,8 +12,12 @@
 //!   [`crate::cluster::ClusterTopology`], targets the offered load at a
 //!   fraction of the fleet's analytic capacity, generates one diurnal
 //!   trace per shape (identical across every cell of that shape, so
-//!   policies are compared on the same arrivals), and collects one
-//!   [`crate::cluster::FleetMetrics`] per grid cell;
+//!   policies are compared on the same arrivals), sweeps the
+//!   denoising-schedule axis (fixed / confidence-threshold / SlowFast,
+//!   each priced at its expected realized steps), and collects one
+//!   [`crate::cluster::FleetMetrics`] per grid cell — cells fan out
+//!   across scoped threads with a pinned reduction order, so the
+//!   parallel grid is bit-identical to the serial one;
 //! * [`doc`] — [`render_study`]: the Markdown report generator built on
 //!   [`crate::report::MarkdownDoc`] — shape table, per-shape policy
 //!   sweep with deltas vs a named baseline cell, and a generated

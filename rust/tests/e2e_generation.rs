@@ -20,6 +20,7 @@ fn engine(cache: CacheMode, kv: KvQuantPolicy) -> Option<GenerationEngine> {
         kv_policy: kv,
         sample_precision: SamplePrecision::Fp32,
         v_chunk: 64,
+        ..EngineConfig::default()
     }))
 }
 

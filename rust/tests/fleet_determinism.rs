@@ -8,6 +8,7 @@ use dart::cluster::{generate_trace, trace_from_text, trace_to_text,
                     Arrival, ClusterTopology, Diurnal, FleetMetrics,
                     FleetSim, RoutePolicy, SloConfig, TraceSpec};
 use dart::config::{CacheMode, ModelArch};
+use dart::study::{render_study, StudyConfig, StudyGrid};
 
 /// Every counter, every accumulator, and the raw latency reservoirs —
 /// bit-exact.
@@ -93,6 +94,55 @@ fn calibrated_heterogeneous_fleet_is_deterministic() {
     let c2 = run(&replayed);
     assert_metrics_identical(&c1, &c2, "calibrated replay rerun");
     assert!(c1.completed + c1.shed() == 40, "replay accounting");
+}
+
+#[test]
+fn parallel_study_grid_is_bit_identical_to_serial() {
+    // ROADMAP follow-up (c): grid cells fan out across threads with a
+    // pinned reduction order — the parallel run must reduce to exactly
+    // the serial reference, cell for cell, bit for bit, and therefore
+    // render the identical study document
+    let grid = StudyGrid::new(StudyConfig::smoke(7));
+    let parallel = grid.run();
+    let serial = grid.run_serial();
+    assert_eq!(parallel.cells.len(), serial.cells.len());
+    for (p, s) in parallel.cells.iter().zip(&serial.cells) {
+        assert_eq!(p.shape, s.shape);
+        assert_eq!(p.policy, s.policy);
+        assert_eq!(p.schedule, s.schedule);
+        assert_eq!(p.calibrated, s.calibrated);
+        let ctx = format!("{}/{:?}/{}/{}", p.shape, p.policy,
+                          p.schedule.name(), p.admission_label());
+        assert_metrics_identical(&p.metrics, &s.metrics, &ctx);
+    }
+    for (p, s) in parallel.shapes.iter().zip(&serial.shapes) {
+        assert_eq!(p.capacity_tps.to_bits(), s.capacity_tps.to_bits());
+        assert_eq!(p.offered_rps.to_bits(), s.offered_rps.to_bits());
+        assert_eq!(p.trace_span_s.to_bits(), s.trace_span_s.to_bits());
+        assert_eq!(p.trace_len, s.trace_len);
+    }
+    assert_eq!(render_study(&parallel), render_study(&serial),
+               "rendered documents must match byte-for-byte");
+}
+
+#[test]
+fn length_mixed_diurnal_trace_serves_deterministically() {
+    // the length-mix modulation flag composes with the fleet exactly
+    // like the plain envelope: two runs are bit-identical
+    let spec = TraceSpec::chat(40, Arrival::Poisson { rps: 150.0 }, 31)
+        .with_envelope(Diurnal::day(0.25).with_length_mix(0.8));
+    let trace = generate_trace(&spec);
+    let run = |t: &[dart::cluster::TraceRequest]| {
+        let topo = ClusterTopology::homogeneous(
+            2, dart::config::HwConfig::dart_default(),
+            ModelArch::llada_8b(), CacheMode::Dual);
+        let slo = SloConfig::auto(&topo);
+        FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo).run(t)
+    };
+    let a = run(&trace);
+    let b = run(&trace);
+    assert_metrics_identical(&a, &b, "length-mix rerun");
+    assert!(a.completed + a.shed() == 40, "length-mix accounting");
 }
 
 #[test]

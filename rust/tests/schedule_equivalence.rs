@@ -1,0 +1,270 @@
+//! Schedule-subsystem contracts:
+//!
+//! 1. `SchedulePolicy::Fixed` driven through the policy plumbing
+//!    (`confidence_argmax` → `BlockRun::step_commits` → `commit_block`)
+//!    reproduces the seed engine's fused loop
+//!    (`num_transfer_tokens` + `sample_block`) token-for-token,
+//!    bit-exactly, on fixed seeds — the differential that licenses the
+//!    engine refactor.
+//! 2. Adaptive policies never commit a below-threshold token unless the
+//!    step budget forces it, and always terminate within the configured
+//!    cap (property tests over random geometries and adversarial
+//!    confidence streams).
+//! 3. Steps-aware calibration prices adaptive schedules below fixed,
+//!    and a fixed-profiled curve replayed under an adaptive schedule
+//!    rescales rather than billing the cap.
+
+use dart::cluster::ClusterTopology;
+use dart::config::{CacheMode, HwConfig, ModelArch};
+use dart::sampling::{self, SamplePrecision};
+use dart::schedule::{BlockRun, ConfidenceThreshold, Fixed, SchedulePolicy,
+                     ScheduleSpec, SlowFast};
+use dart::util::SplitMix64;
+
+/// One block denoised with the seed engine's fused loop: fixed
+/// `num_transfer_tokens` counts into `sample_block`, all steps run.
+fn seed_style_block(z_steps: &[Vec<f32>], x0: &[i32], b: usize, l: usize,
+                    v: usize, steps: usize, mask_id: i32, v_chunk: usize)
+                    -> (Vec<i32>, Vec<Vec<i32>>) {
+    let ks = sampling::num_transfer_tokens(l, steps).unwrap();
+    let mut x = x0.to_vec();
+    let mut history = Vec::new();
+    for (t, z) in z_steps.iter().enumerate().take(steps) {
+        let kvec = vec![ks[t]; b];
+        let res = sampling::sample_block(z, &x, b, l, v, &kvec, mask_id,
+                                         v_chunk, SamplePrecision::Fp32);
+        x = res.x_new;
+        history.push(x.clone());
+    }
+    (x, history)
+}
+
+/// The same block denoised the way the refactored engine does it:
+/// phase-1 confidences, policy-chosen per-row commits, `commit_block`,
+/// early-exit when the block is fully committed.
+fn policy_style_block(policy: &dyn SchedulePolicy, z_steps: &[Vec<f32>],
+                      x0: &[i32], b: usize, l: usize, v: usize,
+                      steps: usize, mask_id: i32, v_chunk: usize)
+                      -> (Vec<i32>, Vec<Vec<i32>>, usize) {
+    let mut x = x0.to_vec();
+    let mut run = BlockRun::new(policy, b, l, steps);
+    let mut history = Vec::new();
+    for z in z_steps.iter().take(steps) {
+        let (conf, idx) = sampling::confidence_argmax(
+            z, b * l, v, v_chunk, SamplePrecision::Fp32);
+        let kvec = run.step_commits(&x, &conf, mask_id);
+        let res = sampling::commit_block(&conf, &idx, &x, b, l, &kvec,
+                                         mask_id);
+        x = res.x_new;
+        history.push(x.clone());
+        if run.record(&res.transfer) {
+            break;
+        }
+    }
+    (x, history, run.steps())
+}
+
+#[test]
+fn fixed_policy_reproduces_seed_engine_tokens_bit_exactly() {
+    // geometries: paper-shaped, remainder schedule, one-token steps
+    for (gi, (b, l, v, steps)) in [(2usize, 16usize, 64usize, 8usize),
+                                   (1, 7, 33, 3),
+                                   (3, 8, 17, 8)].iter().enumerate() {
+        let (b, l, v, steps) = (*b, *l, *v, *steps);
+        let mask_id = 0i32;
+        let mut rng = SplitMix64::new(42 + gi as u64);
+        // fresh logits per step, shared verbatim by both paths
+        let z_steps: Vec<Vec<f32>> = (0..steps)
+            .map(|_| rng.normal_vec(b * l * v, 3.0))
+            .collect();
+        // generation blocks open fully masked — the engine's case; the
+        // mask_id of 0 also exercises the argmax==mask_id re-masking
+        // corner the seed tests document
+        let all_masked = vec![mask_id; b * l];
+        let (seed_x, seed_hist) = seed_style_block(
+            &z_steps, &all_masked, b, l, v, steps, mask_id, 16);
+        let (pol_x, pol_hist, realized) = policy_style_block(
+            &Fixed, &z_steps, &all_masked, b, l, v, steps, mask_id, 16);
+        assert_eq!(realized, steps, "geometry {gi}: realized steps");
+        assert_eq!(pol_x, seed_x, "geometry {gi}: final tokens");
+        assert_eq!(pol_hist.len(), seed_hist.len(), "geometry {gi}");
+        for (t, (a, bb)) in pol_hist.iter().zip(&seed_hist).enumerate() {
+            assert_eq!(a, bb, "geometry {gi}: grid after step {t}");
+        }
+        // a partially decoded grid (distinct mask_id so committed
+        // tokens can never re-mask): the policy path may early-exit
+        // once the smaller masked set is exhausted, but every step it
+        // runs — and the final grid — must match the seed loop, whose
+        // tail steps provably commit nothing
+        let partial_mask = -1i32;
+        let mut x0 = vec![partial_mask; b * l];
+        for i in 0..(l / 4) {
+            x0[i] = 40 + i as i32;
+        }
+        let (sx, sh) = seed_style_block(&z_steps, &x0, b, l, v, steps,
+                                        partial_mask, 16);
+        let (px, ph, pr) = policy_style_block(&Fixed, &z_steps, &x0, b, l,
+                                              v, steps, partial_mask, 16);
+        assert_eq!(px, sx, "geometry {gi}: partial-grid tokens");
+        assert!(pr <= steps, "geometry {gi}");
+        assert_eq!(&ph[..], &sh[..ph.len()],
+                   "geometry {gi}: partial-grid history prefix");
+        for (t, tail) in sh[ph.len()..].iter().enumerate() {
+            assert_eq!(tail, &sx,
+                       "geometry {gi}: seed tail step {t} changed tokens");
+        }
+    }
+}
+
+#[test]
+fn fixed_policy_is_chunk_invariant_like_the_seed_engine() {
+    let (b, l, v, steps) = (2usize, 8usize, 128usize, 4usize);
+    let mut rng = SplitMix64::new(9);
+    let z_steps: Vec<Vec<f32>> = (0..steps)
+        .map(|_| rng.normal_vec(b * l * v, 4.0))
+        .collect();
+    let x0 = vec![0i32; b * l];
+    let mut base: Option<Vec<i32>> = None;
+    for chunk in [16usize, 64, 128] {
+        let (x, _, _) = policy_style_block(&Fixed, &z_steps, &x0, b, l, v,
+                                           steps, 0, chunk);
+        match &base {
+            None => base = Some(x),
+            Some(bb) => assert_eq!(&x, bb, "v_chunk {chunk}"),
+        }
+    }
+}
+
+#[test]
+fn adaptive_policies_never_commit_below_threshold_unless_forced() {
+    // generous budgets (cap * max_per_step >= 2 * block_len) mean the
+    // forced floor never engages; every committed token must then clear
+    // the policy's threshold
+    dart::stats::prop_check("no below-threshold commits", 48, |rng| {
+        let l = 4 + (rng.next_u64() % 28) as usize;
+        let conf_rows: Vec<Vec<f32>> = (0..l)
+            .map(|_| (0..l).map(|_| rng.next_f32()).collect())
+            .collect();
+        let slowfast = rng.next_u64() % 2 == 0;
+        (l, conf_rows, slowfast)
+    }, |(l, conf_rows, slowfast)| {
+        let l = *l;
+        let tau = 0.6f32;
+        let (policy, min_tau): (Box<dyn SchedulePolicy>, f32) = if *slowfast {
+            let p = SlowFast { slow_steps: 2, tau, fast_cap: 4 };
+            let mt = p.slow_tau();
+            (Box::new(p), mt)
+        } else {
+            (Box::new(ConfidenceThreshold { tau, max_per_step: 4 }), tau)
+        };
+        // budget: enough steps that forced floor stays zero throughout
+        let max_steps = 2 * l + 4;
+        let mut stepper = policy.begin_block(l, max_steps);
+        let mut masked: Vec<bool> = vec![true; l];
+        for conf in conf_rows.iter().take(max_steps) {
+            let mconf: Vec<f32> = (0..l).filter(|&i| masked[i])
+                .map(|i| conf[i]).collect();
+            if mconf.is_empty() {
+                break;
+            }
+            let k = stepper.commits(&mconf);
+            if k > mconf.len() {
+                return Err(format!("k {k} > masked {}", mconf.len()));
+            }
+            // commit the k most confident (the engine's rule); all of
+            // them must clear the policy's (phase) threshold
+            let mut order: Vec<usize> = (0..mconf.len()).collect();
+            order.sort_by(|&a, &b| mconf[b].partial_cmp(&mconf[a])
+                .unwrap().then(a.cmp(&b)));
+            for &j in order.iter().take(k) {
+                if mconf[j] < min_tau {
+                    return Err(format!(
+                        "committed conf {} below threshold {min_tau} \
+                         with a generous budget", mconf[j]));
+                }
+            }
+            // apply the commits
+            let committed: Vec<usize> = order.iter().take(k).copied()
+                .collect();
+            let masked_idx: Vec<usize> = (0..l).filter(|&i| masked[i])
+                .collect();
+            for j in committed {
+                masked[masked_idx[j]] = false;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn adaptive_policies_terminate_within_the_cap() {
+    // adversarial confidence streams (including all-zeros, where no
+    // token ever clears any threshold): the forced floor must still
+    // finish every block within the configured cap
+    dart::stats::prop_check("termination within cap", 64, |rng| {
+        let l = 1 + (rng.next_u64() % 64) as usize;
+        let cap = 1 + (rng.next_u64() % 24) as usize;
+        let adversarial = rng.next_u64() % 3 == 0;
+        let seed = rng.next_u64();
+        let slowfast = rng.next_u64() % 2 == 0;
+        (l, cap, adversarial, seed, slowfast)
+    }, |&(l, cap, adversarial, seed, slowfast)| {
+        let policy: Box<dyn SchedulePolicy> = if slowfast {
+            Box::new(SlowFast { slow_steps: 2, tau: 0.45, fast_cap: 8 })
+        } else {
+            Box::new(ConfidenceThreshold { tau: 0.5, max_per_step: 8 })
+        };
+        let mut rng = SplitMix64::new(seed);
+        let mut stepper = policy.begin_block(l, cap);
+        let mut remaining = l;
+        for step in 0..cap {
+            let conf: Vec<f32> = (0..remaining)
+                .map(|_| if adversarial { 0.0 } else { rng.next_f32() })
+                .collect();
+            let k = stepper.commits(&conf).min(remaining);
+            remaining -= k;
+            if remaining == 0 {
+                return Ok(());
+            }
+            let _ = step;
+        }
+        Err(format!("{} tokens still masked after {cap} steps", remaining))
+    });
+}
+
+#[test]
+fn steps_aware_calibration_prices_adaptive_below_fixed() {
+    let calibrated = |schedule| {
+        let mut topo = ClusterTopology::homogeneous(
+            1, HwConfig::dart_default(), ModelArch::llada_8b(),
+            CacheMode::Dual);
+        topo.schedule = schedule;
+        topo.calibrate();
+        topo
+    };
+    let fixed = calibrated(ScheduleSpec::Fixed);
+    let conf = calibrated(ScheduleSpec::conf_default());
+    let slowfast = calibrated(ScheduleSpec::slowfast_default());
+    use dart::calib::Pct;
+    let price = |topo: &ClusterTopology| {
+        let c = topo.devices[0].curve.as_ref().unwrap();
+        (c.expected_steps, c.total_s(4, 300, Pct::P50).unwrap(),
+         c.first_block_s(4, 300, Pct::P95).unwrap())
+    };
+    let (ef, tf, ff) = price(&fixed);
+    for (name, topo) in [("conf", &conf), ("slowfast", &slowfast)] {
+        let (e, t, f) = price(topo);
+        assert!(e < ef, "{name}: expected steps {e} vs fixed {ef}");
+        assert!(t < tf, "{name}: total {t} vs fixed {tf}");
+        assert!(f < ff, "{name}: first-block p95 {f} vs fixed {ff}");
+    }
+    // a fixed-profiled curve replayed under an adaptive serving
+    // schedule rescales per-step-linearly instead of billing the cap
+    let curve = fixed.devices[0].curve.as_ref().unwrap();
+    let serving = ScheduleSpec::slowfast_default().expected_steps(64, 16);
+    let scale = curve.step_scale(serving);
+    assert!(scale < 1.0 && scale > 0.0, "scale {scale}");
+    // and a matched replay is the identity, bit-for-bit
+    assert_eq!(curve.step_scale(curve.expected_steps).to_bits(),
+               1.0f64.to_bits());
+}

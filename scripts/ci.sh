@@ -81,8 +81,15 @@ if [[ "${1:-}" == "--smoke" ]]; then
     cargo bench --bench calib_policies -- --smoke
     echo "== smoke: fleet_study bench (reduced grid) =="
     cargo bench --bench fleet_study -- --smoke
+    echo "== smoke: schedule_sweep bench (reduced geometry) =="
+    cargo bench --bench schedule_sweep -- --smoke
+    echo "== smoke: Fixed-schedule equivalence (seed-engine differential) =="
+    cargo test -q --test schedule_equivalence
     echo "== smoke: serve-cluster 2 devices x 32 requests, calibrated =="
     cargo run --release -- serve-cluster --devices 2 --requests 32 --calibrated
+    echo "== smoke: serve-cluster slowfast schedule, calibrated =="
+    cargo run --release -- serve-cluster --devices 2 --requests 32 \
+        --calibrated --schedule slowfast
     echo "== docs: fleet-study regen check (committed study must not drift) =="
     cargo run --release -- fleet-study --smoke
 fi
