@@ -12,7 +12,7 @@
 
 use dart::cli::Args;
 use dart::report::{self, Table};
-use dart::study::{StudyConfig, StudyGrid};
+use dart::study::{AdmissionMode, StudyConfig, StudyGrid};
 
 fn main() {
     let args = Args::from_env();
@@ -23,7 +23,7 @@ fn main() {
     } else {
         StudyConfig::reference(seed)
     };
-    println!("fleet_study: {} shapes x {} policies x 2 admission modes \
+    println!("fleet_study: {} shapes x {} policies x 3 admission modes \
               x {} schedules, {} requests/cell, seed {seed}\n",
              cfg.shapes.len(), cfg.policies.len(), cfg.schedules.len(),
              cfg.requests_per_cell);
@@ -60,10 +60,10 @@ fn main() {
         t.print();
         for &policy in &result.cfg.policies {
             for &schedule in &result.cfg.schedules {
-                let stat =
-                    result.cell(&shape.shape.name, policy, false, schedule);
-                let cal =
-                    result.cell(&shape.shape.name, policy, true, schedule);
+                let stat = result.cell(&shape.shape.name, policy,
+                                       AdmissionMode::Static, schedule);
+                let cal = result.cell(&shape.shape.name, policy,
+                                      AdmissionMode::Calibrated, schedule);
                 if let (Some(s), Some(c)) = (stat, cal) {
                     if s.metrics.shed() != c.metrics.shed()
                         || s.metrics.slo_met != c.metrics.slo_met

@@ -141,16 +141,26 @@ impl LatencyCurve {
     /// the nearest edge (ties to the lower bucket), so a short request
     /// is never priced at a distant long-sequence cell.
     pub fn lookup(&self, variant: usize, seq_len: u64) -> Option<&CurvePoint> {
+        self.lookup_index(variant, seq_len).map(|i| &self.points[i])
+    }
+
+    /// Index into [`Self::points`] of the cell [`Self::lookup`] resolves
+    /// — the cell-attribution hook the replay recalibrator uses to route
+    /// a measured observation back to the cell that priced it.
+    pub fn lookup_index(&self, variant: usize, seq_len: u64)
+                        -> Option<usize> {
         // points are sorted by (variant, bucket_lo) at construction, so
         // one allocation-free pass suffices — this sits on the
         // scheduler's per-arrival admission path
         let v = self.points.iter().map(|p| p.variant)
             .find(|&pv| pv >= variant)
             .or_else(|| self.points.last().map(|p| p.variant))?;
-        let mut best: Option<(&CurvePoint, u64)> = None;
-        for p in self.points.iter().filter(|p| p.variant == v) {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, p) in self.points.iter().enumerate()
+            .filter(|(_, p)| p.variant == v)
+        {
             if p.bucket_lo <= seq_len && seq_len < p.bucket_hi {
-                return Some(p);
+                return Some(i);
             }
             let dist = if seq_len < p.bucket_lo {
                 p.bucket_lo - seq_len
@@ -160,10 +170,10 @@ impl LatencyCurve {
                 seq_len.saturating_sub(p.bucket_hi.saturating_sub(1))
             };
             if best.map(|(_, d)| dist < d).unwrap_or(true) {
-                best = Some((p, dist));
+                best = Some((i, dist));
             }
         }
-        best.map(|(p, _)| p)
+        best.map(|(i, _)| i)
     }
 
     /// Measured total batch latency for serving `variant` lanes of
@@ -476,5 +486,178 @@ mod tests {
         let r = curve().render_table();
         assert!(r.contains("npu0"));
         assert!(r.contains("p95 total"));
+    }
+
+    /// Draw one random-but-physical curve: random variant set, random
+    /// bucket edges (possibly sparse, with gaps), random f64 latencies,
+    /// and — half the time — a fractional recorded schedule.
+    fn random_curve(rng: &mut crate::util::SplitMix64) -> LatencyCurve {
+        let n_variants = rng.range(1, 4) as usize;
+        let mut variants: Vec<usize> =
+            (0..n_variants).map(|_| rng.range(1, 32) as usize).collect();
+        variants.sort_unstable();
+        variants.dedup();
+        let n_buckets = rng.range(1, 5) as usize;
+        let mut edges: Vec<u64> = Vec::new();
+        let mut lo = rng.range(8, 256);
+        for _ in 0..n_buckets {
+            // occasional gap between buckets → sparse curves
+            let gap = if rng.next_f64() < 0.3 { rng.range(1, 512) } else { 0 };
+            let hi = lo + gap + rng.range(16, 1024);
+            edges.push(lo + gap);
+            edges.push(hi);
+            lo = hi;
+        }
+        let mut points = Vec::new();
+        for &v in &variants {
+            for b in 0..n_buckets {
+                let (blo, bhi) = (edges[2 * b], edges[2 * b + 1]);
+                let p50 = rng.next_f64() * 0.1 + 1e-6;
+                let first = p50 * (0.1 + 0.8 * rng.next_f64());
+                points.push(CurvePoint {
+                    variant: v,
+                    bucket_lo: blo,
+                    bucket_hi: bhi,
+                    gen_tokens: rng.range(1, bhi),
+                    p50_total_s: p50,
+                    p95_total_s: p50 * (1.0 + rng.next_f64()),
+                    p50_first_s: first,
+                    p95_first_s: first * (1.0 + rng.next_f64()),
+                    samples: rng.range(1, 64) as u32,
+                });
+            }
+        }
+        let mut c = LatencyCurve::new(&format!("dev{}", rng.range(0, 100)),
+                                      points);
+        if rng.next_f64() < 0.5 {
+            let cap = rng.range(2, 33);
+            c = c.with_schedule(cap, 1.0 + rng.next_f64() * (cap - 1) as f64);
+        }
+        c
+    }
+
+    #[test]
+    fn prop_text_format_emit_parse_emit_is_byte_identical() {
+        // the replay-format contract: to_text ∘ from_text ∘ to_text is
+        // the identity on bytes (17-sig-digit floats round-trip f64
+        // exactly, rows re-sort stably, schedule metadata survives)
+        crate::stats::prop_check(
+            "curve text emit→parse→emit", 64,
+            random_curve,
+            |c| {
+                let text1 = c.to_text();
+                let back = LatencyCurve::from_text(&text1)
+                    .map_err(|e| format!("parse failed: {e}"))?;
+                let text2 = back.to_text();
+                if text1 != text2 {
+                    return Err(format!(
+                        "round-trip drifted:\n--- emitted\n{text1}\n--- \
+                         re-emitted\n{text2}"));
+                }
+                if back.expected_steps.to_bits() != c.expected_steps.to_bits()
+                    || back.steps_per_block != c.steps_per_block
+                {
+                    return Err("schedule dimension drifted".into());
+                }
+                Ok(())
+            });
+    }
+
+    #[test]
+    fn prop_v1_files_parse_and_reemit_stably() {
+        // v1 files carry no schedule line; parsing defaults to the
+        // historical fixed-16 point and the *re-emitted* v2 text then
+        // round-trips byte-identically forever after
+        crate::stats::prop_check(
+            "curve text v1 back-compat", 32,
+            random_curve,
+            |c| {
+                // hand-build the v1 serialization: header + device +
+                // rows, no schedule line
+                let mut v1 = String::from("# dart-latency-curve v1\n");
+                v1.push_str(&format!("device {}\n", c.device));
+                for p in &c.points {
+                    v1.push_str(&format!(
+                        "{} {} {} {} {:.17e} {:.17e} {:.17e} {:.17e} {}\n",
+                        p.variant, p.bucket_lo, p.bucket_hi, p.gen_tokens,
+                        p.p50_total_s, p.p95_total_s, p.p50_first_s,
+                        p.p95_first_s, p.samples));
+                }
+                let parsed = LatencyCurve::from_text(&v1)
+                    .map_err(|e| format!("v1 parse failed: {e}"))?;
+                if parsed.steps_per_block != 16
+                    || parsed.expected_steps.to_bits() != 16.0f64.to_bits()
+                {
+                    return Err("v1 default schedule wrong".into());
+                }
+                if parsed.points.len() != c.points.len() {
+                    return Err("v1 row count drifted".into());
+                }
+                for (a, b) in c.points.iter().zip(&parsed.points) {
+                    if a.p50_total_s.to_bits() != b.p50_total_s.to_bits()
+                        || a.p95_first_s.to_bits() != b.p95_first_s.to_bits()
+                    {
+                        return Err("v1 float drifted".into());
+                    }
+                }
+                let text1 = parsed.to_text();
+                let text2 = LatencyCurve::from_text(&text1)
+                    .map_err(|e| format!("v2 reparse failed: {e}"))?
+                    .to_text();
+                if text1 != text2 {
+                    return Err("v1→v2 upgrade not stable".into());
+                }
+                Ok(())
+            });
+    }
+
+    #[test]
+    fn prop_sparse_curves_clamp_lookups_to_the_nearest_edge() {
+        // every lookup on a random (possibly gappy) curve must resolve
+        // to *some* cell of the resolved variant, and in-bucket hits
+        // must resolve exactly
+        crate::stats::prop_check(
+            "sparse-curve lookup clamp", 64,
+            |rng| {
+                let c = random_curve(rng);
+                let probe = rng.range(0, 4096);
+                let v = rng.range(0, 40) as usize;
+                (c, v, probe)
+            },
+            |(c, v, probe)| {
+                let Some(i) = c.lookup_index(*v, *probe) else {
+                    return Err("lookup on a non-empty curve failed".into());
+                };
+                let p = &c.points[i];
+                let in_bucket =
+                    p.bucket_lo <= *probe && *probe < p.bucket_hi;
+                if !in_bucket {
+                    // clamped: no other cell of the same variant may be
+                    // strictly nearer
+                    let dist = |q: &CurvePoint| if *probe < q.bucket_lo {
+                        q.bucket_lo - *probe
+                    } else {
+                        probe.saturating_sub(q.bucket_hi.saturating_sub(1))
+                    };
+                    let d = dist(p);
+                    for q in c.points.iter()
+                        .filter(|q| q.variant == p.variant)
+                    {
+                        if dist(q) < d {
+                            return Err(format!(
+                                "clamp missed a nearer bucket: {} vs {}",
+                                q.bucket_lo, p.bucket_lo));
+                        }
+                    }
+                }
+                // lookup and lookup_index agree
+                let via_ref = c.lookup(*v, *probe).unwrap();
+                if via_ref.bucket_lo != p.bucket_lo
+                    || via_ref.variant != p.variant
+                {
+                    return Err("lookup/lookup_index disagree".into());
+                }
+                Ok(())
+            });
     }
 }

@@ -1,0 +1,195 @@
+//! Curve-diff utilities: how far apart two [`LatencyCurve`]s price the
+//! same cells.
+//!
+//! [`CurveDelta`] is the common vocabulary of the replay loop: the
+//! recalibration fixed-point test asserts a **zero** delta
+//! (recalibrating from a curve's own observations must not move it, bit
+//! for bit), the `serve-cluster --recalibrate` report and the
+//! `recalib_loop` bench print how far measured serving pulled each
+//! device's table, and `rust/tests/recalib_convergence.rs` gates the
+//! monotone-shrink property on the max cell error.
+
+use crate::report::Table;
+
+use super::curve::LatencyCurve;
+
+/// Per-cell pricing movement between two curves sharing a cell
+/// geometry. `rel` is the **max** absolute relative change across the
+/// four percentile fields (p50/p95 × total/first), so a cell only
+/// reads as unchanged when every quantity it prices is unchanged.
+#[derive(Clone, Copy, Debug)]
+pub struct CellDelta {
+    pub variant: usize,
+    pub bucket_lo: u64,
+    pub bucket_hi: u64,
+    /// max |after − before| / max(|before|, ε) over the four fields
+    pub rel: f64,
+}
+
+/// The full diff between a `before` and an `after` curve.
+#[derive(Clone, Debug, Default)]
+pub struct CurveDelta {
+    /// one entry per (variant, bucket) cell present in both curves, in
+    /// the curves' sorted point order
+    pub cells: Vec<CellDelta>,
+    /// cells present in only one of the two curves (geometry drift —
+    /// zero whenever `after` came from recalibrating `before`)
+    pub mismatched_cells: usize,
+    /// after.expected_steps − before.expected_steps
+    pub expected_steps_delta: f64,
+}
+
+impl CurveDelta {
+    /// Diff `after` against `before`, matching cells by exact
+    /// (variant, bucket_lo, bucket_hi).
+    pub fn between(before: &LatencyCurve, after: &LatencyCurve) -> Self {
+        let mut cells = Vec::new();
+        let mut matched_after = 0usize;
+        for b in &before.points {
+            let Some(a) = after.points.iter().find(|a| {
+                a.variant == b.variant
+                    && a.bucket_lo == b.bucket_lo
+                    && a.bucket_hi == b.bucket_hi
+            }) else {
+                continue;
+            };
+            matched_after += 1;
+            let rel = [
+                (b.p50_total_s, a.p50_total_s),
+                (b.p95_total_s, a.p95_total_s),
+                (b.p50_first_s, a.p50_first_s),
+                (b.p95_first_s, a.p95_first_s),
+            ]
+            .iter()
+            .map(|&(x, y)| crate::util::rel_err(y, x))
+            .fold(0.0f64, f64::max);
+            cells.push(CellDelta {
+                variant: b.variant,
+                bucket_lo: b.bucket_lo,
+                bucket_hi: b.bucket_hi,
+                rel,
+            });
+        }
+        let mismatched = (before.points.len() - cells.len())
+            + after.points.len().saturating_sub(matched_after);
+        CurveDelta {
+            cells,
+            mismatched_cells: mismatched,
+            expected_steps_delta: after.expected_steps
+                - before.expected_steps,
+        }
+    }
+
+    /// Largest per-cell relative movement (0.0 on an empty diff).
+    pub fn max_rel(&self) -> f64 {
+        crate::stats::max_mean(self.cells.iter().map(|c| c.rel)).0
+    }
+
+    /// Mean per-cell relative movement (0.0 on an empty diff).
+    pub fn mean_rel(&self) -> f64 {
+        crate::stats::max_mean(self.cells.iter().map(|c| c.rel)).1
+    }
+
+    /// True when the two curves price identically: every matched cell
+    /// moved by exactly 0.0, no cell exists in only one curve, and the
+    /// expected-steps dimension is unchanged — the recalibration
+    /// fixed-point predicate.
+    pub fn is_zero(&self) -> bool {
+        self.mismatched_cells == 0
+            && self.expected_steps_delta == 0.0
+            && self.cells.iter().all(|c| c.rel == 0.0)
+    }
+
+    /// Human-readable per-cell table (debugging surface; the CLI's
+    /// per-device summary is
+    /// [`crate::replay::render_pricing_report`], which reports only
+    /// [`Self::max_rel`]).
+    pub fn render_table(&self, title: &str) -> String {
+        let mut t = Table::new(title,
+                               &["variant", "seq bucket", "moved"]);
+        for c in &self.cells {
+            t.row(&[c.variant.to_string(),
+                    format!("[{}, {})", c.bucket_lo, c.bucket_hi),
+                    crate::report::pct(c.rel)]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::curve::CurvePoint;
+
+    fn point(variant: usize, lo: u64, hi: u64, total: f64) -> CurvePoint {
+        CurvePoint {
+            variant,
+            bucket_lo: lo,
+            bucket_hi: hi,
+            gen_tokens: (lo + hi) / 3,
+            p50_total_s: total,
+            p95_total_s: total * 1.2,
+            p50_first_s: total / 4.0,
+            p95_first_s: total / 3.0,
+            samples: 5,
+        }
+    }
+
+    fn curve() -> LatencyCurve {
+        LatencyCurve::new("npu0", vec![
+            point(1, 96, 256, 0.010),
+            point(4, 96, 256, 0.016),
+        ])
+    }
+
+    #[test]
+    fn identical_curves_diff_to_zero() {
+        let c = curve();
+        let d = CurveDelta::between(&c, &c.clone());
+        assert_eq!(d.cells.len(), 2);
+        assert_eq!(d.mismatched_cells, 0);
+        assert!(d.is_zero());
+        assert_eq!(d.max_rel(), 0.0);
+        assert_eq!(d.mean_rel(), 0.0);
+        assert_eq!(d.expected_steps_delta, 0.0);
+    }
+
+    #[test]
+    fn moved_cell_is_measured_on_its_worst_field() {
+        let a = curve();
+        let mut b = curve();
+        // move only the p95_first of one cell by +50%
+        b.points[1].p95_first_s *= 1.5;
+        let d = CurveDelta::between(&a, &b);
+        assert!(!d.is_zero());
+        assert!((d.max_rel() - 0.5).abs() < 1e-9, "max {}", d.max_rel());
+        // the untouched cell reads exactly zero
+        assert_eq!(d.cells[0].rel, 0.0);
+        assert!((d.mean_rel() - 0.25).abs() < 1e-9);
+        let r = d.render_table("delta");
+        assert!(r.contains("[96, 256)"));
+    }
+
+    #[test]
+    fn geometry_drift_counts_mismatched_cells() {
+        let a = curve();
+        let b = LatencyCurve::new("npu0", vec![
+            point(1, 96, 256, 0.010),
+            point(8, 96, 256, 0.020), // variant 4 gone, 8 appeared
+        ]);
+        let d = CurveDelta::between(&a, &b);
+        assert_eq!(d.cells.len(), 1);
+        assert_eq!(d.mismatched_cells, 2);
+        assert!(!d.is_zero());
+    }
+
+    #[test]
+    fn expected_steps_movement_breaks_the_fixed_point() {
+        let a = curve().with_schedule(16, 16.0);
+        let b = curve().with_schedule(16, 9.25);
+        let d = CurveDelta::between(&a, &b);
+        assert_eq!(d.max_rel(), 0.0);
+        assert!(!d.is_zero());
+        assert!((d.expected_steps_delta + 6.75).abs() < 1e-12);
+    }
+}

@@ -25,6 +25,14 @@
 //! cycle-accurate simulator at a matched sampling shape (the Table 4
 //! methodology, callable in-process).
 //!
+//! Curves are profiled once through the analytical path, but they do
+//! not have to stay that way: the [`crate::replay`] subsystem drains
+//! *measured* serving observations back into the table
+//! ([`crate::replay::Recalibrator`]), and [`CurveDelta`] is the diff
+//! vocabulary both the CLI report and the convergence test net use to
+//! say how far (or, at the fixed point, that not at all) a replay round
+//! moved the pricing.
+//!
 //! Curves carry an **expected-steps dimension**
 //! ([`LatencyCurve::expected_steps`]): profiling bills the configured
 //! denoising schedule's expected *realized* steps per block
@@ -34,7 +42,9 @@
 //! admission and batching price variable-step requests honestly.
 
 pub mod curve;
+pub mod delta;
 pub mod profiler;
 
 pub use curve::{CurvePoint, LatencyCurve, Pct};
+pub use delta::{CellDelta, CurveDelta};
 pub use profiler::{spot_check_sampling, CalibConfig, Calibrator, SpotCheck};

@@ -3,6 +3,7 @@
 //! utilization, and padding-waste tokens — the fleet analogue of
 //! [`crate::coordinator::Metrics`], rendered through [`crate::report`].
 
+use crate::replay::ObservationLog;
 use crate::report::{self, Table};
 use crate::stats::{fmt_time, Reservoir};
 
@@ -53,6 +54,10 @@ pub struct FleetMetrics {
     /// virtual-time span of the run (last completion), seconds
     pub horizon_s: f64,
     pub devices: Vec<DeviceStats>,
+    /// structured per-batch serving observations, one log per device
+    /// (same index space as [`Self::devices`]) — the replay
+    /// recalibration loop's input ([`crate::replay::recalibrate_fleet`])
+    pub observations: Vec<ObservationLog>,
 }
 
 impl FleetMetrics {
@@ -72,6 +77,9 @@ impl FleetMetrics {
             padded_lane_tokens: 0,
             ragged_pad_tokens: 0,
             horizon_s: 0.0,
+            observations: device_names.iter()
+                .map(|name| ObservationLog::new(name))
+                .collect(),
             devices: device_names
                 .into_iter()
                 .map(|name| DeviceStats { name, ..DeviceStats::default() })

@@ -414,6 +414,21 @@ fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
     ds.padded_lanes += (variant - real) as u64;
     metrics.padded_lane_tokens += ((variant - real) * gmax) as u64;
 
+    // structured observation export for the replay loop: the executed
+    // batch exactly as a curve cell would price it (padded geometry,
+    // billed realized steps). The simulated device has no real
+    // StepTrace, so realized steps are the schedule expectation the
+    // service model billed; the live coordinator path records measured
+    // traces instead.
+    metrics.observations[di].push(crate::replay::Observation {
+        variant,
+        seq_len: (pmax + gmax) as u64,
+        gen_tokens: gmax as u64,
+        total_s: total,
+        first_s: first,
+        realized_steps: d.svc.expected_steps,
+    });
+
     for inf in plan.items {
         let queued_s = now - inf.req.arrival_s;
         let ttft = inf.dispatch_s + queued_s + first;

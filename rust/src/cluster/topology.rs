@@ -182,8 +182,24 @@ impl ClusterTopology {
     /// deterministic, so the clone is bit-identical to re-profiling,
     /// and a 30-edge-device fleet calibrates in two profiles, not 30.
     pub fn calibrate(&mut self) {
+        self.calibrate_where(|_| true);
+    }
+
+    /// Like [`Self::calibrate`], but profiles only devices that carry
+    /// no curve yet — a device with an attached curve (e.g. replayed
+    /// from a `calibrate --out` file) keeps it. The replay loop's CLI
+    /// path uses this so `serve-cluster --curve FILE --recalibrate`
+    /// never silently discards the user's measured table.
+    pub fn calibrate_missing(&mut self) {
+        self.calibrate_where(|d| d.curve.is_none());
+    }
+
+    fn calibrate_where<F: Fn(&DeviceSpec) -> bool>(&mut self, select: F) {
         let mut profiled: Vec<(String, LatencyCurve)> = Vec::new();
         for d in &mut self.devices {
+            if !select(d) {
+                continue;
+            }
             let key = format!("{:?}|{:?}|{:?}", d.hw, d.cache,
                               d.batch_variants);
             let curve = match profiled.iter().find(|(k, _)| *k == key) {
@@ -429,6 +445,37 @@ block_len = 32
         assert_eq!(e.device, "edge0");
         assert_eq!(e.variants(), vec![1, 2, 4]);
         assert_ne!(a.variants(), e.variants());
+    }
+
+    #[test]
+    fn calibrate_missing_keeps_attached_curves() {
+        // one device carries a replayed curve, the other is bare:
+        // calibrate_missing must profile only the bare one
+        let mut donor = ClusterTopology::homogeneous(
+            1, HwConfig::dart_edge(), ModelArch::llada_8b(),
+            CacheMode::Dual);
+        donor.calibrate();
+        // make the attached table distinguishable from any re-profile
+        // (the profiler is deterministic, so an unmodified clone would
+        // not prove the curve was *kept* rather than re-measured)
+        let mut attached = donor.devices[0].curve.clone().unwrap();
+        attached.device = "replayed".to_string();
+        attached.points[0].p50_total_s *= 1.5;
+        let mut t = ClusterTopology::homogeneous(
+            2, HwConfig::dart_edge(), ModelArch::llada_8b(),
+            CacheMode::Dual);
+        t.devices[0].curve = Some(attached.clone());
+        t.calibrate_missing();
+        assert!(t.is_calibrated());
+        // device 0 kept the attached table, bit for bit
+        assert_eq!(t.devices[0].curve.as_ref().unwrap().to_text(),
+                   attached.to_text());
+        assert!(t.devices[1].curve.is_some());
+        // full calibrate still overwrites everything, names included
+        t.calibrate();
+        assert_eq!(t.devices[0].curve.as_ref().unwrap().device, "npu0");
+        assert_ne!(t.devices[0].curve.as_ref().unwrap().to_text(),
+                   attached.to_text());
     }
 
     #[test]

@@ -2,12 +2,25 @@
 //! padded-lane waste. Latency percentiles (p50/p95/p99) are backed by a
 //! fixed-size [`crate::stats::Reservoir`], so memory stays bounded under
 //! sustained production load instead of growing with every request.
+//!
+//! Beyond the reservoirs, the metrics carry a **structured observation
+//! export** ([`Metrics::record_observation`]): percentile reservoirs
+//! summarize *how slow* serving was, but cannot attribute a latency to
+//! the (batch variant × seq-len bucket) curve cell that priced it — so
+//! the replay recalibration loop ([`crate::replay`]) gets per-batch
+//! [`Observation`] records instead. The buffer is bounded at
+//! [`Metrics::OBS_CAP`] with the same contract as the latency
+//! reservoir: past the cap, uniform replacement sampling (Algorithm R,
+//! seeded) keeps the retained set representative of the *whole*
+//! stream — a workload shift late in a long day still reaches the
+//! recalibrator instead of being truncated away.
 
 use std::time::Instant;
 
+use crate::replay::{Observation, ObservationLog};
 use crate::stats::Reservoir;
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     pub requests_completed: u64,
     pub tokens_generated: u64,
@@ -19,9 +32,39 @@ pub struct Metrics {
     pub model_s: f64,
     pub sampling_s: f64,
     started: Option<Instant>,
+    /// structured per-batch observations (bounded at [`Self::OBS_CAP`];
+    /// uniform reservoir sample of the stream once full)
+    observations: Vec<Observation>,
+    /// total observations streamed through (>= retained count)
+    pub observations_seen: u64,
+    /// seeded replacement RNG for the observation reservoir
+    obs_rng: crate::util::SplitMix64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests_completed: 0,
+            tokens_generated: 0,
+            batches_run: 0,
+            padded_lanes: 0,
+            latencies: Reservoir::default(),
+            model_s: 0.0,
+            sampling_s: 0.0,
+            started: None,
+            observations: Vec::new(),
+            observations_seen: 0,
+            obs_rng: crate::util::SplitMix64::new(0x0B5E_57A7),
+        }
+    }
 }
 
 impl Metrics {
+    /// Observation-buffer bound: 64 Ki batches of 48-byte records
+    /// (~3 MiB) — a long serving day fits, and the replay loop needs
+    /// thousands, not millions, of samples per curve cell.
+    pub const OBS_CAP: usize = 65_536;
+
     pub fn start(&mut self) {
         self.started = Some(Instant::now());
     }
@@ -37,6 +80,38 @@ impl Metrics {
         self.sampling_s += sampling_s;
         for &l in latencies {
             self.latencies.push(l);
+        }
+    }
+
+    /// Record one executed batch as a curve-cell-attributable
+    /// observation (see [`crate::replay::Observation`]). Bounded:
+    /// once [`Self::OBS_CAP`] records exist, each new observation
+    /// replaces a uniformly chosen slot with probability cap/seen
+    /// (Vitter's Algorithm R, like [`crate::stats::Reservoir`]), so the
+    /// retained set stays representative of the whole stream.
+    pub fn record_observation(&mut self, obs: Observation) {
+        self.observations_seen += 1;
+        if self.observations.len() < Self::OBS_CAP {
+            self.observations.push(obs);
+        } else if let Some(j) = crate::stats::reservoir_slot(
+            self.observations_seen, Self::OBS_CAP, &mut self.obs_rng)
+        {
+            self.observations[j] = obs;
+        }
+    }
+
+    /// The structured observations recorded so far.
+    pub fn observations(&self) -> &[Observation] {
+        &self.observations
+    }
+
+    /// Package the observations as a replayable per-device log — the
+    /// recalibration loop's input (`device` names the curve the log
+    /// should fold into).
+    pub fn observation_log(&self, device: &str) -> ObservationLog {
+        ObservationLog {
+            device: device.to_string(),
+            observations: self.observations.clone(),
         }
     }
 
@@ -105,6 +180,71 @@ mod tests {
         assert_eq!(l.n, 3);
         assert!(m.report().contains("requests 3"));
         assert!(m.report().contains("p99"));
+    }
+
+    #[test]
+    fn observations_cross_check_the_latency_reservoir() {
+        // the structured export and the reservoir view of the same run
+        // must agree: below the reservoir cap both hold every sample,
+        // so their percentile summaries are bit-identical
+        let mut m = Metrics::default();
+        m.start();
+        let mut rng = crate::util::SplitMix64::new(5);
+        for b in 0..200u64 {
+            let latency = 0.01 + rng.next_f64() * 0.05;
+            m.record_batch(1, 1, 64, 0.0, 0.0, &[latency]);
+            m.record_observation(Observation {
+                variant: 1,
+                seq_len: 128 + (b % 4) * 128,
+                gen_tokens: 64,
+                total_s: latency,
+                first_s: latency / 4.0,
+                realized_steps: 16.0,
+            });
+        }
+        assert_eq!(m.observations().len(), 200);
+        assert_eq!(m.observations_seen, 200);
+        let from_reservoir = m.latency_summary().unwrap();
+        let totals: Vec<f64> =
+            m.observations().iter().map(|o| o.total_s).collect();
+        let from_obs = crate::stats::Summary::from_samples(&totals);
+        assert_eq!(from_obs.n, from_reservoir.n);
+        for (a, b) in [(from_obs.p50, from_reservoir.p50),
+                       (from_obs.p95, from_reservoir.p95),
+                       (from_obs.p99, from_reservoir.p99),
+                       (from_obs.max, from_reservoir.max)] {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // and the packaged log round-trips through its text format
+        let log = m.observation_log("npu0");
+        assert_eq!(log.device, "npu0");
+        let text = log.to_text();
+        let back = crate::replay::ObservationLog::from_text(&text).unwrap();
+        assert_eq!(back.observations, log.observations);
+        assert_eq!(back.to_text(), text);
+    }
+
+    #[test]
+    fn observation_buffer_is_bounded_and_samples_the_whole_stream() {
+        let mut m = Metrics::default();
+        let n = Metrics::OBS_CAP + Metrics::OBS_CAP / 2;
+        for i in 0..n {
+            m.record_observation(Observation {
+                variant: 1, seq_len: i as u64, gen_tokens: 64,
+                total_s: 0.01, first_s: 0.002, realized_steps: 16.0,
+            });
+        }
+        assert_eq!(m.observations().len(), Metrics::OBS_CAP);
+        assert_eq!(m.observations_seen, n as u64);
+        // reservoir replacement, not head truncation: observations from
+        // the post-cap tail of the stream must be retained (each tail
+        // record survives with probability cap/seen ≈ 2/3, so ~21k of
+        // the 32k tail records land in the buffer)
+        let tail_retained = m.observations().iter()
+            .filter(|o| o.seq_len >= Metrics::OBS_CAP as u64)
+            .count();
+        assert!(tail_retained > 0,
+                "late observations were truncated away");
     }
 
     #[test]

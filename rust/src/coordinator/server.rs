@@ -207,6 +207,34 @@ fn run_batch(engine: &mut GenerationEngine, reqs: Vec<Request>,
                                  g.total_len - g.prompt_len,
                                  result.model_s, result.sampling_s,
                                  &latencies);
+            // structured export for the replay recalibration loop: the
+            // executed batch as a curve cell sees it, with the *real*
+            // realized steps per block from the generation's StepTrace
+            let blocks = result.step_trace.blocks.len().max(1);
+            let realized_steps = crate::replay::realized_steps_per_block(
+                std::slice::from_ref(&result.step_trace))
+                .unwrap_or(result.steps as f64 / blocks as f64);
+            // first-block share weighted by *realized* forwards: under
+            // adaptive schedules block 0 runs more steps than the
+            // cascade blocks, so an even total/blocks split would
+            // misstate the TTFT component the recalibrator feeds back
+            // into admission (exactly 1/blocks under Fixed, where every
+            // block runs the same count)
+            let total_steps: usize =
+                result.step_trace.blocks.iter().map(|b| b.steps).sum();
+            let first_frac = match result.step_trace.blocks.first() {
+                Some(b0) if total_steps > 0 =>
+                    b0.steps as f64 / total_steps as f64,
+                _ => 1.0 / blocks as f64,
+            };
+            metrics.record_observation(crate::replay::Observation {
+                variant,
+                seq_len: g.total_len as u64,
+                gen_tokens: (g.total_len - g.prompt_len) as u64,
+                total_s: result.total_s(),
+                first_s: result.total_s() * first_frac,
+                realized_steps,
+            });
         }
         Err(e) => {
             eprintln!("dart-coordinator: batch failed: {e:#}");

@@ -40,6 +40,14 @@
 //!   text format, and threaded through the batcher's cost-based flush
 //!   policy and the scheduler's percentile TTFT admission predictor
 //!   (`calibrate` in the CLI, `calib_policies` in the benches);
+//! * [`replay`] — closed-loop recalibration above calib + cluster:
+//!   measured serving observations (per-batch latency, variant,
+//!   seq-len cell, realized steps) drain into a replayable
+//!   `ObservationLog` and fold back into the curve tables via a
+//!   fixed-point-exact percentile blend, so admission and batching
+//!   re-price from what serving actually measured
+//!   (`serve-cluster --recalibrate` in the CLI, `recalib_loop` in the
+//!   benches, `rust/tests/recalib_convergence.rs` the gate);
 //! * [`study`] — the fleet study harness above cluster + calib:
 //!   parameterized experiment grids (fleet shape × router policy ×
 //!   admission mode under diurnal traces) whose output artifact is a
@@ -64,6 +72,7 @@ pub mod isa;
 pub mod kvcache;
 pub mod mem;
 pub mod quant;
+pub mod replay;
 pub mod report;
 pub mod runtime;
 pub mod sampling;

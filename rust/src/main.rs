@@ -55,7 +55,7 @@ fn main() {
             eprintln!("                --trace-out FILE | --replay FILE \
                        --link pcie|nvlink|eth --config FILE --diurnal [SECS]");
             eprintln!("                --length-mix SWING \
-                       --schedule fixed|conf|slowfast");
+                       --schedule fixed|conf|slowfast --recalibrate");
             eprintln!("  fleet-study --seed N --out FILE --requests N \
                        --load FRAC | --smoke");
             eprintln!("  calibrate --presets default,edge --variants \"1,2,4,8,16\" \
@@ -264,6 +264,40 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
     let policy = RoutePolicy::parse(args.get_or("router", "least"))
         .expect("bad --router (least|rr|variant)");
 
+    // --recalibrate: close the replay loop end-to-end. Serve the trace
+    // once as a warm-up, fold the measured per-batch observations back
+    // into every device's curve (delta-form percentile blend), report
+    // the before/after pricing error, then fall through to the real run
+    // below with the self-tuned curves attached.
+    if args.has("recalibrate") {
+        if !topo.is_calibrated() {
+            // fill in only the devices that lack a curve: a table the
+            // user attached via --curve must survive the warm-up
+            let missing = topo.devices.iter()
+                .filter(|d| d.curve.is_none())
+                .count();
+            topo.calibrate_missing();
+            println!("calibrated {missing} uncalibrated devices for the \
+                      recalibration warm-up");
+        }
+        println!("\n== replay warm-up: serving {} requests to collect \
+                  observations ==", trace.len());
+        let warm = FleetSim::new(topo.clone(), policy, slo).run(&trace);
+        let before = dart::replay::fleet_pricing_error(&topo, &warm);
+        let deltas = dart::replay::recalibrate_fleet(
+            &mut topo, &warm, &dart::replay::RecalibConfig::default());
+        let after = dart::replay::fleet_pricing_error(&topo, &warm);
+        dart::replay::render_pricing_report(&topo, &warm, &before, &after,
+                                            &deltas)
+            .print();
+        // total quantile: an all-shed warm-up has an empty reservoir
+        println!("warm-up: goodput {:.1} tok/s, shed {}, p95 TTFT {} — \
+                  re-serving with recalibrated curves\n",
+                 warm.goodput_tps(), warm.shed(),
+                 dart::stats::fmt_time(
+                     warm.ttft.quantile(0.95).unwrap_or(0.0)));
+    }
+
     println!("== DART fleet: {} devices x {}, {} cache, {} router, \
               {} schedule ==",
              topo.n_devices(), topo.model.name,
@@ -407,7 +441,7 @@ fn cmd_fleet_study(args: &Args) -> i32 {
         None
     };
 
-    eprintln!("fleet-study: {} shapes x {} policies x 2 admission modes \
+    eprintln!("fleet-study: {} shapes x {} policies x 3 admission modes \
                x {} schedules = {} cells, seed {}",
               cfg.shapes.len(), cfg.policies.len(), cfg.schedules.len(),
               n_cells, seed);

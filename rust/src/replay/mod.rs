@@ -1,0 +1,47 @@
+//! Closed-loop recalibration from measured serving metrics.
+//!
+//! Every pricing decision in the serving stack — cost-based batching,
+//! percentile TTFT admission, the study grid's calibrated cells — bills
+//! from [`crate::calib::LatencyCurve`]s profiled *once* through the
+//! analytical path. Production dLLM serving drifts away from any static
+//! cost model: realized step counts are workload-dependent under
+//! adaptive schedules, and measured batch latencies wander from the
+//! jittered profiling draws. This subsystem closes the loop
+//! (docs/ARCHITECTURE.md substitution S9):
+//!
+//! ```text
+//!   serve ──▶ observe ──▶ recalibrate ──▶ re-price ──▶ serve …
+//! ```
+//!
+//! * [`observation`] — [`Observation`] (one executed batch as the curve
+//!   table sees it: variant, seq-len, measured total/first latency,
+//!   realized steps per block) and [`ObservationLog`], the per-device
+//!   replayable text format (`# dart-observation-log v1`). The
+//!   coordinator's [`crate::coordinator::Metrics`] exports them from
+//!   real serving; [`crate::cluster::FleetMetrics`] carries one log per
+//!   simulated device.
+//! * [`recalibrate`] — [`Recalibrator`], the delta-form percentile
+//!   blend (`new = prior + blend · (measured − prior)`) whose fixed
+//!   point is exact: a curve recalibrated from its own observations
+//!   ([`ObservationLog::from_curve`]) is bit-identical, and a wrong
+//!   curve's pricing error contracts by `(1 − blend)` per round.
+//!   [`pricing_error`] / [`fleet_pricing_error`] measure progress,
+//!   [`recalibrate_fleet`] applies a round to a served topology, and
+//!   [`realized_steps_per_block`] re-estimates the expected-steps
+//!   dimension from measured [`crate::schedule::StepTrace`]s.
+//!
+//! This PR's archetype is *test*, so the loop ships gated:
+//! `rust/tests/recalib_convergence.rs` proves the fixed-point,
+//! monotone-convergence and determinism properties; the `recalib_loop`
+//! bench reports before/after pricing error and the static vs profiled
+//! vs recalibrated serving deltas; `serve-cluster --recalibrate` runs
+//! warm-up → recalibrate → re-serve end-to-end.
+
+pub mod observation;
+pub mod recalibrate;
+
+pub use observation::{Observation, ObservationLog};
+pub use recalibrate::{fleet_pricing_error, pricing_error,
+                      realized_steps_per_block, recalibrate_fleet,
+                      render_pricing_report, CellPricing, PricingError,
+                      RecalibConfig, Recalibrator};

@@ -1,0 +1,236 @@
+//! Measured serving observations and their replayable log format.
+//!
+//! An [`Observation`] is one executed batch as the curve table sees it:
+//! which compiled variant ran, at what total-sequence-length, what the
+//! batch actually cost (total and first-block seconds), and how many
+//! denoising steps per block it really ran. [`ObservationLog`] collects
+//! them per device and persists to a plain-text format in the same
+//! hand-rolled style as the calib curves and cluster traces
+//! (`# dart-observation-log v1`), so a serving run can be captured once
+//! and recalibrated against repeatedly.
+//!
+//! [`ObservationLog::from_curve`] synthesizes the log a curve would
+//! emit about itself — per cell, a sample set whose p50/p95 quantiles
+//! are **bit-exactly** the cell's recorded percentiles — which is how
+//! the test net states the fixed-point property: recalibrating from a
+//! curve's own observations must leave the curve bit-identical.
+
+use crate::calib::LatencyCurve;
+
+/// One measured batch execution, attributable to a curve cell.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Observation {
+    /// compiled batch variant that executed
+    pub variant: usize,
+    /// total sequence length (prompt + gen) per lane, the curve's
+    /// bucket axis
+    pub seq_len: u64,
+    /// generated tokens per lane
+    pub gen_tokens: u64,
+    /// measured total batch latency, seconds
+    pub total_s: f64,
+    /// measured first-block latency (the TTFT service component)
+    pub first_s: f64,
+    /// realized denoising steps per block (fractional: a generation's
+    /// realized step count over its block count; equal to the schedule
+    /// cap under `Fixed`)
+    pub realized_steps: f64,
+}
+
+/// A device's measured observation stream, replayable as text.
+#[derive(Clone, Debug, Default)]
+pub struct ObservationLog {
+    pub device: String,
+    pub observations: Vec<Observation>,
+}
+
+/// Per cell, [`ObservationLog::from_curve`] emits 12 samples at the
+/// cell's p50 and 9 at its p95: sorted, quantile(0.50) lands inside the
+/// p50-run and quantile(0.95) inside the p95-run, so both come back
+/// bit-exact (interpolating between equal values is the value).
+const SELF_SAMPLES_P50: usize = 12;
+const SELF_SAMPLES_P95: usize = 9;
+
+impl ObservationLog {
+    pub fn new(device: &str) -> Self {
+        ObservationLog { device: device.to_string(), observations: Vec::new() }
+    }
+
+    pub fn push(&mut self, obs: Observation) {
+        self.observations.push(obs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.observations.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.observations.is_empty()
+    }
+
+    /// The log a curve generates about itself: for every cell, a
+    /// deterministic sample set whose extracted percentiles equal the
+    /// cell's recorded ones bit-for-bit, with every observation's
+    /// realized steps at the curve's recorded expectation. The
+    /// recalibration fixed-point test (and any caller bootstrapping a
+    /// measurement loop before real traffic exists) builds on this.
+    pub fn from_curve(curve: &LatencyCurve) -> Self {
+        let mut log = ObservationLog::new(&curve.device);
+        for p in &curve.points {
+            let seq_len = (p.bucket_lo + p.bucket_hi) / 2;
+            let mk = |total_s: f64, first_s: f64| Observation {
+                variant: p.variant,
+                seq_len,
+                gen_tokens: p.gen_tokens,
+                total_s,
+                first_s,
+                realized_steps: curve.expected_steps,
+            };
+            for _ in 0..SELF_SAMPLES_P50 {
+                log.push(mk(p.p50_total_s, p.p50_first_s));
+            }
+            for _ in 0..SELF_SAMPLES_P95 {
+                log.push(mk(p.p95_total_s, p.p95_first_s));
+            }
+        }
+        log
+    }
+
+    // ---- persistence -----------------------------------------------------
+
+    /// Serialize to the replay format: header, `device` line, one row
+    /// per observation (17 significant digits — f64 round-trips
+    /// exactly, like the curve format).
+    pub fn to_text(&self) -> String {
+        let mut s = String::from("# dart-observation-log v1\n");
+        s.push_str(&format!("device {}\n", self.device));
+        s.push_str("# variant seq_len gen_tokens total_s first_s \
+                    realized_steps\n");
+        for o in &self.observations {
+            s.push_str(&format!(
+                "{} {} {} {:.17e} {:.17e} {:.17e}\n",
+                o.variant, o.seq_len, o.gen_tokens,
+                o.total_s, o.first_s, o.realized_steps));
+        }
+        s
+    }
+
+    /// Parse the replay format (whitespace-separated, `#` comments
+    /// ignored). Row order is preserved — an observation stream is a
+    /// record of what happened, not a table to re-sort.
+    pub fn from_text(text: &str) -> Result<Self, String> {
+        let mut device = String::from("unknown");
+        let mut observations = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("device ") {
+                device = name.trim().to_string();
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 6 {
+                return Err(format!(
+                    "observation line {}: expected 6 fields, got {}",
+                    i + 1, f.len()));
+            }
+            let err = |what: &str| {
+                format!("observation line {}: bad {what} {:?}", i + 1, line)
+            };
+            let fnum = |j: usize, what: &str| -> Result<f64, String> {
+                let v: f64 = f[j].parse().map_err(|_| err(what))?;
+                if v.is_finite() && v >= 0.0 {
+                    Ok(v)
+                } else {
+                    Err(err(what))
+                }
+            };
+            observations.push(Observation {
+                variant: f[0].parse().map_err(|_| err("variant"))?,
+                seq_len: f[1].parse().map_err(|_| err("seq_len"))?,
+                gen_tokens: f[2].parse().map_err(|_| err("gen_tokens"))?,
+                total_s: fnum(3, "total_s")?,
+                first_s: fnum(4, "first_s")?,
+                realized_steps: fnum(5, "realized_steps")?,
+            });
+        }
+        Ok(ObservationLog { device, observations })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::curve::CurvePoint;
+    use crate::stats::quantile;
+
+    fn sample_log() -> ObservationLog {
+        let mut log = ObservationLog::new("npu0");
+        log.push(Observation {
+            variant: 4, seq_len: 300, gen_tokens: 192,
+            total_s: 0.0321, first_s: 0.0081, realized_steps: 16.0 });
+        log.push(Observation {
+            variant: 1, seq_len: 120, gen_tokens: 64,
+            total_s: 0.011, first_s: 0.003, realized_steps: 9.25 });
+        log
+    }
+
+    #[test]
+    fn text_roundtrip_is_byte_identical() {
+        let log = sample_log();
+        let text1 = log.to_text();
+        let back = ObservationLog::from_text(&text1).unwrap();
+        assert_eq!(back.device, "npu0");
+        assert_eq!(back.observations, log.observations);
+        assert_eq!(back.to_text(), text1);
+    }
+
+    #[test]
+    fn malformed_logs_rejected() {
+        assert!(ObservationLog::from_text("1 2 3").is_err());
+        assert!(ObservationLog::from_text("x 300 192 1 1 16").is_err());
+        assert!(ObservationLog::from_text("4 300 192 nan 1 16").is_err());
+        assert!(ObservationLog::from_text("4 300 192 1 -1 16").is_err());
+        let empty = ObservationLog::from_text("# comments only\n").unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(empty.len(), 0);
+    }
+
+    #[test]
+    fn self_log_quantiles_reproduce_the_cell_bit_exactly() {
+        // the mechanism the fixed-point property rests on: per cell,
+        // quantile(0.50) == p50 and quantile(0.95) == p95, bit for bit
+        let p = CurvePoint {
+            variant: 4, bucket_lo: 96, bucket_hi: 256, gen_tokens: 117,
+            p50_total_s: 0.0123456789, p95_total_s: 0.0150000001,
+            p50_first_s: 0.0031, p95_first_s: 0.0042, samples: 5,
+        };
+        let curve = crate::calib::LatencyCurve::new("npu0", vec![p])
+            .with_schedule(16, 9.25);
+        let log = ObservationLog::from_curve(&curve);
+        assert_eq!(log.len(), SELF_SAMPLES_P50 + SELF_SAMPLES_P95);
+        let totals: Vec<f64> =
+            log.observations.iter().map(|o| o.total_s).collect();
+        let firsts: Vec<f64> =
+            log.observations.iter().map(|o| o.first_s).collect();
+        assert_eq!(quantile(&totals, 0.50).to_bits(),
+                   p.p50_total_s.to_bits());
+        assert_eq!(quantile(&totals, 0.95).to_bits(),
+                   p.p95_total_s.to_bits());
+        assert_eq!(quantile(&firsts, 0.50).to_bits(),
+                   p.p50_first_s.to_bits());
+        assert_eq!(quantile(&firsts, 0.95).to_bits(),
+                   p.p95_first_s.to_bits());
+        // realized steps carry the curve's recorded expectation, and
+        // their median is that expectation bit-exactly
+        let steps: Vec<f64> =
+            log.observations.iter().map(|o| o.realized_steps).collect();
+        assert_eq!(quantile(&steps, 0.50).to_bits(), 9.25f64.to_bits());
+        // every observation routes back to its own cell
+        for o in &log.observations {
+            assert_eq!(curve.lookup_index(o.variant, o.seq_len), Some(0));
+        }
+    }
+}

@@ -78,11 +78,10 @@ impl Reservoir {
         self.seen += 1;
         if self.samples.len() < self.cap {
             self.samples.push(v);
-        } else {
-            let j = self.rng.next_u64() % self.seen;
-            if (j as usize) < self.cap {
-                self.samples[j as usize] = v;
-            }
+        } else if let Some(j) =
+            reservoir_slot(self.seen, self.cap, &mut self.rng)
+        {
+            self.samples[j] = v;
         }
     }
 
@@ -111,22 +110,80 @@ impl Reservoir {
             Some(Summary::from_samples(&self.samples))
         }
     }
+
+    /// Linear-interpolated quantile over the retained samples. Total:
+    /// `None` on an empty reservoir, the sample itself at n = 1 — no
+    /// panic and no out-of-bounds index at any fill level, so callers
+    /// (e.g. the `serve-cluster --recalibrate` warm-up summary) can
+    /// query percentiles before any traffic has completed.
+    pub fn quantile(&self, p: f64) -> Option<f64> {
+        quantile_opt(&self.samples, p)
+    }
 }
 
-/// Linear-interpolated quantile over an unsorted, non-empty sample set
-/// (`p` clamped to [0, 1]) — the calibration profiler's percentile
-/// extractor; `Summary::from_samples` keeps its nearest-rank convention
-/// for backward-comparable bench reports.
-pub fn quantile(samples: &[f64], p: f64) -> f64 {
-    assert!(!samples.is_empty(), "quantile of empty sample set");
+/// The Algorithm R replacement decision: with `seen` items streamed so
+/// far (including the current one) and a full buffer of `cap` slots,
+/// returns the slot the current item should overwrite — each item is
+/// retained with probability cap/seen — or `None` to discard it. The
+/// single home of the sampling invariant shared by [`Reservoir::push`]
+/// and the coordinator's bounded observation buffer
+/// ([`crate::coordinator::Metrics::record_observation`]).
+pub fn reservoir_slot(seen: u64, cap: usize,
+                      rng: &mut crate::util::SplitMix64) -> Option<usize> {
+    let j = rng.next_u64() % seen.max(1);
+    if (j as usize) < cap {
+        Some(j as usize)
+    } else {
+        None
+    }
+}
+
+/// `(max, mean)` of a series of non-negative relative errors; `(0.0,
+/// 0.0)` on an empty series — the one rollup convention behind
+/// [`crate::calib::CurveDelta`] and [`crate::replay::PricingError`].
+pub fn max_mean(values: impl Iterator<Item = f64>) -> (f64, f64) {
+    let (mut max, mut sum, mut n) = (0.0f64, 0.0f64, 0usize);
+    for v in values {
+        max = max.max(v);
+        sum += v;
+        n += 1;
+    }
+    (max, if n == 0 { 0.0 } else { sum / n as f64 })
+}
+
+/// Total version of [`quantile`]: `None` on an empty sample set instead
+/// of panicking. A single sample is its own quantile at every `p`; two
+/// samples interpolate between min and max.
+pub fn quantile_opt(samples: &[f64], p: f64) -> Option<f64> {
     let mut s = samples.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_of_sorted(&s, p)
+}
+
+/// The allocation-free core of [`quantile_opt`]: linear-interpolated
+/// quantile over an *already ascending-sorted* sample set. For callers
+/// that sort once and read several percentiles (the replay
+/// recalibrator reads p50 and p95 of every cell) — bit-identical to
+/// [`quantile_opt`] on the same data.
+pub fn quantile_of_sorted(s: &[f64], p: f64) -> Option<f64> {
+    if s.is_empty() {
+        return None;
+    }
     let p = p.clamp(0.0, 1.0);
     let pos = p * (s.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
     let frac = pos - lo as f64;
-    s[lo] + (s[hi] - s[lo]) * frac
+    Some(s[lo] + (s[hi] - s[lo]) * frac)
+}
+
+/// Linear-interpolated quantile over an unsorted, non-empty sample set
+/// (`p` clamped to [0, 1]) — the calibration profiler's percentile
+/// extractor; `Summary::from_samples` keeps its nearest-rank convention
+/// for backward-comparable bench reports. Callers that cannot prove
+/// non-emptiness use [`quantile_opt`] or [`Reservoir::quantile`].
+pub fn quantile(samples: &[f64], p: f64) -> f64 {
+    quantile_opt(samples, p).expect("quantile of empty sample set")
 }
 
 /// A single benchmark result with throughput accounting.
@@ -300,6 +357,97 @@ mod tests {
     fn reservoir_empty_summary_is_none() {
         assert!(Reservoir::new(4).summary().is_none());
         assert!(Reservoir::new(4).is_empty());
+    }
+
+    #[test]
+    fn reservoir_quantile_is_total_at_every_fill_level() {
+        // n = 0: a defined value (None), not a panic or OOB index
+        let mut r = Reservoir::new(8);
+        assert_eq!(r.quantile(0.5), None);
+        assert_eq!(r.quantile(0.0), None);
+        assert_eq!(r.quantile(1.0), None);
+        // n = 1: the lone sample is every quantile
+        r.push(3.5);
+        for p in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(r.quantile(p), Some(3.5), "p={p}");
+        }
+        // n = 2: endpoints exact, interior interpolates
+        r.push(1.5);
+        assert_eq!(r.quantile(0.0), Some(1.5));
+        assert_eq!(r.quantile(1.0), Some(3.5));
+        assert!((r.quantile(0.5).unwrap() - 2.5).abs() < 1e-12);
+        // out-of-range p clamps instead of indexing out of bounds
+        assert_eq!(r.quantile(-1.0), Some(1.5));
+        assert_eq!(r.quantile(2.0), Some(3.5));
+    }
+
+    #[test]
+    fn quantile_exact_percentile_boundaries() {
+        // 5 samples: p = k/4 lands exactly on sample k (integer
+        // positions, frac = 0 — no interpolation error)
+        let s = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(quantile_opt(&s, 0.0), Some(10.0));
+        assert_eq!(quantile_opt(&s, 0.25), Some(20.0));
+        assert_eq!(quantile_opt(&s, 0.5), Some(30.0));
+        assert_eq!(quantile_opt(&s, 0.75), Some(40.0));
+        assert_eq!(quantile_opt(&s, 1.0), Some(50.0));
+        assert_eq!(quantile_opt(&[], 0.5), None);
+        // the asserting wrapper matches the total one on non-empty input
+        assert_eq!(quantile(&s, 0.75), 40.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "quantile of empty sample set")]
+    fn quantile_of_empty_still_panics_loudly() {
+        quantile(&[], 0.5);
+    }
+
+    #[test]
+    fn reservoir_slot_replaces_with_cap_over_seen_probability() {
+        // retained fraction over many draws approaches cap/seen, and
+        // every returned slot is in range
+        let mut rng = crate::util::SplitMix64::new(3);
+        let (cap, seen) = (64usize, 256u64);
+        let mut kept = 0usize;
+        for _ in 0..10_000 {
+            if let Some(j) = reservoir_slot(seen, cap, &mut rng) {
+                assert!(j < cap);
+                kept += 1;
+            }
+        }
+        let frac = kept as f64 / 10_000.0;
+        assert!((frac - 0.25).abs() < 0.03, "kept {frac}");
+        // seen = 0 misuse is guarded, not a mod-zero panic
+        assert!(reservoir_slot(0, 4, &mut rng).is_some());
+    }
+
+    #[test]
+    fn max_mean_rollup() {
+        let (max, mean) = max_mean([0.1, 0.5, 0.3].into_iter());
+        assert!((max - 0.5).abs() < 1e-12);
+        assert!((mean - 0.3).abs() < 1e-12);
+        assert_eq!(max_mean(std::iter::empty()), (0.0, 0.0));
+        let (m1, a1) = max_mean(std::iter::once(0.7));
+        assert_eq!((m1.to_bits(), a1.to_bits()),
+                   (0.7f64.to_bits(), 0.7f64.to_bits()));
+    }
+
+    #[test]
+    fn quantile_of_sorted_matches_quantile_opt_bit_for_bit() {
+        let mut rng = crate::util::SplitMix64::new(13);
+        for n in [1usize, 2, 3, 21, 100] {
+            let samples: Vec<f64> =
+                (0..n).map(|_| rng.next_f64() * 10.0).collect();
+            let mut sorted = samples.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for p in [0.0, 0.25, 0.5, 0.95, 1.0] {
+                assert_eq!(
+                    quantile_of_sorted(&sorted, p).unwrap().to_bits(),
+                    quantile_opt(&samples, p).unwrap().to_bits(),
+                    "n={n} p={p}");
+            }
+        }
+        assert_eq!(quantile_of_sorted(&[], 0.5), None);
     }
 
     #[test]

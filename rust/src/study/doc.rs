@@ -11,7 +11,7 @@ use crate::report::{self, MarkdownDoc, Table};
 use crate::schedule::ScheduleSpec;
 use crate::stats::fmt_time;
 
-use super::grid::{CellResult, StudyResult};
+use super::grid::{AdmissionMode, CellResult, StudyResult};
 
 /// One policy-sweep table row for a cell. `baseline_goodput` prices the
 /// delta column; `is_baseline` marks the reference row itself. Public
@@ -77,7 +77,7 @@ fn analysis_paras(r: &StudyResult) -> Vec<String> {
         let vs = match base {
             Some(b) if b.metrics.goodput_tps() > 0.0
                 && !(b.policy == best.policy
-                     && b.calibrated == best.calibrated) =>
+                     && b.admission == best.admission) =>
                 format!(" ({} vs the {} {} baseline)",
                         report::signed_pct(
                             (best.metrics.goodput_tps()
@@ -85,7 +85,7 @@ fn analysis_paras(r: &StudyResult) -> Vec<String> {
                             / b.metrics.goodput_tps()),
                         b.policy.name(), b.admission_label()),
             Some(b) if b.policy == best.policy
-                && b.calibrated == best.calibrated =>
+                && b.admission == best.admission =>
                 " (the baseline cell itself)".to_string(),
             _ => String::new(),
         };
@@ -121,10 +121,10 @@ fn analysis_paras(r: &StudyResult) -> Vec<String> {
         let mut hd = Vec::new();
         for s in &r.shapes {
             for &policy in &r.cfg.policies {
-                for calibrated in [false, true] {
-                    let fixed = r.cell(&s.shape.name, policy, calibrated,
+                for admission in AdmissionMode::ALL {
+                    let fixed = r.cell(&s.shape.name, policy, admission,
                                        ScheduleSpec::Fixed);
-                    let adp = r.cell(&s.shape.name, policy, calibrated,
+                    let adp = r.cell(&s.shape.name, policy, admission,
                                      schedule);
                     if let (Some(f), Some(a)) = (fixed, adp) {
                         if f.metrics.goodput_tps() > 0.0 {
@@ -165,8 +165,10 @@ fn analysis_paras(r: &StudyResult) -> Vec<String> {
     for s in &r.shapes {
         for &policy in &r.cfg.policies {
             for &schedule in &r.cfg.schedules {
-                let stat = r.cell(&s.shape.name, policy, false, schedule);
-                let cal = r.cell(&s.shape.name, policy, true, schedule);
+                let stat = r.cell(&s.shape.name, policy,
+                                  AdmissionMode::Static, schedule);
+                let cal = r.cell(&s.shape.name, policy,
+                                 AdmissionMode::Calibrated, schedule);
                 if let (Some(st), Some(ca)) = (stat, cal) {
                     if st.metrics.goodput_tps() > 0.0 {
                         gdeltas.push((ca.metrics.goodput_tps()
@@ -193,6 +195,43 @@ fn analysis_paras(r: &StudyResult) -> Vec<String> {
         report::signed_pct(mean(&gdeltas)),
         report::signed_pct(mean(&sdeltas)),
         report::signed_pct(mean(&pdeltas))));
+
+    // recalibrated vs calibrated: what one replay round of the
+    // measurement loop buys over the profiler's jittered draws
+    let mut rg = Vec::new();
+    let mut rs = Vec::new();
+    for s in &r.shapes {
+        for &policy in &r.cfg.policies {
+            for &schedule in &r.cfg.schedules {
+                let cal = r.cell(&s.shape.name, policy,
+                                 AdmissionMode::Calibrated, schedule);
+                let rec = r.cell(&s.shape.name, policy,
+                                 AdmissionMode::Recalibrated, schedule);
+                if let (Some(ca), Some(re)) = (cal, rec) {
+                    if ca.metrics.goodput_tps() > 0.0 {
+                        rg.push((re.metrics.goodput_tps()
+                                 - ca.metrics.goodput_tps())
+                                / ca.metrics.goodput_tps());
+                    }
+                    rs.push(re.metrics.shed_frac()
+                            - ca.metrics.shed_frac());
+                }
+            }
+        }
+    }
+    if !rg.is_empty() || !rs.is_empty() {
+        paras.push(format!(
+            "The recalibrated arm closes the replay loop: each unit \
+             serves its trace once as a warm-up, folds the measured \
+             per-batch observations back into the curve table \
+             (delta-form percentile blend), and re-serves with the \
+             self-tuned pricing. Against the profiled curves it moves \
+             goodput by {} and shed rate by {} on matched cells — the \
+             direction and size of that delta is exactly the pricing \
+             error the static profile was carrying.",
+            report::signed_pct(mean(&rg)),
+            report::signed_pct(mean(&rs))));
+    }
 
     // router tradeoff: padding vs goodput, averaged over the grid
     let mut per_policy = Vec::new();
@@ -261,23 +300,25 @@ pub fn render_study(r: &StudyResult) -> String {
         .collect::<Vec<_>>()
         .join("/");
     d.para(&format!(
-        "Grid: {} fleet shapes × {} router policies × 2 admission modes \
-         (static analytic scalars vs measured latency curves) × {} \
-         denoising schedules ({schedule_names}), {} requests per cell \
-         at {} of each shape's analytic token capacity, under a diurnal \
-         envelope spanning {} simulated days (swing {}, so the peak \
-         offers ~{}x the mean rate). Adaptive schedules are priced at \
-         their expected realized steps throughout — admission, batching \
-         and calibration all bill realized rather than configured \
-         steps. Model: {}, {} cache. Baseline cell for the delta \
-         column: {} routing with {} admission under the fixed schedule.",
+        "Grid: {} fleet shapes × {} router policies × 3 admission modes \
+         (static analytic scalars vs profiled latency curves vs \
+         warm-up-recalibrated curves — the replay loop's third arm) × \
+         {} denoising schedules ({schedule_names}), {} requests per \
+         cell at {} of each shape's analytic token capacity, under a \
+         diurnal envelope spanning {} simulated days (swing {}, so the \
+         peak offers ~{}x the mean rate). Adaptive schedules are priced \
+         at their expected realized steps throughout — admission, \
+         batching and calibration all bill realized rather than \
+         configured steps. Model: {}, {} cache. Baseline cell for the \
+         delta column: {} routing with {} admission under the fixed \
+         schedule.",
         cfg.shapes.len(), cfg.policies.len(), cfg.schedules.len(),
         cfg.requests_per_cell,
         report::pct(cfg.load), report::f1(cfg.envelope_periods),
         report::f2(cfg.envelope_swing),
         report::f2(1.0 + cfg.envelope_swing), cfg.model.name,
         cfg.cache.name(), cfg.baseline_policy.name(),
-        if cfg.baseline_calibrated { "calibrated" } else { "static" }));
+        cfg.baseline_admission.label()));
 
     d.h2("Fleet shapes");
     let mut shapes = Table::new("", &[
@@ -312,7 +353,7 @@ pub fn render_study(r: &StudyResult) -> String {
             .map(|b| b.metrics.goodput_tps());
         for c in r.shape_cells(&s.shape.name) {
             let is_base = c.policy == cfg.baseline_policy
-                && c.calibrated == cfg.baseline_calibrated
+                && c.admission == cfg.baseline_admission
                 && c.schedule == ScheduleSpec::Fixed;
             t.row(&cell_row(c, base_goodput, is_base));
         }
@@ -366,7 +407,7 @@ mod tests {
             devices: 2,
             policy: RoutePolicy::VariantAware,
             schedule: ScheduleSpec::slowfast_default(),
-            calibrated: true,
+            admission: AdmissionMode::Calibrated,
             metrics: m,
         }
     }
@@ -406,14 +447,15 @@ mod tests {
                        "## Reproducibility", "(base)", "fleet-study",
                        "homogeneous-2", "mixed-3", "| router |",
                        "| schedule |", "denoising schedules",
-                       "realizes ~", "| slowfast |"] {
+                       "realizes ~", "| slowfast |", "| recalibrated |",
+                       "replay loop"] {
             assert!(a.contains(needle), "study doc missing {needle:?}");
         }
         // one sweep row per (schedule, admission, policy) cell of each
         // shape
         let rows = a.matches("| round-robin |").count()
             + a.matches("| least-outstanding |").count();
-        assert_eq!(rows, 16,
-                   "2 shapes x 2 schedules x 2 admission x 2 policies");
+        assert_eq!(rows, 24,
+                   "2 shapes x 2 schedules x 3 admission x 2 policies");
     }
 }

@@ -1,6 +1,10 @@
 //! The study grid runner: fleet shape × schedule policy × router policy
 //! × admission mode over per-shape diurnal traces, one [`FleetMetrics`]
-//! per cell.
+//! per cell. Admission sweeps three arms ([`AdmissionMode`]): static
+//! analytic scalars, profiled measured curves, and *recalibrated*
+//! curves — profiled, then folded toward the observations of a warm-up
+//! serving pass over the same trace (the replay loop,
+//! [`crate::replay::recalibrate_fleet`]).
 //!
 //! Determinism contract: every cell is a pure function of
 //! [`StudyConfig`] — traces come from the seeded [`crate::util::Lcg64`]
@@ -19,7 +23,36 @@ use crate::cluster::{chat_offered_rps, fleet_capacity_tps, generate_trace,
                      Arrival, ClusterTopology, Diurnal, FleetMetrics,
                      FleetSim, RoutePolicy, SloConfig, TraceSpec};
 use crate::config::{CacheMode, HwConfig, ModelArch};
+use crate::replay::{recalibrate_fleet, RecalibConfig};
 use crate::schedule::ScheduleSpec;
+
+/// What the admission predictor and flush policy price from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// analytic scalars + static batcher (no curves attached)
+    Static,
+    /// measured curves straight from the profiler
+    Calibrated,
+    /// profiled curves folded toward a warm-up serving pass's measured
+    /// observations (one replay round, [`crate::replay::Recalibrator`])
+    Recalibrated,
+}
+
+impl AdmissionMode {
+    pub const ALL: [AdmissionMode; 3] = [
+        AdmissionMode::Static,
+        AdmissionMode::Calibrated,
+        AdmissionMode::Recalibrated,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionMode::Static => "static",
+            AdmissionMode::Calibrated => "calibrated",
+            AdmissionMode::Recalibrated => "recalibrated",
+        }
+    }
+}
 
 /// One fleet shape in the sweep: `n_dc` datacenter devices
 /// ([`HwConfig::dart_default`]) plus `n_edge` edge devices
@@ -82,7 +115,7 @@ pub struct StudyConfig {
     pub cache: CacheMode,
     /// the named baseline cell for per-cell delta columns
     pub baseline_policy: RoutePolicy,
-    pub baseline_calibrated: bool,
+    pub baseline_admission: AdmissionMode,
 }
 
 impl StudyConfig {
@@ -112,7 +145,7 @@ impl StudyConfig {
             model: ModelArch::llada_8b(),
             cache: CacheMode::Dual,
             baseline_policy: RoutePolicy::LeastOutstanding,
-            baseline_calibrated: false,
+            baseline_admission: AdmissionMode::Static,
         }
     }
 
@@ -136,17 +169,18 @@ impl StudyConfig {
             model: ModelArch::llada_8b(),
             cache: CacheMode::Dual,
             baseline_policy: RoutePolicy::LeastOutstanding,
-            baseline_calibrated: false,
+            baseline_admission: AdmissionMode::Static,
         }
     }
 
-    fn admission_modes(&self) -> [bool; 2] {
-        [false, true]
+    fn admission_modes(&self) -> [AdmissionMode; 3] {
+        AdmissionMode::ALL
     }
 
     /// Cells in the grid: shapes × schedules × admission × routers.
     pub fn n_cells(&self) -> usize {
-        self.shapes.len() * self.schedules.len() * 2 * self.policies.len()
+        self.shapes.len() * self.schedules.len()
+            * self.admission_modes().len() * self.policies.len()
     }
 }
 
@@ -159,15 +193,15 @@ pub struct CellResult {
     /// the denoising schedule the fleet served (and, when calibrated,
     /// profiled) under
     pub schedule: ScheduleSpec,
-    /// true = measured curves attached (cost-based batching + p95 TTFT
-    /// admission); false = analytic scalars + static batcher
-    pub calibrated: bool,
+    /// what admission/batching priced from: analytic scalars, profiled
+    /// curves, or warm-up-recalibrated curves
+    pub admission: AdmissionMode,
     pub metrics: FleetMetrics,
 }
 
 impl CellResult {
     pub fn admission_label(&self) -> &'static str {
-        if self.calibrated { "calibrated" } else { "static" }
+        self.admission.label()
     }
 }
 
@@ -196,11 +230,12 @@ pub struct StudyResult {
 }
 
 impl StudyResult {
-    pub fn cell(&self, shape: &str, policy: RoutePolicy, calibrated: bool,
-                schedule: ScheduleSpec) -> Option<&CellResult> {
+    pub fn cell(&self, shape: &str, policy: RoutePolicy,
+                admission: AdmissionMode, schedule: ScheduleSpec)
+                -> Option<&CellResult> {
         self.cells.iter().find(|c| c.shape == shape
                                && c.policy == policy
-                               && c.calibrated == calibrated
+                               && c.admission == admission
                                && c.schedule == schedule)
     }
 
@@ -208,7 +243,7 @@ impl StudyResult {
     /// configured baseline router/admission under the fixed schedule.
     pub fn baseline(&self, shape: &str) -> Option<&CellResult> {
         self.cell(shape, self.cfg.baseline_policy,
-                  self.cfg.baseline_calibrated, ScheduleSpec::Fixed)
+                  self.cfg.baseline_admission, ScheduleSpec::Fixed)
     }
 
     /// The goodput winner among a shape's cells (first-listed wins ties,
@@ -236,12 +271,13 @@ pub struct StudyGrid {
 
 /// One independent unit of grid work: every router-policy cell of a
 /// (shape, schedule, admission) combination, sharing one topology
-/// build/calibration.
+/// build/calibration (and, for the recalibrated arm, one warm-up
+/// serving pass).
 #[derive(Clone, Copy)]
 struct Unit {
     shape_idx: usize,
     schedule: ScheduleSpec,
-    calibrated: bool,
+    admission: AdmissionMode,
 }
 
 impl StudyGrid {
@@ -310,30 +346,40 @@ impl StudyGrid {
         let mut units = Vec::new();
         for shape_idx in 0..cfg.shapes.len() {
             for &schedule in &cfg.schedules {
-                for calibrated in cfg.admission_modes() {
-                    units.push(Unit { shape_idx, schedule, calibrated });
+                for admission in cfg.admission_modes() {
+                    units.push(Unit { shape_idx, schedule, admission });
                 }
             }
         }
         units
     }
 
-    /// All router-policy cells of one unit, in policy order.
+    /// All router-policy cells of one unit, in policy order. The
+    /// recalibrated arm first serves the unit's trace once with the
+    /// baseline router (the warm-up pass), folds the measured
+    /// observations back into the curves, and only then runs the
+    /// measured cells — so its admission prices from what this very
+    /// workload cost, not from the profiler's jittered draws.
     fn run_unit(&self, u: Unit, trace: &[crate::cluster::TraceRequest],
                 slo: SloConfig) -> Vec<CellResult> {
         let cfg = &self.cfg;
         let shape = &cfg.shapes[u.shape_idx];
         let mut topo = shape.build(&cfg.model, cfg.cache);
         topo.schedule = u.schedule;
-        if u.calibrated {
+        if u.admission != AdmissionMode::Static {
             topo.calibrate();
+        }
+        if u.admission == AdmissionMode::Recalibrated {
+            let warm = FleetSim::new(topo.clone(), cfg.baseline_policy, slo)
+                .run(trace);
+            recalibrate_fleet(&mut topo, &warm, &RecalibConfig::default());
         }
         cfg.policies.iter().map(|&policy| CellResult {
             shape: shape.name.clone(),
             devices: shape.n_devices(),
             policy,
             schedule: u.schedule,
-            calibrated: u.calibrated,
+            admission: u.admission,
             metrics: FleetSim::new(topo.clone(), policy, slo).run(trace),
         }).collect()
     }
@@ -389,7 +435,7 @@ mod tests {
     fn smoke_grid_covers_every_cell_and_accounts_for_every_request() {
         let cfg = StudyConfig::smoke(11);
         let n_cells = cfg.n_cells();
-        assert_eq!(n_cells, 2 * 2 * 2 * 2, "shapes x schedules x adm x rtr");
+        assert_eq!(n_cells, 2 * 2 * 3 * 2, "shapes x schedules x adm x rtr");
         let r = StudyGrid::new(cfg).run();
         assert_eq!(r.cells.len(), n_cells);
         assert_eq!(r.shapes.len(), 2);
@@ -422,7 +468,7 @@ mod tests {
             assert_eq!(x.shape, y.shape);
             assert_eq!(x.policy, y.policy);
             assert_eq!(x.schedule, y.schedule);
-            assert_eq!(x.calibrated, y.calibrated);
+            assert_eq!(x.admission, y.admission);
             assert_eq!(x.metrics.completed, y.metrics.completed);
             assert_eq!(x.metrics.tokens, y.metrics.tokens);
             assert_eq!(x.metrics.horizon_s.to_bits(),
@@ -442,9 +488,9 @@ mod tests {
         for s in &r.shapes {
             let name = &s.shape.name;
             let policy = RoutePolicy::LeastOutstanding;
-            let fixed = r.cell(name, policy, false, ScheduleSpec::Fixed)
-                .unwrap();
-            let fast = r.cell(name, policy, false,
+            let fixed = r.cell(name, policy, AdmissionMode::Static,
+                               ScheduleSpec::Fixed).unwrap();
+            let fast = r.cell(name, policy, AdmissionMode::Static,
                               ScheduleSpec::slowfast_default()).unwrap();
             // the adaptive schedule must move the outcome: fewer
             // realized steps -> shorter horizon or fewer sheds
@@ -452,6 +498,37 @@ mod tests {
                     || fast.metrics.shed() != fixed.metrics.shed(),
                     "{name}: schedule axis indistinguishable");
         }
+    }
+
+    #[test]
+    fn recalibrated_arm_exists_and_moves_at_least_one_cell() {
+        let r = StudyGrid::new(StudyConfig::smoke(5)).run();
+        let mut any_delta = false;
+        for s in &r.shapes {
+            for &policy in &r.cfg.policies {
+                for &schedule in &r.cfg.schedules {
+                    let cal = r.cell(&s.shape.name, policy,
+                                     AdmissionMode::Calibrated, schedule)
+                        .expect("calibrated cell");
+                    let rec = r.cell(&s.shape.name, policy,
+                                     AdmissionMode::Recalibrated, schedule)
+                        .expect("recalibrated cell");
+                    assert_eq!(rec.metrics.offered(), cal.metrics.offered(),
+                               "both arms face the identical trace");
+                    if rec.metrics.shed() != cal.metrics.shed()
+                        || rec.metrics.slo_met != cal.metrics.slo_met
+                        || rec.metrics.horizon_s.to_bits()
+                            != cal.metrics.horizon_s.to_bits()
+                        || rec.metrics.ttft_p95().to_bits()
+                            != cal.metrics.ttft_p95().to_bits()
+                    {
+                        any_delta = true;
+                    }
+                }
+            }
+        }
+        assert!(any_delta, "warm-up recalibration changed nothing — the \
+                            replay arm is measuring nothing");
     }
 
     #[test]

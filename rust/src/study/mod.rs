@@ -5,8 +5,9 @@
 //! question is fleet-scale. This subsystem runs the large-scale
 //! mixed-topology study the roadmap asks for — tens of edge+datacenter
 //! devices under a diurnal arrival envelope, swept over router policy ×
-//! admission mode (measured curves vs analytic scalars) × fleet shape —
-//! and writes the result table *as a document*:
+//! admission mode (analytic scalars vs profiled curves vs
+//! warm-up-recalibrated curves — the replay loop's third arm) × fleet
+//! shape — and writes the result table *as a document*:
 //!
 //! * [`grid`] — [`StudyGrid`]: builds each [`ShapeSpec`] into a
 //!   [`crate::cluster::ClusterTopology`], targets the offered load at a
@@ -33,5 +34,5 @@ pub mod doc;
 pub mod grid;
 
 pub use doc::render_study;
-pub use grid::{CellResult, ShapeRun, ShapeSpec, StudyConfig, StudyGrid,
-               StudyResult};
+pub use grid::{AdmissionMode, CellResult, ShapeRun, ShapeSpec, StudyConfig,
+               StudyGrid, StudyResult};

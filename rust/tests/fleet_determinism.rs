@@ -45,6 +45,14 @@ fn assert_metrics_identical(a: &FleetMetrics, b: &FleetMetrics, ctx: &str) {
         assert_eq!(x.busy_s.to_bits(), y.busy_s.to_bits(),
                    "device busy: {ctx}");
     }
+    // the replay loop's input is part of the determinism contract: the
+    // per-device observation streams must match record for record
+    // (text serialization compares every field at full precision)
+    assert_eq!(a.observations.len(), b.observations.len(),
+               "observation log count: {ctx}");
+    for (x, y) in a.observations.iter().zip(&b.observations) {
+        assert_eq!(x.to_text(), y.to_text(), "observation log: {ctx}");
+    }
 }
 
 #[test]
@@ -110,7 +118,7 @@ fn parallel_study_grid_is_bit_identical_to_serial() {
         assert_eq!(p.shape, s.shape);
         assert_eq!(p.policy, s.policy);
         assert_eq!(p.schedule, s.schedule);
-        assert_eq!(p.calibrated, s.calibrated);
+        assert_eq!(p.admission, s.admission);
         let ctx = format!("{}/{:?}/{}/{}", p.shape, p.policy,
                           p.schedule.name(), p.admission_label());
         assert_metrics_identical(&p.metrics, &s.metrics, &ctx);
@@ -123,6 +131,38 @@ fn parallel_study_grid_is_bit_identical_to_serial() {
     }
     assert_eq!(render_study(&parallel), render_study(&serial),
                "rendered documents must match byte-for-byte");
+}
+
+#[test]
+fn recalibrated_fleet_serves_deterministically() {
+    // the full replay loop (warm-up → fold observations → re-serve) is
+    // part of the determinism contract: two complete loops over the
+    // same trace are bit-identical, curves included
+    let spec = TraceSpec::chat(40, Arrival::Poisson { rps: 300.0 }, 29);
+    let trace = generate_trace(&spec);
+    let run = || {
+        let mut topo = ClusterTopology::homogeneous(
+            2, dart::config::HwConfig::dart_default(),
+            ModelArch::llada_8b(), CacheMode::Dual);
+        topo.calibrate();
+        let slo = SloConfig::auto(&topo);
+        let warm = FleetSim::new(topo.clone(),
+                                 RoutePolicy::LeastOutstanding, slo)
+            .run(&trace);
+        dart::replay::recalibrate_fleet(
+            &mut topo, &warm, &dart::replay::RecalibConfig::default());
+        let curves: Vec<String> = topo.devices.iter()
+            .map(|d| d.curve.as_ref().unwrap().to_text())
+            .collect();
+        let m = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+            .run(&trace);
+        (curves, m)
+    };
+    let (ca, ma) = run();
+    let (cb, mb) = run();
+    assert_eq!(ca, cb, "recalibrated curves drifted across runs");
+    assert_metrics_identical(&ma, &mb, "recalibrated re-serve");
+    assert!(ma.completed + ma.shed() == 40, "replay-loop accounting");
 }
 
 #[test]

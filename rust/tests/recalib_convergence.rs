@@ -1,0 +1,251 @@
+//! The replay loop's test net: the closed-loop recalibration subsystem
+//! is gated by three properties before anything serves from it.
+//!
+//! * **Differential (fixed point):** recalibrating a curve from
+//!   observations the curve itself generates must be the identity —
+//!   bit-stable text, zero `CurveDelta`. Measurement agreeing with the
+//!   model must never move the model.
+//! * **Convergence:** starting from a deliberately mis-scaled curve,
+//!   every replay round shrinks the max cell pricing error
+//!   monotonically (delta-form blending contracts each cell by
+//!   `1 − blend`).
+//! * **Determinism:** identical traces + seeds produce bit-identical
+//!   recalibrated curves, through the fleet simulator and through the
+//!   observation-log text round-trip — extending the
+//!   `fleet_determinism.rs` contract to the replay loop.
+
+use dart::calib::{CalibConfig, Calibrator, CurveDelta, LatencyCurve};
+use dart::cluster::{generate_trace, Arrival, ClusterTopology, FleetSim,
+                    RoutePolicy, SloConfig, TraceSpec};
+use dart::config::{CacheMode, HwConfig, ModelArch};
+use dart::replay::{fleet_pricing_error, pricing_error, recalibrate_fleet,
+                   ObservationLog, RecalibConfig, Recalibrator};
+
+fn profiled_curve(device: &str) -> LatencyCurve {
+    let mut cfg = CalibConfig::serving_default(&[1, 4, 16]);
+    cfg.samples_per_cell = 3;
+    Calibrator::new(HwConfig::dart_default(), ModelArch::llada_8b(),
+                    CacheMode::Dual, cfg)
+        .profile(device)
+}
+
+fn calibrated_fleet(n: usize) -> ClusterTopology {
+    let mut topo = ClusterTopology::homogeneous(
+        n, HwConfig::dart_default(), ModelArch::llada_8b(), CacheMode::Dual);
+    topo.calibrate();
+    topo
+}
+
+fn serve(topo: &ClusterTopology, trace: &[dart::cluster::TraceRequest])
+         -> dart::cluster::FleetMetrics {
+    let slo = SloConfig::auto(topo);
+    FleetSim::new(topo.clone(), RoutePolicy::LeastOutstanding, slo)
+        .run(trace)
+}
+
+// ---- (a) differential: the fixed point --------------------------------
+
+#[test]
+fn recalibrating_from_self_generated_observations_is_a_fixed_point() {
+    let curve = profiled_curve("npu0");
+    let log = ObservationLog::from_curve(&curve);
+    assert!(!log.is_empty());
+    for cfg in [RecalibConfig::default(),
+                RecalibConfig { blend: 1.0, min_samples: 1 },
+                RecalibConfig { blend: 0.3, min_samples: 5 }] {
+        let re = Recalibrator::new(cfg).recalibrate(&curve, &log);
+        let delta = CurveDelta::between(&curve, &re);
+        assert!(delta.is_zero(),
+                "fixed point violated at blend {}: max rel {}",
+                cfg.blend, delta.max_rel());
+        assert_eq!(re.to_text(), curve.to_text(),
+                   "recalibrated curve must be bit-identical");
+        // and the pricing error of the fixed point is exactly zero
+        let pe = pricing_error(&re, &log);
+        assert_eq!(pe.max_rel(), 0.0);
+    }
+}
+
+#[test]
+fn fixed_point_holds_under_adaptive_schedule_profiles() {
+    // a curve with a fractional expected-steps dimension (slowfast
+    // profile) must be just as bit-stable — the expected-steps
+    // re-estimation blends in delta form too
+    let mut cfg = CalibConfig::serving_default(&[1, 4]);
+    cfg.samples_per_cell = 3;
+    cfg.schedule = dart::schedule::ScheduleSpec::slowfast_default();
+    let curve = Calibrator::new(HwConfig::dart_default(),
+                                ModelArch::llada_8b(), CacheMode::Dual, cfg)
+        .profile("npu0");
+    assert!(curve.expected_steps < curve.steps_per_block as f64);
+    let log = ObservationLog::from_curve(&curve);
+    let re = Recalibrator::default().recalibrate(&curve, &log);
+    assert_eq!(re.expected_steps.to_bits(), curve.expected_steps.to_bits());
+    assert!(CurveDelta::between(&curve, &re).is_zero());
+    assert_eq!(re.to_text(), curve.to_text());
+}
+
+// ---- (b) convergence: mis-scaled priors shrink monotonically ----------
+
+#[test]
+fn replay_rounds_shrink_misscaled_pricing_error_monotonically() {
+    let truth = profiled_curve("npu0");
+    // the drifted prior: serving really costs what `truth` says, but
+    // the table in production is 1.6x stale on every cell
+    let mut prior = truth.clone();
+    for p in &mut prior.points {
+        p.p50_total_s *= 1.6;
+        p.p95_total_s *= 1.6;
+        p.p50_first_s *= 1.6;
+        p.p95_first_s *= 1.6;
+    }
+    let log = ObservationLog::from_curve(&truth);
+    let rec = Recalibrator::new(RecalibConfig { blend: 0.7, min_samples: 2 });
+
+    let mut curve = prior;
+    let mut last_max = pricing_error(&curve, &log).max_rel();
+    assert!(last_max > 0.3, "mis-scale must register: {last_max}");
+    for round in 0..4 {
+        let next = rec.recalibrate(&curve, &log);
+        let pe_prev = pricing_error(&curve, &log);
+        let pe_next = pricing_error(&next, &log);
+        // strictly decreasing max error, round over round
+        assert!(pe_next.max_rel() < last_max,
+                "round {round}: {} !< {last_max}", pe_next.max_rel());
+        // and monotone per cell, not just in aggregate
+        for (a, b) in pe_prev.cells.iter().zip(&pe_next.cells) {
+            assert!(b.rel <= a.rel,
+                    "round {round}: cell ({}, {}) grew {} -> {}",
+                    a.variant, a.bucket_lo, a.rel, b.rel);
+        }
+        last_max = pe_next.max_rel();
+        curve = next;
+    }
+    // four rounds of 0.3x contraction: ~0.8% of the original error left
+    assert!(last_max < 0.01, "residual error {last_max}");
+}
+
+#[test]
+fn full_blend_converges_in_one_round() {
+    let truth = profiled_curve("npu0");
+    let mut prior = truth.clone();
+    for p in &mut prior.points {
+        p.p50_total_s *= 0.5; // stale-fast prior: underpricing
+        p.p95_total_s *= 0.5;
+        p.p50_first_s *= 0.5;
+        p.p95_first_s *= 0.5;
+    }
+    let log = ObservationLog::from_curve(&truth);
+    let re = Recalibrator::new(RecalibConfig { blend: 1.0, min_samples: 1 })
+        .recalibrate(&prior, &log);
+    let pe = pricing_error(&re, &log);
+    assert!(pe.max_rel() < 1e-9, "full blend residual {}", pe.max_rel());
+}
+
+// ---- (c) determinism ---------------------------------------------------
+
+#[test]
+fn identical_traces_and_seeds_recalibrate_bit_identically() {
+    let trace = generate_trace(
+        &TraceSpec::chat(48, Arrival::Poisson { rps: 400.0 }, 9));
+    let run = || {
+        let mut topo = calibrated_fleet(2);
+        let warm = serve(&topo, &trace);
+        let deltas = recalibrate_fleet(&mut topo, &warm,
+                                       &RecalibConfig::default());
+        (topo, warm, deltas)
+    };
+    let (ta, wa, da) = run();
+    let (tb, wb, db) = run();
+    for (a, b) in ta.devices.iter().zip(&tb.devices) {
+        let (ca, cb) = (a.curve.as_ref().unwrap(), b.curve.as_ref().unwrap());
+        assert_eq!(ca.to_text(), cb.to_text(),
+                   "recalibrated curve drifted on {}", a.name);
+    }
+    for (x, y) in wa.observations.iter().zip(&wb.observations) {
+        assert_eq!(x.to_text(), y.to_text(), "observation log drifted");
+    }
+    for (x, y) in da.iter().zip(&db) {
+        assert_eq!(x.max_rel().to_bits(), y.max_rel().to_bits());
+        assert_eq!(x.expected_steps_delta.to_bits(),
+                   y.expected_steps_delta.to_bits());
+    }
+}
+
+#[test]
+fn observation_logs_round_trip_through_text_and_recalibrate_identically() {
+    // the replay format is the reproducibility contract: folding the
+    // *parsed* log must produce the bit-identical curve
+    let mut topo = calibrated_fleet(2);
+    let trace = generate_trace(
+        &TraceSpec::chat(40, Arrival::Poisson { rps: 300.0 }, 17));
+    let warm = serve(&topo, &trace);
+    let rec = Recalibrator::default();
+    for (i, d) in topo.devices.iter_mut().enumerate() {
+        let log = &warm.observations[i];
+        assert!(!log.is_empty(), "device {i} observed nothing");
+        let text = log.to_text();
+        let replayed = ObservationLog::from_text(&text).unwrap();
+        assert_eq!(replayed.to_text(), text, "log text not byte-stable");
+        let curve = d.curve.as_ref().unwrap();
+        let direct = rec.recalibrate(curve, log);
+        let via_text = rec.recalibrate(curve, &replayed);
+        assert_eq!(direct.to_text(), via_text.to_text(),
+                   "text round-trip changed the recalibration");
+        d.curve = Some(direct);
+    }
+}
+
+// ---- end-to-end: warm-up -> recalibrate -> re-serve --------------------
+
+#[test]
+fn fleet_warmup_recalibrate_reserve_accounts_for_everything() {
+    let mut topo = calibrated_fleet(2);
+    let trace = generate_trace(
+        &TraceSpec::chat(64, Arrival::Poisson { rps: 1.0e4 }, 23));
+    let warm = serve(&topo, &trace);
+    // every executed batch produced exactly one observation
+    for (i, dev) in warm.devices.iter().enumerate() {
+        assert_eq!(warm.observations[i].len() as u64, dev.batches,
+                   "device {i}: observations != batches");
+    }
+    let before = fleet_pricing_error(&topo, &warm);
+    let deltas = recalibrate_fleet(&mut topo, &warm,
+                                   &RecalibConfig::default());
+    let after = fleet_pricing_error(&topo, &warm);
+    assert_eq!(deltas.len(), 2);
+    for (di, (pre, post)) in before.iter().zip(&after).enumerate() {
+        if pre.cells.is_empty() {
+            continue;
+        }
+        // against its own warm-up measurements, the folded curve never
+        // prices worse, cell for cell
+        for (a, b) in pre.cells.iter().zip(&post.cells) {
+            assert!(b.rel <= a.rel + 1e-12,
+                    "device {di} cell ({}, {}) got worse: {} -> {}",
+                    a.variant, a.bucket_lo, a.rel, b.rel);
+        }
+        assert!(post.max_rel() <= pre.max_rel() + 1e-12);
+    }
+    // the recalibrated fleet still serves the same trace to completion
+    assert!(topo.is_calibrated());
+    let m = serve(&topo, &trace);
+    assert_eq!(m.offered() as usize, trace.len());
+    assert!(m.completed > 0);
+}
+
+#[test]
+fn recalibration_leaves_uncalibrated_devices_untouched() {
+    let mut topo = ClusterTopology::homogeneous(
+        2, HwConfig::dart_default(), ModelArch::llada_8b(), CacheMode::Dual);
+    let trace = generate_trace(
+        &TraceSpec::chat(24, Arrival::Poisson { rps: 200.0 }, 3));
+    let warm = serve(&topo, &trace);
+    let deltas = recalibrate_fleet(&mut topo, &warm,
+                                   &RecalibConfig::default());
+    assert_eq!(deltas.len(), 2);
+    for (d, delta) in topo.devices.iter().zip(&deltas) {
+        assert!(d.curve.is_none(), "curve appeared from nowhere");
+        assert!(delta.is_zero());
+    }
+}

@@ -85,11 +85,18 @@ if [[ "${1:-}" == "--smoke" ]]; then
     cargo bench --bench schedule_sweep -- --smoke
     echo "== smoke: Fixed-schedule equivalence (seed-engine differential) =="
     cargo test -q --test schedule_equivalence
+    echo "== smoke: recalibration fixed-point + convergence gate =="
+    cargo test -q --test recalib_convergence
+    echo "== smoke: recalib_loop bench (reduced trace) =="
+    cargo bench --bench recalib_loop -- --smoke
     echo "== smoke: serve-cluster 2 devices x 32 requests, calibrated =="
     cargo run --release -- serve-cluster --devices 2 --requests 32 --calibrated
     echo "== smoke: serve-cluster slowfast schedule, calibrated =="
     cargo run --release -- serve-cluster --devices 2 --requests 32 \
         --calibrated --schedule slowfast
+    echo "== smoke: serve-cluster replay loop (warm-up -> recalibrate -> re-serve) =="
+    cargo run --release -- serve-cluster --devices 2 --requests 32 \
+        --recalibrate
     echo "== docs: fleet-study regen check (committed study must not drift) =="
     cargo run --release -- fleet-study --smoke
 fi
