@@ -4,8 +4,18 @@
 //! loop: the golden sampling engine (logit scan + top-k), MX
 //! quantize/dequantize on the KV path, BAOS smoothing, the HBM model's
 //! transaction throughput, the cycle simulator's instruction throughput,
-//! and the analytical simulator (the Fig. 9 inner loop).
+//! the analytical simulator (the Fig. 9 inner loop), the discrete-event
+//! fleet scheduler core, and `LatencyCurve::lookup` (the per-arrival
+//! admission-path probe).
+//!
+//! `--json PATH` additionally writes the results machine-readably in
+//! the `dart-bench-v1` schema (name → wall_ms / events_per_sec) — the
+//! format of the committed `BENCH_6.json`, validated by
+//! `dart profile --check-bench`.
 
+use dart::calib::{CalibConfig, Calibrator};
+use dart::cluster::{self, Arrival, ClusterTopology, FleetSim, RoutePolicy,
+                    SloConfig, TraceSpec};
 use dart::compiler::{sampling_program, SamplingLayout};
 use dart::config::{CacheMode, HbmSpec, HwConfig, ModelArch, Workload};
 use dart::hbm::{Fidelity, HbmModel};
@@ -17,6 +27,13 @@ use dart::stats::Bencher;
 use dart::util::SplitMix64;
 
 fn main() {
+    let json_out: Option<String> = std::env::args()
+        .skip_while(|a| a != "--json")
+        .nth(1);
+    // (name, wall_ms of the mean iteration, events/s) per bench — the
+    // dart-bench-v1 rows
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+
     let b = Bencher::default();
     let mut rng = SplitMix64::new(1);
 
@@ -31,6 +48,7 @@ fn main() {
     });
     println!("{}  ({:.2} GB/s logit scan)", r.report(),
              r.throughput() / 1e9);
+    note(&mut rows, &r);
 
     // ---- streaming top-k over L=64 rows
     let conf = rng.normal_vec(64, 1.0);
@@ -39,6 +57,7 @@ fn main() {
         std::hint::black_box(sampling::topk_mask(&conf, &mask, 16));
     });
     println!("{}", r.report());
+    note(&mut rows, &r);
 
     // ---- full sample_block (the per-step serving cost)
     let (bb, l, vv) = (4usize, 16usize, 256usize);
@@ -50,6 +69,7 @@ fn main() {
             &z2, &x, bb, l, vv, &[2; 4], 0, 128, SamplePrecision::Fp32));
     });
     println!("{}", r.report());
+    note(&mut rows, &r);
 
     // ---- MX quantization on the KV path
     let kv = rng.normal_vec(1 << 16, 1.0);
@@ -58,6 +78,7 @@ fn main() {
         std::hint::black_box(fake_quant(&kv, MxFormat::MxInt4));
     });
     println!("{}  ({:.2} GB/s)", r.report(), r.throughput() / 1e9);
+    note(&mut rows, &r);
 
     let t = MxTensor::quantize(&kv, MxFormat::MxInt4);
     let mut out = vec![0f32; kv.len()];
@@ -67,6 +88,7 @@ fn main() {
         std::hint::black_box(&out);
     });
     println!("{}  ({:.2} GB/s)", r.report(), r.throughput() / 1e9);
+    note(&mut rows, &r);
 
     // ---- BAOS smooth+quant round trip
     let f = BaosFactors::calibrate(&kv, 16, 128, 32, BaosVariant::Mean, 1.0);
@@ -75,6 +97,7 @@ fn main() {
         std::hint::black_box(f.fake_quant(&kv, MxFormat::MxInt4));
     });
     println!("{}  ({:.2} GB/s)", r.report(), r.throughput() / 1e9);
+    note(&mut rows, &r);
 
     // ---- HBM model transaction throughput
     let r = b.bench("hbm: 64 MB stream (ideal 2-stack)", 1.0, || {
@@ -84,6 +107,7 @@ fn main() {
     let txns = (64u64 << 20) / 32;
     println!("{}  ({:.2} M txns/s model throughput)", r.report(),
              txns as f64 / r.summary.mean / 1e6);
+    note(&mut rows, &r);
 
     // ---- cycle simulator instruction throughput on a sampling program
     let layout = SamplingLayout::new(2, 16, 2048, 128, 0);
@@ -99,6 +123,7 @@ fn main() {
         std::hint::black_box(sim.run(&prog));
     });
     println!("{}  ({:.2} M instr/s)", r.report(), r.throughput() / 1e6);
+    note(&mut rows, &r);
 
     // ---- analytical simulator (Fig. 9 inner loop)
     let w = Workload::paper_reference(ModelArch::llada_8b(), CacheMode::Dual);
@@ -108,4 +133,69 @@ fn main() {
         std::hint::black_box(sim.run(&w));
     });
     println!("{}  ({:.0} sweeps/s)", r.report(), 1.0 / r.summary.mean);
+    note(&mut rows, &r);
+
+    // ---- discrete-event fleet scheduler core: one traced warm-up run
+    // prices the per-run event count, then the bench times untraced
+    // runs of the identical (seeded) trace
+    let topo = ClusterTopology::homogeneous(
+        2, HwConfig::dart_default(), ModelArch::llada_8b(), CacheMode::Dual);
+    let slo = SloConfig::auto(&topo);
+    let capacity = cluster::fleet_capacity_tps(&topo);
+    let rps = cluster::chat_offered_rps(capacity, 1.5); // overloaded:
+    // admission, retry, and shed paths all exercised
+    let trace = cluster::generate_trace(
+        &TraceSpec::chat(64, Arrival::Poisson { rps }, 9));
+    let mut rec = dart::obs::Recorder::enabled(9);
+    FleetSim::new(topo.clone(), RoutePolicy::LeastOutstanding, slo)
+        .run_traced(&trace, &mut rec);
+    let events = rec.counter("fleet.events");
+    let r = b.bench("fleet: event scheduler 2dev x 64req", events, || {
+        let mut sim = FleetSim::new(
+            topo.clone(), RoutePolicy::LeastOutstanding, slo);
+        std::hint::black_box(sim.run(&trace));
+    });
+    println!("{}  ({:.2} k events/s)", r.report(), r.throughput() / 1e3);
+    note(&mut rows, &r);
+
+    // ---- LatencyCurve::lookup: the per-arrival admission-path probe
+    let mut cal_cfg = CalibConfig::serving_default(&[1, 2, 4, 8, 16]);
+    cal_cfg.samples_per_cell = 3;
+    let curve = Calibrator::new(HwConfig::dart_default(),
+                                ModelArch::llada_8b(), CacheMode::Dual,
+                                cal_cfg)
+        .profile("bench");
+    let lookups = 4096usize;
+    let r = b.bench("calib: LatencyCurve::lookup x4096", lookups as f64,
+                    || {
+        for i in 0..lookups {
+            let variant = 1 << (i % 5);
+            let seq = 32 + ((i * 37) % 2048) as u64;
+            std::hint::black_box(curve.lookup(variant, seq));
+        }
+    });
+    println!("{}  ({:.2} M lookups/s)", r.report(), r.throughput() / 1e6);
+    note(&mut rows, &r);
+
+    if let Some(path) = json_out {
+        let mut s =
+            String::from("{\"schema\":\"dart-bench-v1\",\"benches\":[");
+        for (i, (name, wall_ms, eps)) in rows.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"name\":\"{name}\",\"wall_ms\":{wall_ms:.3},\
+                 \"events_per_sec\":{eps:.1}}}"));
+        }
+        s.push_str("]}\n");
+        std::fs::write(&path, &s).expect("write bench json");
+        println!("wrote {} benches to {path}", rows.len());
+    }
+}
+
+/// Append one dart-bench-v1 row (name, wall_ms of the mean iteration,
+/// events/s) for a finished bench.
+fn note(rows: &mut Vec<(String, f64, f64)>, r: &dart::stats::BenchResult) {
+    rows.push((r.name.clone(), r.summary.mean * 1e3, r.throughput()));
 }

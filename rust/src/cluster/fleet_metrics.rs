@@ -22,9 +22,14 @@ pub struct DeviceStats {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ShedReason {
     /// admission control predicted an SLO miss on every candidate
+    /// actually tried (deadline-driven shed)
     SloPredicted,
-    /// every candidate queue was at capacity (backpressure)
+    /// every candidate queue was at capacity (backlog backpressure)
     Capacity,
+    /// the retry budget truncated the router's ranking while untried
+    /// candidates remained — a scheduling-policy shed, not a deadline
+    /// or backlog one
+    RetryExhausted,
 }
 
 #[derive(Clone, Debug)]
@@ -39,6 +44,7 @@ pub struct FleetMetrics {
     pub completed: u64,
     pub shed_slo: u64,
     pub shed_capacity: u64,
+    pub shed_retry: u64,
     /// placement attempts beyond the first (router fall-through)
     pub retries: u64,
     pub slo_met: u64,
@@ -70,6 +76,7 @@ impl FleetMetrics {
             completed: 0,
             shed_slo: 0,
             shed_capacity: 0,
+            shed_retry: 0,
             retries: 0,
             slo_met: 0,
             tokens: 0,
@@ -109,11 +116,12 @@ impl FleetMetrics {
         match reason {
             ShedReason::SloPredicted => self.shed_slo += 1,
             ShedReason::Capacity => self.shed_capacity += 1,
+            ShedReason::RetryExhausted => self.shed_retry += 1,
         }
     }
 
     pub fn shed(&self) -> u64 {
-        self.shed_slo + self.shed_capacity
+        self.shed_slo + self.shed_capacity + self.shed_retry
     }
 
     pub fn offered(&self) -> u64 {
@@ -139,10 +147,25 @@ impl FleetMetrics {
         self.slo_met as f64 / (self.offered() as f64).max(1.0)
     }
 
-    /// Fraction of offered requests that were shed (admission or
-    /// backpressure).
+    /// Fraction of offered requests that were shed (any reason).
     pub fn shed_frac(&self) -> f64 {
         self.shed() as f64 / (self.offered() as f64).max(1.0)
+    }
+
+    /// Per-reason shed attribution, each as a fraction of offered
+    /// requests — the study sweep tables surface these three columns
+    /// instead of the single rollup so deadline sheds, backlog sheds,
+    /// and retry-budget sheds are distinguishable per cell.
+    pub fn shed_slo_frac(&self) -> f64 {
+        self.shed_slo as f64 / (self.offered() as f64).max(1.0)
+    }
+
+    pub fn shed_capacity_frac(&self) -> f64 {
+        self.shed_capacity as f64 / (self.offered() as f64).max(1.0)
+    }
+
+    pub fn shed_retry_frac(&self) -> f64 {
+        self.shed_retry as f64 / (self.offered() as f64).max(1.0)
     }
 
     /// p95 TTFT over completed requests (0.0 when nothing completed) —
@@ -181,10 +204,10 @@ impl FleetMetrics {
     pub fn report(&self, slo: Option<(f64, f64)>) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "offered {}  completed {}  shed {} (slo {} / capacity {})  \
-             retries {}\n",
+            "offered {}  completed {}  shed {} (slo {} / capacity {} / \
+             retry {})  retries {}\n",
             self.offered(), self.completed, self.shed(), self.shed_slo,
-            self.shed_capacity, self.retries));
+            self.shed_capacity, self.shed_retry, self.retries));
         out.push_str(&format!(
             "horizon {:.2}s  throughput {:.1} tok/s  goodput {:.1} tok/s \
              ({:.1} req/s)  SLO attainment {}\n",
@@ -260,6 +283,25 @@ mod tests {
         // two TTFT samples 0.5 / 3.0: nearest-rank p95 lands on the max
         assert!((m.ttft_p95() - 3.0).abs() < 1e-9);
         assert_eq!(FleetMetrics::new(vec!["x".into()]).ttft_p95(), 0.0);
+    }
+
+    #[test]
+    fn shed_reasons_attribute_separately() {
+        let mut m = sample();
+        m.record_shed(ShedReason::RetryExhausted);
+        assert_eq!(m.shed_slo, 1);
+        assert_eq!(m.shed_capacity, 1);
+        assert_eq!(m.shed_retry, 1);
+        assert_eq!(m.shed(), 3);
+        assert_eq!(m.offered(), 5);
+        assert!((m.shed_slo_frac() - 0.2).abs() < 1e-9);
+        assert!((m.shed_capacity_frac() - 0.2).abs() < 1e-9);
+        assert!((m.shed_retry_frac() - 0.2).abs() < 1e-9);
+        // the per-reason fracs always sum to the rollup
+        assert!((m.shed_slo_frac() + m.shed_capacity_frac()
+                 + m.shed_retry_frac() - m.shed_frac()).abs() < 1e-12);
+        let r = m.report(None);
+        assert!(r.contains("shed 3 (slo 1 / capacity 1 / retry 1)"), "{r}");
     }
 
     #[test]

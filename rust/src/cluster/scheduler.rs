@@ -36,6 +36,7 @@ use crate::calib::{LatencyCurve, Pct};
 use crate::config::Workload;
 use crate::coordinator::batcher::{BatchPlan, Batcher, BatcherConfig,
                                   CostModel, FlushPolicy};
+use crate::obs::Recorder;
 use crate::sim::analytical::{AnalyticalSim, PrecisionConfig};
 
 use super::fleet_metrics::{FleetMetrics, ShedReason};
@@ -287,12 +288,24 @@ impl FleetSim {
     /// Serve a trace to completion; the trace must be arrival-sorted
     /// (generate_trace / trace_from_text both guarantee it).
     pub fn run(&mut self, trace: &[TraceRequest]) -> FleetMetrics {
+        self.run_traced(trace, &mut Recorder::disabled())
+    }
+
+    /// [`Self::run`] with observability: event-dispatch, admission/shed,
+    /// and batch-execution spans land in `rec` against the scheduler's
+    /// virtual clock, alongside `fleet.*` counters. With a disabled
+    /// recorder this is bit-identical to `run` at zero cost; with an
+    /// enabled one the serving metrics are unchanged (tracing is
+    /// read-only) and the summary is deterministic for a fixed trace.
+    pub fn run_traced(&mut self, trace: &[TraceRequest],
+                      rec: &mut Recorder) -> FleetMetrics {
         let mut devices: Vec<SimDevice> = self.topo.devices.iter()
             .map(|spec| SimDevice::new(spec, &self.topo))
             .collect();
         let mut metrics = FleetMetrics::new(
             self.topo.devices.iter().map(|d| d.name.clone()).collect());
 
+        let serve_span = rec.begin("fleet", "serve", 0.0);
         let mut next_arrival = 0usize;
         let mut now = 0.0f64;
         loop {
@@ -310,20 +323,21 @@ impl FleetSim {
                 (Some(a), Some(d)) => a.min(d),
             };
             now = now.max(step_to);
+            rec.count("fleet.events", 1.0);
 
             while next_arrival < trace.len()
                 && trace[next_arrival].arrival_s <= now
             {
                 let req = trace[next_arrival];
                 next_arrival += 1;
-                self.admit(req, now, &mut devices, &mut metrics);
+                self.admit(req, now, &mut devices, &mut metrics, rec);
             }
 
             for (di, d) in devices.iter_mut().enumerate() {
                 if d.busy_until <= now {
                     if let Some(plan) = d.batcher.next_batch_at(now) {
                         execute_plan(d, di, plan, now, self.topo.block_len,
-                                     &self.slo, &mut metrics);
+                                     &self.slo, &mut metrics, rec);
                     }
                 }
             }
@@ -336,14 +350,19 @@ impl FleetSim {
         for (di, d) in devices.iter().enumerate() {
             metrics.devices[di].busy_s = d.busy_s;
         }
+        rec.end(serve_span, horizon);
         metrics
     }
 
     /// Route + admission-control one arrival: walk the router's ranking,
     /// skipping devices whose predicted TTFT blows the deadline or whose
     /// queue is full, up to the retry budget; shed if nothing sticks.
+    /// Sheds are attributed: backlog rejections win over deadline ones,
+    /// and a ranking truncated by the retry budget with untried devices
+    /// remaining is a `RetryExhausted` shed, not a deadline verdict.
     fn admit(&mut self, req: TraceRequest, now: f64,
-             devices: &mut [SimDevice], metrics: &mut FleetMetrics) {
+             devices: &mut [SimDevice], metrics: &mut FleetMetrics,
+             rec: &mut Recorder) {
         let loads: Vec<DeviceLoad> = devices.iter()
             .map(|d| DeviceLoad {
                 queue_len: d.batcher.len(),
@@ -362,6 +381,7 @@ impl FleetSim {
         {
             if attempt > 0 {
                 metrics.retries += 1;
+                rec.count("fleet.retries", 1.0);
             }
             let d = &mut devices[di];
             if self.slo.admission {
@@ -381,27 +401,46 @@ impl FleetSim {
             }
             if d.batcher.push_at(InFlight { req, dispatch_s: dispatch }, now) {
                 metrics.admitted += 1;
+                rec.span_closed("fleet", "admit", now, now);
+                rec.count("fleet.admitted", 1.0);
                 return;
             }
             saw_capacity_reject = true;
         }
-        metrics.record_shed(if saw_capacity_reject {
+        let reason = if saw_capacity_reject {
             ShedReason::Capacity
+        } else if order.len() > self.slo.max_retries + 1 {
+            // every candidate actually tried was a deadline reject, but
+            // the retry budget stopped the walk short of the ranking —
+            // the shed belongs to the retry policy, not the SLO
+            ShedReason::RetryExhausted
         } else {
             ShedReason::SloPredicted
-        });
+        };
+        metrics.record_shed(reason);
+        rec.span_closed("fleet", "shed", now, now);
+        rec.count(match reason {
+            ShedReason::SloPredicted => "fleet.shed.slo",
+            ShedReason::Capacity => "fleet.shed.capacity",
+            ShedReason::RetryExhausted => "fleet.shed.retry",
+        }, 1.0);
     }
 }
 
 /// Price a flushed batch on its device and account every lane.
+#[allow(clippy::too_many_arguments)]
 fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
                 now: f64, block_len: u64, slo: &SloConfig,
-                metrics: &mut FleetMetrics) {
+                metrics: &mut FleetMetrics, rec: &mut Recorder) {
     let real = plan.items.len();
     let variant = plan.variant;
     let pmax = plan.items.iter().map(|i| i.req.prompt_len).max().unwrap();
     let gmax = plan.items.iter().map(|i| i.req.gen_len).max().unwrap();
     let (total, first) = d.svc.service(variant, pmax, gmax);
+    rec.span_closed("fleet", "batch", now, now + total);
+    rec.count("fleet.batches", 1.0);
+    rec.count("fleet.padded_lanes", (variant - real) as f64);
+    rec.count("fleet.lane_tokens", (variant * gmax) as f64);
     // blocked diffusion commits tokens block-synchronously: block k of
     // every lane lands at ~k * per_block into the run
     let blocks_max = crate::util::ceil_div(gmax as u64, block_len).max(1);
@@ -736,6 +775,65 @@ mod tests {
         assert!((delta - max_wait).abs() < 1e-6,
                 "expected the straggler to fire ~{max_wait}s earlier, \
                  horizon {} vs {}", stat.horizon_s, cal.horizon_s);
+    }
+
+    #[test]
+    fn retry_budget_truncation_is_attributed_as_retry_shed() {
+        // an impossible TTFT deadline: every tried candidate is a
+        // deadline reject. With a 4-device ranking truncated at 1 try,
+        // untried devices remain -> RetryExhausted; with a 1-device
+        // fleet the whole ranking was tried -> SloPredicted.
+        let trace = saturating_trace(10);
+        let run = |n: usize| {
+            let topo = small_topo(n);
+            let mut slo = SloConfig::auto(&topo);
+            slo.ttft_s = 1e-9;
+            slo.max_retries = 0;
+            FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+                .run(&trace)
+        };
+        let wide = run(4);
+        assert_eq!(wide.completed, 0);
+        assert_eq!(wide.shed_retry, 10, "{:?}", wide.report(None));
+        assert_eq!(wide.shed_slo, 0);
+        assert_eq!(wide.shed_capacity, 0);
+        let narrow = run(1);
+        assert_eq!(narrow.shed_slo, 10, "{:?}", narrow.report(None));
+        assert_eq!(narrow.shed_retry, 0);
+    }
+
+    #[test]
+    fn traced_run_matches_untraced_and_summarizes_deterministically() {
+        let trace = saturating_trace(32);
+        let mk = || {
+            let topo = small_topo(2);
+            let slo = SloConfig::auto(&topo);
+            FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+        };
+        let plain = mk().run(&trace);
+        let mut rec = Recorder::enabled(11);
+        let traced = mk().run_traced(&trace, &mut rec);
+        // tracing is read-only: the serving metrics are unchanged
+        assert_eq!(plain.report(None), traced.report(None));
+        assert_eq!(plain.admitted, traced.admitted);
+        assert_eq!(plain.horizon_s.to_bits(), traced.horizon_s.to_bits());
+        // counters agree with the metrics they shadow
+        assert_eq!(rec.counter("fleet.admitted"), traced.admitted as f64);
+        assert_eq!(rec.counter("fleet.shed.slo")
+                   + rec.counter("fleet.shed.capacity")
+                   + rec.counter("fleet.shed.retry"),
+                   traced.shed() as f64);
+        let batches: u64 = traced.devices.iter().map(|d| d.batches).sum();
+        assert_eq!(rec.counter("fleet.batches"), batches as f64);
+        assert!(rec.counter("fleet.events") > 0.0);
+        // root serve span closes at the horizon on the virtual clock
+        let root = &rec.spans()[0];
+        assert_eq!(root.name, "serve");
+        assert_eq!(root.end_vt.to_bits(), traced.horizon_s.to_bits());
+        // same seed, same trace -> byte-identical summary
+        let mut rec2 = Recorder::enabled(11);
+        mk().run_traced(&trace, &mut rec2);
+        assert_eq!(rec.summary(), rec2.summary());
     }
 
     #[test]

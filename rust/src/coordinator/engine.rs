@@ -9,6 +9,7 @@ use anyhow::{bail, Result};
 
 use crate::config::CacheMode;
 use crate::kvcache::{KvCache, KvQuantPolicy, KvShape};
+use crate::obs::Recorder;
 use crate::runtime::{Executor, Tensor};
 use crate::sampling::{self, SamplePrecision};
 use crate::schedule::{BlockRun, ScheduleSpec, StepTrace};
@@ -91,6 +92,18 @@ impl GenerationEngine {
     /// Generate completions for `prompts` (each exactly `prompt_len`
     /// tokens; the batch size must be a compiled variant).
     pub fn generate(&mut self, prompts: &[Vec<i32>]) -> Result<GenerationResult> {
+        self.generate_traced(prompts, &mut Recorder::disabled())
+    }
+
+    /// [`Self::generate`] with observability: per-denoising-step
+    /// `coord.model_step` / `coord.sampling_step` spans nested under a
+    /// per-block span, plus logit-buffer-traffic counters. The virtual
+    /// axis is accumulated *measured* stage seconds (the live engine has
+    /// no simulator clock), so unlike the fleet/sim recorders the span
+    /// durations here are not bit-deterministic — the counters are.
+    /// With a disabled recorder this is `generate` at zero extra cost.
+    pub fn generate_traced(&mut self, prompts: &[Vec<i32>],
+                           rec: &mut Recorder) -> Result<GenerationResult> {
         let g = self.ex.manifest.geometry;
         let b = prompts.len();
         if !self.ex.manifest.batches.contains(&b) {
@@ -130,7 +143,9 @@ impl GenerationEngine {
             let e_n = s_n + g.block_len;
             let mut run = BlockRun::new(policy.as_ref(), b, g.block_len,
                                         g.steps_per_block);
+            let blk_span = rec.begin("coord", "block", model_s + sampling_s);
             for t in 0..g.steps_per_block {
+                let vt0 = model_s + sampling_s;
                 let t0 = Instant::now();
                 let warm = t == 0 || self.cfg.cache == CacheMode::None;
                 // logits for the active block, [B, L, V]
@@ -184,10 +199,17 @@ impl GenerationEngine {
                     }
                 };
                 model_s += t0.elapsed().as_secs_f64();
+                rec.span_closed("coord", "model_step", vt0,
+                                model_s + sampling_s);
+                // vocabulary-wide logit traffic this step hands to the
+                // sampler — the Fig. 1 bottleneck quantity
+                rec.count("coord.logit_bytes",
+                          (b * g.block_len * g.vocab) as f64 * 4.0);
 
                 // sampling stage: the Rust Vector-Scalar engine — phase
                 // 1 first, so the schedule policy sees the live
                 // confidence vector before choosing per-row commits
+                let vt1 = model_s + sampling_s;
                 let t1 = Instant::now();
                 let x_act = self.active_block(&x, b, s_n, e_n, g.total_len);
                 let (conf, idx) = sampling::confidence_argmax(
@@ -202,6 +224,9 @@ impl GenerationEngine {
                         &res.x_new[bi * g.block_len..(bi + 1) * g.block_len]);
                 }
                 sampling_s += t1.elapsed().as_secs_f64();
+                rec.span_closed("coord", "sampling_step", vt1,
+                                model_s + sampling_s);
+                rec.count("coord.steps", 1.0);
                 steps += 1;
                 if run.record(&res.transfer) {
                     // every row of the block is committed — skip the
@@ -210,8 +235,10 @@ impl GenerationEngine {
                     break;
                 }
             }
+            rec.end(blk_span, model_s + sampling_s);
             step_trace.blocks.push(run.finish(blk));
         }
+        rec.count("coord.kv_packed_bytes", cache.packed_bytes() as f64);
 
         let tokens = (0..b)
             .map(|bi| x[bi * g.total_len..(bi + 1) * g.total_len].to_vec())

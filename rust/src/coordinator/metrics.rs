@@ -115,6 +115,29 @@ impl Metrics {
         }
     }
 
+    /// Whether the latency reservoir has filled every slot. Past this
+    /// point percentiles are sampled estimates and the bit-exact
+    /// cross-check against the structured observation stream no longer
+    /// holds — the observation-export path reports it as a counter
+    /// ([`Self::record_counters`]) instead of silently degrading.
+    pub fn latency_reservoir_saturated(&self) -> bool {
+        self.latencies.is_saturated()
+    }
+
+    /// Export the serving counters — including the latency-reservoir
+    /// fill state — into an `obs` recorder.
+    pub fn record_counters(&self, rec: &mut crate::obs::Recorder) {
+        rec.count("coord.requests", self.requests_completed as f64);
+        rec.count("coord.batches", self.batches_run as f64);
+        rec.count("coord.padded_lanes", self.padded_lanes as f64);
+        rec.count("coord.observations_seen",
+                  self.observations_seen as f64);
+        rec.count("coord.latency_reservoir_count",
+                  self.latencies.count() as f64);
+        rec.count("coord.latency_reservoir_saturated",
+                  if self.latencies.is_saturated() { 1.0 } else { 0.0 });
+    }
+
     pub fn elapsed_s(&self) -> f64 {
         self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
     }
@@ -245,6 +268,30 @@ mod tests {
             .count();
         assert!(tail_retained > 0,
                 "late observations were truncated away");
+    }
+
+    #[test]
+    fn counters_export_reports_reservoir_saturation() {
+        let mut m = Metrics::default();
+        for _ in 0..100 {
+            m.record_batch(1, 1, 8, 0.0, 0.0, &[0.01]);
+        }
+        assert!(!m.latency_reservoir_saturated());
+        let mut rec = crate::obs::Recorder::enabled(2);
+        m.record_counters(&mut rec);
+        assert_eq!(rec.counter("coord.latency_reservoir_saturated"), 0.0);
+        assert_eq!(rec.counter("coord.latency_reservoir_count"), 100.0);
+        assert_eq!(rec.counter("coord.requests"), 100.0);
+        // stream past the 4096-slot default cap: saturation flips and
+        // the retained count pins at the cap
+        for i in 0..5000 {
+            m.record_batch(1, 1, 8, 0.0, 0.0, &[i as f64 * 1e-4]);
+        }
+        assert!(m.latency_reservoir_saturated());
+        let mut rec2 = crate::obs::Recorder::enabled(2);
+        m.record_counters(&mut rec2);
+        assert_eq!(rec2.counter("coord.latency_reservoir_saturated"), 1.0);
+        assert_eq!(rec2.counter("coord.latency_reservoir_count"), 4096.0);
     }
 
     #[test]

@@ -54,6 +54,13 @@
 //!   committed, byte-reproducible Markdown report (`fleet-study` in the
 //!   CLI, `fleet_study` in the benches, `docs/STUDY_fleet.md` the
 //!   generated document);
+//! * [`obs`] — deterministic observability threaded through all of the
+//!   above: hierarchical spans carrying virtual time (sim seconds /
+//!   scheduler clock) plus named counters (HBM/SRAM bytes, logit-buffer
+//!   traffic, events dispatched, sheds by reason), zero-overhead when
+//!   disabled, exported as Chrome-trace JSON (`--trace` on the serving
+//!   CLIs) and as the byte-stable committed profile (`profile` in the
+//!   CLI, `docs/PROFILE.md` the generated document);
 //! * [`gpu`] — analytical A6000/H100 baselines for Table 6 / Fig. 9.
 //!
 //! Substrates ([`cli`], [`stats`], [`report`], [`util`]) are built from
@@ -71,6 +78,7 @@ pub mod hbm;
 pub mod isa;
 pub mod kvcache;
 pub mod mem;
+pub mod obs;
 pub mod quant;
 pub mod replay;
 pub mod report;

@@ -10,6 +10,9 @@
 //!   fleet-study    run the diurnal mixed-topology policy sweep and emit
 //!                  the committed Markdown study (docs/STUDY_fleet.md);
 //!                  --smoke re-renders and diffs against the committed file
+//!   profile        render the committed per-phase profile (docs/PROFILE.md);
+//!                  --smoke diffs against the committed file, --check-trace /
+//!                  --check-bench validate exported JSON artifacts
 //!   generate       one blocked-diffusion generation through the PJRT model
 //!   simulate       analytical simulation of a paper workload
 //!   sweep          Fig. 9-style design-space sweep
@@ -38,6 +41,7 @@ fn main() {
         Some("serve-cluster") => cmd_serve_cluster(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("fleet-study") => cmd_fleet_study(&args),
+        Some("profile") => cmd_profile(&args),
         Some("generate") => cmd_generate(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("sweep") => cmd_sweep(&args),
@@ -45,9 +49,9 @@ fn main() {
         Some("asm") => cmd_asm(&args),
         Some("area") => cmd_area(&args),
         _ => {
-            eprintln!("usage: dart <serve|serve-cluster|calibrate|fleet-study|generate|simulate|sweep|hbm|asm|area> [flags]");
+            eprintln!("usage: dart <serve|serve-cluster|calibrate|fleet-study|profile|generate|simulate|sweep|hbm|asm|area> [flags]");
             eprintln!("  serve     --requests N --cache MODE --kv POLICY \
-                       --schedule fixed|conf|slowfast");
+                       --schedule fixed|conf|slowfast --trace FILE");
             eprintln!("  serve-cluster --devices N --requests N --rate RPS \
                        --arrival poisson|bursty|uniform --router least|rr|variant");
             eprintln!("                --load FRAC --ttft-slo-ms N --tpot-slo-ms N \
@@ -56,13 +60,17 @@ fn main() {
                        --link pcie|nvlink|eth --config FILE --diurnal [SECS]");
             eprintln!("                --length-mix SWING \
                        --schedule fixed|conf|slowfast --recalibrate");
+            eprintln!("                --trace FILE (Chrome-trace JSON + \
+                       deterministic summary)");
             eprintln!("  fleet-study --seed N --out FILE --requests N \
                        --load FRAC | --smoke");
+            eprintln!("  profile   --out FILE | --smoke | --check-trace FILE \
+                       | --check-bench FILE");
             eprintln!("  calibrate --presets default,edge --variants \"1,2,4,8,16\" \
                        --samples N --model M --cache MODE");
             eprintln!("            --out PREFIX --spot-check");
             eprintln!("  generate  --cache MODE --batch B \
-                       --schedule fixed|conf|slowfast");
+                       --schedule fixed|conf|slowfast --trace FILE");
             eprintln!("  simulate  --model llada8b|moe --cache MODE");
             eprintln!("  sweep     --model llada8b|moe");
             eprintln!("  hbm       --stacks 2|4 --fidelity ideal|physical");
@@ -147,6 +155,17 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     let metrics = coord.shutdown();
     println!("\n{}", metrics.report());
+    // --trace: the coordinator runs the engine on worker threads, so
+    // the export here is the counter view (requests, batches, padded
+    // lanes, reservoir fill) rather than per-step spans — `generate
+    // --trace` gives the span-level picture of the same engine
+    if let Some(path) = args.get("trace") {
+        let mut rec = dart::obs::Recorder::enabled(42);
+        metrics.record_counters(&mut rec);
+        std::fs::write(path, rec.chrome_trace()).expect("write trace");
+        println!("\nwrote Chrome trace (counters) to {path}");
+        println!("\n{}", rec.summary());
+    }
     0
 }
 
@@ -314,8 +333,23 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
              if slo.admission { "on" } else { "off" });
 
     let mut sim = FleetSim::new(topo, policy, slo);
-    let metrics = sim.run(&trace);
+    // --trace: record the discrete-event scheduler's own virtual clock;
+    // the summary below is bit-identical across same-seed runs (the
+    // trace_golden test pins this), the JSON additionally carries wall
+    // time in args
+    let mut rec = if args.get("trace").is_some() {
+        dart::obs::Recorder::enabled(seed)
+    } else {
+        dart::obs::Recorder::disabled()
+    };
+    let metrics = sim.run_traced(&trace, &mut rec);
     println!("{}", metrics.report(Some((slo.ttft_s, slo.tpot_s))));
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, rec.chrome_trace()).expect("write trace");
+        println!("\nwrote Chrome trace to {path} ({} spans, {} counters)",
+                 rec.spans().len(), rec.counters().len());
+        println!("\n{}", rec.summary());
+    }
     0
 }
 
@@ -449,11 +483,12 @@ fn cmd_fleet_study(args: &Args) -> i32 {
     let result = StudyGrid::new(cfg).run_with_progress(|cell| {
         done += 1;
         eprintln!("  [{done}/{n_cells}] {} / {} / {} / {}: goodput \
-                   {:.1} tok/s, shed {:.1}%",
+                   {:.1} tok/s, shed {:.1}% ({:.0} ms)",
                   cell.shape, cell.policy.name(), cell.schedule.name(),
                   cell.admission_label(),
                   cell.metrics.goodput_tps(),
-                  100.0 * cell.metrics.shed_frac());
+                  100.0 * cell.metrics.shed_frac(),
+                  cell.wall_s * 1e3);
     });
     let md = render_study(&result);
 
@@ -484,6 +519,100 @@ fn cmd_fleet_study(args: &Args) -> i32 {
     0
 }
 
+/// Render the committed per-phase performance profile
+/// (`docs/PROFILE.md`) and validate exported observability artifacts.
+/// Modes:
+///
+///   --out FILE          write the rendered profile (the committed
+///                       docs/PROFILE.md workflow)
+///   --smoke             regenerate in memory and byte-compare against
+///                       the committed file at --out (default
+///                       docs/PROFILE.md); nonzero exit on drift —
+///                       the scripts/ci.sh docs gate
+///   --check-trace FILE  validate a `--trace` Chrome-trace JSON export
+///   --check-bench FILE  validate a bench JSON export (BENCH_6.json)
+///   (none of the above) print the Markdown to stdout
+///
+/// The profile is a pure function of seeded virtual-time models: the
+/// same code always renders the same bytes.
+fn cmd_profile(args: &Args) -> i32 {
+    use dart::obs::profile::{render_profile, validate_bench_json,
+                             validate_chrome_trace};
+
+    // validator-only modes: check the named artifacts and exit without
+    // regenerating the (seconds-long) profile document
+    if args.get("check-trace").is_some() || args.get("check-bench").is_some() {
+        let mut code = 0;
+        if let Some(path) = args.get("check-trace") {
+            let text = std::fs::read_to_string(path).expect("read trace file");
+            match validate_chrome_trace(&text) {
+                Ok(n) => println!("profile --check-trace: {path} OK \
+                                   ({n} events)"),
+                Err(e) => {
+                    eprintln!("profile --check-trace: {path} INVALID: {e}");
+                    code = 1;
+                }
+            }
+        }
+        if let Some(path) = args.get("check-bench") {
+            let text = std::fs::read_to_string(path).expect("read bench file");
+            match validate_bench_json(&text) {
+                Ok(n) => println!("profile --check-bench: {path} OK \
+                                   ({n} benches)"),
+                Err(e) => {
+                    eprintln!("profile --check-bench: {path} INVALID: {e}");
+                    code = 1;
+                }
+            }
+        }
+        return code;
+    }
+
+    // check mode reads the committed file *before* the regeneration so
+    // a missing or unreadable file fails immediately
+    let check = args.has("smoke") || args.has("check");
+    let committed = if check {
+        let path = args.get_or("out", "docs/PROFILE.md");
+        match std::fs::read_to_string(path) {
+            Ok(text) => Some(text),
+            Err(e) => {
+                eprintln!("profile --smoke: cannot read {path}: {e}");
+                eprintln!("regenerate it with: dart profile --out {path}");
+                return 1;
+            }
+        }
+    } else {
+        None
+    };
+
+    let md = render_profile();
+
+    if let Some(committed) = committed {
+        let path = args.get_or("out", "docs/PROFILE.md");
+        if committed == md {
+            println!("profile --smoke: {path} is up to date ({} bytes)",
+                     md.len());
+            return 0;
+        }
+        let drift = committed.lines().zip(md.lines())
+            .position(|(a, b)| a != b)
+            .map(|i| i + 1)
+            .unwrap_or(committed.lines().count().min(md.lines().count()) + 1);
+        eprintln!("profile --smoke: {path} DRIFTED from the code \
+                   (first difference at line {drift})");
+        eprintln!("refresh it with: dart profile --out {path}");
+        return 1;
+    }
+
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &md).expect("write profile doc");
+        println!("wrote {} bytes to {path}", md.len());
+    } else {
+        print!("{md}");
+    }
+    0
+}
+
 fn cmd_generate(args: &Args) -> i32 {
     let Some(dir) = dart::runtime::artifacts_dir() else {
         eprintln!("artifacts not built: run `make artifacts`");
@@ -502,7 +631,12 @@ fn cmd_generate(args: &Args) -> i32 {
     let prompts: Vec<Vec<i32>> = (0..b).map(|_| {
         (0..g.prompt_len).map(|_| rng.range(4, 52) as i32).collect()
     }).collect();
-    let r = eng.generate(&prompts).expect("generate");
+    let mut rec = if args.get("trace").is_some() {
+        dart::obs::Recorder::enabled(7)
+    } else {
+        dart::obs::Recorder::disabled()
+    };
+    let r = eng.generate_traced(&prompts, &mut rec).expect("generate");
     for row in &r.tokens {
         println!("{row:?}");
     }
@@ -512,6 +646,12 @@ fn cmd_generate(args: &Args) -> i32 {
              r.sampling_frac() * 100.0, r.step_trace.realized_steps(),
              r.step_trace.configured_steps(), r.step_trace.policy,
              r.step_trace.savings_frac() * 100.0);
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, rec.chrome_trace()).expect("write trace");
+        println!("\nwrote Chrome trace to {path} ({} spans, {} counters)",
+                 rec.spans().len(), rec.counters().len());
+        println!("\n{}", rec.summary());
+    }
     0
 }
 

@@ -1,0 +1,408 @@
+//! Deterministic observability: hierarchical spans + named counters,
+//! free when disabled.
+//!
+//! Every layer of the stack (sim, coordinator, cluster scheduler, study
+//! harness) threads a [`Recorder`] through its hot path. Spans carry
+//! **virtual time** — simulator seconds or the discrete-event scheduler
+//! clock — alongside wall time; all deterministic artifacts (the
+//! byte-stable [`Recorder::summary`], span ids, counter totals) are
+//! functions of virtual time and a seeded [`crate::util::Lcg64`] only,
+//! so same-seed runs produce bit-identical trace summaries and tracing
+//! joins the `fleet_determinism` contract. Wall time is captured purely
+//! for the Chrome-trace export ([`Recorder::chrome_trace`], loadable in
+//! Perfetto via `chrome://tracing`) and never enters the summary.
+//!
+//! The disabled recorder ([`Recorder::disabled`]) is the default on
+//! every instrumented path and performs **zero allocations** on the
+//! span/counter hot path — `begin`/`end`/`span_closed`/`count` are a
+//! single branch on a bool. The `trace_golden` integration test pins
+//! this with a counting global allocator.
+
+pub mod profile;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::report::{self, MarkdownDoc, Table};
+use crate::util::Lcg64;
+
+/// Opaque handle returned by [`Recorder::begin`]; [`SpanId::NONE`] when
+/// the recorder is disabled (ends on it are no-ops).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct SpanId(u64);
+
+impl SpanId {
+    pub const NONE: SpanId = SpanId(0);
+
+    pub fn is_none(self) -> bool {
+        self.0 == 0
+    }
+}
+
+/// One closed span. `begin_vt`/`end_vt` are virtual seconds (the only
+/// times that enter deterministic output); the wall fields are seconds
+/// since recorder construction and are exported to Chrome-trace `args`
+/// only.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub id: u64,
+    /// id of the enclosing open span at creation time (0 = root)
+    pub parent: u64,
+    pub cat: &'static str,
+    pub name: &'static str,
+    pub begin_vt: f64,
+    pub end_vt: f64,
+    pub begin_wall: f64,
+    pub end_wall: f64,
+}
+
+/// Span + counter sink. Construct with [`Recorder::enabled`] (seeded —
+/// span ids come from [`Lcg64`], never the wall clock) or
+/// [`Recorder::disabled`] (the zero-cost default).
+#[derive(Clone, Debug)]
+pub struct Recorder {
+    enabled: bool,
+    ids: Lcg64,
+    t0: Instant,
+    /// indices into `spans` forming the currently-open stack
+    open: Vec<usize>,
+    spans: Vec<SpanRecord>,
+    /// BTreeMap so iteration (and therefore every export) is ordered
+    counters: BTreeMap<&'static str, f64>,
+}
+
+impl Recorder {
+    /// The zero-overhead sink: every recording call returns after one
+    /// branch, allocating nothing (pinned by the `trace_golden` test).
+    pub fn disabled() -> Self {
+        Recorder {
+            enabled: false,
+            ids: Lcg64::new(0),
+            t0: Instant::now(),
+            open: Vec::new(),
+            spans: Vec::new(),
+            counters: BTreeMap::new(),
+        }
+    }
+
+    pub fn enabled(seed: u64) -> Self {
+        Recorder {
+            enabled: true,
+            ids: Lcg64::new(seed),
+            t0: Instant::now(),
+            open: Vec::new(),
+            spans: Vec::new(),
+            counters: BTreeMap::new(),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Open a span at virtual time `vt` (seconds). The parent is
+    /// whatever span is currently open (stack discipline).
+    pub fn begin(&mut self, cat: &'static str, name: &'static str,
+                 vt: f64) -> SpanId {
+        if !self.enabled {
+            return SpanId::NONE;
+        }
+        // odd ids: never 0 (reserved for "no parent"), still a pure
+        // function of the seed and call sequence
+        let id = self.ids.next_u64() | 1;
+        let parent = self.open.last().map(|&i| self.spans[i].id).unwrap_or(0);
+        let wall = self.t0.elapsed().as_secs_f64();
+        let idx = self.spans.len();
+        self.spans.push(SpanRecord {
+            id,
+            parent,
+            cat,
+            name,
+            begin_vt: vt,
+            end_vt: vt,
+            begin_wall: wall,
+            end_wall: wall,
+        });
+        self.open.push(idx);
+        SpanId(id)
+    }
+
+    /// Close the span `id` at virtual time `vt`. Tolerates out-of-order
+    /// closes (searches the open stack) and ignores [`SpanId::NONE`].
+    pub fn end(&mut self, id: SpanId, vt: f64) {
+        if !self.enabled || id.is_none() {
+            return;
+        }
+        if let Some(pos) =
+            self.open.iter().rposition(|&i| self.spans[i].id == id.0)
+        {
+            let idx = self.open.remove(pos);
+            self.spans[idx].end_vt = vt;
+            self.spans[idx].end_wall = self.t0.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Record an already-measured interval `[vt0, vt1]` as a closed
+    /// span (no stack interaction beyond parent attribution) — the
+    /// common shape for simulators that compute a duration and advance
+    /// virtual time in one step.
+    pub fn span_closed(&mut self, cat: &'static str, name: &'static str,
+                       vt0: f64, vt1: f64) {
+        if !self.enabled {
+            return;
+        }
+        let id = self.ids.next_u64() | 1;
+        let parent = self.open.last().map(|&i| self.spans[i].id).unwrap_or(0);
+        let wall = self.t0.elapsed().as_secs_f64();
+        self.spans.push(SpanRecord {
+            id,
+            parent,
+            cat,
+            name,
+            begin_vt: vt0,
+            end_vt: vt1,
+            begin_wall: wall,
+            end_wall: wall,
+        });
+    }
+
+    /// Add `delta` to the named counter (bytes moved, events
+    /// dispatched, sheds by reason, …). Counters are `f64` so byte
+    /// totals from the analytical sim accumulate without truncation.
+    pub fn count(&mut self, name: &'static str, delta: f64) {
+        if !self.enabled {
+            return;
+        }
+        *self.counters.entry(name).or_insert(0.0) += delta;
+    }
+
+    pub fn counter(&self, name: &str) -> f64 {
+        self.counters.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn counters(&self) -> &BTreeMap<&'static str, f64> {
+        &self.counters
+    }
+
+    pub fn spans(&self) -> &[SpanRecord] {
+        &self.spans
+    }
+
+    /// Aggregated span table: one row per `(cat, name)`, with call
+    /// count, total virtual milliseconds, and share of the root-span
+    /// virtual time. Pure function of the recorded spans.
+    pub fn span_table(&self) -> Table {
+        let mut agg: BTreeMap<(&str, &str), (u64, f64)> = BTreeMap::new();
+        let mut root_total = 0.0f64;
+        for s in &self.spans {
+            let e = agg.entry((s.cat, s.name)).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += s.end_vt - s.begin_vt;
+            if s.parent == 0 {
+                root_total += s.end_vt - s.begin_vt;
+            }
+        }
+        let denom = root_total.max(1e-12);
+        let mut t = Table::new(
+            "spans", &["cat", "span", "count", "virtual ms", "share"]);
+        for ((cat, name), (count, total)) in &agg {
+            t.row(&[cat.to_string(), name.to_string(), count.to_string(),
+                    report::f3(total * 1e3), report::pct(total / denom)]);
+        }
+        t
+    }
+
+    /// Counter table, ordered by counter name.
+    pub fn counter_table(&self) -> Table {
+        let mut t = Table::new("counters", &["counter", "value"]);
+        for (k, v) in &self.counters {
+            t.row(&[k.to_string(), report::si(*v)]);
+        }
+        t
+    }
+
+    /// Byte-stable Markdown summary (spans + counters). Contains no
+    /// wall time, no ids, no environment — two same-seed runs of a
+    /// deterministic workload render identical bytes.
+    pub fn summary(&self) -> String {
+        let mut doc = MarkdownDoc::new();
+        doc.h2("Trace summary")
+            .table(&self.span_table())
+            .table(&self.counter_table());
+        doc.render()
+    }
+
+    /// Chrome-trace-event JSON (the `chrome://tracing` / Perfetto
+    /// format): one complete (`"ph":"X"`) event per span with `ts`/
+    /// `dur` in virtual microseconds, then one counter (`"ph":"C"`)
+    /// event per named counter at the trace end. Wall durations ride
+    /// in `args.wall_ms` and are the only nondeterministic field.
+    pub fn chrome_trace(&self) -> String {
+        let mut out =
+            String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        let mut first = true;
+        let mut sep = |out: &mut String| {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+        };
+        for s in &self.spans {
+            sep(&mut out);
+            out.push_str(&format!(
+                "{{\"ph\":\"X\",\"pid\":1,\"tid\":1,\"name\":\"{}\",\
+                 \"cat\":\"{}\",\"ts\":{},\"dur\":{},\"args\":{{\
+                 \"id\":{},\"parent\":{},\"wall_ms\":{}}}}}",
+                s.name, s.cat, json_num(s.begin_vt * 1e6),
+                json_num((s.end_vt - s.begin_vt).max(0.0) * 1e6),
+                s.id, s.parent,
+                json_num((s.end_wall - s.begin_wall).max(0.0) * 1e3)));
+        }
+        let end_ts =
+            self.spans.iter().map(|s| s.end_vt).fold(0.0, f64::max) * 1e6;
+        for (k, v) in &self.counters {
+            sep(&mut out);
+            out.push_str(&format!(
+                "{{\"ph\":\"C\",\"pid\":1,\"name\":\"{k}\",\"ts\":{},\
+                 \"args\":{{\"value\":{}}}}}",
+                json_num(end_ts), json_num(*v)));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// JSON number formatting: finite, no exponent, integers without a
+/// fractional part (span/counter names are `&'static str` identifiers
+/// without quotes or backslashes, so no string escaping is needed).
+fn json_num(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".to_string();
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo(rec: &mut Recorder) {
+        let root = rec.begin("fleet", "serve", 0.0);
+        let a = rec.begin("fleet", "batch", 0.0);
+        rec.count("fleet.events", 2.0);
+        rec.count("fleet.hbm_bytes", 4096.0);
+        rec.end(a, 0.25);
+        rec.span_closed("fleet", "batch", 0.25, 0.75);
+        rec.count("fleet.events", 1.0);
+        rec.end(root, 1.0);
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut rec = Recorder::disabled();
+        let id = rec.begin("x", "y", 0.0);
+        assert!(id.is_none());
+        rec.count("c", 1.0);
+        rec.end(id, 1.0);
+        rec.span_closed("x", "z", 0.0, 1.0);
+        assert!(rec.spans().is_empty());
+        assert!(rec.counters().is_empty());
+        assert_eq!(rec.counter("c"), 0.0);
+        // summary still renders (headers only)
+        assert!(rec.summary().contains("## Trace summary"));
+    }
+
+    #[test]
+    fn spans_nest_and_counters_accumulate() {
+        let mut rec = Recorder::enabled(7);
+        demo(&mut rec);
+        assert_eq!(rec.spans().len(), 3);
+        let root_id = rec.spans()[0].id;
+        assert_eq!(rec.spans()[0].parent, 0);
+        assert_eq!(rec.spans()[1].parent, root_id, "nested under root");
+        assert_eq!(rec.spans()[2].parent, root_id, "closed-span parent");
+        assert_eq!(rec.counter("fleet.events"), 3.0);
+        assert_eq!(rec.counter("fleet.hbm_bytes"), 4096.0);
+        assert!((rec.spans()[0].end_vt - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_seed_runs_summarize_identically() {
+        let run = |seed| {
+            let mut rec = Recorder::enabled(seed);
+            demo(&mut rec);
+            rec
+        };
+        let (a, b) = (run(42), run(42));
+        assert_eq!(a.summary(), b.summary(), "summary must be byte-stable");
+        // span ids are a pure function of the seed, never the clock
+        for (x, y) in a.spans().iter().zip(b.spans()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.parent, y.parent);
+        }
+        // a different seed renders the same summary (ids are not in
+        // it) but different ids
+        let c = run(43);
+        assert_eq!(a.summary(), c.summary());
+        assert_ne!(a.spans()[0].id, c.spans()[0].id);
+    }
+
+    #[test]
+    fn summary_shares_are_relative_to_root_spans() {
+        let mut rec = Recorder::enabled(1);
+        demo(&mut rec);
+        let s = rec.summary();
+        // root serve span: 1.0 s of virtual time -> 100.0% share;
+        // the two batch spans total 0.75 s -> 75.0%
+        assert!(s.contains("serve"), "{s}");
+        assert!(s.contains("100.0%"), "{s}");
+        assert!(s.contains("75.0%"), "{s}");
+        assert!(s.contains("fleet.hbm_bytes"), "{s}");
+    }
+
+    #[test]
+    fn chrome_trace_is_wellformed_json_with_virtual_timestamps() {
+        let mut rec = Recorder::enabled(5);
+        demo(&mut rec);
+        let js = rec.chrome_trace();
+        let doc = crate::runtime::json::parse(&js).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(|e| e.as_arr())
+            .expect("traceEvents array");
+        // 3 spans + 2 counters
+        assert_eq!(events.len(), 5);
+        for e in events {
+            assert!(e.get("name").and_then(|n| n.as_str()).is_some());
+            assert!(e.get("ph").and_then(|p| p.as_str()).is_some());
+            assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+        }
+        // the root span is 1.0 virtual seconds = 1e6 virtual µs
+        let root = &events[0];
+        assert_eq!(root.get("dur").and_then(|d| d.as_f64()), Some(1e6));
+    }
+
+    #[test]
+    fn end_tolerates_out_of_order_and_none_ids() {
+        let mut rec = Recorder::enabled(3);
+        let a = rec.begin("t", "a", 0.0);
+        let b = rec.begin("t", "b", 0.1);
+        rec.end(a, 0.9); // close parent before child
+        rec.end(b, 0.5);
+        rec.end(SpanId::NONE, 2.0); // no-op
+        rec.end(a, 3.0); // double close: no-op (already off the stack)
+        assert!((rec.spans()[0].end_vt - 0.9).abs() < 1e-12);
+        assert!((rec.spans()[1].end_vt - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_num_formats() {
+        assert_eq!(json_num(0.0), "0");
+        assert_eq!(json_num(1e6), "1000000");
+        assert_eq!(json_num(1.5), "1.500");
+        assert_eq!(json_num(f64::NAN), "0");
+        assert_eq!(json_num(f64::INFINITY), "0");
+    }
+}

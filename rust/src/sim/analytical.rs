@@ -94,6 +94,29 @@ pub struct RunReport {
     pub sampling_frac: f64,
 }
 
+impl RunReport {
+    /// Emit this run's Fig-1-style phase breakdown into an `obs`
+    /// recorder: back-to-back `sim.model` / `sim.sampling` spans on the
+    /// simulated-time axis starting at virtual second `vt0`, plus
+    /// per-phase byte/op counters. `sim.sampling.hbm_bytes` is the
+    /// vocabulary-wide logit-buffer traffic the paper's Fig. 1
+    /// attributes the sampling bottleneck to. Returns the virtual end
+    /// time so callers can chain consecutive runs onto one timeline.
+    pub fn record(&self, rec: &mut crate::obs::Recorder, vt0: f64) -> f64 {
+        let m_end = vt0 + self.model.seconds;
+        rec.span_closed("sim", "model", vt0, m_end);
+        let s_end = m_end + self.sampling.seconds;
+        rec.span_closed("sim", "sampling", m_end, s_end);
+        rec.count("sim.model.macs", self.model.macs);
+        rec.count("sim.model.hbm_bytes", self.model.hbm_bytes);
+        rec.count("sim.model.sram_bytes", self.model.sram_bytes);
+        rec.count("sim.sampling.hbm_bytes", self.sampling.hbm_bytes);
+        rec.count("sim.sampling.sram_bytes", self.sampling.sram_bytes);
+        rec.count("sim.sampling.vector_ops", self.sampling.vector_ops);
+        s_end
+    }
+}
+
 pub struct AnalyticalSim {
     pub hw: HwConfig,
     pub prec: PrecisionConfig,
@@ -379,6 +402,28 @@ mod tests {
         assert_eq!(floor.total_s.to_bits(), one.total_s.to_bits());
         let over = sim.run_scheduled(&w, 99.0);
         assert_eq!(over.total_s.to_bits(), full.total_s.to_bits());
+    }
+
+    #[test]
+    fn run_report_records_phase_spans_and_counters() {
+        let r = dart(CacheMode::Dual);
+        let mut rec = crate::obs::Recorder::enabled(9);
+        let end = r.record(&mut rec, 0.0);
+        assert!((end - r.total_s).abs() < 1e-12);
+        assert_eq!(rec.spans().len(), 2);
+        assert_eq!(rec.spans()[0].name, "model");
+        assert_eq!(rec.spans()[1].name, "sampling");
+        // phase spans tile the run: model ends where sampling begins
+        assert_eq!(rec.spans()[0].end_vt.to_bits(),
+                   rec.spans()[1].begin_vt.to_bits());
+        assert_eq!(rec.counter("sim.sampling.hbm_bytes"),
+                   r.sampling.hbm_bytes);
+        assert_eq!(rec.counter("sim.model.macs"), r.model.macs);
+        // chaining: a second run starts where the first ended
+        let end2 = r.record(&mut rec, end);
+        assert!((end2 - 2.0 * r.total_s).abs() < 1e-9);
+        assert_eq!(rec.counter("sim.model.hbm_bytes"),
+                   2.0 * r.model.hbm_bytes);
     }
 
     #[test]

@@ -40,6 +40,30 @@ impl SimReport {
         }
         self.hbm_bytes as f64 / (self.cycles as f64 / clock_hz)
     }
+
+    /// Emit the per-instruction-class cycle attribution into an `obs`
+    /// recorder: one `cycle.run` span over the simulated time axis
+    /// (cycles at `clock_hz`) plus `cycle.busy.*` counters per issue
+    /// unit (matrix / vector / scalar / hbm), stall cycles, and HBM
+    /// traffic — deterministic for a fixed program, so traced cycle
+    /// runs summarize byte-identically.
+    pub fn record(&self, rec: &mut crate::obs::Recorder, clock_hz: f64) {
+        let total_s = self.cycles as f64 / clock_hz.max(1.0);
+        rec.span_closed("cycle", "run", 0.0, total_s);
+        rec.count("cycle.instrs", self.instrs as f64);
+        rec.count("cycle.stall_cycles", self.stall_cycles as f64);
+        rec.count("cycle.hbm_bytes", self.hbm_bytes as f64);
+        for (busy, name) in &self.unit_busy {
+            // counter names must be 'static: map the unit label
+            let key: &'static str = match *name {
+                "matrix" => "cycle.busy.matrix",
+                "vector" => "cycle.busy.vector",
+                "scalar" => "cycle.busy.scalar",
+                _ => "cycle.busy.hbm",
+            };
+            rec.count(key, *busy as f64);
+        }
+    }
 }
 
 /// Outstanding write (scoreboard entry): resource + finish cycle.
@@ -633,6 +657,26 @@ mod tests {
         let r = s.run(&b.finish());
         assert_eq!(s.sram.v(8, 4), &[11.0, 22.0, 33.0, 44.0]);
         assert_eq!(r.cycles, 7); // 6 fill + 1 chunk
+    }
+
+    #[test]
+    fn sim_report_records_unit_attribution() {
+        let mut s = sim();
+        s.sram.v_mut(0, 8).copy_from_slice(&[1.0; 8]);
+        let mut b = ProgramBuilder::new();
+        b.push(VAddVV { dst: 8, a: 0, b: 0, len: 8 });
+        let r = s.run(&b.finish());
+        let clock = s.hw.clock_hz;
+        let mut rec = crate::obs::Recorder::enabled(1);
+        r.record(&mut rec, clock);
+        assert_eq!(rec.spans().len(), 1);
+        assert_eq!(rec.spans()[0].name, "run");
+        assert!((rec.spans()[0].end_vt - r.cycles as f64 / clock).abs()
+                < 1e-18);
+        assert_eq!(rec.counter("cycle.busy.vector"),
+                   r.unit_busy[1].0 as f64);
+        assert_eq!(rec.counter("cycle.instrs"), r.instrs as f64);
+        assert_eq!(rec.counter("cycle.busy.matrix"), 0.0);
     }
 
     #[test]

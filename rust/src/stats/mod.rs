@@ -95,6 +95,20 @@ impl Reservoir {
         self.samples.len()
     }
 
+    /// Alias for [`Self::len`] under the counter-export naming used by
+    /// the coordinator's observation cross-check (`obs` counters).
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True once every slot is filled — from here on each new
+    /// observation is retained with probability cap/seen rather than
+    /// always, i.e. percentiles become sampled estimates. Callers
+    /// surface this as a counter instead of silently degrading.
+    pub fn is_saturated(&self) -> bool {
+        self.samples.len() == self.cap
+    }
+
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
@@ -357,6 +371,28 @@ mod tests {
     fn reservoir_empty_summary_is_none() {
         assert!(Reservoir::new(4).summary().is_none());
         assert!(Reservoir::new(4).is_empty());
+    }
+
+    #[test]
+    fn reservoir_saturation_flips_exactly_at_capacity() {
+        let mut r = Reservoir::new(4);
+        assert_eq!(r.count(), 0);
+        assert!(!r.is_saturated());
+        for i in 0..3 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.count(), 3);
+        assert!(!r.is_saturated(), "under capacity: exact percentiles");
+        r.push(3.0);
+        assert!(r.is_saturated(), "full: estimates from here on");
+        // streaming past capacity keeps count == cap, stays saturated
+        for i in 4..100 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.count(), 4);
+        assert_eq!(r.count(), r.len());
+        assert!(r.is_saturated());
+        assert_eq!(r.seen(), 100);
     }
 
     #[test]

@@ -33,7 +33,9 @@ pub fn cell_row(c: &CellResult, baseline_goodput: Option<f64>,
         c.policy.name().to_string(),
         c.admission_label().to_string(),
         c.schedule.name().to_string(),
-        report::pct(m.shed_frac()),
+        report::pct(m.shed_slo_frac()),
+        report::pct(m.shed_capacity_frac()),
+        report::pct(m.shed_retry_frac()),
         report::pct(m.slo_attainment()),
         report::f1(m.goodput_tps()),
         delta,
@@ -43,9 +45,10 @@ pub fn cell_row(c: &CellResult, baseline_goodput: Option<f64>,
     ]
 }
 
-const SWEEP_HEADERS: [&str; 10] = [
-    "router", "admission", "schedule", "shed", "attainment",
-    "goodput tok/s", "Δ goodput", "p95 TTFT", "padding waste", "mean util"];
+const SWEEP_HEADERS: [&str; 12] = [
+    "router", "admission", "schedule", "shed slo", "shed cap",
+    "shed retry", "attainment", "goodput tok/s", "Δ goodput", "p95 TTFT",
+    "padding waste", "mean util"];
 
 /// Mean of `f` over cells passing `keep` (0.0 on an empty selection).
 fn mean_over<F, K>(cells: &[CellResult], keep: K, f: F) -> f64
@@ -409,6 +412,7 @@ mod tests {
             schedule: ScheduleSpec::slowfast_default(),
             admission: AdmissionMode::Calibrated,
             metrics: m,
+            wall_s: 0.0,
         }
     }
 
@@ -421,7 +425,9 @@ mod tests {
             "variant-aware".to_string(),
             "calibrated".to_string(),
             "slowfast".to_string(),
-            "50.0%".to_string(),    // 2 shed of 4 offered
+            "25.0%".to_string(),    // 1 SLO-predicted shed of 4 offered
+            "25.0%".to_string(),    // 1 capacity shed of 4 offered
+            "0.0%".to_string(),     // no retry-exhausted sheds
             "25.0%".to_string(),    // 1 in-SLO of 4 offered
             "10.0".to_string(),     // 100 SLO tokens / 10 s
             "+25.0%".to_string(),   // vs baseline goodput 8.0
@@ -430,10 +436,10 @@ mod tests {
             "60.0%".to_string(),    // mean of 80% and 40%
         ]);
         // the baseline row marks itself instead of a delta
-        assert_eq!(cell_row(&fixture(), Some(8.0), true)[6], "(base)");
+        assert_eq!(cell_row(&fixture(), Some(8.0), true)[8], "(base)");
         // an unusable baseline degrades to n/a, never a division blowup
-        assert_eq!(cell_row(&fixture(), Some(0.0), false)[6], "n/a");
-        assert_eq!(cell_row(&fixture(), None, false)[6], "n/a");
+        assert_eq!(cell_row(&fixture(), Some(0.0), false)[8], "n/a");
+        assert_eq!(cell_row(&fixture(), None, false)[8], "n/a");
     }
 
     #[test]
@@ -446,7 +452,8 @@ mod tests {
                        "## Policy sweep", "## Analysis",
                        "## Reproducibility", "(base)", "fleet-study",
                        "homogeneous-2", "mixed-3", "| router |",
-                       "| schedule |", "denoising schedules",
+                       "| schedule |", "| shed slo |", "| shed cap |",
+                       "| shed retry |", "denoising schedules",
                        "realizes ~", "| slowfast |", "| recalibrated |",
                        "replay loop"] {
             assert!(a.contains(needle), "study doc missing {needle:?}");

@@ -197,6 +197,11 @@ pub struct CellResult {
     /// curves, or warm-up-recalibrated curves
     pub admission: AdmissionMode,
     pub metrics: FleetMetrics,
+    /// wall-clock seconds the cell's fleet run took — measured timing
+    /// for the CLI progress line and profiling only; deliberately
+    /// *outside* the determinism contract and never rendered into the
+    /// study document
+    pub wall_s: f64,
 }
 
 impl CellResult {
@@ -374,13 +379,18 @@ impl StudyGrid {
                 .run(trace);
             recalibrate_fleet(&mut topo, &warm, &RecalibConfig::default());
         }
-        cfg.policies.iter().map(|&policy| CellResult {
-            shape: shape.name.clone(),
-            devices: shape.n_devices(),
-            policy,
-            schedule: u.schedule,
-            admission: u.admission,
-            metrics: FleetSim::new(topo.clone(), policy, slo).run(trace),
+        cfg.policies.iter().map(|&policy| {
+            let t0 = std::time::Instant::now();
+            let metrics = FleetSim::new(topo.clone(), policy, slo).run(trace);
+            CellResult {
+                shape: shape.name.clone(),
+                devices: shape.n_devices(),
+                policy,
+                schedule: u.schedule,
+                admission: u.admission,
+                metrics,
+                wall_s: t0.elapsed().as_secs_f64(),
+            }
         }).collect()
     }
 

@@ -17,6 +17,7 @@ fn assert_metrics_identical(a: &FleetMetrics, b: &FleetMetrics, ctx: &str) {
     assert_eq!(a.completed, b.completed, "completed: {ctx}");
     assert_eq!(a.shed_slo, b.shed_slo, "shed_slo: {ctx}");
     assert_eq!(a.shed_capacity, b.shed_capacity, "shed_capacity: {ctx}");
+    assert_eq!(a.shed_retry, b.shed_retry, "shed_retry: {ctx}");
     assert_eq!(a.retries, b.retries, "retries: {ctx}");
     assert_eq!(a.slo_met, b.slo_met, "slo_met: {ctx}");
     assert_eq!(a.tokens, b.tokens, "tokens: {ctx}");

@@ -4,7 +4,8 @@
 #   scripts/ci.sh           tier-1 gate: release build + tests + fmt/lint
 #                           + test-count regression guard + docs gate
 #   scripts/ci.sh --smoke   tier-1 gate + fast fleet/calib smoke runs
-#                           + committed-study drift check (fleet-study)
+#                           + committed-doc drift checks (fleet-study,
+#                           profile) + observability artifact validation
 #
 # The tier-1 gate (ROADMAP.md) must stay green: `cargo build --release &&
 # cargo test -q`. rustfmt/clippy are checked when the components are
@@ -97,8 +98,20 @@ if [[ "${1:-}" == "--smoke" ]]; then
     echo "== smoke: serve-cluster replay loop (warm-up -> recalibrate -> re-serve) =="
     cargo run --release -- serve-cluster --devices 2 --requests 32 \
         --recalibrate
+    echo "== smoke: observability goldens (zero-alloc recorder + byte-stable trace summary) =="
+    cargo test -q --test trace_golden
+    echo "== smoke: --trace export + Chrome-trace JSON validation =="
+    trace_tmp=$(mktemp)
+    cargo run --release -- serve-cluster --devices 2 --requests 32 \
+        --trace "$trace_tmp"
+    cargo run --release -- profile --check-trace "$trace_tmp"
+    rm -f "$trace_tmp"
+    echo "== smoke: bench JSON schema check (BENCH_6.json) =="
+    cargo run --release -- profile --check-bench BENCH_6.json
     echo "== docs: fleet-study regen check (committed study must not drift) =="
     cargo run --release -- fleet-study --smoke
+    echo "== docs: profile regen check (committed profile must not drift) =="
+    cargo run --release -- profile --smoke
 fi
 
 echo "ci: OK"
