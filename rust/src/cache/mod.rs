@@ -1,0 +1,40 @@
+//! Cross-step feature caching: a serving dimension for the redundancy
+//! between adjacent denoising steps.
+//!
+//! dLLM-Cache (and DPad after it) observe that a diffusion LLM's
+//! features barely change between adjacent denoising steps — prompt
+//! features are near-static across a generation, response features
+//! drift slowly between refreshes — and turn that redundancy into
+//! multi-fold speedups by refreshing features at intervals instead of
+//! every step. This subsystem models that as a first-class serving
+//! dimension:
+//!
+//! * [`policy`] — [`CachePolicySpec`] (`Off` bit-exact with the
+//!   pre-cache engine, `Interval` with fixed prompt/response refresh
+//!   cadences, `Adaptive` driven by a committed-token drift proxy), the
+//!   stateful [`CachePlanner`] the generation engine steps through, and
+//!   the deterministic [`CacheStats`] accounting
+//!   (hits + misses == lookups, property-gated).
+//! * [`sim`] — the seeded synthetic feature-drift process (substitution
+//!   S10, the cache analogue of `schedule::sim`'s S8) that prices a
+//!   policy's *expected* refresh/reuse mix ([`CachePlan`]) for every
+//!   analytic cost model:
+//!   [`crate::sim::analytical::AnalyticalSim::run_cached`] bills only
+//!   refreshed-feature FLOPs/bytes, calibration records the expected
+//!   hit rate on every [`crate::calib::LatencyCurve`] (text format v3),
+//!   and the cluster scheduler's admission prices warm steady-state
+//!   serving against cold first blocks from it.
+//!
+//! The policy decides *when* features are recomputed; *what* a step
+//! computes is unchanged — so `Off` (the default) and the degenerate
+//! `Interval { 1, 1 }` reproduce the pre-cache engine bit-exactly
+//! (`rust/tests/cache_equivalence.rs` is the differential gate, bench
+//! `cache_sweep` proves the cached arms are distinguishable).
+
+pub mod policy;
+pub mod sim;
+
+pub use policy::{CacheAction, CachePlanner, CachePolicySpec, CacheStats,
+                 REF_N_BLOCKS};
+pub use sim::{expected_plan, simulate_cache_block, CacheBlockTrace,
+              CachePlan, EXPECTATION_SEEDS};

@@ -1,0 +1,470 @@
+//! Feature-cache policies: who recomputes what, per block-step.
+//!
+//! [`CachePolicySpec`] is the copyable description the CLI flags, study
+//! grids and topology configs carry; [`CachePlanner`] is the stateful
+//! per-generation driver the engine steps through; [`CacheStats`] is the
+//! deterministic accounting every consulted lookup lands in.
+//!
+//! The contract that licenses the engine integration
+//! (`rust/tests/cache_equivalence.rs`): `Off` never consults the cache
+//! and reproduces the pre-cache engine bit-exactly, and
+//! `Interval { prompt_every: 1, response_every: 1 }` — refresh
+//! everything at every opportunity — takes exactly the same actions as
+//! `Off`, so the whole cached control path collapses to the baseline
+//! when the refresh intervals are degenerate.
+
+/// Per-step decision of the feature-cache planner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheAction {
+    /// run the full warm forward (prompt + response features recomputed)
+    Full,
+    /// run the refine forward (response features recomputed, cached
+    /// prompt/prefix features reused)
+    Refresh,
+    /// skip the forward entirely and reuse the cached block logits
+    Reuse,
+}
+
+/// Copyable description of a cross-step feature-cache policy (the
+/// dLLM-Cache model: prompt features refreshed at long intervals,
+/// response features refreshed adaptively between denoising steps).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CachePolicySpec {
+    /// no feature cache: bit-exact with the pre-cache engine (default)
+    Off,
+    /// fixed refresh intervals: full (prompt-refreshing) forward every
+    /// `prompt_every`-th block, response features recomputed every
+    /// `response_every`-th refine step; `{1, 1}` degenerates to `Off`
+    Interval { prompt_every: usize, response_every: usize },
+    /// adaptive refresh driven by a feature-drift proxy: recompute when
+    /// the fraction of block tokens committed since the last refresh
+    /// reaches `tau`, or `max_interval` steps have gone stale
+    Adaptive { tau: f64, max_interval: usize },
+}
+
+impl Default for CachePolicySpec {
+    fn default() -> Self {
+        CachePolicySpec::Off
+    }
+}
+
+impl CachePolicySpec {
+    /// The default interval policy: prompt features every 4 blocks,
+    /// response features every 4 refine steps.
+    pub fn interval_default() -> Self {
+        CachePolicySpec::Interval { prompt_every: 4, response_every: 4 }
+    }
+
+    /// The default adaptive policy: refresh at 35% committed drift or
+    /// after 8 stale steps, whichever first.
+    pub fn adaptive_default() -> Self {
+        CachePolicySpec::Adaptive { tau: 0.35, max_interval: 8 }
+    }
+
+    /// Parse `off | interval[:P:R] | adaptive[:TAU:MAX]`
+    /// (case-insensitive). Colon-separated so the combined `--cache`
+    /// flag can stay comma-separated.
+    pub fn parse(s: &str) -> Option<Self> {
+        let lower = s.to_ascii_lowercase();
+        let mut parts = lower.split(':');
+        match parts.next()? {
+            "off" => Some(CachePolicySpec::Off),
+            "interval" => {
+                let p = match parts.next() {
+                    Some(v) => v.parse().ok().filter(|&p: &usize| p > 0)?,
+                    None => 4,
+                };
+                let r = match parts.next() {
+                    Some(v) => v.parse().ok().filter(|&r: &usize| r > 0)?,
+                    None => 4,
+                };
+                Some(CachePolicySpec::Interval {
+                    prompt_every: p,
+                    response_every: r,
+                })
+            }
+            "adaptive" => {
+                let tau = match parts.next() {
+                    Some(v) => v.parse().ok()
+                        .filter(|t: &f64| t.is_finite() && *t > 0.0
+                                && *t <= 1.0)?,
+                    None => 0.35,
+                };
+                let max = match parts.next() {
+                    Some(v) => v.parse().ok().filter(|&m: &usize| m > 0)?,
+                    None => 8,
+                };
+                Some(CachePolicySpec::Adaptive { tau, max_interval: max })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CachePolicySpec::Off => "off",
+            CachePolicySpec::Interval { .. } => "interval",
+            CachePolicySpec::Adaptive { .. } => "adaptive",
+        }
+    }
+
+    pub fn is_off(&self) -> bool {
+        matches!(self, CachePolicySpec::Off)
+    }
+
+    /// Build the stateful per-generation planner.
+    pub fn build(&self, block_len: usize) -> CachePlanner {
+        CachePlanner::new(*self, block_len)
+    }
+
+    /// Expected hit rate of this policy at the given block geometry
+    /// (the synthetic S10 pricing — see [`crate::cache::expected_plan`]).
+    pub fn expected_hit_rate(&self, block_len: usize,
+                             steps_per_block: usize, n_blocks: usize)
+                             -> f64 {
+        super::sim::expected_plan(self, block_len, steps_per_block,
+                                  n_blocks)
+            .hit_rate(steps_per_block as f64)
+    }
+
+    /// [`Self::expected_hit_rate`] at the canonical serving block count
+    /// ([`REF_N_BLOCKS`]). The calibration profiler records this value
+    /// on the curve and the cluster scheduler computes its serving hit
+    /// rate through the same call, so a topology served under the
+    /// policy it was profiled with prices at `hit_scale == 1.0`
+    /// *exactly* (`x / x`).
+    pub fn serving_hit_rate(&self, block_len: usize,
+                            steps_per_block: usize) -> f64 {
+        self.expected_hit_rate(block_len, steps_per_block, REF_N_BLOCKS)
+    }
+}
+
+/// Canonical block count behind
+/// [`CachePolicySpec::serving_hit_rate`]: the serving chat mix's
+/// representative generation length (~4 blocks of 64 over the mid
+/// seq-len bucket).
+pub const REF_N_BLOCKS: usize = 4;
+
+/// Deterministic feature-cache accounting: every consulted step is a
+/// lookup, resolved as a hit (features reused) or a miss (features
+/// recomputed, `refresh_bytes` restreamed). `hits + misses == lookups`
+/// is a structural invariant the property net pins.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// bytes of refreshed features (logit-buffer traffic) restreamed on
+    /// misses
+    pub refresh_bytes: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &CacheStats) {
+        self.lookups += o.lookups;
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.refresh_bytes += o.refresh_bytes;
+    }
+}
+
+/// Stateful per-generation cache driver: the engine asks it for an
+/// action at every block-step, feeds committed-token counts back (the
+/// adaptive drift proxy), and reports refreshed bytes on misses.
+#[derive(Clone, Debug)]
+pub struct CachePlanner {
+    spec: CachePolicySpec,
+    block_len: usize,
+    /// steps since response features were last recomputed
+    steps_since_refresh: usize,
+    /// tokens committed since the last recompute (adaptive drift proxy)
+    committed_since_refresh: usize,
+    pub stats: CacheStats,
+}
+
+impl CachePlanner {
+    pub fn new(spec: CachePolicySpec, block_len: usize) -> Self {
+        CachePlanner {
+            spec,
+            block_len: block_len.max(1),
+            steps_since_refresh: 0,
+            committed_since_refresh: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Decide the action for step `t` of block `blk`.
+    ///
+    /// `baseline_warm` is the pre-cache engine's own warm/refine
+    /// decision for this step (warm steps and `CacheMode::None` always
+    /// recompute everything); `can_refresh_warm` says whether a
+    /// block-start step *could* be served from cached cross-block
+    /// features (dual KV cache present, not the first block). `Off`
+    /// always returns the baseline action and records nothing.
+    pub fn step(&mut self, blk: usize, t: usize, baseline_warm: bool,
+                can_refresh_warm: bool) -> CacheAction {
+        if self.spec.is_off() {
+            return if baseline_warm {
+                CacheAction::Full
+            } else {
+                CacheAction::Refresh
+            };
+        }
+        self.stats.lookups += 1;
+        if t == 0 {
+            // block start: prompt/prefix features are the cached object
+            self.steps_since_refresh = 0;
+            self.committed_since_refresh = 0;
+            let prompt_stale = match self.spec {
+                CachePolicySpec::Interval { prompt_every, .. } =>
+                    blk % prompt_every == 0,
+                CachePolicySpec::Adaptive { max_interval, .. } =>
+                    blk % max_interval == 0,
+                CachePolicySpec::Off => unreachable!(),
+            };
+            if prompt_stale || blk == 0 || !can_refresh_warm {
+                self.stats.misses += 1;
+                CacheAction::Full
+            } else {
+                self.stats.hits += 1;
+                CacheAction::Refresh
+            }
+        } else {
+            // refine step: the cached block logits are the cached object
+            let recompute = match self.spec {
+                CachePolicySpec::Interval { response_every, .. } =>
+                    self.steps_since_refresh + 1 >= response_every,
+                CachePolicySpec::Adaptive { tau, max_interval } =>
+                    self.committed_since_refresh as f64
+                        / self.block_len as f64 >= tau
+                        || self.steps_since_refresh + 1 >= max_interval,
+                CachePolicySpec::Off => unreachable!(),
+            };
+            if recompute {
+                self.steps_since_refresh = 0;
+                self.committed_since_refresh = 0;
+                self.stats.misses += 1;
+                if baseline_warm {
+                    CacheAction::Full
+                } else {
+                    CacheAction::Refresh
+                }
+            } else {
+                self.steps_since_refresh += 1;
+                self.stats.hits += 1;
+                CacheAction::Reuse
+            }
+        }
+    }
+
+    /// Feed the tokens committed this step back into the drift proxy.
+    pub fn note_commits(&mut self, n: usize) {
+        self.committed_since_refresh += n;
+    }
+
+    /// Account refreshed feature bytes (called by the engine on
+    /// Full/Refresh steps).
+    pub fn note_refresh_bytes(&mut self, bytes: u64) {
+        if !self.spec.is_off() {
+            self.stats.refresh_bytes += bytes;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_defaults() {
+        assert_eq!(CachePolicySpec::parse("off"), Some(CachePolicySpec::Off));
+        assert_eq!(CachePolicySpec::parse("OFF"), Some(CachePolicySpec::Off));
+        assert_eq!(CachePolicySpec::parse("interval"),
+                   Some(CachePolicySpec::interval_default()));
+        assert_eq!(CachePolicySpec::parse("interval:2:6"),
+                   Some(CachePolicySpec::Interval {
+                       prompt_every: 2, response_every: 6 }));
+        assert_eq!(CachePolicySpec::parse("adaptive"),
+                   Some(CachePolicySpec::adaptive_default()));
+        assert_eq!(CachePolicySpec::parse("adaptive:0.5:4"),
+                   Some(CachePolicySpec::Adaptive {
+                       tau: 0.5, max_interval: 4 }));
+        assert_eq!(CachePolicySpec::parse("interval:0:4"), None);
+        assert_eq!(CachePolicySpec::parse("adaptive:2.0"), None);
+        assert_eq!(CachePolicySpec::parse("bogus"), None);
+        assert_eq!(CachePolicySpec::default(), CachePolicySpec::Off);
+    }
+
+    #[test]
+    fn off_matches_baseline_actions_and_records_nothing() {
+        let mut p = CachePlanner::new(CachePolicySpec::Off, 8);
+        for blk in 0..3 {
+            for t in 0..4 {
+                let warm = t == 0;
+                assert_eq!(p.step(blk, t, warm, blk > 0),
+                           if warm { CacheAction::Full }
+                           else { CacheAction::Refresh });
+            }
+        }
+        p.note_refresh_bytes(4096);
+        assert_eq!(p.stats, CacheStats::default());
+    }
+
+    #[test]
+    fn degenerate_interval_takes_exactly_the_baseline_actions() {
+        // Interval{1,1} refreshes everything at every opportunity: the
+        // action stream is identical to Off on every geometry
+        for (n_blocks, steps) in [(1usize, 1usize), (3, 4), (4, 16)] {
+            let mut cached = CachePlanner::new(
+                CachePolicySpec::Interval { prompt_every: 1,
+                                            response_every: 1 }, 8);
+            let mut off = CachePlanner::new(CachePolicySpec::Off, 8);
+            for blk in 0..n_blocks {
+                for t in 0..steps {
+                    let warm = t == 0;
+                    let a = cached.step(blk, t, warm, blk > 0);
+                    let b = off.step(blk, t, warm, blk > 0);
+                    assert_eq!(a, b, "blk {blk} t {t}");
+                    assert_ne!(a, CacheAction::Reuse);
+                }
+            }
+            // degenerate intervals hit nothing — every lookup refreshed
+            assert_eq!(cached.stats.hits, 0);
+            assert_eq!(cached.stats.misses, cached.stats.lookups);
+        }
+    }
+
+    #[test]
+    fn interval_refresh_cadence() {
+        // response_every = 3 on an 8-step block: refreshes at t = 3, 6
+        let mut p = CachePlanner::new(
+            CachePolicySpec::Interval { prompt_every: 1, response_every: 3 },
+            8);
+        let mut actions = Vec::new();
+        for t in 0..8 {
+            actions.push(p.step(0, t, t == 0, false));
+        }
+        use CacheAction::*;
+        assert_eq!(actions, vec![Full, Reuse, Reuse, Refresh, Reuse, Reuse,
+                                 Refresh, Reuse]);
+        assert_eq!(p.stats.lookups, 8);
+        assert_eq!(p.stats.hits, 5);
+        assert_eq!(p.stats.misses, 3);
+    }
+
+    #[test]
+    fn adaptive_drift_forces_refresh() {
+        let mut p = CachePlanner::new(
+            CachePolicySpec::Adaptive { tau: 0.25, max_interval: 100 }, 8);
+        assert_eq!(p.step(0, 0, true, false), CacheAction::Full);
+        // below drift threshold: reuse
+        p.note_commits(1);
+        assert_eq!(p.step(0, 1, false, false), CacheAction::Reuse);
+        // 2/8 = 0.25 >= tau: refresh
+        p.note_commits(1);
+        assert_eq!(p.step(0, 2, false, false), CacheAction::Refresh);
+        // drift proxy reset by the refresh
+        assert_eq!(p.step(0, 3, false, false), CacheAction::Reuse);
+    }
+
+    #[test]
+    fn adaptive_max_interval_bounds_staleness() {
+        let mut p = CachePlanner::new(
+            CachePolicySpec::Adaptive { tau: 1.0, max_interval: 2 }, 64);
+        assert_eq!(p.step(0, 0, true, false), CacheAction::Full);
+        assert_eq!(p.step(0, 1, false, false), CacheAction::Reuse);
+        assert_eq!(p.step(0, 2, false, false), CacheAction::Refresh);
+        assert_eq!(p.step(0, 3, false, false), CacheAction::Reuse);
+        assert_eq!(p.step(0, 4, false, false), CacheAction::Refresh);
+    }
+
+    #[test]
+    fn accounting_invariant_holds() {
+        crate::stats::prop_check("hits + misses == lookups", 64, |rng| {
+            let spec = match rng.next_u64() % 3 {
+                0 => CachePolicySpec::interval_default(),
+                1 => CachePolicySpec::Interval {
+                    prompt_every: 1 + (rng.next_u64() % 6) as usize,
+                    response_every: 1 + (rng.next_u64() % 6) as usize,
+                },
+                _ => CachePolicySpec::Adaptive {
+                    tau: 0.1 + 0.8 * rng.next_f64(),
+                    max_interval: 1 + (rng.next_u64() % 12) as usize,
+                },
+            };
+            let n_blocks = 1 + (rng.next_u64() % 6) as usize;
+            let steps = 1 + (rng.next_u64() % 20) as usize;
+            let commits = rng.next_u64();
+            (spec, n_blocks, steps, commits)
+        }, |&(spec, n_blocks, steps, commits)| {
+            let mut p = CachePlanner::new(spec, 16);
+            let mut commit_rng = crate::util::SplitMix64::new(commits);
+            for blk in 0..n_blocks {
+                for t in 0..steps {
+                    let a = p.step(blk, t, t == 0, blk > 0);
+                    if a != CacheAction::Reuse {
+                        p.note_refresh_bytes(1024);
+                    }
+                    p.note_commits((commit_rng.next_u64() % 4) as usize);
+                }
+            }
+            let s = p.stats;
+            if s.hits + s.misses != s.lookups {
+                return Err(format!("{} + {} != {}", s.hits, s.misses,
+                                   s.lookups));
+            }
+            if s.lookups != (n_blocks * steps) as u64 {
+                return Err(format!("lookups {} != {}", s.lookups,
+                                   n_blocks * steps));
+            }
+            if s.refresh_bytes != s.misses * 1024 {
+                return Err("refresh bytes disagree with misses".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hit_rate_monotone_in_refresh_intervals() {
+        // driving the planner over a fixed geometry: longer refresh
+        // intervals can only raise the hit rate, in both dimensions
+        let drive = |p_every: usize, r_every: usize| {
+            let mut p = CachePlanner::new(
+                CachePolicySpec::Interval { prompt_every: p_every,
+                                            response_every: r_every }, 16);
+            for blk in 0..8 {
+                for t in 0..12 {
+                    p.step(blk, t, t == 0, blk > 0);
+                }
+            }
+            p.stats.hit_rate()
+        };
+        for p_every in 1..6 {
+            let mut prev = -1.0;
+            for r_every in 1..10 {
+                let h = drive(p_every, r_every);
+                assert!(h >= prev,
+                        "hit rate fell {prev} -> {h} at interval \
+                         {p_every}:{r_every}");
+                prev = h;
+            }
+        }
+        for r_every in 1..6 {
+            let mut prev = -1.0;
+            for p_every in 1..10 {
+                let h = drive(p_every, r_every);
+                assert!(h >= prev, "prompt dimension fell at \
+                                    {p_every}:{r_every}");
+                prev = h;
+            }
+        }
+    }
+}

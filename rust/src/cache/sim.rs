@@ -1,0 +1,240 @@
+//! Synthetic feature-drift process (substitution S10): prices a cache
+//! policy's *expected* refresh/reuse mix for the analytic serving
+//! stack, the way `schedule::sim` (S8) prices expected realized steps.
+//!
+//! Real dLLM feature-drift traces are not available offline, so the
+//! adaptive policy's drift proxy is driven by a seeded synthetic commit
+//! process: per refine step, a committed-token count drawn from the
+//! same cascade intuition as S8 (commits accelerate as the block
+//! denoises). `Interval` and `Off` need no randomness — their plans are
+//! exact integer-count ratios, which is what makes
+//! `CachePlan::off()` (and `Interval{1,1}`) collapse to exactly
+//! `{1.0, 1.0}` and keep [`crate::sim::analytical::AnalyticalSim::run_cached`]
+//! bit-identical to `run_scheduled` when the cache is off.
+
+use crate::util::SplitMix64;
+
+use super::policy::{CacheAction, CachePlanner, CachePolicySpec};
+
+/// Fixed seed set for expectation estimates: means over these seeds are
+/// deterministic across runs and platforms (disjoint from
+/// `schedule::sim::EXPECTATION_SEEDS` so the two synthetic processes
+/// never share draws).
+pub const EXPECTATION_SEEDS: [u64; 4] = [13, 31, 59, 83];
+
+/// Realized cache behaviour of one simulated block.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheBlockTrace {
+    /// did the block-start step run the full (prompt-refreshing) pass?
+    pub warm_full: bool,
+    /// refine steps that recomputed response features
+    pub refreshes: usize,
+    /// refine steps served from the cache
+    pub reuses: usize,
+}
+
+/// Expected refresh mix of a policy at a block geometry: the two
+/// fractions every analytic pricing layer bills from. Both are exact
+/// integer-count ratios, so `off()` — and any policy whose counts are
+/// total — reproduces `{1.0, 1.0}` bit-exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CachePlan {
+    /// fraction of block-start steps run as full warm forwards
+    pub warm_full_frac: f64,
+    /// fraction of refine steps that recompute response features
+    pub refresh_frac: f64,
+}
+
+impl CachePlan {
+    /// The cache-off plan: everything recomputed, bit-exact baseline.
+    pub fn off() -> Self {
+        CachePlan { warm_full_frac: 1.0, refresh_frac: 1.0 }
+    }
+
+    /// Expected cache hit rate over one block's `steps_per_block`
+    /// feature lookups (one warm + `steps_per_block − 1` refines).
+    pub fn hit_rate(&self, steps_per_block: f64) -> f64 {
+        if steps_per_block < 1.0 {
+            return 0.0;
+        }
+        ((1.0 - self.warm_full_frac)
+         + (1.0 - self.refresh_frac) * (steps_per_block - 1.0))
+            / steps_per_block
+    }
+}
+
+/// Drive one block of `steps` denoising steps through the planner under
+/// the synthetic commit process. `blk` / `can_refresh_warm` position
+/// the block in its generation (block 0 always runs the full warm
+/// pass). Deterministic in `seed`.
+pub fn simulate_cache_block(planner: &mut CachePlanner, block_len: usize,
+                            steps: usize, blk: usize,
+                            can_refresh_warm: bool, seed: u64)
+                            -> CacheBlockTrace {
+    let mut rng = SplitMix64::new(seed ^ 0xFEA7_CACE ^ (blk as u64) << 8);
+    let mut trace = CacheBlockTrace {
+        warm_full: false,
+        refreshes: 0,
+        reuses: 0,
+    };
+    let mut remaining = block_len;
+    for t in 0..steps.max(1) {
+        let action = planner.step(blk, t, t == 0, can_refresh_warm);
+        match action {
+            CacheAction::Full => {
+                if t == 0 {
+                    trace.warm_full = true;
+                } else {
+                    trace.refreshes += 1;
+                }
+            }
+            CacheAction::Refresh => {
+                if t > 0 {
+                    trace.refreshes += 1;
+                }
+            }
+            CacheAction::Reuse => trace.reuses += 1,
+        }
+        // synthetic commit cascade: early steps commit little, late
+        // steps sweep the remainder — the S8 intuition, feeding the
+        // adaptive policy's drift proxy
+        let steps_left = (steps - t).max(1);
+        let base = remaining as f64 / steps_left as f64;
+        let k = ((base * (0.5 + rng.next_f64())).round() as usize)
+            .clamp(if remaining > 0 { 1 } else { 0 }, remaining);
+        remaining -= k;
+        planner.note_commits(k);
+    }
+    trace
+}
+
+/// Expected refresh mix of `spec` at a block geometry, mean over the
+/// fixed seed set for the adaptive (stochastic-drift) policy and exact
+/// for `Off`/`Interval`.
+pub fn expected_plan(spec: &CachePolicySpec, block_len: usize,
+                     steps_per_block: usize, n_blocks: usize) -> CachePlan {
+    let steps = steps_per_block.max(1);
+    let blocks = n_blocks.max(1);
+    match *spec {
+        CachePolicySpec::Off => CachePlan::off(),
+        CachePolicySpec::Interval { prompt_every, response_every } => {
+            // full warm passes: blocks 0, p, 2p, …
+            let fulls = (0..blocks).filter(|b| b % prompt_every == 0)
+                .count();
+            // refreshes on refine steps: cadence r over steps 1..S
+            let refines = steps - 1;
+            let refreshes = refines / response_every;
+            CachePlan {
+                warm_full_frac: fulls as f64 / blocks as f64,
+                refresh_frac: if refines == 0 {
+                    1.0
+                } else {
+                    refreshes as f64 / refines as f64
+                },
+            }
+        }
+        CachePolicySpec::Adaptive { .. } => {
+            let mut fulls = 0usize;
+            let mut refreshes = 0usize;
+            let mut refines = 0usize;
+            for &seed in &EXPECTATION_SEEDS {
+                let mut planner = spec.build(block_len);
+                for blk in 0..blocks {
+                    let t = simulate_cache_block(
+                        &mut planner, block_len, steps, blk, blk > 0,
+                        seed);
+                    if t.warm_full {
+                        fulls += 1;
+                    }
+                    refreshes += t.refreshes;
+                    refines += t.refreshes + t.reuses;
+                }
+            }
+            CachePlan {
+                warm_full_frac: fulls as f64
+                    / (blocks * EXPECTATION_SEEDS.len()) as f64,
+                refresh_frac: if refines == 0 {
+                    1.0
+                } else {
+                    refreshes as f64 / refines as f64
+                },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_plan_is_exactly_one_one() {
+        let p = expected_plan(&CachePolicySpec::Off, 64, 16, 4);
+        assert_eq!(p.warm_full_frac.to_bits(), 1.0f64.to_bits());
+        assert_eq!(p.refresh_frac.to_bits(), 1.0f64.to_bits());
+        assert_eq!(p.hit_rate(16.0).to_bits(), 0.0f64.to_bits());
+    }
+
+    #[test]
+    fn degenerate_interval_plan_matches_off_bit_exactly() {
+        let p = expected_plan(
+            &CachePolicySpec::Interval { prompt_every: 1,
+                                         response_every: 1 }, 64, 16, 4);
+        assert_eq!(p.warm_full_frac.to_bits(), 1.0f64.to_bits());
+        assert_eq!(p.refresh_frac.to_bits(), 1.0f64.to_bits());
+        assert_eq!(p, CachePlan::off());
+    }
+
+    #[test]
+    fn interval_plan_counts_exactly() {
+        // 4 blocks, prompt_every 2 -> fulls at blocks 0, 2; 16 steps,
+        // response_every 4 -> refreshes at t = 4, 8, 12 of 15 refines
+        let p = expected_plan(
+            &CachePolicySpec::Interval { prompt_every: 2,
+                                         response_every: 4 }, 64, 16, 4);
+        assert_eq!(p.warm_full_frac, 2.0 / 4.0);
+        assert_eq!(p.refresh_frac, 3.0 / 15.0);
+        let h = p.hit_rate(16.0);
+        assert!(h > 0.0 && h < 1.0, "hit rate {h}");
+    }
+
+    #[test]
+    fn adaptive_plan_is_deterministic_and_nontrivial() {
+        let spec = CachePolicySpec::adaptive_default();
+        let a = expected_plan(&spec, 64, 16, 4);
+        let b = expected_plan(&spec, 64, 16, 4);
+        assert_eq!(a.warm_full_frac.to_bits(), b.warm_full_frac.to_bits());
+        assert_eq!(a.refresh_frac.to_bits(), b.refresh_frac.to_bits());
+        // the adaptive policy must actually reuse something, but never
+        // everything (it refreshes on drift)
+        assert!(a.refresh_frac > 0.0 && a.refresh_frac < 1.0,
+                "refresh frac {}", a.refresh_frac);
+        let h = a.hit_rate(16.0);
+        assert!(h > 0.0 && h < 1.0, "hit rate {h}");
+    }
+
+    #[test]
+    fn tighter_tau_refreshes_more() {
+        let plan = |tau| expected_plan(
+            &CachePolicySpec::Adaptive { tau, max_interval: 16 },
+            64, 16, 4);
+        assert!(plan(0.05).refresh_frac >= plan(0.5).refresh_frac,
+                "tighter drift threshold must refresh at least as often");
+    }
+
+    #[test]
+    fn simulated_block_accounts_every_step() {
+        for &seed in &EXPECTATION_SEEDS {
+            let mut planner =
+                CachePolicySpec::adaptive_default().build(32);
+            let t = simulate_cache_block(&mut planner, 32, 12, 0, false,
+                                         seed);
+            assert!(t.warm_full, "block 0 must run the full warm pass");
+            assert_eq!(t.refreshes + t.reuses, 11,
+                       "11 refine steps must all be accounted");
+            let s = planner.stats;
+            assert_eq!(s.hits + s.misses, s.lookups);
+            assert_eq!(s.lookups, 12);
+        }
+    }
+}

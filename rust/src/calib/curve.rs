@@ -15,6 +15,18 @@
 
 use crate::report::Table;
 
+/// Fraction of a step's model cost a feature-cache hit saves: a reused
+/// step skips the transformer forward and restreams only the logit
+/// buffer (the [`crate::sim::analytical::AnalyticalSim::run_cached`]
+/// reuse-step accounting, folded to one scalar for curve rescaling).
+pub const CACHE_SAVINGS: f64 = 0.75;
+
+/// Relative per-step cost of serving at feature-cache hit rate `h`:
+/// `1 − CACHE_SAVINGS·h`. Exactly 1.0 at `h = 0` (cache off).
+pub fn cache_cost_frac(h: f64) -> f64 {
+    1.0 - CACHE_SAVINGS * h.clamp(0.0, 1.0)
+}
+
 /// Which percentile of the measured spread a lookup should return.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Pct {
@@ -72,6 +84,12 @@ pub struct LatencyCurve {
     /// that serve under a different schedule rescale lookups by
     /// [`Self::step_scale`].
     pub expected_steps: f64,
+    /// feature-cache hit rate the profiling billed — the warm/cold
+    /// dimension: 0.0 for a cache-off (cold) profile, the
+    /// [`crate::cache::CachePlan::hit_rate`] expectation for a cached
+    /// one. Consumers serving at a different hit rate rescale lookups
+    /// by [`Self::hit_scale`].
+    pub cache_hit_rate: f64,
 }
 
 impl LatencyCurve {
@@ -82,6 +100,7 @@ impl LatencyCurve {
             points,
             steps_per_block: 16,
             expected_steps: 16.0,
+            cache_hit_rate: 0.0,
         }
     }
 
@@ -93,6 +112,24 @@ impl LatencyCurve {
         self.expected_steps = expected_steps
             .clamp(1.0, self.steps_per_block as f64);
         self
+    }
+
+    /// Record which feature-cache hit rate the curve was profiled at.
+    pub fn with_cache(mut self, cache_hit_rate: f64) -> Self {
+        self.cache_hit_rate = cache_hit_rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Latency multiplier for serving at feature-cache hit rate
+    /// `serving_hit_rate` from a curve profiled at
+    /// [`Self::cache_hit_rate`]:
+    /// `cache_cost_frac(serving) / cache_cost_frac(profiled)`. Exactly
+    /// 1.0 when the hit rates match (`x / x`), so matched pricing —
+    /// in particular the cache-off default, 0.0 vs 0.0 — is untouched
+    /// bit-for-bit.
+    pub fn hit_scale(&self, serving_hit_rate: f64) -> f64 {
+        cache_cost_frac(serving_hit_rate)
+            / cache_cost_frac(self.cache_hit_rate)
     }
 
     /// Latency multiplier for serving at `serving_expected_steps`
@@ -209,16 +246,20 @@ impl LatencyCurve {
 
     // ---- persistence -----------------------------------------------------
 
-    /// Serialize to the replay format: `# dart-latency-curve v2` header,
+    /// Serialize to the replay format: `# dart-latency-curve v3` header,
     /// a `device <name>` line, a `schedule <cap> <expected>` line (the
-    /// expected-steps dimension), then one row per cell.
+    /// expected-steps dimension), a `cache <hit_rate>` line (the
+    /// warm/cold dimension), then one row per cell.
     pub fn to_text(&self) -> String {
-        let mut s = String::from("# dart-latency-curve v2\n");
+        let mut s = String::from("# dart-latency-curve v3\n");
         s.push_str(&format!("device {}\n", self.device));
         // the schedule line is the expected-steps dimension; v1 files
         // without it parse as fixed-16 (the historical profile point)
         s.push_str(&format!("schedule {} {:.17e}\n",
                             self.steps_per_block, self.expected_steps));
+        // the cache line is the feature-cache hit-rate dimension;
+        // v1/v2 files without it parse as cold (hit rate 0.0)
+        s.push_str(&format!("cache {:.17e}\n", self.cache_hit_rate));
         s.push_str("# variant bucket_lo bucket_hi gen_tokens \
                     p50_total_s p95_total_s p50_first_s p95_first_s samples\n");
         for p in &self.points {
@@ -258,6 +299,7 @@ impl LatencyCurve {
     pub fn from_text(text: &str) -> Result<Self, String> {
         let mut device = String::from("unknown");
         let mut schedule: Option<(u64, f64)> = None;
+        let mut cache_hit: Option<f64> = None;
         let mut points = Vec::new();
         for (i, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
@@ -281,6 +323,16 @@ impl LatencyCurve {
                     return Err(bad());
                 }
                 schedule = Some((cap, exp));
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("cache ") {
+                let bad = || format!("curve line {}: bad cache {line:?}",
+                                     i + 1);
+                let h: f64 = rest.trim().parse().map_err(|_| bad())?;
+                if !h.is_finite() || !(0.0..=1.0).contains(&h) {
+                    return Err(bad());
+                }
+                cache_hit = Some(h);
                 continue;
             }
             let f: Vec<&str> = line.split_whitespace().collect();
@@ -314,6 +366,9 @@ impl LatencyCurve {
         let mut curve = LatencyCurve::new(&device, points);
         if let Some((cap, exp)) = schedule {
             curve = curve.with_schedule(cap, exp);
+        }
+        if let Some(h) = cache_hit {
+            curve = curve.with_cache(h);
         }
         Ok(curve)
     }
@@ -456,6 +511,11 @@ mod tests {
         assert!(LatencyCurve::from_text("schedule 16\n").is_err());
         assert!(LatencyCurve::from_text("schedule 0 16.0\n").is_err());
         assert!(LatencyCurve::from_text("schedule 16 nan\n").is_err());
+        // ... and so is malformed cache metadata
+        assert!(LatencyCurve::from_text("cache x\n").is_err());
+        assert!(LatencyCurve::from_text("cache 1.5\n").is_err());
+        assert!(LatencyCurve::from_text("cache -0.1\n").is_err());
+        assert!(LatencyCurve::from_text("cache nan\n").is_err());
     }
 
     #[test]
@@ -479,6 +539,31 @@ mod tests {
         // with_schedule clamps the expectation into [1, cap]
         let clamped = curve().with_schedule(8, 99.0);
         assert!((clamped.expected_steps - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_dimension_roundtrips_and_defaults() {
+        // v1/v2 files (no cache line) parse as cold (hit rate 0.0)
+        let v2 = LatencyCurve::from_text(
+            "device npu0\nschedule 16 9.25\n\
+             1 96 256 128 0.01 0.012 0.003 0.004 5\n").unwrap();
+        assert_eq!(v2.cache_hit_rate.to_bits(), 0.0f64.to_bits());
+        // a recorded hit rate survives the text roundtrip bit-exactly
+        let c = curve().with_cache(0.4375);
+        let back = LatencyCurve::from_text(&c.to_text()).unwrap();
+        assert_eq!(back.cache_hit_rate.to_bits(), 0.4375f64.to_bits());
+        // hit_scale: matched hit rates price untouched bit-for-bit
+        assert_eq!(back.hit_scale(0.4375).to_bits(), 1.0f64.to_bits());
+        assert_eq!(v2.hit_scale(0.0).to_bits(), 1.0f64.to_bits());
+        // serving warmer than profiled is cheaper, colder is dearer
+        assert!(back.hit_scale(0.8) < 1.0);
+        assert!(back.hit_scale(0.0) > 1.0);
+        // a cold curve priced for warm serving scales by cost_frac
+        let warm = v2.hit_scale(0.5);
+        assert!((warm - cache_cost_frac(0.5)).abs() < 1e-15);
+        // with_cache clamps into [0, 1]
+        assert_eq!(curve().with_cache(7.0).cache_hit_rate, 1.0);
+        assert_eq!(curve().with_cache(-7.0).cache_hit_rate, 0.0);
     }
 
     #[test]
@@ -533,6 +618,10 @@ mod tests {
             let cap = rng.range(2, 33);
             c = c.with_schedule(cap, 1.0 + rng.next_f64() * (cap - 1) as f64);
         }
+        if rng.next_f64() < 0.5 {
+            // half the curves carry a warm (cached) profile point
+            c = c.with_cache(rng.next_f64());
+        }
         c
     }
 
@@ -558,6 +647,10 @@ mod tests {
                     || back.steps_per_block != c.steps_per_block
                 {
                     return Err("schedule dimension drifted".into());
+                }
+                if back.cache_hit_rate.to_bits() != c.cache_hit_rate.to_bits()
+                {
+                    return Err("cache dimension drifted".into());
                 }
                 Ok(())
             });
@@ -589,6 +682,20 @@ mod tests {
                     || parsed.expected_steps.to_bits() != 16.0f64.to_bits()
                 {
                     return Err("v1 default schedule wrong".into());
+                }
+                if parsed.cache_hit_rate.to_bits() != 0.0f64.to_bits() {
+                    return Err("v1 default cache dimension wrong".into());
+                }
+                // a v2 file (schedule line, no cache line) also parses
+                // cold and upgrades stably
+                let mut v2 = String::from("# dart-latency-curve v2\n");
+                v2.push_str(&format!("device {}\n", c.device));
+                v2.push_str(&format!("schedule {} {:.17e}\n",
+                                     c.steps_per_block, c.expected_steps));
+                let pv2 = LatencyCurve::from_text(&v2)
+                    .map_err(|e| format!("v2 parse failed: {e}"))?;
+                if pv2.cache_hit_rate.to_bits() != 0.0f64.to_bits() {
+                    return Err("v2 default cache dimension wrong".into());
                 }
                 if parsed.points.len() != c.points.len() {
                     return Err("v1 row count drifted".into());

@@ -40,11 +40,20 @@
 //! configured cap, and a curve replayed under a different schedule
 //! rescales per-step-linearly via [`LatencyCurve::step_scale`] — so
 //! admission and batching price variable-step requests honestly.
+//!
+//! They also carry a **feature-cache hit-rate dimension**
+//! ([`LatencyCurve::cache_hit_rate`]): profiling bills the configured
+//! cross-step feature-cache policy's expected refresh/reuse mix
+//! ([`crate::cache::CachePlan`]) and records the hit-rate expectation,
+//! and a curve replayed at a different hit rate rescales via
+//! [`LatencyCurve::hit_scale`] — so admission can price warm
+//! steady-state serving against cold first blocks from one profile.
 
 pub mod curve;
 pub mod delta;
 pub mod profiler;
 
-pub use curve::{CurvePoint, LatencyCurve, Pct};
+pub use curve::{cache_cost_frac, CurvePoint, LatencyCurve, Pct,
+                CACHE_SAVINGS};
 pub use delta::{CellDelta, CurveDelta};
 pub use profiler::{spot_check_sampling, CalibConfig, Calibrator, SpotCheck};

@@ -13,6 +13,7 @@
 //! simulator at a matched shape and compared with the analytical
 //! sampling-step latency (the Table 4 cross-validation, in-process).
 
+use crate::cache::{expected_plan, CachePolicySpec, REF_N_BLOCKS};
 use crate::compiler::{sampling_program, SamplingLayout};
 use crate::config::{CacheMode, HwConfig, ModelArch, Workload};
 use crate::sampling::SamplePrecision;
@@ -40,6 +41,11 @@ pub struct CalibConfig {
     /// the policy's *expected realized* steps per block, and the curve
     /// records that expectation ([`LatencyCurve::expected_steps`])
     pub schedule: ScheduleSpec,
+    /// feature-cache policy the profile bills: cells are priced at the
+    /// policy's expected refresh/reuse mix
+    /// ([`crate::cache::CachePlan`]) and the curve records the hit-rate
+    /// expectation ([`LatencyCurve::cache_hit_rate`])
+    pub feature_cache: CachePolicySpec,
     pub seed: u64,
 }
 
@@ -60,6 +66,7 @@ impl CalibConfig {
             block_len: 64,
             steps_per_block: 16,
             schedule: ScheduleSpec::Fixed,
+            feature_cache: CachePolicySpec::Off,
             seed: 0xCA11B,
         }
     }
@@ -110,6 +117,16 @@ impl Calibrator {
     pub fn profile(&self, device: &str) -> LatencyCurve {
         let expected_steps = self.cfg.schedule.expected_steps(
             self.cfg.block_len as usize, self.cfg.steps_per_block as usize);
+        // one expected refresh/reuse mix at the canonical serving
+        // geometry prices every cell (the expected-steps treatment,
+        // mirrored); Off is exactly {1.0, 1.0} so cache-off profiles
+        // stay bit-identical to the pre-cache profiler
+        let plan = expected_plan(&self.cfg.feature_cache,
+                                 self.cfg.block_len as usize,
+                                 self.cfg.steps_per_block as usize,
+                                 REF_N_BLOCKS);
+        let hit_rate = self.cfg.feature_cache.serving_hit_rate(
+            self.cfg.block_len as usize, self.cfg.steps_per_block as usize);
         let mut points = Vec::new();
         for &variant in &self.cfg.variants {
             for &(lo, hi) in &self.cfg.buckets {
@@ -125,7 +142,8 @@ impl Calibrator {
                 for _ in 0..n {
                     let w = self.draw_workload(&mut rng, variant, lo, hi);
                     let total =
-                        self.sim.run_scheduled(&w, expected_steps).total_s;
+                        self.sim.run_cached(&w, expected_steps, &plan)
+                            .total_s;
                     totals.push(total);
                     firsts.push(total / w.n_blocks().max(1) as f64);
                     gen_sum += w.gen_len;
@@ -145,6 +163,7 @@ impl Calibrator {
         }
         LatencyCurve::new(device, points)
             .with_schedule(self.cfg.steps_per_block, expected_steps)
+            .with_cache(hit_rate)
     }
 }
 
@@ -290,6 +309,42 @@ mod tests {
         // measured pace speeds up correspondingly
         assert!(slowfast.measured_tokens_per_s().unwrap()
                 > fixed.measured_tokens_per_s().unwrap());
+    }
+
+    #[test]
+    fn cached_profile_is_cheaper_and_off_is_bit_identical() {
+        use crate::calib::curve::Pct;
+        let mk = |feature_cache| {
+            let mut cfg = CalibConfig::serving_default(&[1, 4]);
+            cfg.samples_per_cell = 3;
+            cfg.feature_cache = feature_cache;
+            Calibrator::new(HwConfig::dart_default(), ModelArch::llada_8b(),
+                            CacheMode::Dual, cfg).profile("npu0")
+        };
+        let off = mk(CachePolicySpec::Off);
+        let degenerate = mk(CachePolicySpec::Interval {
+            prompt_every: 1, response_every: 1 });
+        // Off and the degenerate interval price every cell identically
+        // to each other (both are the {1.0, 1.0} plan)
+        assert_eq!(off.cache_hit_rate.to_bits(), 0.0f64.to_bits());
+        assert_eq!(degenerate.cache_hit_rate.to_bits(), 0.0f64.to_bits());
+        for (a, b) in off.points.iter().zip(&degenerate.points) {
+            assert_eq!(a.p50_total_s.to_bits(), b.p50_total_s.to_bits());
+            assert_eq!(a.p95_first_s.to_bits(), b.p95_first_s.to_bits());
+        }
+        // a caching profile records a warm hit rate and cheaper cells
+        let warm = mk(CachePolicySpec::adaptive_default());
+        assert!(warm.cache_hit_rate > 0.0 && warm.cache_hit_rate < 1.0,
+                "hit rate {}", warm.cache_hit_rate);
+        let tc = off.total_s(4, 300, Pct::P50).unwrap();
+        let tw = warm.total_s(4, 300, Pct::P50).unwrap();
+        assert!(tw < tc, "warm {tw} vs cold {tc}");
+        assert!(warm.measured_tokens_per_s().unwrap()
+                > off.measured_tokens_per_s().unwrap());
+        // the recorded dimension survives the text roundtrip
+        let back = LatencyCurve::from_text(&warm.to_text()).unwrap();
+        assert_eq!(back.cache_hit_rate.to_bits(),
+                   warm.cache_hit_rate.to_bits());
     }
 
     #[test]

@@ -29,9 +29,27 @@
 //! runs [`crate::sim::analytical::AnalyticalSim::run_scheduled`], and
 //! curve lookups rescale by [`LatencyCurve::step_scale`] when the
 //! serving schedule differs from the one the curve was profiled under.
+//!
+//! The fleet's feature-cache policy
+//! ([`ClusterTopology::feature_cache`], docs/ARCHITECTURE.md S10) is
+//! billed the same two ways: the analytic path prices batches through
+//! [`crate::sim::analytical::AnalyticalSim::run_cached`] under the
+//! policy's expected refresh plan, and curve lookups rescale by
+//! [`LatencyCurve::hit_scale`] — *warm* (the serving hit rate) for
+//! steady-state pace and backlog, *cold* (hit rate 0) for the
+//! first-block TTFT component the admission predictor uses, because the
+//! first block of a fresh request cannot hit a cache that is not yet
+//! populated. Admission is therefore warm/cold split: optimistic about
+//! sustained throughput, conservative about the deadline. Cache-aware
+//! batching rides the batcher's refresh phases ([`refresh_phase`]):
+//! only requests on the same refresh cadence are co-scheduled, so a
+//! batch's reuse steps stay aligned across lanes. With the policy
+//! `Off`, every phase is 0 and every scale is exactly 1.0 — the
+//! scheduler is bit-identical to the pre-cache fleet.
 
 use std::collections::HashMap;
 
+use crate::cache::{expected_plan, CachePlan, CachePolicySpec, REF_N_BLOCKS};
 use crate::calib::{LatencyCurve, Pct};
 use crate::config::Workload;
 use crate::coordinator::batcher::{BatchPlan, Batcher, BatcherConfig,
@@ -110,6 +128,23 @@ pub(crate) struct ServiceModel {
     /// the curve's profiled expectation (exactly 1.0 when the curve was
     /// profiled under the serving schedule)
     curve_scale: f64,
+    /// the fleet feature-cache policy's expected refresh plan — what
+    /// the analytic path bills through
+    /// [`AnalyticalSim::run_cached`] (`CachePlan::off()` ≡ the
+    /// pre-cache `run_scheduled`, bit for bit)
+    cache_plan: CachePlan,
+    /// the policy's canonical serving hit rate
+    /// ([`CachePolicySpec::serving_hit_rate`]) — recorded on exported
+    /// observations
+    serving_hit: f64,
+    /// warm steady-state multiplier for curve lookups:
+    /// `curve.hit_scale(serving_hit)` — exactly 1.0 when the curve was
+    /// profiled under the serving policy (`x / x`)
+    warm_scale: f64,
+    /// cold multiplier for the first-block TTFT component:
+    /// `curve.hit_scale(0.0)` — a fresh request's first block cannot
+    /// hit an unpopulated cache, so admission prices it uncached
+    cold_scale: f64,
     memo: HashMap<(usize, usize, usize), (f64, f64)>,
     /// generated-tokens/s at the largest variant — the router's
     /// backlog→seconds conversion factor (measured p50 pace when a
@@ -128,6 +163,17 @@ impl ServiceModel {
         let curve_scale = spec.curve.as_ref()
             .map(|c| c.step_scale(expected_steps))
             .unwrap_or(1.0);
+        let cache_plan = expected_plan(
+            &topo.feature_cache, topo.block_len as usize,
+            topo.steps_per_block as usize, REF_N_BLOCKS);
+        let serving_hit = topo.feature_cache.serving_hit_rate(
+            topo.block_len as usize, topo.steps_per_block as usize);
+        let warm_scale = spec.curve.as_ref()
+            .map(|c| c.hit_scale(serving_hit))
+            .unwrap_or(1.0);
+        let cold_scale = spec.curve.as_ref()
+            .map(|c| c.hit_scale(0.0))
+            .unwrap_or(1.0);
         let mut m = ServiceModel {
             sim,
             model: topo.model.clone(),
@@ -136,6 +182,10 @@ impl ServiceModel {
             steps_per_block: topo.steps_per_block,
             expected_steps,
             curve_scale,
+            cache_plan,
+            serving_hit,
+            warm_scale,
+            cold_scale,
             memo: HashMap::new(),
             tokens_per_s: 1.0,
             curve: spec.curve.clone(),
@@ -147,9 +197,11 @@ impl ServiceModel {
         if let Some(tps) = m.curve.as_ref()
             .and_then(|c| c.measured_tokens_per_s())
         {
-            // measured pace reflects the curve's own schedule; rescale
-            // to the serving schedule (no-op on a matched profile)
-            m.tokens_per_s = tps / m.curve_scale.max(1e-9);
+            // measured pace reflects the curve's own schedule and cache
+            // policy; rescale to the serving ones (warm steady state —
+            // no-op on a matched profile)
+            m.tokens_per_s =
+                tps / (m.curve_scale * m.warm_scale).max(1e-9);
         }
         m
     }
@@ -167,7 +219,10 @@ impl ServiceModel {
             if let Some(f) = c.first_block_s(
                 variant, (prompt + gen) as u64, Pct::P95)
             {
-                return f * self.curve_scale;
+                // cold cache pricing: the first block of a fresh
+                // request recomputes everything, so a warm-profiled
+                // curve is rescaled back up (exactly 1.0 off/unmatched)
+                return f * self.curve_scale * self.cold_scale;
             }
         }
         self.service(variant, prompt, gen).1
@@ -191,7 +246,9 @@ impl ServiceModel {
             steps_per_block: self.steps_per_block,
             cache: self.cache,
         };
-        let total = self.sim.run_scheduled(&w, self.expected_steps).total_s;
+        let total = self.sim
+            .run_cached(&w, self.expected_steps, &self.cache_plan)
+            .total_s;
         let first = total / w.n_blocks().max(1) as f64;
         self.memo.insert((variant, prompt, gen), (total, first));
         (total, first)
@@ -224,10 +281,17 @@ impl SimDevice {
             Some(curve) => {
                 let scale = curve.step_scale(topo.schedule.expected_steps(
                     topo.block_len as usize, topo.steps_per_block as usize));
+                // flush costs are warm steady-state quantities, so they
+                // carry the cache policy's hit rescale too (exactly 1.0
+                // off/matched)
+                let hscale = curve.hit_scale(
+                    topo.feature_cache.serving_hit_rate(
+                        topo.block_len as usize,
+                        topo.steps_per_block as usize));
                 let costs: Vec<(usize, f64)> = curve
                     .variant_costs(curve.mid_seq_len(), Pct::P50)
                     .into_iter()
-                    .map(|(v, s)| (v, s * scale))
+                    .map(|(v, s)| (v, s * scale * hscale))
                     .collect();
                 FlushPolicy::CostBased(CostModel::from_pairs(&costs))
             }
@@ -269,6 +333,24 @@ impl SimDevice {
             return Some(self.busy_until);
         }
         self.batcher.next_fire_at().map(|t| t.max(now))
+    }
+}
+
+/// Refresh phase of a request for cache-aware batching: requests in
+/// the same phase share a refresh cadence, so co-scheduling them keeps
+/// a batch's reuse steps aligned across lanes (one lane refreshing
+/// while its batchmates reuse would force the full forward for
+/// everyone). `Interval` cadence repeats every `prompt_every` blocks;
+/// `Adaptive` drift is block-count-dependent, so only equal-length
+/// requests align. `Off` puts everything in phase 0 — bit-identical to
+/// unphased batching.
+pub(crate) fn refresh_phase(spec: &CachePolicySpec, n_blocks: u64) -> u64 {
+    match spec {
+        CachePolicySpec::Off => 0,
+        CachePolicySpec::Interval { prompt_every, .. } => {
+            n_blocks % (*prompt_every as u64).max(1)
+        }
+        CachePolicySpec::Adaptive { .. } => n_blocks,
     }
 }
 
@@ -374,6 +456,10 @@ impl FleetSim {
         let order = self.router.rank(&loads);
         let dispatch = self.topo.interconnect
             .dispatch_s(self.topo.request_bytes(req.prompt_len));
+        let phase = refresh_phase(
+            &self.topo.feature_cache,
+            crate::util::ceil_div(req.gen_len as u64, self.topo.block_len)
+                .max(1));
 
         let mut saw_capacity_reject = false;
         for (attempt, &di) in order.iter()
@@ -399,7 +485,9 @@ impl FleetSim {
                     continue;
                 }
             }
-            if d.batcher.push_at(InFlight { req, dispatch_s: dispatch }, now) {
+            if d.batcher.push_at_phased(
+                InFlight { req, dispatch_s: dispatch }, now, phase)
+            {
                 metrics.admitted += 1;
                 rec.span_closed("fleet", "admit", now, now);
                 rec.count("fleet.admitted", 1.0);
@@ -466,6 +554,7 @@ fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
         total_s: total,
         first_s: first,
         realized_steps: d.svc.expected_steps,
+        cache_hit_rate: d.svc.serving_hit,
     });
 
     for inf in plan.items {
@@ -834,6 +923,122 @@ mod tests {
         let mut rec2 = Recorder::enabled(11);
         mk().run_traced(&trace, &mut rec2);
         assert_eq!(rec.summary(), rec2.summary());
+    }
+
+    #[test]
+    fn cached_service_prices_cheaper_and_matched_profile_scales_by_one() {
+        // analytic path: a cached fleet prices service cheaper and
+        // paces faster than the off fleet at the same hardware point
+        let off_topo = small_topo(1);
+        let mut warm_topo = small_topo(1);
+        warm_topo.feature_cache = CachePolicySpec::adaptive_default();
+        let mut svc_off = ServiceModel::new(&off_topo.devices[0], &off_topo);
+        let mut svc_warm =
+            ServiceModel::new(&warm_topo.devices[0], &warm_topo);
+        let (to, fo) = svc_off.service(4, 128, 256);
+        let (tw, fw) = svc_warm.service(4, 128, 256);
+        assert!(tw < to, "cached total {tw} vs off {to}");
+        assert!(fw < fo);
+        assert!(svc_warm.tokens_per_s > svc_off.tokens_per_s);
+        // the off fleet's analytic path is the pre-cache one, bit for
+        // bit (CachePlan::off() ≡ run_scheduled)
+        let w = Workload {
+            model: off_topo.model.clone(),
+            batch: 4, prompt_len: 128, gen_len: 256,
+            block_len: off_topo.block_len,
+            steps_per_block: off_topo.steps_per_block,
+            cache: off_topo.devices[0].cache,
+        };
+        let direct = svc_off.sim
+            .run_scheduled(&w, svc_off.expected_steps).total_s;
+        assert_eq!(to.to_bits(), direct.to_bits());
+
+        // calibrated path: a curve profiled under the serving policy
+        // prices warm steady state at exactly 1.0 (x / x) and the
+        // first-block TTFT component cold, above the warm lookup
+        let mut cal = small_topo(1);
+        cal.feature_cache = CachePolicySpec::adaptive_default();
+        cal.calibrate();
+        let mut m = ServiceModel::new(&cal.devices[0], &cal);
+        assert_eq!(m.warm_scale.to_bits(), 1.0f64.to_bits());
+        assert!(m.cold_scale > 1.0, "cold scale {}", m.cold_scale);
+        let curve = cal.devices[0].curve.as_ref().unwrap();
+        let raw95 = curve.first_block_s(4, 384, Pct::P95).unwrap();
+        let p95 = m.first_block_p95(4, 128, 256);
+        assert!(p95 > raw95 * m.curve_scale,
+                "admission p95 {p95} should price the first block cold");
+        // an off fleet's calibrated scales are exactly 1.0 both ways
+        let mut cal_off = small_topo(1);
+        cal_off.calibrate();
+        let m_off = ServiceModel::new(&cal_off.devices[0], &cal_off);
+        assert_eq!(m_off.warm_scale.to_bits(), 1.0f64.to_bits());
+        assert_eq!(m_off.cold_scale.to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn cached_fleet_finishes_backlog_faster_and_exports_hit_rate() {
+        // uniform-length backlog: every request shares one refresh
+        // phase, so batching is identical across arms and the horizon
+        // delta isolates the service-pricing effect of the cache
+        let trace: Vec<crate::cluster::TraceRequest> = (0..48)
+            .map(|i| crate::cluster::TraceRequest {
+                id: i, arrival_s: 0.0, prompt_len: 128, gen_len: 256,
+            })
+            .collect();
+        let run = |cache: CachePolicySpec| {
+            let mut topo = small_topo(2);
+            topo.feature_cache = cache;
+            let mut slo = SloConfig::auto(&topo);
+            slo.admission = false;
+            FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+                .run(&trace)
+        };
+        let off = run(CachePolicySpec::Off);
+        let warm = run(CachePolicySpec::adaptive_default());
+        assert_eq!(off.completed, 48);
+        assert_eq!(warm.completed, 48);
+        assert!(warm.horizon_s < off.horizon_s,
+                "cached horizon {} vs off {}", warm.horizon_s,
+                off.horizon_s);
+        assert!(warm.throughput_tps() > off.throughput_tps());
+        // every exported observation carries the policy's canonical
+        // serving hit rate — what the recalibrator blends from
+        let h = CachePolicySpec::adaptive_default()
+            .serving_hit_rate(64, 16);
+        assert!(h > 0.0 && h < 1.0);
+        assert!(warm.observations.iter()
+                .flat_map(|l| &l.observations)
+                .all(|o| o.cache_hit_rate.to_bits() == h.to_bits()));
+        assert!(off.observations.iter()
+                .flat_map(|l| &l.observations)
+                .all(|o| o.cache_hit_rate.to_bits() == 0.0f64.to_bits()));
+    }
+
+    #[test]
+    fn refresh_phases_align_compatible_cadences() {
+        // Off: one phase for everything
+        assert_eq!(refresh_phase(&CachePolicySpec::Off, 1), 0);
+        assert_eq!(refresh_phase(&CachePolicySpec::Off, 7), 0);
+        // Interval: cadence repeats every prompt_every blocks, so
+        // requests prompt_every blocks apart are co-schedulable
+        let iv = CachePolicySpec::Interval {
+            prompt_every: 4, response_every: 4 };
+        assert_eq!(refresh_phase(&iv, 5), refresh_phase(&iv, 9));
+        assert_ne!(refresh_phase(&iv, 5), refresh_phase(&iv, 6));
+        // Adaptive: only equal block counts share a drift trajectory
+        let ad = CachePolicySpec::adaptive_default();
+        assert_ne!(refresh_phase(&ad, 2), refresh_phase(&ad, 3));
+        assert_eq!(refresh_phase(&ad, 3), refresh_phase(&ad, 3));
+
+        // the phased fleet still completes a mixed-length backlog
+        let mut topo = small_topo(2);
+        topo.feature_cache = ad;
+        let mut slo = SloConfig::auto(&topo);
+        slo.admission = false;
+        let mut sim =
+            FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo);
+        let m = sim.run(&saturating_trace(40));
+        assert_eq!(m.completed, 40);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! config files the rest of the stack uses (`[cluster]` section via
 //! [`crate::config::parse_config`]).
 
+use crate::cache::CachePolicySpec;
 use crate::calib::{CalibConfig, Calibrator, LatencyCurve};
 use crate::config::{CacheMode, ConfigDoc, HwConfig, ModelArch};
 use crate::schedule::ScheduleSpec;
@@ -85,6 +86,11 @@ pub struct ClusterTopology {
     /// the policy's expected realized steps instead of the configured
     /// cap, and [`Self::calibrate`] profiles curves under it
     pub schedule: ScheduleSpec,
+    /// fleet-wide cross-step feature-cache policy (docs/ARCHITECTURE.md
+    /// S10); [`Self::calibrate`] profiles curves under it and the
+    /// scheduler's service models rescale warm steady-state pricing via
+    /// [`LatencyCurve::hit_scale`]. `Off` is the bit-exact baseline.
+    pub feature_cache: CachePolicySpec,
     pub devices: Vec<DeviceSpec>,
     pub interconnect: InterconnectModel,
 }
@@ -111,6 +117,7 @@ impl ClusterTopology {
             block_len: 64,
             steps_per_block: 16,
             schedule: ScheduleSpec::Fixed,
+            feature_cache: CachePolicySpec::Off,
             devices,
             interconnect: InterconnectModel::pcie_gen4(),
         }
@@ -169,6 +176,7 @@ impl ClusterTopology {
             block_len: 64,
             steps_per_block: 16,
             schedule: ScheduleSpec::Fixed,
+            feature_cache: CachePolicySpec::Off,
             devices,
             interconnect: InterconnectModel::ethernet_100g(),
         }
@@ -200,8 +208,10 @@ impl ClusterTopology {
             if !select(d) {
                 continue;
             }
-            let key = format!("{:?}|{:?}|{:?}", d.hw, d.cache,
-                              d.batch_variants);
+            // CachePolicySpec carries an f64 (Adaptive.tau) so the
+            // class key stays a Debug string, like hw
+            let key = format!("{:?}|{:?}|{:?}|{:?}", d.hw, d.cache,
+                              d.batch_variants, self.feature_cache);
             let curve = match profiled.iter().find(|(k, _)| *k == key) {
                 Some((_, c)) => c.clone(),
                 None => {
@@ -209,9 +219,11 @@ impl ClusterTopology {
                         CalibConfig::serving_default(&d.batch_variants);
                     cfg.block_len = self.block_len;
                     cfg.steps_per_block = self.steps_per_block;
-                    // the curve is profiled under the fleet's schedule,
-                    // so admission/batching price realized steps
+                    // the curve is profiled under the fleet's schedule
+                    // and feature-cache policy, so admission/batching
+                    // price realized steps and cached-feature reuse
                     cfg.schedule = self.schedule;
+                    cfg.feature_cache = self.feature_cache;
                     let cal = Calibrator::new(
                         d.hw.clone(), self.model.clone(), d.cache, cfg);
                     let c = cal.profile(&d.name);
@@ -270,8 +282,9 @@ impl ClusterTopology {
     /// Apply `[cluster]` overrides from a parsed config file:
     /// `devices`, `max_wait_ms`, `queue_capacity`, `variants` (comma
     /// list), `link` (pcie|nvlink|eth), `block_len`, `steps_per_block`,
-    /// `schedule` (fixed|conf|slowfast), `cache`. Device count changes
-    /// replicate device 0's spec.
+    /// `schedule` (fixed|conf|slowfast), `cache`,
+    /// `feature_cache` (off|interval[:P:R]|adaptive[:TAU:MAX]). Device
+    /// count changes replicate device 0's spec.
     pub fn apply_overrides(&mut self, doc: &ConfigDoc) {
         if let Some(n) = doc.get_u64("cluster", "devices") {
             let proto = self.devices[0].clone();
@@ -322,6 +335,11 @@ impl ClusterTopology {
                 for d in &mut self.devices {
                     d.cache = mode;
                 }
+            }
+        }
+        if let Some(c) = doc.get_str("cluster", "feature_cache") {
+            if let Some(spec) = CachePolicySpec::parse(c) {
+                self.feature_cache = spec;
             }
         }
         // last, so the curves are measured against the final topology
@@ -536,6 +554,39 @@ block_len = 32
         let a = curve.total_s(4, 300, Pct::P50).unwrap();
         let b = fc.total_s(4, 300, Pct::P50).unwrap();
         assert!(a < b, "slowfast {a} vs fixed {b}");
+    }
+
+    #[test]
+    fn feature_cache_override_applies_and_curves_record_it() {
+        let doc = parse_config(
+            "[cluster]\nfeature_cache = \"adaptive:0.35:8\"\n").unwrap();
+        let mut t = ClusterTopology::homogeneous(
+            1, HwConfig::dart_edge(), ModelArch::llada_8b(), CacheMode::Dual);
+        assert!(t.feature_cache.is_off());
+        t.apply_overrides(&doc);
+        assert_eq!(t.feature_cache, CachePolicySpec::adaptive_default());
+        t.calibrate();
+        let warm = t.devices[0].curve.as_ref().unwrap();
+        // the profiled curve carries the policy's serving hit rate...
+        let expect = t.feature_cache.serving_hit_rate(
+            t.block_len as usize, t.steps_per_block as usize);
+        assert_eq!(warm.cache_hit_rate.to_bits(), expect.to_bits());
+        assert!(warm.cache_hit_rate > 0.0 && warm.cache_hit_rate < 1.0);
+        // ...and is measurably cheaper than the cache-off profile
+        let mut off = ClusterTopology::homogeneous(
+            1, HwConfig::dart_edge(), ModelArch::llada_8b(), CacheMode::Dual);
+        off.calibrate();
+        let oc = off.devices[0].curve.as_ref().unwrap();
+        assert_eq!(oc.cache_hit_rate.to_bits(), 0.0f64.to_bits());
+        use crate::calib::Pct;
+        let a = warm.total_s(4, 300, Pct::P50).unwrap();
+        let b = oc.total_s(4, 300, Pct::P50).unwrap();
+        assert!(a < b, "cached {a} vs off {b}");
+        // an unknown policy string is ignored, not an error
+        let bad = parse_config("[cluster]\nfeature_cache = \"lru\"\n")
+            .unwrap();
+        t.apply_overrides(&bad);
+        assert_eq!(t.feature_cache, CachePolicySpec::adaptive_default());
     }
 
     #[test]

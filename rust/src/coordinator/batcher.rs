@@ -226,6 +226,12 @@ impl Default for BatcherConfig {
 pub struct Pending<T> {
     pub item: T,
     pub arrived_s: f64,
+    /// feature-cache refresh phase: a batch only co-schedules requests
+    /// at one phase, so cached lanes refresh together instead of
+    /// forcing the whole batch to the coldest lane's cadence. Phase 0
+    /// (the default, and all the cache-off paths) is a single class —
+    /// the planner then behaves exactly as if phases did not exist.
+    pub phase: u64,
 }
 
 /// The batch the batcher decided to run.
@@ -301,6 +307,13 @@ impl<T> Batcher<T> {
 
     /// Enqueue at virtual time `now_s`; false = queue full (backpressure).
     pub fn push_at(&mut self, item: T, now_s: f64) -> bool {
+        self.push_at_phased(item, now_s, 0)
+    }
+
+    /// [`Self::push_at`] with an explicit feature-cache refresh phase;
+    /// batches only co-schedule one phase (see [`Pending::phase`]).
+    pub fn push_at_phased(&mut self, item: T, now_s: f64, phase: u64)
+                          -> bool {
         if self.queue.len() >= self.cfg.capacity {
             self.rejected += 1;
             return false;
@@ -313,9 +326,23 @@ impl<T> Batcher<T> {
             });
         }
         self.last_arrival_s = Some(now_s);
-        self.queue.push_back(Pending { item, arrived_s: now_s });
+        self.queue.push_back(Pending { item, arrived_s: now_s, phase });
         self.enqueued += 1;
         true
+    }
+
+    /// Queued items eligible for the next plan: those sharing the
+    /// oldest request's refresh phase. Equals the queue length whenever
+    /// every item carries the same phase (in particular the cache-off
+    /// paths, which always push phase 0).
+    fn lead_eligible(&self) -> usize {
+        match self.queue.front() {
+            None => 0,
+            Some(front) => {
+                let phase = front.phase;
+                self.queue.iter().filter(|p| p.phase == phase).count()
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -375,7 +402,7 @@ impl<T> Batcher<T> {
         let oldest = self.oldest_arrived_s()?;
         let max_wait = self.cfg.max_wait.as_secs_f64();
         let deadline = oldest + max_wait;
-        let n = self.queue.len();
+        let n = self.lead_eligible();
         if n >= *self.cfg.variants.last().unwrap() {
             return Some(oldest);
         }
@@ -432,10 +459,20 @@ impl<T> Batcher<T> {
     /// cost-based: possibly an exact smaller variant with the remainder
     /// left queued).
     fn make_plan(&mut self) -> BatchPlan<T> {
-        let (take, variant) = self.plan_for(self.queue.len());
-        let items = (0..take)
-            .map(|_| self.queue.pop_front().unwrap().item)
-            .collect();
+        let phase = self.queue.front().unwrap().phase;
+        let (take, variant) = self.plan_for(self.lead_eligible());
+        // collect the lead phase class in arrival order; other phases
+        // stay queued (with all-equal phases this is the plain
+        // pop-front prefix, bit-identical to the unphased batcher)
+        let mut items = Vec::with_capacity(take);
+        let mut i = 0;
+        while items.len() < take && i < self.queue.len() {
+            if self.queue[i].phase == phase {
+                items.push(self.queue.remove(i).unwrap().item);
+            } else {
+                i += 1;
+            }
+        }
         self.padded_lanes += (variant - take) as u64;
         BatchPlan { items, variant }
     }
@@ -456,7 +493,7 @@ impl<T> Batcher<T> {
         let remaining = self.cfg.max_wait.as_secs_f64() - oldest_wait;
         // 1ns slack so a caller stepping exactly to next_fire_at() fires
         // despite f64 rounding (the discrete-event loop depends on it)
-        if !self.fires_now(self.queue.len(), remaining - 1e-9)
+        if !self.fires_now(self.lead_eligible(), remaining - 1e-9)
             && remaining > 1e-9
         {
             return None; // keep waiting for batchmates
@@ -805,6 +842,76 @@ mod tests {
                 &[(2, 0.5), (16, 1.0)])),
         });
         assert!(matches!(b.cfg.policy, FlushPolicy::Static));
+    }
+
+    // ---- feature-cache phase classes -----------------------------------
+
+    #[test]
+    fn phased_batches_never_mix_refresh_phases() {
+        // phases 0,1,0,1 queued: the first plan takes the lead phase-0
+        // class only, the second takes the phase-1 class
+        let mut b = Batcher::new(BatcherConfig {
+            variants: vec![1, 2, 4],
+            max_wait: Duration::from_millis(0),
+            capacity: 8,
+            policy: FlushPolicy::Static,
+        });
+        for (i, ph) in [(10, 0u64), (11, 1), (12, 0), (13, 1)] {
+            assert!(b.push_at_phased(i, 0.0, ph));
+        }
+        let plan = b.next_batch_at(1.0).unwrap();
+        assert_eq!(plan.items, vec![10, 12]);
+        assert_eq!(plan.variant, 2);
+        let plan = b.next_batch_at(1.0).unwrap();
+        assert_eq!(plan.items, vec![11, 13]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn uniform_phases_are_identical_to_unphased_batching() {
+        // every decision (fire time, take, variant) must match the
+        // plain push_at batcher when all items share one phase
+        let mk = || Batcher::new(BatcherConfig {
+            variants: vec![1, 4],
+            max_wait: Duration::from_millis(500),
+            capacity: 8,
+            policy: FlushPolicy::Static,
+        });
+        let mut plain = mk();
+        let mut phased = mk();
+        for i in 0..3 {
+            plain.push_at(i, 10.0 + i as f64 * 0.01);
+            phased.push_at_phased(i, 10.0 + i as f64 * 0.01, 7);
+        }
+        assert_eq!(plain.next_fire_at(), phased.next_fire_at());
+        assert!(phased.next_batch_at(10.2).is_none());
+        let a = plain.next_batch_at(10.5).unwrap();
+        let b = phased.next_batch_at(10.5).unwrap();
+        assert_eq!(a.items, b.items);
+        assert_eq!(a.variant, b.variant);
+    }
+
+    #[test]
+    fn lead_phase_fill_drives_full_variant_fire() {
+        // 4 phase-0 items fill the largest variant and fire immediately
+        // even with a phase-1 straggler interleaved
+        let mut b = Batcher::new(BatcherConfig {
+            variants: vec![1, 4],
+            max_wait: Duration::from_millis(500),
+            capacity: 16,
+            policy: FlushPolicy::Static,
+        });
+        b.push_at_phased(0, 0.0, 0);
+        b.push_at_phased(99, 0.0, 1);
+        for i in 1..4 {
+            b.push_at_phased(i, 0.0, 0);
+        }
+        let plan = b.next_batch_at(0.0).unwrap();
+        assert_eq!(plan.items, vec![0, 1, 2, 3]);
+        assert_eq!(plan.variant, 4);
+        // the phase-1 straggler waits for its own deadline
+        assert!(b.next_batch_at(0.1).is_none());
+        assert_eq!(b.next_batch_at(0.6).unwrap().items, vec![99]);
     }
 
     #[test]

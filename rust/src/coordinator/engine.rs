@@ -7,6 +7,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::cache::{CacheAction, CachePolicySpec, CacheStats};
 use crate::config::CacheMode;
 use crate::kvcache::{KvCache, KvQuantPolicy, KvShape};
 use crate::obs::Recorder;
@@ -23,6 +24,10 @@ pub struct EngineConfig {
     /// denoising-schedule policy; `Fixed` reproduces the pre-schedule
     /// engine bit-exactly, adaptive policies early-exit blocks
     pub schedule: ScheduleSpec,
+    /// cross-step feature-cache policy; `Off` reproduces the pre-cache
+    /// engine bit-exactly, caching policies reuse the previous step's
+    /// logits between refreshes
+    pub feature_cache: CachePolicySpec,
 }
 
 impl Default for EngineConfig {
@@ -33,6 +38,7 @@ impl Default for EngineConfig {
             sample_precision: SamplePrecision::Fp32,
             v_chunk: 128,
             schedule: ScheduleSpec::Fixed,
+            feature_cache: CachePolicySpec::Off,
         }
     }
 }
@@ -50,6 +56,9 @@ pub struct GenerationResult {
     pub kv_packed_bytes: u64,
     /// realized steps per block under the configured schedule policy
     pub step_trace: StepTrace,
+    /// feature-cache lookups/hits/misses/refresh traffic (all-zero when
+    /// the policy is `Off`)
+    pub cache_stats: CacheStats,
 }
 
 impl GenerationResult {
@@ -132,6 +141,10 @@ impl GenerationEngine {
         let kv_dims = self.ex.manifest.kv_dims(b);
         let mut cache = KvCache::new(self.cfg.cache, self.cfg.kv_policy);
         let policy = self.cfg.schedule.build();
+        // feature-cache planner over all B·L active positions per step
+        // (the drift proxy is committed-fraction of the whole batch)
+        let mut planner = self.cfg.feature_cache.build(b * g.block_len);
+        let mut last_logits: Option<Vec<f32>> = None;
 
         let mut model_s = 0.0;
         let mut sampling_s = 0.0;
@@ -147,9 +160,20 @@ impl GenerationEngine {
             for t in 0..g.steps_per_block {
                 let vt0 = model_s + sampling_s;
                 let t0 = Instant::now();
-                let warm = t == 0 || self.cfg.cache == CacheMode::None;
+                let baseline_warm = t == 0 || self.cfg.cache == CacheMode::None;
+                // cross-block prompt-feature reuse needs the dual KV
+                // cache (warm features of prior blocks stay resident)
+                let can_refresh_warm =
+                    self.cfg.cache == CacheMode::Dual && blk > 0;
+                let action = planner.step(blk, t, baseline_warm,
+                                          can_refresh_warm);
+                let warm = action == CacheAction::Full;
                 // logits for the active block, [B, L, V]
-                let logits: Vec<f32> = if warm {
+                let logits: Vec<f32> = if action == CacheAction::Reuse {
+                    // serve the step from the feature cache: the
+                    // previous step's logits, no model forward
+                    last_logits.clone().expect("reuse before any forward")
+                } else if warm {
                     let out = self.ex.run(
                         &format!("full_b{b}"),
                         &[Tensor::i32(vec![b, g.total_len], x.clone())])?;
@@ -198,6 +222,15 @@ impl GenerationEngine {
                         CacheMode::None => unreachable!(),
                     }
                 };
+                if action != CacheAction::Reuse {
+                    // a refresh restreams the active block's logit
+                    // buffer into the cache
+                    planner.note_refresh_bytes(
+                        (b * g.block_len * g.vocab) as u64 * 4);
+                }
+                if !self.cfg.feature_cache.is_off() {
+                    last_logits = Some(logits.clone());
+                }
                 model_s += t0.elapsed().as_secs_f64();
                 rec.span_closed("coord", "model_step", vt0,
                                 model_s + sampling_s);
@@ -228,6 +261,10 @@ impl GenerationEngine {
                                 model_s + sampling_s);
                 rec.count("coord.steps", 1.0);
                 steps += 1;
+                // feed the adaptive policy's drift proxy: positions
+                // committed this step across the batch
+                planner.note_commits(
+                    res.transfer.iter().filter(|&&c| c).count());
                 if run.record(&res.transfer) {
                     // every row of the block is committed — skip the
                     // remaining configured steps (a no-op under Fixed,
@@ -250,6 +287,7 @@ impl GenerationEngine {
             steps,
             kv_packed_bytes: cache.packed_bytes(),
             step_trace,
+            cache_stats: planner.stats,
         })
     }
 

@@ -223,6 +223,7 @@ mod tests {
                 total_s: latency,
                 first_s: latency / 4.0,
                 realized_steps: 16.0,
+                cache_hit_rate: 0.0,
             });
         }
         assert_eq!(m.observations().len(), 200);
@@ -255,6 +256,7 @@ mod tests {
             m.record_observation(Observation {
                 variant: 1, seq_len: i as u64, gen_tokens: 64,
                 total_s: 0.01, first_s: 0.002, realized_steps: 16.0,
+                cache_hit_rate: 0.0,
             });
         }
         assert_eq!(m.observations().len(), Metrics::OBS_CAP);

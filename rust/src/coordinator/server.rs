@@ -234,6 +234,7 @@ fn run_batch(engine: &mut GenerationEngine, reqs: Vec<Request>,
                 total_s: result.total_s(),
                 first_s: result.total_s() * first_frac,
                 realized_steps,
+                cache_hit_rate: result.cache_stats.hit_rate(),
             });
         }
         Err(e) => {

@@ -22,6 +22,14 @@
 //!   and the synthetic confidence process that prices expected realized
 //!   steps for every cost model above (`schedule_sweep` in the benches,
 //!   `--schedule` on the serving CLIs);
+//! * [`cache`] — cross-step feature caching as a serving dimension: the
+//!   [`cache::CachePolicySpec`] policies (off / interval / adaptive
+//!   refresh of prompt and response features), the deterministic
+//!   [`cache::CacheStats`] accounting, and the synthetic feature-drift
+//!   process (S10) that prices expected refresh/reuse mixes for every
+//!   cost model above (`cache_sweep` in the benches, `--cache` on the
+//!   serving CLIs, `rust/tests/cache_equivalence.rs` the differential
+//!   gate);
 //! * [`quant`] / [`kvcache`] — bit-exact MX formats, BAOS online
 //!   smoothing, and the blocked-diffusion KV cache manager
 //!   (paper §2.2, §3.1.1, §4.4);
@@ -67,6 +75,7 @@
 //! scratch because the offline crate registry lacks clap/criterion/serde
 //! (docs/ARCHITECTURE.md, substitution S7).
 
+pub mod cache;
 pub mod calib;
 pub mod cli;
 pub mod cluster;

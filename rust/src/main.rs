@@ -20,6 +20,7 @@
 //!   asm            assemble/disassemble DART ISA files
 //!   area           7nm area/power report for a hardware config
 
+use dart::cache::CachePolicySpec;
 use dart::cli::Args;
 use dart::cluster::{self, Arrival, ClusterTopology, FleetSim, RoutePolicy,
                     SloConfig, TraceSpec};
@@ -52,6 +53,10 @@ fn main() {
             eprintln!("usage: dart <serve|serve-cluster|calibrate|fleet-study|profile|generate|simulate|sweep|hbm|asm|area> [flags]");
             eprintln!("  serve     --requests N --cache MODE --kv POLICY \
                        --schedule fixed|conf|slowfast --trace FILE");
+            eprintln!("            (--cache takes a comma list: KV mode \
+                       none|prefix|dual and/or feature-cache policy");
+            eprintln!("             off|interval[:P:R]|adaptive[:TAU:MAX], \
+                       e.g. --cache dual,adaptive)");
             eprintln!("  serve-cluster --devices N --requests N --rate RPS \
                        --arrival poisson|bursty|uniform --router least|rr|variant");
             eprintln!("                --load FRAC --ttft-slo-ms N --tpot-slo-ms N \
@@ -60,6 +65,8 @@ fn main() {
                        --link pcie|nvlink|eth --config FILE --diurnal [SECS]");
             eprintln!("                --length-mix SWING \
                        --schedule fixed|conf|slowfast --recalibrate");
+            eprintln!("                --cache MODE[,FEATURE] (feature \
+                       cache prices warm/cold serving)");
             eprintln!("                --trace FILE (Chrome-trace JSON + \
                        deterministic summary)");
             eprintln!("  fleet-study --seed N --out FILE --requests N \
@@ -96,8 +103,35 @@ fn hw_from(args: &Args) -> HwConfig {
     hw
 }
 
+/// `--cache` is a comma-separated union over two disjoint vocabularies:
+/// the KV-cache mode (`none|prefix|dual`) and the cross-step
+/// feature-cache policy (`off|interval[:P:R]|adaptive[:TAU:MAX]`,
+/// docs/ARCHITECTURE.md S10). Each token parses into whichever half
+/// recognizes it; unspecified halves keep their defaults (dual KV,
+/// feature cache off), so every pre-cache invocation parses
+/// identically.
+fn caches_from(args: &Args) -> (CacheMode, CachePolicySpec) {
+    let mut mode = CacheMode::Dual;
+    let mut policy = CachePolicySpec::Off;
+    for part in args.get_or("cache", "dual").split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some(m) = CacheMode::parse(part) {
+            mode = m;
+        } else if let Some(p) = CachePolicySpec::parse(part) {
+            policy = p;
+        } else {
+            panic!("bad --cache token {part:?} (KV: none|prefix|dual; \
+                    feature: off|interval[:P:R]|adaptive[:TAU:MAX])");
+        }
+    }
+    (mode, policy)
+}
+
 fn cache_from(args: &Args) -> CacheMode {
-    CacheMode::parse(args.get_or("cache", "dual")).expect("bad --cache")
+    caches_from(args).0
 }
 
 fn schedule_from(args: &Args) -> ScheduleSpec {
@@ -129,15 +163,18 @@ fn cmd_serve(args: &Args) -> i32 {
         return 1;
     };
     let n = args.get_usize("requests", 16);
+    let (cache, feature_cache) = caches_from(args);
     let cfg = EngineConfig {
-        cache: cache_from(args),
+        cache,
         kv_policy: kv_policy_from(args),
         sample_precision: SamplePrecision::parse(
             args.get_or("sampling", "fp32")).expect("bad --sampling"),
         v_chunk: args.get_usize("v-chunk", 128),
         schedule: schedule_from(args),
+        feature_cache,
     };
-    println!("starting coordinator ({:?}) ...", cfg.cache);
+    println!("starting coordinator ({:?}, feature cache {}) ...",
+             cfg.cache, cfg.feature_cache.name());
     let coord = Coordinator::start(&dir, cfg, None).expect("coordinator");
     let mut rng = SplitMix64::new(42);
     let prompt_len = 16; // tiny-model geometry
@@ -176,10 +213,13 @@ fn cmd_serve(args: &Args) -> i32 {
 /// artifacts needed.
 fn cmd_serve_cluster(args: &Args) -> i32 {
     let n_devices = args.get_usize("devices", 4);
+    let (kv_mode, feature_cache) = caches_from(args);
     let mut topo = ClusterTopology::homogeneous(
-        n_devices, hw_from(args), model_from(args), cache_from(args));
-    // denoising schedule before calibration, so curves profile under it
+        n_devices, hw_from(args), model_from(args), kv_mode);
+    // denoising schedule and feature-cache policy before calibration,
+    // so curves profile under them
     topo.schedule = schedule_from(args);
+    topo.feature_cache = feature_cache;
     if let Some(link) = args.get("link") {
         topo.interconnect = dart::cluster::InterconnectModel::parse(link)
             .expect("bad --link (pcie|nvlink|eth)");
@@ -317,11 +357,11 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
                      warm.ttft.quantile(0.95).unwrap_or(0.0)));
     }
 
-    println!("== DART fleet: {} devices x {}, {} cache, {} router, \
-              {} schedule ==",
+    println!("== DART fleet: {} devices x {}, {} KV cache, {} feature \
+              cache, {} router, {} schedule ==",
              topo.n_devices(), topo.model.name,
-             topo.devices[0].cache.name(), policy.name(),
-             topo.schedule.name());
+             topo.devices[0].cache.name(), topo.feature_cache.name(),
+             policy.name(), topo.schedule.name());
     println!("trace: {} requests, {}, fleet capacity ~{:.0} tok/s \
               (expected {:.1}/{} steps per block)",
              trace.len(), trace_desc, capacity_tps,
@@ -373,7 +413,7 @@ fn cmd_calibrate(args: &Args) -> i32 {
         return 2;
     }
     let model = model_from(args);
-    let cache = cache_from(args);
+    let (cache, feature_cache) = caches_from(args);
     let samples = args.get_usize("samples", 5);
 
     let presets: Vec<&str> = args.get_or("presets", "default,edge")
@@ -395,6 +435,7 @@ fn cmd_calibrate(args: &Args) -> i32 {
         let mut cfg = CalibConfig::serving_default(&variants);
         cfg.samples_per_cell = samples;
         cfg.seed = args.get_usize("seed", 0xCA11B) as u64;
+        cfg.feature_cache = feature_cache;
         let cal = Calibrator::new(hw, model.clone(), cache, cfg);
         let name = format!("dart-{preset}");
         let curve = cal.profile(&name);
@@ -476,16 +517,16 @@ fn cmd_fleet_study(args: &Args) -> i32 {
     };
 
     eprintln!("fleet-study: {} shapes x {} policies x 3 admission modes \
-               x {} schedules = {} cells, seed {}",
+               x {} schedules x {} feature caches = {} cells, seed {}",
               cfg.shapes.len(), cfg.policies.len(), cfg.schedules.len(),
-              n_cells, seed);
+              cfg.caches.len(), n_cells, seed);
     let mut done = 0usize;
     let result = StudyGrid::new(cfg).run_with_progress(|cell| {
         done += 1;
-        eprintln!("  [{done}/{n_cells}] {} / {} / {} / {}: goodput \
+        eprintln!("  [{done}/{n_cells}] {} / {} / {} / {} / {}: goodput \
                    {:.1} tok/s, shed {:.1}% ({:.0} ms)",
                   cell.shape, cell.policy.name(), cell.schedule.name(),
-                  cell.admission_label(),
+                  cell.cache.name(), cell.admission_label(),
                   cell.metrics.goodput_tps(),
                   100.0 * cell.metrics.shed_frac(),
                   cell.wall_s * 1e3);
@@ -620,10 +661,12 @@ fn cmd_generate(args: &Args) -> i32 {
     };
     let ex = dart::runtime::Executor::load(&dir).expect("load artifacts");
     let g = ex.manifest.geometry;
+    let (cache, feature_cache) = caches_from(args);
     let mut eng = dart::coordinator::GenerationEngine::new(ex, EngineConfig {
-        cache: cache_from(args),
+        cache,
         kv_policy: kv_policy_from(args),
         schedule: schedule_from(args),
+        feature_cache,
         ..EngineConfig::default()
     });
     let b = args.get_usize("batch", 1);
@@ -646,6 +689,13 @@ fn cmd_generate(args: &Args) -> i32 {
              r.sampling_frac() * 100.0, r.step_trace.realized_steps(),
              r.step_trace.configured_steps(), r.step_trace.policy,
              r.step_trace.savings_frac() * 100.0);
+    if r.cache_stats.lookups > 0 {
+        println!("feature cache: {}/{} step-features reused ({:.0}% hit), \
+                  {} refresh bytes",
+                 r.cache_stats.hits, r.cache_stats.lookups,
+                 r.cache_stats.hit_rate() * 100.0,
+                 r.cache_stats.refresh_bytes);
+    }
     if let Some(path) = args.get("trace") {
         std::fs::write(path, rec.chrome_trace()).expect("write trace");
         println!("\nwrote Chrome trace to {path} ({} spans, {} counters)",

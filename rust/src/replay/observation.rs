@@ -35,6 +35,9 @@ pub struct Observation {
     /// realized step count over its block count; equal to the schedule
     /// cap under `Fixed`)
     pub realized_steps: f64,
+    /// realized feature-cache hit rate of the batch
+    /// ([`crate::cache::CacheStats::hit_rate`]; 0.0 with the cache off)
+    pub cache_hit_rate: f64,
 }
 
 /// A device's measured observation stream, replayable as text.
@@ -85,6 +88,7 @@ impl ObservationLog {
                 total_s,
                 first_s,
                 realized_steps: curve.expected_steps,
+                cache_hit_rate: curve.cache_hit_rate,
             };
             for _ in 0..SELF_SAMPLES_P50 {
                 log.push(mk(p.p50_total_s, p.p50_first_s));
@@ -102,15 +106,16 @@ impl ObservationLog {
     /// per observation (17 significant digits — f64 round-trips
     /// exactly, like the curve format).
     pub fn to_text(&self) -> String {
-        let mut s = String::from("# dart-observation-log v1\n");
+        let mut s = String::from("# dart-observation-log v2\n");
         s.push_str(&format!("device {}\n", self.device));
         s.push_str("# variant seq_len gen_tokens total_s first_s \
-                    realized_steps\n");
+                    realized_steps cache_hit_rate\n");
         for o in &self.observations {
             s.push_str(&format!(
-                "{} {} {} {:.17e} {:.17e} {:.17e}\n",
+                "{} {} {} {:.17e} {:.17e} {:.17e} {:.17e}\n",
                 o.variant, o.seq_len, o.gen_tokens,
-                o.total_s, o.first_s, o.realized_steps));
+                o.total_s, o.first_s, o.realized_steps,
+                o.cache_hit_rate));
         }
         s
     }
@@ -131,9 +136,10 @@ impl ObservationLog {
                 continue;
             }
             let f: Vec<&str> = line.split_whitespace().collect();
-            if f.len() != 6 {
+            // v1 rows carry 6 fields (no cache hit rate → cold, 0.0)
+            if f.len() != 6 && f.len() != 7 {
                 return Err(format!(
-                    "observation line {}: expected 6 fields, got {}",
+                    "observation line {}: expected 6 or 7 fields, got {}",
                     i + 1, f.len()));
             }
             let err = |what: &str| {
@@ -154,6 +160,15 @@ impl ObservationLog {
                 total_s: fnum(3, "total_s")?,
                 first_s: fnum(4, "first_s")?,
                 realized_steps: fnum(5, "realized_steps")?,
+                cache_hit_rate: if f.len() == 7 {
+                    let h = fnum(6, "cache_hit_rate")?;
+                    if h > 1.0 {
+                        return Err(err("cache_hit_rate"));
+                    }
+                    h
+                } else {
+                    0.0
+                },
             });
         }
         Ok(ObservationLog { device, observations })
@@ -170,10 +185,12 @@ mod tests {
         let mut log = ObservationLog::new("npu0");
         log.push(Observation {
             variant: 4, seq_len: 300, gen_tokens: 192,
-            total_s: 0.0321, first_s: 0.0081, realized_steps: 16.0 });
+            total_s: 0.0321, first_s: 0.0081, realized_steps: 16.0,
+            cache_hit_rate: 0.0 });
         log.push(Observation {
             variant: 1, seq_len: 120, gen_tokens: 64,
-            total_s: 0.011, first_s: 0.003, realized_steps: 9.25 });
+            total_s: 0.011, first_s: 0.003, realized_steps: 9.25,
+            cache_hit_rate: 0.4375 });
         log
     }
 
@@ -193,9 +210,30 @@ mod tests {
         assert!(ObservationLog::from_text("x 300 192 1 1 16").is_err());
         assert!(ObservationLog::from_text("4 300 192 nan 1 16").is_err());
         assert!(ObservationLog::from_text("4 300 192 1 -1 16").is_err());
+        // a v2 cache hit rate must be a fraction
+        assert!(ObservationLog::from_text("4 300 192 1 1 16 1.5").is_err());
+        assert!(ObservationLog::from_text("4 300 192 1 1 16 -0.1").is_err());
+        assert!(ObservationLog::from_text("4 300 192 1 1 16 nan").is_err());
         let empty = ObservationLog::from_text("# comments only\n").unwrap();
         assert!(empty.is_empty());
         assert_eq!(empty.len(), 0);
+    }
+
+    #[test]
+    fn v1_rows_parse_cold_and_upgrade_stably() {
+        // a v1 log (6-field rows, no cache column) parses with hit
+        // rate 0.0 and the re-emitted v2 text round-trips byte-exactly
+        let v1 = "# dart-observation-log v1\n\
+                  device npu0\n\
+                  4 300 192 3.21000000000000019e-2 8.09999999999999962e-3 \
+                  1.60000000000000000e1\n";
+        let log = ObservationLog::from_text(v1).unwrap();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.observations[0].cache_hit_rate.to_bits(),
+                   0.0f64.to_bits());
+        let text = log.to_text();
+        assert_eq!(ObservationLog::from_text(&text).unwrap().to_text(),
+                   text);
     }
 
     #[test]

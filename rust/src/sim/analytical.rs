@@ -281,6 +281,97 @@ impl AnalyticalSim {
             sampling_frac: sampling.seconds / total,
         }
     }
+
+    /// Cost of serving one refine step entirely from the feature cache:
+    /// no transformer body, no output head — the cached active-block
+    /// logits are restreamed to the sampler.
+    fn reuse_step(&self, w: &Workload) -> PhaseReport {
+        let m = w.batch * w.block_len;
+        let logits = (m * w.model.vocab) as f64
+            * self.prec.activations.effective_bits() / 8.0;
+        PhaseReport {
+            seconds: logits / self.hw.hbm.peak_bw(),
+            macs: 0.0,
+            hbm_bytes: logits,
+            sram_bytes: logits,
+            vector_ops: 0.0,
+        }
+    }
+
+    /// [`Self::run_scheduled`] under a cross-step feature cache: bill
+    /// only the *refreshed* fraction of feature work
+    /// ([`crate::cache::CachePlan`], the S10 expectation). Per block:
+    /// the block-start step mixes the full warm forward (fraction
+    /// `warm_full_frac`, always 1.0 for the first block) with the
+    /// cross-block refine pass; refine steps mix the cache-mode refine
+    /// forward (fraction `refresh_frac`) with a logit-restream reuse
+    /// step. Sampling runs every step regardless — the cache saves
+    /// model forwards, never sampling passes.
+    ///
+    /// With `CachePlan::off()` (`{1.0, 1.0}` — also the
+    /// `Interval {1, 1}` plan) every mix weight is exactly 1.0 or 0.0,
+    /// so this is bit-identical to [`Self::run_scheduled`]
+    /// (`rust/tests/cache_equivalence.rs` pins it).
+    pub fn run_cached(&self, w: &Workload, steps_per_block: f64,
+                      plan: &crate::cache::CachePlan) -> RunReport {
+        let cap = w.steps_per_block as f64;
+        let steps = if cap >= 1.0 {
+            steps_per_block.clamp(1.0, cap)
+        } else {
+            0.0
+        };
+        let l_tot = w.total_len();
+        let mut model = PhaseReport::default();
+        let mut sampling = PhaseReport::default();
+        for blk in 0..w.n_blocks() {
+            let s_n = w.prompt_len + blk * w.block_len;
+            let warm = self.forward(w, w.batch * l_tot, l_tot, true);
+            if blk == 0 {
+                // the first block's prompt features are always cold
+                model.add(warm);
+            } else {
+                model.add(warm.scaled(plan.warm_full_frac));
+                // cross-block prompt-feature reuse serves the block
+                // start from the refine-shaped forward instead
+                let warm_reuse =
+                    self.forward(w, w.batch * w.block_len, l_tot, false);
+                model.add(warm_reuse.scaled(1.0 - plan.warm_full_frac));
+            }
+            let refines = (steps - 1.0).max(0.0);
+            let refine = match w.cache {
+                CacheMode::None =>
+                    self.forward(w, w.batch * l_tot, l_tot, true),
+                CacheMode::Prefix =>
+                    self.forward(w, w.batch * (l_tot - s_n), l_tot, false),
+                CacheMode::Dual =>
+                    self.forward(w, w.batch * w.block_len, l_tot, false),
+            };
+            model.add(refine.scaled(refines * plan.refresh_frac));
+            model.add(self.reuse_step(w)
+                      .scaled(refines * (1.0 - plan.refresh_frac)));
+            sampling.add(self.sampling_step(w.batch, w.block_len,
+                                            w.model.vocab)
+                         .scaled(steps));
+        }
+        let total = model.seconds + sampling.seconds;
+        let tokens = w.tokens_out() as f64;
+        let energy = EnergyReport::compute(
+            &self.energy_model,
+            model.macs + sampling.macs,
+            model.vector_ops + sampling.vector_ops,
+            model.sram_bytes + sampling.sram_bytes,
+            model.hbm_bytes + sampling.hbm_bytes,
+            total);
+        RunReport {
+            model,
+            sampling,
+            total_s: total,
+            tps: tokens / total,
+            energy,
+            tok_per_j: tokens / energy.total_j,
+            sampling_frac: sampling.seconds / total,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -402,6 +493,61 @@ mod tests {
         assert_eq!(floor.total_s.to_bits(), one.total_s.to_bits());
         let over = sim.run_scheduled(&w, 99.0);
         assert_eq!(over.total_s.to_bits(), full.total_s.to_bits());
+    }
+
+    #[test]
+    fn cached_run_off_plan_is_bit_identical_to_scheduled() {
+        use crate::cache::CachePlan;
+        let sim = AnalyticalSim::new(HwConfig::dart_default(),
+                                     PrecisionConfig::dart_full_quant());
+        for cache in CacheMode::ALL {
+            let w = Workload::paper_reference(ModelArch::llada_8b(), cache);
+            for steps in [w.steps_per_block as f64, 9.25, 1.0] {
+                let base = sim.run_scheduled(&w, steps);
+                let off = sim.run_cached(&w, steps, &CachePlan::off());
+                assert_eq!(base.total_s.to_bits(), off.total_s.to_bits(),
+                           "{cache:?} steps {steps}");
+                assert_eq!(base.model.seconds.to_bits(),
+                           off.model.seconds.to_bits());
+                assert_eq!(base.sampling.seconds.to_bits(),
+                           off.sampling.seconds.to_bits());
+                assert_eq!(base.model.hbm_bytes.to_bits(),
+                           off.model.hbm_bytes.to_bits());
+                assert_eq!(base.energy.total_j.to_bits(),
+                           off.energy.total_j.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn cached_run_bills_less_as_reuse_grows() {
+        use crate::cache::{expected_plan, CachePolicySpec};
+        let w = Workload::paper_reference(ModelArch::llada_8b(),
+                                          CacheMode::Dual);
+        let sim = AnalyticalSim::new(HwConfig::dart_default(),
+                                     PrecisionConfig::dart_full_quant());
+        let steps = w.steps_per_block as f64;
+        let base = sim.run_cached(&w, steps, &crate::cache::CachePlan::off());
+        let plan = |p, r| expected_plan(
+            &CachePolicySpec::Interval { prompt_every: p,
+                                         response_every: r },
+            w.block_len as usize, w.steps_per_block as usize,
+            w.n_blocks() as usize);
+        let mild = sim.run_cached(&w, steps, &plan(2, 2));
+        let deep = sim.run_cached(&w, steps, &plan(4, 4));
+        assert!(mild.total_s < base.total_s,
+                "mild {} base {}", mild.total_s, base.total_s);
+        assert!(deep.total_s < mild.total_s,
+                "deep {} mild {}", deep.total_s, mild.total_s);
+        // sampling is never cached: bit-identical across all arms
+        assert_eq!(base.sampling.seconds.to_bits(),
+                   deep.sampling.seconds.to_bits());
+        // the adaptive expectation also prices below the off arm
+        let ad = sim.run_cached(&w, steps, &expected_plan(
+            &CachePolicySpec::adaptive_default(), w.block_len as usize,
+            w.steps_per_block as usize, w.n_blocks() as usize));
+        assert!(ad.total_s < base.total_s,
+                "adaptive {} base {}", ad.total_s, base.total_s);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! environment), so the same grid renders to the same bytes — the
 //! property `scripts/ci.sh --smoke` gates on.
 
+use crate::cache::CachePolicySpec;
 use crate::report::{self, MarkdownDoc, Table};
 use crate::schedule::ScheduleSpec;
 use crate::stats::fmt_time;
@@ -33,6 +34,7 @@ pub fn cell_row(c: &CellResult, baseline_goodput: Option<f64>,
         c.policy.name().to_string(),
         c.admission_label().to_string(),
         c.schedule.name().to_string(),
+        c.cache.name().to_string(),
         report::pct(m.shed_slo_frac()),
         report::pct(m.shed_capacity_frac()),
         report::pct(m.shed_retry_frac()),
@@ -45,8 +47,8 @@ pub fn cell_row(c: &CellResult, baseline_goodput: Option<f64>,
     ]
 }
 
-const SWEEP_HEADERS: [&str; 12] = [
-    "router", "admission", "schedule", "shed slo", "shed cap",
+const SWEEP_HEADERS: [&str; 13] = [
+    "router", "admission", "schedule", "cache", "shed slo", "shed cap",
     "shed retry", "attainment", "goodput tok/s", "Δ goodput", "p95 TTFT",
     "padding waste", "mean util"];
 
@@ -125,20 +127,23 @@ fn analysis_paras(r: &StudyResult) -> Vec<String> {
         for s in &r.shapes {
             for &policy in &r.cfg.policies {
                 for admission in AdmissionMode::ALL {
-                    let fixed = r.cell(&s.shape.name, policy, admission,
-                                       ScheduleSpec::Fixed);
-                    let adp = r.cell(&s.shape.name, policy, admission,
-                                     schedule);
-                    if let (Some(f), Some(a)) = (fixed, adp) {
-                        if f.metrics.goodput_tps() > 0.0 {
-                            gd.push((a.metrics.goodput_tps()
-                                     - f.metrics.goodput_tps())
-                                    / f.metrics.goodput_tps());
-                        }
-                        if f.metrics.horizon_s > 0.0 {
-                            hd.push((a.metrics.horizon_s
-                                     - f.metrics.horizon_s)
-                                    / f.metrics.horizon_s);
+                    for &cache in &r.cfg.caches {
+                        let fixed = r.cell(&s.shape.name, policy,
+                                           admission, ScheduleSpec::Fixed,
+                                           cache);
+                        let adp = r.cell(&s.shape.name, policy, admission,
+                                         schedule, cache);
+                        if let (Some(f), Some(a)) = (fixed, adp) {
+                            if f.metrics.goodput_tps() > 0.0 {
+                                gd.push((a.metrics.goodput_tps()
+                                         - f.metrics.goodput_tps())
+                                        / f.metrics.goodput_tps());
+                            }
+                            if f.metrics.horizon_s > 0.0 {
+                                hd.push((a.metrics.horizon_s
+                                         - f.metrics.horizon_s)
+                                        / f.metrics.horizon_s);
+                            }
                         }
                     }
                 }
@@ -160,6 +165,59 @@ fn analysis_paras(r: &StudyResult) -> Vec<String> {
             sched_lines.join("\n")));
     }
 
+    // cached vs cache-off, aggregated over matched
+    // (shape, policy, admission, schedule) tuples
+    let mut cache_lines = Vec::new();
+    for &cache in &r.cfg.caches {
+        if cache.is_off() {
+            continue;
+        }
+        let hit = cache.serving_hit_rate(g_block, g_cap);
+        let mut gd = Vec::new();
+        let mut hd = Vec::new();
+        for s in &r.shapes {
+            for &policy in &r.cfg.policies {
+                for admission in AdmissionMode::ALL {
+                    for &schedule in &r.cfg.schedules {
+                        let off = r.cell(&s.shape.name, policy, admission,
+                                         schedule, CachePolicySpec::Off);
+                        let warm = r.cell(&s.shape.name, policy, admission,
+                                          schedule, cache);
+                        if let (Some(o), Some(w)) = (off, warm) {
+                            if o.metrics.goodput_tps() > 0.0 {
+                                gd.push((w.metrics.goodput_tps()
+                                         - o.metrics.goodput_tps())
+                                        / o.metrics.goodput_tps());
+                            }
+                            if o.metrics.horizon_s > 0.0 {
+                                hd.push((w.metrics.horizon_s
+                                         - o.metrics.horizon_s)
+                                        / o.metrics.horizon_s);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cache_lines.push(format!(
+            "**{}** caching reuses ~{} of per-step feature work at this \
+             geometry and moves goodput by {} (horizon by {}) against \
+             the cache-off arm on matched cells.",
+            cache.name(), report::pct(hit),
+            report::signed_pct(mean(&gd)), report::signed_pct(mean(&hd))));
+    }
+    if !cache_lines.is_empty() {
+        paras.push(format!(
+            "Cross-step feature caching changes what a step costs, not \
+             how many steps run: adjacent denoising steps recompute \
+             near-static features, so the cached arms bill only \
+             refreshed work (warm steady state) while admission still \
+             prices each fresh request's first block cold — and the \
+             batcher co-schedules only requests on the same refresh \
+             phase, keeping reuse steps aligned across lanes.\n{}",
+            cache_lines.join("\n")));
+    }
+
     // calibrated vs static, aggregated over matched
     // (shape, policy, schedule) triples
     let mut gdeltas = Vec::new();
@@ -168,20 +226,24 @@ fn analysis_paras(r: &StudyResult) -> Vec<String> {
     for s in &r.shapes {
         for &policy in &r.cfg.policies {
             for &schedule in &r.cfg.schedules {
-                let stat = r.cell(&s.shape.name, policy,
-                                  AdmissionMode::Static, schedule);
-                let cal = r.cell(&s.shape.name, policy,
-                                 AdmissionMode::Calibrated, schedule);
-                if let (Some(st), Some(ca)) = (stat, cal) {
-                    if st.metrics.goodput_tps() > 0.0 {
-                        gdeltas.push((ca.metrics.goodput_tps()
-                                      - st.metrics.goodput_tps())
-                                     / st.metrics.goodput_tps());
+                for &cache in &r.cfg.caches {
+                    let stat = r.cell(&s.shape.name, policy,
+                                      AdmissionMode::Static, schedule,
+                                      cache);
+                    let cal = r.cell(&s.shape.name, policy,
+                                     AdmissionMode::Calibrated, schedule,
+                                     cache);
+                    if let (Some(st), Some(ca)) = (stat, cal) {
+                        if st.metrics.goodput_tps() > 0.0 {
+                            gdeltas.push((ca.metrics.goodput_tps()
+                                          - st.metrics.goodput_tps())
+                                         / st.metrics.goodput_tps());
+                        }
+                        sdeltas.push(ca.metrics.shed_frac()
+                                     - st.metrics.shed_frac());
+                        pdeltas.push(ca.metrics.padding_waste_frac()
+                                     - st.metrics.padding_waste_frac());
                     }
-                    sdeltas.push(ca.metrics.shed_frac()
-                                 - st.metrics.shed_frac());
-                    pdeltas.push(ca.metrics.padding_waste_frac()
-                                 - st.metrics.padding_waste_frac());
                 }
             }
         }
@@ -206,18 +268,22 @@ fn analysis_paras(r: &StudyResult) -> Vec<String> {
     for s in &r.shapes {
         for &policy in &r.cfg.policies {
             for &schedule in &r.cfg.schedules {
-                let cal = r.cell(&s.shape.name, policy,
-                                 AdmissionMode::Calibrated, schedule);
-                let rec = r.cell(&s.shape.name, policy,
-                                 AdmissionMode::Recalibrated, schedule);
-                if let (Some(ca), Some(re)) = (cal, rec) {
-                    if ca.metrics.goodput_tps() > 0.0 {
-                        rg.push((re.metrics.goodput_tps()
-                                 - ca.metrics.goodput_tps())
-                                / ca.metrics.goodput_tps());
+                for &cache in &r.cfg.caches {
+                    let cal = r.cell(&s.shape.name, policy,
+                                     AdmissionMode::Calibrated, schedule,
+                                     cache);
+                    let rec = r.cell(&s.shape.name, policy,
+                                     AdmissionMode::Recalibrated, schedule,
+                                     cache);
+                    if let (Some(ca), Some(re)) = (cal, rec) {
+                        if ca.metrics.goodput_tps() > 0.0 {
+                            rg.push((re.metrics.goodput_tps()
+                                     - ca.metrics.goodput_tps())
+                                    / ca.metrics.goodput_tps());
+                        }
+                        rs.push(re.metrics.shed_frac()
+                                - ca.metrics.shed_frac());
                     }
-                    rs.push(re.metrics.shed_frac()
-                            - ca.metrics.shed_frac());
                 }
             }
         }
@@ -302,21 +368,28 @@ pub fn render_study(r: &StudyResult) -> String {
         .map(|s| s.name())
         .collect::<Vec<_>>()
         .join("/");
+    let cache_names = cfg.caches.iter()
+        .map(|c| c.name())
+        .collect::<Vec<_>>()
+        .join("/");
     d.para(&format!(
         "Grid: {} fleet shapes × {} router policies × 3 admission modes \
          (static analytic scalars vs profiled latency curves vs \
          warm-up-recalibrated curves — the replay loop's third arm) × \
-         {} denoising schedules ({schedule_names}), {} requests per \
+         {} denoising schedules ({schedule_names}) × {} feature-cache \
+         policies ({cache_names}), {} requests per \
          cell at {} of each shape's analytic token capacity, under a \
          diurnal envelope spanning {} simulated days (swing {}, so the \
          peak offers ~{}x the mean rate). Adaptive schedules are priced \
          at their expected realized steps throughout — admission, \
          batching and calibration all bill realized rather than \
-         configured steps. Model: {}, {} cache. Baseline cell for the \
+         configured steps — and cached arms bill only refreshed feature \
+         work, warm for steady state and cold for each request's first \
+         block. Model: {}, {} KV cache. Baseline cell for the \
          delta column: {} routing with {} admission under the fixed \
-         schedule.",
+         schedule with the feature cache off.",
         cfg.shapes.len(), cfg.policies.len(), cfg.schedules.len(),
-        cfg.requests_per_cell,
+        cfg.caches.len(), cfg.requests_per_cell,
         report::pct(cfg.load), report::f1(cfg.envelope_periods),
         report::f2(cfg.envelope_swing),
         report::f2(1.0 + cfg.envelope_swing), cfg.model.name,
@@ -357,7 +430,8 @@ pub fn render_study(r: &StudyResult) -> String {
         for c in r.shape_cells(&s.shape.name) {
             let is_base = c.policy == cfg.baseline_policy
                 && c.admission == cfg.baseline_admission
-                && c.schedule == ScheduleSpec::Fixed;
+                && c.schedule == ScheduleSpec::Fixed
+                && c.cache.is_off();
             t.row(&cell_row(c, base_goodput, is_base));
         }
         d.table(&t);
@@ -410,6 +484,7 @@ mod tests {
             devices: 2,
             policy: RoutePolicy::VariantAware,
             schedule: ScheduleSpec::slowfast_default(),
+            cache: CachePolicySpec::adaptive_default(),
             admission: AdmissionMode::Calibrated,
             metrics: m,
             wall_s: 0.0,
@@ -425,6 +500,7 @@ mod tests {
             "variant-aware".to_string(),
             "calibrated".to_string(),
             "slowfast".to_string(),
+            "adaptive".to_string(),
             "25.0%".to_string(),    // 1 SLO-predicted shed of 4 offered
             "25.0%".to_string(),    // 1 capacity shed of 4 offered
             "0.0%".to_string(),     // no retry-exhausted sheds
@@ -436,10 +512,10 @@ mod tests {
             "60.0%".to_string(),    // mean of 80% and 40%
         ]);
         // the baseline row marks itself instead of a delta
-        assert_eq!(cell_row(&fixture(), Some(8.0), true)[8], "(base)");
+        assert_eq!(cell_row(&fixture(), Some(8.0), true)[9], "(base)");
         // an unusable baseline degrades to n/a, never a division blowup
-        assert_eq!(cell_row(&fixture(), Some(0.0), false)[8], "n/a");
-        assert_eq!(cell_row(&fixture(), None, false)[8], "n/a");
+        assert_eq!(cell_row(&fixture(), Some(0.0), false)[9], "n/a");
+        assert_eq!(cell_row(&fixture(), None, false)[9], "n/a");
     }
 
     #[test]
@@ -452,17 +528,20 @@ mod tests {
                        "## Policy sweep", "## Analysis",
                        "## Reproducibility", "(base)", "fleet-study",
                        "homogeneous-2", "mixed-3", "| router |",
-                       "| schedule |", "| shed slo |", "| shed cap |",
-                       "| shed retry |", "denoising schedules",
-                       "realizes ~", "| slowfast |", "| recalibrated |",
-                       "replay loop"] {
+                       "| schedule |", "| cache |", "| shed slo |",
+                       "| shed cap |", "| shed retry |",
+                       "denoising schedules", "feature-cache policies",
+                       "realizes ~", "caching reuses ~", "| slowfast |",
+                       "| adaptive |", "| recalibrated |",
+                       "replay loop",
+                       "Cross-step feature caching"] {
             assert!(a.contains(needle), "study doc missing {needle:?}");
         }
-        // one sweep row per (schedule, admission, policy) cell of each
-        // shape
+        // one sweep row per (schedule, cache, admission, policy) cell
+        // of each shape
         let rows = a.matches("| round-robin |").count()
             + a.matches("| least-outstanding |").count();
-        assert_eq!(rows, 24,
-                   "2 shapes x 2 schedules x 3 admission x 2 policies");
+        assert_eq!(rows, 48,
+                   "2 shapes x 2 schedules x 2 caches x 3 adm x 2 rtr");
     }
 }

@@ -19,6 +19,7 @@
 //! [`StudyGrid::run_serial`] (gated by
 //! `rust/tests/fleet_determinism.rs`), it just finishes sooner.
 
+use crate::cache::CachePolicySpec;
 use crate::cluster::{chat_offered_rps, fleet_capacity_tps, generate_trace,
                      Arrival, ClusterTopology, Diurnal, FleetMetrics,
                      FleetSim, RoutePolicy, SloConfig, TraceSpec};
@@ -99,6 +100,10 @@ pub struct StudyConfig {
     /// router) cell with the fleet serving (and, when calibrated,
     /// profiled) under that schedule
     pub schedules: Vec<ScheduleSpec>,
+    /// feature-cache axis (docs/ARCHITECTURE.md S10): each entry reruns
+    /// every cell with the fleet serving (and, when calibrated,
+    /// profiled) under that cross-step cache policy
+    pub caches: Vec<CachePolicySpec>,
     /// requests per cell trace (each shape generates one trace shared
     /// by all of its cells)
     pub requests_per_cell: usize,
@@ -137,6 +142,8 @@ impl StudyConfig {
             schedules: vec![ScheduleSpec::Fixed,
                             ScheduleSpec::conf_default(),
                             ScheduleSpec::slowfast_default()],
+            caches: vec![CachePolicySpec::Off,
+                         CachePolicySpec::adaptive_default()],
             requests_per_cell: 240,
             load: 0.85,
             envelope_periods: 2.0,
@@ -161,6 +168,8 @@ impl StudyConfig {
                            RoutePolicy::LeastOutstanding],
             schedules: vec![ScheduleSpec::Fixed,
                             ScheduleSpec::slowfast_default()],
+            caches: vec![CachePolicySpec::Off,
+                         CachePolicySpec::adaptive_default()],
             requests_per_cell: 48,
             load: 0.85,
             envelope_periods: 2.0,
@@ -177,9 +186,10 @@ impl StudyConfig {
         AdmissionMode::ALL
     }
 
-    /// Cells in the grid: shapes × schedules × admission × routers.
+    /// Cells in the grid:
+    /// shapes × schedules × caches × admission × routers.
     pub fn n_cells(&self) -> usize {
-        self.shapes.len() * self.schedules.len()
+        self.shapes.len() * self.schedules.len() * self.caches.len()
             * self.admission_modes().len() * self.policies.len()
     }
 }
@@ -193,6 +203,9 @@ pub struct CellResult {
     /// the denoising schedule the fleet served (and, when calibrated,
     /// profiled) under
     pub schedule: ScheduleSpec,
+    /// the feature-cache policy the fleet served (and, when calibrated,
+    /// profiled) under
+    pub cache: CachePolicySpec,
     /// what admission/batching priced from: analytic scalars, profiled
     /// curves, or warm-up-recalibrated curves
     pub admission: AdmissionMode,
@@ -236,19 +249,22 @@ pub struct StudyResult {
 
 impl StudyResult {
     pub fn cell(&self, shape: &str, policy: RoutePolicy,
-                admission: AdmissionMode, schedule: ScheduleSpec)
-                -> Option<&CellResult> {
+                admission: AdmissionMode, schedule: ScheduleSpec,
+                cache: CachePolicySpec) -> Option<&CellResult> {
         self.cells.iter().find(|c| c.shape == shape
                                && c.policy == policy
                                && c.admission == admission
-                               && c.schedule == schedule)
+                               && c.schedule == schedule
+                               && c.cache == cache)
     }
 
     /// The named baseline cell for a shape (delta reference): the
-    /// configured baseline router/admission under the fixed schedule.
+    /// configured baseline router/admission under the fixed schedule
+    /// with the feature cache off.
     pub fn baseline(&self, shape: &str) -> Option<&CellResult> {
         self.cell(shape, self.cfg.baseline_policy,
-                  self.cfg.baseline_admission, ScheduleSpec::Fixed)
+                  self.cfg.baseline_admission, ScheduleSpec::Fixed,
+                  CachePolicySpec::Off)
     }
 
     /// The goodput winner among a shape's cells (first-listed wins ties,
@@ -282,14 +298,16 @@ pub struct StudyGrid {
 struct Unit {
     shape_idx: usize,
     schedule: ScheduleSpec,
+    feature_cache: CachePolicySpec,
     admission: AdmissionMode,
 }
 
 impl StudyGrid {
     pub fn new(cfg: StudyConfig) -> Self {
         assert!(!cfg.shapes.is_empty() && !cfg.policies.is_empty()
-                && !cfg.schedules.is_empty(),
-                "study grid needs at least one shape, policy and schedule");
+                && !cfg.schedules.is_empty() && !cfg.caches.is_empty(),
+                "study grid needs at least one shape, policy, schedule \
+                 and cache policy");
         StudyGrid { cfg }
     }
 
@@ -344,15 +362,19 @@ impl StudyGrid {
         (shapes, traces)
     }
 
-    /// Units in pinned (shape, schedule, admission) order — the
+    /// Units in pinned (shape, schedule, cache, admission) order — the
     /// reduction order of both execution paths.
     fn units(&self) -> Vec<Unit> {
         let cfg = &self.cfg;
         let mut units = Vec::new();
         for shape_idx in 0..cfg.shapes.len() {
             for &schedule in &cfg.schedules {
-                for admission in cfg.admission_modes() {
-                    units.push(Unit { shape_idx, schedule, admission });
+                for &feature_cache in &cfg.caches {
+                    for admission in cfg.admission_modes() {
+                        units.push(Unit {
+                            shape_idx, schedule, feature_cache, admission,
+                        });
+                    }
                 }
             }
         }
@@ -371,6 +393,7 @@ impl StudyGrid {
         let shape = &cfg.shapes[u.shape_idx];
         let mut topo = shape.build(&cfg.model, cfg.cache);
         topo.schedule = u.schedule;
+        topo.feature_cache = u.feature_cache;
         if u.admission != AdmissionMode::Static {
             topo.calibrate();
         }
@@ -387,6 +410,7 @@ impl StudyGrid {
                 devices: shape.n_devices(),
                 policy,
                 schedule: u.schedule,
+                cache: u.feature_cache,
                 admission: u.admission,
                 metrics,
                 wall_s: t0.elapsed().as_secs_f64(),
@@ -445,7 +469,8 @@ mod tests {
     fn smoke_grid_covers_every_cell_and_accounts_for_every_request() {
         let cfg = StudyConfig::smoke(11);
         let n_cells = cfg.n_cells();
-        assert_eq!(n_cells, 2 * 2 * 3 * 2, "shapes x schedules x adm x rtr");
+        assert_eq!(n_cells, 2 * 2 * 2 * 3 * 2,
+                   "shapes x schedules x caches x adm x rtr");
         let r = StudyGrid::new(cfg).run();
         assert_eq!(r.cells.len(), n_cells);
         assert_eq!(r.shapes.len(), 2);
@@ -463,6 +488,7 @@ mod tests {
             assert!(r.baseline(&s.shape.name).is_some());
             assert_eq!(r.baseline(&s.shape.name).unwrap().schedule,
                        ScheduleSpec::Fixed);
+            assert!(r.baseline(&s.shape.name).unwrap().cache.is_off());
             assert!(r.best_goodput(&s.shape.name).is_some());
             assert_eq!(r.shape_cells(&s.shape.name).len(),
                        n_cells / r.shapes.len());
@@ -499,9 +525,11 @@ mod tests {
             let name = &s.shape.name;
             let policy = RoutePolicy::LeastOutstanding;
             let fixed = r.cell(name, policy, AdmissionMode::Static,
-                               ScheduleSpec::Fixed).unwrap();
+                               ScheduleSpec::Fixed,
+                               CachePolicySpec::Off).unwrap();
             let fast = r.cell(name, policy, AdmissionMode::Static,
-                              ScheduleSpec::slowfast_default()).unwrap();
+                              ScheduleSpec::slowfast_default(),
+                              CachePolicySpec::Off).unwrap();
             // the adaptive schedule must move the outcome: fewer
             // realized steps -> shorter horizon or fewer sheds
             assert!(fast.metrics.horizon_s != fixed.metrics.horizon_s
@@ -517,11 +545,14 @@ mod tests {
         for s in &r.shapes {
             for &policy in &r.cfg.policies {
                 for &schedule in &r.cfg.schedules {
+                    let cache = CachePolicySpec::Off;
                     let cal = r.cell(&s.shape.name, policy,
-                                     AdmissionMode::Calibrated, schedule)
+                                     AdmissionMode::Calibrated, schedule,
+                                     cache)
                         .expect("calibrated cell");
                     let rec = r.cell(&s.shape.name, policy,
-                                     AdmissionMode::Recalibrated, schedule)
+                                     AdmissionMode::Recalibrated, schedule,
+                                     cache)
                         .expect("recalibrated cell");
                     assert_eq!(rec.metrics.offered(), cal.metrics.offered(),
                                "both arms face the identical trace");
@@ -539,6 +570,38 @@ mod tests {
         }
         assert!(any_delta, "warm-up recalibration changed nothing — the \
                             replay arm is measuring nothing");
+    }
+
+    #[test]
+    fn cache_axis_changes_outcomes_on_every_shape() {
+        let r = StudyGrid::new(StudyConfig::smoke(5)).run();
+        for s in &r.shapes {
+            let name = &s.shape.name;
+            let policy = RoutePolicy::LeastOutstanding;
+            let off = r.cell(name, policy, AdmissionMode::Static,
+                             ScheduleSpec::Fixed,
+                             CachePolicySpec::Off).unwrap();
+            let warm = r.cell(name, policy, AdmissionMode::Static,
+                              ScheduleSpec::Fixed,
+                              CachePolicySpec::adaptive_default()).unwrap();
+            assert_eq!(off.metrics.offered(), warm.metrics.offered(),
+                       "both arms face the identical trace");
+            // the cached arm must move the outcome: cheaper batches ->
+            // shorter horizon, fewer sheds, or different tail latency
+            assert!(warm.metrics.horizon_s != off.metrics.horizon_s
+                    || warm.metrics.shed() != off.metrics.shed()
+                    || warm.metrics.ttft_p95().to_bits()
+                        != off.metrics.ttft_p95().to_bits(),
+                    "{name}: cache axis indistinguishable");
+            // and its exported observations record a warm hit rate
+            let h: Vec<f64> = warm.metrics.observations.iter()
+                .flat_map(|l| &l.observations)
+                .map(|o| o.cache_hit_rate)
+                .collect();
+            assert!(!h.is_empty());
+            assert!(h.iter().all(|&x| x > 0.0 && x < 1.0),
+                    "{name}: cached cells must export warm hit rates");
+        }
     }
 
     #[test]

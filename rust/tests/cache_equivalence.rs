@@ -1,0 +1,388 @@
+//! Cache-subsystem contracts (the differential gate that licenses the
+//! feature-cache engine integration):
+//!
+//! 1. `CachePolicySpec::Off` driven through the planner plumbing takes
+//!    exactly the pre-cache engine's warm/refine actions, never serves
+//!    a step from the cache, and records nothing — on random block
+//!    geometries and commit streams. `Interval { 1, 1 }` (refresh
+//!    everything at every opportunity) takes the identical action
+//!    stream, so the whole cached control path collapses to the
+//!    baseline when the refresh intervals are degenerate.
+//! 2. The same collapse holds end-to-end on the real runtime path
+//!    (when AOT artifacts are built): an `Off` engine reproduces the
+//!    default engine's tokens and `StepTrace` bit-exactly with all-zero
+//!    `CacheStats`, and an `Interval { 1, 1 }` engine reproduces the
+//!    `Off` tokens.
+//! 3. Billed latency: `AnalyticalSim::run_cached` under the off plan is
+//!    bit-identical to `run_scheduled` on random workloads; a
+//!    calibrated `Off` profile and a degenerate-interval profile price
+//!    every cell bit-identically; a calibrated off fleet and a
+//!    degenerate-interval fleet serve a trace bit-identically.
+//! 4. Properties: `hits + misses == lookups` under random policies and
+//!    drive patterns; the hit rate is monotone in both refresh
+//!    intervals; the v3 curve text format is emit → parse → emit
+//!    byte-identical.
+
+use dart::cache::{expected_plan, simulate_cache_block, CacheAction,
+                  CachePlan, CachePolicySpec, CacheStats, EXPECTATION_SEEDS};
+use dart::calib::{CalibConfig, Calibrator, CurvePoint, LatencyCurve};
+use dart::cluster::{ClusterTopology, FleetSim, RoutePolicy, SloConfig,
+                    TraceRequest};
+use dart::config::{CacheMode, HwConfig, ModelArch, Workload};
+use dart::coordinator::{EngineConfig, GenerationEngine};
+use dart::runtime::{artifacts_dir, Executor};
+use dart::sim::analytical::{AnalyticalSim, PrecisionConfig};
+use dart::util::SplitMix64;
+
+/// The pre-cache engine's per-step decision: the warm (block-start)
+/// step runs the full forward, every refine step recomputes response
+/// features. `CacheMode::None` recomputes everything each step, which
+/// the planner models as `baseline_warm = true` throughout.
+fn baseline_action(t: usize, kv_none: bool) -> CacheAction {
+    if t == 0 || kv_none {
+        CacheAction::Full
+    } else {
+        CacheAction::Refresh
+    }
+}
+
+#[test]
+fn off_and_degenerate_interval_take_baseline_actions_on_random_drives() {
+    dart::stats::prop_check("off == baseline action stream", 64, |rng| {
+        let n_blocks = 1 + (rng.next_u64() % 8) as usize;
+        let steps = 1 + (rng.next_u64() % 24) as usize;
+        let block_len = 1 + (rng.next_u64() % 96) as usize;
+        let kv_none = rng.next_u64() % 4 == 0;
+        let commit_seed = rng.next_u64();
+        (n_blocks, steps, block_len, kv_none, commit_seed)
+    }, |&(n_blocks, steps, block_len, kv_none, commit_seed)| {
+        let mut off = CachePolicySpec::Off.build(block_len);
+        let mut degen = CachePolicySpec::Interval {
+            prompt_every: 1, response_every: 1 }.build(block_len);
+        let mut commits = SplitMix64::new(commit_seed);
+        for blk in 0..n_blocks {
+            for t in 0..steps {
+                let warm = t == 0 || kv_none;
+                let can_refresh_warm = !kv_none && blk > 0;
+                let expect = baseline_action(t, kv_none);
+                let a = off.step(blk, t, warm, can_refresh_warm);
+                if a != expect {
+                    return Err(format!(
+                        "off diverged at blk {blk} t {t}: {a:?}"));
+                }
+                let b = degen.step(blk, t, warm, can_refresh_warm);
+                if b != expect {
+                    return Err(format!(
+                        "interval 1:1 diverged at blk {blk} t {t}: {b:?}"));
+                }
+                let k = (commits.next_u64() % 5) as usize;
+                off.note_commits(k);
+                degen.note_commits(k);
+                if b != CacheAction::Reuse {
+                    degen.note_refresh_bytes(2048);
+                }
+            }
+        }
+        // Off records nothing at all; the degenerate interval consults
+        // the cache every step and misses every time
+        if off.stats != CacheStats::default() {
+            return Err(format!("off recorded {:?}", off.stats));
+        }
+        if degen.stats.hits != 0
+            || degen.stats.misses != degen.stats.lookups
+            || degen.stats.lookups != (n_blocks * steps) as u64
+        {
+            return Err(format!("degenerate interval stats {:?}",
+                               degen.stats));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn off_engine_is_bit_identical_to_the_precache_engine() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("artifacts not built; skipping");
+        return;
+    };
+    let gen = |feature_cache| {
+        let ex = Executor::load(&dir).unwrap();
+        let g = ex.manifest.geometry;
+        let mut eng = GenerationEngine::new(ex, EngineConfig {
+            feature_cache,
+            ..EngineConfig::default()
+        });
+        let mut rng = SplitMix64::new(77);
+        let prompts: Vec<Vec<i32>> = (0..2).map(|_| {
+            (0..g.prompt_len).map(|_| rng.range(4, 52) as i32).collect()
+        }).collect();
+        eng.generate(&prompts).unwrap()
+    };
+    // the default config *is* Off — the differential is that an
+    // explicitly-Off engine matches it in every observable, so the
+    // planner sitting on the step loop is invisible when disabled
+    let base = gen(CachePolicySpec::default());
+    let off = gen(CachePolicySpec::Off);
+    assert_eq!(off.tokens, base.tokens);
+    assert_eq!(off.step_trace, base.step_trace);
+    assert_eq!(off.steps, base.steps);
+    assert_eq!(off.kv_packed_bytes, base.kv_packed_bytes);
+    assert_eq!(off.model_s.to_bits(), base.model_s.to_bits());
+    assert_eq!(off.sampling_s.to_bits(), base.sampling_s.to_bits());
+    assert_eq!(off.cache_stats, CacheStats::default());
+
+    // refresh-everything takes the same actions, so the same tokens
+    let degen = gen(CachePolicySpec::Interval {
+        prompt_every: 1, response_every: 1 });
+    assert_eq!(degen.tokens, base.tokens);
+    assert_eq!(degen.step_trace, base.step_trace);
+    assert_eq!(degen.cache_stats.hits, 0);
+    assert_eq!(degen.cache_stats.misses, degen.cache_stats.lookups);
+    assert!(degen.cache_stats.lookups > 0);
+
+    // and a real caching policy actually serves steps from the cache
+    // while keeping the accounting invariant
+    let warm = gen(CachePolicySpec::adaptive_default());
+    let s = warm.cache_stats;
+    assert!(s.hits > 0, "adaptive engine never hit: {s:?}");
+    assert_eq!(s.hits + s.misses, s.lookups);
+    assert!(s.refresh_bytes > 0);
+}
+
+#[test]
+fn off_billing_is_bit_identical_on_random_workloads() {
+    let sim = AnalyticalSim::new(HwConfig::dart_default(),
+                                 PrecisionConfig::dart_full_quant());
+    dart::stats::prop_check("run_cached off == run_scheduled", 32, |rng| {
+        let cache = CacheMode::ALL[(rng.next_u64() % 3) as usize];
+        let batch = 1 + (rng.next_u64() % 16);
+        let block_len = 16 << (rng.next_u64() % 3);
+        let n_blocks = 1 + (rng.next_u64() % 6);
+        let prompt_len = 32 + (rng.next_u64() % 256);
+        let steps_per_block = 1 + (rng.next_u64() % 16);
+        let steps = 1.0 + rng.next_f64() * steps_per_block as f64;
+        (cache, batch, block_len, n_blocks, prompt_len, steps_per_block,
+         steps)
+    }, |&(cache, batch, block_len, n_blocks, prompt_len, steps_per_block,
+          steps)| {
+        let w = Workload {
+            model: ModelArch::llada_8b(),
+            batch,
+            prompt_len,
+            gen_len: block_len * n_blocks,
+            block_len,
+            steps_per_block,
+            cache,
+        };
+        let base = sim.run_scheduled(&w, steps);
+        let off = sim.run_cached(&w, steps, &CachePlan::off());
+        for (name, a, b) in [
+            ("total", base.total_s, off.total_s),
+            ("model", base.model.seconds, off.model.seconds),
+            ("sampling", base.sampling.seconds, off.sampling.seconds),
+            ("hbm", base.model.hbm_bytes, off.model.hbm_bytes),
+            ("energy", base.energy.total_j, off.energy.total_j),
+        ] {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("{name} drifted: {a} vs {b}"));
+            }
+        }
+        // the degenerate interval prices through the identical plan
+        let degen = expected_plan(
+            &CachePolicySpec::Interval { prompt_every: 1,
+                                         response_every: 1 },
+            w.block_len as usize, w.steps_per_block as usize,
+            n_blocks as usize);
+        if degen != CachePlan::off() {
+            return Err(format!("interval 1:1 plan {degen:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn off_profile_matches_degenerate_interval_profile_bit_exactly() {
+    let mk = |feature_cache| {
+        let mut cfg = CalibConfig::serving_default(&[1, 2, 8]);
+        cfg.samples_per_cell = 3;
+        cfg.feature_cache = feature_cache;
+        Calibrator::new(HwConfig::dart_default(), ModelArch::llada_8b(),
+                        CacheMode::Dual, cfg).profile("npu0")
+    };
+    let off = mk(CachePolicySpec::Off);
+    let degen = mk(CachePolicySpec::Interval {
+        prompt_every: 1, response_every: 1 });
+    // both profile through the {1.0, 1.0} plan at hit rate exactly 0.0:
+    // the persisted artifacts are byte-identical
+    assert_eq!(off.cache_hit_rate.to_bits(), 0.0f64.to_bits());
+    assert_eq!(off.to_text(), degen.to_text());
+    // while a real policy records a warm hit rate and prices below
+    let warm = mk(CachePolicySpec::adaptive_default());
+    assert!(warm.cache_hit_rate > 0.0 && warm.cache_hit_rate < 1.0);
+    for (a, b) in warm.points.iter().zip(&off.points) {
+        assert!(a.p50_total_s < b.p50_total_s,
+                "variant {} bucket {}: warm {} vs off {}", a.variant,
+                a.bucket_lo, a.p50_total_s, b.p50_total_s);
+    }
+}
+
+#[test]
+fn off_fleet_serves_bit_identically_to_degenerate_interval_fleet() {
+    // end-to-end: same trace, calibrated curves, admission on — the
+    // degenerate-interval topology must reproduce the off fleet's
+    // every externally observable number bit-for-bit (hit rate 0.0,
+    // plan {1.0, 1.0}, warm/cold scales exactly 1.0, phase 0)
+    let trace: Vec<TraceRequest> = {
+        let mut rng = SplitMix64::new(0xF1EE7);
+        (0..96u64).map(|i| TraceRequest {
+            id: i,
+            arrival_s: i as f64 * 0.05,
+            prompt_len: (64 + rng.next_u64() % 192) as usize,
+            gen_len: (64 * (1 + rng.next_u64() % 5)) as usize,
+        }).collect()
+    };
+    let run = |feature_cache| {
+        let mut topo = ClusterTopology::homogeneous(
+            3, HwConfig::dart_default(), ModelArch::llada_8b(),
+            CacheMode::Dual);
+        topo.feature_cache = feature_cache;
+        topo.calibrate();
+        let slo = SloConfig::auto(&topo);
+        FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo).run(&trace)
+    };
+    let off = run(CachePolicySpec::Off);
+    let degen = run(CachePolicySpec::Interval {
+        prompt_every: 1, response_every: 1 });
+    assert_eq!(off.completed, degen.completed);
+    assert_eq!(off.admitted, degen.admitted);
+    assert_eq!(off.shed(), degen.shed());
+    assert_eq!(off.tokens, degen.tokens);
+    assert_eq!(off.horizon_s.to_bits(), degen.horizon_s.to_bits());
+    assert_eq!(off.goodput_tps().to_bits(), degen.goodput_tps().to_bits());
+    for q in [0.5, 0.95] {
+        assert_eq!(off.ttft.quantile(q).unwrap_or(-1.0).to_bits(),
+                   degen.ttft.quantile(q).unwrap_or(-1.0).to_bits());
+    }
+    // the observation streams agree row-for-row, cache dimension
+    // included (both cold: 0.0)
+    for (a, b) in off.observations.iter().zip(&degen.observations) {
+        assert_eq!(a.observations.len(), b.observations.len());
+        for (x, y) in a.observations.iter().zip(&b.observations) {
+            assert_eq!(x.total_s.to_bits(), y.total_s.to_bits());
+            assert_eq!(x.cache_hit_rate.to_bits(), 0.0f64.to_bits());
+            assert_eq!(y.cache_hit_rate.to_bits(), 0.0f64.to_bits());
+        }
+    }
+}
+
+#[test]
+fn accounting_invariant_under_the_synthetic_drift_process() {
+    // hits + misses == lookups for every policy driven by the S10
+    // synthetic commit process itself (the pricing path), not just the
+    // engine's drive pattern
+    dart::stats::prop_check("simulated blocks account", 48, |rng| {
+        let spec = match rng.next_u64() % 3 {
+            0 => CachePolicySpec::interval_default(),
+            1 => CachePolicySpec::Interval {
+                prompt_every: 1 + (rng.next_u64() % 5) as usize,
+                response_every: 1 + (rng.next_u64() % 5) as usize,
+            },
+            _ => CachePolicySpec::Adaptive {
+                tau: 0.1 + 0.8 * rng.next_f64(),
+                max_interval: 1 + (rng.next_u64() % 10) as usize,
+            },
+        };
+        let n_blocks = 1 + (rng.next_u64() % 5) as usize;
+        let steps = 1 + (rng.next_u64() % 18) as usize;
+        let block_len = 8 + (rng.next_u64() % 64) as usize;
+        let seed = EXPECTATION_SEEDS[(rng.next_u64() % 4) as usize];
+        (spec, n_blocks, steps, block_len, seed)
+    }, |&(spec, n_blocks, steps, block_len, seed)| {
+        let mut planner = spec.build(block_len);
+        for blk in 0..n_blocks {
+            let t = simulate_cache_block(&mut planner, block_len, steps,
+                                         blk, blk > 0, seed);
+            if t.refreshes + t.reuses != steps - 1 {
+                return Err(format!(
+                    "blk {blk}: {} refreshes + {} reuses != {} refines",
+                    t.refreshes, t.reuses, steps - 1));
+            }
+        }
+        let s = planner.stats;
+        if s.hits + s.misses != s.lookups {
+            return Err(format!("{} + {} != {}", s.hits, s.misses,
+                               s.lookups));
+        }
+        if s.lookups != (n_blocks * steps) as u64 {
+            return Err(format!("lookups {} != {}", s.lookups,
+                               n_blocks * steps));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn expected_hit_rate_is_monotone_in_refresh_intervals() {
+    // the pricing expectation (not just the planner drive) is monotone:
+    // longer refresh intervals can only raise the hit rate
+    let h = |p, r| CachePolicySpec::Interval {
+        prompt_every: p, response_every: r }.serving_hit_rate(64, 16);
+    for p in 1..6 {
+        let mut prev = -1.0;
+        for r in 1..12 {
+            let now = h(p, r);
+            assert!(now >= prev,
+                    "hit rate fell {prev} -> {now} at {p}:{r}");
+            assert!((0.0..=1.0).contains(&now));
+            prev = now;
+        }
+    }
+    for r in 1..6 {
+        let mut prev = -1.0;
+        for p in 1..12 {
+            let now = h(p, r);
+            assert!(now >= prev, "prompt dimension fell at {p}:{r}");
+            prev = now;
+        }
+    }
+    assert_eq!(h(1, 1).to_bits(), 0.0f64.to_bits());
+}
+
+#[test]
+fn curve_v3_text_is_emit_parse_emit_byte_identical() {
+    dart::stats::prop_check("v3 text fixed point", 32, |rng| {
+        let n = 1 + (rng.next_u64() % 6) as usize;
+        let points: Vec<CurvePoint> = (0..n).map(|i| {
+            let lo = 64 * (i as u64 + 1);
+            CurvePoint {
+                variant: 1 << (rng.next_u64() % 5),
+                bucket_lo: lo,
+                bucket_hi: lo + 64 + rng.next_u64() % 512,
+                gen_tokens: 64 + rng.next_u64() % 512,
+                p50_total_s: rng.next_f64() * 0.2,
+                p95_total_s: rng.next_f64() * 0.4,
+                p50_first_s: rng.next_f64() * 0.02,
+                p95_first_s: rng.next_f64() * 0.04,
+                samples: 1 + (rng.next_u64() % 20) as u32,
+            }
+        }).collect();
+        let cap = 1 + rng.next_u64() % 32;
+        let expected = 1.0 + rng.next_f64() * cap as f64;
+        let hit = rng.next_f64();
+        (points, cap, expected, hit)
+    }, |(points, cap, expected, hit)| {
+        let curve = LatencyCurve::new("npu-prop", points.clone())
+            .with_schedule(*cap, *expected)
+            .with_cache(*hit);
+        let text = curve.to_text();
+        let back = LatencyCurve::from_text(&text)
+            .map_err(|e| format!("parse failed: {e}"))?;
+        if back.to_text() != text {
+            return Err("emit -> parse -> emit not a fixed point".into());
+        }
+        if back.cache_hit_rate.to_bits() != curve.cache_hit_rate.to_bits() {
+            return Err("cache dimension drifted through text".into());
+        }
+        Ok(())
+    });
+}

@@ -4,6 +4,7 @@
 //! trace-file round-trip (the replay format is the reproducibility
 //! contract for scheduling experiments).
 
+use dart::cache::CachePolicySpec;
 use dart::cluster::{generate_trace, trace_from_text, trace_to_text,
                     Arrival, ClusterTopology, Diurnal, FleetMetrics,
                     FleetSim, RoutePolicy, SloConfig, TraceSpec};
@@ -119,11 +120,17 @@ fn parallel_study_grid_is_bit_identical_to_serial() {
         assert_eq!(p.shape, s.shape);
         assert_eq!(p.policy, s.policy);
         assert_eq!(p.schedule, s.schedule);
+        assert_eq!(p.cache, s.cache);
         assert_eq!(p.admission, s.admission);
-        let ctx = format!("{}/{:?}/{}/{}", p.shape, p.policy,
-                          p.schedule.name(), p.admission_label());
+        let ctx = format!("{}/{:?}/{}/{}/{}", p.shape, p.policy,
+                          p.schedule.name(), p.cache.name(),
+                          p.admission_label());
         assert_metrics_identical(&p.metrics, &s.metrics, &ctx);
     }
+    // the smoke grid carries the feature-cache axis: both arms must
+    // appear, so the cells above pin the cached cells bit-for-bit too
+    assert!(parallel.cells.iter().any(|c| c.cache.is_off()));
+    assert!(parallel.cells.iter().any(|c| !c.cache.is_off()));
     for (p, s) in parallel.shapes.iter().zip(&serial.shapes) {
         assert_eq!(p.capacity_tps.to_bits(), s.capacity_tps.to_bits());
         assert_eq!(p.offered_rps.to_bits(), s.offered_rps.to_bits());
@@ -164,6 +171,45 @@ fn recalibrated_fleet_serves_deterministically() {
     assert_eq!(ca, cb, "recalibrated curves drifted across runs");
     assert_metrics_identical(&ma, &mb, "recalibrated re-serve");
     assert!(ma.completed + ma.shed() == 40, "replay-loop accounting");
+}
+
+#[test]
+fn cached_fleet_serves_deterministically() {
+    // the feature-cached serving path (warm/cold curve pricing +
+    // refresh-phase-aware batching) across a trace round-trip: two runs
+    // are bit-identical, and the observation logs — whose v2 rows carry
+    // the realized cache hit rate, compared at full precision by
+    // `assert_metrics_identical` — are part of the contract
+    let spec = TraceSpec::chat(44, Arrival::Poisson { rps: 250.0 }, 41);
+    let trace = generate_trace(&spec);
+    let replayed = trace_from_text(&trace_to_text(&trace)).unwrap();
+    for cache in [CachePolicySpec::interval_default(),
+                  CachePolicySpec::adaptive_default()] {
+        let run = |t: &[dart::cluster::TraceRequest]| {
+            let mut topo = ClusterTopology::homogeneous(
+                2, dart::config::HwConfig::dart_default(),
+                ModelArch::llada_8b(), CacheMode::Dual);
+            topo.feature_cache = cache;
+            topo.calibrate();
+            let slo = SloConfig::auto(&topo);
+            FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo).run(t)
+        };
+        let name = cache.name();
+        let a = run(&trace);
+        let b = run(&trace);
+        assert_metrics_identical(&a, &b, &format!("{name} rerun"));
+        assert!(a.completed + a.shed() == 44, "{name} accounting");
+        // every recorded batch carries the policy's warm hit rate
+        let h = cache.serving_hit_rate(64, 16);
+        assert!(h > 0.0 && h < 1.0, "{name} hit rate {h}");
+        assert!(a.observations.iter()
+                    .flat_map(|l| &l.observations)
+                    .all(|o| o.cache_hit_rate.to_bits() == h.to_bits()),
+                "{name} observations must record the serving hit rate");
+        let c1 = run(&replayed);
+        let c2 = run(&replayed);
+        assert_metrics_identical(&c1, &c2, &format!("{name} replay rerun"));
+    }
 }
 
 #[test]

@@ -86,6 +86,10 @@ if [[ "${1:-}" == "--smoke" ]]; then
     cargo bench --bench schedule_sweep -- --smoke
     echo "== smoke: Fixed-schedule equivalence (seed-engine differential) =="
     cargo test -q --test schedule_equivalence
+    echo "== smoke: cache-equivalence differential gate (Off == pre-cache, bit-exact) =="
+    cargo test -q --test cache_equivalence
+    echo "== smoke: cache_sweep bench (reduced trace) =="
+    cargo bench --bench cache_sweep -- --smoke
     echo "== smoke: recalibration fixed-point + convergence gate =="
     cargo test -q --test recalib_convergence
     echo "== smoke: recalib_loop bench (reduced trace) =="
@@ -95,6 +99,9 @@ if [[ "${1:-}" == "--smoke" ]]; then
     echo "== smoke: serve-cluster slowfast schedule, calibrated =="
     cargo run --release -- serve-cluster --devices 2 --requests 32 \
         --calibrated --schedule slowfast
+    echo "== smoke: serve-cluster adaptive feature cache, calibrated =="
+    cargo run --release -- serve-cluster --devices 2 --requests 32 \
+        --calibrated --cache dual,adaptive
     echo "== smoke: serve-cluster replay loop (warm-up -> recalibrate -> re-serve) =="
     cargo run --release -- serve-cluster --devices 2 --requests 32 \
         --recalibrate
