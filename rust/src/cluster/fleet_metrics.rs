@@ -3,7 +3,8 @@
 //! utilization, and padding-waste tokens — the fleet analogue of
 //! [`crate::coordinator::Metrics`], rendered through [`crate::report`].
 
-use crate::replay::ObservationLog;
+use crate::memmodel::fmt_bytes;
+use crate::replay::{Observation, ObservationLog};
 use crate::report::{self, Table};
 use crate::stats::{fmt_time, Reservoir};
 
@@ -16,6 +17,14 @@ pub struct DeviceStats {
     pub padded_lanes: u64,
     pub busy_s: f64,
     pub tokens: u64,
+    /// largest [`crate::memmodel::MemoryPlan`] total any executed batch
+    /// held resident on this device (bytes) — accounted on every run,
+    /// capacity-constrained or not
+    pub peak_resident_bytes: u64,
+    /// residency × duration integral (byte-seconds of executed
+    /// batches): divided by the horizon this is the device's
+    /// time-weighted mean residency
+    pub mem_byte_s: f64,
 }
 
 /// Why a request never produced tokens.
@@ -30,6 +39,11 @@ pub enum ShedReason {
     /// candidates remained — a scheduling-policy shed, not a deadline
     /// or backlog one
     RetryExhausted,
+    /// the request cannot fit any candidate device's memory capacity
+    /// even as a single-lane batch at the smallest compiled variant —
+    /// a physical infeasibility, not a load condition
+    /// (docs/ARCHITECTURE.md S11)
+    Memory,
 }
 
 #[derive(Clone, Debug)]
@@ -45,6 +59,20 @@ pub struct FleetMetrics {
     pub shed_slo: u64,
     pub shed_capacity: u64,
     pub shed_retry: u64,
+    /// sheds from [`ShedReason::Memory`] — requests no candidate device
+    /// could hold even as a single-lane batch
+    pub shed_memory: u64,
+    /// flushes the per-device memory budget forced below the batcher's
+    /// unconstrained plan (summed [`crate::coordinator::Batcher::
+    /// mem_downshifts`] across devices); 0 on unconstrained fleets
+    pub mem_downshifts: u64,
+    /// observations offered to the per-device logs (admitted batches)
+    pub obs_seen: u64,
+    /// observations dropped because a device log hit
+    /// [`crate::coordinator::Metrics::OBS_CAP`] — surfaced, never
+    /// silent (the latency reservoirs already surface their own
+    /// saturation)
+    pub obs_truncated: u64,
     /// placement attempts beyond the first (router fall-through)
     pub retries: u64,
     pub slo_met: u64,
@@ -77,6 +105,10 @@ impl FleetMetrics {
             shed_slo: 0,
             shed_capacity: 0,
             shed_retry: 0,
+            shed_memory: 0,
+            mem_downshifts: 0,
+            obs_seen: 0,
+            obs_truncated: 0,
             retries: 0,
             slo_met: 0,
             tokens: 0,
@@ -117,11 +149,31 @@ impl FleetMetrics {
             ShedReason::SloPredicted => self.shed_slo += 1,
             ShedReason::Capacity => self.shed_capacity += 1,
             ShedReason::RetryExhausted => self.shed_retry += 1,
+            ShedReason::Memory => self.shed_memory += 1,
+        }
+    }
+
+    /// Append an executed-batch observation to a device's log, bounded
+    /// at the coordinator's [`crate::coordinator::Metrics::OBS_CAP`].
+    /// The fleet log keeps the *head* of the stream (deterministic and
+    /// replay-stable — the recalibrator wants contiguous serving
+    /// history, unlike the coordinator's whole-stream reservoir);
+    /// overflow increments [`Self::obs_truncated`] instead of growing
+    /// unbounded or dropping silently.
+    pub fn record_fleet_observation(&mut self, device: usize,
+                                    obs: Observation) {
+        self.obs_seen += 1;
+        let log = &mut self.observations[device];
+        if log.observations.len() < crate::coordinator::Metrics::OBS_CAP {
+            log.observations.push(obs);
+        } else {
+            self.obs_truncated += 1;
         }
     }
 
     pub fn shed(&self) -> u64 {
         self.shed_slo + self.shed_capacity + self.shed_retry
+            + self.shed_memory
     }
 
     pub fn offered(&self) -> u64 {
@@ -168,6 +220,28 @@ impl FleetMetrics {
         self.shed_retry as f64 / (self.offered() as f64).max(1.0)
     }
 
+    pub fn shed_memory_frac(&self) -> f64 {
+        self.shed_memory as f64 / (self.offered() as f64).max(1.0)
+    }
+
+    /// Largest executed-batch residency across the fleet (bytes).
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.devices.iter().map(|d| d.peak_resident_bytes).max()
+            .unwrap_or(0)
+    }
+
+    /// Time-weighted mean residency over the run horizon, averaged
+    /// across devices (byte-seconds of executed batches / horizon /
+    /// n_devices): idle time counts as zero residency, so a mostly-idle
+    /// fleet reports a low mean even if its peaks were high.
+    pub fn mean_resident_bytes(&self) -> f64 {
+        if self.devices.is_empty() {
+            return 0.0;
+        }
+        self.devices.iter().map(|d| d.mem_byte_s).sum::<f64>()
+            / self.horizon_s.max(1e-9) / self.devices.len() as f64
+    }
+
     /// p95 TTFT over completed requests (0.0 when nothing completed) —
     /// the study renderer's headline tail number.
     pub fn ttft_p95(&self) -> f64 {
@@ -205,9 +279,10 @@ impl FleetMetrics {
         let mut out = String::new();
         out.push_str(&format!(
             "offered {}  completed {}  shed {} (slo {} / capacity {} / \
-             retry {})  retries {}\n",
+             retry {} / memory {})  retries {}\n",
             self.offered(), self.completed, self.shed(), self.shed_slo,
-            self.shed_capacity, self.shed_retry, self.retries));
+            self.shed_capacity, self.shed_retry, self.shed_memory,
+            self.retries));
         out.push_str(&format!(
             "horizon {:.2}s  throughput {:.1} tok/s  goodput {:.1} tok/s \
              ({:.1} req/s)  SLO attainment {}\n",
@@ -222,6 +297,20 @@ impl FleetMetrics {
             "padding waste {} (lane tokens {}, ragged tokens {})\n",
             report::pct(self.padding_waste_frac()),
             self.padded_lane_tokens, self.ragged_pad_tokens));
+        if self.peak_resident_bytes() > 0 {
+            out.push_str(&format!(
+                "residency peak {}  mean {}  mem downshifts {}\n",
+                fmt_bytes(self.peak_resident_bytes()),
+                fmt_bytes(self.mean_resident_bytes().round() as u64),
+                self.mem_downshifts));
+        }
+        if self.obs_truncated > 0 {
+            out.push_str(&format!(
+                "observation log truncated: kept {} of {} \
+                 (per-device cap {})\n",
+                self.obs_seen - self.obs_truncated, self.obs_seen,
+                crate::coordinator::Metrics::OBS_CAP));
+        }
 
         let mut lat = Table::new("fleet latency",
                                  &["metric", "p50", "p95", "p99", "max"]);
@@ -238,12 +327,13 @@ impl FleetMetrics {
         let mut dev = Table::new(
             "per-device",
             &["device", "batches", "requests", "padded lanes", "tokens",
-              "busy(s)", "utilization"]);
+              "busy(s)", "utilization", "peak resident"]);
         for (i, d) in self.devices.iter().enumerate() {
             dev.row(&[d.name.clone(), d.batches.to_string(),
                       d.requests.to_string(), d.padded_lanes.to_string(),
                       d.tokens.to_string(), report::f2(d.busy_s),
-                      report::pct(self.utilization(i))]);
+                      report::pct(self.utilization(i)),
+                      fmt_bytes(d.peak_resident_bytes)]);
         }
         out.push('\n');
         out.push_str(&dev.render());
@@ -289,19 +379,71 @@ mod tests {
     fn shed_reasons_attribute_separately() {
         let mut m = sample();
         m.record_shed(ShedReason::RetryExhausted);
+        m.record_shed(ShedReason::Memory);
         assert_eq!(m.shed_slo, 1);
         assert_eq!(m.shed_capacity, 1);
         assert_eq!(m.shed_retry, 1);
-        assert_eq!(m.shed(), 3);
-        assert_eq!(m.offered(), 5);
-        assert!((m.shed_slo_frac() - 0.2).abs() < 1e-9);
-        assert!((m.shed_capacity_frac() - 0.2).abs() < 1e-9);
-        assert!((m.shed_retry_frac() - 0.2).abs() < 1e-9);
+        assert_eq!(m.shed_memory, 1);
+        assert_eq!(m.shed(), 4);
+        assert_eq!(m.offered(), 6);
+        assert!((m.shed_slo_frac() - 1.0 / 6.0).abs() < 1e-9);
+        assert!((m.shed_capacity_frac() - 1.0 / 6.0).abs() < 1e-9);
+        assert!((m.shed_retry_frac() - 1.0 / 6.0).abs() < 1e-9);
+        assert!((m.shed_memory_frac() - 1.0 / 6.0).abs() < 1e-9);
         // the per-reason fracs always sum to the rollup
         assert!((m.shed_slo_frac() + m.shed_capacity_frac()
-                 + m.shed_retry_frac() - m.shed_frac()).abs() < 1e-12);
+                 + m.shed_retry_frac() + m.shed_memory_frac()
+                 - m.shed_frac()).abs() < 1e-12);
         let r = m.report(None);
-        assert!(r.contains("shed 3 (slo 1 / capacity 1 / retry 1)"), "{r}");
+        assert!(r.contains(
+            "shed 4 (slo 1 / capacity 1 / retry 1 / memory 1)"), "{r}");
+    }
+
+    #[test]
+    fn residency_rolls_up_peak_and_time_weighted_mean() {
+        let mut m = sample(); // horizon 10 s, two devices
+        m.devices[0].peak_resident_bytes = 6 << 30;
+        m.devices[0].mem_byte_s = (4u64 << 30) as f64 * 10.0;
+        m.devices[1].peak_resident_bytes = 2 << 30;
+        m.devices[1].mem_byte_s = (2u64 << 30) as f64 * 5.0;
+        assert_eq!(m.peak_resident_bytes(), 6 << 30);
+        // ((4 GiB·10 s) + (2 GiB·5 s)) / 10 s / 2 devices = 2.5 GiB
+        let mean = m.mean_resident_bytes();
+        assert!((mean - (2.5 * (1u64 << 30) as f64)).abs() < 1.0,
+                "mean {mean}");
+        let r = m.report(None);
+        assert!(r.contains("residency peak 6.0 GiB"), "{r}");
+        assert!(r.contains("mean 2.5 GiB"), "{r}");
+        // without any residency the line is absent (pre-memmodel shape)
+        let empty = FleetMetrics::new(vec!["x".into()]);
+        assert!(!empty.report(None).contains("residency"),
+                "{}", empty.report(None));
+    }
+
+    #[test]
+    fn observation_log_truncation_is_counted_not_silent() {
+        let cap = crate::coordinator::Metrics::OBS_CAP;
+        let mut m = FleetMetrics::new(vec!["npu0".into()]);
+        let obs = Observation {
+            variant: 4, seq_len: 384, gen_tokens: 256, total_s: 1.0,
+            first_s: 0.25, realized_steps: 16.0, cache_hit_rate: 0.0,
+            peak_bytes: 1 << 30,
+        };
+        for _ in 0..cap + 10 {
+            m.record_fleet_observation(0, obs);
+        }
+        assert_eq!(m.observations[0].observations.len(), cap);
+        assert_eq!(m.obs_seen, (cap + 10) as u64);
+        assert_eq!(m.obs_truncated, 10);
+        let r = m.report(None);
+        assert!(r.contains("observation log truncated"), "{r}");
+        // under the cap nothing is reported and nothing is dropped
+        let mut small = FleetMetrics::new(vec!["npu0".into()]);
+        for _ in 0..16 {
+            small.record_fleet_observation(0, obs);
+        }
+        assert_eq!(small.obs_truncated, 0);
+        assert!(!small.report(None).contains("truncated"));
     }
 
     #[test]

@@ -152,6 +152,12 @@ pub(crate) struct ServiceModel {
     pub tokens_per_s: f64,
     /// measured batch-variant latency curve, when calibrated
     curve: Option<LatencyCurve>,
+    /// residency pricer for this device (model × KV mode ×
+    /// feature-cache policy): every executed batch is priced through it
+    /// (observation `peak_bytes`, device residency accounting), and a
+    /// finite [`DeviceSpec::mem_bytes`] makes admission and flush
+    /// planning consult it (docs/ARCHITECTURE.md S11)
+    pub(crate) mem: crate::memmodel::MemModel,
 }
 
 impl ServiceModel {
@@ -189,6 +195,9 @@ impl ServiceModel {
             memo: HashMap::new(),
             tokens_per_s: 1.0,
             curve: spec.curve.clone(),
+            mem: crate::memmodel::MemModel::new(
+                topo.model.clone(), spec.cache,
+                topo.feature_cache.clone(), topo.block_len as usize),
         };
         let biggest = *spec.batch_variants.iter().max().unwrap_or(&1);
         let gen = (4 * topo.block_len) as usize;
@@ -262,6 +271,10 @@ struct SimDevice {
     svc: ServiceModel,
     busy_until: f64,
     busy_s: f64,
+    /// device memory capacity ([`DeviceSpec::mem_bytes`]): `None` is
+    /// unconstrained — bit-identical to the pre-memmodel scheduler
+    /// (the `rust/tests/mem_pressure.rs` differential gate)
+    mem_cap: Option<u64>,
 }
 
 /// A routed request waiting in a device queue.
@@ -303,11 +316,19 @@ impl SimDevice {
             capacity: spec.queue_capacity,
             policy,
         };
+        let svc = ServiceModel::new(spec, topo);
+        let mut batcher = Batcher::new(bcfg);
+        // a finite capacity arms the batcher's flush-time memory clamp
+        // (largest prefix + variant whose MemoryPlan fits); None leaves
+        // the batcher exactly as before
+        batcher.mem = spec.mem_bytes
+            .map(|cap| crate::memmodel::MemBudget::new(cap, svc.mem.clone()));
         SimDevice {
-            batcher: Batcher::new(bcfg),
-            svc: ServiceModel::new(spec, topo),
+            batcher,
+            svc,
             busy_until: 0.0,
             busy_s: 0.0,
+            mem_cap: spec.mem_bytes,
         }
     }
 
@@ -431,6 +452,7 @@ impl FleetSim {
         metrics.horizon_s = horizon;
         for (di, d) in devices.iter().enumerate() {
             metrics.devices[di].busy_s = d.busy_s;
+            metrics.mem_downshifts += d.batcher.mem_downshifts;
         }
         rec.end(serve_span, horizon);
         metrics
@@ -462,6 +484,7 @@ impl FleetSim {
                 .max(1));
 
         let mut saw_capacity_reject = false;
+        let mut saw_memory_reject = false;
         for (attempt, &di) in order.iter()
             .take(self.slo.max_retries + 1).enumerate()
         {
@@ -470,6 +493,21 @@ impl FleetSim {
                 rec.count("fleet.retries", 1.0);
             }
             let d = &mut devices[di];
+            // memory feasibility is physical, not an SLO: it applies
+            // even in the admit-everything measurement mode. A request
+            // that cannot fit this device even as a single-lane batch
+            // at the smallest compiled variant can never execute here —
+            // admitting it would be the OOM the memmodel exists to
+            // prevent (the batcher clamp handles everything that fits
+            // solo but not batched).
+            if let Some(cap) = d.mem_cap {
+                let smallest = *d.batcher.cfg.variants.first().unwrap();
+                let resident = (req.prompt_len + req.gen_len) as u64;
+                if !d.svc.mem.fits(smallest, resident, cap) {
+                    saw_memory_reject = true;
+                    continue;
+                }
+            }
             if self.slo.admission {
                 let fill = (loads[di].queue_len + 1)
                     .min(*d.batcher.cfg.variants.last().unwrap());
@@ -485,8 +523,9 @@ impl FleetSim {
                     continue;
                 }
             }
-            if d.batcher.push_at_phased(
-                InFlight { req, dispatch_s: dispatch }, now, phase)
+            if d.batcher.push_at_phased_mem(
+                InFlight { req, dispatch_s: dispatch }, now, phase,
+                (req.prompt_len + req.gen_len) as u64)
             {
                 metrics.admitted += 1;
                 rec.span_closed("fleet", "admit", now, now);
@@ -495,7 +534,11 @@ impl FleetSim {
             }
             saw_capacity_reject = true;
         }
-        let reason = if saw_capacity_reject {
+        let reason = if saw_memory_reject {
+            // a physical infeasibility outranks the load-dependent
+            // verdicts: no amount of draining makes the request fit
+            ShedReason::Memory
+        } else if saw_capacity_reject {
             ShedReason::Capacity
         } else if order.len() > self.slo.max_retries + 1 {
             // every candidate actually tried was a deadline reject, but
@@ -511,6 +554,7 @@ impl FleetSim {
             ShedReason::SloPredicted => "fleet.shed.slo",
             ShedReason::Capacity => "fleet.shed.capacity",
             ShedReason::RetryExhausted => "fleet.shed.retry",
+            ShedReason::Memory => "fleet.shed.memory",
         }, 1.0);
     }
 }
@@ -536,9 +580,18 @@ fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
     d.busy_until = now + total;
     d.busy_s += total;
 
+    // residency accounting: every executed batch is priced through the
+    // device's memory model whether or not a capacity is set (the plan
+    // is a pure function of the batch geometry, so the unconstrained
+    // fleet's numbers are identical to a fleet with an infinite cap —
+    // part of the mem_pressure.rs differential gate)
+    let peak_bytes = d.svc.mem.plan(variant, (pmax + gmax) as u64).total;
+
     let ds = &mut metrics.devices[di];
     ds.batches += 1;
     ds.padded_lanes += (variant - real) as u64;
+    ds.peak_resident_bytes = ds.peak_resident_bytes.max(peak_bytes);
+    ds.mem_byte_s += peak_bytes as f64 * total;
     metrics.padded_lane_tokens += ((variant - real) * gmax) as u64;
 
     // structured observation export for the replay loop: the executed
@@ -546,8 +599,9 @@ fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
     // billed realized steps). The simulated device has no real
     // StepTrace, so realized steps are the schedule expectation the
     // service model billed; the live coordinator path records measured
-    // traces instead.
-    metrics.observations[di].push(crate::replay::Observation {
+    // traces instead. The log is bounded at the same OBS_CAP the
+    // coordinator uses; overflow is counted, never silent.
+    metrics.record_fleet_observation(di, crate::replay::Observation {
         variant,
         seq_len: (pmax + gmax) as u64,
         gen_tokens: gmax as u64,
@@ -555,6 +609,7 @@ fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
         first_s: first,
         realized_steps: d.svc.expected_steps,
         cache_hit_rate: d.svc.serving_hit,
+        peak_bytes,
     });
 
     for inf in plan.items {
@@ -910,7 +965,8 @@ mod tests {
         assert_eq!(rec.counter("fleet.admitted"), traced.admitted as f64);
         assert_eq!(rec.counter("fleet.shed.slo")
                    + rec.counter("fleet.shed.capacity")
-                   + rec.counter("fleet.shed.retry"),
+                   + rec.counter("fleet.shed.retry")
+                   + rec.counter("fleet.shed.memory"),
                    traced.shed() as f64);
         let batches: u64 = traced.devices.iter().map(|d| d.batches).sum();
         assert_eq!(rec.counter("fleet.batches"), batches as f64);
@@ -1039,6 +1095,94 @@ mod tests {
             FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo);
         let m = sim.run(&saturating_trace(40));
         assert_eq!(m.completed, 40);
+    }
+
+    // ---- memory-pressure-aware serving ----------------------------------
+
+    fn fleet_mem_model() -> crate::memmodel::MemModel {
+        // must mirror what ServiceModel builds for small_topo devices:
+        // llada_8b, Dual KV, feature cache Off, block 64
+        crate::memmodel::MemModel::new(
+            ModelArch::llada_8b(), CacheMode::Dual,
+            crate::cache::CachePolicySpec::Off, 64)
+    }
+
+    #[test]
+    fn infinite_mem_cap_is_bit_identical_to_unconstrained() {
+        let trace = saturating_trace(48);
+        let run = |cap: Option<u64>| {
+            let mut topo = small_topo(2);
+            for d in &mut topo.devices {
+                d.mem_bytes = cap;
+            }
+            let slo = SloConfig::auto(&topo);
+            FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+                .run(&trace)
+        };
+        let off = run(None);
+        let inf = run(Some(u64::MAX));
+        assert_eq!(off.report(None), inf.report(None));
+        assert_eq!(off.horizon_s.to_bits(), inf.horizon_s.to_bits());
+        assert_eq!(off.mem_downshifts, 0);
+        assert_eq!(inf.mem_downshifts, 0);
+        for (a, b) in off.observations.iter().zip(&inf.observations) {
+            assert_eq!(a.to_text(), b.to_text());
+        }
+        // residency is accounted either way — the plan is priced on
+        // every executed batch, capacity or not
+        assert!(off.devices.iter().all(|d| d.peak_resident_bytes > 0));
+        assert_eq!(off.devices[0].peak_resident_bytes,
+                   inf.devices[0].peak_resident_bytes);
+    }
+
+    #[test]
+    fn memory_infeasible_requests_shed_with_memory_reason() {
+        let mm = fleet_mem_model();
+        // capacity fits a single 320-token lane, not a 1024-token one
+        let cap = mm.plan(1, 320).total;
+        let mut topo = small_topo(1);
+        topo.devices[0].mem_bytes = Some(cap);
+        let mut slo = SloConfig::auto(&topo);
+        slo.admission = false; // the memory check is physical, not SLO
+        let trace = vec![
+            crate::cluster::TraceRequest {
+                id: 0, arrival_s: 0.0, prompt_len: 128, gen_len: 192 },
+            crate::cluster::TraceRequest {
+                id: 1, arrival_s: 0.0, prompt_len: 512, gen_len: 512 },
+        ];
+        let m = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+            .run(&trace);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.shed_memory, 1, "{}", m.report(None));
+        assert_eq!(m.shed(), 1);
+        assert!(m.devices[0].peak_resident_bytes <= cap);
+    }
+
+    #[test]
+    fn pressured_fleet_downshifts_and_never_exceeds_capacity() {
+        let mm = fleet_mem_model();
+        // room for 4 lanes at seq 384 — an 8-deep backlog of identical
+        // (128, 256) requests must run as clamped 4-lane batches
+        let cap = mm.plan(4, 384).total;
+        let mut topo = small_topo(1);
+        topo.devices[0].mem_bytes = Some(cap);
+        let mut slo = SloConfig::auto(&topo);
+        slo.admission = false;
+        let trace: Vec<crate::cluster::TraceRequest> = (0..8)
+            .map(|i| crate::cluster::TraceRequest {
+                id: i, arrival_s: 0.0, prompt_len: 128, gen_len: 256 })
+            .collect();
+        let m = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+            .run(&trace);
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.shed(), 0);
+        assert!(m.mem_downshifts >= 1, "expected a variant downshift");
+        assert!(m.devices[0].peak_resident_bytes > 0);
+        assert!(m.devices[0].peak_resident_bytes <= cap);
+        // every executed batch's priced residency respects the cap
+        assert!(m.observations.iter()
+                .flat_map(|l| &l.observations)
+                .all(|o| o.peak_bytes <= cap));
     }
 
     #[test]

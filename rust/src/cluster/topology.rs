@@ -69,6 +69,15 @@ pub struct DeviceSpec {
     pub max_wait_s: f64,
     /// per-device admission queue bound (backpressure)
     pub queue_capacity: usize,
+    /// device memory capacity in bytes; `None` (the default) is the
+    /// unconstrained pre-memmodel behavior, differential-gated
+    /// bit-exact by `rust/tests/mem_pressure.rs`. With `Some(cap)` the
+    /// scheduler prices every admission through
+    /// [`crate::memmodel::MemModel`], sheds requests that cannot fit
+    /// even at the smallest compiled variant
+    /// ([`crate::cluster::ShedReason::Memory`]) and downshifts the
+    /// batcher's flush variant under pressure instead of overcommitting
+    pub mem_bytes: Option<u64>,
     /// measured batch-variant latency curve (attached by
     /// [`ClusterTopology::calibrate`]); None = uncalibrated, the
     /// scheduler falls back to analytic scalars and the static batcher
@@ -109,6 +118,7 @@ impl ClusterTopology {
                 batch_variants: vec![1, 2, 4, 8, 16],
                 max_wait_s: 0.05,
                 queue_capacity: 1024,
+                mem_bytes: None,
                 curve: None,
             })
             .collect();
@@ -157,6 +167,7 @@ impl ClusterTopology {
                 batch_variants: vec![1, 2, 4, 8, 16],
                 max_wait_s: 0.05,
                 queue_capacity: 1024,
+                mem_bytes: None,
                 curve: None,
             });
         }
@@ -168,6 +179,7 @@ impl ClusterTopology {
                 batch_variants: vec![1, 2, 4],
                 max_wait_s: 0.10,
                 queue_capacity: 256,
+                mem_bytes: None,
                 curve: None,
             });
         }
@@ -283,8 +295,10 @@ impl ClusterTopology {
     /// `devices`, `max_wait_ms`, `queue_capacity`, `variants` (comma
     /// list), `link` (pcie|nvlink|eth), `block_len`, `steps_per_block`,
     /// `schedule` (fixed|conf|slowfast), `cache`,
-    /// `feature_cache` (off|interval[:P:R]|adaptive[:TAU:MAX]). Device
-    /// count changes replicate device 0's spec.
+    /// `feature_cache` (off|interval[:P:R]|adaptive[:TAU:MAX]),
+    /// `mem_cap` (bytes with optional binary suffix, e.g. `"18GiB"`;
+    /// `"off"` clears the capacity). Device count changes replicate
+    /// device 0's spec.
     pub fn apply_overrides(&mut self, doc: &ConfigDoc) {
         if let Some(n) = doc.get_u64("cluster", "devices") {
             let proto = self.devices[0].clone();
@@ -340,6 +354,22 @@ impl ClusterTopology {
         if let Some(c) = doc.get_str("cluster", "feature_cache") {
             if let Some(spec) = CachePolicySpec::parse(c) {
                 self.feature_cache = spec;
+            }
+        }
+        if let Some(s) = doc.get_str("cluster", "mem_cap") {
+            let cap = if s.eq_ignore_ascii_case("off") {
+                Some(None)
+            } else {
+                crate::memmodel::parse_bytes(s).map(Some)
+            };
+            if let Some(cap) = cap {
+                for d in &mut self.devices {
+                    d.mem_bytes = cap;
+                }
+            }
+        } else if let Some(v) = doc.get_u64("cluster", "mem_cap") {
+            for d in &mut self.devices {
+                d.mem_bytes = Some(v);
             }
         }
         // last, so the curves are measured against the final topology
@@ -587,6 +617,26 @@ block_len = 32
             .unwrap();
         t.apply_overrides(&bad);
         assert_eq!(t.feature_cache, CachePolicySpec::adaptive_default());
+    }
+
+    #[test]
+    fn mem_cap_override_applies_and_defaults_off() {
+        let mut t = ClusterTopology::homogeneous(
+            2, HwConfig::dart_edge(), ModelArch::tiny(), CacheMode::Dual);
+        // unconstrained by default — the pre-memmodel behavior
+        assert!(t.devices.iter().all(|d| d.mem_bytes.is_none()));
+        let doc = parse_config("[cluster]\nmem_cap = \"18GiB\"\n").unwrap();
+        t.apply_overrides(&doc);
+        assert!(t.devices.iter()
+                .all(|d| d.mem_bytes == Some(18u64 << 30)));
+        // raw-byte form works too
+        let raw = parse_config("[cluster]\nmem_cap = 1000000\n").unwrap();
+        t.apply_overrides(&raw);
+        assert_eq!(t.devices[0].mem_bytes, Some(1_000_000));
+        // "off" clears the capacity
+        let off = parse_config("[cluster]\nmem_cap = \"off\"\n").unwrap();
+        t.apply_overrides(&off);
+        assert!(t.devices.iter().all(|d| d.mem_bytes.is_none()));
     }
 
     #[test]

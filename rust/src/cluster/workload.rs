@@ -573,6 +573,125 @@ mod tests {
         assert!((chat_offered_rps(268.8, 1.0) - 2.0).abs() < 1e-9);
     }
 
+    // ---- property net (stats::prop_check) -------------------------------
+
+    /// A random spec spanning every arrival shape, with and without the
+    /// diurnal envelope and its length-mix modulation.
+    fn random_spec(rng: &mut crate::util::SplitMix64) -> TraceSpec {
+        let rps = 1.0 + rng.next_f64() * 80.0;
+        let arrival = match rng.next_u64() % 3 {
+            0 => Arrival::Poisson { rps },
+            1 => Arrival::Bursty {
+                rps,
+                burst_mult: 2.0 + rng.next_f64() * 6.0,
+                cycle_s: 1.0 + rng.next_f64() * 10.0,
+                duty: 0.1 + rng.next_f64() * 0.6,
+            },
+            _ => Arrival::Uniform { rps },
+        };
+        let n = 16 + (rng.next_u64() % 128) as usize;
+        let mut spec = TraceSpec::chat(n, arrival, rng.next_u64());
+        if rng.next_u64() % 2 == 0 {
+            let env = Diurnal::day(2.0 + rng.next_f64() * 20.0);
+            spec = spec.with_envelope(if rng.next_u64() % 2 == 0 {
+                env.with_length_mix(0.9 * rng.next_f64())
+            } else {
+                env
+            });
+        }
+        spec
+    }
+
+    #[test]
+    fn trace_text_is_emit_parse_emit_byte_identical_on_random_specs() {
+        // the replay format is the reproducibility contract: whatever
+        // the spec, emit -> parse -> emit is a fixed point (the parse
+        // re-sorts by arrival, which must be the order already on disk)
+        crate::stats::prop_check("trace text fixed point", 48,
+                                 random_spec, |spec| {
+            let text = trace_to_text(&generate_trace(spec));
+            let back = trace_from_text(&text)
+                .map_err(|e| format!("parse failed: {e}"))?;
+            if trace_to_text(&back) != text {
+                return Err("emit -> parse -> emit not a fixed point".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn interarrivals_are_non_negative_and_ids_dense_on_random_specs() {
+        // no arrival process — enveloped or not — may run time backwards
+        // or mint non-finite timestamps, and ids stay dense in emission
+        // order (what the fleet's admission loop assumes)
+        crate::stats::prop_check("interarrivals non-negative", 48,
+                                 random_spec, |spec| {
+            let t = generate_trace(spec);
+            if t.len() != spec.n {
+                return Err(format!("{} requests != {}", t.len(), spec.n));
+            }
+            for (i, r) in t.iter().enumerate() {
+                if r.id != i as u64 {
+                    return Err(format!("id {} at position {i}", r.id));
+                }
+                if !r.arrival_s.is_finite() || r.arrival_s < 0.0 {
+                    return Err(format!("arrival {}", r.arrival_s));
+                }
+            }
+            for w in t.windows(2) {
+                if w[1].arrival_s < w[0].arrival_s {
+                    return Err(format!("time ran backwards: {} -> {}",
+                                       w[0].arrival_s, w[1].arrival_s));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn envelope_and_mix_modulation_preserve_means_on_random_shapes() {
+        // mean preservation is what makes the diurnal axis a *shape*
+        // knob rather than a load knob: over a full period the rate
+        // scale integrates to 1 and the mix weights to their base
+        // values, for any period / swing / length_swing
+        crate::stats::prop_check("envelope mean preservation", 32, |rng| {
+            let period = 1.0 + rng.next_f64() * 30.0;
+            let swing = 0.95 * rng.next_f64();
+            let length_swing = 0.9 * rng.next_f64();
+            (period, swing, length_swing)
+        }, |&(period, swing, length_swing)| {
+            let env = Diurnal { period_s: period, swing, length_swing };
+            let n = 4096;
+            let mean: f64 = (0..n)
+                .map(|i| env.scale(period * i as f64 / n as f64))
+                .sum::<f64>() / n as f64;
+            if (mean - 1.0).abs() > 5e-3 {
+                return Err(format!("scale mean {mean} off unit"));
+            }
+            let mix = TraceSpec::chat(1, Arrival::Poisson { rps: 1.0 }, 0)
+                .mix;
+            let mut sums = vec![0.0f64; mix.len()];
+            for i in 0..n {
+                let w = env.mix_weights_at(period * i as f64 / n as f64,
+                                           &mix);
+                for (s, v) in sums.iter_mut().zip(&w) {
+                    if *v <= 0.0 {
+                        return Err(format!("non-positive weight {v}"));
+                    }
+                    *s += v;
+                }
+            }
+            for (s, m) in sums.iter().zip(&mix) {
+                let mean = s / n as f64;
+                if (mean - m.weight).abs() > 0.02 * m.weight.max(0.05) {
+                    return Err(format!("weight mean {mean} drifted from \
+                                        base {}", m.weight));
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn mean_gen_len_weighted() {
         let spec = TraceSpec {

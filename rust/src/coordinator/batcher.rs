@@ -232,6 +232,12 @@ pub struct Pending<T> {
     /// (the default, and all the cache-off paths) is a single class —
     /// the planner then behaves exactly as if phases did not exist.
     pub phase: u64,
+    /// per-lane resident sequence length (prompt + gen tokens) this
+    /// item will hold while executing — the seq-len argument of the
+    /// [`crate::memmodel::MemoryPlan`] pricing a flush. 0 (the default
+    /// push paths) with no [`Batcher::mem`] budget reproduces the
+    /// pre-memmodel batcher bit-exactly.
+    pub mem_units: u64,
 }
 
 /// The batch the batcher decided to run.
@@ -255,6 +261,13 @@ const IA_EWMA_ALPHA: f64 = 0.3;
 
 pub struct Batcher<T> {
     pub cfg: BatcherConfig,
+    /// memory budget consulted at flush-planning time: when a planned
+    /// flush would exceed the capacity, the plan downshifts to the
+    /// largest prefix + variant that fits (see [`Self::make_plan`]).
+    /// `None` (the default) is bit-identical to the pre-memmodel
+    /// batcher — the differential gate in `rust/tests/mem_pressure.rs`
+    /// holds this.
+    pub mem: Option<crate::memmodel::MemBudget>,
     queue: VecDeque<Pending<T>>,
     /// zero point of the wall-clock convenience API
     epoch: Instant,
@@ -262,6 +275,9 @@ pub struct Batcher<T> {
     pub rejected: u64,
     /// cumulative padded lanes across every plan this batcher issued
     pub padded_lanes: u64,
+    /// flushes the memory budget forced below the policy's plan
+    /// (smaller take and/or variant than the unconstrained decision)
+    pub mem_downshifts: u64,
     /// last arrival time on the batcher's clock axis
     last_arrival_s: Option<f64>,
     /// EWMA of arrival gaps (None until two arrivals observed)
@@ -284,11 +300,13 @@ impl<T> Batcher<T> {
         }
         Batcher {
             cfg,
+            mem: None,
             queue: VecDeque::new(),
             epoch: Instant::now(),
             enqueued: 0,
             rejected: 0,
             padded_lanes: 0,
+            mem_downshifts: 0,
             last_arrival_s: None,
             ia_ewma_s: None,
         }
@@ -314,6 +332,14 @@ impl<T> Batcher<T> {
     /// batches only co-schedule one phase (see [`Pending::phase`]).
     pub fn push_at_phased(&mut self, item: T, now_s: f64, phase: u64)
                           -> bool {
+        self.push_at_phased_mem(item, now_s, phase, 0)
+    }
+
+    /// [`Self::push_at_phased`] with the item's per-lane resident
+    /// sequence length (see [`Pending::mem_units`]); the memory-aware
+    /// serving paths push through here so flush plans can be priced.
+    pub fn push_at_phased_mem(&mut self, item: T, now_s: f64, phase: u64,
+                              mem_units: u64) -> bool {
         if self.queue.len() >= self.cfg.capacity {
             self.rejected += 1;
             return false;
@@ -326,7 +352,8 @@ impl<T> Batcher<T> {
             });
         }
         self.last_arrival_s = Some(now_s);
-        self.queue.push_back(Pending { item, arrived_s: now_s, phase });
+        self.queue.push_back(Pending { item, arrived_s: now_s, phase,
+                                       mem_units });
         self.enqueued += 1;
         true
     }
@@ -445,7 +472,9 @@ impl<T> Batcher<T> {
     /// The router's variant-aware placement uses this as its
     /// fragmentation signal; it is computed through the same
     /// [`Self::plan_for`] decision the batcher will actually make, so
-    /// policy and batcher can never disagree.
+    /// policy and batcher can never disagree. (The signal is the
+    /// *unconstrained* plan: the memory clamp of [`Self::make_plan`]
+    /// depends on which items are queued, which `n` alone cannot see.)
     pub fn plan_padding_for(&self, n: usize) -> usize {
         if n == 0 {
             return 0;
@@ -454,13 +483,60 @@ impl<T> Batcher<T> {
         variant - take
     }
 
+    /// Clamp a planned flush `(take0, variant0)` to the memory budget:
+    /// the largest arrival-order prefix `k <= take0` of the lead-phase
+    /// class whose plan — `variant_for(k)` lanes at the prefix's
+    /// maximum resident seq-len — fits the capacity. Feasibility is
+    /// monotone in `k` (both the round-up variant and the prefix max
+    /// are nondecreasing, and the [`crate::memmodel::MemoryPlan`] is
+    /// monotone in lanes and seq-len), which is what makes the
+    /// downshift monotone in pressure. When even a single lane does
+    /// not fit, one item runs anyway — the batcher guarantees
+    /// progress; admission sheds such requests upstream
+    /// (`ShedReason::Memory`) before they reach a queue.
+    fn mem_clamp(&mut self, phase: u64, take0: usize, variant0: usize)
+                 -> (usize, usize) {
+        let chosen = {
+            let Some(budget) = self.mem.as_ref() else {
+                return (take0, variant0);
+            };
+            // prefix maxima of resident seq-len over the lead-phase
+            // class, in the arrival order make_plan collects
+            let mut prefix_max = Vec::with_capacity(take0);
+            let mut mx = 0u64;
+            for p in self.queue.iter().filter(|p| p.phase == phase)
+                .take(take0)
+            {
+                mx = mx.max(p.mem_units);
+                prefix_max.push(mx);
+            }
+            (1..=prefix_max.len()).rev()
+                .map(|k| (k, self.variant_for(k)))
+                .find(|&(k, v)| budget.fits(v, prefix_max[k - 1]))
+        };
+        match chosen {
+            Some((take, variant)) if (take, variant) == (take0, variant0)
+                => (take, variant),
+            Some((take, variant)) => {
+                self.mem_downshifts += 1;
+                (take, variant)
+            }
+            None => {
+                self.mem_downshifts += 1;
+                (1, self.variant_for(1))
+            }
+        }
+    }
+
     /// Pop the next plan off a non-empty queue, as decided by the flush
     /// policy (static: everything available padded to the smallest fit;
     /// cost-based: possibly an exact smaller variant with the remainder
-    /// left queued).
+    /// left queued), then clamped to the memory budget when one is set
+    /// ([`Self::mem_clamp`]).
     fn make_plan(&mut self) -> BatchPlan<T> {
         let phase = self.queue.front().unwrap().phase;
-        let (take, variant) = self.plan_for(self.lead_eligible());
+        let (take0, variant0) = self.plan_for(self.lead_eligible());
+        let (take, variant) = self.mem_clamp(phase, take0, variant0);
         // collect the lead phase class in arrival order; other phases
         // stay queued (with all-equal phases this is the plain
         // pop-front prefix, bit-identical to the unphased batcher)
@@ -912,6 +988,137 @@ mod tests {
         // the phase-1 straggler waits for its own deadline
         assert!(b.next_batch_at(0.1).is_none());
         assert_eq!(b.next_batch_at(0.6).unwrap().items, vec![99]);
+    }
+
+    // ---- memory budget clamp --------------------------------------------
+
+    use crate::cache::CachePolicySpec;
+    use crate::config::{CacheMode, ModelArch};
+    use crate::memmodel::{MemBudget, MemModel};
+
+    fn mm() -> MemModel {
+        MemModel::new(ModelArch::llada_8b(), CacheMode::Dual,
+                      CachePolicySpec::Off, 64)
+    }
+
+    /// Budget whose capacity is exactly the plan of (`variant`, `seq`).
+    fn budget_at(variant: usize, seq: u64) -> MemBudget {
+        let m = mm();
+        let cap = m.plan(variant, seq).total;
+        MemBudget::new(cap, m)
+    }
+
+    fn mem_cfg(variants: Vec<usize>) -> BatcherConfig {
+        BatcherConfig {
+            variants,
+            max_wait: Duration::from_millis(0),
+            capacity: 64,
+            policy: FlushPolicy::Static,
+        }
+    }
+
+    #[test]
+    fn mem_budget_downshifts_variant_and_leaves_remainder_queued() {
+        let mut b = Batcher::new(mem_cfg(vec![1, 2, 4, 8]));
+        b.mem = Some(budget_at(4, 512)); // room for 4 lanes at seq 512
+        for i in 0..8 {
+            assert!(b.push_at_phased_mem(i, 0.0, 0, 512));
+        }
+        let plan = b.next_batch_at(1.0).unwrap();
+        assert_eq!(plan.items, vec![0, 1, 2, 3]);
+        assert_eq!(plan.variant, 4);
+        assert_eq!(b.mem_downshifts, 1);
+        assert_eq!(b.len(), 4);
+        // the remainder (4 items) plans at variant 4 on its own, which
+        // fits unclamped — no second downshift is charged
+        let plan = b.next_batch_at(1.0).unwrap();
+        assert_eq!(plan.items.len(), 4);
+        assert_eq!(plan.variant, 4);
+        assert_eq!(b.mem_downshifts, 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn roomy_budget_matches_the_unconstrained_plan_exactly() {
+        // capacity >= the full flush's plan: every decision (take,
+        // variant, padding, counters) is identical to a budget-less
+        // batcher — the batcher-level differential gate
+        let mk = |mem: Option<MemBudget>| {
+            let mut b = Batcher::new(mem_cfg(vec![1, 2, 4, 8]));
+            b.mem = mem;
+            for i in 0..6 {
+                assert!(b.push_at_phased_mem(i, 0.0, 0, 512));
+            }
+            b
+        };
+        let mut plain = mk(None);
+        let mut roomy = mk(Some(budget_at(8, 512)));
+        let a = plain.next_batch_at(1.0).unwrap();
+        let b2 = roomy.next_batch_at(1.0).unwrap();
+        assert_eq!(a.items, b2.items);
+        assert_eq!(a.variant, b2.variant);
+        assert_eq!(roomy.mem_downshifts, 0);
+        assert_eq!(plain.padded_lanes, roomy.padded_lanes);
+    }
+
+    #[test]
+    fn downshift_is_monotone_in_pressure() {
+        // sweep capacity down across exact variant plans: the flushed
+        // variant never increases as memory tightens
+        let mut prev = usize::MAX;
+        for cap_variant in [8usize, 4, 2, 1] {
+            let mut b = Batcher::new(mem_cfg(vec![1, 2, 4, 8]));
+            b.mem = Some(budget_at(cap_variant, 512));
+            for i in 0..8 {
+                b.push_at_phased_mem(i, 0.0, 0, 512);
+            }
+            let plan = b.next_batch_at(1.0).unwrap();
+            assert!(plan.variant <= prev,
+                    "cap {cap_variant}: variant rose to {}", plan.variant);
+            assert_eq!(plan.variant, cap_variant); // exact-plan capacity
+            prev = plan.variant;
+        }
+    }
+
+    #[test]
+    fn longest_lane_prices_the_whole_batch() {
+        // one 2048-token lane at the head of the queue: the prefix max
+        // prices every candidate batch at 2048, so only a single-lane
+        // flush fits; the short lanes then batch together
+        let mut b = Batcher::new(mem_cfg(vec![1, 2, 4]));
+        b.mem = Some(budget_at(1, 2048));
+        let m = mm();
+        assert!(m.plan(4, 256).total <= m.plan(1, 2048).total);
+        assert!(m.plan(2, 2048).total > m.plan(1, 2048).total);
+        for (i, units) in [(0, 2048u64), (1, 256), (2, 256), (3, 256)] {
+            assert!(b.push_at_phased_mem(i, 0.0, 0, units));
+        }
+        let plan = b.next_batch_at(1.0).unwrap();
+        assert_eq!(plan.items, vec![0]);
+        assert_eq!(plan.variant, 1);
+        assert_eq!(b.mem_downshifts, 1);
+        let plan = b.next_batch_at(1.0).unwrap();
+        assert_eq!(plan.items, vec![1, 2, 3]);
+        assert_eq!(plan.variant, 4);
+        assert_eq!(b.mem_downshifts, 1); // short lanes fit unclamped
+    }
+
+    #[test]
+    fn infeasible_single_lane_still_makes_progress() {
+        // capacity below even a one-lane plan (weights only): the
+        // batcher still emits single-lane flushes rather than wedging —
+        // admission sheds such requests upstream (ShedReason::Memory)
+        let m = mm();
+        let mut b = Batcher::new(mem_cfg(vec![1, 4]));
+        b.mem = Some(MemBudget::new(m.weights_bytes(), m));
+        for i in 0..2 {
+            b.push_at_phased_mem(i, 0.0, 0, 512);
+        }
+        let plan = b.next_batch_at(1.0).unwrap();
+        assert_eq!(plan.items, vec![0]);
+        assert_eq!(plan.variant, 1);
+        assert_eq!(b.mem_downshifts, 1);
+        assert_eq!(b.len(), 1);
     }
 
     #[test]

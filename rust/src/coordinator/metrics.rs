@@ -224,6 +224,7 @@ mod tests {
                 first_s: latency / 4.0,
                 realized_steps: 16.0,
                 cache_hit_rate: 0.0,
+                peak_bytes: 0,
             });
         }
         assert_eq!(m.observations().len(), 200);
@@ -256,7 +257,7 @@ mod tests {
             m.record_observation(Observation {
                 variant: 1, seq_len: i as u64, gen_tokens: 64,
                 total_s: 0.01, first_s: 0.002, realized_steps: 16.0,
-                cache_hit_rate: 0.0,
+                cache_hit_rate: 0.0, peak_bytes: 0,
             });
         }
         assert_eq!(m.observations().len(), Metrics::OBS_CAP);

@@ -235,6 +235,10 @@ fn run_batch(engine: &mut GenerationEngine, reqs: Vec<Request>,
                 first_s: result.total_s() * first_frac,
                 realized_steps,
                 cache_hit_rate: result.cache_stats.hit_rate(),
+                // the live path records residency as unaccounted (0):
+                // real device occupancy comes from the artifact runtime,
+                // not the memmodel pricer the simulated fleet uses
+                peak_bytes: 0,
             });
         }
         Err(e) => {

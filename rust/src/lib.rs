@@ -56,6 +56,16 @@
 //!   re-price from what serving actually measured
 //!   (`serve-cluster --recalibrate` in the CLI, `recalib_loop` in the
 //!   benches, `rust/tests/recalib_convergence.rs` the gate);
+//! * [`memmodel`] — per-device memory residency as a serving
+//!   constraint: the [`memmodel::MemoryPlan`] accounting of weights,
+//!   fp16/int logits buffers (lanes × block × vocab — the paper's
+//!   dominant traffic, now priced in bytes held as well as bytes
+//!   moved), KV and feature-cache residency, and per-lane block state
+//!   (docs/ARCHITECTURE.md S11), consulted by the batcher (variant
+//!   downshift under pressure) and the fleet scheduler (memory sheds
+//!   instead of OOM) whenever a device declares a finite capacity
+//!   (`--mem-cap` on the serving CLIs, `mem_pressure_sweep` in the
+//!   benches, `rust/tests/mem_pressure.rs` the differential gate);
 //! * [`study`] — the fleet study harness above cluster + calib:
 //!   parameterized experiment grids (fleet shape × router policy ×
 //!   admission mode under diurnal traces) whose output artifact is a
@@ -87,6 +97,7 @@ pub mod hbm;
 pub mod isa;
 pub mod kvcache;
 pub mod mem;
+pub mod memmodel;
 pub mod obs;
 pub mod quant;
 pub mod replay;

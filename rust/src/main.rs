@@ -67,6 +67,9 @@ fn main() {
                        --schedule fixed|conf|slowfast --recalibrate");
             eprintln!("                --cache MODE[,FEATURE] (feature \
                        cache prices warm/cold serving)");
+            eprintln!("                --mem-cap BYTES|off (per-device \
+                       byte budget, e.g. 18GiB or 15e9; admission \
+                       sheds and flushes downshift under pressure)");
             eprintln!("                --trace FILE (Chrome-trace JSON + \
                        deterministic summary)");
             eprintln!("  fleet-study --seed N --out FILE --requests N \
@@ -229,6 +232,19 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
         let doc = dart::config::parse_config(&text).expect("config parse");
         topo.apply_overrides(&doc);
     }
+    // --mem-cap after --config so the flag wins over a [cluster] mem_cap
+    // override in the file
+    if let Some(cap) = args.get("mem-cap") {
+        let cap = if cap == "off" {
+            None
+        } else {
+            Some(dart::memmodel::parse_bytes(cap)
+                 .expect("bad --mem-cap (bytes, e.g. 18GiB or 15e9)"))
+        };
+        for d in &mut topo.devices {
+            d.mem_bytes = cap;
+        }
+    }
 
     let n = args.get_usize("requests", 256);
     let seed = args.get_usize("seed", 42) as u64;
@@ -357,11 +373,14 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
                      warm.ttft.quantile(0.95).unwrap_or(0.0)));
     }
 
+    let mem_desc = topo.devices[0].mem_bytes
+        .map(|c| dart::memmodel::fmt_bytes(c))
+        .unwrap_or_else(|| "unconstrained".to_string());
     println!("== DART fleet: {} devices x {}, {} KV cache, {} feature \
-              cache, {} router, {} schedule ==",
+              cache, {} memory, {} router, {} schedule ==",
              topo.n_devices(), topo.model.name,
              topo.devices[0].cache.name(), topo.feature_cache.name(),
-             policy.name(), topo.schedule.name());
+             mem_desc, policy.name(), topo.schedule.name());
     println!("trace: {} requests, {}, fleet capacity ~{:.0} tok/s \
               (expected {:.1}/{} steps per block)",
              trace.len(), trace_desc, capacity_tps,
@@ -517,9 +536,10 @@ fn cmd_fleet_study(args: &Args) -> i32 {
     };
 
     eprintln!("fleet-study: {} shapes x {} policies x 3 admission modes \
-               x {} schedules x {} feature caches = {} cells, seed {}",
+               x {} schedules x {} feature caches x {} memory caps \
+               = {} cells, seed {}",
               cfg.shapes.len(), cfg.policies.len(), cfg.schedules.len(),
-              cfg.caches.len(), n_cells, seed);
+              cfg.caches.len(), cfg.mem_caps.len(), n_cells, seed);
     let mut done = 0usize;
     let result = StudyGrid::new(cfg).run_with_progress(|cell| {
         done += 1;

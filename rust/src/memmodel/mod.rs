@@ -1,0 +1,377 @@
+//! Per-device memory model: what a batch *holds resident* while it
+//! executes, priced per admission decision (docs/ARCHITECTURE.md S11).
+//!
+//! The paper's core profiling result is that dLLM sampling is dominated
+//! by vocabulary-wide logits traffic; PRs 1–7 price that traffic in
+//! *latency* only. This module accounts the *residency* side — the
+//! "memory footprint crisis" axis: weights, fp16/int logits buffers
+//! sized by lanes × block × vocab, KV residency by
+//! [`CacheMode`], feature-cache residency by [`CachePolicySpec`], and
+//! per-lane block/schedule state — as a [`MemoryPlan`] whose component
+//! bytes always sum to its total (the accounting invariant
+//! `rust/tests/mem_pressure.rs` gates on).
+//!
+//! Capacity comes from [`crate::cluster::DeviceSpec::mem_bytes`]
+//! (`None` = unconstrained, the pre-memmodel behavior, differential-
+//! gated bit-exact). Under a finite capacity the
+//! [`crate::coordinator::Batcher`] downshifts the flush variant to the
+//! largest feasible one ([`MemBudget`]) and the
+//! [`crate::cluster::scheduler`] sheds requests that cannot fit even at
+//! the smallest compiled variant
+//! ([`crate::cluster::ShedReason::Memory`]) — degrade, never OOM.
+//!
+//! The plan is monotone in both lanes and sequence length, which is
+//! what makes downshift monotone in pressure: a smaller capacity can
+//! only select a smaller (or equal) variant.
+
+use crate::cache::CachePolicySpec;
+use crate::config::{CacheMode, ModelArch};
+
+/// Resident weight precision (fp16 — the serving default; quantized
+/// deployments override by constructing [`MemModel`] with
+/// [`MemModel::with_bits`]).
+pub const WEIGHT_BITS: u32 = 16;
+/// Resident KV precision (fp16).
+pub const KV_BITS: u32 = 16;
+/// Bytes per fp16 logit (the Stable-Max working buffer).
+pub const LOGITS_FP16_BYTES: u64 = 2;
+/// Bytes per int logit (the quantized integer sampling copy).
+pub const LOGITS_INT_BYTES: u64 = 1;
+/// Bytes per cached feature element (fp16 features).
+pub const FEATURE_BYTES: u64 = 2;
+/// Per-token lane bookkeeping: confidence (f32), committed token
+/// (i32), mask + schedule counters (8 bytes).
+pub const LANE_STATE_BYTES_PER_TOKEN: u64 = 16;
+
+/// One priced admission decision: the bytes a batch at `variant` lanes
+/// × `seq_len` tokens/lane holds resident, by component. Invariant:
+/// `total` is exactly the sum of the six components
+/// ([`Self::component_sum`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemoryPlan {
+    /// resident model parameters (variant-independent)
+    pub weights: u64,
+    /// fp16 logits working buffer: lanes × block_len × vocab × 2
+    pub logits_fp16: u64,
+    /// int logits sampling copy: lanes × block_len × vocab × 1
+    pub logits_int: u64,
+    /// KV residency under the device's [`CacheMode`]
+    pub kv: u64,
+    /// cross-step feature-cache residency under the device's
+    /// [`CachePolicySpec`]
+    pub feature_cache: u64,
+    /// per-lane block/schedule state: lanes × block_len × 16
+    pub lane_state: u64,
+    /// sum of the six components
+    pub total: u64,
+}
+
+impl MemoryPlan {
+    /// Named component breakdown, in accounting order.
+    pub fn components(&self) -> [(&'static str, u64); 6] {
+        [("weights", self.weights),
+         ("logits fp16", self.logits_fp16),
+         ("logits int", self.logits_int),
+         ("kv cache", self.kv),
+         ("feature cache", self.feature_cache),
+         ("lane state", self.lane_state)]
+    }
+
+    /// Recomputed component sum — equal to `total` by construction;
+    /// the accounting-invariant tests assert it stays that way.
+    pub fn component_sum(&self) -> u64 {
+        self.components().iter().map(|&(_, b)| b).sum()
+    }
+
+    /// Whether this plan fits a capacity (`None` = unconstrained).
+    pub fn fits(&self, cap_bytes: Option<u64>) -> bool {
+        cap_bytes.map_or(true, |cap| self.total <= cap)
+    }
+}
+
+/// The per-device residency pricer: a pure function of the model
+/// architecture, the device's KV-cache mode, its feature-cache policy,
+/// and the blocked-diffusion geometry. Cloneable and deterministic —
+/// the same (variant, seq_len) always prices the same plan.
+#[derive(Clone, Debug)]
+pub struct MemModel {
+    pub model: ModelArch,
+    pub kv_mode: CacheMode,
+    pub feature_cache: CachePolicySpec,
+    pub block_len: usize,
+    pub bits_w: u32,
+    pub bits_kv: u32,
+}
+
+impl MemModel {
+    pub fn new(model: ModelArch, kv_mode: CacheMode,
+               feature_cache: CachePolicySpec, block_len: usize) -> Self {
+        MemModel { model, kv_mode, feature_cache, block_len,
+                   bits_w: WEIGHT_BITS, bits_kv: KV_BITS }
+    }
+
+    /// Override the resident weight / KV precisions (quantized
+    /// deployments).
+    pub fn with_bits(mut self, bits_w: u32, bits_kv: u32) -> Self {
+        self.bits_w = bits_w;
+        self.bits_kv = bits_kv;
+        self
+    }
+
+    /// Resident parameter bytes (batch-independent floor: a device
+    /// whose capacity is below this serves nothing).
+    pub fn weights_bytes(&self) -> u64 {
+        self.model.weight_bytes(self.bits_w)
+    }
+
+    /// Price a batch of `variant` lanes at `seq_len` (prompt + gen)
+    /// tokens per lane.
+    pub fn plan(&self, variant: usize, seq_len: u64) -> MemoryPlan {
+        let lanes = variant as u64;
+        let bl = self.block_len as u64;
+        let logit_elems = lanes * bl * self.model.vocab;
+        let kv = match self.kv_mode {
+            // Block Diffusion recomputes all KV every step: transient,
+            // not resident
+            CacheMode::None => 0,
+            // prefix cache holds every position before the active block
+            CacheMode::Prefix => self.model.kv_bytes(
+                lanes, seq_len.saturating_sub(bl), self.bits_kv),
+            // dual cache holds the full sequence (stale suffix included)
+            CacheMode::Dual => self.model.kv_bytes(
+                lanes, seq_len, self.bits_kv),
+        };
+        let feature_cache = if self.feature_cache.is_off() {
+            0
+        } else {
+            lanes * seq_len * self.model.d_model * FEATURE_BYTES
+        };
+        let weights = self.weights_bytes();
+        let logits_fp16 = logit_elems * LOGITS_FP16_BYTES;
+        let logits_int = logit_elems * LOGITS_INT_BYTES;
+        let lane_state = lanes * bl * LANE_STATE_BYTES_PER_TOKEN;
+        MemoryPlan {
+            weights,
+            logits_fp16,
+            logits_int,
+            kv,
+            feature_cache,
+            lane_state,
+            total: weights + logits_fp16 + logits_int + kv
+                + feature_cache + lane_state,
+        }
+    }
+
+    /// Whether a batch at (`variant`, `seq_len`) fits `cap_bytes`.
+    pub fn fits(&self, variant: usize, seq_len: u64, cap_bytes: u64)
+                -> bool {
+        self.plan(variant, seq_len).total <= cap_bytes
+    }
+
+    /// The largest compiled variant that fits `cap_bytes` at `seq_len`
+    /// (`variants` ascending, the [`crate::coordinator::BatcherConfig`]
+    /// convention); `None` when even the smallest does not fit — the
+    /// shed case. Monotone: a smaller capacity never returns a larger
+    /// variant.
+    pub fn max_variant(&self, variants: &[usize], seq_len: u64,
+                       cap_bytes: u64) -> Option<usize> {
+        variants.iter().rev()
+            .find(|&&v| self.fits(v, seq_len, cap_bytes))
+            .copied()
+    }
+}
+
+/// The batcher-facing slice of the model: a capacity plus the pricer,
+/// consulted at flush-planning time to downshift the variant before a
+/// flush would exceed the device ([`crate::coordinator::BatcherConfig`]
+/// carries `Option<MemBudget>`; `None` is bit-identical to the
+/// pre-memmodel batcher).
+#[derive(Clone, Debug)]
+pub struct MemBudget {
+    pub cap_bytes: u64,
+    pub model: MemModel,
+}
+
+impl MemBudget {
+    pub fn new(cap_bytes: u64, model: MemModel) -> Self {
+        MemBudget { cap_bytes, model }
+    }
+
+    pub fn fits(&self, variant: usize, seq_len: u64) -> bool {
+        self.model.fits(variant, seq_len, self.cap_bytes)
+    }
+
+    pub fn max_variant(&self, variants: &[usize], seq_len: u64)
+                       -> Option<usize> {
+        self.model.max_variant(variants, seq_len, self.cap_bytes)
+    }
+}
+
+/// Parse a human byte size: a number with an optional binary suffix
+/// (`B`, `K`/`KiB`/`KB`, `M`/`MiB`/`MB`, `G`/`GiB`/`GB`,
+/// `T`/`TiB`/`TB` — all powers of 1024), e.g. `--mem-cap 18GiB`,
+/// `--mem-cap 15e9`. Returns `None` on malformed input.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let (num, mult) = if let Some(p) = t.strip_suffix("tib")
+        .or_else(|| t.strip_suffix("tb")).or_else(|| t.strip_suffix("t")) {
+        (p, 1u64 << 40)
+    } else if let Some(p) = t.strip_suffix("gib")
+        .or_else(|| t.strip_suffix("gb")).or_else(|| t.strip_suffix("g")) {
+        (p, 1u64 << 30)
+    } else if let Some(p) = t.strip_suffix("mib")
+        .or_else(|| t.strip_suffix("mb")).or_else(|| t.strip_suffix("m")) {
+        (p, 1u64 << 20)
+    } else if let Some(p) = t.strip_suffix("kib")
+        .or_else(|| t.strip_suffix("kb")).or_else(|| t.strip_suffix("k")) {
+        (p, 1u64 << 10)
+    } else if let Some(p) = t.strip_suffix("b") {
+        (p, 1u64)
+    } else {
+        (t.as_str(), 1u64)
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    if !v.is_finite() || v < 0.0 {
+        return None;
+    }
+    Some((v * mult as f64).round() as u64)
+}
+
+/// Render bytes with a binary suffix at one decimal (`18.0 GiB`);
+/// exact small values stay integral (`512 B`).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [(&str, u64); 4] = [("TiB", 1 << 40), ("GiB", 1 << 30),
+                                     ("MiB", 1 << 20), ("KiB", 1 << 10)];
+    for (name, mult) in UNITS {
+        if bytes >= mult {
+            return format!("{:.1} {name}", bytes as f64 / mult as f64);
+        }
+    }
+    format!("{bytes} B")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> MemModel {
+        MemModel::new(ModelArch::llada_8b(), CacheMode::Dual,
+                      CachePolicySpec::adaptive_default(), 64)
+    }
+
+    #[test]
+    fn component_bytes_sum_to_the_total() {
+        crate::stats::prop_check("plan components sum", 64, |rng| {
+            let variant = 1 << (rng.next_u64() % 5);
+            let seq = 64 + rng.next_u64() % 4096;
+            let kv = CacheMode::ALL[(rng.next_u64() % 3) as usize];
+            let fc = if rng.next_u64() % 2 == 0 {
+                CachePolicySpec::Off
+            } else {
+                CachePolicySpec::adaptive_default()
+            };
+            (variant, seq, kv, fc)
+        }, |&(variant, seq, kv, fc)| {
+            let mm = MemModel::new(ModelArch::llada_8b(), kv, fc, 64);
+            let p = mm.plan(variant, seq);
+            if p.component_sum() != p.total {
+                return Err(format!("components {} != total {}",
+                                   p.component_sum(), p.total));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plan_is_monotone_in_lanes_and_seq_len() {
+        let mm = m();
+        let mut prev = 0u64;
+        for v in [1usize, 2, 4, 8, 16] {
+            let t = mm.plan(v, 512).total;
+            assert!(t >= prev, "variant {v} shrank the plan");
+            prev = t;
+        }
+        let mut prev = 0u64;
+        for s in [64u64, 128, 512, 1024, 4096] {
+            let t = mm.plan(8, s).total;
+            assert!(t >= prev, "seq {s} shrank the plan");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn kv_modes_order_none_prefix_dual() {
+        let mk = |kv| MemModel::new(ModelArch::llada_8b(), kv,
+                                    CachePolicySpec::Off, 64)
+            .plan(4, 512);
+        let none = mk(CacheMode::None);
+        let prefix = mk(CacheMode::Prefix);
+        let dual = mk(CacheMode::Dual);
+        assert_eq!(none.kv, 0);
+        assert!(prefix.kv > 0 && prefix.kv < dual.kv);
+        // the feature cache is off, so only kv separates the modes
+        assert_eq!(dual.total - none.total, dual.kv);
+    }
+
+    #[test]
+    fn weights_match_the_arch_and_floor_every_plan() {
+        let mm = m();
+        let w = ModelArch::llada_8b().weight_bytes(WEIGHT_BITS);
+        assert_eq!(mm.weights_bytes(), w);
+        assert!(mm.plan(1, 64).total > w);
+    }
+
+    #[test]
+    fn max_variant_downshifts_monotonically_in_pressure() {
+        let mm = m();
+        let variants = [1usize, 2, 4, 8, 16];
+        let seq = 1024u64;
+        let full = mm.plan(16, seq).total;
+        let mut prev: Option<usize> = Some(16);
+        assert_eq!(mm.max_variant(&variants, seq, full), Some(16));
+        // sweep capacity down: the feasible variant never increases
+        let floor = mm.weights_bytes();
+        let steps = 40u64;
+        for i in 0..=steps {
+            let cap = floor + (full - floor) * (steps - i) / steps;
+            let v = mm.max_variant(&variants, seq, cap);
+            match (v, prev) {
+                (Some(a), Some(b)) => assert!(a <= b,
+                    "cap {cap}: variant rose {b} -> {a}"),
+                (Some(_), None) => panic!("variant reappeared under \
+                                           tighter capacity"),
+                _ => {}
+            }
+            prev = v;
+        }
+        // below the weights floor nothing fits
+        assert_eq!(mm.max_variant(&variants, seq, floor), None);
+    }
+
+    #[test]
+    fn budget_delegates_to_the_model() {
+        let mm = m();
+        let cap = mm.plan(4, 512).total;
+        let b = MemBudget::new(cap, mm.clone());
+        assert!(b.fits(4, 512));
+        assert!(!b.fits(8, 512));
+        assert_eq!(b.max_variant(&[1, 2, 4, 8, 16], 512), Some(4));
+    }
+
+    #[test]
+    fn byte_parse_and_format() {
+        assert_eq!(parse_bytes("1024"), Some(1024));
+        assert_eq!(parse_bytes("1KiB"), Some(1024));
+        assert_eq!(parse_bytes("18GiB"), Some(18 << 30));
+        assert_eq!(parse_bytes("18gb"), Some(18 << 30));
+        assert_eq!(parse_bytes("2.5m"), Some(5 << 19));
+        assert_eq!(parse_bytes("15e9"), Some(15_000_000_000));
+        assert_eq!(parse_bytes("512B"), Some(512));
+        assert_eq!(parse_bytes(""), None);
+        assert_eq!(parse_bytes("x"), None);
+        assert_eq!(parse_bytes("-1g"), None);
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(18 << 30), "18.0 GiB");
+        assert_eq!(fmt_bytes(3 << 19), "1.5 MiB");
+    }
+}

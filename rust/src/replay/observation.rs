@@ -38,6 +38,10 @@ pub struct Observation {
     /// realized feature-cache hit rate of the batch
     /// ([`crate::cache::CacheStats::hit_rate`]; 0.0 with the cache off)
     pub cache_hit_rate: f64,
+    /// peak resident bytes of the executed batch as priced by the
+    /// device's [`crate::memmodel::MemoryPlan`] (v3 column; 0 on
+    /// pre-memmodel logs and curve self-logs, which carry no residency)
+    pub peak_bytes: u64,
 }
 
 /// A device's measured observation stream, replayable as text.
@@ -89,6 +93,7 @@ impl ObservationLog {
                 first_s,
                 realized_steps: curve.expected_steps,
                 cache_hit_rate: curve.cache_hit_rate,
+                peak_bytes: 0,
             };
             for _ in 0..SELF_SAMPLES_P50 {
                 log.push(mk(p.p50_total_s, p.p50_first_s));
@@ -106,16 +111,16 @@ impl ObservationLog {
     /// per observation (17 significant digits — f64 round-trips
     /// exactly, like the curve format).
     pub fn to_text(&self) -> String {
-        let mut s = String::from("# dart-observation-log v2\n");
+        let mut s = String::from("# dart-observation-log v3\n");
         s.push_str(&format!("device {}\n", self.device));
         s.push_str("# variant seq_len gen_tokens total_s first_s \
-                    realized_steps cache_hit_rate\n");
+                    realized_steps cache_hit_rate peak_bytes\n");
         for o in &self.observations {
             s.push_str(&format!(
-                "{} {} {} {:.17e} {:.17e} {:.17e} {:.17e}\n",
+                "{} {} {} {:.17e} {:.17e} {:.17e} {:.17e} {}\n",
                 o.variant, o.seq_len, o.gen_tokens,
                 o.total_s, o.first_s, o.realized_steps,
-                o.cache_hit_rate));
+                o.cache_hit_rate, o.peak_bytes));
         }
         s
     }
@@ -136,10 +141,11 @@ impl ObservationLog {
                 continue;
             }
             let f: Vec<&str> = line.split_whitespace().collect();
-            // v1 rows carry 6 fields (no cache hit rate → cold, 0.0)
-            if f.len() != 6 && f.len() != 7 {
+            // v1 rows carry 6 fields (no cache hit rate → cold, 0.0);
+            // v2 rows 7 (no peak bytes → 0, unaccounted residency)
+            if !(6..=8).contains(&f.len()) {
                 return Err(format!(
-                    "observation line {}: expected 6 or 7 fields, got {}",
+                    "observation line {}: expected 6 to 8 fields, got {}",
                     i + 1, f.len()));
             }
             let err = |what: &str| {
@@ -160,7 +166,7 @@ impl ObservationLog {
                 total_s: fnum(3, "total_s")?,
                 first_s: fnum(4, "first_s")?,
                 realized_steps: fnum(5, "realized_steps")?,
-                cache_hit_rate: if f.len() == 7 {
+                cache_hit_rate: if f.len() >= 7 {
                     let h = fnum(6, "cache_hit_rate")?;
                     if h > 1.0 {
                         return Err(err("cache_hit_rate"));
@@ -168,6 +174,11 @@ impl ObservationLog {
                     h
                 } else {
                     0.0
+                },
+                peak_bytes: if f.len() == 8 {
+                    f[7].parse().map_err(|_| err("peak_bytes"))?
+                } else {
+                    0
                 },
             });
         }
@@ -186,11 +197,11 @@ mod tests {
         log.push(Observation {
             variant: 4, seq_len: 300, gen_tokens: 192,
             total_s: 0.0321, first_s: 0.0081, realized_steps: 16.0,
-            cache_hit_rate: 0.0 });
+            cache_hit_rate: 0.0, peak_bytes: 15_357_902_848 });
         log.push(Observation {
             variant: 1, seq_len: 120, gen_tokens: 64,
             total_s: 0.011, first_s: 0.003, realized_steps: 9.25,
-            cache_hit_rate: 0.4375 });
+            cache_hit_rate: 0.4375, peak_bytes: 0 });
         log
     }
 
@@ -214,9 +225,38 @@ mod tests {
         assert!(ObservationLog::from_text("4 300 192 1 1 16 1.5").is_err());
         assert!(ObservationLog::from_text("4 300 192 1 1 16 -0.1").is_err());
         assert!(ObservationLog::from_text("4 300 192 1 1 16 nan").is_err());
+        // a v3 peak-bytes column must be a nonnegative integer
+        assert!(ObservationLog::from_text("4 300 192 1 1 16 0.5 x")
+                .is_err());
+        assert!(ObservationLog::from_text("4 300 192 1 1 16 0.5 -9")
+                .is_err());
+        assert!(ObservationLog::from_text("4 300 192 1 1 16 0.5 1.5")
+                .is_err());
+        // ... and 9 fields is malformed, not a future version
+        assert!(ObservationLog::from_text("4 300 192 1 1 16 0.5 9 9")
+                .is_err());
         let empty = ObservationLog::from_text("# comments only\n").unwrap();
         assert!(empty.is_empty());
         assert_eq!(empty.len(), 0);
+    }
+
+    #[test]
+    fn v2_rows_parse_with_zero_residency_and_upgrade_stably() {
+        // a v2 log (7-field rows, no peak-bytes column) parses with
+        // peak_bytes 0 and the re-emitted v3 text round-trips exactly
+        let v2 = "# dart-observation-log v2\n\
+                  device npu0\n\
+                  4 300 192 3.21000000000000019e-2 8.09999999999999962e-3 \
+                  1.60000000000000000e1 4.37500000000000000e-1\n";
+        let log = ObservationLog::from_text(v2).unwrap();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.observations[0].peak_bytes, 0);
+        assert_eq!(log.observations[0].cache_hit_rate.to_bits(),
+                   0.4375f64.to_bits());
+        let text = log.to_text();
+        assert!(text.starts_with("# dart-observation-log v3\n"));
+        assert_eq!(ObservationLog::from_text(&text).unwrap().to_text(),
+                   text);
     }
 
     #[test]

@@ -35,6 +35,8 @@ pub fn cell_row(c: &CellResult, baseline_goodput: Option<f64>,
         c.admission_label().to_string(),
         c.schedule.name().to_string(),
         c.cache.name().to_string(),
+        c.mem_cap.map(crate::memmodel::fmt_bytes)
+            .unwrap_or_else(|| "off".to_string()),
         report::pct(m.shed_slo_frac()),
         report::pct(m.shed_capacity_frac()),
         report::pct(m.shed_retry_frac()),
@@ -47,10 +49,10 @@ pub fn cell_row(c: &CellResult, baseline_goodput: Option<f64>,
     ]
 }
 
-const SWEEP_HEADERS: [&str; 13] = [
-    "router", "admission", "schedule", "cache", "shed slo", "shed cap",
-    "shed retry", "attainment", "goodput tok/s", "Δ goodput", "p95 TTFT",
-    "padding waste", "mean util"];
+const SWEEP_HEADERS: [&str; 14] = [
+    "router", "admission", "schedule", "cache", "mem cap", "shed slo",
+    "shed cap", "shed retry", "attainment", "goodput tok/s", "Δ goodput",
+    "p95 TTFT", "padding waste", "mean util"];
 
 /// Mean of `f` over cells passing `keep` (0.0 on an empty selection).
 fn mean_over<F, K>(cells: &[CellResult], keep: K, f: F) -> f64
@@ -218,6 +220,65 @@ fn analysis_paras(r: &StudyResult) -> Vec<String> {
             cache_lines.join("\n")));
     }
 
+    // memory-constrained vs unconstrained, aggregated over matched
+    // (shape, policy, admission, schedule, cache) tuples
+    let mut mem_lines = Vec::new();
+    for &cap in &r.cfg.mem_caps {
+        let Some(cap) = cap else { continue };
+        let mut gd = Vec::new();
+        let mut shed_mem = Vec::new();
+        let mut downshifts = 0u64;
+        let mut peak = 0u64;
+        for s in &r.shapes {
+            for &policy in &r.cfg.policies {
+                for admission in AdmissionMode::ALL {
+                    for &schedule in &r.cfg.schedules {
+                        for &cache in &r.cfg.caches {
+                            let free = r.cell_mem(&s.shape.name, policy,
+                                                  admission, schedule,
+                                                  cache, None);
+                            let tight = r.cell_mem(&s.shape.name, policy,
+                                                   admission, schedule,
+                                                   cache, Some(cap));
+                            if let (Some(f), Some(t)) = (free, tight) {
+                                if f.metrics.goodput_tps() > 0.0 {
+                                    gd.push((t.metrics.goodput_tps()
+                                             - f.metrics.goodput_tps())
+                                            / f.metrics.goodput_tps());
+                                }
+                                shed_mem.push(t.metrics.shed_memory_frac());
+                                downshifts += t.metrics.mem_downshifts;
+                                peak = peak.max(
+                                    t.metrics.peak_resident_bytes());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        mem_lines.push(format!(
+            "A **{}** per-device budget moves goodput by {} against the \
+             unconstrained arm on matched cells, sheds {} of offered \
+             load for memory, downshifts {} flushes, and peaks at {} \
+             resident.",
+            crate::memmodel::fmt_bytes(cap),
+            report::signed_pct(mean(&gd)), report::pct(mean(&shed_mem)),
+            downshifts, crate::memmodel::fmt_bytes(peak)));
+    }
+    if !mem_lines.is_empty() {
+        paras.push(format!(
+            "Memory capacity is a physical admission dimension, not a \
+             tuning knob: every flush is priced by the byte model \
+             (weights + logits buffers + KV residency + feature cache + \
+             lane state) before it runs, wide flushes downshift to the \
+             widest variant that still fits, and requests that cannot \
+             fit even alone at the smallest variant are shed with a \
+             memory attribution. The unconstrained arms account \
+             residency without acting on it — they serve bit-identically \
+             to a build without the memory model.\n{}",
+            mem_lines.join("\n")));
+    }
+
     // calibrated vs static, aggregated over matched
     // (shape, policy, schedule) triples
     let mut gdeltas = Vec::new();
@@ -372,12 +433,18 @@ pub fn render_study(r: &StudyResult) -> String {
         .map(|c| c.name())
         .collect::<Vec<_>>()
         .join("/");
+    let mem_names = cfg.mem_caps.iter()
+        .map(|m| m.map(crate::memmodel::fmt_bytes)
+             .unwrap_or_else(|| "off".to_string()))
+        .collect::<Vec<_>>()
+        .join("/");
     d.para(&format!(
         "Grid: {} fleet shapes × {} router policies × 3 admission modes \
          (static analytic scalars vs profiled latency curves vs \
          warm-up-recalibrated curves — the replay loop's third arm) × \
          {} denoising schedules ({schedule_names}) × {} feature-cache \
-         policies ({cache_names}), {} requests per \
+         policies ({cache_names}) × {} memory-capacity arms \
+         ({mem_names}), {} requests per \
          cell at {} of each shape's analytic token capacity, under a \
          diurnal envelope spanning {} simulated days (swing {}, so the \
          peak offers ~{}x the mean rate). Adaptive schedules are priced \
@@ -385,11 +452,13 @@ pub fn render_study(r: &StudyResult) -> String {
          batching and calibration all bill realized rather than \
          configured steps — and cached arms bill only refreshed feature \
          work, warm for steady state and cold for each request's first \
-         block. Model: {}, {} KV cache. Baseline cell for the \
+         block. Constrained memory arms price every flush against the \
+         per-device byte budget and downshift or shed rather than \
+         overcommit. Model: {}, {} KV cache. Baseline cell for the \
          delta column: {} routing with {} admission under the fixed \
-         schedule with the feature cache off.",
+         schedule with the feature cache off and memory unconstrained.",
         cfg.shapes.len(), cfg.policies.len(), cfg.schedules.len(),
-        cfg.caches.len(), cfg.requests_per_cell,
+        cfg.caches.len(), cfg.mem_caps.len(), cfg.requests_per_cell,
         report::pct(cfg.load), report::f1(cfg.envelope_periods),
         report::f2(cfg.envelope_swing),
         report::f2(1.0 + cfg.envelope_swing), cfg.model.name,
@@ -431,7 +500,8 @@ pub fn render_study(r: &StudyResult) -> String {
             let is_base = c.policy == cfg.baseline_policy
                 && c.admission == cfg.baseline_admission
                 && c.schedule == ScheduleSpec::Fixed
-                && c.cache.is_off();
+                && c.cache.is_off()
+                && c.mem_cap.is_none();
             t.row(&cell_row(c, base_goodput, is_base));
         }
         d.table(&t);
@@ -485,6 +555,7 @@ mod tests {
             policy: RoutePolicy::VariantAware,
             schedule: ScheduleSpec::slowfast_default(),
             cache: CachePolicySpec::adaptive_default(),
+            mem_cap: Some(18 << 30),
             admission: AdmissionMode::Calibrated,
             metrics: m,
             wall_s: 0.0,
@@ -501,6 +572,7 @@ mod tests {
             "calibrated".to_string(),
             "slowfast".to_string(),
             "adaptive".to_string(),
+            "18.0 GiB".to_string(), // the fixture's per-device budget
             "25.0%".to_string(),    // 1 SLO-predicted shed of 4 offered
             "25.0%".to_string(),    // 1 capacity shed of 4 offered
             "0.0%".to_string(),     // no retry-exhausted sheds
@@ -511,11 +583,15 @@ mod tests {
             "25.0%".to_string(),    // 100 pad tokens / 400 total
             "60.0%".to_string(),    // mean of 80% and 40%
         ]);
+        // an unconstrained cell renders its budget as off
+        let mut free = fixture();
+        free.mem_cap = None;
+        assert_eq!(cell_row(&free, Some(8.0), false)[4], "off");
         // the baseline row marks itself instead of a delta
-        assert_eq!(cell_row(&fixture(), Some(8.0), true)[9], "(base)");
+        assert_eq!(cell_row(&fixture(), Some(8.0), true)[10], "(base)");
         // an unusable baseline degrades to n/a, never a division blowup
-        assert_eq!(cell_row(&fixture(), Some(0.0), false)[9], "n/a");
-        assert_eq!(cell_row(&fixture(), None, false)[9], "n/a");
+        assert_eq!(cell_row(&fixture(), Some(0.0), false)[10], "n/a");
+        assert_eq!(cell_row(&fixture(), None, false)[10], "n/a");
     }
 
     #[test]
@@ -534,14 +610,18 @@ mod tests {
                        "realizes ~", "caching reuses ~", "| slowfast |",
                        "| adaptive |", "| recalibrated |",
                        "replay loop",
-                       "Cross-step feature caching"] {
+                       "Cross-step feature caching",
+                       "| mem cap |", "memory-capacity arms",
+                       "| 18.0 GiB |", "| off |",
+                       "Memory capacity is a physical admission"] {
             assert!(a.contains(needle), "study doc missing {needle:?}");
         }
-        // one sweep row per (schedule, cache, admission, policy) cell
-        // of each shape
+        // one sweep row per (schedule, cache, mem-cap, admission,
+        // policy) cell of each shape
         let rows = a.matches("| round-robin |").count()
             + a.matches("| least-outstanding |").count();
-        assert_eq!(rows, 48,
-                   "2 shapes x 2 schedules x 2 caches x 3 adm x 2 rtr");
+        assert_eq!(rows, 96,
+                   "2 shapes x 2 schedules x 2 caches x 2 mem-caps \
+                    x 3 adm x 2 rtr");
     }
 }

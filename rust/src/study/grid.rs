@@ -1,6 +1,6 @@
-//! The study grid runner: fleet shape × schedule policy × router policy
-//! × admission mode over per-shape diurnal traces, one [`FleetMetrics`]
-//! per cell. Admission sweeps three arms ([`AdmissionMode`]): static
+//! The study grid runner: fleet shape × schedule policy × cache policy
+//! × memory capacity × router policy × admission mode over per-shape
+//! diurnal traces, one [`FleetMetrics`] per cell. Admission sweeps three arms ([`AdmissionMode`]): static
 //! analytic scalars, profiled measured curves, and *recalibrated*
 //! curves — profiled, then folded toward the observations of a warm-up
 //! serving pass over the same trace (the replay loop,
@@ -12,8 +12,9 @@
 //! simulator runs in virtual time — so the whole grid (and therefore
 //! the rendered study document) is bit-identical across runs.
 //!
-//! Cells fan out across threads: each (shape, schedule, admission)
-//! unit is independent, so [`StudyGrid::run_with_progress`] spawns one
+//! Cells fan out across threads: each (shape, schedule, cache,
+//! mem-cap, admission) unit is independent, so
+//! [`StudyGrid::run_with_progress`] spawns one
 //! scoped thread per unit and reduces the results in the *pinned*
 //! serial iteration order — the parallel grid is bit-identical to
 //! [`StudyGrid::run_serial`] (gated by
@@ -104,6 +105,11 @@ pub struct StudyConfig {
     /// every cell with the fleet serving (and, when calibrated,
     /// profiled) under that cross-step cache policy
     pub caches: Vec<CachePolicySpec>,
+    /// memory-capacity axis (docs/ARCHITECTURE.md S11): each entry
+    /// reruns every cell with that per-device byte budget applied to
+    /// every device of the shape (`None` = unconstrained, today's
+    /// behavior bit-for-bit)
+    pub mem_caps: Vec<Option<u64>>,
     /// requests per cell trace (each shape generates one trace shared
     /// by all of its cells)
     pub requests_per_cell: usize,
@@ -144,6 +150,7 @@ impl StudyConfig {
                             ScheduleSpec::slowfast_default()],
             caches: vec![CachePolicySpec::Off,
                          CachePolicySpec::adaptive_default()],
+            mem_caps: vec![None],
             requests_per_cell: 240,
             load: 0.85,
             envelope_periods: 2.0,
@@ -170,6 +177,10 @@ impl StudyConfig {
                             ScheduleSpec::slowfast_default()],
             caches: vec![CachePolicySpec::Off,
                          CachePolicySpec::adaptive_default()],
+            // 18 GiB leaves ~3 GiB of headroom over the 14 GiB weight
+            // image: enough to serve, tight enough that wide flushes
+            // downshift (docs/ARCHITECTURE.md S11)
+            mem_caps: vec![None, Some(18 << 30)],
             requests_per_cell: 48,
             load: 0.85,
             envelope_periods: 2.0,
@@ -187,9 +198,10 @@ impl StudyConfig {
     }
 
     /// Cells in the grid:
-    /// shapes × schedules × caches × admission × routers.
+    /// shapes × schedules × caches × mem-caps × admission × routers.
     pub fn n_cells(&self) -> usize {
         self.shapes.len() * self.schedules.len() * self.caches.len()
+            * self.mem_caps.len()
             * self.admission_modes().len() * self.policies.len()
     }
 }
@@ -206,6 +218,9 @@ pub struct CellResult {
     /// the feature-cache policy the fleet served (and, when calibrated,
     /// profiled) under
     pub cache: CachePolicySpec,
+    /// the per-device byte budget every device of the shape served
+    /// under (`None` = unconstrained)
+    pub mem_cap: Option<u64>,
     /// what admission/batching priced from: analytic scalars, profiled
     /// curves, or warm-up-recalibrated curves
     pub admission: AdmissionMode,
@@ -248,19 +263,32 @@ pub struct StudyResult {
 }
 
 impl StudyResult {
+    /// The *unconstrained-memory* cell of a coordinate (the pre-S11
+    /// sweep view). Use [`Self::cell_mem`] to address a specific
+    /// memory-capacity arm.
     pub fn cell(&self, shape: &str, policy: RoutePolicy,
                 admission: AdmissionMode, schedule: ScheduleSpec,
                 cache: CachePolicySpec) -> Option<&CellResult> {
+        self.cell_mem(shape, policy, admission, schedule, cache, None)
+    }
+
+    /// A cell addressed by its full coordinate, memory-capacity arm
+    /// included.
+    pub fn cell_mem(&self, shape: &str, policy: RoutePolicy,
+                    admission: AdmissionMode, schedule: ScheduleSpec,
+                    cache: CachePolicySpec, mem_cap: Option<u64>)
+                    -> Option<&CellResult> {
         self.cells.iter().find(|c| c.shape == shape
                                && c.policy == policy
                                && c.admission == admission
                                && c.schedule == schedule
-                               && c.cache == cache)
+                               && c.cache == cache
+                               && c.mem_cap == mem_cap)
     }
 
     /// The named baseline cell for a shape (delta reference): the
     /// configured baseline router/admission under the fixed schedule
-    /// with the feature cache off.
+    /// with the feature cache off and memory unconstrained.
     pub fn baseline(&self, shape: &str) -> Option<&CellResult> {
         self.cell(shape, self.cfg.baseline_policy,
                   self.cfg.baseline_admission, ScheduleSpec::Fixed,
@@ -291,23 +319,25 @@ pub struct StudyGrid {
 }
 
 /// One independent unit of grid work: every router-policy cell of a
-/// (shape, schedule, admission) combination, sharing one topology
-/// build/calibration (and, for the recalibrated arm, one warm-up
-/// serving pass).
+/// (shape, schedule, cache, mem-cap, admission) combination, sharing
+/// one topology build/calibration (and, for the recalibrated arm, one
+/// warm-up serving pass).
 #[derive(Clone, Copy)]
 struct Unit {
     shape_idx: usize,
     schedule: ScheduleSpec,
     feature_cache: CachePolicySpec,
+    mem_cap: Option<u64>,
     admission: AdmissionMode,
 }
 
 impl StudyGrid {
     pub fn new(cfg: StudyConfig) -> Self {
         assert!(!cfg.shapes.is_empty() && !cfg.policies.is_empty()
-                && !cfg.schedules.is_empty() && !cfg.caches.is_empty(),
-                "study grid needs at least one shape, policy, schedule \
-                 and cache policy");
+                && !cfg.schedules.is_empty() && !cfg.caches.is_empty()
+                && !cfg.mem_caps.is_empty(),
+                "study grid needs at least one shape, policy, schedule, \
+                 cache policy and memory-capacity arm");
         StudyGrid { cfg }
     }
 
@@ -362,18 +392,21 @@ impl StudyGrid {
         (shapes, traces)
     }
 
-    /// Units in pinned (shape, schedule, cache, admission) order — the
-    /// reduction order of both execution paths.
+    /// Units in pinned (shape, schedule, cache, mem-cap, admission)
+    /// order — the reduction order of both execution paths.
     fn units(&self) -> Vec<Unit> {
         let cfg = &self.cfg;
         let mut units = Vec::new();
         for shape_idx in 0..cfg.shapes.len() {
             for &schedule in &cfg.schedules {
                 for &feature_cache in &cfg.caches {
-                    for admission in cfg.admission_modes() {
-                        units.push(Unit {
-                            shape_idx, schedule, feature_cache, admission,
-                        });
+                    for &mem_cap in &cfg.mem_caps {
+                        for admission in cfg.admission_modes() {
+                            units.push(Unit {
+                                shape_idx, schedule, feature_cache,
+                                mem_cap, admission,
+                            });
+                        }
                     }
                 }
             }
@@ -394,6 +427,9 @@ impl StudyGrid {
         let mut topo = shape.build(&cfg.model, cfg.cache);
         topo.schedule = u.schedule;
         topo.feature_cache = u.feature_cache;
+        for d in &mut topo.devices {
+            d.mem_bytes = u.mem_cap;
+        }
         if u.admission != AdmissionMode::Static {
             topo.calibrate();
         }
@@ -411,6 +447,7 @@ impl StudyGrid {
                 policy,
                 schedule: u.schedule,
                 cache: u.feature_cache,
+                mem_cap: u.mem_cap,
                 admission: u.admission,
                 metrics,
                 wall_s: t0.elapsed().as_secs_f64(),
@@ -469,8 +506,8 @@ mod tests {
     fn smoke_grid_covers_every_cell_and_accounts_for_every_request() {
         let cfg = StudyConfig::smoke(11);
         let n_cells = cfg.n_cells();
-        assert_eq!(n_cells, 2 * 2 * 2 * 3 * 2,
-                   "shapes x schedules x caches x adm x rtr");
+        assert_eq!(n_cells, 2 * 2 * 2 * 2 * 3 * 2,
+                   "shapes x schedules x caches x mem-caps x adm x rtr");
         let r = StudyGrid::new(cfg).run();
         assert_eq!(r.cells.len(), n_cells);
         assert_eq!(r.shapes.len(), 2);
@@ -489,6 +526,7 @@ mod tests {
             assert_eq!(r.baseline(&s.shape.name).unwrap().schedule,
                        ScheduleSpec::Fixed);
             assert!(r.baseline(&s.shape.name).unwrap().cache.is_off());
+            assert!(r.baseline(&s.shape.name).unwrap().mem_cap.is_none());
             assert!(r.best_goodput(&s.shape.name).is_some());
             assert_eq!(r.shape_cells(&s.shape.name).len(),
                        n_cells / r.shapes.len());
@@ -504,8 +542,12 @@ mod tests {
             assert_eq!(x.shape, y.shape);
             assert_eq!(x.policy, y.policy);
             assert_eq!(x.schedule, y.schedule);
+            assert_eq!(x.mem_cap, y.mem_cap);
             assert_eq!(x.admission, y.admission);
             assert_eq!(x.metrics.completed, y.metrics.completed);
+            assert_eq!(x.metrics.peak_resident_bytes(),
+                       y.metrics.peak_resident_bytes());
+            assert_eq!(x.metrics.mem_downshifts, y.metrics.mem_downshifts);
             assert_eq!(x.metrics.tokens, y.metrics.tokens);
             assert_eq!(x.metrics.horizon_s.to_bits(),
                        y.metrics.horizon_s.to_bits());
@@ -601,6 +643,37 @@ mod tests {
             assert!(!h.is_empty());
             assert!(h.iter().all(|&x| x > 0.0 && x < 1.0),
                     "{name}: cached cells must export warm hit rates");
+        }
+    }
+
+    #[test]
+    fn memory_axis_pressures_the_constrained_arm_on_every_shape() {
+        let r = StudyGrid::new(StudyConfig::smoke(5)).run();
+        let cap = 18u64 << 30;
+        for s in &r.shapes {
+            let name = &s.shape.name;
+            let policy = RoutePolicy::LeastOutstanding;
+            let free = r.cell(name, policy, AdmissionMode::Static,
+                              ScheduleSpec::Fixed,
+                              CachePolicySpec::Off).unwrap();
+            let tight = r.cell_mem(name, policy, AdmissionMode::Static,
+                                   ScheduleSpec::Fixed, CachePolicySpec::Off,
+                                   Some(cap)).unwrap();
+            assert_eq!(free.metrics.offered(), tight.metrics.offered(),
+                       "both arms face the identical trace");
+            // the unconstrained arm accounts residency but never acts
+            // on it
+            assert!(free.metrics.peak_resident_bytes() > 0);
+            assert_eq!(free.metrics.mem_downshifts, 0);
+            assert_eq!(free.metrics.shed_memory, 0);
+            // no admitted batch of the constrained arm priced over cap
+            assert!(tight.metrics.peak_resident_bytes() <= cap,
+                    "{name}: admitted batch over the byte budget");
+            // and the pressure is visible in the outcome
+            assert!(tight.metrics.mem_downshifts > 0
+                    || tight.metrics.shed_memory > 0
+                    || tight.metrics.horizon_s != free.metrics.horizon_s,
+                    "{name}: memory axis indistinguishable");
         }
     }
 

@@ -19,6 +19,10 @@ fn assert_metrics_identical(a: &FleetMetrics, b: &FleetMetrics, ctx: &str) {
     assert_eq!(a.shed_slo, b.shed_slo, "shed_slo: {ctx}");
     assert_eq!(a.shed_capacity, b.shed_capacity, "shed_capacity: {ctx}");
     assert_eq!(a.shed_retry, b.shed_retry, "shed_retry: {ctx}");
+    assert_eq!(a.shed_memory, b.shed_memory, "shed_memory: {ctx}");
+    assert_eq!(a.mem_downshifts, b.mem_downshifts, "mem_downshifts: {ctx}");
+    assert_eq!(a.obs_seen, b.obs_seen, "obs_seen: {ctx}");
+    assert_eq!(a.obs_truncated, b.obs_truncated, "obs_truncated: {ctx}");
     assert_eq!(a.retries, b.retries, "retries: {ctx}");
     assert_eq!(a.slo_met, b.slo_met, "slo_met: {ctx}");
     assert_eq!(a.tokens, b.tokens, "tokens: {ctx}");
@@ -46,6 +50,10 @@ fn assert_metrics_identical(a: &FleetMetrics, b: &FleetMetrics, ctx: &str) {
         assert_eq!(x.tokens, y.tokens, "device tokens: {ctx}");
         assert_eq!(x.busy_s.to_bits(), y.busy_s.to_bits(),
                    "device busy: {ctx}");
+        assert_eq!(x.peak_resident_bytes, y.peak_resident_bytes,
+                   "device peak resident: {ctx}");
+        assert_eq!(x.mem_byte_s.to_bits(), y.mem_byte_s.to_bits(),
+                   "device byte-seconds: {ctx}");
     }
     // the replay loop's input is part of the determinism contract: the
     // per-device observation streams must match record for record
@@ -122,15 +130,21 @@ fn parallel_study_grid_is_bit_identical_to_serial() {
         assert_eq!(p.schedule, s.schedule);
         assert_eq!(p.cache, s.cache);
         assert_eq!(p.admission, s.admission);
-        let ctx = format!("{}/{:?}/{}/{}/{}", p.shape, p.policy,
+        assert_eq!(p.mem_cap, s.mem_cap);
+        let ctx = format!("{}/{:?}/{}/{}/{}/{:?}", p.shape, p.policy,
                           p.schedule.name(), p.cache.name(),
-                          p.admission_label());
+                          p.admission_label(), p.mem_cap);
         assert_metrics_identical(&p.metrics, &s.metrics, &ctx);
     }
     // the smoke grid carries the feature-cache axis: both arms must
     // appear, so the cells above pin the cached cells bit-for-bit too
     assert!(parallel.cells.iter().any(|c| c.cache.is_off()));
     assert!(parallel.cells.iter().any(|c| !c.cache.is_off()));
+    // likewise the memory axis: the smoke grid's constrained arm (an
+    // 18 GiB per-device budget) must appear alongside the unconstrained
+    // one, so the bit-identity above covers pressured scheduling too
+    assert!(parallel.cells.iter().any(|c| c.mem_cap.is_none()));
+    assert!(parallel.cells.iter().any(|c| c.mem_cap.is_some()));
     for (p, s) in parallel.shapes.iter().zip(&serial.shapes) {
         assert_eq!(p.capacity_tps.to_bits(), s.capacity_tps.to_bits());
         assert_eq!(p.offered_rps.to_bits(), s.offered_rps.to_bits());

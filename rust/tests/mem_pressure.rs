@@ -1,0 +1,323 @@
+//! Memory-model contracts (the accounting-invariant + differential
+//! test net that licenses memory-pressure-aware serving, S11):
+//!
+//! 1. Differential gate: a fleet with `mem_bytes: None` and a fleet
+//!    with `mem_bytes: Some(u64::MAX)` serve the same trace
+//!    bit-identically — every counter, reservoir, device accumulator,
+//!    and observation row — and both match today's unconstrained
+//!    scheduler (no memory sheds, no downshifts). The same collapse
+//!    holds through the study grid: a `mem_caps: [None]` grid and a
+//!    `mem_caps: [Some(u64::MAX)]` grid price every cell bit-exactly.
+//! 2. Accounting invariants, on random geometries and random traces:
+//!    a `MemoryPlan`'s component bytes always sum to its total; no
+//!    admitted batch is ever priced above the device capacity (every
+//!    recorded `peak_bytes` and the fleet peak stay under the cap);
+//!    offered requests are conserved across completed + shed.
+//! 3. Monotonicity: the feasible variant never increases as capacity
+//!    tightens, at any sequence length.
+//! 4. Determinism under pressure: two constrained runs over the same
+//!    trace are bit-identical, and the pressure is visible (downshifts
+//!    or memory sheds actually occur at a binding cap).
+//! 5. The v3 observation text (peak-bytes column) is emit → parse →
+//!    emit byte-identical, and v1/v2 rows still parse.
+
+use dart::cluster::{generate_trace, Arrival, ClusterTopology, FleetMetrics,
+                    FleetSim, RoutePolicy, SloConfig, TraceRequest,
+                    TraceSpec};
+use dart::cache::CachePolicySpec;
+use dart::config::{CacheMode, HwConfig, ModelArch};
+use dart::memmodel::MemModel;
+use dart::replay::{Observation, ObservationLog};
+use dart::study::{StudyConfig, StudyGrid};
+use dart::util::SplitMix64;
+
+/// Every counter, accumulator, reservoir, and observation row —
+/// bit-exact (the same contract `fleet_determinism.rs` enforces,
+/// restated locally so this net stands alone).
+fn assert_fleet_identical(a: &FleetMetrics, b: &FleetMetrics, ctx: &str) {
+    assert_eq!(a.admitted, b.admitted, "admitted: {ctx}");
+    assert_eq!(a.completed, b.completed, "completed: {ctx}");
+    assert_eq!(a.shed_slo, b.shed_slo, "shed_slo: {ctx}");
+    assert_eq!(a.shed_capacity, b.shed_capacity, "shed_capacity: {ctx}");
+    assert_eq!(a.shed_retry, b.shed_retry, "shed_retry: {ctx}");
+    assert_eq!(a.shed_memory, b.shed_memory, "shed_memory: {ctx}");
+    assert_eq!(a.mem_downshifts, b.mem_downshifts, "downshifts: {ctx}");
+    assert_eq!(a.retries, b.retries, "retries: {ctx}");
+    assert_eq!(a.tokens, b.tokens, "tokens: {ctx}");
+    assert_eq!(a.slo_met, b.slo_met, "slo_met: {ctx}");
+    assert_eq!(a.obs_seen, b.obs_seen, "obs_seen: {ctx}");
+    assert_eq!(a.obs_truncated, b.obs_truncated, "obs_truncated: {ctx}");
+    assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits(),
+               "horizon: {ctx}");
+    assert_eq!(a.goodput_tps().to_bits(), b.goodput_tps().to_bits(),
+               "goodput: {ctx}");
+    for (x, y) in [(&a.ttft, &b.ttft), (&a.tpot, &b.tpot), (&a.e2e, &b.e2e)] {
+        assert_eq!(x.seen(), y.seen(), "reservoir seen: {ctx}");
+        for (s, t) in x.samples().iter().zip(y.samples()) {
+            assert_eq!(s.to_bits(), t.to_bits(), "reservoir sample: {ctx}");
+        }
+    }
+    assert_eq!(a.devices.len(), b.devices.len(), "device count: {ctx}");
+    for (x, y) in a.devices.iter().zip(&b.devices) {
+        assert_eq!(x.batches, y.batches, "device batches: {ctx}");
+        assert_eq!(x.tokens, y.tokens, "device tokens: {ctx}");
+        assert_eq!(x.busy_s.to_bits(), y.busy_s.to_bits(),
+                   "device busy: {ctx}");
+        assert_eq!(x.peak_resident_bytes, y.peak_resident_bytes,
+                   "device peak resident: {ctx}");
+        assert_eq!(x.mem_byte_s.to_bits(), y.mem_byte_s.to_bits(),
+                   "device byte-seconds: {ctx}");
+    }
+    assert_eq!(a.observations.len(), b.observations.len(),
+               "observation log count: {ctx}");
+    for (x, y) in a.observations.iter().zip(&b.observations) {
+        assert_eq!(x.to_text(), y.to_text(), "observation log: {ctx}");
+    }
+}
+
+/// The gate's shared workload: a fixed hand-rolled trace (no envelope,
+/// no retries in the generator) long enough to exercise every variant.
+fn gate_trace() -> Vec<TraceRequest> {
+    let mut rng = SplitMix64::new(0xD157);
+    (0..96u64).map(|i| TraceRequest {
+        id: i,
+        arrival_s: i as f64 * 0.05,
+        prompt_len: (64 + rng.next_u64() % 192) as usize,
+        gen_len: (64 * (1 + rng.next_u64() % 5)) as usize,
+    }).collect()
+}
+
+fn run_fleet(mem: Option<u64>, trace: &[TraceRequest]) -> FleetMetrics {
+    let mut topo = ClusterTopology::homogeneous(
+        2, HwConfig::dart_default(), ModelArch::llada_8b(),
+        CacheMode::Dual);
+    for d in &mut topo.devices {
+        d.mem_bytes = mem;
+    }
+    topo.calibrate();
+    let slo = SloConfig::auto(&topo);
+    FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo).run(trace)
+}
+
+#[test]
+fn unconstrained_fleet_is_bit_identical_to_infinite_capacity() {
+    // the differential gate: None (memory model absent, today's
+    // behavior) vs Some(u64::MAX) (memory model present, never binding)
+    let trace = gate_trace();
+    let off = run_fleet(None, &trace);
+    let inf = run_fleet(Some(u64::MAX), &trace);
+    assert_fleet_identical(&off, &inf, "None vs u64::MAX");
+    // neither arm acts on memory...
+    for (m, name) in [(&off, "off"), (&inf, "inf")] {
+        assert_eq!(m.shed_memory, 0, "{name} shed on memory");
+        assert_eq!(m.mem_downshifts, 0, "{name} downshifted");
+        assert!(m.completed + m.shed() == 96, "{name} accounting");
+        // ...but both *account* residency: every executed batch is
+        // priced above the resident-weights floor
+        let floor = MemModel::new(ModelArch::llada_8b(), CacheMode::Dual,
+                                  CachePolicySpec::Off, 64).weights_bytes();
+        assert!(m.peak_resident_bytes() > floor,
+                "{name} peak {} under the weights floor",
+                m.peak_resident_bytes());
+        assert!(m.observations.iter().flat_map(|l| &l.observations)
+                    .all(|o| o.peak_bytes > floor),
+                "{name} recorded an unpriced batch");
+    }
+}
+
+#[test]
+fn unconstrained_study_grid_is_bit_identical_to_infinite_capacity() {
+    // the same collapse one layer up: the study machinery with the
+    // memory axis pinned at None prices every cell bit-exactly like
+    // the axis pinned at a never-binding capacity
+    let mk = |cap: Option<u64>| {
+        let mut cfg = StudyConfig::smoke(13);
+        cfg.shapes.truncate(1);
+        cfg.schedules.truncate(1);
+        cfg.caches.truncate(1);
+        cfg.mem_caps = vec![cap];
+        StudyGrid::new(cfg).run()
+    };
+    let off = mk(None);
+    let inf = mk(Some(u64::MAX));
+    assert_eq!(off.cells.len(), inf.cells.len());
+    assert!(!off.cells.is_empty());
+    for (a, b) in off.cells.iter().zip(&inf.cells) {
+        assert_eq!(a.policy, b.policy);
+        assert_eq!(a.admission, b.admission);
+        assert_eq!(a.mem_cap, None);
+        assert_eq!(b.mem_cap, Some(u64::MAX));
+        let ctx = format!("{}/{:?}/{}", a.shape, a.policy,
+                          a.admission_label());
+        assert_fleet_identical(&a.metrics, &b.metrics, &ctx);
+    }
+}
+
+#[test]
+fn no_admitted_batch_exceeds_capacity_on_random_traces() {
+    // the safety invariant under *binding* capacities: whatever the
+    // trace and however tight the budget, nothing priced above the cap
+    // ever executes — pressure degrades service, it never overcommits
+    let floor = MemModel::new(ModelArch::llada_8b(), CacheMode::Dual,
+                              CachePolicySpec::Off, 64).weights_bytes();
+    dart::stats::prop_check("admitted peak <= cap", 10, |rng| {
+        let n = 16 + (rng.next_u64() % 17) as usize;
+        let rps = 100.0 + rng.next_f64() * 400.0;
+        let seed = rng.next_u64();
+        // caps from just above the weights floor (sheds nearly
+        // everything) up past the widest plan (binds nothing)
+        let cap = floor + rng.next_u64() % (10u64 << 30);
+        (n, rps, seed, cap)
+    }, |&(n, rps, seed, cap)| {
+        let trace = generate_trace(
+            &TraceSpec::chat(n, Arrival::Poisson { rps }, seed));
+        let m = run_fleet(Some(cap), &trace);
+        if m.completed + m.shed() != n as u64 {
+            return Err(format!(
+                "conservation: {} completed + {} shed != {n}",
+                m.completed, m.shed()));
+        }
+        if m.peak_resident_bytes() > cap {
+            return Err(format!("fleet peak {} above cap {cap}",
+                               m.peak_resident_bytes()));
+        }
+        for o in m.observations.iter().flat_map(|l| &l.observations) {
+            if o.peak_bytes > cap {
+                return Err(format!(
+                    "executed batch priced at {} above cap {cap}",
+                    o.peak_bytes));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_components_sum_to_total_on_random_geometries() {
+    // the byte-accounting invariant, across precisions as well as
+    // cache modes (the memmodel unit net covers fp16 only)
+    dart::stats::prop_check("component sum", 64, |rng| {
+        let variant = 1usize << (rng.next_u64() % 6);
+        let seq = rng.next_u64() % 8192;
+        let kv = CacheMode::ALL[(rng.next_u64() % 3) as usize];
+        let fc = if rng.next_u64() % 2 == 0 {
+            CachePolicySpec::Off
+        } else {
+            CachePolicySpec::interval_default()
+        };
+        let bits = 4u32 << (rng.next_u64() % 3); // 4 / 8 / 16
+        (variant, seq, kv, fc, bits)
+    }, |&(variant, seq, kv, fc, bits)| {
+        let mm = MemModel::new(ModelArch::llada_8b(), kv, fc, 64)
+            .with_bits(bits, bits);
+        let p = mm.plan(variant, seq);
+        if p.component_sum() != p.total {
+            return Err(format!("components {} != total {}",
+                               p.component_sum(), p.total));
+        }
+        if p.weights != mm.weights_bytes() {
+            return Err("weights drifted from the arch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn feasible_variant_is_monotone_in_capacity_at_any_seq_len() {
+    let variants = [1usize, 2, 4, 8, 16];
+    dart::stats::prop_check("downshift monotone", 48, |rng| {
+        let seq = 64 + rng.next_u64() % 4096;
+        let a = rng.next_u64() % (16u64 << 30);
+        let b = rng.next_u64() % (16u64 << 30);
+        (seq, a.min(b), a.max(b))
+    }, |&(seq, lo, hi)| {
+        let mm = MemModel::new(ModelArch::llada_8b(), CacheMode::Dual,
+                               CachePolicySpec::Off, 64);
+        let floor = mm.weights_bytes();
+        let tight = mm.max_variant(&variants, seq, floor + lo);
+        let loose = mm.max_variant(&variants, seq, floor + hi);
+        match (tight, loose) {
+            (Some(t), Some(l)) if t > l => Err(format!(
+                "variant rose {l} -> {t} as capacity fell at seq {seq}")),
+            (Some(t), None) => Err(format!(
+                "variant {t} feasible under the tighter cap only")),
+            _ => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn pressured_fleet_is_deterministic_and_pressure_is_visible() {
+    // 16 GiB binds between variant 4 (~16.1 GiB at 1024 tokens) and
+    // variant 2 (~15.0 GiB): flushes downshift, and the constrained
+    // run replays bit-identically
+    let trace = gate_trace();
+    let cap = 16u64 << 30;
+    let a = run_fleet(Some(cap), &trace);
+    let b = run_fleet(Some(cap), &trace);
+    assert_fleet_identical(&a, &b, "constrained rerun");
+    assert!(a.mem_downshifts > 0 || a.shed_memory > 0,
+            "a 16 GiB cap must visibly pressure this trace");
+    assert!(a.peak_resident_bytes() <= cap, "peak above cap");
+    assert!(a.completed + a.shed() == 96, "constrained accounting");
+    // and the constrained arm is distinguishable from the free one —
+    // the memory axis is a real serving dimension, not dead plumbing
+    let free = run_fleet(None, &trace);
+    assert!(a.mem_downshifts != free.mem_downshifts
+                || a.shed_memory != free.shed_memory
+                || a.horizon_s.to_bits() != free.horizon_s.to_bits(),
+            "constrained arm indistinguishable from unconstrained");
+}
+
+#[test]
+fn observation_v3_text_is_emit_parse_emit_byte_identical() {
+    dart::stats::prop_check("v3 obs fixed point", 32, |rng| {
+        let n = 1 + (rng.next_u64() % 8) as usize;
+        let rows: Vec<Observation> = (0..n).map(|_| Observation {
+            variant: 1 << (rng.next_u64() % 5),
+            seq_len: 64 + rng.next_u64() % 4096,
+            gen_tokens: 64 + rng.next_u64() % 512,
+            total_s: rng.next_f64() * 0.5,
+            first_s: rng.next_f64() * 0.05,
+            realized_steps: 1.0 + rng.next_f64() * 16.0,
+            cache_hit_rate: rng.next_f64(),
+            peak_bytes: rng.next_u64() % (32u64 << 30),
+        }).collect();
+        rows
+    }, |rows| {
+        let log = ObservationLog {
+            device: "npu-prop".into(),
+            observations: rows.clone(),
+        };
+        let text = log.to_text();
+        let back = ObservationLog::from_text(&text)
+            .map_err(|e| format!("parse failed: {e}"))?;
+        if back.to_text() != text {
+            return Err("emit -> parse -> emit not a fixed point".into());
+        }
+        for (a, b) in rows.iter().zip(&back.observations) {
+            if a.peak_bytes != b.peak_bytes {
+                return Err(format!("peak drifted {} -> {}",
+                                   a.peak_bytes, b.peak_bytes));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pre_memmodel_observation_rows_still_parse() {
+    // v1 (6 fields) and v2 (7 fields) rows parse with peak_bytes 0 —
+    // saved logs from PRs 5–7 replay unchanged
+    let v2 = "device npu0\n4 300 192 3.2e-2 8.1e-3 16.0 0.4375\n";
+    let v1 = "device npu0\n4 300 192 3.2e-2 8.1e-3 16.0\n";
+    for (text, hit) in [(v2, 0.4375f64), (v1, 0.0)] {
+        let log = ObservationLog::from_text(text).unwrap();
+        assert_eq!(log.observations.len(), 1);
+        assert_eq!(log.observations[0].peak_bytes, 0);
+        assert_eq!(log.observations[0].cache_hit_rate.to_bits(),
+                   hit.to_bits());
+        let re = log.to_text();
+        assert_eq!(ObservationLog::from_text(&re).unwrap().to_text(), re);
+    }
+}

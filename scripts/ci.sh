@@ -105,6 +105,13 @@ if [[ "${1:-}" == "--smoke" ]]; then
     echo "== smoke: serve-cluster replay loop (warm-up -> recalibrate -> re-serve) =="
     cargo run --release -- serve-cluster --devices 2 --requests 32 \
         --recalibrate
+    echo "== smoke: memory-pressure accounting + differential gate (off == infinite capacity, bit-exact) =="
+    cargo test -q --test mem_pressure
+    echo "== smoke: mem_pressure_sweep bench (reduced trace) =="
+    cargo bench --bench mem_pressure_sweep -- --smoke
+    echo "== smoke: serve-cluster under a 18GiB per-device memory cap, calibrated =="
+    cargo run --release -- serve-cluster --devices 2 --requests 32 \
+        --calibrated --mem-cap 18GiB
     echo "== smoke: observability goldens (zero-alloc recorder + byte-stable trace summary) =="
     cargo test -q --test trace_golden
     echo "== smoke: --trace export + Chrome-trace JSON validation =="
