@@ -90,6 +90,12 @@ pub struct LatencyCurve {
     /// one. Consumers serving at a different hit rate rescale lookups
     /// by [`Self::hit_scale`].
     pub cache_hit_rate: f64,
+    /// mean active-suffix fraction the profiling billed — the
+    /// suffix-window dimension: 1.0 for a full-suffix profile, the
+    /// [`crate::window::WindowPolicySpec::serving_active_frac`]
+    /// expectation for a windowed one. Consumers serving under a
+    /// different window rescale lookups by [`Self::window_scale`].
+    pub window_frac: f64,
 }
 
 impl LatencyCurve {
@@ -101,6 +107,7 @@ impl LatencyCurve {
             steps_per_block: 16,
             expected_steps: 16.0,
             cache_hit_rate: 0.0,
+            window_frac: 1.0,
         }
     }
 
@@ -118,6 +125,24 @@ impl LatencyCurve {
     pub fn with_cache(mut self, cache_hit_rate: f64) -> Self {
         self.cache_hit_rate = cache_hit_rate.clamp(0.0, 1.0);
         self
+    }
+
+    /// Record which mean active-suffix fraction the curve was profiled
+    /// at (the suffix-window dimension).
+    pub fn with_window(mut self, window_frac: f64) -> Self {
+        self.window_frac = window_frac.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Latency multiplier for serving at active-suffix fraction
+    /// `serving_frac` from a curve profiled at [`Self::window_frac`]:
+    /// `window_cost_frac(serving) / window_cost_frac(profiled)`.
+    /// Exactly 1.0 when the fractions match (`x / x`), so matched
+    /// pricing — in particular the full-suffix default, 1.0 vs 1.0 —
+    /// is untouched bit-for-bit.
+    pub fn window_scale(&self, serving_frac: f64) -> f64 {
+        crate::window::window_cost_frac(serving_frac)
+            / crate::window::window_cost_frac(self.window_frac)
     }
 
     /// Latency multiplier for serving at feature-cache hit rate
@@ -246,12 +271,13 @@ impl LatencyCurve {
 
     // ---- persistence -----------------------------------------------------
 
-    /// Serialize to the replay format: `# dart-latency-curve v3` header,
+    /// Serialize to the replay format: `# dart-latency-curve v4` header,
     /// a `device <name>` line, a `schedule <cap> <expected>` line (the
     /// expected-steps dimension), a `cache <hit_rate>` line (the
-    /// warm/cold dimension), then one row per cell.
+    /// warm/cold dimension), a `window <frac>` line (the suffix-window
+    /// dimension), then one row per cell.
     pub fn to_text(&self) -> String {
-        let mut s = String::from("# dart-latency-curve v3\n");
+        let mut s = String::from("# dart-latency-curve v4\n");
         s.push_str(&format!("device {}\n", self.device));
         // the schedule line is the expected-steps dimension; v1 files
         // without it parse as fixed-16 (the historical profile point)
@@ -260,6 +286,9 @@ impl LatencyCurve {
         // the cache line is the feature-cache hit-rate dimension;
         // v1/v2 files without it parse as cold (hit rate 0.0)
         s.push_str(&format!("cache {:.17e}\n", self.cache_hit_rate));
+        // the window line is the suffix-window dimension; v1–v3 files
+        // without it parse as full-suffix (fraction 1.0)
+        s.push_str(&format!("window {:.17e}\n", self.window_frac));
         s.push_str("# variant bucket_lo bucket_hi gen_tokens \
                     p50_total_s p95_total_s p50_first_s p95_first_s samples\n");
         for p in &self.points {
@@ -300,6 +329,7 @@ impl LatencyCurve {
         let mut device = String::from("unknown");
         let mut schedule: Option<(u64, f64)> = None;
         let mut cache_hit: Option<f64> = None;
+        let mut window_frac: Option<f64> = None;
         let mut points = Vec::new();
         for (i, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
@@ -333,6 +363,16 @@ impl LatencyCurve {
                     return Err(bad());
                 }
                 cache_hit = Some(h);
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("window ") {
+                let bad = || format!("curve line {}: bad window {line:?}",
+                                     i + 1);
+                let w: f64 = rest.trim().parse().map_err(|_| bad())?;
+                if !w.is_finite() || !(0.0..=1.0).contains(&w) {
+                    return Err(bad());
+                }
+                window_frac = Some(w);
                 continue;
             }
             let f: Vec<&str> = line.split_whitespace().collect();
@@ -369,6 +409,9 @@ impl LatencyCurve {
         }
         if let Some(h) = cache_hit {
             curve = curve.with_cache(h);
+        }
+        if let Some(w) = window_frac {
+            curve = curve.with_window(w);
         }
         Ok(curve)
     }
@@ -516,6 +559,38 @@ mod tests {
         assert!(LatencyCurve::from_text("cache 1.5\n").is_err());
         assert!(LatencyCurve::from_text("cache -0.1\n").is_err());
         assert!(LatencyCurve::from_text("cache nan\n").is_err());
+        // ... and malformed window metadata
+        assert!(LatencyCurve::from_text("window x\n").is_err());
+        assert!(LatencyCurve::from_text("window 1.5\n").is_err());
+        assert!(LatencyCurve::from_text("window -0.1\n").is_err());
+        assert!(LatencyCurve::from_text("window nan\n").is_err());
+    }
+
+    #[test]
+    fn window_dimension_roundtrips_and_defaults() {
+        // v1–v3 files (no window line) parse as full-suffix (1.0)
+        let v3 = LatencyCurve::from_text(
+            "device npu0\nschedule 16 9.25\ncache 0.25\n\
+             1 96 256 128 0.01 0.012 0.003 0.004 5\n").unwrap();
+        assert_eq!(v3.window_frac.to_bits(), 1.0f64.to_bits());
+        // a recorded fraction survives the text roundtrip bit-exactly
+        let c = curve().with_window(0.3125);
+        let back = LatencyCurve::from_text(&c.to_text()).unwrap();
+        assert_eq!(back.window_frac.to_bits(), 0.3125f64.to_bits());
+        // window_scale: matched fractions price untouched bit-for-bit
+        assert_eq!(back.window_scale(0.3125).to_bits(), 1.0f64.to_bits());
+        assert_eq!(v3.window_scale(1.0).to_bits(), 1.0f64.to_bits());
+        // serving narrower than profiled is cheaper, wider is dearer
+        assert!(back.window_scale(0.1) < 1.0);
+        assert!(back.window_scale(1.0) > 1.0);
+        // a full-suffix curve priced for windowed serving scales by
+        // the window cost fraction
+        let narrow = v3.window_scale(0.5);
+        assert!((narrow - crate::window::window_cost_frac(0.5)).abs()
+                < 1e-15);
+        // with_window clamps into [0, 1]
+        assert_eq!(curve().with_window(7.0).window_frac, 1.0);
+        assert_eq!(curve().with_window(-7.0).window_frac, 0.0);
     }
 
     #[test]
@@ -622,6 +697,10 @@ mod tests {
             // half the curves carry a warm (cached) profile point
             c = c.with_cache(rng.next_f64());
         }
+        if rng.next_f64() < 0.5 {
+            // half the curves carry a windowed (narrowed) profile point
+            c = c.with_window(0.05 + 0.95 * rng.next_f64());
+        }
         c
     }
 
@@ -651,6 +730,9 @@ mod tests {
                 if back.cache_hit_rate.to_bits() != c.cache_hit_rate.to_bits()
                 {
                     return Err("cache dimension drifted".into());
+                }
+                if back.window_frac.to_bits() != c.window_frac.to_bits() {
+                    return Err("window dimension drifted".into());
                 }
                 Ok(())
             });
@@ -686,6 +768,9 @@ mod tests {
                 if parsed.cache_hit_rate.to_bits() != 0.0f64.to_bits() {
                     return Err("v1 default cache dimension wrong".into());
                 }
+                if parsed.window_frac.to_bits() != 1.0f64.to_bits() {
+                    return Err("v1 default window dimension wrong".into());
+                }
                 // a v2 file (schedule line, no cache line) also parses
                 // cold and upgrades stably
                 let mut v2 = String::from("# dart-latency-curve v2\n");
@@ -696,6 +781,9 @@ mod tests {
                     .map_err(|e| format!("v2 parse failed: {e}"))?;
                 if pv2.cache_hit_rate.to_bits() != 0.0f64.to_bits() {
                     return Err("v2 default cache dimension wrong".into());
+                }
+                if pv2.window_frac.to_bits() != 1.0f64.to_bits() {
+                    return Err("v2 default window dimension wrong".into());
                 }
                 if parsed.points.len() != c.points.len() {
                     return Err("v1 row count drifted".into());

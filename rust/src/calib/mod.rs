@@ -48,6 +48,16 @@
 //! and a curve replayed at a different hit rate rescales via
 //! [`LatencyCurve::hit_scale`] — so admission can price warm
 //! steady-state serving against cold first blocks from one profile.
+//!
+//! And a **suffix-window dimension** ([`LatencyCurve::window_frac`]):
+//! profiling bills the configured suffix-window policy's per-block
+//! active-suffix fractions
+//! ([`crate::window::WindowPolicySpec::active_suffix_len`], the S12
+//! closed form) and records the serving expectation, and a curve
+//! replayed under a different window rescales via
+//! [`LatencyCurve::window_scale`] — so long-form admission prices
+//! windowed serving honestly from a chat-profiled curve (text format
+//! v4; v1–v3 files parse as full-suffix).
 
 pub mod curve;
 pub mod delta;

@@ -22,6 +22,7 @@ use crate::sim::analytical::{AnalyticalSim, PrecisionConfig};
 use crate::sim::cycle::CycleSim;
 use crate::stats::quantile;
 use crate::util::SplitMix64;
+use crate::window::WindowPolicySpec;
 
 use super::curve::{CurvePoint, LatencyCurve};
 
@@ -46,6 +47,10 @@ pub struct CalibConfig {
     /// ([`crate::cache::CachePlan`]) and the curve records the hit-rate
     /// expectation ([`LatencyCurve::cache_hit_rate`])
     pub feature_cache: CachePolicySpec,
+    /// suffix-window policy the profile bills: cells are priced at the
+    /// policy's per-block active-suffix fractions and the curve records
+    /// the serving expectation ([`LatencyCurve::window_frac`])
+    pub window: WindowPolicySpec,
     pub seed: u64,
 }
 
@@ -67,6 +72,7 @@ impl CalibConfig {
             steps_per_block: 16,
             schedule: ScheduleSpec::Fixed,
             feature_cache: CachePolicySpec::Off,
+            window: WindowPolicySpec::Full,
             seed: 0xCA11B,
         }
     }
@@ -127,6 +133,12 @@ impl Calibrator {
                                  REF_N_BLOCKS);
         let hit_rate = self.cfg.feature_cache.serving_hit_rate(
             self.cfg.block_len as usize, self.cfg.steps_per_block as usize);
+        // one serving active-suffix expectation tags the curve; Full is
+        // exactly 1.0 and run_windowed is bit-identical to run_cached
+        // there, so full-suffix profiles stay bit-identical to the
+        // pre-window profiler
+        let window_frac =
+            self.cfg.window.serving_active_frac(self.cfg.block_len as usize);
         let mut points = Vec::new();
         for &variant in &self.cfg.variants {
             for &(lo, hi) in &self.cfg.buckets {
@@ -142,7 +154,8 @@ impl Calibrator {
                 for _ in 0..n {
                     let w = self.draw_workload(&mut rng, variant, lo, hi);
                     let total =
-                        self.sim.run_cached(&w, expected_steps, &plan)
+                        self.sim.run_windowed(&w, expected_steps, &plan,
+                                              &self.cfg.window)
                             .total_s;
                     totals.push(total);
                     firsts.push(total / w.n_blocks().max(1) as f64);
@@ -164,6 +177,7 @@ impl Calibrator {
         LatencyCurve::new(device, points)
             .with_schedule(self.cfg.steps_per_block, expected_steps)
             .with_cache(hit_rate)
+            .with_window(window_frac)
     }
 }
 
@@ -345,6 +359,42 @@ mod tests {
         let back = LatencyCurve::from_text(&warm.to_text()).unwrap();
         assert_eq!(back.cache_hit_rate.to_bits(),
                    warm.cache_hit_rate.to_bits());
+    }
+
+    #[test]
+    fn windowed_profile_is_cheaper_and_full_is_bit_identical() {
+        use crate::calib::curve::Pct;
+        let mk = |window| {
+            let mut cfg = CalibConfig::serving_default(&[1, 4]);
+            cfg.samples_per_cell = 3;
+            cfg.window = window;
+            Calibrator::new(HwConfig::dart_default(), ModelArch::llada_8b(),
+                            CacheMode::Dual, cfg).profile("npu0")
+        };
+        let full = mk(WindowPolicySpec::Full);
+        // a window wider than every profiled suffix is degenerate: the
+        // serving fraction is exactly 1.0 and every cell prices
+        // bit-identically to the full-suffix profile
+        let wide = mk(WindowPolicySpec::Sliding { window: 1 << 20 });
+        assert_eq!(full.window_frac.to_bits(), 1.0f64.to_bits());
+        assert_eq!(wide.window_frac.to_bits(), 1.0f64.to_bits());
+        for (a, b) in full.points.iter().zip(&wide.points) {
+            assert_eq!(a.p50_total_s.to_bits(), b.p50_total_s.to_bits());
+            assert_eq!(a.p95_first_s.to_bits(), b.p95_first_s.to_bits());
+        }
+        // a decay window records a narrowed fraction and cheaper cells
+        let narrow = mk(WindowPolicySpec::decay_default());
+        assert!(narrow.window_frac > 0.0 && narrow.window_frac < 1.0,
+                "window frac {}", narrow.window_frac);
+        let tf = full.total_s(4, 1500, Pct::P50).unwrap();
+        let tn = narrow.total_s(4, 1500, Pct::P50).unwrap();
+        assert!(tn < tf, "windowed {tn} vs full {tf}");
+        assert!(narrow.measured_tokens_per_s().unwrap()
+                > full.measured_tokens_per_s().unwrap());
+        // the recorded dimension survives the text roundtrip
+        let back = LatencyCurve::from_text(&narrow.to_text()).unwrap();
+        assert_eq!(back.window_frac.to_bits(),
+                   narrow.window_frac.to_bits());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! utilization, and padding-waste tokens — the fleet analogue of
 //! [`crate::coordinator::Metrics`], rendered through [`crate::report`].
 
+use crate::cluster::workload::RequestClass;
 use crate::memmodel::fmt_bytes;
 use crate::replay::{Observation, ObservationLog};
 use crate::report::{self, Table};
@@ -85,6 +86,12 @@ pub struct FleetMetrics {
     /// tokens burned padding short requests up to the batch's max
     /// lengths (ragged sequence padding inside real lanes)
     pub ragged_pad_tokens: u64,
+    /// completions per request class, indexed by
+    /// [`RequestClass::index`] — all-chat runs leave the long-form slot
+    /// at 0 and the per-class report line suppressed
+    pub class_completed: [u64; 2],
+    /// sheds per request class (any reason), same index space
+    pub class_shed: [u64; 2],
     /// virtual-time span of the run (last completion), seconds
     pub horizon_s: f64,
     pub devices: Vec<DeviceStats>,
@@ -115,6 +122,8 @@ impl FleetMetrics {
             slo_tokens: 0,
             padded_lane_tokens: 0,
             ragged_pad_tokens: 0,
+            class_completed: [0; 2],
+            class_shed: [0; 2],
             horizon_s: 0.0,
             observations: device_names.iter()
                 .map(|name| ObservationLog::new(name))
@@ -129,8 +138,9 @@ impl FleetMetrics {
     #[allow(clippy::too_many_arguments)]
     pub fn record_completion(&mut self, device: usize, ttft_s: f64,
                              tpot_s: f64, e2e_s: f64, gen_len: usize,
-                             slo_met: bool) {
+                             slo_met: bool, class: RequestClass) {
         self.completed += 1;
+        self.class_completed[class.index()] += 1;
         self.tokens += gen_len as u64;
         self.ttft.push(ttft_s);
         self.tpot.push(tpot_s);
@@ -144,13 +154,22 @@ impl FleetMetrics {
         d.tokens += gen_len as u64;
     }
 
-    pub fn record_shed(&mut self, reason: ShedReason) {
+    pub fn record_shed(&mut self, reason: ShedReason,
+                       class: RequestClass) {
+        self.class_shed[class.index()] += 1;
         match reason {
             ShedReason::SloPredicted => self.shed_slo += 1,
             ShedReason::Capacity => self.shed_capacity += 1,
             ShedReason::RetryExhausted => self.shed_retry += 1,
             ShedReason::Memory => self.shed_memory += 1,
         }
+    }
+
+    /// Offered / completed / shed for one request class.
+    pub fn class_counts(&self, class: RequestClass) -> (u64, u64, u64) {
+        let i = class.index();
+        (self.class_completed[i] + self.class_shed[i],
+         self.class_completed[i], self.class_shed[i])
     }
 
     /// Append an executed-batch observation to a device's log, bounded
@@ -304,6 +323,17 @@ impl FleetMetrics {
                 fmt_bytes(self.mean_resident_bytes().round() as u64),
                 self.mem_downshifts));
         }
+        // per-class attribution only appears once the long-form class
+        // participates, so all-chat reports stay byte-identical to the
+        // pre-class format
+        if self.class_completed[1] + self.class_shed[1] > 0 {
+            let (co, cc, cs) = self.class_counts(RequestClass::Chat);
+            let (lo, lc, ls) = self.class_counts(RequestClass::LongForm);
+            out.push_str(&format!(
+                "per-class: chat {co} offered ({cc} completed / {cs} \
+                 shed)  long-form {lo} offered ({lc} completed / {ls} \
+                 shed)\n"));
+        }
         if self.obs_truncated > 0 {
             out.push_str(&format!(
                 "observation log truncated: kept {} of {} \
@@ -350,10 +380,12 @@ mod tests {
         m.horizon_s = 10.0;
         m.devices[0].busy_s = 8.0;
         m.devices[1].busy_s = 4.0;
-        m.record_completion(0, 0.5, 0.01, 2.0, 100, true);
-        m.record_completion(1, 3.0, 0.05, 9.0, 200, false);
-        m.record_shed(ShedReason::Capacity);
-        m.record_shed(ShedReason::SloPredicted);
+        m.record_completion(0, 0.5, 0.01, 2.0, 100, true,
+                            RequestClass::Chat);
+        m.record_completion(1, 3.0, 0.05, 9.0, 200, false,
+                            RequestClass::Chat);
+        m.record_shed(ShedReason::Capacity, RequestClass::Chat);
+        m.record_shed(ShedReason::SloPredicted, RequestClass::Chat);
         m.padded_lane_tokens = 50;
         m.ragged_pad_tokens = 50;
         m
@@ -378,8 +410,8 @@ mod tests {
     #[test]
     fn shed_reasons_attribute_separately() {
         let mut m = sample();
-        m.record_shed(ShedReason::RetryExhausted);
-        m.record_shed(ShedReason::Memory);
+        m.record_shed(ShedReason::RetryExhausted, RequestClass::Chat);
+        m.record_shed(ShedReason::Memory, RequestClass::Chat);
         assert_eq!(m.shed_slo, 1);
         assert_eq!(m.shed_capacity, 1);
         assert_eq!(m.shed_retry, 1);
@@ -444,6 +476,32 @@ mod tests {
         }
         assert_eq!(small.obs_truncated, 0);
         assert!(!small.report(None).contains("truncated"));
+    }
+
+    #[test]
+    fn per_class_counters_and_gated_report_line() {
+        // chat-only runs never show the per-class line — the report
+        // stays byte-compatible with the pre-class format
+        let chat_only = sample();
+        assert!(!chat_only.report(None).contains("per-class"),
+                "{}", chat_only.report(None));
+        assert_eq!(chat_only.class_counts(RequestClass::Chat), (4, 2, 2));
+        assert_eq!(chat_only.class_counts(RequestClass::LongForm),
+                   (0, 0, 0));
+        // once long-form participates the attribution appears
+        let mut m = sample();
+        m.record_completion(0, 4.0, 0.02, 40.0, 16384, true,
+                            RequestClass::LongForm);
+        m.record_shed(ShedReason::Memory, RequestClass::LongForm);
+        assert_eq!(m.class_counts(RequestClass::LongForm), (2, 1, 1));
+        // per-class offered sums to the fleet rollup
+        let (co, ..) = m.class_counts(RequestClass::Chat);
+        let (lo, ..) = m.class_counts(RequestClass::LongForm);
+        assert_eq!(co + lo, m.offered());
+        let r = m.report(None);
+        assert!(r.contains(
+            "per-class: chat 4 offered (2 completed / 2 shed)  \
+             long-form 2 offered (1 completed / 1 shed)"), "{r}");
     }
 
     #[test]

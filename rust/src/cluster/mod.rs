@@ -39,8 +39,8 @@ pub use router::{DeviceLoad, RoutePolicy, Router};
 pub use scheduler::{fleet_capacity_tps, FleetSim, SloConfig};
 pub use topology::{ClusterTopology, DeviceSpec, InterconnectModel};
 pub use workload::{chat_offered_rps, generate_trace, trace_from_text,
-                   trace_to_text, Arrival, Diurnal, MixEntry, TraceRequest,
-                   TraceSpec};
+                   trace_to_text, Arrival, Diurnal, MixEntry, RequestClass,
+                   TraceRequest, TraceSpec};
 
 use std::path::Path;
 use std::sync::mpsc::Receiver;

@@ -46,6 +46,28 @@
 //! batch's reuse steps stay aligned across lanes. With the policy
 //! `Off`, every phase is 0 and every scale is exactly 1.0 — the
 //! scheduler is bit-identical to the pre-cache fleet.
+//!
+//! The fleet's suffix-window policy ([`ClusterTopology::window`],
+//! docs/ARCHITECTURE.md S12) follows the same two-path shape: the
+//! analytic service model prices batches through
+//! [`crate::sim::analytical::AnalyticalSim::run_windowed`] (each
+//! block's suffix work scaled to the policy's active fraction), curve
+//! lookups rescale by [`LatencyCurve::window_scale`], and — the part
+//! that composes with the memmodel — admission feasibility and the
+//! batcher's flush clamp price residency at the *active* suffix
+//! ([`crate::memmodel::MemModel::plan_windowed`]), so windowing
+//! directly relieves [`super::fleet_metrics::ShedReason::Memory`]
+//! pressure on long requests. With the policy `Full` every scale is
+//! exactly 1.0 and every active length equals the full length — the
+//! scheduler is bit-identical to the pre-window fleet
+//! (`rust/tests/window_equivalence.rs`).
+//!
+//! Requests carry a serving class
+//! ([`crate::cluster::RequestClass`]): per-class SLO deadlines
+//! ([`SloConfig::ttft_for`] — long-form trades TTFT for throughput),
+//! per-class denoising schedules ([`ClusterTopology::schedule_for`]),
+//! and class-separated batching (the class joins the refresh phase, so
+//! a chat turn never pads out to a 32K-lane batch).
 
 use std::collections::HashMap;
 
@@ -60,15 +82,27 @@ use crate::sim::analytical::{AnalyticalSim, PrecisionConfig};
 use super::fleet_metrics::{FleetMetrics, ShedReason};
 use super::router::{DeviceLoad, RoutePolicy, Router};
 use super::topology::{ClusterTopology, DeviceSpec};
-use super::workload::TraceRequest;
+use super::workload::{RequestClass, TraceRequest};
+use crate::window::WindowPolicySpec;
 
 /// Service-level objectives and the shed/retry policy around them.
 #[derive(Clone, Copy, Debug)]
 pub struct SloConfig {
-    /// time-to-first-token-block deadline, seconds
+    /// time-to-first-token-block deadline, seconds (the chat-class
+    /// baseline; see [`Self::ttft_for`])
     pub ttft_s: f64,
     /// per-token pace deadline after the first block, seconds/token
+    /// (chat-class baseline; see [`Self::tpot_for`])
     pub tpot_s: f64,
+    /// per-class deadline relaxation over the baselines, indexed by
+    /// [`RequestClass::index`]. Chat is pinned at exactly 1.0 (so
+    /// chat-only fleets are bit-identical to the pre-class scheduler);
+    /// long-form defaults to a TTFT relax of
+    /// [`Self::LONG_FORM_TTFT_RELAX`] and a TPOT relax of
+    /// [`Self::LONG_FORM_TPOT_RELAX`] — a 32K-token generation is a
+    /// batch job that trades first-token latency for sustained pace.
+    pub class_ttft_mult: [f64; 2],
+    pub class_tpot_mult: [f64; 2],
     /// additional placement attempts after the first-ranked device
     pub max_retries: usize,
     /// predict-and-shed at admission (false = admit everything and let
@@ -101,11 +135,38 @@ impl SloConfig {
             }
             seen.push(key);
             let mut svc = ServiceModel::new(spec, topo);
-            let (total, first) = svc.service(1, 128, gen);
+            let (total, first) =
+                svc.service(1, 128, gen, RequestClass::Chat);
             ttft_s = ttft_s.max(4.0 * first);
             tpot_s = tpot_s.max(4.0 * (total - first) / tail_tokens);
         }
-        SloConfig { ttft_s, tpot_s, max_retries: 2, admission: true }
+        SloConfig {
+            ttft_s,
+            tpot_s,
+            class_ttft_mult: [1.0, Self::LONG_FORM_TTFT_RELAX],
+            class_tpot_mult: [1.0, Self::LONG_FORM_TPOT_RELAX],
+            max_retries: 2,
+            admission: true,
+        }
+    }
+
+    /// Default long-form TTFT relaxation: the first block of an 8–64K
+    /// generation may take 8x the chat deadline.
+    pub const LONG_FORM_TTFT_RELAX: f64 = 8.0;
+    /// Default long-form TPOT relaxation: sustained pace matters more
+    /// than for chat, so only 2x.
+    pub const LONG_FORM_TPOT_RELAX: f64 = 2.0;
+
+    /// The TTFT deadline a request of `class` is held to. Chat is the
+    /// baseline times exactly 1.0 — bit-identical to the classless
+    /// deadline.
+    pub fn ttft_for(&self, class: RequestClass) -> f64 {
+        self.ttft_s * self.class_ttft_mult[class.index()]
+    }
+
+    /// The TPOT deadline a request of `class` is held to.
+    pub fn tpot_for(&self, class: RequestClass) -> f64 {
+        self.tpot_s * self.class_tpot_mult[class.index()]
     }
 }
 
@@ -120,13 +181,9 @@ pub(crate) struct ServiceModel {
     cache: crate::config::CacheMode,
     block_len: u64,
     steps_per_block: u64,
-    /// expected *realized* denoising steps per block under the fleet's
-    /// schedule policy — what every service quantity bills instead of
-    /// the configured cap (equal to the cap under `Fixed`)
-    expected_steps: f64,
-    /// latency multiplier for curve lookups: serving expectation over
-    /// the curve's profiled expectation (exactly 1.0 when the curve was
-    /// profiled under the serving schedule)
+    /// latency multiplier for curve lookups: the fleet-wide serving
+    /// expectation over the curve's profiled expectation (exactly 1.0
+    /// when the curve was profiled under the serving schedule)
     curve_scale: f64,
     /// the fleet feature-cache policy's expected refresh plan — what
     /// the analytic path bills through
@@ -145,7 +202,23 @@ pub(crate) struct ServiceModel {
     /// `curve.hit_scale(0.0)` — a fresh request's first block cannot
     /// hit an unpopulated cache, so admission prices it uncached
     cold_scale: f64,
-    memo: HashMap<(usize, usize, usize), (f64, f64)>,
+    /// the fleet suffix-window policy — the analytic path bills
+    /// batches through [`AnalyticalSim::run_windowed`] under it
+    /// (`Full` ≡ `run_cached`, bit for bit) and admission prices
+    /// residency at its active suffix
+    window: WindowPolicySpec,
+    /// window multiplier for curve lookups:
+    /// `curve.window_scale(serving active fraction)` — exactly 1.0 when
+    /// the curve was profiled under the serving window (`x / x`)
+    window_scale: f64,
+    /// expected realized steps per block under each class's schedule
+    /// ([`ClusterTopology::schedule_for`]), indexed by
+    /// [`RequestClass::index`]; chat equals [`Self::expected_steps`]
+    /// whenever no chat override is set
+    steps_by_class: [f64; 2],
+    /// per-class curve step rescale, same index space
+    curve_scale_by_class: [f64; 2],
+    memo: HashMap<(usize, usize, usize, usize), (f64, f64)>,
     /// generated-tokens/s at the largest variant — the router's
     /// backlog→seconds conversion factor (measured p50 pace when a
     /// curve is attached, analytic calibration otherwise)
@@ -180,18 +253,37 @@ impl ServiceModel {
         let cold_scale = spec.curve.as_ref()
             .map(|c| c.hit_scale(0.0))
             .unwrap_or(1.0);
+        let window_scale = spec.curve.as_ref()
+            .map(|c| c.window_scale(
+                topo.window.serving_active_frac(topo.block_len as usize)))
+            .unwrap_or(1.0);
+        let steps_by_class = [
+            topo.schedule_for(RequestClass::Chat).expected_steps(
+                topo.block_len as usize, topo.steps_per_block as usize),
+            topo.schedule_for(RequestClass::LongForm).expected_steps(
+                topo.block_len as usize, topo.steps_per_block as usize),
+        ];
+        let curve_scale_by_class = [
+            spec.curve.as_ref().map(|c| c.step_scale(steps_by_class[0]))
+                .unwrap_or(1.0),
+            spec.curve.as_ref().map(|c| c.step_scale(steps_by_class[1]))
+                .unwrap_or(1.0),
+        ];
         let mut m = ServiceModel {
             sim,
             model: topo.model.clone(),
             cache: spec.cache,
             block_len: topo.block_len,
             steps_per_block: topo.steps_per_block,
-            expected_steps,
             curve_scale,
             cache_plan,
             serving_hit,
             warm_scale,
             cold_scale,
+            window: topo.window,
+            window_scale,
+            steps_by_class,
+            curve_scale_by_class,
             memo: HashMap::new(),
             tokens_per_s: 1.0,
             curve: spec.curve.clone(),
@@ -201,16 +293,17 @@ impl ServiceModel {
         };
         let biggest = *spec.batch_variants.iter().max().unwrap_or(&1);
         let gen = (4 * topo.block_len) as usize;
-        let (total, _) = m.service(biggest, 128, gen);
+        let (total, _) = m.service(biggest, 128, gen, RequestClass::Chat);
         m.tokens_per_s = (biggest * gen) as f64 / total.max(1e-9);
         if let Some(tps) = m.curve.as_ref()
             .and_then(|c| c.measured_tokens_per_s())
         {
-            // measured pace reflects the curve's own schedule and cache
-            // policy; rescale to the serving ones (warm steady state —
-            // no-op on a matched profile)
-            m.tokens_per_s =
-                tps / (m.curve_scale * m.warm_scale).max(1e-9);
+            // measured pace reflects the curve's own schedule, cache
+            // policy, and window; rescale to the serving ones (warm
+            // steady state — no-op on a matched profile)
+            m.tokens_per_s = tps
+                / (m.curve_scale * m.warm_scale * m.window_scale)
+                    .max(1e-9);
         }
         m
     }
@@ -223,27 +316,31 @@ impl ServiceModel {
     /// steps, so variable-step requests are priced honestly even from a
     /// fixed-schedule profile.
     pub(crate) fn first_block_p95(&mut self, variant: usize, prompt: usize,
-                                  gen: usize) -> f64 {
+                                  gen: usize, class: RequestClass) -> f64 {
         if let Some(c) = &self.curve {
             if let Some(f) = c.first_block_s(
                 variant, (prompt + gen) as u64, Pct::P95)
             {
                 // cold cache pricing: the first block of a fresh
                 // request recomputes everything, so a warm-profiled
-                // curve is rescaled back up (exactly 1.0 off/unmatched)
-                return f * self.curve_scale * self.cold_scale;
+                // curve is rescaled back up (exactly 1.0 off/unmatched);
+                // the class's schedule and the serving window rescale
+                // too (both exactly 1.0 on a matched chat/Full fleet)
+                return f * self.curve_scale_by_class[class.index()]
+                    * self.cold_scale * self.window_scale;
             }
         }
-        self.service(variant, prompt, gen).1
+        self.service(variant, prompt, gen, class).1
     }
 
     /// (total_s, first_block_s) for a batch of `variant` lanes padded to
-    /// `prompt` x `gen` tokens, billed at the schedule's expected
-    /// realized steps. First-block time is approximated as an equal
-    /// share across generation blocks.
+    /// `prompt` x `gen` tokens, billed at the class's schedule expected
+    /// realized steps under the fleet window policy. First-block time is
+    /// approximated as an equal share across generation blocks.
     pub(crate) fn service(&mut self, variant: usize, prompt: usize,
-                          gen: usize) -> (f64, f64) {
-        if let Some(&hit) = self.memo.get(&(variant, prompt, gen)) {
+                          gen: usize, class: RequestClass) -> (f64, f64) {
+        let key = (variant, prompt, gen, class.index());
+        if let Some(&hit) = self.memo.get(&key) {
             return hit;
         }
         let w = Workload {
@@ -256,11 +353,22 @@ impl ServiceModel {
             cache: self.cache,
         };
         let total = self.sim
-            .run_cached(&w, self.expected_steps, &self.cache_plan)
+            .run_windowed(&w, self.steps_by_class[class.index()],
+                          &self.cache_plan, &self.window)
             .total_s;
         let first = total / w.n_blocks().max(1) as f64;
-        self.memo.insert((variant, prompt, gen), (total, first));
+        self.memo.insert(key, (total, first));
         (total, first)
+    }
+
+    /// Resident tokens a request effectively holds on-device under the
+    /// fleet window policy: full prompt plus *active* suffix (equal to
+    /// the full length under `Full` — exact integer identity). Both
+    /// admission feasibility and the batcher's flush clamp price this,
+    /// so the two can never disagree about what fits.
+    pub(crate) fn effective_resident_tokens(&self, prompt: usize,
+                                            gen: usize) -> u64 {
+        (prompt + self.window.active_suffix_len(gen)) as u64
     }
 }
 
@@ -301,10 +409,15 @@ impl SimDevice {
                     topo.feature_cache.serving_hit_rate(
                         topo.block_len as usize,
                         topo.steps_per_block as usize));
+                // flush costs carry the window rescale too (exactly 1.0
+                // on a Full or matched-window fleet)
+                let wscale = curve.window_scale(
+                    topo.window.serving_active_frac(
+                        topo.block_len as usize));
                 let costs: Vec<(usize, f64)> = curve
                     .variant_costs(curve.mid_seq_len(), Pct::P50)
                     .into_iter()
-                    .map(|(v, s)| (v, s * scale * hscale))
+                    .map(|(v, s)| (v, s * scale * hscale * wscale))
                     .collect();
                 FlushPolicy::CostBased(CostModel::from_pairs(&costs))
             }
@@ -478,10 +591,16 @@ impl FleetSim {
         let order = self.router.rank(&loads);
         let dispatch = self.topo.interconnect
             .dispatch_s(self.topo.request_bytes(req.prompt_len));
+        // the serving class joins the refresh phase in the high bits:
+        // classes run different schedules and deadline envelopes, so a
+        // chat turn must never pad out to a long-form lane's geometry.
+        // Chat contributes 0 — chat-only traces keep the pre-class
+        // phases bit for bit.
         let phase = refresh_phase(
             &self.topo.feature_cache,
             crate::util::ceil_div(req.gen_len as u64, self.topo.block_len)
-                .max(1));
+                .max(1))
+            | ((req.class.index() as u64) << 32);
 
         let mut saw_capacity_reject = false;
         let mut saw_memory_reject = false;
@@ -502,7 +621,12 @@ impl FleetSim {
             // solo but not batched).
             if let Some(cap) = d.mem_cap {
                 let smallest = *d.batcher.cfg.variants.first().unwrap();
-                let resident = (req.prompt_len + req.gen_len) as u64;
+                // residency is priced at the window policy's *active*
+                // suffix — the composition that lets a windowed fleet
+                // admit long-form requests a full-suffix fleet must
+                // shed (exact identity under Full)
+                let resident = d.svc.effective_resident_tokens(
+                    req.prompt_len, req.gen_len);
                 if !d.svc.mem.fits(smallest, resident, cap) {
                     saw_memory_reject = true;
                     continue;
@@ -514,18 +638,22 @@ impl FleetSim {
                 // measured-percentile TTFT predictor: p95 first-block
                 // from the device curve when calibrated, analytic mean
                 // otherwise (see ServiceModel::first_block_p95)
-                let first =
-                    d.svc.first_block_p95(fill, req.prompt_len, req.gen_len);
+                let first = d.svc.first_block_p95(
+                    fill, req.prompt_len, req.gen_len, req.class);
                 let max_wait = d.batcher.cfg.max_wait.as_secs_f64();
                 let predicted_ttft =
                     dispatch + loads[di].outstanding_s + max_wait + first;
-                if predicted_ttft > self.slo.ttft_s {
+                if predicted_ttft > self.slo.ttft_for(req.class) {
                     continue;
                 }
             }
+            // the flush clamp prices the same windowed residency as the
+            // feasibility check above
+            let resident = d.svc.effective_resident_tokens(
+                req.prompt_len, req.gen_len);
             if d.batcher.push_at_phased_mem(
                 InFlight { req, dispatch_s: dispatch }, now, phase,
-                (req.prompt_len + req.gen_len) as u64)
+                resident)
             {
                 metrics.admitted += 1;
                 rec.span_closed("fleet", "admit", now, now);
@@ -548,7 +676,7 @@ impl FleetSim {
         } else {
             ShedReason::SloPredicted
         };
-        metrics.record_shed(reason);
+        metrics.record_shed(reason, req.class);
         rec.span_closed("fleet", "shed", now, now);
         rec.count(match reason {
             ShedReason::SloPredicted => "fleet.shed.slo",
@@ -568,7 +696,10 @@ fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
     let variant = plan.variant;
     let pmax = plan.items.iter().map(|i| i.req.prompt_len).max().unwrap();
     let gmax = plan.items.iter().map(|i| i.req.gen_len).max().unwrap();
-    let (total, first) = d.svc.service(variant, pmax, gmax);
+    // class-phased admission guarantees a batch is class-homogeneous,
+    // so any lane names the batch's class
+    let class = plan.items[0].req.class;
+    let (total, first) = d.svc.service(variant, pmax, gmax, class);
     rec.span_closed("fleet", "batch", now, now + total);
     rec.count("fleet.batches", 1.0);
     rec.count("fleet.padded_lanes", (variant - real) as f64);
@@ -584,8 +715,11 @@ fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
     // device's memory model whether or not a capacity is set (the plan
     // is a pure function of the batch geometry, so the unconstrained
     // fleet's numbers are identical to a fleet with an infinite cap —
-    // part of the mem_pressure.rs differential gate)
-    let peak_bytes = d.svc.mem.plan(variant, (pmax + gmax) as u64).total;
+    // part of the mem_pressure.rs differential gate). Windowed fleets
+    // hold only the active suffix resident (exact identity under Full).
+    let peak_bytes = d.svc.mem
+        .plan_windowed(variant, pmax as u64, gmax as u64, &d.svc.window)
+        .total;
 
     let ds = &mut metrics.devices[di];
     ds.batches += 1;
@@ -607,7 +741,7 @@ fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
         gen_tokens: gmax as u64,
         total_s: total,
         first_s: first,
-        realized_steps: d.svc.expected_steps,
+        realized_steps: d.svc.steps_by_class[class.index()],
         cache_hit_rate: d.svc.serving_hit,
         peak_bytes,
     });
@@ -629,10 +763,11 @@ fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
         } else {
             0.0
         };
-        let slo_met = ttft <= slo.ttft_s && tpot <= slo.tpot_s;
+        let slo_met = ttft <= slo.ttft_for(inf.req.class)
+            && tpot <= slo.tpot_for(inf.req.class);
         metrics.ragged_pad_tokens += (gmax - inf.req.gen_len) as u64;
         metrics.record_completion(di, ttft, tpot, e2e, inf.req.gen_len,
-                                  slo_met);
+                                  slo_met, inf.req.class);
     }
 }
 
@@ -741,15 +876,21 @@ mod tests {
     fn service_model_memoizes_and_scales() {
         let topo = small_topo(1);
         let mut svc = ServiceModel::new(&topo.devices[0], &topo);
-        let (t1, f1) = svc.service(1, 128, 256);
-        let (t1b, _) = svc.service(1, 128, 256);
+        let c = RequestClass::Chat;
+        let (t1, f1) = svc.service(1, 128, 256, c);
+        let (t1b, _) = svc.service(1, 128, 256, c);
         assert_eq!(t1, t1b);
         assert!(f1 < t1);
-        let (t16, _) = svc.service(16, 128, 256);
+        let (t16, _) = svc.service(16, 128, 256, c);
         // batching amortizes: 16 lanes cost far less than 16 singles
         assert!(t16 < 16.0 * t1, "t16 {t16} vs 16*t1 {}", 16.0 * t1);
-        let (tlong, _) = svc.service(1, 128, 512);
+        let (tlong, _) = svc.service(1, 128, 512, c);
         assert!(tlong > t1);
+        // the class dimension prices differently once schedules differ:
+        // long-form rides SlowFast by default, so the same cell is
+        // cheaper under the long-form class
+        let (tlf, _) = svc.service(1, 128, 512, RequestClass::LongForm);
+        assert!(tlf < tlong, "long-form {tlf} vs chat {tlong}");
     }
 
     #[test]
@@ -797,14 +938,14 @@ mod tests {
         // the p95 predictor is at least as conservative as the curve's
         // own p50 at the same cell
         let curve = cal_topo.devices[0].curve.as_ref().unwrap();
-        let f95 = measured.first_block_p95(4, 128, 256);
+        let f95 = measured.first_block_p95(4, 128, 256, RequestClass::Chat);
         let f50 = curve
             .first_block_s(4, 384, crate::calib::Pct::P50)
             .unwrap();
         assert!(f95 >= f50, "p95 {f95} vs p50 {f50}");
         // uncalibrated falls back to the analytic mean
-        let fa = analytic.first_block_p95(4, 128, 256);
-        let (_, sa) = analytic.service(4, 128, 256);
+        let fa = analytic.first_block_p95(4, 128, 256, RequestClass::Chat);
+        let (_, sa) = analytic.service(4, 128, 256, RequestClass::Chat);
         assert!((fa - sa).abs() < 1e-15);
     }
 
@@ -818,8 +959,9 @@ mod tests {
         fast.schedule = ScheduleSpec::slowfast_default();
         let mut svc_fixed = ServiceModel::new(&fixed.devices[0], &fixed);
         let mut svc_fast = ServiceModel::new(&fast.devices[0], &fast);
-        let (tf, ff) = svc_fixed.service(4, 128, 256);
-        let (ta, fa) = svc_fast.service(4, 128, 256);
+        let c = RequestClass::Chat;
+        let (tf, ff) = svc_fixed.service(4, 128, 256, c);
+        let (ta, fa) = svc_fast.service(4, 128, 256, c);
         assert!(ta < tf, "adaptive total {ta} vs fixed {tf}");
         assert!(fa < ff, "adaptive first {fa} vs fixed {ff}");
         assert!(svc_fast.tokens_per_s > svc_fixed.tokens_per_s);
@@ -835,8 +977,8 @@ mod tests {
         let mut m_fixed =
             ServiceModel::new(&cal_fixed.devices[0], &cal_fixed);
         let mut m_fast = ServiceModel::new(&cal_fast.devices[0], &cal_fast);
-        let pf = m_fixed.first_block_p95(4, 128, 256);
-        let pa = m_fast.first_block_p95(4, 128, 256);
+        let pf = m_fixed.first_block_p95(4, 128, 256, c);
+        let pa = m_fast.first_block_p95(4, 128, 256, c);
         assert!(pa < pf, "adaptive p95 {pa} vs fixed {pf}");
 
         // cross-schedule replay: a fixed-profiled curve served under
@@ -846,7 +988,7 @@ mod tests {
         replayed.schedule = ScheduleSpec::slowfast_default();
         let mut m_replay =
             ServiceModel::new(&replayed.devices[0], &replayed);
-        let pr = m_replay.first_block_p95(4, 128, 256);
+        let pr = m_replay.first_block_p95(4, 128, 256, c);
         assert!(pr < pf, "rescaled replay {pr} vs fixed {pf}");
     }
 
@@ -896,6 +1038,7 @@ mod tests {
         // immediately — the fleet horizon shifts earlier by max_wait.
         let req = |id: u64, t: f64| crate::cluster::TraceRequest {
             id, arrival_s: t, prompt_len: 128, gen_len: 256,
+            class: RequestClass::Chat,
         };
         let mut trace: Vec<crate::cluster::TraceRequest> =
             (0..5).map(|i| req(i, 0.0)).collect();
@@ -991,8 +1134,9 @@ mod tests {
         let mut svc_off = ServiceModel::new(&off_topo.devices[0], &off_topo);
         let mut svc_warm =
             ServiceModel::new(&warm_topo.devices[0], &warm_topo);
-        let (to, fo) = svc_off.service(4, 128, 256);
-        let (tw, fw) = svc_warm.service(4, 128, 256);
+        let c = RequestClass::Chat;
+        let (to, fo) = svc_off.service(4, 128, 256, c);
+        let (tw, fw) = svc_warm.service(4, 128, 256, c);
         assert!(tw < to, "cached total {tw} vs off {to}");
         assert!(fw < fo);
         assert!(svc_warm.tokens_per_s > svc_off.tokens_per_s);
@@ -1006,7 +1150,7 @@ mod tests {
             cache: off_topo.devices[0].cache,
         };
         let direct = svc_off.sim
-            .run_scheduled(&w, svc_off.expected_steps).total_s;
+            .run_scheduled(&w, svc_off.steps_by_class[c.index()]).total_s;
         assert_eq!(to.to_bits(), direct.to_bits());
 
         // calibrated path: a curve profiled under the serving policy
@@ -1020,7 +1164,7 @@ mod tests {
         assert!(m.cold_scale > 1.0, "cold scale {}", m.cold_scale);
         let curve = cal.devices[0].curve.as_ref().unwrap();
         let raw95 = curve.first_block_s(4, 384, Pct::P95).unwrap();
-        let p95 = m.first_block_p95(4, 128, 256);
+        let p95 = m.first_block_p95(4, 128, 256, c);
         assert!(p95 > raw95 * m.curve_scale,
                 "admission p95 {p95} should price the first block cold");
         // an off fleet's calibrated scales are exactly 1.0 both ways
@@ -1039,6 +1183,7 @@ mod tests {
         let trace: Vec<crate::cluster::TraceRequest> = (0..48)
             .map(|i| crate::cluster::TraceRequest {
                 id: i, arrival_s: 0.0, prompt_len: 128, gen_len: 256,
+                class: RequestClass::Chat,
             })
             .collect();
         let run = |cache: CachePolicySpec| {
@@ -1146,9 +1291,11 @@ mod tests {
         slo.admission = false; // the memory check is physical, not SLO
         let trace = vec![
             crate::cluster::TraceRequest {
-                id: 0, arrival_s: 0.0, prompt_len: 128, gen_len: 192 },
+                id: 0, arrival_s: 0.0, prompt_len: 128, gen_len: 192,
+                class: RequestClass::Chat },
             crate::cluster::TraceRequest {
-                id: 1, arrival_s: 0.0, prompt_len: 512, gen_len: 512 },
+                id: 1, arrival_s: 0.0, prompt_len: 512, gen_len: 512,
+                class: RequestClass::Chat },
         ];
         let m = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
             .run(&trace);
@@ -1170,7 +1317,8 @@ mod tests {
         slo.admission = false;
         let trace: Vec<crate::cluster::TraceRequest> = (0..8)
             .map(|i| crate::cluster::TraceRequest {
-                id: i, arrival_s: 0.0, prompt_len: 128, gen_len: 256 })
+                id: i, arrival_s: 0.0, prompt_len: 128, gen_len: 256,
+                class: RequestClass::Chat })
             .collect();
         let m = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
             .run(&trace);
@@ -1201,5 +1349,86 @@ mod tests {
         assert!(m.devices[0].requests > m.devices[1].requests,
                 "dc {} vs edge {}", m.devices[0].requests,
                 m.devices[1].requests);
+    }
+
+    // ---- suffix windowing + request classes -----------------------------
+
+    #[test]
+    fn windowed_service_prices_below_full_and_degenerate_is_bit_identical() {
+        let topo_full = small_topo(1);
+        let mut topo_wide = small_topo(1);
+        topo_wide.window = WindowPolicySpec::Sliding { window: 1 << 20 };
+        let mut topo_slide = small_topo(1);
+        topo_slide.window = WindowPolicySpec::sliding_default();
+        let mut topo_decay = small_topo(1);
+        topo_decay.window = WindowPolicySpec::decay_default();
+        let c = RequestClass::Chat;
+        let mut sf = ServiceModel::new(&topo_full.devices[0], &topo_full);
+        let mut sw = ServiceModel::new(&topo_wide.devices[0], &topo_wide);
+        let mut ss = ServiceModel::new(&topo_slide.devices[0], &topo_slide);
+        let mut sd = ServiceModel::new(&topo_decay.devices[0], &topo_decay);
+        // a wider-than-suffix sliding window never clips, so the priced
+        // service time is bit-identical to Full
+        let (tf, ff) = sf.service(1, 128, 8192, c);
+        let (tw, fw) = sw.service(1, 128, 8192, c);
+        assert_eq!(tf.to_bits(), tw.to_bits());
+        assert_eq!(ff.to_bits(), fw.to_bits());
+        let (ts, _) = ss.service(1, 128, 8192, c);
+        let (td, _) = sd.service(1, 128, 8192, c);
+        assert!(ts < tf, "sliding {ts} vs full {tf}");
+        assert!(td < ts, "decay {td} vs sliding {ts}");
+        // windowing also shrinks what admission counts as resident
+        assert!(sd.effective_resident_tokens(128, 32768)
+                < sf.effective_resident_tokens(128, 32768));
+    }
+
+    #[test]
+    fn blended_trace_attributes_per_class_counters() {
+        let spec = TraceSpec::blended(
+            24, Arrival::Poisson { rps: 1.0e5 }, 9, 0.5);
+        let trace = generate_trace(&spec);
+        let mut topo = small_topo(2);
+        topo.window = WindowPolicySpec::decay_default();
+        let mut slo = SloConfig::auto(&topo);
+        slo.admission = false;
+        let m = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+            .run(&trace);
+        assert_eq!(m.completed, 24);
+        let (co, cc, cs) = m.class_counts(RequestClass::Chat);
+        let (lo, lc, ls) = m.class_counts(RequestClass::LongForm);
+        assert_eq!(co + lo, 24);
+        assert_eq!(cc + lc, 24);
+        assert_eq!(cs + ls, 0);
+        assert!(lo > 0, "blended trace should offer long-form work");
+        assert!(m.report(None).contains("per-class:"));
+    }
+
+    #[test]
+    fn suffix_windowing_relieves_memory_sheds_on_long_form_work() {
+        let mm = fleet_mem_model();
+        // room for one 4K-token lane: a 32K-suffix request cannot fit
+        // fully resident, but its decayed active set can
+        let cap = mm.plan(1, 4096).total;
+        let trace = vec![crate::cluster::TraceRequest {
+            id: 0, arrival_s: 0.0, prompt_len: 128, gen_len: 32768,
+            class: RequestClass::LongForm }];
+        let run = |window: WindowPolicySpec| {
+            let mut topo = small_topo(1);
+            topo.devices[0].mem_bytes = Some(cap);
+            topo.window = window;
+            let mut slo = SloConfig::auto(&topo);
+            slo.admission = false; // isolate the physical memory check
+            FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo)
+                .run(&trace)
+        };
+        let full = run(WindowPolicySpec::Full);
+        assert_eq!(full.completed, 0);
+        assert_eq!(full.shed_memory, 1, "{}", full.report(None));
+        let windowed = run(WindowPolicySpec::decay_default());
+        assert_eq!(windowed.completed, 1, "{}", windowed.report(None));
+        assert_eq!(windowed.shed(), 0);
+        assert!(windowed.devices[0].peak_resident_bytes <= cap);
+        let (_, lc, ls) = windowed.class_counts(RequestClass::LongForm);
+        assert_eq!((lc, ls), (1, 0));
     }
 }

@@ -11,8 +11,10 @@
 
 use crate::cache::CachePolicySpec;
 use crate::calib::{CalibConfig, Calibrator, LatencyCurve};
+use crate::cluster::workload::RequestClass;
 use crate::config::{CacheMode, ConfigDoc, HwConfig, ModelArch};
 use crate::schedule::ScheduleSpec;
+use crate::window::WindowPolicySpec;
 
 /// Latency model for shipping a request from the router to a device:
 /// fixed per-hop latency plus serialization at link bandwidth. Token
@@ -100,6 +102,21 @@ pub struct ClusterTopology {
     /// scheduler's service models rescale warm steady-state pricing via
     /// [`LatencyCurve::hit_scale`]. `Off` is the bit-exact baseline.
     pub feature_cache: CachePolicySpec,
+    /// fleet-wide suffix-window policy (docs/ARCHITECTURE.md S12);
+    /// [`Self::calibrate`] profiles curves under it, the scheduler's
+    /// service models bill windowed suffix work via
+    /// [`crate::sim::AnalyticalSim::run_windowed`] and rescale
+    /// calibrated pricing via [`LatencyCurve::window_scale`], and
+    /// admission prices residency at the *active* suffix
+    /// ([`crate::memmodel::MemModel::plan_windowed`]). `Full` is the
+    /// bit-exact baseline.
+    pub window: WindowPolicySpec,
+    /// per-class denoising-schedule overrides, indexed by
+    /// [`RequestClass::index`]: `None` falls back to [`Self::schedule`].
+    /// The default sends long-form requests through the SlowFast
+    /// schedule (long suffixes are where early-exit pays) while chat
+    /// stays on the fleet-wide policy.
+    pub class_schedules: [Option<ScheduleSpec>; 2],
     pub devices: Vec<DeviceSpec>,
     pub interconnect: InterconnectModel,
 }
@@ -128,6 +145,9 @@ impl ClusterTopology {
             steps_per_block: 16,
             schedule: ScheduleSpec::Fixed,
             feature_cache: CachePolicySpec::Off,
+            window: WindowPolicySpec::Full,
+            class_schedules:
+                [None, Some(ScheduleSpec::slowfast_default())],
             devices,
             interconnect: InterconnectModel::pcie_gen4(),
         }
@@ -189,9 +209,18 @@ impl ClusterTopology {
             steps_per_block: 16,
             schedule: ScheduleSpec::Fixed,
             feature_cache: CachePolicySpec::Off,
+            window: WindowPolicySpec::Full,
+            class_schedules:
+                [None, Some(ScheduleSpec::slowfast_default())],
             devices,
             interconnect: InterconnectModel::ethernet_100g(),
         }
+    }
+
+    /// The denoising schedule a request of `class` is served under:
+    /// the per-class override when set, else the fleet-wide policy.
+    pub fn schedule_for(&self, class: RequestClass) -> ScheduleSpec {
+        self.class_schedules[class.index()].unwrap_or(self.schedule)
     }
 
     /// Profile every device's compiled batch variants through the
@@ -221,9 +250,12 @@ impl ClusterTopology {
                 continue;
             }
             // CachePolicySpec carries an f64 (Adaptive.tau) so the
-            // class key stays a Debug string, like hw
-            let key = format!("{:?}|{:?}|{:?}|{:?}", d.hw, d.cache,
-                              d.batch_variants, self.feature_cache);
+            // class key stays a Debug string, like hw; the window
+            // policy joins it because windowed profiles price cells
+            // differently
+            let key = format!("{:?}|{:?}|{:?}|{:?}|{:?}", d.hw, d.cache,
+                              d.batch_variants, self.feature_cache,
+                              self.window);
             let curve = match profiled.iter().find(|(k, _)| *k == key) {
                 Some((_, c)) => c.clone(),
                 None => {
@@ -236,6 +268,7 @@ impl ClusterTopology {
                     // price realized steps and cached-feature reuse
                     cfg.schedule = self.schedule;
                     cfg.feature_cache = self.feature_cache;
+                    cfg.window = self.window;
                     let cal = Calibrator::new(
                         d.hw.clone(), self.model.clone(), d.cache, cfg);
                     let c = cal.profile(&d.name);
@@ -296,6 +329,9 @@ impl ClusterTopology {
     /// list), `link` (pcie|nvlink|eth), `block_len`, `steps_per_block`,
     /// `schedule` (fixed|conf|slowfast), `cache`,
     /// `feature_cache` (off|interval[:P:R]|adaptive[:TAU:MAX]),
+    /// `window` (full|sliding[:W]|decay[:W[:L[:F]]]),
+    /// `chat_schedule` / `long_form_schedule` (a schedule spec, or
+    /// `"default"` to fall back to the fleet-wide policy),
     /// `mem_cap` (bytes with optional binary suffix, e.g. `"18GiB"`;
     /// `"off"` clears the capacity). Device count changes replicate
     /// device 0's spec.
@@ -355,6 +391,21 @@ impl ClusterTopology {
             if let Some(spec) = CachePolicySpec::parse(c) {
                 self.feature_cache = spec;
             }
+        }
+        if let Some(w) = doc.get_str("cluster", "window") {
+            if let Some(spec) = WindowPolicySpec::parse(w) {
+                self.window = spec;
+            }
+        }
+        if let Some(s) = doc.get_str("cluster", "chat_schedule") {
+            self.class_schedules[RequestClass::Chat.index()] =
+                if s.eq_ignore_ascii_case("default") { None }
+                else { ScheduleSpec::parse(s) };
+        }
+        if let Some(s) = doc.get_str("cluster", "long_form_schedule") {
+            self.class_schedules[RequestClass::LongForm.index()] =
+                if s.eq_ignore_ascii_case("default") { None }
+                else { ScheduleSpec::parse(s) };
         }
         if let Some(s) = doc.get_str("cluster", "mem_cap") {
             let cap = if s.eq_ignore_ascii_case("off") {
@@ -617,6 +668,60 @@ block_len = 32
             .unwrap();
         t.apply_overrides(&bad);
         assert_eq!(t.feature_cache, CachePolicySpec::adaptive_default());
+    }
+
+    #[test]
+    fn window_override_applies_and_curves_record_it() {
+        let doc = parse_config("[cluster]\nwindow = \"decay:2048:0.95\"\n")
+            .unwrap();
+        let mut t = ClusterTopology::homogeneous(
+            1, HwConfig::dart_edge(), ModelArch::llada_8b(), CacheMode::Dual);
+        assert_eq!(t.window, WindowPolicySpec::Full);
+        t.apply_overrides(&doc);
+        assert_eq!(t.window, WindowPolicySpec::decay_default());
+        t.calibrate();
+        let windowed = t.devices[0].curve.as_ref().unwrap();
+        // the profiled curve carries the policy's serving fraction...
+        let expect = t.window.serving_active_frac(t.block_len as usize);
+        assert_eq!(windowed.window_frac.to_bits(), expect.to_bits());
+        assert!(windowed.window_frac > 0.0 && windowed.window_frac < 1.0);
+        // ...and is measurably cheaper than the full-suffix profile
+        let mut full = ClusterTopology::homogeneous(
+            1, HwConfig::dart_edge(), ModelArch::llada_8b(), CacheMode::Dual);
+        full.calibrate();
+        let fc = full.devices[0].curve.as_ref().unwrap();
+        assert_eq!(fc.window_frac.to_bits(), 1.0f64.to_bits());
+        use crate::calib::Pct;
+        let a = windowed.total_s(4, 1500, Pct::P50).unwrap();
+        let b = fc.total_s(4, 1500, Pct::P50).unwrap();
+        assert!(a < b, "windowed {a} vs full {b}");
+        // an unknown window string is ignored, not an error
+        let bad = parse_config("[cluster]\nwindow = \"ring\"\n").unwrap();
+        t.apply_overrides(&bad);
+        assert_eq!(t.window, WindowPolicySpec::decay_default());
+    }
+
+    #[test]
+    fn per_class_schedules_default_and_override() {
+        let mut t = ClusterTopology::homogeneous(
+            1, HwConfig::dart_edge(), ModelArch::tiny(), CacheMode::Dual);
+        // defaults: chat follows the fleet policy, long-form rides
+        // SlowFast
+        assert_eq!(t.schedule_for(RequestClass::Chat), ScheduleSpec::Fixed);
+        assert_eq!(t.schedule_for(RequestClass::LongForm),
+                   ScheduleSpec::slowfast_default());
+        // the fleet-wide policy moves chat but not the long-form pin
+        t.schedule = ScheduleSpec::slowfast_default();
+        assert_eq!(t.schedule_for(RequestClass::Chat),
+                   ScheduleSpec::slowfast_default());
+        // overrides: pin chat, release long-form back to fleet-wide
+        let doc = parse_config(
+            "[cluster]\nchat_schedule = \"conf\"\n\
+             long_form_schedule = \"default\"\n").unwrap();
+        t.apply_overrides(&doc);
+        assert_ne!(t.schedule_for(RequestClass::Chat),
+                   t.schedule);
+        assert_eq!(t.schedule_for(RequestClass::LongForm), t.schedule);
     }
 
     #[test]

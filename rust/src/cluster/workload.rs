@@ -17,6 +17,48 @@
 
 use crate::util::Lcg64;
 
+/// Serving class of a request — the unit the fleet prices per-class
+/// SLOs and schedule defaults over. `Chat` is the interactive default
+/// (tight TTFT, short suffixes); `LongForm` is the 8–64K-token
+/// generation class opened by the suffix-window subsystem
+/// ([`crate::window`]): relaxed TTFT, throughput-weighted TPOT, and
+/// suffix lengths where windowed pricing visibly diverges from full.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum RequestClass {
+    #[default]
+    Chat,
+    LongForm,
+}
+
+impl RequestClass {
+    pub const ALL: [RequestClass; 2] = [RequestClass::Chat,
+                                        RequestClass::LongForm];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "chat" => Some(RequestClass::Chat),
+            "long-form" | "longform" | "long_form" =>
+                Some(RequestClass::LongForm),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestClass::Chat => "chat",
+            RequestClass::LongForm => "long-form",
+        }
+    }
+
+    /// Dense index for per-class counter arrays.
+    pub fn index(&self) -> usize {
+        match self {
+            RequestClass::Chat => 0,
+            RequestClass::LongForm => 1,
+        }
+    }
+}
+
 /// A deterministic time-of-day rate envelope: a single-cosine day
 /// curve with mean exactly 1, multiplied onto the instantaneous rate
 /// of whatever base [`Arrival`] process it wraps (via
@@ -149,6 +191,8 @@ pub struct MixEntry {
     pub weight: f64,
     pub prompt_len: usize,
     pub gen_len: usize,
+    /// serving class stamped onto every request drawn from this entry
+    pub class: RequestClass,
 }
 
 /// Everything needed to (re)generate a trace deterministically.
@@ -182,18 +226,64 @@ impl TraceSpec {
     /// whole 64-token blocks): short turns dominate, a long-form tail
     /// drives the per-request cost variability the scheduler must absorb.
     pub fn chat(n: usize, arrival: Arrival, seed: u64) -> Self {
+        let c = RequestClass::Chat;
         TraceSpec {
             arrival,
             mix: vec![
-                MixEntry { weight: 0.50, prompt_len: 64, gen_len: 64 },
-                MixEntry { weight: 0.30, prompt_len: 128, gen_len: 128 },
-                MixEntry { weight: 0.15, prompt_len: 256, gen_len: 256 },
-                MixEntry { weight: 0.05, prompt_len: 512, gen_len: 512 },
+                MixEntry { weight: 0.50, prompt_len: 64, gen_len: 64,
+                           class: c },
+                MixEntry { weight: 0.30, prompt_len: 128, gen_len: 128,
+                           class: c },
+                MixEntry { weight: 0.15, prompt_len: 256, gen_len: 256,
+                           class: c },
+                MixEntry { weight: 0.05, prompt_len: 512, gen_len: 512,
+                           class: c },
             ],
             n,
             seed,
             envelope: None,
         }
+    }
+
+    /// The long-form mix the suffix-window subsystem opens up: 8–64K
+    /// generated tokens per request, where full-suffix pricing is
+    /// hopeless and windowed pricing ([`crate::window`]) carries the
+    /// class. Every entry is stamped [`RequestClass::LongForm`].
+    pub fn long_form(n: usize, arrival: Arrival, seed: u64) -> Self {
+        let c = RequestClass::LongForm;
+        TraceSpec {
+            arrival,
+            mix: vec![
+                MixEntry { weight: 0.35, prompt_len: 2048, gen_len: 8192,
+                           class: c },
+                MixEntry { weight: 0.30, prompt_len: 4096, gen_len: 16384,
+                           class: c },
+                MixEntry { weight: 0.25, prompt_len: 4096, gen_len: 32768,
+                           class: c },
+                MixEntry { weight: 0.10, prompt_len: 8192, gen_len: 65536,
+                           class: c },
+            ],
+            n,
+            seed,
+            envelope: None,
+        }
+    }
+
+    /// A blended fleet shape: `long_share` of the offered weight comes
+    /// from the long-form mix, the rest from the chat mix — the
+    /// two-class trace the per-class SLO / schedule / window machinery
+    /// is exercised against.
+    pub fn blended(n: usize, arrival: Arrival, seed: u64,
+                   long_share: f64) -> Self {
+        let long_share = long_share.clamp(0.0, 1.0);
+        let mut spec = TraceSpec::chat(n, arrival, seed);
+        for m in &mut spec.mix {
+            m.weight *= 1.0 - long_share;
+        }
+        for m in TraceSpec::long_form(1, arrival, seed).mix {
+            spec.mix.push(MixEntry { weight: m.weight * long_share, ..m });
+        }
+        spec
     }
 
     /// Expected generated tokens per request under the mix.
@@ -222,6 +312,9 @@ pub struct TraceRequest {
     pub arrival_s: f64,
     pub prompt_len: usize,
     pub gen_len: usize,
+    /// serving class (chat / long-form); pre-v2 trace files parse as
+    /// [`RequestClass::Chat`]
+    pub class: RequestClass,
 }
 
 /// Generate the full arrival trace for a spec.
@@ -255,19 +348,23 @@ pub fn generate_trace(spec: &TraceSpec) -> Vec<TraceRequest> {
             arrival_s: t,
             prompt_len: m.prompt_len,
             gen_len: m.gen_len,
+            class: m.class,
         });
     }
     out
 }
 
-/// Serialize a trace to the replay format:
-/// `# dart-trace v1` header, then `id arrival_s prompt_len gen_len`
-/// rows (whitespace-separated, `#` comments ignored on read).
+/// Serialize a trace to the replay format: `# dart-trace v2` header,
+/// then `id arrival_s prompt_len gen_len class` rows
+/// (whitespace-separated, `#` comments ignored on read). v1 files
+/// (four fields, no class column) parse as all-chat.
 pub fn trace_to_text(trace: &[TraceRequest]) -> String {
-    let mut s = String::from("# dart-trace v1\n# id arrival_s prompt_len gen_len\n");
+    let mut s = String::from(
+        "# dart-trace v2\n# id arrival_s prompt_len gen_len class\n");
     for r in trace {
-        s.push_str(&format!("{} {:.6} {} {}\n",
-                            r.id, r.arrival_s, r.prompt_len, r.gen_len));
+        s.push_str(&format!("{} {:.6} {} {} {}\n",
+                            r.id, r.arrival_s, r.prompt_len, r.gen_len,
+                            r.class.name()));
     }
     s
 }
@@ -281,9 +378,10 @@ pub fn trace_from_text(text: &str) -> Result<Vec<TraceRequest>, String> {
             continue;
         }
         let f: Vec<&str> = line.split_whitespace().collect();
-        if f.len() != 4 {
-            return Err(format!("trace line {}: expected 4 fields, got {}",
-                               i + 1, f.len()));
+        if f.len() != 4 && f.len() != 5 {
+            return Err(format!(
+                "trace line {}: expected 4 or 5 fields, got {}",
+                i + 1, f.len()));
         }
         let parse_err = |what: &str| {
             format!("trace line {}: bad {what} {:?}", i + 1, line)
@@ -294,11 +392,19 @@ pub fn trace_from_text(text: &str) -> Result<Vec<TraceRequest>, String> {
             // sort below and every latency derived from the trace
             return Err(parse_err("arrival"));
         }
+        // v1 rows carry no class column and predate the long-form
+        // class entirely, so they replay as chat
+        let class = match f.get(4) {
+            Some(c) => RequestClass::parse(c).ok_or_else(
+                || parse_err("class"))?,
+            None => RequestClass::Chat,
+        };
         out.push(TraceRequest {
             id: f[0].parse().map_err(|_| parse_err("id"))?,
             arrival_s,
             prompt_len: f[2].parse().map_err(|_| parse_err("prompt_len"))?,
             gen_len: f[3].parse().map_err(|_| parse_err("gen_len"))?,
+            class,
         });
     }
     out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
@@ -352,7 +458,8 @@ mod tests {
     fn uniform_pacing_is_exact() {
         let spec = TraceSpec {
             arrival: Arrival::Uniform { rps: 4.0 },
-            mix: vec![MixEntry { weight: 1.0, prompt_len: 64, gen_len: 64 }],
+            mix: vec![MixEntry { weight: 1.0, prompt_len: 64, gen_len: 64,
+                                 class: RequestClass::Chat }],
             n: 8,
             seed: 0,
             envelope: None,
@@ -590,7 +697,14 @@ mod tests {
             _ => Arrival::Uniform { rps },
         };
         let n = 16 + (rng.next_u64() % 128) as usize;
-        let mut spec = TraceSpec::chat(n, arrival, rng.next_u64());
+        // half the specs blend in the long-form class so the replay
+        // fixed point covers the v2 class column
+        let mut spec = if rng.next_u64() % 2 == 0 {
+            TraceSpec::chat(n, arrival, rng.next_u64())
+        } else {
+            TraceSpec::blended(n, arrival, rng.next_u64(),
+                               0.1 + 0.8 * rng.next_f64())
+        };
         if rng.next_u64() % 2 == 0 {
             let env = Diurnal::day(2.0 + rng.next_f64() * 20.0);
             spec = spec.with_envelope(if rng.next_u64() % 2 == 0 {
@@ -693,12 +807,97 @@ mod tests {
     }
 
     #[test]
+    fn class_column_roundtrips_and_v1_parses_as_chat() {
+        // v2 round trip keeps the class
+        let spec = TraceSpec::blended(
+            48, Arrival::Poisson { rps: 6.0 }, 21, 0.4);
+        let trace = generate_trace(&spec);
+        assert!(trace.iter().any(|r| r.class == RequestClass::LongForm),
+                "blended trace never drew long-form");
+        assert!(trace.iter().any(|r| r.class == RequestClass::Chat));
+        let back = trace_from_text(&trace_to_text(&trace)).unwrap();
+        for (a, b) in trace.iter().zip(&back) {
+            assert_eq!(a.class, b.class);
+        }
+        // classless v1 rows replay as chat
+        let v1 = "# dart-trace v1\n0 0.50 64 64\n1 1.25 128 128\n";
+        let t = trace_from_text(v1).unwrap();
+        assert_eq!(t.len(), 2);
+        assert!(t.iter().all(|r| r.class == RequestClass::Chat));
+        // a bad class name is rejected, not silently defaulted
+        assert!(trace_from_text("0 0.5 64 64 chatty").is_err());
+        // parse/name round trip for every class
+        for c in RequestClass::ALL {
+            assert_eq!(RequestClass::parse(c.name()), Some(c));
+        }
+        assert_eq!(RequestClass::default(), RequestClass::Chat);
+    }
+
+    #[test]
+    fn long_form_mix_is_long() {
+        // the long-form class must actually be long form: every entry's
+        // gen_len in [8K, 64K] and the mean about an order of magnitude
+        // beyond the chat mix's
+        let lf = TraceSpec::long_form(1, Arrival::Poisson { rps: 1.0 }, 0);
+        for m in &lf.mix {
+            assert!(m.gen_len >= 8192 && m.gen_len <= 65536,
+                    "gen_len {}", m.gen_len);
+            assert_eq!(m.class, RequestClass::LongForm);
+        }
+        let chat = TraceSpec::chat(1, Arrival::Poisson { rps: 1.0 }, 0);
+        assert!(lf.mean_gen_len() > 50.0 * chat.mean_gen_len(),
+                "long-form mean {} vs chat {}",
+                lf.mean_gen_len(), chat.mean_gen_len());
+    }
+
+    #[test]
+    fn length_distribution_moments_on_random_blends() {
+        // the realized length distribution of a large trace must track
+        // the spec's weighted mean, and the per-class split must track
+        // the blend share — the property the study grid's long-form
+        // fleet shape leans on
+        crate::stats::prop_check("blend length moments", 16, |rng| {
+            (0.1 + 0.8 * rng.next_f64(), rng.next_u64())
+        }, |&(share, seed)| {
+            let spec = TraceSpec::blended(
+                4000, Arrival::Poisson { rps: 50.0 }, seed, share);
+            let trace = generate_trace(&spec);
+            let mean = trace.iter().map(|r| r.gen_len).sum::<usize>() as f64
+                / trace.len() as f64;
+            let want = spec.mean_gen_len();
+            if (mean - want).abs() > 0.15 * want {
+                return Err(format!("mean gen {mean:.0} vs spec {want:.0}"));
+            }
+            let long = trace.iter()
+                .filter(|r| r.class == RequestClass::LongForm).count();
+            let frac = long as f64 / trace.len() as f64;
+            if (frac - share).abs() > 0.08 {
+                return Err(format!("long-form frac {frac:.3} vs share \
+                                    {share:.3}"));
+            }
+            // class tagging is consistent with the mixes: long-form
+            // requests are never shorter than the chat maximum
+            for r in &trace {
+                if r.class == RequestClass::LongForm && r.gen_len < 8192 {
+                    return Err(format!("long-form gen_len {}", r.gen_len));
+                }
+                if r.class == RequestClass::Chat && r.gen_len > 512 {
+                    return Err(format!("chat gen_len {}", r.gen_len));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn mean_gen_len_weighted() {
         let spec = TraceSpec {
             arrival: Arrival::Poisson { rps: 1.0 },
             mix: vec![
-                MixEntry { weight: 1.0, prompt_len: 1, gen_len: 100 },
-                MixEntry { weight: 3.0, prompt_len: 1, gen_len: 200 },
+                MixEntry { weight: 1.0, prompt_len: 1, gen_len: 100,
+                           class: RequestClass::Chat },
+                MixEntry { weight: 3.0, prompt_len: 1, gen_len: 200,
+                           class: RequestClass::LongForm },
             ],
             n: 1,
             seed: 0,

@@ -14,6 +14,7 @@ use crate::obs::Recorder;
 use crate::runtime::{Executor, Tensor};
 use crate::sampling::{self, SamplePrecision};
 use crate::schedule::{BlockRun, ScheduleSpec, StepTrace};
+use crate::window::{WindowPolicySpec, WindowStats};
 
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
@@ -28,6 +29,14 @@ pub struct EngineConfig {
     /// engine bit-exactly, caching policies reuse the previous step's
     /// logits between refreshes
     pub feature_cache: CachePolicySpec,
+    /// suffix-window policy; `Full` reproduces the pre-window engine
+    /// bit-exactly. The compiled PJRT executables are fixed-shape, so
+    /// in the live engine the window is an accounting overlay: phase-1
+    /// confidence/commit work already runs over the active block only
+    /// (which sits inside any window of at least one block), and the
+    /// planner records per-block [`WindowStats`] of the suffix the
+    /// pricing layers narrow.
+    pub window: WindowPolicySpec,
 }
 
 impl Default for EngineConfig {
@@ -39,6 +48,7 @@ impl Default for EngineConfig {
             v_chunk: 128,
             schedule: ScheduleSpec::Fixed,
             feature_cache: CachePolicySpec::Off,
+            window: WindowPolicySpec::Full,
         }
     }
 }
@@ -59,6 +69,9 @@ pub struct GenerationResult {
     /// feature-cache lookups/hits/misses/refresh traffic (all-zero when
     /// the policy is `Off`)
     pub cache_stats: CacheStats,
+    /// per-block suffix-window accounting (all-zero when the policy is
+    /// `Full`)
+    pub window_stats: WindowStats,
 }
 
 impl GenerationResult {
@@ -144,6 +157,9 @@ impl GenerationEngine {
         // feature-cache planner over all B·L active positions per step
         // (the drift proxy is committed-fraction of the whole batch)
         let mut planner = self.cfg.feature_cache.build(b * g.block_len);
+        // suffix-window planner: per-block accounting of the suffix the
+        // pricing layers narrow (Full records nothing)
+        let mut wplanner = self.cfg.window.build(g.block_len);
         let mut last_logits: Option<Vec<f32>> = None;
 
         let mut model_s = 0.0;
@@ -154,6 +170,9 @@ impl GenerationEngine {
         for blk in 0..g.n_blocks {
             let s_n = g.prompt_len + blk * g.block_len;
             let e_n = s_n + g.block_len;
+            // remaining masked suffix at this block boundary (the block
+            // being denoised included) — the quantity the window narrows
+            wplanner.note_block((g.n_blocks - blk) * g.block_len);
             let mut run = BlockRun::new(policy.as_ref(), b, g.block_len,
                                         g.steps_per_block);
             let blk_span = rec.begin("coord", "block", model_s + sampling_s);
@@ -288,6 +307,7 @@ impl GenerationEngine {
             kv_packed_bytes: cache.packed_bytes(),
             step_trace,
             cache_stats: planner.stats,
+            window_stats: wplanner.stats,
         })
     }
 

@@ -79,6 +79,18 @@
 //!   disabled, exported as Chrome-trace JSON (`--trace` on the serving
 //!   CLIs) and as the byte-stable committed profile (`profile` in the
 //!   CLI, `docs/PROFILE.md` the generated document);
+//! * [`window`] — suffix windowing as a serving dimension, opening
+//!   long-context serving: the [`window::WindowPolicySpec`] policies
+//!   (full / sliding / distance-decay dropout over distant suffix
+//!   tokens), the deterministic [`window::WindowStats`] accounting,
+//!   and the synthetic suffix-retention process (S12) whose
+//!   closed-form expected active-suffix length every cost model above
+//!   bills instead of the full remaining suffix — composing with the
+//!   memory model so windowing relieves residency sheds, and opening
+//!   a long-form (8–64K token) request class with per-class SLOs and
+//!   schedules in the fleet (`window_sweep` in the benches,
+//!   `--window` on the serving CLIs,
+//!   `rust/tests/window_equivalence.rs` the differential gate);
 //! * [`gpu`] — analytical A6000/H100 baselines for Table 6 / Fig. 9.
 //!
 //! Substrates ([`cli`], [`stats`], [`report`], [`util`]) are built from
@@ -109,3 +121,4 @@ pub mod sim;
 pub mod stats;
 pub mod study;
 pub mod util;
+pub mod window;

@@ -53,6 +53,9 @@ fn main() {
             eprintln!("usage: dart <serve|serve-cluster|calibrate|fleet-study|profile|generate|simulate|sweep|hbm|asm|area> [flags]");
             eprintln!("  serve     --requests N --cache MODE --kv POLICY \
                        --schedule fixed|conf|slowfast --trace FILE");
+            eprintln!("            --window full|sliding[:W]|decay[:W:L:F] \
+                       (suffix-window policy; also on serve-cluster/\
+                       calibrate/generate)");
             eprintln!("            (--cache takes a comma list: KV mode \
                        none|prefix|dual and/or feature-cache policy");
             eprintln!("             off|interval[:P:R]|adaptive[:TAU:MAX], \
@@ -70,6 +73,9 @@ fn main() {
             eprintln!("                --mem-cap BYTES|off (per-device \
                        byte budget, e.g. 18GiB or 15e9; admission \
                        sheds and flushes downshift under pressure)");
+            eprintln!("                --window full|sliding[:W]|decay[:W:L:F] \
+                       --long-share FRAC (blend the 8-64K-token \
+                       long-form class into the trace)");
             eprintln!("                --trace FILE (Chrome-trace JSON + \
                        deterministic summary)");
             eprintln!("  fleet-study --seed N --out FILE --requests N \
@@ -142,6 +148,11 @@ fn schedule_from(args: &Args) -> ScheduleSpec {
         .expect("bad --schedule (fixed|conf|slowfast)")
 }
 
+fn window_from(args: &Args) -> dart::window::WindowPolicySpec {
+    dart::window::WindowPolicySpec::parse(args.get_or("window", "full"))
+        .expect("bad --window (full|sliding[:W]|decay[:W:LAMBDA:FLOOR])")
+}
+
 fn model_from(args: &Args) -> ModelArch {
     match args.get_or("model", "llada8b") {
         "llada8b" => ModelArch::llada_8b(),
@@ -175,9 +186,10 @@ fn cmd_serve(args: &Args) -> i32 {
         v_chunk: args.get_usize("v-chunk", 128),
         schedule: schedule_from(args),
         feature_cache,
+        window: window_from(args),
     };
-    println!("starting coordinator ({:?}, feature cache {}) ...",
-             cfg.cache, cfg.feature_cache.name());
+    println!("starting coordinator ({:?}, feature cache {}, {} window) ...",
+             cfg.cache, cfg.feature_cache.name(), cfg.window.label());
     let coord = Coordinator::start(&dir, cfg, None).expect("coordinator");
     let mut rng = SplitMix64::new(42);
     let prompt_len = 16; // tiny-model geometry
@@ -219,10 +231,11 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
     let (kv_mode, feature_cache) = caches_from(args);
     let mut topo = ClusterTopology::homogeneous(
         n_devices, hw_from(args), model_from(args), kv_mode);
-    // denoising schedule and feature-cache policy before calibration,
-    // so curves profile under them
+    // denoising schedule, feature-cache and suffix-window policies
+    // before calibration, so curves profile under them
     topo.schedule = schedule_from(args);
     topo.feature_cache = feature_cache;
+    topo.window = window_from(args);
     if let Some(link) = args.get("link") {
         topo.interconnect = dart::cluster::InterconnectModel::parse(link)
             .expect("bad --link (pcie|nvlink|eth)");
@@ -248,11 +261,20 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
 
     let n = args.get_usize("requests", 256);
     let seed = args.get_usize("seed", 42) as u64;
+    // --long-share FRAC blends the 8-64K-token long-form class into the
+    // generated trace (0 = pure chat, today's behavior bit-for-bit)
+    let long_share = args.get_f64("long-share", 0.0).clamp(0.0, 1.0);
     // offered rate: explicit --rate wins, otherwise a --load fraction
-    // (default 70%) of the fleet's calibrated token capacity
+    // (default 70%) of the fleet's calibrated token capacity; blended
+    // traces re-derive the rate from their (much larger) mean length
     let capacity_tps = cluster::fleet_capacity_tps(&topo);
-    let auto_rps =
-        cluster::chat_offered_rps(capacity_tps, args.get_f64("load", 0.7));
+    let auto_rps = if long_share > 0.0 {
+        let mean = TraceSpec::blended(
+            1, Arrival::Poisson { rps: 1.0 }, 0, long_share).mean_gen_len();
+        args.get_f64("load", 0.7) * capacity_tps / mean
+    } else {
+        cluster::chat_offered_rps(capacity_tps, args.get_f64("load", 0.7))
+    };
     let rps = args.get_f64("rate", auto_rps);
     let arrival = Arrival::parse(args.get_or("arrival", "poisson"), rps)
         .expect("bad --arrival (poisson|bursty|uniform)");
@@ -285,8 +307,15 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
         (cluster::trace_from_text(&text).expect("parse trace"),
          format!("replayed from {path}"))
     } else {
-        let mut spec = TraceSpec::chat(n, arrival, seed);
+        let mut spec = if long_share > 0.0 {
+            TraceSpec::blended(n, arrival, seed, long_share)
+        } else {
+            TraceSpec::chat(n, arrival, seed)
+        };
         let mut desc = format!("{arrival:?}, seed {seed}");
+        if long_share > 0.0 {
+            desc.push_str(&format!(", long-form share {long_share:.2}"));
+        }
         if let Some(env) = envelope {
             spec = spec.with_envelope(env);
             desc.push_str(&format!(", diurnal period {:.1}s", env.period_s));
@@ -377,10 +406,11 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
         .map(|c| dart::memmodel::fmt_bytes(c))
         .unwrap_or_else(|| "unconstrained".to_string());
     println!("== DART fleet: {} devices x {}, {} KV cache, {} feature \
-              cache, {} memory, {} router, {} schedule ==",
+              cache, {} memory, {} window, {} router, {} schedule ==",
              topo.n_devices(), topo.model.name,
              topo.devices[0].cache.name(), topo.feature_cache.name(),
-             mem_desc, policy.name(), topo.schedule.name());
+             mem_desc, topo.window.label(), policy.name(),
+             topo.schedule.name());
     println!("trace: {} requests, {}, fleet capacity ~{:.0} tok/s \
               (expected {:.1}/{} steps per block)",
              trace.len(), trace_desc, capacity_tps,
@@ -455,6 +485,7 @@ fn cmd_calibrate(args: &Args) -> i32 {
         cfg.samples_per_cell = samples;
         cfg.seed = args.get_usize("seed", 0xCA11B) as u64;
         cfg.feature_cache = feature_cache;
+        cfg.window = window_from(args);
         let cal = Calibrator::new(hw, model.clone(), cache, cfg);
         let name = format!("dart-{preset}");
         let curve = cal.profile(&name);
@@ -537,16 +568,18 @@ fn cmd_fleet_study(args: &Args) -> i32 {
 
     eprintln!("fleet-study: {} shapes x {} policies x 3 admission modes \
                x {} schedules x {} feature caches x {} memory caps \
-               = {} cells, seed {}",
+               x {} windows = {} cells, seed {}",
               cfg.shapes.len(), cfg.policies.len(), cfg.schedules.len(),
-              cfg.caches.len(), cfg.mem_caps.len(), n_cells, seed);
+              cfg.caches.len(), cfg.mem_caps.len(), cfg.windows.len(),
+              n_cells, seed);
     let mut done = 0usize;
     let result = StudyGrid::new(cfg).run_with_progress(|cell| {
         done += 1;
-        eprintln!("  [{done}/{n_cells}] {} / {} / {} / {} / {}: goodput \
+        eprintln!("  [{done}/{n_cells}] {} / {} / {} / {} / {} / {}: goodput \
                    {:.1} tok/s, shed {:.1}% ({:.0} ms)",
                   cell.shape, cell.policy.name(), cell.schedule.name(),
-                  cell.cache.name(), cell.admission_label(),
+                  cell.cache.name(), cell.window.name(),
+                  cell.admission_label(),
                   cell.metrics.goodput_tps(),
                   100.0 * cell.metrics.shed_frac(),
                   cell.wall_s * 1e3);
@@ -687,6 +720,7 @@ fn cmd_generate(args: &Args) -> i32 {
         kv_policy: kv_policy_from(args),
         schedule: schedule_from(args),
         feature_cache,
+        window: window_from(args),
         ..EngineConfig::default()
     });
     let b = args.get_usize("batch", 1);
@@ -715,6 +749,14 @@ fn cmd_generate(args: &Args) -> i32 {
                  r.cache_stats.hits, r.cache_stats.lookups,
                  r.cache_stats.hit_rate() * 100.0,
                  r.cache_stats.refresh_bytes);
+    }
+    if r.window_stats.blocks > 0 {
+        println!("suffix window: {}/{} suffix tokens active ({:.0}%), \
+                  {} dropped",
+                 r.window_stats.active_suffix_tokens,
+                 r.window_stats.full_suffix_tokens,
+                 r.window_stats.active_frac() * 100.0,
+                 r.window_stats.dropped_suffix_tokens);
     }
     if let Some(path) = args.get("trace") {
         std::fs::write(path, rec.chrome_trace()).expect("write trace");

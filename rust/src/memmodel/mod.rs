@@ -23,6 +23,13 @@
 //! The plan is monotone in both lanes and sequence length, which is
 //! what makes downshift monotone in pressure: a smaller capacity can
 //! only select a smaller (or equal) variant.
+//!
+//! Under a suffix window ([`crate::window::WindowPolicySpec`]) the
+//! resident sequence narrows to prompt + *active* suffix
+//! ([`MemModel::plan_windowed`]): long-form lanes hold KV and
+//! feature-cache residency only for the suffix they actually price, so
+//! windowing and the memory model compose — a window turns
+//! would-be memory sheds back into admissions.
 
 use crate::cache::CachePolicySpec;
 use crate::config::{CacheMode, ModelArch};
@@ -160,6 +167,24 @@ impl MemModel {
             total: weights + logits_fp16 + logits_int + kv
                 + feature_cache + lane_state,
         }
+    }
+
+    /// [`Self::plan`] under a suffix window: the resident sequence is
+    /// the prompt plus the *active* suffix
+    /// ([`crate::window::WindowPolicySpec::active_suffix_len`] of the
+    /// generation) rather than the full generation — a windowed lane
+    /// holds KV, feature-cache and logit residency only for the suffix
+    /// it actually prices, which is how windowing relieves
+    /// [`crate::cluster::ShedReason::Memory`] pressure. With
+    /// [`crate::window::WindowPolicySpec::Full`] the active suffix *is*
+    /// the generation (exact `usize` identity), so the plan is
+    /// byte-identical to `plan(variant, prompt_len + gen_len)`.
+    pub fn plan_windowed(&self, variant: usize, prompt_len: u64,
+                         gen_len: u64,
+                         window: &crate::window::WindowPolicySpec)
+                         -> MemoryPlan {
+        let active = window.active_suffix_len(gen_len as usize) as u64;
+        self.plan(variant, prompt_len + active)
     }
 
     /// Whether a batch at (`variant`, `seq_len`) fits `cap_bytes`.
@@ -346,6 +371,41 @@ mod tests {
         }
         // below the weights floor nothing fits
         assert_eq!(mm.max_variant(&variants, seq, floor), None);
+    }
+
+    #[test]
+    fn windowed_plan_full_is_byte_identical_and_windows_relieve() {
+        use crate::window::WindowPolicySpec;
+        let mm = m();
+        // Full: exact usize identity with the unwindowed plan
+        for (prompt, gen) in [(128u64, 256u64), (4096, 8192),
+                              (8192, 32768)] {
+            let a = mm.plan(8, prompt + gen);
+            let b = mm.plan_windowed(8, prompt, gen,
+                                     &WindowPolicySpec::Full);
+            assert_eq!(a, b);
+        }
+        // a degenerate window (wider than the generation) is Full
+        let wide = WindowPolicySpec::Sliding { window: 1 << 20 };
+        assert_eq!(mm.plan_windowed(8, 4096, 8192, &wide),
+                   mm.plan(8, 4096 + 8192));
+        // the acceptance shape: at a 32K generation the windowed plans
+        // hold strictly less resident than Full, decay least of all
+        let full = mm.plan_windowed(8, 8192, 32768,
+                                    &WindowPolicySpec::Full);
+        let slide = mm.plan_windowed(8, 8192, 32768,
+                                     &WindowPolicySpec::sliding_default());
+        let decay = mm.plan_windowed(8, 8192, 32768,
+                                     &WindowPolicySpec::decay_default());
+        assert!(slide.total < full.total,
+                "sliding {} full {}", slide.total, full.total);
+        assert!(decay.total < slide.total,
+                "decay {} sliding {}", decay.total, slide.total);
+        // the relief is in the seq-sized components (KV + features),
+        // never the block-sized logit buffers
+        assert_eq!(full.logits_fp16, decay.logits_fp16);
+        assert!(decay.kv < full.kv);
+        assert_eq!(decay.component_sum(), decay.total);
     }
 
     #[test]

@@ -372,6 +372,91 @@ impl AnalyticalSim {
             sampling_frac: sampling.seconds / total,
         }
     }
+
+    /// [`Self::run_cached`] under a suffix window: per block, the
+    /// model-side phases are scaled by
+    /// [`crate::window::window_cost_frac`] of the block's active-suffix
+    /// fraction (`active_suffix_len / remaining` at that block's
+    /// remaining masked suffix — the S12 closed form). Sampling over
+    /// the active block runs every step regardless: the window narrows
+    /// suffix-wide logit traffic and confidence scoring, never the
+    /// block being committed.
+    ///
+    /// With [`crate::window::WindowPolicySpec::Full`] every per-block
+    /// fraction is exactly 1.0 (`x / x`) and
+    /// `window_cost_frac(1.0) == 1.0` exactly, so this is bit-identical
+    /// to [`Self::run_cached`] (`rust/tests/window_equivalence.rs` pins
+    /// it).
+    pub fn run_windowed(&self, w: &Workload, steps_per_block: f64,
+                        plan: &crate::cache::CachePlan,
+                        window: &crate::window::WindowPolicySpec)
+                        -> RunReport {
+        let cap = w.steps_per_block as f64;
+        let steps = if cap >= 1.0 {
+            steps_per_block.clamp(1.0, cap)
+        } else {
+            0.0
+        };
+        let l_tot = w.total_len();
+        let mut model = PhaseReport::default();
+        let mut sampling = PhaseReport::default();
+        for blk in 0..w.n_blocks() {
+            let s_n = w.prompt_len + blk * w.block_len;
+            // remaining masked suffix at this block (the block being
+            // denoised included), and the window's cost fraction for it
+            let remaining = ((w.n_blocks() - blk) * w.block_len) as usize;
+            let wf = if remaining == 0 {
+                1.0
+            } else {
+                crate::window::window_cost_frac(
+                    window.active_suffix_len(remaining) as f64
+                        / remaining as f64)
+            };
+            let warm = self.forward(w, w.batch * l_tot, l_tot, true);
+            if blk == 0 {
+                model.add(warm.scaled(wf));
+            } else {
+                model.add(warm.scaled(plan.warm_full_frac * wf));
+                let warm_reuse =
+                    self.forward(w, w.batch * w.block_len, l_tot, false);
+                model.add(warm_reuse
+                          .scaled((1.0 - plan.warm_full_frac) * wf));
+            }
+            let refines = (steps - 1.0).max(0.0);
+            let refine = match w.cache {
+                CacheMode::None =>
+                    self.forward(w, w.batch * l_tot, l_tot, true),
+                CacheMode::Prefix =>
+                    self.forward(w, w.batch * (l_tot - s_n), l_tot, false),
+                CacheMode::Dual =>
+                    self.forward(w, w.batch * w.block_len, l_tot, false),
+            };
+            model.add(refine.scaled(refines * plan.refresh_frac * wf));
+            model.add(self.reuse_step(w)
+                      .scaled(refines * (1.0 - plan.refresh_frac) * wf));
+            sampling.add(self.sampling_step(w.batch, w.block_len,
+                                            w.model.vocab)
+                         .scaled(steps));
+        }
+        let total = model.seconds + sampling.seconds;
+        let tokens = w.tokens_out() as f64;
+        let energy = EnergyReport::compute(
+            &self.energy_model,
+            model.macs + sampling.macs,
+            model.vector_ops + sampling.vector_ops,
+            model.sram_bytes + sampling.sram_bytes,
+            model.hbm_bytes + sampling.hbm_bytes,
+            total);
+        RunReport {
+            model,
+            sampling,
+            total_s: total,
+            tps: tokens / total,
+            energy,
+            tok_per_j: tokens / energy.total_j,
+            sampling_frac: sampling.seconds / total,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -548,6 +633,69 @@ mod tests {
             w.steps_per_block as usize, w.n_blocks() as usize));
         assert!(ad.total_s < base.total_s,
                 "adaptive {} base {}", ad.total_s, base.total_s);
+    }
+
+    #[test]
+    fn windowed_run_full_is_bit_identical_to_cached() {
+        use crate::cache::CachePlan;
+        use crate::window::WindowPolicySpec;
+        let sim = AnalyticalSim::new(HwConfig::dart_default(),
+                                     PrecisionConfig::dart_full_quant());
+        for cache in CacheMode::ALL {
+            let w = Workload::paper_reference(ModelArch::llada_8b(), cache);
+            for steps in [w.steps_per_block as f64, 9.25, 1.0] {
+                let base = sim.run_cached(&w, steps, &CachePlan::off());
+                let full = sim.run_windowed(&w, steps, &CachePlan::off(),
+                                            &WindowPolicySpec::Full);
+                assert_eq!(base.total_s.to_bits(), full.total_s.to_bits(),
+                           "{cache:?} steps {steps}");
+                assert_eq!(base.model.seconds.to_bits(),
+                           full.model.seconds.to_bits());
+                assert_eq!(base.model.hbm_bytes.to_bits(),
+                           full.model.hbm_bytes.to_bits());
+                assert_eq!(base.sampling.seconds.to_bits(),
+                           full.sampling.seconds.to_bits());
+                assert_eq!(base.energy.total_j.to_bits(),
+                           full.energy.total_j.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_run_bills_less_on_long_suffixes() {
+        use crate::cache::CachePlan;
+        use crate::window::WindowPolicySpec;
+        let mut w = Workload::paper_reference(ModelArch::llada_8b(),
+                                              CacheMode::Dual);
+        // long-form shape: 4K prompt, 8K generation
+        w.prompt_len = 4096;
+        w.gen_len = 8192;
+        let sim = AnalyticalSim::new(HwConfig::dart_default(),
+                                     PrecisionConfig::dart_full_quant());
+        let steps = w.steps_per_block as f64;
+        let full = sim.run_windowed(&w, steps, &CachePlan::off(),
+                                    &WindowPolicySpec::Full);
+        let slide = sim.run_windowed(&w, steps, &CachePlan::off(),
+                                     &WindowPolicySpec::sliding_default());
+        let decay = sim.run_windowed(&w, steps, &CachePlan::off(),
+                                     &WindowPolicySpec::decay_default());
+        assert!(slide.total_s < full.total_s,
+                "sliding {} full {}", slide.total_s, full.total_s);
+        assert!(decay.total_s < slide.total_s,
+                "decay {} sliding {}", decay.total_s, slide.total_s);
+        // sampling over the active block is never windowed
+        assert_eq!(full.sampling.seconds.to_bits(),
+                   decay.sampling.seconds.to_bits());
+        // windowing composes with the feature cache: both savings stack
+        let plan = crate::cache::expected_plan(
+            &crate::cache::CachePolicySpec::adaptive_default(),
+            w.block_len as usize, w.steps_per_block as usize,
+            w.n_blocks() as usize);
+        let both = sim.run_windowed(&w, steps, &plan,
+                                    &WindowPolicySpec::decay_default());
+        assert!(both.total_s < decay.total_s,
+                "cache+window {} window-only {}", both.total_s,
+                decay.total_s);
     }
 
     #[test]

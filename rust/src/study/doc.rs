@@ -11,6 +11,7 @@ use crate::cache::CachePolicySpec;
 use crate::report::{self, MarkdownDoc, Table};
 use crate::schedule::ScheduleSpec;
 use crate::stats::fmt_time;
+use crate::window::WindowPolicySpec;
 
 use super::grid::{AdmissionMode, CellResult, StudyResult};
 
@@ -37,6 +38,7 @@ pub fn cell_row(c: &CellResult, baseline_goodput: Option<f64>,
         c.cache.name().to_string(),
         c.mem_cap.map(crate::memmodel::fmt_bytes)
             .unwrap_or_else(|| "off".to_string()),
+        c.window.label(),
         report::pct(m.shed_slo_frac()),
         report::pct(m.shed_capacity_frac()),
         report::pct(m.shed_retry_frac()),
@@ -49,10 +51,10 @@ pub fn cell_row(c: &CellResult, baseline_goodput: Option<f64>,
     ]
 }
 
-const SWEEP_HEADERS: [&str; 14] = [
-    "router", "admission", "schedule", "cache", "mem cap", "shed slo",
-    "shed cap", "shed retry", "attainment", "goodput tok/s", "Δ goodput",
-    "p95 TTFT", "padding waste", "mean util"];
+const SWEEP_HEADERS: [&str; 15] = [
+    "router", "admission", "schedule", "cache", "mem cap", "window",
+    "shed slo", "shed cap", "shed retry", "attainment", "goodput tok/s",
+    "Δ goodput", "p95 TTFT", "padding waste", "mean util"];
 
 /// Mean of `f` over cells passing `keep` (0.0 on an empty selection).
 fn mean_over<F, K>(cells: &[CellResult], keep: K, f: F) -> f64
@@ -279,6 +281,65 @@ fn analysis_paras(r: &StudyResult) -> Vec<String> {
             mem_lines.join("\n")));
     }
 
+    // windowed vs full-suffix, aggregated over matched
+    // (shape, policy, admission, schedule, cache, mem-cap) tuples
+    let mut win_lines = Vec::new();
+    for &window in &r.cfg.windows {
+        if window.is_full() {
+            continue;
+        }
+        let mut gd = Vec::new();
+        let mut hd = Vec::new();
+        for s in &r.shapes {
+            for &policy in &r.cfg.policies {
+                for admission in AdmissionMode::ALL {
+                    for &schedule in &r.cfg.schedules {
+                        for &cache in &r.cfg.caches {
+                            for &mem_cap in &r.cfg.mem_caps {
+                                let full = r.cell_win(
+                                    &s.shape.name, policy, admission,
+                                    schedule, cache, mem_cap,
+                                    WindowPolicySpec::Full);
+                                let win = r.cell_win(
+                                    &s.shape.name, policy, admission,
+                                    schedule, cache, mem_cap, window);
+                                if let (Some(f), Some(w)) = (full, win) {
+                                    if f.metrics.goodput_tps() > 0.0 {
+                                        gd.push((w.metrics.goodput_tps()
+                                                 - f.metrics.goodput_tps())
+                                                / f.metrics.goodput_tps());
+                                    }
+                                    if f.metrics.horizon_s > 0.0 {
+                                        hd.push((w.metrics.horizon_s
+                                                 - f.metrics.horizon_s)
+                                                / f.metrics.horizon_s);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        win_lines.push(format!(
+            "**{}** windowing moves goodput by {} (horizon by {}) \
+             against the full-suffix arm on matched cells.",
+            window.label(), report::signed_pct(mean(&gd)),
+            report::signed_pct(mean(&hd))));
+    }
+    if !win_lines.is_empty() {
+        paras.push(format!(
+            "Suffix windowing bounds how much of the generated suffix \
+             each refinement step re-prices: sliding windows clip the \
+             active set to the most recent tokens and decay-dropout \
+             keeps a geometrically thinning sample of the older suffix, \
+             so long-form requests bill (and hold resident) a fraction \
+             of their nominal footprint while chat-length requests are \
+             barely touched. The full arm serves bit-identically to a \
+             build without the window subsystem.\n{}",
+            win_lines.join("\n")));
+    }
+
     // calibrated vs static, aggregated over matched
     // (shape, policy, schedule) triples
     let mut gdeltas = Vec::new();
@@ -438,13 +499,18 @@ pub fn render_study(r: &StudyResult) -> String {
              .unwrap_or_else(|| "off".to_string()))
         .collect::<Vec<_>>()
         .join("/");
+    let window_names = cfg.windows.iter()
+        .map(|w| w.label())
+        .collect::<Vec<_>>()
+        .join("/");
     d.para(&format!(
         "Grid: {} fleet shapes × {} router policies × 3 admission modes \
          (static analytic scalars vs profiled latency curves vs \
          warm-up-recalibrated curves — the replay loop's third arm) × \
          {} denoising schedules ({schedule_names}) × {} feature-cache \
          policies ({cache_names}) × {} memory-capacity arms \
-         ({mem_names}), {} requests per \
+         ({mem_names}) × {} suffix-window arms ({window_names}), \
+         {} requests per \
          cell at {} of each shape's analytic token capacity, under a \
          diurnal envelope spanning {} simulated days (swing {}, so the \
          peak offers ~{}x the mean rate). Adaptive schedules are priced \
@@ -454,11 +520,16 @@ pub fn render_study(r: &StudyResult) -> String {
          work, warm for steady state and cold for each request's first \
          block. Constrained memory arms price every flush against the \
          per-device byte budget and downshift or shed rather than \
-         overcommit. Model: {}, {} KV cache. Baseline cell for the \
+         overcommit. Windowed arms refine (and hold resident) only each \
+         request's active suffix window; shapes with a long-form share \
+         draw their trace from the blended 8–64K-token length mix. \
+         Model: {}, {} KV cache. Baseline cell for the \
          delta column: {} routing with {} admission under the fixed \
-         schedule with the feature cache off and memory unconstrained.",
+         schedule with the feature cache off, memory unconstrained, and \
+         the full suffix.",
         cfg.shapes.len(), cfg.policies.len(), cfg.schedules.len(),
-        cfg.caches.len(), cfg.mem_caps.len(), cfg.requests_per_cell,
+        cfg.caches.len(), cfg.mem_caps.len(), cfg.windows.len(),
+        cfg.requests_per_cell,
         report::pct(cfg.load), report::f1(cfg.envelope_periods),
         report::f2(cfg.envelope_swing),
         report::f2(1.0 + cfg.envelope_swing), cfg.model.name,
@@ -467,13 +538,15 @@ pub fn render_study(r: &StudyResult) -> String {
 
     d.h2("Fleet shapes");
     let mut shapes = Table::new("", &[
-        "shape", "dc", "edge", "capacity tok/s", "offered req/s",
-        "TTFT SLO", "TPOT SLO", "day period", "trace span"]);
+        "shape", "dc", "edge", "long share", "capacity tok/s",
+        "offered req/s", "TTFT SLO", "TPOT SLO", "day period",
+        "trace span"]);
     for s in &r.shapes {
         shapes.row(&[
             s.shape.name.clone(),
             s.shape.n_dc.to_string(),
             s.shape.n_edge.to_string(),
+            report::pct(s.shape.long_share),
             report::f1(s.capacity_tps),
             report::f2(s.offered_rps),
             fmt_time(s.slo.ttft_s),
@@ -487,7 +560,10 @@ pub fn render_study(r: &StudyResult) -> String {
         "SLO deadlines are derived per shape from the *slowest* \
          member's unloaded service curve (4x headroom), so every tier \
          of a mixed fleet can participate; both admission modes of a \
-         shape chase the same deadlines on the same trace.");
+         shape chase the same deadlines on the same trace. Long-form \
+         requests chase the same table relaxed by the per-class \
+         multipliers (8x TTFT, 2x TPOT) — a 32K-token draft is not a \
+         chat turn.");
 
     d.h2("Policy sweep");
     for s in &r.shapes {
@@ -501,7 +577,8 @@ pub fn render_study(r: &StudyResult) -> String {
                 && c.admission == cfg.baseline_admission
                 && c.schedule == ScheduleSpec::Fixed
                 && c.cache.is_off()
-                && c.mem_cap.is_none();
+                && c.mem_cap.is_none()
+                && c.window.is_full();
             t.row(&cell_row(c, base_goodput, is_base));
         }
         d.table(&t);
@@ -533,7 +610,8 @@ pub fn render_study(r: &StudyResult) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{FleetMetrics, RoutePolicy, ShedReason};
+    use crate::cluster::{FleetMetrics, RequestClass, RoutePolicy,
+                         ShedReason};
     use crate::study::grid::{StudyConfig, StudyGrid};
 
     /// The fixed fixture from the fleet-metrics tests: 2 completions,
@@ -543,10 +621,12 @@ mod tests {
         m.horizon_s = 10.0;
         m.devices[0].busy_s = 8.0;
         m.devices[1].busy_s = 4.0;
-        m.record_completion(0, 0.5, 0.01, 2.0, 100, true);
-        m.record_completion(1, 3.0, 0.05, 9.0, 200, false);
-        m.record_shed(ShedReason::Capacity);
-        m.record_shed(ShedReason::SloPredicted);
+        m.record_completion(0, 0.5, 0.01, 2.0, 100, true,
+                            RequestClass::Chat);
+        m.record_completion(1, 3.0, 0.05, 9.0, 200, false,
+                            RequestClass::Chat);
+        m.record_shed(ShedReason::Capacity, RequestClass::Chat);
+        m.record_shed(ShedReason::SloPredicted, RequestClass::Chat);
         m.padded_lane_tokens = 50;
         m.ragged_pad_tokens = 50;
         CellResult {
@@ -556,6 +636,7 @@ mod tests {
             schedule: ScheduleSpec::slowfast_default(),
             cache: CachePolicySpec::adaptive_default(),
             mem_cap: Some(18 << 30),
+            window: WindowPolicySpec::decay_default(),
             admission: AdmissionMode::Calibrated,
             metrics: m,
             wall_s: 0.0,
@@ -573,6 +654,7 @@ mod tests {
             "slowfast".to_string(),
             "adaptive".to_string(),
             "18.0 GiB".to_string(), // the fixture's per-device budget
+            "decay:2048:0.95:0.1".to_string(), // suffix-window arm
             "25.0%".to_string(),    // 1 SLO-predicted shed of 4 offered
             "25.0%".to_string(),    // 1 capacity shed of 4 offered
             "0.0%".to_string(),     // no retry-exhausted sheds
@@ -587,11 +669,15 @@ mod tests {
         let mut free = fixture();
         free.mem_cap = None;
         assert_eq!(cell_row(&free, Some(8.0), false)[4], "off");
+        // an unwindowed cell renders its window arm as full
+        let mut unwin = fixture();
+        unwin.window = WindowPolicySpec::Full;
+        assert_eq!(cell_row(&unwin, Some(8.0), false)[5], "full");
         // the baseline row marks itself instead of a delta
-        assert_eq!(cell_row(&fixture(), Some(8.0), true)[10], "(base)");
+        assert_eq!(cell_row(&fixture(), Some(8.0), true)[11], "(base)");
         // an unusable baseline degrades to n/a, never a division blowup
-        assert_eq!(cell_row(&fixture(), Some(0.0), false)[10], "n/a");
-        assert_eq!(cell_row(&fixture(), None, false)[10], "n/a");
+        assert_eq!(cell_row(&fixture(), Some(0.0), false)[11], "n/a");
+        assert_eq!(cell_row(&fixture(), None, false)[11], "n/a");
     }
 
     #[test]
@@ -613,15 +699,19 @@ mod tests {
                        "Cross-step feature caching",
                        "| mem cap |", "memory-capacity arms",
                        "| 18.0 GiB |", "| off |",
-                       "Memory capacity is a physical admission"] {
+                       "Memory capacity is a physical admission",
+                       "| window |", "suffix-window arms",
+                       "| decay:2048:0.95:0.1 |", "| full |",
+                       "| long share |",
+                       "Suffix windowing bounds"] {
             assert!(a.contains(needle), "study doc missing {needle:?}");
         }
-        // one sweep row per (schedule, cache, mem-cap, admission,
-        // policy) cell of each shape
+        // one sweep row per (schedule, cache, mem-cap, window,
+        // admission, policy) cell of each shape
         let rows = a.matches("| round-robin |").count()
             + a.matches("| least-outstanding |").count();
-        assert_eq!(rows, 96,
+        assert_eq!(rows, 192,
                    "2 shapes x 2 schedules x 2 caches x 2 mem-caps \
-                    x 3 adm x 2 rtr");
+                    x 2 windows x 3 adm x 2 rtr");
     }
 }

@@ -1,6 +1,10 @@
 //! The study grid runner: fleet shape × schedule policy × cache policy
-//! × memory capacity × router policy × admission mode over per-shape
-//! diurnal traces, one [`FleetMetrics`] per cell. Admission sweeps three arms ([`AdmissionMode`]): static
+//! × memory capacity × suffix-window policy × router policy × admission
+//! mode over per-shape diurnal traces, one [`FleetMetrics`] per cell.
+//! Shapes may carry a long-form workload share
+//! ([`ShapeSpec::long_share`]): those shapes draw their trace from the
+//! blended chat/long-form mix, which is what the window axis is priced
+//! against. Admission sweeps three arms ([`AdmissionMode`]): static
 //! analytic scalars, profiled measured curves, and *recalibrated*
 //! curves — profiled, then folded toward the observations of a warm-up
 //! serving pass over the same trace (the replay loop,
@@ -27,6 +31,7 @@ use crate::cluster::{chat_offered_rps, fleet_capacity_tps, generate_trace,
 use crate::config::{CacheMode, HwConfig, ModelArch};
 use crate::replay::{recalibrate_fleet, RecalibConfig};
 use crate::schedule::ScheduleSpec;
+use crate::window::WindowPolicySpec;
 
 /// What the admission predictor and flush policy price from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -66,12 +71,23 @@ pub struct ShapeSpec {
     pub name: String,
     pub n_dc: usize,
     pub n_edge: usize,
+    /// fraction of the shape's trace drawn from the long-form length
+    /// mix (`0.0` = pure chat, today's behavior bit-for-bit; `1.0` =
+    /// pure 8–64K-token long-form work)
+    pub long_share: f64,
 }
 
 impl ShapeSpec {
     pub fn new(name: &str, n_dc: usize, n_edge: usize) -> Self {
         assert!(n_dc + n_edge > 0, "shape {name:?} needs devices");
-        ShapeSpec { name: name.to_string(), n_dc, n_edge }
+        ShapeSpec { name: name.to_string(), n_dc, n_edge, long_share: 0.0 }
+    }
+
+    /// Blend `share` of the long-form length mix into this shape's
+    /// trace (clamped to `[0, 1]`).
+    pub fn with_long_share(mut self, share: f64) -> Self {
+        self.long_share = share.clamp(0.0, 1.0);
+        self
     }
 
     pub fn n_devices(&self) -> usize {
@@ -110,6 +126,11 @@ pub struct StudyConfig {
     /// every device of the shape (`None` = unconstrained, today's
     /// behavior bit-for-bit)
     pub mem_caps: Vec<Option<u64>>,
+    /// suffix-window axis (docs/ARCHITECTURE.md S12): each entry reruns
+    /// every cell with the fleet serving (and, when calibrated,
+    /// profiled) under that window policy (`Full` = today's behavior
+    /// bit-for-bit)
+    pub windows: Vec<WindowPolicySpec>,
     /// requests per cell trace (each shape generates one trace shared
     /// by all of its cells)
     pub requests_per_cell: usize,
@@ -141,6 +162,7 @@ impl StudyConfig {
                 ShapeSpec::new("homogeneous-16", 16, 0),
                 ShapeSpec::new("edge-heavy", 4, 28),
                 ShapeSpec::new("dc-heavy", 12, 4),
+                ShapeSpec::new("long-form-8", 8, 0).with_long_share(1.0),
             ],
             policies: vec![RoutePolicy::RoundRobin,
                            RoutePolicy::LeastOutstanding,
@@ -151,6 +173,8 @@ impl StudyConfig {
             caches: vec![CachePolicySpec::Off,
                          CachePolicySpec::adaptive_default()],
             mem_caps: vec![None],
+            windows: vec![WindowPolicySpec::Full,
+                          WindowPolicySpec::decay_default()],
             requests_per_cell: 240,
             load: 0.85,
             envelope_periods: 2.0,
@@ -181,6 +205,8 @@ impl StudyConfig {
             // image: enough to serve, tight enough that wide flushes
             // downshift (docs/ARCHITECTURE.md S11)
             mem_caps: vec![None, Some(18 << 30)],
+            windows: vec![WindowPolicySpec::Full,
+                          WindowPolicySpec::decay_default()],
             requests_per_cell: 48,
             load: 0.85,
             envelope_periods: 2.0,
@@ -197,11 +223,11 @@ impl StudyConfig {
         AdmissionMode::ALL
     }
 
-    /// Cells in the grid:
-    /// shapes × schedules × caches × mem-caps × admission × routers.
+    /// Cells in the grid: shapes × schedules × caches × mem-caps ×
+    /// windows × admission × routers.
     pub fn n_cells(&self) -> usize {
         self.shapes.len() * self.schedules.len() * self.caches.len()
-            * self.mem_caps.len()
+            * self.mem_caps.len() * self.windows.len()
             * self.admission_modes().len() * self.policies.len()
     }
 }
@@ -221,6 +247,9 @@ pub struct CellResult {
     /// the per-device byte budget every device of the shape served
     /// under (`None` = unconstrained)
     pub mem_cap: Option<u64>,
+    /// the suffix-window policy the fleet served (and, when calibrated,
+    /// profiled) under
+    pub window: WindowPolicySpec,
     /// what admission/batching priced from: analytic scalars, profiled
     /// curves, or warm-up-recalibrated curves
     pub admission: AdmissionMode,
@@ -272,23 +301,37 @@ impl StudyResult {
         self.cell_mem(shape, policy, admission, schedule, cache, None)
     }
 
-    /// A cell addressed by its full coordinate, memory-capacity arm
-    /// included.
+    /// A cell addressed down to the memory-capacity arm (suffix window
+    /// pinned to `Full`, the pre-S12 view). Use [`Self::cell_win`] to
+    /// address a windowed arm.
     pub fn cell_mem(&self, shape: &str, policy: RoutePolicy,
                     admission: AdmissionMode, schedule: ScheduleSpec,
                     cache: CachePolicySpec, mem_cap: Option<u64>)
                     -> Option<&CellResult> {
+        self.cell_win(shape, policy, admission, schedule, cache, mem_cap,
+                      WindowPolicySpec::Full)
+    }
+
+    /// A cell addressed by its full coordinate, suffix-window arm
+    /// included.
+    #[allow(clippy::too_many_arguments)]
+    pub fn cell_win(&self, shape: &str, policy: RoutePolicy,
+                    admission: AdmissionMode, schedule: ScheduleSpec,
+                    cache: CachePolicySpec, mem_cap: Option<u64>,
+                    window: WindowPolicySpec) -> Option<&CellResult> {
         self.cells.iter().find(|c| c.shape == shape
                                && c.policy == policy
                                && c.admission == admission
                                && c.schedule == schedule
                                && c.cache == cache
-                               && c.mem_cap == mem_cap)
+                               && c.mem_cap == mem_cap
+                               && c.window == window)
     }
 
     /// The named baseline cell for a shape (delta reference): the
     /// configured baseline router/admission under the fixed schedule
-    /// with the feature cache off and memory unconstrained.
+    /// with the feature cache off, memory unconstrained, and the full
+    /// (unwindowed) suffix.
     pub fn baseline(&self, shape: &str) -> Option<&CellResult> {
         self.cell(shape, self.cfg.baseline_policy,
                   self.cfg.baseline_admission, ScheduleSpec::Fixed,
@@ -328,6 +371,7 @@ struct Unit {
     schedule: ScheduleSpec,
     feature_cache: CachePolicySpec,
     mem_cap: Option<u64>,
+    window: WindowPolicySpec,
     admission: AdmissionMode,
 }
 
@@ -335,9 +379,9 @@ impl StudyGrid {
     pub fn new(cfg: StudyConfig) -> Self {
         assert!(!cfg.shapes.is_empty() && !cfg.policies.is_empty()
                 && !cfg.schedules.is_empty() && !cfg.caches.is_empty()
-                && !cfg.mem_caps.is_empty(),
+                && !cfg.mem_caps.is_empty() && !cfg.windows.is_empty(),
                 "study grid needs at least one shape, policy, schedule, \
-                 cache policy and memory-capacity arm");
+                 cache policy, memory-capacity arm and window arm");
         StudyGrid { cfg }
     }
 
@@ -357,7 +401,17 @@ impl StudyGrid {
             // offered mean rate: `load` fraction of analytic capacity.
             // Referenced to the *uncalibrated fixed-schedule* estimate
             // so every cell of a shape faces the identical trace.
-            let offered_rps = chat_offered_rps(capacity_tps, cfg.load);
+            // chat shapes keep the shared chat load-targeting rule
+            // bit-for-bit; long-form shapes re-derive the rate from the
+            // blended mix's (much larger) mean generation length
+            let offered_rps = if shape.long_share > 0.0 {
+                let mean = TraceSpec::blended(
+                    1, Arrival::Poisson { rps: 1.0 }, 0, shape.long_share)
+                    .mean_gen_len();
+                cfg.load * capacity_tps / mean
+            } else {
+                chat_offered_rps(capacity_tps, cfg.load)
+            };
             // envelope period from the expected span so every shape's
             // trace covers `envelope_periods` simulated days
             let expected_span = cfg.requests_per_cell as f64 / offered_rps;
@@ -366,12 +420,15 @@ impl StudyGrid {
                 swing: cfg.envelope_swing,
                 length_swing: 0.0,
             };
-            let spec = TraceSpec::chat(
-                cfg.requests_per_cell,
-                Arrival::Poisson { rps: offered_rps },
-                cfg.seed.wrapping_add(
-                    (si as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)))
-                .with_envelope(envelope);
+            let seed = cfg.seed.wrapping_add(
+                (si as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let arrival = Arrival::Poisson { rps: offered_rps };
+            let spec = if shape.long_share > 0.0 {
+                TraceSpec::blended(cfg.requests_per_cell, arrival, seed,
+                                   shape.long_share)
+            } else {
+                TraceSpec::chat(cfg.requests_per_cell, arrival, seed)
+            }.with_envelope(envelope);
             let trace = generate_trace(&spec);
             // one SLO per shape, derived from the uncalibrated
             // fixed-schedule fleet so every cell chases the same
@@ -392,8 +449,8 @@ impl StudyGrid {
         (shapes, traces)
     }
 
-    /// Units in pinned (shape, schedule, cache, mem-cap, admission)
-    /// order — the reduction order of both execution paths.
+    /// Units in pinned (shape, schedule, cache, mem-cap, window,
+    /// admission) order — the reduction order of both execution paths.
     fn units(&self) -> Vec<Unit> {
         let cfg = &self.cfg;
         let mut units = Vec::new();
@@ -401,11 +458,13 @@ impl StudyGrid {
             for &schedule in &cfg.schedules {
                 for &feature_cache in &cfg.caches {
                     for &mem_cap in &cfg.mem_caps {
-                        for admission in cfg.admission_modes() {
-                            units.push(Unit {
-                                shape_idx, schedule, feature_cache,
-                                mem_cap, admission,
-                            });
+                        for &window in &cfg.windows {
+                            for admission in cfg.admission_modes() {
+                                units.push(Unit {
+                                    shape_idx, schedule, feature_cache,
+                                    mem_cap, window, admission,
+                                });
+                            }
                         }
                     }
                 }
@@ -427,6 +486,11 @@ impl StudyGrid {
         let mut topo = shape.build(&cfg.model, cfg.cache);
         topo.schedule = u.schedule;
         topo.feature_cache = u.feature_cache;
+        topo.window = u.window;
+        // the grid sweeps the schedule axis explicitly — clear the
+        // per-class defaults so long-form requests serve the cell's
+        // schedule, not the fleet's long-form override
+        topo.class_schedules = [None, None];
         for d in &mut topo.devices {
             d.mem_bytes = u.mem_cap;
         }
@@ -448,6 +512,7 @@ impl StudyGrid {
                 schedule: u.schedule,
                 cache: u.feature_cache,
                 mem_cap: u.mem_cap,
+                window: u.window,
                 admission: u.admission,
                 metrics,
                 wall_s: t0.elapsed().as_secs_f64(),
@@ -506,8 +571,8 @@ mod tests {
     fn smoke_grid_covers_every_cell_and_accounts_for_every_request() {
         let cfg = StudyConfig::smoke(11);
         let n_cells = cfg.n_cells();
-        assert_eq!(n_cells, 2 * 2 * 2 * 2 * 3 * 2,
-                   "shapes x schedules x caches x mem-caps x adm x rtr");
+        assert_eq!(n_cells, 2 * 2 * 2 * 2 * 2 * 3 * 2,
+                   "shapes x scheds x caches x mem-caps x windows x adm x rtr");
         let r = StudyGrid::new(cfg).run();
         assert_eq!(r.cells.len(), n_cells);
         assert_eq!(r.shapes.len(), 2);
@@ -527,6 +592,8 @@ mod tests {
                        ScheduleSpec::Fixed);
             assert!(r.baseline(&s.shape.name).unwrap().cache.is_off());
             assert!(r.baseline(&s.shape.name).unwrap().mem_cap.is_none());
+            assert_eq!(r.baseline(&s.shape.name).unwrap().window,
+                       WindowPolicySpec::Full);
             assert!(r.best_goodput(&s.shape.name).is_some());
             assert_eq!(r.shape_cells(&s.shape.name).len(),
                        n_cells / r.shapes.len());
@@ -543,6 +610,7 @@ mod tests {
             assert_eq!(x.policy, y.policy);
             assert_eq!(x.schedule, y.schedule);
             assert_eq!(x.mem_cap, y.mem_cap);
+            assert_eq!(x.window, y.window);
             assert_eq!(x.admission, y.admission);
             assert_eq!(x.metrics.completed, y.metrics.completed);
             assert_eq!(x.metrics.peak_resident_bytes(),
@@ -675,6 +743,52 @@ mod tests {
                     || tight.metrics.horizon_s != free.metrics.horizon_s,
                     "{name}: memory axis indistinguishable");
         }
+    }
+
+    #[test]
+    fn window_axis_changes_outcomes_on_every_shape() {
+        let r = StudyGrid::new(StudyConfig::smoke(5)).run();
+        for s in &r.shapes {
+            let name = &s.shape.name;
+            let policy = RoutePolicy::LeastOutstanding;
+            let full = r.cell_win(name, policy, AdmissionMode::Static,
+                                  ScheduleSpec::Fixed, CachePolicySpec::Off,
+                                  None, WindowPolicySpec::Full).unwrap();
+            let decay = r.cell_win(name, policy, AdmissionMode::Static,
+                                   ScheduleSpec::Fixed, CachePolicySpec::Off,
+                                   None, WindowPolicySpec::decay_default())
+                .unwrap();
+            assert_eq!(full.metrics.offered(), decay.metrics.offered(),
+                       "both arms face the identical trace");
+            // windowed refinement prices below full-suffix refinement,
+            // so the arm must move the outcome
+            assert!(decay.metrics.horizon_s != full.metrics.horizon_s
+                    || decay.metrics.shed() != full.metrics.shed()
+                    || decay.metrics.ttft_p95().to_bits()
+                        != full.metrics.ttft_p95().to_bits(),
+                    "{name}: window axis indistinguishable");
+        }
+    }
+
+    #[test]
+    fn long_form_shape_draws_the_blended_mix() {
+        let mut cfg = StudyConfig::smoke(3);
+        cfg.shapes = vec![
+            ShapeSpec::new("chat-2", 2, 0),
+            ShapeSpec::new("long-2", 2, 0).with_long_share(1.0),
+        ];
+        let grid = StudyGrid::new(cfg);
+        let (shapes, traces) = grid.shape_runs();
+        // long-form work is orders of magnitude longer, so the derived
+        // offered rate must drop accordingly
+        assert!(shapes[1].offered_rps < shapes[0].offered_rps / 10.0,
+                "long-form rps {} vs chat {}", shapes[1].offered_rps,
+                shapes[0].offered_rps);
+        assert!(traces[0].iter().all(
+            |r| r.class == crate::cluster::RequestClass::Chat));
+        assert!(traces[1].iter().all(
+            |r| r.class == crate::cluster::RequestClass::LongForm));
+        assert!(traces[1].iter().all(|r| r.gen_len >= 8192));
     }
 
     #[test]

@@ -1,0 +1,45 @@
+//! Suffix windowing: a serving dimension for the locality of dLLM
+//! suffix attention, opening long-context serving.
+//!
+//! Every pricing layer in this repo used to scale with the *entire*
+//! remaining masked suffix — vocabulary-wide logit traffic per step
+//! over everything still masked — which is why the serving stack
+//! topped out at chat-scale sequences. DPad observes that dLLM suffix
+//! attention is overwhelmingly local: a sliding window plus
+//! distance-decay dropout over distant suffix tokens preserves
+//! fidelity while cutting long-sequence work by up to 61x. This
+//! subsystem models that as a first-class serving dimension:
+//!
+//! * [`policy`] — [`WindowPolicySpec`] (`Full` bit-exact with the
+//!   pre-window pricing, `Sliding` with a fixed suffix window,
+//!   `DecayDropout` adding distance-decay retention), the stateful
+//!   [`WindowPlanner`] the generation engine consults per block, and
+//!   the deterministic [`WindowStats`] accounting
+//!   (active + dropped == full, property-gated).
+//! * [`sim`] — the seeded synthetic suffix-retention process
+//!   (substitution S12, the window analogue of `schedule::sim`'s S8
+//!   and `cache::sim`'s S10) that realizes per-token retention draws;
+//!   pricing always bills the closed-form expectation
+//!   [`WindowPolicySpec::active_suffix_len`], and the seeded process
+//!   is the realized-vs-priced check.
+//!
+//! The thread-through mirrors the schedule/cache/memmodel PRs:
+//! [`crate::sim::analytical::AnalyticalSim::run_windowed`] bills
+//! window-scaled logit bytes/ops, calibration records the serving
+//! active fraction on every [`crate::calib::LatencyCurve`] (text
+//! format v4), [`crate::memmodel::MemModel::plan_windowed`] prices
+//! resident bytes by the active suffix (relieving
+//! `ShedReason::Memory` pressure), and the cluster scheduler admits
+//! long-form requests at windowed cost. `Full` (the default) and a
+//! degenerate `Sliding { window >= remaining }` reproduce the
+//! pre-window pricing bit-exactly (`rust/tests/window_equivalence.rs`
+//! is the differential gate, bench `window_sweep` proves the windowed
+//! long-form arms are distinguishable).
+
+pub mod policy;
+pub mod sim;
+
+pub use policy::{window_cost_frac, WindowPlanner, WindowPolicySpec,
+                 WindowStats, REF_SUFFIX_BLOCKS, WINDOW_SAVINGS};
+pub use sim::{expected_active, simulate_window_block, WindowBlockTrace,
+              EXPECTATION_SEEDS};

@@ -1,0 +1,510 @@
+//! Suffix-window policies: how much of the remaining masked suffix a
+//! denoising step actually prices.
+//!
+//! [`WindowPolicySpec`] is the copyable description the CLI flags, study
+//! grids and topology configs carry; [`WindowPlanner`] is the stateful
+//! per-generation driver the engine consults at every block boundary;
+//! [`WindowStats`] is the deterministic accounting every windowed block
+//! lands in.
+//!
+//! The contract that licenses the engine integration
+//! (`rust/tests/window_equivalence.rs`): `Full` never narrows the
+//! suffix and reproduces the pre-window pricing bit-exactly, and
+//! `Sliding { window >= remaining }` — a window wider than anything
+//! left — takes exactly the same active length as `Full`, so the whole
+//! windowed pricing path collapses to the baseline when the window is
+//! degenerate.
+
+/// Copyable description of a suffix-window policy (the DPad model:
+/// dLLM suffix attention is overwhelmingly local, so a sliding window
+/// plus distance-decay dropout over distant suffix tokens preserves
+/// fidelity while cutting long-sequence work).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WindowPolicySpec {
+    /// no windowing: the full remaining suffix is priced, bit-exact
+    /// with the pre-window engine (default)
+    Full,
+    /// fixed suffix window: at most `window` suffix tokens are active
+    /// per step; `window >= remaining` degenerates to `Full`
+    Sliding { window: usize },
+    /// sliding window plus distance-decay retention: inside the window
+    /// a suffix token at distance `d` is retained with probability
+    /// `max(lambda^d, floor)` (substitution S12), so the *expected*
+    /// active length is the closed-form sum every pricing layer bills
+    DecayDropout { window: usize, lambda: f64, floor: f64 },
+}
+
+impl Default for WindowPolicySpec {
+    fn default() -> Self {
+        WindowPolicySpec::Full
+    }
+}
+
+/// Canonical suffix length (in blocks) behind
+/// [`WindowPolicySpec::serving_active_frac`]: long enough that serving
+/// windows bite (8 blocks of 64), short enough to stay representative
+/// of the mid seq-len calibration buckets.
+pub const REF_SUFFIX_BLOCKS: usize = 8;
+
+/// Fraction of a suffix token's step cost that windowing can actually
+/// save: vocabulary-wide logit traffic and confidence scoring scale
+/// with the active suffix, but block-local commit work and the warm
+/// forward's prompt share do not.
+pub const WINDOW_SAVINGS: f64 = 0.6;
+
+/// Relative step cost of serving at active-suffix fraction `f` of the
+/// full remaining suffix: `1 - WINDOW_SAVINGS * (1 - f)`. Exactly
+/// `1.0` at `f = 1.0` (the multiply drops out bit-exactly), which is
+/// what keeps `Full` pricing bit-identical to the pre-window paths.
+pub fn window_cost_frac(f: f64) -> f64 {
+    1.0 - WINDOW_SAVINGS * (1.0 - f.clamp(0.0, 1.0))
+}
+
+impl WindowPolicySpec {
+    /// The default sliding policy: a 2048-token suffix window.
+    pub fn sliding_default() -> Self {
+        WindowPolicySpec::Sliding { window: 2048 }
+    }
+
+    /// The default decay policy: 2048-token window, per-distance decay
+    /// 0.95, retention floor 0.10.
+    pub fn decay_default() -> Self {
+        WindowPolicySpec::DecayDropout {
+            window: 2048,
+            lambda: 0.95,
+            floor: 0.10,
+        }
+    }
+
+    /// Parse `full | sliding[:W] | decay[:W[:LAMBDA[:FLOOR]]]`
+    /// (case-insensitive). Colon-separated so the flag composes with
+    /// comma-separated option lists elsewhere in the CLI.
+    pub fn parse(s: &str) -> Option<Self> {
+        let lower = s.to_ascii_lowercase();
+        let mut parts = lower.split(':');
+        match parts.next()? {
+            "full" => Some(WindowPolicySpec::Full),
+            "sliding" => {
+                let w = match parts.next() {
+                    Some(v) => v.parse().ok().filter(|&w: &usize| w > 0)?,
+                    None => 2048,
+                };
+                Some(WindowPolicySpec::Sliding { window: w })
+            }
+            "decay" => {
+                let w = match parts.next() {
+                    Some(v) => v.parse().ok().filter(|&w: &usize| w > 0)?,
+                    None => 2048,
+                };
+                let lambda = match parts.next() {
+                    Some(v) => v.parse().ok()
+                        .filter(|l: &f64| l.is_finite() && *l > 0.0
+                                && *l <= 1.0)?,
+                    None => 0.95,
+                };
+                let floor = match parts.next() {
+                    Some(v) => v.parse().ok()
+                        .filter(|f: &f64| f.is_finite() && *f >= 0.0
+                                && *f <= 1.0)?,
+                    None => 0.10,
+                };
+                Some(WindowPolicySpec::DecayDropout {
+                    window: w,
+                    lambda,
+                    floor,
+                })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WindowPolicySpec::Full => "full",
+            WindowPolicySpec::Sliding { .. } => "sliding",
+            WindowPolicySpec::DecayDropout { .. } => "decay",
+        }
+    }
+
+    /// Parse-roundtrippable label (`full`, `sliding:2048`,
+    /// `decay:2048:0.95:0.1`) for bench tables and fleet headers.
+    pub fn label(&self) -> String {
+        match *self {
+            WindowPolicySpec::Full => "full".to_string(),
+            WindowPolicySpec::Sliding { window } => {
+                format!("sliding:{window}")
+            }
+            WindowPolicySpec::DecayDropout { window, lambda, floor } => {
+                format!("decay:{window}:{lambda}:{floor}")
+            }
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        matches!(self, WindowPolicySpec::Full)
+    }
+
+    /// The suffix-token cap this policy can ever activate, `None` for
+    /// `Full` (unbounded).
+    pub fn window_cap(&self) -> Option<usize> {
+        match *self {
+            WindowPolicySpec::Full => None,
+            WindowPolicySpec::Sliding { window } => Some(window),
+            WindowPolicySpec::DecayDropout { window, .. } => Some(window),
+        }
+    }
+
+    /// Active suffix length a step prices when `remaining` masked
+    /// suffix tokens are left. `Full` returns `remaining` untouched
+    /// (bit-exact baseline); `Sliding` clamps to the window; `Decay`
+    /// bills the closed-form expected retention
+    /// `sum_d max(lambda^d, floor)` over the windowed suffix —
+    /// deterministic, monotone in both the window and `remaining`, and
+    /// at least 1 whenever any suffix is left.
+    pub fn active_suffix_len(&self, remaining: usize) -> usize {
+        match *self {
+            WindowPolicySpec::Full => remaining,
+            WindowPolicySpec::Sliding { window } => remaining.min(window),
+            WindowPolicySpec::DecayDropout { window, lambda, floor } => {
+                let cap = remaining.min(window);
+                if cap == 0 {
+                    return 0;
+                }
+                let mut sum = 0.0f64;
+                let mut keep = 1.0f64;
+                for d in 0..cap {
+                    if keep <= floor {
+                        sum += floor * (cap - d) as f64;
+                        break;
+                    }
+                    sum += keep;
+                    keep *= lambda;
+                }
+                (sum.round() as usize).clamp(1, cap)
+            }
+        }
+    }
+
+    /// Mean active-suffix fraction over a generation of `gen_len`
+    /// tokens in blocks of `block_len`: at block `b` the remaining
+    /// suffix is `(n_blocks - b) * block_len`, and the per-block
+    /// fraction is `active / remaining`. At `Full` every term is
+    /// exactly `1.0` (`x / x`) and the mean of `n` exact ones is
+    /// exactly `1.0`, so replay rescaling through
+    /// [`window_cost_frac`] stays bit-identical.
+    pub fn mean_active_frac(&self, block_len: usize, gen_len: usize)
+                            -> f64 {
+        let bl = block_len.max(1);
+        let n_blocks = gen_len.div_ceil(bl).max(1);
+        let mut sum = 0.0f64;
+        for b in 0..n_blocks {
+            let remaining = (n_blocks - b) * bl;
+            sum += self.active_suffix_len(remaining) as f64
+                / remaining as f64;
+        }
+        sum / n_blocks as f64
+    }
+
+    /// [`Self::mean_active_frac`] at the canonical serving suffix
+    /// length ([`REF_SUFFIX_BLOCKS`] blocks). The calibration profiler
+    /// records this value on the curve and the cluster scheduler
+    /// recomputes it through the same call, so a topology served under
+    /// the window it was profiled with prices at
+    /// `window_scale == 1.0` *exactly* (`x / x`).
+    pub fn serving_active_frac(&self, block_len: usize) -> f64 {
+        self.mean_active_frac(block_len,
+                              REF_SUFFIX_BLOCKS * block_len.max(1))
+    }
+
+    /// Build the stateful per-generation planner.
+    pub fn build(&self, block_len: usize) -> WindowPlanner {
+        WindowPlanner::new(*self, block_len)
+    }
+}
+
+/// Deterministic suffix-window accounting: every windowed block records
+/// the full remaining suffix, the active share it priced, and the share
+/// it dropped. `active + dropped == full` is a structural invariant the
+/// property net pins.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WindowStats {
+    /// blocks the planner narrowed (consulted under a non-`Full` spec)
+    pub blocks: u64,
+    /// total remaining-suffix tokens across those blocks
+    pub full_suffix_tokens: u64,
+    /// suffix tokens actually priced (inside the active window)
+    pub active_suffix_tokens: u64,
+    /// suffix tokens dropped from pricing by the window
+    pub dropped_suffix_tokens: u64,
+}
+
+impl WindowStats {
+    /// Fraction of suffix tokens the window kept active (1.0 when
+    /// nothing was recorded, i.e. under `Full`).
+    pub fn active_frac(&self) -> f64 {
+        if self.full_suffix_tokens == 0 {
+            1.0
+        } else {
+            self.active_suffix_tokens as f64
+                / self.full_suffix_tokens as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &WindowStats) {
+        self.blocks += o.blocks;
+        self.full_suffix_tokens += o.full_suffix_tokens;
+        self.active_suffix_tokens += o.active_suffix_tokens;
+        self.dropped_suffix_tokens += o.dropped_suffix_tokens;
+    }
+}
+
+/// Stateful per-generation window driver: the engine asks it for the
+/// active suffix length at every block boundary and the accounting
+/// lands in [`WindowStats`]. `Full` returns `remaining` untouched and
+/// records nothing, mirroring the cache planner's `Off` contract.
+#[derive(Clone, Debug)]
+pub struct WindowPlanner {
+    spec: WindowPolicySpec,
+    #[allow(dead_code)]
+    block_len: usize,
+    pub stats: WindowStats,
+}
+
+impl WindowPlanner {
+    pub fn new(spec: WindowPolicySpec, block_len: usize) -> Self {
+        WindowPlanner {
+            spec,
+            block_len: block_len.max(1),
+            stats: WindowStats::default(),
+        }
+    }
+
+    /// Active suffix length for a block with `remaining` masked suffix
+    /// tokens left (the block being denoised included).
+    pub fn note_block(&mut self, remaining: usize) -> usize {
+        if self.spec.is_full() {
+            return remaining;
+        }
+        let active = self.spec.active_suffix_len(remaining);
+        self.stats.blocks += 1;
+        self.stats.full_suffix_tokens += remaining as u64;
+        self.stats.active_suffix_tokens += active as u64;
+        self.stats.dropped_suffix_tokens += (remaining - active) as u64;
+        active
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_defaults() {
+        assert_eq!(WindowPolicySpec::parse("full"),
+                   Some(WindowPolicySpec::Full));
+        assert_eq!(WindowPolicySpec::parse("FULL"),
+                   Some(WindowPolicySpec::Full));
+        assert_eq!(WindowPolicySpec::parse("sliding"),
+                   Some(WindowPolicySpec::sliding_default()));
+        assert_eq!(WindowPolicySpec::parse("sliding:512"),
+                   Some(WindowPolicySpec::Sliding { window: 512 }));
+        assert_eq!(WindowPolicySpec::parse("decay"),
+                   Some(WindowPolicySpec::decay_default()));
+        assert_eq!(WindowPolicySpec::parse("decay:1024:0.9:0.05"),
+                   Some(WindowPolicySpec::DecayDropout {
+                       window: 1024, lambda: 0.9, floor: 0.05 }));
+        assert_eq!(WindowPolicySpec::parse("sliding:0"), None);
+        assert_eq!(WindowPolicySpec::parse("decay:1024:1.5"), None);
+        assert_eq!(WindowPolicySpec::parse("decay:1024:0.9:-0.1"), None);
+        assert_eq!(WindowPolicySpec::parse("bogus"), None);
+        assert_eq!(WindowPolicySpec::default(), WindowPolicySpec::Full);
+        for spec in [WindowPolicySpec::Full,
+                     WindowPolicySpec::sliding_default(),
+                     WindowPolicySpec::decay_default()] {
+            assert_eq!(WindowPolicySpec::parse(&spec.label()), Some(spec),
+                       "label {} must parse back", spec.label());
+        }
+    }
+
+    #[test]
+    fn full_prices_everything_and_records_nothing() {
+        let mut p = WindowPlanner::new(WindowPolicySpec::Full, 64);
+        for remaining in [0usize, 1, 64, 4096, 65536] {
+            assert_eq!(p.note_block(remaining), remaining);
+        }
+        assert_eq!(p.stats, WindowStats::default());
+        assert_eq!(p.stats.active_frac().to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn degenerate_sliding_takes_exactly_the_full_lengths() {
+        // a window at least as wide as anything remaining is Full
+        for remaining in [1usize, 64, 640, 4096] {
+            let wide = WindowPolicySpec::Sliding { window: 4096 };
+            assert_eq!(wide.active_suffix_len(remaining), remaining);
+        }
+        let wide = WindowPolicySpec::Sliding { window: 512 };
+        let f = wide.mean_active_frac(64, 512);
+        assert_eq!(f.to_bits(), 1.0f64.to_bits(),
+                   "degenerate window frac must be exactly 1.0");
+        assert_eq!(window_cost_frac(f).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn active_suffix_invariants() {
+        crate::stats::prop_check("active <= min(cap, remaining)", 128,
+                                 |rng| {
+            let spec = match rng.next_u64() % 3 {
+                0 => WindowPolicySpec::Full,
+                1 => WindowPolicySpec::Sliding {
+                    window: 1 + (rng.next_u64() % 8192) as usize,
+                },
+                _ => WindowPolicySpec::DecayDropout {
+                    window: 1 + (rng.next_u64() % 8192) as usize,
+                    lambda: 0.5 + 0.5 * rng.next_f64(),
+                    floor: 0.5 * rng.next_f64(),
+                },
+            };
+            let remaining = (rng.next_u64() % 70_000) as usize;
+            (spec, remaining)
+        }, |&(spec, remaining)| {
+            let active = spec.active_suffix_len(remaining);
+            if active > remaining {
+                return Err(format!("active {active} > remaining \
+                                    {remaining}"));
+            }
+            if let Some(cap) = spec.window_cap() {
+                if active > cap {
+                    return Err(format!("active {active} > cap {cap}"));
+                }
+            }
+            if remaining > 0 && active == 0 {
+                return Err("active 0 with suffix remaining".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn active_monotone_in_window_and_remaining() {
+        for remaining in [64usize, 2048, 32768] {
+            let mut prev = 0usize;
+            for w in [64usize, 256, 1024, 4096, 65536] {
+                let s = WindowPolicySpec::Sliding { window: w };
+                let d = WindowPolicySpec::DecayDropout {
+                    window: w, lambda: 0.95, floor: 0.10 };
+                let a_s = s.active_suffix_len(remaining);
+                let a_d = d.active_suffix_len(remaining);
+                assert!(a_d <= a_s,
+                        "decay {a_d} must not exceed sliding {a_s}");
+                assert!(a_d >= prev,
+                        "decay active fell {prev} -> {a_d} at w {w}");
+                prev = a_d;
+            }
+        }
+        for spec in [WindowPolicySpec::sliding_default(),
+                     WindowPolicySpec::decay_default()] {
+            let mut prev = 0usize;
+            for remaining in [0usize, 32, 64, 512, 2048, 8192, 65536] {
+                let a = spec.active_suffix_len(remaining);
+                assert!(a >= prev, "{}: active fell {prev} -> {a} at \
+                                    remaining {remaining}", spec.label());
+                prev = a;
+            }
+        }
+    }
+
+    #[test]
+    fn decay_bites_harder_than_sliding_on_long_suffixes() {
+        let s = WindowPolicySpec::sliding_default();
+        let d = WindowPolicySpec::decay_default();
+        let remaining = 32 * 1024;
+        let a_s = s.active_suffix_len(remaining);
+        let a_d = d.active_suffix_len(remaining);
+        assert_eq!(a_s, 2048);
+        assert!(a_d < a_s / 4,
+                "decay must retain well under the window ({a_d} vs \
+                 {a_s})");
+        assert!(a_d >= 64, "floor retention must keep a base ({a_d})");
+    }
+
+    #[test]
+    fn cost_frac_bounds_and_exact_unity() {
+        assert_eq!(window_cost_frac(1.0).to_bits(), 1.0f64.to_bits());
+        assert!((window_cost_frac(0.0) - (1.0 - WINDOW_SAVINGS)).abs()
+                < 1e-15);
+        for f in [0.0, 0.1, 0.5, 0.9, 1.0, 2.0, -0.5] {
+            let c = window_cost_frac(f);
+            assert!(c >= 1.0 - WINDOW_SAVINGS && c <= 1.0,
+                    "cost frac {c} out of bounds at f {f}");
+        }
+    }
+
+    #[test]
+    fn full_mean_frac_is_exactly_one() {
+        for gen_len in [64usize, 256, 4096, 65536] {
+            let f = WindowPolicySpec::Full.mean_active_frac(64, gen_len);
+            assert_eq!(f.to_bits(), 1.0f64.to_bits(),
+                       "Full mean frac must be bit-exact 1.0");
+        }
+        let f = WindowPolicySpec::Full.serving_active_frac(64);
+        assert_eq!(f.to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn planner_accounting_invariant() {
+        crate::stats::prop_check("active + dropped == full", 64, |rng| {
+            let spec = if rng.next_u64() % 2 == 0 {
+                WindowPolicySpec::Sliding {
+                    window: 1 + (rng.next_u64() % 4096) as usize,
+                }
+            } else {
+                WindowPolicySpec::DecayDropout {
+                    window: 1 + (rng.next_u64() % 4096) as usize,
+                    lambda: 0.5 + 0.5 * rng.next_f64(),
+                    floor: 0.5 * rng.next_f64(),
+                }
+            };
+            let n_blocks = 1 + (rng.next_u64() % 16) as usize;
+            (spec, n_blocks)
+        }, |&(spec, n_blocks)| {
+            let mut p = spec.build(64);
+            for b in 0..n_blocks {
+                let remaining = (n_blocks - b) * 64;
+                let active = p.note_block(remaining);
+                if active > remaining {
+                    return Err("active exceeds remaining".into());
+                }
+            }
+            let s = p.stats;
+            if s.active_suffix_tokens + s.dropped_suffix_tokens
+                != s.full_suffix_tokens {
+                return Err(format!("{} + {} != {}",
+                                   s.active_suffix_tokens,
+                                   s.dropped_suffix_tokens,
+                                   s.full_suffix_tokens));
+            }
+            if s.blocks != n_blocks as u64 {
+                return Err(format!("blocks {} != {}", s.blocks,
+                                   n_blocks));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn serving_frac_orders_policies() {
+        let full = WindowPolicySpec::Full.serving_active_frac(64);
+        let slide = WindowPolicySpec::sliding_default()
+            .serving_active_frac(64);
+        let decay = WindowPolicySpec::decay_default()
+            .serving_active_frac(64);
+        assert_eq!(full.to_bits(), 1.0f64.to_bits());
+        // 8 blocks of 64 = 512 remaining max: the 2048 windows don't
+        // clip, so sliding stays exactly full while decay still thins
+        assert_eq!(slide.to_bits(), 1.0f64.to_bits());
+        assert!(decay < slide, "decay {decay} must thin the serving \
+                                suffix (sliding {slide})");
+        assert!(decay > 0.0);
+    }
+}

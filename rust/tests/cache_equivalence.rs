@@ -239,6 +239,7 @@ fn off_fleet_serves_bit_identically_to_degenerate_interval_fleet() {
             arrival_s: i as f64 * 0.05,
             prompt_len: (64 + rng.next_u64() % 192) as usize,
             gen_len: (64 * (1 + rng.next_u64() % 5)) as usize,
+            class: dart::cluster::RequestClass::Chat,
         }).collect()
     };
     let run = |feature_cache| {

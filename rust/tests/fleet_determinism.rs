@@ -27,6 +27,9 @@ fn assert_metrics_identical(a: &FleetMetrics, b: &FleetMetrics, ctx: &str) {
     assert_eq!(a.slo_met, b.slo_met, "slo_met: {ctx}");
     assert_eq!(a.tokens, b.tokens, "tokens: {ctx}");
     assert_eq!(a.slo_tokens, b.slo_tokens, "slo_tokens: {ctx}");
+    assert_eq!(a.class_completed, b.class_completed,
+               "class_completed: {ctx}");
+    assert_eq!(a.class_shed, b.class_shed, "class_shed: {ctx}");
     assert_eq!(a.padded_lane_tokens, b.padded_lane_tokens,
                "padded_lane_tokens: {ctx}");
     assert_eq!(a.ragged_pad_tokens, b.ragged_pad_tokens,
@@ -131,9 +134,11 @@ fn parallel_study_grid_is_bit_identical_to_serial() {
         assert_eq!(p.cache, s.cache);
         assert_eq!(p.admission, s.admission);
         assert_eq!(p.mem_cap, s.mem_cap);
-        let ctx = format!("{}/{:?}/{}/{}/{}/{:?}", p.shape, p.policy,
+        assert_eq!(p.window, s.window);
+        let ctx = format!("{}/{:?}/{}/{}/{}/{:?}/{}", p.shape, p.policy,
                           p.schedule.name(), p.cache.name(),
-                          p.admission_label(), p.mem_cap);
+                          p.admission_label(), p.mem_cap,
+                          p.window.label());
         assert_metrics_identical(&p.metrics, &s.metrics, &ctx);
     }
     // the smoke grid carries the feature-cache axis: both arms must
@@ -145,6 +150,10 @@ fn parallel_study_grid_is_bit_identical_to_serial() {
     // one, so the bit-identity above covers pressured scheduling too
     assert!(parallel.cells.iter().any(|c| c.mem_cap.is_none()));
     assert!(parallel.cells.iter().any(|c| c.mem_cap.is_some()));
+    // and the suffix-window axis: full and decay arms both appear, so
+    // the bit-identity above covers windowed pricing too
+    assert!(parallel.cells.iter().any(|c| c.window.is_full()));
+    assert!(parallel.cells.iter().any(|c| !c.window.is_full()));
     for (p, s) in parallel.shapes.iter().zip(&serial.shapes) {
         assert_eq!(p.capacity_tps.to_bits(), s.capacity_tps.to_bits());
         assert_eq!(p.offered_rps.to_bits(), s.offered_rps.to_bits());
@@ -244,6 +253,47 @@ fn length_mixed_diurnal_trace_serves_deterministically() {
     let b = run(&trace);
     assert_metrics_identical(&a, &b, "length-mix rerun");
     assert!(a.completed + a.shed() == 40, "length-mix accounting");
+}
+
+#[test]
+fn windowed_long_form_fleet_serves_deterministically() {
+    // the long-form serving path (blended 8-64K-token trace + decay
+    // suffix window + per-class SLO relaxation) across a trace
+    // round-trip: two runs are bit-identical, per-class counters
+    // included (they join `assert_metrics_identical` above)
+    let spec = TraceSpec::blended(32, Arrival::Poisson { rps: 40.0 }, 53,
+                                  0.5);
+    let trace = generate_trace(&spec);
+    let replayed = trace_from_text(&trace_to_text(&trace)).unwrap();
+    let run = |t: &[dart::cluster::TraceRequest]| {
+        let mut topo = ClusterTopology::homogeneous(
+            2, dart::config::HwConfig::dart_default(),
+            ModelArch::llada_8b(), CacheMode::Dual);
+        topo.window = dart::window::WindowPolicySpec::decay_default();
+        topo.calibrate();
+        let slo = SloConfig::auto(&topo);
+        FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo).run(t)
+    };
+    let a = run(&trace);
+    let b = run(&trace);
+    assert_metrics_identical(&a, &b, "windowed long-form rerun");
+    assert!(a.completed + a.shed() == 32, "windowed accounting");
+    // the blend actually drew both classes, and every request landed
+    // in exactly one per-class counter
+    let (co, cc, cs) = a.class_counts(dart::cluster::RequestClass::Chat);
+    let (lo, lc, ls) =
+        a.class_counts(dart::cluster::RequestClass::LongForm);
+    assert!(lo > 0, "no long-form requests drawn");
+    assert!(co > 0, "no chat requests drawn");
+    assert_eq!(co + lo, 32);
+    assert_eq!(cc + lc, a.completed);
+    assert_eq!(cs + ls, a.shed());
+    // the class column survives the trace-file round-trip
+    let c1 = run(&replayed);
+    let c2 = run(&replayed);
+    assert_metrics_identical(&c1, &c2, "windowed long-form replay rerun");
+    assert_eq!(c1.class_counts(dart::cluster::RequestClass::LongForm).0,
+               lo, "replayed trace lost the class column");
 }
 
 #[test]

@@ -84,6 +84,7 @@ fn gate_trace() -> Vec<TraceRequest> {
         arrival_s: i as f64 * 0.05,
         prompt_len: (64 + rng.next_u64() % 192) as usize,
         gen_len: (64 * (1 + rng.next_u64() % 5)) as usize,
+        class: dart::cluster::RequestClass::Chat,
     }).collect()
 }
 

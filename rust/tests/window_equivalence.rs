@@ -1,0 +1,426 @@
+//! Suffix-window contracts (the differential gate that licenses the
+//! windowed pricing integration):
+//!
+//! 1. `WindowPolicySpec::Full` driven through the planner plumbing
+//!    returns every remaining-suffix length untouched and records
+//!    nothing, and `Sliding { window }` with a window at least as wide
+//!    as anything remaining takes the identical lengths — so the whole
+//!    windowed path collapses to the baseline when the window is
+//!    degenerate.
+//! 2. The same collapse holds end-to-end on the real runtime path
+//!    (when AOT artifacts are built): a `Full` engine reproduces the
+//!    default engine's tokens and `StepTrace` bit-exactly with empty
+//!    `WindowStats`, and window policies never steer sampling — only
+//!    pricing and accounting.
+//! 3. Billed latency: `AnalyticalSim::run_windowed` at `Full` is
+//!    bit-identical to `run_cached` on random workloads and cache
+//!    plans; a `Full` calibration profile and a degenerate-window
+//!    profile persist byte-identical text; a `Full` fleet and a
+//!    degenerate-window fleet serve a 96-request trace bit-identically.
+//! 4. Properties: `active <= min(window_cap, remaining)` and
+//!    `active + dropped == full` under the seeded retention process;
+//!    the active length is monotone in the window size and in the
+//!    remaining suffix; the decay retention draw is deterministic in
+//!    `(seed, blk)`; the v4 curve text format is emit → parse → emit
+//!    byte-identical and v1–v3 texts parse at the full-suffix default.
+
+use dart::cache::{expected_plan, CachePlan, CachePolicySpec};
+use dart::calib::{CalibConfig, Calibrator, CurvePoint, LatencyCurve};
+use dart::cluster::{ClusterTopology, FleetSim, RequestClass, RoutePolicy,
+                    SloConfig, TraceRequest};
+use dart::config::{CacheMode, HwConfig, ModelArch, Workload};
+use dart::coordinator::{EngineConfig, GenerationEngine};
+use dart::runtime::{artifacts_dir, Executor};
+use dart::sim::analytical::{AnalyticalSim, PrecisionConfig};
+use dart::util::SplitMix64;
+use dart::window::{simulate_window_block, WindowPolicySpec, WindowStats,
+                   EXPECTATION_SEEDS};
+
+#[test]
+fn full_and_degenerate_sliding_take_baseline_lengths_on_random_drives() {
+    dart::stats::prop_check("full == baseline length stream", 64, |rng| {
+        let n_blocks = 1 + (rng.next_u64() % 12) as usize;
+        let block_len = 1 + (rng.next_u64() % 96) as usize;
+        (n_blocks, block_len)
+    }, |&(n_blocks, block_len)| {
+        let mut full = WindowPolicySpec::Full.build(block_len);
+        // a window at least as wide as the whole generation can never
+        // clip — the degenerate spec must take the identical lengths
+        let mut wide = WindowPolicySpec::Sliding {
+            window: n_blocks * block_len }.build(block_len);
+        for blk in 0..n_blocks {
+            let remaining = (n_blocks - blk) * block_len;
+            let a = full.note_block(remaining);
+            if a != remaining {
+                return Err(format!("full clipped {remaining} -> {a}"));
+            }
+            let b = wide.note_block(remaining);
+            if b != remaining {
+                return Err(format!(
+                    "degenerate sliding clipped {remaining} -> {b}"));
+            }
+        }
+        // Full records nothing at all; the degenerate window consults
+        // the planner every block and drops nothing
+        if full.stats != WindowStats::default() {
+            return Err(format!("full recorded {:?}", full.stats));
+        }
+        let s = wide.stats;
+        if s.blocks != n_blocks as u64
+            || s.dropped_suffix_tokens != 0
+            || s.active_suffix_tokens != s.full_suffix_tokens
+        {
+            return Err(format!("degenerate sliding stats {s:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_engine_is_bit_identical_to_the_prewindow_engine() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("artifacts not built; skipping");
+        return;
+    };
+    let gen = |window| {
+        let ex = Executor::load(&dir).unwrap();
+        let g = ex.manifest.geometry;
+        let mut eng = GenerationEngine::new(ex, EngineConfig {
+            window,
+            ..EngineConfig::default()
+        });
+        let mut rng = SplitMix64::new(77);
+        let prompts: Vec<Vec<i32>> = (0..2).map(|_| {
+            (0..g.prompt_len).map(|_| rng.range(4, 52) as i32).collect()
+        }).collect();
+        eng.generate(&prompts).unwrap()
+    };
+    // the default config *is* Full — the differential is that an
+    // explicitly-Full engine matches it in every observable, so the
+    // planner sitting on the block loop is invisible when disabled
+    let base = gen(WindowPolicySpec::default());
+    let full = gen(WindowPolicySpec::Full);
+    assert_eq!(full.tokens, base.tokens);
+    assert_eq!(full.step_trace, base.step_trace);
+    assert_eq!(full.steps, base.steps);
+    assert_eq!(full.kv_packed_bytes, base.kv_packed_bytes);
+    assert_eq!(full.model_s.to_bits(), base.model_s.to_bits());
+    assert_eq!(full.sampling_s.to_bits(), base.sampling_s.to_bits());
+    assert_eq!(full.window_stats, WindowStats::default());
+
+    // a window wider than the generation records blocks but drops
+    // nothing, and reproduces the same tokens
+    let wide = gen(WindowPolicySpec::Sliding { window: 1 << 20 });
+    assert_eq!(wide.tokens, base.tokens);
+    assert_eq!(wide.step_trace, base.step_trace);
+    assert!(wide.window_stats.blocks > 0);
+    assert_eq!(wide.window_stats.dropped_suffix_tokens, 0);
+    assert_eq!(wide.window_stats.active_suffix_tokens,
+               wide.window_stats.full_suffix_tokens);
+
+    // a real decay window narrows the priced suffix while keeping the
+    // accounting invariant — and never steers sampling
+    let decay = gen(WindowPolicySpec::decay_default());
+    assert_eq!(decay.tokens, base.tokens);
+    assert_eq!(decay.step_trace, base.step_trace);
+    let s = decay.window_stats;
+    assert!(s.blocks > 0);
+    assert_eq!(s.active_suffix_tokens + s.dropped_suffix_tokens,
+               s.full_suffix_tokens);
+    assert!(s.active_frac() <= 1.0 && s.active_frac() > 0.0);
+}
+
+#[test]
+fn full_billing_is_bit_identical_on_random_workloads() {
+    let sim = AnalyticalSim::new(HwConfig::dart_default(),
+                                 PrecisionConfig::dart_full_quant());
+    dart::stats::prop_check("run_windowed full == run_cached", 32, |rng| {
+        let cache = CacheMode::ALL[(rng.next_u64() % 3) as usize];
+        let batch = 1 + (rng.next_u64() % 16);
+        let block_len = 16 << (rng.next_u64() % 3);
+        let n_blocks = 1 + (rng.next_u64() % 6);
+        let prompt_len = 32 + (rng.next_u64() % 256);
+        let steps_per_block = 1 + (rng.next_u64() % 16);
+        let steps = 1.0 + rng.next_f64() * steps_per_block as f64;
+        let cached = rng.next_u64() % 2 == 0;
+        (cache, batch, block_len, n_blocks, prompt_len, steps_per_block,
+         steps, cached)
+    }, |&(cache, batch, block_len, n_blocks, prompt_len, steps_per_block,
+          steps, cached)| {
+        let w = Workload {
+            model: ModelArch::llada_8b(),
+            batch,
+            prompt_len,
+            gen_len: block_len * n_blocks,
+            block_len,
+            steps_per_block,
+            cache,
+        };
+        // the windowed path must collapse whatever the cache plan is
+        let plan = if cached {
+            expected_plan(&CachePolicySpec::adaptive_default(),
+                          w.block_len as usize,
+                          w.steps_per_block as usize, n_blocks as usize)
+        } else {
+            CachePlan::off()
+        };
+        let base = sim.run_cached(&w, steps, &plan);
+        for window in [WindowPolicySpec::Full,
+                       WindowPolicySpec::Sliding { window: 1 << 20 }] {
+            let win = sim.run_windowed(&w, steps, &plan, &window);
+            for (name, a, b) in [
+                ("total", base.total_s, win.total_s),
+                ("model", base.model.seconds, win.model.seconds),
+                ("sampling", base.sampling.seconds, win.sampling.seconds),
+                ("hbm", base.model.hbm_bytes, win.model.hbm_bytes),
+                ("energy", base.energy.total_j, win.energy.total_j),
+            ] {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{} {name} drifted: {a} vs {b}",
+                                       window.label()));
+                }
+            }
+        }
+        // a decay window strictly undercuts the full-suffix bill on
+        // every workload in this domain (block_len >= 16, so every
+        // block prices a narrowed suffix)
+        let decay = sim.run_windowed(&w, steps, &plan,
+                                     &WindowPolicySpec::decay_default());
+        if decay.total_s >= base.total_s {
+            return Err(format!("decay {} did not undercut full {}",
+                               decay.total_s, base.total_s));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_profile_matches_degenerate_window_profile_byte_exactly() {
+    let mk = |window| {
+        let mut cfg = CalibConfig::serving_default(&[1, 2, 8]);
+        cfg.samples_per_cell = 3;
+        cfg.window = window;
+        Calibrator::new(HwConfig::dart_default(), ModelArch::llada_8b(),
+                        CacheMode::Dual, cfg).profile("npu0")
+    };
+    let full = mk(WindowPolicySpec::Full);
+    let wide = mk(WindowPolicySpec::Sliding { window: 1 << 20 });
+    // both profile at window fraction exactly 1.0: the persisted
+    // artifacts are byte-identical
+    assert_eq!(full.window_frac.to_bits(), 1.0f64.to_bits());
+    assert_eq!(full.to_text(), wide.to_text());
+    // while a real policy records a narrowed fraction and prices below
+    let decay = mk(WindowPolicySpec::decay_default());
+    assert!(decay.window_frac > 0.0 && decay.window_frac < 1.0);
+    for (a, b) in decay.points.iter().zip(&full.points) {
+        assert!(a.p50_total_s < b.p50_total_s,
+                "variant {} bucket {}: decay {} vs full {}", a.variant,
+                a.bucket_lo, a.p50_total_s, b.p50_total_s);
+    }
+    // and its v4 text is an emit -> parse -> emit byte fixed point
+    // carrying the window dimension bit-exactly
+    let text = decay.to_text();
+    assert!(text.starts_with("# dart-latency-curve v4\n"));
+    let back = LatencyCurve::from_text(&text).unwrap();
+    assert_eq!(back.to_text(), text);
+    assert_eq!(back.window_frac.to_bits(), decay.window_frac.to_bits());
+}
+
+#[test]
+fn full_fleet_serves_bit_identically_to_degenerate_window_fleet() {
+    // end-to-end: same trace, calibrated curves, admission on — the
+    // degenerate-window topology must reproduce the full fleet's every
+    // externally observable number bit-for-bit (window fraction 1.0,
+    // window scale exactly 1.0)
+    let trace: Vec<TraceRequest> = {
+        let mut rng = SplitMix64::new(0xF1EE7);
+        (0..96u64).map(|i| TraceRequest {
+            id: i,
+            arrival_s: i as f64 * 0.05,
+            prompt_len: (64 + rng.next_u64() % 192) as usize,
+            gen_len: (64 * (1 + rng.next_u64() % 5)) as usize,
+            class: RequestClass::Chat,
+        }).collect()
+    };
+    let run = |window| {
+        let mut topo = ClusterTopology::homogeneous(
+            3, HwConfig::dart_default(), ModelArch::llada_8b(),
+            CacheMode::Dual);
+        topo.window = window;
+        topo.calibrate();
+        let slo = SloConfig::auto(&topo);
+        FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo).run(&trace)
+    };
+    let full = run(WindowPolicySpec::Full);
+    let wide = run(WindowPolicySpec::Sliding { window: 1 << 20 });
+    assert_eq!(full.completed, wide.completed);
+    assert_eq!(full.admitted, wide.admitted);
+    assert_eq!(full.shed(), wide.shed());
+    assert_eq!(full.tokens, wide.tokens);
+    assert_eq!(full.horizon_s.to_bits(), wide.horizon_s.to_bits());
+    assert_eq!(full.goodput_tps().to_bits(), wide.goodput_tps().to_bits());
+    for q in [0.5, 0.95] {
+        assert_eq!(full.ttft.quantile(q).unwrap_or(-1.0).to_bits(),
+                   wide.ttft.quantile(q).unwrap_or(-1.0).to_bits());
+    }
+    for (a, b) in full.observations.iter().zip(&wide.observations) {
+        assert_eq!(a.observations.len(), b.observations.len());
+        for (x, y) in a.observations.iter().zip(&b.observations) {
+            assert_eq!(x.total_s.to_bits(), y.total_s.to_bits());
+        }
+    }
+    // an all-chat trace attributes every request to the chat class and
+    // keeps the per-class report line out of the summary
+    assert_eq!(full.class_counts(RequestClass::Chat),
+               (96, full.completed, full.shed()));
+    assert_eq!(full.class_counts(RequestClass::LongForm), (0, 0, 0));
+    assert!(!full.report().contains("per-class:"));
+}
+
+#[test]
+fn accounting_invariants_under_the_synthetic_retention_process() {
+    // active <= min(window_cap, remaining) and active + dropped == full
+    // for every policy under the seeded S12 retention draw itself (the
+    // realized side), not just the closed-form expectation
+    dart::stats::prop_check("retention draw accounts", 64, |rng| {
+        let spec = match rng.next_u64() % 3 {
+            0 => WindowPolicySpec::Full,
+            1 => WindowPolicySpec::Sliding {
+                window: 1 + (rng.next_u64() % 4096) as usize,
+            },
+            _ => WindowPolicySpec::DecayDropout {
+                window: 1 + (rng.next_u64() % 4096) as usize,
+                lambda: 0.5 + 0.5 * rng.next_f64(),
+                floor: 0.5 * rng.next_f64(),
+            },
+        };
+        let remaining = (rng.next_u64() % 70_000) as usize;
+        let blk = (rng.next_u64() % 64) as usize;
+        let seed = EXPECTATION_SEEDS[(rng.next_u64() % 4) as usize];
+        (spec, remaining, blk, seed)
+    }, |&(spec, remaining, blk, seed)| {
+        let t = simulate_window_block(&spec, remaining, blk, seed);
+        if t.full != remaining {
+            return Err(format!("full {} != remaining {remaining}", t.full));
+        }
+        if t.active + t.dropped != t.full {
+            return Err(format!("{} + {} != {}", t.active, t.dropped,
+                               t.full));
+        }
+        if t.active > remaining {
+            return Err(format!("active {} > remaining {remaining}",
+                               t.active));
+        }
+        if let Some(cap) = spec.window_cap() {
+            if t.active > cap {
+                return Err(format!("active {} > cap {cap}", t.active));
+            }
+        }
+        if remaining > 0 && t.active == 0 {
+            return Err("active 0 with suffix remaining".into());
+        }
+        // the decay retention draw is deterministic in (seed, blk)
+        let again = simulate_window_block(&spec, remaining, blk, seed);
+        if again != t {
+            return Err(format!("retention draw not deterministic: \
+                                {t:?} vs {again:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn active_suffix_is_monotone_in_window_size() {
+    // a wider window can only keep more of the suffix active — both
+    // the closed-form pricing expectation and the billed service time
+    let sim = AnalyticalSim::new(HwConfig::dart_default(),
+                                 PrecisionConfig::dart_full_quant());
+    let w = Workload {
+        model: ModelArch::llada_8b(),
+        batch: 4,
+        prompt_len: 128,
+        gen_len: 8192,
+        block_len: 64,
+        steps_per_block: 8,
+        cache: CacheMode::Dual,
+    };
+    let mut prev_active = 0usize;
+    let mut prev_total = 0.0f64;
+    for window in [64usize, 256, 1024, 4096, 16384] {
+        let spec = WindowPolicySpec::Sliding { window };
+        let active = spec.active_suffix_len(8192);
+        assert!(active >= prev_active,
+                "active fell {prev_active} -> {active} at window {window}");
+        prev_active = active;
+        let r = sim.run_windowed(&w, 6.0, &CachePlan::off(), &spec);
+        assert!(r.total_s >= prev_total,
+                "billed time fell {prev_total} -> {} at window {window}",
+                r.total_s);
+        prev_total = r.total_s;
+    }
+    // and the widest window's bill converges on the full-suffix bill
+    let full = sim.run_cached(&w, 6.0, &CachePlan::off());
+    let widest = sim.run_windowed(&w, 6.0, &CachePlan::off(),
+                                  &WindowPolicySpec::Sliding {
+                                      window: 16384 });
+    assert_eq!(widest.total_s.to_bits(), full.total_s.to_bits());
+}
+
+#[test]
+fn curve_v4_text_is_emit_parse_emit_byte_identical() {
+    dart::stats::prop_check("v4 text fixed point", 32, |rng| {
+        let n = 1 + (rng.next_u64() % 6) as usize;
+        let points: Vec<CurvePoint> = (0..n).map(|i| {
+            let lo = 64 * (i as u64 + 1);
+            CurvePoint {
+                variant: 1 << (rng.next_u64() % 5),
+                bucket_lo: lo,
+                bucket_hi: lo + 64 + rng.next_u64() % 512,
+                gen_tokens: 64 + rng.next_u64() % 512,
+                p50_total_s: rng.next_f64() * 0.2,
+                p95_total_s: rng.next_f64() * 0.4,
+                p50_first_s: rng.next_f64() * 0.02,
+                p95_first_s: rng.next_f64() * 0.04,
+                samples: 1 + (rng.next_u64() % 20) as u32,
+            }
+        }).collect();
+        let cap = 1 + rng.next_u64() % 32;
+        let expected = 1.0 + rng.next_f64() * cap as f64;
+        let hit = rng.next_f64();
+        let frac = rng.next_f64();
+        (points, cap, expected, hit, frac)
+    }, |(points, cap, expected, hit, frac)| {
+        let curve = LatencyCurve::new("npu-prop", points.clone())
+            .with_schedule(*cap, *expected)
+            .with_cache(*hit)
+            .with_window(*frac);
+        let text = curve.to_text();
+        let back = LatencyCurve::from_text(&text)
+            .map_err(|e| format!("parse failed: {e}"))?;
+        if back.to_text() != text {
+            return Err("emit -> parse -> emit not a fixed point".into());
+        }
+        if back.window_frac.to_bits() != curve.window_frac.to_bits() {
+            return Err("window dimension drifted through text".into());
+        }
+        // matched serving fraction prices untouched bit-for-bit
+        if back.window_scale(*frac).to_bits() != 1.0f64.to_bits() {
+            return Err("matched window_scale not exactly 1.0".into());
+        }
+        Ok(())
+    });
+    // pre-window texts (no `window` line) parse at the full-suffix
+    // default, so v1-v3 replay files keep pricing untouched
+    let v3 = "# dart-latency-curve v3\n\
+              device legacy\n\
+              schedule 16 6.00000000000000000e0\n\
+              cache 0.00000000000000000e0\n\
+              1 96 256 128 0.010 0.012 0.003 0.004 5\n";
+    let parsed = LatencyCurve::from_text(v3).unwrap();
+    assert_eq!(parsed.window_frac.to_bits(), 1.0f64.to_bits());
+    let v1 = "device ancient\n\
+              1 96 256 128 0.010 0.012 0.003 0.004 5\n";
+    let parsed = LatencyCurve::from_text(v1).unwrap();
+    assert_eq!(parsed.window_frac.to_bits(), 1.0f64.to_bits());
+    assert_eq!(parsed.window_scale(1.0).to_bits(), 1.0f64.to_bits());
+}

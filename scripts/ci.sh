@@ -112,6 +112,13 @@ if [[ "${1:-}" == "--smoke" ]]; then
     echo "== smoke: serve-cluster under a 18GiB per-device memory cap, calibrated =="
     cargo run --release -- serve-cluster --devices 2 --requests 32 \
         --calibrated --mem-cap 18GiB
+    echo "== smoke: suffix-window equivalence differential gate (full == pre-window, bit-exact) =="
+    cargo test -q --test window_equivalence
+    echo "== smoke: window_sweep bench (reduced trace) =="
+    cargo bench --bench window_sweep -- --smoke
+    echo "== smoke: serve-cluster windowed long-form blend, calibrated =="
+    cargo run --release -- serve-cluster --devices 2 --requests 32 \
+        --calibrated --window decay:2048:0.95 --long-share 0.5
     echo "== smoke: observability goldens (zero-alloc recorder + byte-stable trace summary) =="
     cargo test -q --test trace_golden
     echo "== smoke: --trace export + Chrome-trace JSON validation =="
