@@ -158,6 +158,51 @@ fn main() {
     println!("{}  ({:.2} k events/s)", r.report(), r.throughput() / 1e3);
     note(&mut rows, &r);
 
+    // ---- the PR 10 scale point: the indexed event loop on a fleet
+    // where the old per-event device scan actually hurt (8 devices,
+    // 512 requests), plus its sharded-accounting variant and the
+    // preserved scan-reference loop — the committed BENCH_10.json rows.
+    // All three serve the identical seeded trace and produce
+    // bit-identical metrics (the fleet_determinism gate), so the rows
+    // differ only in wall clock.
+    let big_topo = ClusterTopology::homogeneous(
+        8, HwConfig::dart_default(), ModelArch::llada_8b(), CacheMode::Dual);
+    let big_slo = SloConfig::auto(&big_topo);
+    let big_rps = cluster::chat_offered_rps(
+        cluster::fleet_capacity_tps(&big_topo), 1.5);
+    let big_trace = cluster::generate_trace(
+        &TraceSpec::chat(512, Arrival::Poisson { rps: big_rps }, 9));
+    let mut big_rec = dart::obs::Recorder::enabled(9);
+    FleetSim::new(big_topo.clone(), RoutePolicy::LeastOutstanding, big_slo)
+        .run_traced(&big_trace, &mut big_rec);
+    let big_events = big_rec.counter("fleet.events");
+    let r = b.bench("fleet: indexed scheduler 8dev x 512req", big_events,
+                    || {
+        let mut sim = FleetSim::new(
+            big_topo.clone(), RoutePolicy::LeastOutstanding, big_slo);
+        std::hint::black_box(sim.run(&big_trace));
+    });
+    println!("{}  ({:.2} k events/s)", r.report(), r.throughput() / 1e3);
+    note(&mut rows, &r);
+
+    let r = b.bench("fleet: indexed scheduler 8dev x 512req shards=4",
+                    big_events, || {
+        let mut sim = FleetSim::new(
+            big_topo.clone(), RoutePolicy::LeastOutstanding, big_slo);
+        std::hint::black_box(sim.run_sharded(&big_trace, 4));
+    });
+    println!("{}  ({:.2} k events/s)", r.report(), r.throughput() / 1e3);
+    note(&mut rows, &r);
+
+    let r = b.bench("fleet: scan-reference scheduler 8dev x 512req",
+                    big_events, || {
+        let mut sim = FleetSim::new(
+            big_topo.clone(), RoutePolicy::LeastOutstanding, big_slo);
+        std::hint::black_box(sim.run_scan_reference(&big_trace));
+    });
+    println!("{}  ({:.2} k events/s)", r.report(), r.throughput() / 1e3);
+    note(&mut rows, &r);
+
     // ---- LatencyCurve::lookup: the per-arrival admission-path probe
     let mut cal_cfg = CalibConfig::serving_default(&[1, 2, 4, 8, 16]);
     cal_cfg.samples_per_cell = 3;

@@ -69,12 +69,77 @@ impl CurvePoint {
     }
 }
 
+/// Flattened lookup index over [`LatencyCurve::points`]: one entry per
+/// distinct variant holding the contiguous points range, plus whether
+/// that range's buckets are sorted and disjoint (the precondition for
+/// the binary-search fast path in [`LatencyCurve::lookup_index`]).
+/// Structure-only — it never caches latencies, so the replay
+/// recalibrator's in-place percentile blending leaves it valid.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+struct CurveIndex {
+    ranges: Vec<VariantRange>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct VariantRange {
+    variant: usize,
+    /// half-open range into `points`
+    start: usize,
+    end: usize,
+    /// every bucket has `lo < hi` and buckets never overlap — when
+    /// false (a degenerate hand-edited curve) lookups fall back to the
+    /// reference linear scan over this range
+    sorted_disjoint: bool,
+}
+
+impl CurveIndex {
+    fn build(points: &[CurvePoint]) -> CurveIndex {
+        let mut ranges = Vec::new();
+        let mut i = 0;
+        while i < points.len() {
+            let v = points[i].variant;
+            let start = i;
+            while i < points.len() && points[i].variant == v {
+                i += 1;
+            }
+            let run = &points[start..i];
+            let sorted_disjoint = run.iter()
+                .all(|p| p.bucket_lo < p.bucket_hi)
+                && run.windows(2)
+                    .all(|w| w[0].bucket_hi <= w[1].bucket_lo);
+            ranges.push(VariantRange { variant: v, start, end: i,
+                                       sorted_disjoint });
+        }
+        CurveIndex { ranges }
+    }
+
+    /// Cheap structural sanity check for debug builds: the ranges still
+    /// tile `points` and name the variants at their start offsets. A
+    /// full rebuild-and-compare lives in the property tests.
+    fn covers(&self, points: &[CurvePoint]) -> bool {
+        let mut expect = 0;
+        for r in &self.ranges {
+            if r.start != expect || r.end <= r.start || r.end > points.len()
+                || points[r.start].variant != r.variant
+            {
+                return false;
+            }
+            expect = r.end;
+        }
+        expect == points.len()
+    }
+}
+
 /// A device's full measured latency table.
 #[derive(Clone, Debug)]
 pub struct LatencyCurve {
     pub device: String,
-    /// sorted by (variant, bucket_lo)
+    /// sorted by (variant, bucket_lo). Structural edits through this
+    /// field (adding/removing/re-bucketing points) must be followed by
+    /// [`Self::reindex`]; value edits (latencies, samples) need not.
     pub points: Vec<CurvePoint>,
+    /// flattened lookup index mirroring the `points` structure
+    index: CurveIndex,
     /// configured denoising-step cap the cells were profiled at
     pub steps_per_block: u64,
     /// *realized* steps per block the profiling billed — the
@@ -101,14 +166,25 @@ pub struct LatencyCurve {
 impl LatencyCurve {
     pub fn new(device: &str, mut points: Vec<CurvePoint>) -> Self {
         points.sort_by_key(|p| (p.variant, p.bucket_lo));
+        let index = CurveIndex::build(&points);
         LatencyCurve {
             device: device.to_string(),
             points,
+            index,
             steps_per_block: 16,
             expected_steps: 16.0,
             cache_hit_rate: 0.0,
             window_frac: 1.0,
         }
+    }
+
+    /// Re-sort `points` and rebuild the flattened lookup index. Call
+    /// after structurally mutating [`Self::points`] in place; curves
+    /// built through [`Self::new`] / [`Self::from_text`] are already
+    /// indexed.
+    pub fn reindex(&mut self) {
+        self.points.sort_by_key(|p| (p.variant, p.bucket_lo));
+        self.index = CurveIndex::build(&self.points);
     }
 
     /// Record which schedule the curve was profiled under (the
@@ -211,9 +287,55 @@ impl LatencyCurve {
     /// a measured observation back to the cell that priced it.
     pub fn lookup_index(&self, variant: usize, seq_len: u64)
                         -> Option<usize> {
-        // points are sorted by (variant, bucket_lo) at construction, so
-        // one allocation-free pass suffices — this sits on the
-        // scheduler's per-arrival admission path
+        // this sits on the scheduler's per-arrival admission path and
+        // inside batch pricing, so it resolves through the flattened
+        // index: binary-search the variant range, then the bucket —
+        // bit-identical to the reference scan (property-tested)
+        debug_assert!(self.index.covers(&self.points),
+                      "curve index is stale: points were structurally \
+                       mutated without reindex()");
+        let ranges = &self.index.ranges;
+        // smallest calibrated variant >= requested (the batcher's
+        // pad-up rule), clamping to the largest when none fits
+        let ri = match ranges.binary_search_by(|r| r.variant.cmp(&variant)) {
+            Ok(i) => i,
+            Err(i) if i < ranges.len() => i,
+            Err(_) => ranges.len().checked_sub(1)?,
+        };
+        let r = ranges[ri];
+        if !r.sorted_disjoint {
+            // degenerate bucket geometry: the reference scan's
+            // first-match / first-minimum semantics are order-dependent,
+            // so reproduce them literally over this variant's run
+            return self.nearest_in_range(r.start, r.end, seq_len);
+        }
+        let pts = &self.points[r.start..r.end];
+        // first bucket strictly above seq_len
+        let up = pts.partition_point(|p| p.bucket_lo <= seq_len);
+        if up > 0 && seq_len < pts[up - 1].bucket_hi {
+            return Some(r.start + up - 1);
+        }
+        // gap or out-of-range: nearest edge wins; on a tie the linear
+        // scan keeps the first (lower) bucket, so <= below
+        match (up.checked_sub(1), (up < pts.len()).then_some(up)) {
+            (None, None) => None,
+            (Some(lo), None) => Some(r.start + lo),
+            (None, Some(hi)) => Some(r.start + hi),
+            (Some(lo), Some(hi)) => {
+                let dl = seq_len
+                    .saturating_sub(pts[lo].bucket_hi.saturating_sub(1));
+                let dh = pts[hi].bucket_lo - seq_len;
+                Some(r.start + if dl <= dh { lo } else { hi })
+            }
+        }
+    }
+
+    /// Reference implementation of [`Self::lookup_index`]: the original
+    /// allocation-free linear scan over `points`. Kept as the oracle the
+    /// flattened index is property-tested against — every result must
+    /// match this, bit for bit.
+    pub fn lookup_index_linear(&self, variant: usize, seq_len: u64)
+                               -> Option<usize> {
         let v = self.points.iter().map(|p| p.variant)
             .find(|&pv| pv >= variant)
             .or_else(|| self.points.last().map(|p| p.variant))?;
@@ -227,12 +349,34 @@ impl LatencyCurve {
             let dist = if seq_len < p.bucket_lo {
                 p.bucket_lo - seq_len
             } else {
+                seq_len.saturating_sub(p.bucket_hi.saturating_sub(1))
+            };
+            if best.map(|(_, d)| dist < d).unwrap_or(true) {
+                best = Some((i, dist));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// The reference scan's bucket resolution over one variant's
+    /// contiguous run: first in-bucket hit wins, otherwise the first
+    /// point at the minimum edge distance.
+    fn nearest_in_range(&self, start: usize, end: usize, seq_len: u64)
+                        -> Option<usize> {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, p) in self.points[start..end].iter().enumerate() {
+            if p.bucket_lo <= seq_len && seq_len < p.bucket_hi {
+                return Some(start + i);
+            }
+            let dist = if seq_len < p.bucket_lo {
+                p.bucket_lo - seq_len
+            } else {
                 // saturating: a degenerate hand-edited row (hi == 0)
                 // must not underflow on the admission path
                 seq_len.saturating_sub(p.bucket_hi.saturating_sub(1))
             };
             if best.map(|(_, d)| dist < d).unwrap_or(true) {
-                best = Some((i, dist));
+                best = Some((start + i, dist));
             }
         }
         best.map(|(i, _)| i)
@@ -854,5 +998,105 @@ mod tests {
                 }
                 Ok(())
             });
+    }
+
+    /// Exhaustive flattened-vs-linear comparison over every interesting
+    /// probe of one curve: all bucket edges ±1, deep inside gaps, and
+    /// far outside the profiled range, for variants from 0 (below the
+    /// ladder) past the largest calibrated one.
+    fn assert_lookup_matches_linear(c: &LatencyCurve, ctx: &str)
+                                    -> Result<(), String> {
+        let mut probes: Vec<u64> = vec![0, 1, u64::MAX / 2, u64::MAX];
+        for p in &c.points {
+            for edge in [p.bucket_lo, p.bucket_hi, p.gen_tokens] {
+                probes.extend([edge.saturating_sub(1), edge,
+                               edge.saturating_add(1)]);
+            }
+        }
+        let mut variants: Vec<usize> = vec![0, 1, usize::MAX];
+        for p in &c.points {
+            variants.extend([p.variant.saturating_sub(1), p.variant,
+                             p.variant + 1]);
+        }
+        for &v in &variants {
+            for &s in &probes {
+                let flat = c.lookup_index(v, s);
+                let lin = c.lookup_index_linear(v, s);
+                if flat != lin {
+                    return Err(format!(
+                        "{ctx}: lookup_index({v}, {s}) = {flat:?} but \
+                         linear scan says {lin:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_flattened_lookup_is_bit_identical_to_linear_scan() {
+        // the flattened-index equivalence gate: on random sparse curves
+        // (bucket gaps force the nearest-edge clamp) the indexed lookup
+        // must resolve the exact cell the reference linear scan does —
+        // including after a v4 text round-trip, which rebuilds the
+        // index from parsed points
+        crate::stats::prop_check(
+            "flattened lookup == linear scan", 64,
+            random_curve,
+            |c| {
+                assert_lookup_matches_linear(c, "generated curve")?;
+                let parsed = LatencyCurve::from_text(&c.to_text())
+                    .map_err(|e| format!("round-trip parse failed: {e}"))?;
+                assert_lookup_matches_linear(&parsed, "parsed v4 curve")
+            });
+    }
+
+    #[test]
+    fn flattened_lookup_matches_linear_on_v1_parsed_curves() {
+        // v1 files (bare 9-field rows, no header lines) build their
+        // index through the same from_text funnel
+        let v1 = "\
+            1 96 256 64 0.010 0.012 0.002 0.003 5\n\
+            1 512 1024 64 0.020 0.024 0.004 0.005 5\n\
+            4 96 256 64 0.016 0.019 0.003 0.004 5\n\
+            4 512 1024 64 0.032 0.038 0.006 0.008 5\n";
+        let c = LatencyCurve::from_text(v1).unwrap();
+        assert_lookup_matches_linear(&c, "v1 curve").unwrap();
+    }
+
+    #[test]
+    fn degenerate_buckets_fall_back_to_the_reference_scan() {
+        // overlapping, inverted and empty (hi <= lo) buckets defeat the
+        // binary-search preconditions; the index must detect that per
+        // variant and reproduce the order-dependent reference semantics
+        let p = |v: usize, lo: u64, hi: u64| CurvePoint {
+            variant: v, bucket_lo: lo, bucket_hi: hi, gen_tokens: 64,
+            p50_total_s: 0.01, p95_total_s: 0.012,
+            p50_first_s: 0.002, p95_first_s: 0.003, samples: 5,
+        };
+        let c = LatencyCurve::new("dgn", vec![
+            p(1, 96, 512),   // overlaps the next bucket
+            p(1, 256, 384),
+            p(1, 700, 700),  // empty
+            p(2, 100, 0),    // inverted (hi < lo)
+            p(2, 50, 60),    // well-formed variant mixed in
+        ]);
+        assert_lookup_matches_linear(&c, "degenerate curve").unwrap();
+        // the well-formed variant still resolves in-bucket hits
+        assert_eq!(c.lookup(2, 55).unwrap().bucket_lo, 50);
+    }
+
+    #[test]
+    fn reindex_restores_lookup_after_structural_mutation() {
+        let mut c = curve();
+        // graft a new cell through the pub field (what a hand-edit or
+        // an external tool would do), then reindex
+        c.points.push(CurvePoint {
+            variant: 8, bucket_lo: 96, bucket_hi: 256, gen_tokens: 64,
+            p50_total_s: 0.05, p95_total_s: 0.06,
+            p50_first_s: 0.01, p95_first_s: 0.012, samples: 5,
+        });
+        c.reindex();
+        assert_eq!(c.lookup(8, 128).unwrap().variant, 8);
+        assert_lookup_matches_linear(&c, "reindexed curve").unwrap();
     }
 }

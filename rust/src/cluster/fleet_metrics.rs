@@ -47,6 +47,41 @@ pub enum ShedReason {
     Memory,
 }
 
+/// Deferred accounting for one executed batch: everything
+/// [`FleetMetrics::apply_batch`] needs, priced off the scheduling hot
+/// path. The scheduler stamps each executed batch with a global
+/// monotone `seq` at execution time; sharded accounting workers fill
+/// in the rest per device partition, and the merge replays accounts in
+/// `seq` order.
+#[derive(Clone, Debug)]
+pub struct BatchAccount {
+    /// global execution order (ascending virtual time, ties in device
+    /// index order) — the pinned merge key
+    pub seq: u64,
+    pub device: usize,
+    pub padded_lanes: u64,
+    pub padded_lane_tokens: u64,
+    /// batch service time (busy-window length), seconds
+    pub total_s: f64,
+    /// peak resident bytes of the executed batch's memory plan
+    pub peak_bytes: u64,
+    pub obs: Observation,
+    pub lanes: Vec<LaneAccount>,
+}
+
+/// One real lane of a [`BatchAccount`] — the per-request latency tuple
+/// [`FleetMetrics::record_completion`] consumes.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneAccount {
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+    pub e2e_s: f64,
+    pub gen_len: usize,
+    pub slo_met: bool,
+    pub class: RequestClass,
+    pub ragged_pad_tokens: u64,
+}
+
 #[derive(Clone, Debug)]
 pub struct FleetMetrics {
     /// time-to-first-block-of-tokens, seconds
@@ -152,6 +187,32 @@ impl FleetMetrics {
         let d = &mut self.devices[device];
         d.requests += 1;
         d.tokens += gen_len as u64;
+    }
+
+    /// Apply one fully-priced batch to the metrics, in exactly the
+    /// mutation order the serial scheduler used when it accounted
+    /// batches inline at execution time (device rollup, then the
+    /// observation, then each lane's ragged padding + completion).
+    /// [`crate::cluster::FleetSim::run_sharded`] computes
+    /// [`BatchAccount`]s on per-device-shard workers and replays them
+    /// through this method in global batch-sequence order — the
+    /// pinned-order merge that keeps the seeded latency reservoirs (and
+    /// therefore every derived percentile) bit-identical to a serial
+    /// run.
+    pub fn apply_batch(&mut self, acc: &BatchAccount) {
+        let ds = &mut self.devices[acc.device];
+        ds.batches += 1;
+        ds.padded_lanes += acc.padded_lanes;
+        ds.peak_resident_bytes = ds.peak_resident_bytes.max(acc.peak_bytes);
+        ds.mem_byte_s += acc.peak_bytes as f64 * acc.total_s;
+        self.padded_lane_tokens += acc.padded_lane_tokens;
+        self.record_fleet_observation(acc.device, acc.obs);
+        for lane in &acc.lanes {
+            self.ragged_pad_tokens += lane.ragged_pad_tokens;
+            self.record_completion(acc.device, lane.ttft_s, lane.tpot_s,
+                                   lane.e2e_s, lane.gen_len, lane.slo_met,
+                                   lane.class);
+        }
     }
 
     pub fn record_shed(&mut self, reason: ShedReason,

@@ -78,15 +78,26 @@ impl Router {
     /// queues sink to the back regardless of policy so the scheduler's
     /// fall-through retry naturally skips them.
     pub fn rank(&mut self, loads: &[DeviceLoad]) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.rank_into(loads, &mut out);
+        out
+    }
+
+    /// [`Self::rank`] into a caller-owned scratch buffer — the fleet
+    /// scheduler's per-arrival hot path reuses one ranking buffer for
+    /// the whole run instead of allocating per admission.
+    pub fn rank_into(&mut self, loads: &[DeviceLoad],
+                     out: &mut Vec<usize>) {
         let n = loads.len();
-        let mut idx: Vec<usize> = (0..n).collect();
+        out.clear();
+        out.extend(0..n);
         match self.policy {
             RoutePolicy::RoundRobin => {
-                idx.rotate_left(self.rr_next % n.max(1));
+                out.rotate_left(self.rr_next % n.max(1));
                 self.rr_next = (self.rr_next + 1) % n.max(1);
             }
             RoutePolicy::LeastOutstanding => {
-                idx.sort_by(|&a, &b| {
+                out.sort_by(|&a, &b| {
                     loads[a].outstanding_s
                         .partial_cmp(&loads[b].outstanding_s)
                         .unwrap_or(std::cmp::Ordering::Equal)
@@ -94,7 +105,7 @@ impl Router {
                 });
             }
             RoutePolicy::VariantAware => {
-                idx.sort_by(|&a, &b| {
+                out.sort_by(|&a, &b| {
                     loads[a].pad_if_added.cmp(&loads[b].pad_if_added).then(
                         loads[a].outstanding_s
                             .partial_cmp(&loads[b].outstanding_s)
@@ -103,11 +114,8 @@ impl Router {
             }
         }
         // stable partition: non-full devices keep their policy order
-        let (open, full): (Vec<usize>, Vec<usize>) =
-            idx.into_iter().partition(|&i| !loads[i].is_full());
-        let mut out = open;
-        out.extend(full);
-        out
+        // (a stable sort on the is_full key is exactly that partition)
+        out.sort_by_key(|&i| loads[i].is_full());
     }
 }
 

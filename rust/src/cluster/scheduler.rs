@@ -69,7 +69,8 @@
 //! and class-separated batching (the class joins the refresh phase, so
 //! a chat turn never pads out to a 32K-lane batch).
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::cache::{expected_plan, CachePlan, CachePolicySpec, REF_N_BLOCKS};
 use crate::calib::{LatencyCurve, Pct};
@@ -79,7 +80,8 @@ use crate::coordinator::batcher::{BatchPlan, Batcher, BatcherConfig,
 use crate::obs::Recorder;
 use crate::sim::analytical::{AnalyticalSim, PrecisionConfig};
 
-use super::fleet_metrics::{FleetMetrics, ShedReason};
+use super::fleet_metrics::{BatchAccount, FleetMetrics, LaneAccount,
+                           ShedReason};
 use super::router::{DeviceLoad, RoutePolicy, Router};
 use super::topology::{ClusterTopology, DeviceSpec};
 use super::workload::{RequestClass, TraceRequest};
@@ -488,6 +490,94 @@ pub(crate) fn refresh_phase(spec: &CachePolicySpec, n_blocks: u64) -> u64 {
     }
 }
 
+/// The `1e-9` deadline slack [`Batcher::next_batch_at`] honors so a
+/// caller stepping exactly to `next_fire_at()` fires despite f64
+/// rounding. The indexed event loop offers a flush to every device
+/// keyed within this window of the current event time — exactly the
+/// set the scan-based loop's try-every-device sweep could fire.
+const FIRE_SLACK_S: f64 = 1e-9;
+
+/// Indexed next-action structure for the event loop: a min-heap of
+/// `(f64::to_bits(time), device_index)` entries with lazy stale-entry
+/// deletion. Virtual times are non-negative and finite, so the IEEE
+/// bit pattern orders exactly like the float and `f64` never needs an
+/// `Ord` shim; the device index breaks same-instant ties
+/// deterministically. Each device has at most one *live* entry (the
+/// one matching `key`); re-keying a device simply strands the old
+/// entry, which is skipped when popped.
+struct EventQueue {
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    /// currently scheduled key bits per device (`None` = no live
+    /// entry); heap entries that do not match are stale
+    key: Vec<Option<u64>>,
+}
+
+impl EventQueue {
+    fn new(n: usize) -> Self {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(n + 1),
+            key: vec![None; n],
+        }
+    }
+
+    /// (Re-)key device `di` to its next action time; `None` clears it.
+    fn schedule(&mut self, di: usize, t: Option<f64>) {
+        match t {
+            Some(t) => {
+                debug_assert!(t.is_finite() && t >= 0.0,
+                              "event times must be non-negative finite \
+                               for bit-ordering");
+                let bits = t.to_bits();
+                if self.key[di] != Some(bits) {
+                    self.key[di] = Some(bits);
+                    self.heap.push(Reverse((bits, di)));
+                }
+            }
+            None => self.key[di] = None,
+        }
+    }
+
+    /// Earliest live device event time, discarding stale entries.
+    fn peek_time(&mut self) -> Option<f64> {
+        while let Some(&Reverse((bits, di))) = self.heap.peek() {
+            if self.key[di] == Some(bits) {
+                return Some(f64::from_bits(bits));
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Pop every live entry with time `<= cutoff` into `due`, clearing
+    /// those devices' keys (the caller re-keys them after the flush
+    /// attempt).
+    fn pop_due(&mut self, cutoff: f64, due: &mut Vec<usize>) {
+        while let Some(&Reverse((bits, di))) = self.heap.peek() {
+            if self.key[di] != Some(bits) {
+                self.heap.pop();
+                continue;
+            }
+            if f64::from_bits(bits) <= cutoff {
+                self.heap.pop();
+                self.key[di] = None;
+                due.push(di);
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+/// Reusable per-run admission scratch: the device-load snapshot and
+/// the router ranking are rebuilt in place for every arrival instead
+/// of allocating two fresh `Vec`s per request (the former per-event
+/// allocation hot spot).
+#[derive(Default)]
+struct AdmitScratch {
+    loads: Vec<DeviceLoad>,
+    order: Vec<usize>,
+}
+
 /// The cluster driver: topology + router + SLO policy.
 pub struct FleetSim {
     pub topo: ClusterTopology,
@@ -515,6 +605,40 @@ impl FleetSim {
     /// read-only) and the summary is deterministic for a fixed trace.
     pub fn run_traced(&mut self, trace: &[TraceRequest],
                       rec: &mut Recorder) -> FleetMetrics {
+        self.run_sharded_traced(trace, 1, rec)
+    }
+
+    /// [`Self::run`] with batch accounting fanned out over `shards`
+    /// scoped worker threads, partitioned by device — bit-identical to
+    /// `run` for every shard count (the `rust/tests/fleet_determinism.rs`
+    /// gate). See [`Self::run_sharded_traced`] for the three-phase
+    /// design.
+    pub fn run_sharded(&mut self, trace: &[TraceRequest],
+                       shards: usize) -> FleetMetrics {
+        self.run_sharded_traced(trace, shards, &mut Recorder::disabled())
+    }
+
+    /// The fleet event loop, in three phases (docs/ARCHITECTURE.md,
+    /// "simulator performance"):
+    ///
+    /// 1. **Scheduling** (sequential — arrivals couple every device
+    ///    through the router): indexed event dispatch over an
+    ///    [`EventQueue`] instead of the old O(devices) scan per event.
+    ///    Executed batches are priced ([`price_batch`]) because the
+    ///    service time feeds back into the event loop, then logged as
+    ///    compact [`BatchExec`] records stamped with a global sequence
+    ///    number instead of being accounted inline.
+    /// 2. **Accounting** (parallel): per-device-shard workers turn each
+    ///    record into a [`BatchAccount`] — memory-plan residency,
+    ///    per-lane latency tuples, the replay observation. Pure reads
+    ///    of the frozen post-run device state, so worker count cannot
+    ///    change a bit.
+    /// 3. **Merge** (sequential, pinned order): accounts replay through
+    ///    [`FleetMetrics::apply_batch`] in global sequence order, so the
+    ///    seeded latency reservoirs see the exact serial push order.
+    pub fn run_sharded_traced(&mut self, trace: &[TraceRequest],
+                              shards: usize, rec: &mut Recorder)
+                              -> FleetMetrics {
         let mut devices: Vec<SimDevice> = self.topo.devices.iter()
             .map(|spec| SimDevice::new(spec, &self.topo))
             .collect();
@@ -522,6 +646,156 @@ impl FleetSim {
             self.topo.devices.iter().map(|d| d.name.clone()).collect());
 
         let serve_span = rec.begin("fleet", "serve", 0.0);
+        let n_dev = devices.len();
+        let mut eq = EventQueue::new(n_dev);
+        let mut scratch = AdmitScratch::default();
+        let mut touched: Vec<usize> = Vec::with_capacity(n_dev);
+        let mut due: Vec<usize> = Vec::with_capacity(n_dev);
+        let mut exec_log: Vec<Vec<BatchExec>> =
+            (0..n_dev).map(|_| Vec::new()).collect();
+        let mut seq: u64 = 0;
+        let mut next_arrival = 0usize;
+        let mut now = 0.0f64;
+        loop {
+            let t_arr = trace.get(next_arrival).map(|r| r.arrival_s);
+            let t_dev = eq.peek_time();
+            let step_to = match (t_arr, t_dev) {
+                (None, None) => break,
+                (Some(a), None) => a,
+                (None, Some(d)) => d,
+                (Some(a), Some(d)) => a.min(d),
+            };
+            let prev_now = now;
+            now = now.max(step_to);
+
+            // arrivals first, in trace order — the router sees each
+            // prior admission's effect, exactly as the scan loop did
+            let mut arrivals = 0usize;
+            while next_arrival < trace.len()
+                && trace[next_arrival].arrival_s <= now
+            {
+                let req = trace[next_arrival];
+                next_arrival += 1;
+                arrivals += 1;
+                self.admit(req, now, &mut devices, &mut metrics, rec,
+                           &mut scratch, &mut touched);
+            }
+            // a push can move a queue's fire time: re-key touched
+            // devices before collecting the due set
+            for &di in touched.iter() {
+                let t = devices[di].next_action_time(now);
+                eq.schedule(di, t);
+            }
+            touched.clear();
+
+            // flush pass over devices keyed at or before now (plus the
+            // batcher's deadline slack), in ascending device order —
+            // the same visit order as the scan loop's full sweep,
+            // minus the devices that provably cannot fire yet
+            due.clear();
+            eq.pop_due(now + FIRE_SLACK_S, &mut due);
+            due.sort_unstable();
+            let mut batches = 0usize;
+            for &di in due.iter() {
+                let d = &mut devices[di];
+                let mut flushed = false;
+                if d.busy_until <= now {
+                    if let Some(plan) = d.batcher.next_batch_at(now) {
+                        exec_log[di].push(
+                            price_batch(d, plan, now, seq, rec));
+                        seq += 1;
+                        batches += 1;
+                        flushed = true;
+                    }
+                }
+                match devices[di].next_action_time(now) {
+                    Some(t) if !flushed && t <= now => {
+                        // monotone-progress guard: re-keying this device
+                        // at an instant already reached, without a
+                        // flush, would re-select the same time forever —
+                        // the scan loop's latent busy-spin. Drop the
+                        // event instead; the device re-keys on its next
+                        // queue change.
+                        debug_assert!(
+                            false,
+                            "fleet scheduler stall: device {di} re-arms \
+                             at {t} <= now {now} without flushing");
+                    }
+                    t => eq.schedule(di, t),
+                }
+            }
+
+            // progress-gated event counter: an iteration that neither
+            // advanced virtual time nor dispatched an admission or a
+            // batch is bookkeeping, not fleet work (perf_hotpaths
+            // divides by this for events/s)
+            if now > prev_now || arrivals > 0 || batches > 0 {
+                rec.count("fleet.events", 1.0);
+            }
+        }
+
+        let horizon = devices.iter()
+            .map(|d| d.busy_until)
+            .fold(now, f64::max);
+        metrics.horizon_s = horizon;
+        for (di, d) in devices.iter().enumerate() {
+            metrics.devices[di].busy_s = d.busy_s;
+            metrics.mem_downshifts += d.batcher.mem_downshifts;
+        }
+        rec.end(serve_span, horizon);
+
+        // phase 2: deferred accounting, fanned out by device partition
+        let block_len = self.topo.block_len;
+        let slo = self.slo;
+        let shard_plan = super::topology::shard_ranges(n_dev, shards);
+        let mut accounts: Vec<BatchAccount> = if shard_plan.len() <= 1 {
+            account_device_range(&devices, &exec_log, 0, n_dev,
+                                 block_len, &slo)
+        } else {
+            let dref: &[SimDevice] = &devices;
+            let eref: &[Vec<BatchExec>] = &exec_log;
+            std::thread::scope(|s| {
+                let handles: Vec<_> = shard_plan.iter()
+                    .map(|&(lo, hi)| s.spawn(move || {
+                        account_device_range(dref, eref, lo, hi,
+                                             block_len, &slo)
+                    }))
+                    .collect();
+                // joined in spawn order; the order is irrelevant here
+                // because the merge below re-pins it by sequence number
+                handles.into_iter()
+                    .flat_map(|h| h.join()
+                        .expect("fleet accounting shard panicked"))
+                    .collect()
+            })
+        };
+
+        // phase 3: pinned-order merge — replay in global execution
+        // order so every reservoir push lands in the serial sequence
+        accounts.sort_unstable_by_key(|a| a.seq);
+        for acc in &accounts {
+            metrics.apply_batch(acc);
+        }
+        metrics
+    }
+
+    /// Reference implementation of [`Self::run`]: the original
+    /// O(events × devices) scan-based event loop with inline
+    /// accounting, kept as the differential oracle the indexed dispatch
+    /// path and [`Self::run_sharded`] are gated against
+    /// (`rust/tests/fleet_determinism.rs`). Not for serving runs.
+    pub fn run_scan_reference(&mut self, trace: &[TraceRequest])
+                              -> FleetMetrics {
+        let mut devices: Vec<SimDevice> = self.topo.devices.iter()
+            .map(|spec| SimDevice::new(spec, &self.topo))
+            .collect();
+        let mut metrics = FleetMetrics::new(
+            self.topo.devices.iter().map(|d| d.name.clone()).collect());
+
+        let mut rec = Recorder::disabled();
+        let mut scratch = AdmitScratch::default();
+        let mut touched: Vec<usize> = Vec::new();
+        let mut seq: u64 = 0;
         let mut next_arrival = 0usize;
         let mut now = 0.0f64;
         loop {
@@ -539,21 +813,26 @@ impl FleetSim {
                 (Some(a), Some(d)) => a.min(d),
             };
             now = now.max(step_to);
-            rec.count("fleet.events", 1.0);
 
             while next_arrival < trace.len()
                 && trace[next_arrival].arrival_s <= now
             {
                 let req = trace[next_arrival];
                 next_arrival += 1;
-                self.admit(req, now, &mut devices, &mut metrics, rec);
+                self.admit(req, now, &mut devices, &mut metrics, &mut rec,
+                           &mut scratch, &mut touched);
             }
+            touched.clear();
 
             for (di, d) in devices.iter_mut().enumerate() {
                 if d.busy_until <= now {
                     if let Some(plan) = d.batcher.next_batch_at(now) {
-                        execute_plan(d, di, plan, now, self.topo.block_len,
-                                     &self.slo, &mut metrics, rec);
+                        let exec = price_batch(d, plan, now, seq, &mut rec);
+                        seq += 1;
+                        let acc = account_batch(
+                            &exec, di, &d.svc, self.topo.block_len,
+                            &self.slo);
+                        metrics.apply_batch(&acc);
                     }
                 }
             }
@@ -567,7 +846,6 @@ impl FleetSim {
             metrics.devices[di].busy_s = d.busy_s;
             metrics.mem_downshifts += d.batcher.mem_downshifts;
         }
-        rec.end(serve_span, horizon);
         metrics
     }
 
@@ -577,18 +855,27 @@ impl FleetSim {
     /// Sheds are attributed: backlog rejections win over deadline ones,
     /// and a ranking truncated by the retry budget with untried devices
     /// remaining is a `RetryExhausted` shed, not a deadline verdict.
+    ///
+    /// `scratch` holds the load snapshot and ranking buffers, reused
+    /// across every arrival of a run; a device that accepts the request
+    /// is pushed onto `touched` so the event loop re-keys only queues
+    /// whose fire time could have moved.
+    #[allow(clippy::too_many_arguments)]
     fn admit(&mut self, req: TraceRequest, now: f64,
              devices: &mut [SimDevice], metrics: &mut FleetMetrics,
-             rec: &mut Recorder) {
-        let loads: Vec<DeviceLoad> = devices.iter()
+             rec: &mut Recorder, scratch: &mut AdmitScratch,
+             touched: &mut Vec<usize>) {
+        scratch.loads.clear();
+        scratch.loads.extend(devices.iter()
             .map(|d| DeviceLoad {
                 queue_len: d.batcher.len(),
                 queue_capacity: d.batcher.cfg.capacity,
                 outstanding_s: d.outstanding_s(now),
                 pad_if_added: d.pad_if_added(),
-            })
-            .collect();
-        let order = self.router.rank(&loads);
+            }));
+        self.router.rank_into(&scratch.loads, &mut scratch.order);
+        let loads = &scratch.loads;
+        let order = &scratch.order;
         let dispatch = self.topo.interconnect
             .dispatch_s(self.topo.request_bytes(req.prompt_len));
         // the serving class joins the refresh phase in the high bits:
@@ -655,6 +942,7 @@ impl FleetSim {
                 InFlight { req, dispatch_s: dispatch }, now, phase,
                 resident)
             {
+                touched.push(di);
                 metrics.admitted += 1;
                 rec.span_closed("fleet", "admit", now, now);
                 rec.count("fleet.admitted", 1.0);
@@ -687,11 +975,33 @@ impl FleetSim {
     }
 }
 
-/// Price a flushed batch on its device and account every lane.
-#[allow(clippy::too_many_arguments)]
-fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
-                now: f64, block_len: u64, slo: &SloConfig,
-                metrics: &mut FleetMetrics, rec: &mut Recorder) {
+/// One executed batch awaiting deferred accounting. Everything here was
+/// priced at scheduling time because `total` feeds back into the event
+/// loop (the busy window); the rest of the old inline accounting —
+/// memory-plan residency, per-lane latency tuples, the replay
+/// observation — is a pure function of this record and the device's
+/// frozen service-model state, so it runs on a worker thread without
+/// changing a bit.
+struct BatchExec {
+    /// global execution order stamp — the pinned-merge sort key
+    seq: u64,
+    now: f64,
+    variant: usize,
+    real: usize,
+    pmax: usize,
+    gmax: usize,
+    class: RequestClass,
+    total: f64,
+    first: f64,
+    lanes: Vec<InFlight>,
+}
+
+/// Price a flushed batch at scheduling time: the service-model call
+/// (whose `total` the event loop needs for the busy window), the batch
+/// trace span/counters, and the compact execution record the deferred
+/// accounting pass consumes.
+fn price_batch(d: &mut SimDevice, plan: BatchPlan<InFlight>, now: f64,
+               seq: u64, rec: &mut Recorder) -> BatchExec {
     let real = plan.items.len();
     let variant = plan.variant;
     let pmax = plan.items.iter().map(|i| i.req.prompt_len).max().unwrap();
@@ -704,60 +1014,67 @@ fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
     rec.count("fleet.batches", 1.0);
     rec.count("fleet.padded_lanes", (variant - real) as f64);
     rec.count("fleet.lane_tokens", (variant * gmax) as f64);
-    // blocked diffusion commits tokens block-synchronously: block k of
-    // every lane lands at ~k * per_block into the run
-    let blocks_max = crate::util::ceil_div(gmax as u64, block_len).max(1);
-    let per_block = total / blocks_max as f64;
     d.busy_until = now + total;
     d.busy_s += total;
+    BatchExec {
+        seq, now, variant, real, pmax, gmax, class, total, first,
+        lanes: plan.items,
+    }
+}
 
+/// Deferred accounting for one executed batch: residency, lane latency
+/// tuples, the replay observation. Pure — reads only the record and
+/// immutable service-model state — so per-device shards can run it
+/// concurrently.
+fn account_batch(exec: &BatchExec, di: usize, svc: &ServiceModel,
+                 block_len: u64, slo: &SloConfig) -> BatchAccount {
     // residency accounting: every executed batch is priced through the
     // device's memory model whether or not a capacity is set (the plan
     // is a pure function of the batch geometry, so the unconstrained
     // fleet's numbers are identical to a fleet with an infinite cap —
     // part of the mem_pressure.rs differential gate). Windowed fleets
     // hold only the active suffix resident (exact identity under Full).
-    let peak_bytes = d.svc.mem
-        .plan_windowed(variant, pmax as u64, gmax as u64, &d.svc.window)
+    let peak_bytes = svc.mem
+        .plan_windowed(exec.variant, exec.pmax as u64, exec.gmax as u64,
+                       &svc.window)
         .total;
-
-    let ds = &mut metrics.devices[di];
-    ds.batches += 1;
-    ds.padded_lanes += (variant - real) as u64;
-    ds.peak_resident_bytes = ds.peak_resident_bytes.max(peak_bytes);
-    ds.mem_byte_s += peak_bytes as f64 * total;
-    metrics.padded_lane_tokens += ((variant - real) * gmax) as u64;
+    // blocked diffusion commits tokens block-synchronously: block k of
+    // every lane lands at ~k * per_block into the run
+    let blocks_max =
+        crate::util::ceil_div(exec.gmax as u64, block_len).max(1);
+    let per_block = exec.total / blocks_max as f64;
 
     // structured observation export for the replay loop: the executed
     // batch exactly as a curve cell would price it (padded geometry,
     // billed realized steps). The simulated device has no real
     // StepTrace, so realized steps are the schedule expectation the
     // service model billed; the live coordinator path records measured
-    // traces instead. The log is bounded at the same OBS_CAP the
-    // coordinator uses; overflow is counted, never silent.
-    metrics.record_fleet_observation(di, crate::replay::Observation {
-        variant,
-        seq_len: (pmax + gmax) as u64,
-        gen_tokens: gmax as u64,
-        total_s: total,
-        first_s: first,
-        realized_steps: d.svc.steps_by_class[class.index()],
-        cache_hit_rate: d.svc.serving_hit,
+    // traces instead.
+    let obs = crate::replay::Observation {
+        variant: exec.variant,
+        seq_len: (exec.pmax + exec.gmax) as u64,
+        gen_tokens: exec.gmax as u64,
+        total_s: exec.total,
+        first_s: exec.first,
+        realized_steps: svc.steps_by_class[exec.class.index()],
+        cache_hit_rate: svc.serving_hit,
         peak_bytes,
-    });
+    };
 
-    for inf in plan.items {
-        let queued_s = now - inf.req.arrival_s;
-        let ttft = inf.dispatch_s + queued_s + first;
-        let e2e = inf.dispatch_s + queued_s + total;
+    let lanes = exec.lanes.iter().map(|inf| {
+        let queued_s = exec.now - inf.req.arrival_s;
+        let ttft = inf.dispatch_s + queued_s + exec.first;
+        let e2e = inf.dispatch_s + queued_s + exec.total;
         // decode pace: this request's own tokens are all committed once
         // its own block count has run, even if the batch continues to
         // gmax for longer lanes — a single-block request pays no TPOT
         // (everything arrived in the first block; TTFT covers it), and
         // the extra batch time it sits through shows up in E2E only
         let blocks_i =
-            crate::util::ceil_div(inf.req.gen_len as u64, block_len).max(1);
-        let tail_tokens = (inf.req.gen_len as u64).saturating_sub(block_len);
+            crate::util::ceil_div(inf.req.gen_len as u64, block_len)
+                .max(1);
+        let tail_tokens =
+            (inf.req.gen_len as u64).saturating_sub(block_len);
         let tpot = if blocks_i > 1 && tail_tokens > 0 {
             (blocks_i - 1) as f64 * per_block / tail_tokens as f64
         } else {
@@ -765,10 +1082,44 @@ fn execute_plan(d: &mut SimDevice, di: usize, plan: BatchPlan<InFlight>,
         };
         let slo_met = ttft <= slo.ttft_for(inf.req.class)
             && tpot <= slo.tpot_for(inf.req.class);
-        metrics.ragged_pad_tokens += (gmax - inf.req.gen_len) as u64;
-        metrics.record_completion(di, ttft, tpot, e2e, inf.req.gen_len,
-                                  slo_met, inf.req.class);
+        LaneAccount {
+            ttft_s: ttft,
+            tpot_s: tpot,
+            e2e_s: e2e,
+            gen_len: inf.req.gen_len,
+            slo_met,
+            class: inf.req.class,
+            ragged_pad_tokens: (exec.gmax - inf.req.gen_len) as u64,
+        }
+    }).collect();
+
+    BatchAccount {
+        seq: exec.seq,
+        device: di,
+        padded_lanes: (exec.variant - exec.real) as u64,
+        padded_lane_tokens: ((exec.variant - exec.real) * exec.gmax) as u64,
+        total_s: exec.total,
+        peak_bytes,
+        obs,
+        lanes,
     }
+}
+
+/// Account every logged batch of devices `[lo, hi)` — one accounting
+/// shard's work ([`super::topology::shard_ranges`] hands each worker a
+/// contiguous device range, so a shard only ever touches its own
+/// devices' logs).
+fn account_device_range(devices: &[SimDevice],
+                        exec_log: &[Vec<BatchExec>], lo: usize,
+                        hi: usize, block_len: u64, slo: &SloConfig)
+                        -> Vec<BatchAccount> {
+    let mut out = Vec::new();
+    for di in lo..hi {
+        let svc = &devices[di].svc;
+        out.extend(exec_log[di].iter()
+            .map(|e| account_batch(e, di, svc, block_len, slo)));
+    }
+    out
 }
 
 /// Aggregate generated-token capacity of the fleet (sum of each
@@ -1430,5 +1781,62 @@ mod tests {
         assert!(windowed.devices[0].peak_resident_bytes <= cap);
         let (_, lc, ls) = windowed.class_counts(RequestClass::LongForm);
         assert_eq!((lc, ls), (1, 0));
+    }
+
+    #[test]
+    fn event_counter_pins_progress_iterations_only() {
+        // hand-built trace on one static (uncalibrated) device,
+        // admission off. Expected progress events:
+        //   1. t=0.05        two arrivals land (same instant, one event)
+        //   2. t=0.05+W      max_wait flush fires the 2-lane batch
+        //   3. t=busy_until  device turns idle (no arrival, no batch --
+        //                    counted because virtual time advanced)
+        //   4. t=1000        straggler arrival
+        //   5. t=1000+W      its flush
+        //   6. t=busy_until  final idle transition
+        // Iterations that neither advance `now` nor dispatch anything
+        // are bookkeeping and must not inflate the events/s
+        // denominator.
+        let req = |id: u64, t: f64| crate::cluster::TraceRequest {
+            id, arrival_s: t, prompt_len: 64, gen_len: 64,
+            class: RequestClass::Chat,
+        };
+        let trace = vec![req(0, 0.05), req(1, 0.05), req(2, 1000.0)];
+        let topo = small_topo(1);
+        let mut slo = SloConfig::auto(&topo);
+        slo.admission = false;
+        let mut sim = FleetSim::new(topo, RoutePolicy::LeastOutstanding, slo);
+        let mut rec = Recorder::enabled(7);
+        let m = sim.run_traced(&trace, &mut rec);
+        assert_eq!(m.completed, 3);
+        assert_eq!(rec.counter("fleet.batches"), 2.0);
+        assert_eq!(rec.counter("fleet.events"), 6.0,
+                   "progress-gated event count drifted");
+    }
+
+    #[test]
+    fn indexed_dispatch_matches_the_scan_reference() {
+        // in-module smoke for the tentpole identity; the full matrix
+        // (calibrated/cached/windowed/mem-capped, every shard count)
+        // lives in rust/tests/fleet_determinism.rs
+        let trace = saturating_trace(48);
+        let mk = || {
+            let mut topo = small_topo(3);
+            topo.calibrate();
+            let slo = SloConfig::auto(&topo);
+            FleetSim::new(topo, RoutePolicy::VariantAware, slo)
+        };
+        let indexed = mk().run(&trace);
+        let scan = mk().run_scan_reference(&trace);
+        assert_eq!(indexed.report(None), scan.report(None));
+        assert_eq!(indexed.horizon_s.to_bits(), scan.horizon_s.to_bits());
+        assert_eq!(indexed.admitted, scan.admitted);
+        for k in [1usize, 2, 8] {
+            let sharded = mk().run_sharded(&trace, k);
+            assert_eq!(sharded.report(None), scan.report(None),
+                       "shards={k}");
+            assert_eq!(sharded.horizon_s.to_bits(),
+                       scan.horizon_s.to_bits(), "shards={k}");
+        }
     }
 }

@@ -432,10 +432,61 @@ impl ClusterTopology {
     }
 }
 
+/// Partition `n` devices into at most `shards` contiguous, balanced,
+/// non-empty half-open index ranges — the device ownership map for
+/// [`crate::cluster::FleetSim::run_sharded`]'s accounting workers. The
+/// first `n % shards` ranges carry one extra device; a shard count
+/// above `n` simply yields `n` singleton ranges, so every device has
+/// exactly one owner regardless of the requested fan-out.
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let k = shards.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut lo = 0;
+    for s in 0..k {
+        let len = base + usize::from(s < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, n);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::parse_config;
+
+    #[test]
+    fn shard_ranges_tile_the_device_index_space() {
+        for n in 0..17 {
+            for k in 1..20 {
+                let r = shard_ranges(n, k);
+                if n == 0 {
+                    assert!(r.is_empty());
+                    continue;
+                }
+                assert_eq!(r.len(), k.min(n));
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r.last().unwrap().1, n);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "contiguous");
+                }
+                let sizes: Vec<usize> =
+                    r.iter().map(|&(a, b)| b - a).collect();
+                assert!(sizes.iter().all(|&s| s >= 1));
+                let (mn, mx) = (sizes.iter().min().unwrap(),
+                                sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "balanced: {sizes:?}");
+            }
+        }
+        // shards = 0 behaves as 1
+        assert_eq!(shard_ranges(4, 0), vec![(0, 4)]);
+    }
 
     #[test]
     fn homogeneous_fleet_shape() {

@@ -78,8 +78,10 @@ fn main() {
                        long-form class into the trace)");
             eprintln!("                --trace FILE (Chrome-trace JSON + \
                        deterministic summary)");
+            eprintln!("                --shards K (fan batch accounting \
+                       over K threads; bit-identical for every K)");
             eprintln!("  fleet-study --seed N --out FILE --requests N \
-                       --load FRAC | --smoke");
+                       --load FRAC --shards K | --smoke");
             eprintln!("  profile   --out FILE | --smoke | --check-trace FILE \
                        | --check-bench FILE");
             eprintln!("  calibrate --presets default,edge --variants \"1,2,4,8,16\" \
@@ -431,7 +433,11 @@ fn cmd_serve_cluster(args: &Args) -> i32 {
     } else {
         dart::obs::Recorder::disabled()
     };
-    let metrics = sim.run_traced(&trace, &mut rec);
+    // --shards: fan the deferred batch accounting over worker threads;
+    // every shard count is bit-identical (the fleet_determinism gate),
+    // so this only buys wall clock on big fleets
+    let shards = args.get_usize("shards", 1);
+    let metrics = sim.run_sharded_traced(&trace, shards, &mut rec);
     println!("{}", metrics.report(Some((slo.ttft_s, slo.tpot_s))));
     if let Some(path) = args.get("trace") {
         std::fs::write(path, rec.chrome_trace()).expect("write trace");
@@ -546,6 +552,7 @@ fn cmd_fleet_study(args: &Args) -> i32 {
     cfg.requests_per_cell =
         args.get_usize("requests", cfg.requests_per_cell);
     cfg.load = args.get_f64("load", cfg.load);
+    cfg.shards = args.get_usize("shards", cfg.shards);
     let n_cells = cfg.n_cells();
 
     // check mode reads the committed file *before* the (minutes-long)

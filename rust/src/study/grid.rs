@@ -148,6 +148,13 @@ pub struct StudyConfig {
     /// the named baseline cell for per-cell delta columns
     pub baseline_policy: RoutePolicy,
     pub baseline_admission: AdmissionMode,
+    /// accounting shards per fleet run
+    /// ([`crate::cluster::FleetSim::run_sharded`]): every shard count
+    /// yields bit-identical cells (the `fleet_determinism.rs` gate), so
+    /// this is a pure wall-clock knob. 1 = account inline on the unit's
+    /// own thread — the right default while units themselves already
+    /// fan out across the thread pool.
+    pub shards: usize,
 }
 
 impl StudyConfig {
@@ -184,6 +191,7 @@ impl StudyConfig {
             cache: CacheMode::Dual,
             baseline_policy: RoutePolicy::LeastOutstanding,
             baseline_admission: AdmissionMode::Static,
+            shards: 1,
         }
     }
 
@@ -216,6 +224,7 @@ impl StudyConfig {
             cache: CacheMode::Dual,
             baseline_policy: RoutePolicy::LeastOutstanding,
             baseline_admission: AdmissionMode::Static,
+            shards: 1,
         }
     }
 
@@ -499,12 +508,13 @@ impl StudyGrid {
         }
         if u.admission == AdmissionMode::Recalibrated {
             let warm = FleetSim::new(topo.clone(), cfg.baseline_policy, slo)
-                .run(trace);
+                .run_sharded(trace, cfg.shards);
             recalibrate_fleet(&mut topo, &warm, &RecalibConfig::default());
         }
         cfg.policies.iter().map(|&policy| {
             let t0 = std::time::Instant::now();
-            let metrics = FleetSim::new(topo.clone(), policy, slo).run(trace);
+            let metrics = FleetSim::new(topo.clone(), policy, slo)
+                .run_sharded(trace, cfg.shards);
             CellResult {
                 shape: shape.name.clone(),
                 devices: shape.n_devices(),

@@ -297,6 +297,83 @@ fn windowed_long_form_fleet_serves_deterministically() {
 }
 
 #[test]
+fn indexed_dispatch_and_sharded_runs_match_the_scan_reference() {
+    // PR 10 tentpole gate: the heap-indexed event loop (`run`, which is
+    // now `run_sharded_traced(.., 1, ..)`) and the sharded deferred
+    // accounting path (`run_sharded(k)`) must both be bit-identical to
+    // the original scan-based loop with inline accounting, preserved
+    // verbatim as `run_scan_reference`. The matrix spans the serving
+    // dimensions that exercise every accounting branch: an uncalibrated
+    // baseline, the curve-driven cost-based batcher, the feature-cached
+    // phase-split path, the decay-windowed long-form path, and a
+    // memory-capped fleet that sheds and downshifts.
+    type Recipe = (&'static str,
+                   fn() -> ClusterTopology,
+                   fn() -> Vec<dart::cluster::TraceRequest>);
+    fn homo(n: usize) -> ClusterTopology {
+        ClusterTopology::homogeneous(
+            n, dart::config::HwConfig::dart_default(),
+            ModelArch::llada_8b(), CacheMode::Dual)
+    }
+    let recipes: Vec<Recipe> = vec![
+        ("uncalibrated chat", || homo(3), || generate_trace(
+            &TraceSpec::chat(40, Arrival::Poisson { rps: 300.0 }, 9))),
+        ("calibrated heterogeneous", || {
+            let mut t = ClusterTopology::edge_datacenter(
+                2, 1, ModelArch::llada_8b(), CacheMode::Dual);
+            t.calibrate();
+            t
+        }, || generate_trace(&TraceSpec::chat(40, Arrival::Bursty {
+            rps: 200.0, burst_mult: 4.0, cycle_s: 5.0, duty: 0.25 }, 17))),
+        ("feature-cached", || {
+            let mut t = homo(2);
+            t.feature_cache = CachePolicySpec::adaptive_default();
+            t.calibrate();
+            t
+        }, || generate_trace(
+            &TraceSpec::chat(44, Arrival::Poisson { rps: 250.0 }, 41))),
+        ("decay-windowed blended", || {
+            let mut t = homo(2);
+            t.window = dart::window::WindowPolicySpec::decay_default();
+            t.calibrate();
+            t
+        }, || generate_trace(
+            &TraceSpec::blended(32, Arrival::Poisson { rps: 40.0 }, 53,
+                                0.5))),
+        ("memory-capped", || {
+            let mut t = homo(2);
+            for d in &mut t.devices {
+                d.mem_bytes = Some(18 << 30);
+            }
+            t
+        }, || generate_trace(
+            &TraceSpec::blended(32, Arrival::Poisson { rps: 60.0 }, 71,
+                                0.5))),
+    ];
+    for (name, mk_topo, mk_trace) in recipes {
+        let trace = mk_trace();
+        let sim = |policy| {
+            let topo = mk_topo();
+            let slo = SloConfig::auto(&topo);
+            FleetSim::new(topo, policy, slo)
+        };
+        for policy in [RoutePolicy::LeastOutstanding,
+                       RoutePolicy::VariantAware] {
+            let scan = sim(policy).run_scan_reference(&trace);
+            let indexed = sim(policy).run(&trace);
+            assert_metrics_identical(
+                &indexed, &scan, &format!("{name}/{policy:?}/indexed"));
+            for k in [1usize, 2, 8] {
+                let sharded = sim(policy).run_sharded(&trace, k);
+                assert_metrics_identical(
+                    &sharded, &scan,
+                    &format!("{name}/{policy:?}/shards={k}"));
+            }
+        }
+    }
+}
+
+#[test]
 fn diurnal_trace_serves_deterministically_through_the_fleet() {
     // the study harness's workload: a diurnal envelope over a Poisson
     // base, served twice directly and twice through the trace-file
